@@ -1,0 +1,69 @@
+//! Ablation study driver: regenerates the paper's three ablations (Tables
+//! 3-5) at reduced scale plus two design-choice ablations DESIGN.md calls
+//! out: the budget-calibration exponents and the Merge-Path block union.
+//!
+//! Run: `cargo run --release --example ablation_study`
+
+use vsprefill::attention::dense::attention_probs;
+use vsprefill::baselines::{recall_of_spec, SparsePredictor};
+use vsprefill::experiments::{table3, table4, table5};
+use vsprefill::sparse_attn::VsPrefill;
+use vsprefill::synth::{gen_head, SynthConfig};
+use vsprefill::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== VSPrefill ablation study ==\n");
+
+    println!("[1/5] sparsity strategies (Table 3, reduced scale)");
+    let rows = table3::run(512, 4, 42);
+    print!("{}", table3::render(&rows));
+
+    println!("\n[2/5] loss functions (Table 4, reduced scale)");
+    let rows = table4::run(150, 4, 42);
+    print!("{}", table4::render(&rows));
+
+    println!("\n[3/5] input features (Table 5, reduced scale)");
+    let rows = table5::run(150, 4, 42);
+    print!("{}", table5::render(&rows));
+
+    println!("\n[4/5] budget-calibration exponents (design ablation)");
+    let synth = SynthConfig::default();
+    let ix = vsprefill::experiments::experiment_indexer(&synth);
+    let mut rng = Rng::new(9);
+    let head = gen_head(&mut rng, 1024, &synth, 1);
+    let a = attention_probs(&head.q, &head.k);
+    for (sv, ss) in [(1.0f32, 1.0f32), (0.5, 2.0), (2.0, 2.0), (0.5, 1.0)] {
+        let vsp = VsPrefill { sharpen_v: sv, sharpen_s: ss, ..VsPrefill::new(ix.clone()) };
+        let spec = vsp.predict(&head, 0.5);
+        println!(
+            "  gamma_v={sv:.1} gamma_s={ss:.1}: density {:.3} recall {:.3}",
+            spec.density(1024),
+            recall_of_spec(&a, &spec)
+        );
+    }
+
+    println!("\n[5/5] Merge-Path union vs naive mask materialization");
+    let idx = {
+        let vsp = VsPrefill::new(ix);
+        vsp.predict_kv(&head.k, &head.v, 0.5)
+    };
+    let n = 1024;
+    let t0 = std::time::Instant::now();
+    let mut total_cols = 0usize;
+    for q0 in (0..n).step_by(64) {
+        total_cols += vsprefill::sparse::merge::block_columns(&idx.vertical, &idx.slash, q0, 64, n).len();
+    }
+    let merge_t = t0.elapsed();
+    let t1 = std::time::Instant::now();
+    let dense = vsprefill::sparse::mask::dense_mask(&idx, n);
+    let naive_cols: usize = dense.iter().map(|r| r.iter().filter(|&&b| b).count()).sum();
+    let naive_t = t1.elapsed();
+    println!(
+        "  merge-path: {total_cols} block-columns in {:?}; naive mask: {naive_cols} cells in {:?} ({}x slower)",
+        merge_t,
+        naive_t,
+        (naive_t.as_nanos() / merge_t.as_nanos().max(1))
+    );
+    println!("\nOK");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Pareto sweep (Figure 5 companion): sweeps every method's budget knob at
+//! one length and prints the accuracy/speedup frontier, marking the points
+//! that are Pareto-optimal.
+//!
+//! Run: `cargo run --release --example pareto_sweep [--n 16384]`
+
+use vsprefill::evalsuite::{evaluate_methods, ruler};
+use vsprefill::experiments::MethodSet;
+use vsprefill::sparse_attn::cost::CostModel;
+use vsprefill::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&["n", "reps"])?;
+    let n = args.usize_or("n", 16384);
+    let reps = args.usize_or("reps", 1);
+    println!("== accuracy/speedup Pareto sweep @ n = {n} ==\n");
+
+    let synth = vsprefill::synth::qwen_sim();
+    let set = MethodSet::for_family(&synth, n);
+    let methods = set.as_dyn();
+    let names = ["FlashAttn", "StrLLM", "FlexPre", "SeerAttn", "VSPrefill"];
+    let cost = CostModel::default_calibration();
+    let instances = ruler::instances(n, reps, 42);
+
+    let mut points: Vec<(String, f32, f64)> = Vec::new();
+    for (mi, m) in methods.iter().enumerate() {
+        let budgets: &[f32] = if mi == 0 { &[1.0] } else { &[0.15, 0.3, 0.5, 0.8] };
+        for &b in budgets {
+            let r = evaluate_methods(&[*m], &instances, &synth, b);
+            let head = vsprefill::evalsuite::task_head(&instances[0], &synth);
+            let spec = m.predict(&head, b);
+            let c = cost.cost_of(&spec, *m, n, synth.head_dim);
+            points.push((format!("{} @{b:.2}", names[mi]), r[0].0, c.speedup_vs_dense));
+        }
+    }
+
+    // Pareto front: no other point with both higher score and speedup.
+    let is_pareto = |i: usize| -> bool {
+        !points.iter().enumerate().any(|(j, p)| {
+            j != i && p.1 >= points[i].1 && p.2 >= points[i].2 && (p.1 > points[i].1 || p.2 > points[i].2)
+        })
+    };
+    println!("{:<20} {:>8} {:>9}  pareto", "config", "score", "speedup");
+    for i in 0..points.len() {
+        let (name, score, speedup) = &points[i];
+        println!(
+            "{:<20} {:>8.2} {:>8.2}x  {}",
+            name,
+            score,
+            speedup,
+            if is_pareto(i) { "*" } else { "" }
+        );
+    }
+    Ok(())
+}

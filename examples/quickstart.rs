@@ -1,0 +1,63 @@
+//! Quickstart: the VSPrefill pipeline end to end on one synthetic context.
+//!
+//!   1. generate a long-context attention head (Appendix-A.1 model)
+//!   2. predict vertical/slash importance with the VSIndexer
+//!   3. pick budgets with the adaptive cumulative threshold (Eq. 18-19)
+//!   4. execute fused vertical-slash sparse attention
+//!   5. compare against exact attention: recall, density, max error
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use vsprefill::attention::dense::attention_probs;
+use vsprefill::attention::flash::flash_attention;
+use vsprefill::attention::recall::recall_of_vs;
+use vsprefill::indexer::train::{distill, TrainConfig};
+use vsprefill::sparse_attn::exec::sparse_attention_vs;
+use vsprefill::sparse_attn::VsPrefill;
+use vsprefill::synth::{gen_head, SynthConfig};
+use vsprefill::util::rng::Rng;
+
+fn main() {
+    let n = 1024;
+    println!("== VSPrefill quickstart (n = {n}) ==\n");
+
+    // 1. a context with vertical-slash structure
+    let mut rng = Rng::new(7);
+    let head = gen_head(&mut rng, n, &SynthConfig::default(), 2);
+    println!("injected heavy-hitter columns: {:?}", head.heavy);
+
+    // 2. distill a VSIndexer (the serving stack loads Python-distilled
+    //    weights from artifacts/; here we train natively in-process)
+    println!("distilling VSIndexer ...");
+    let (ix, hist) = distill(&TrainConfig { steps: 200, ..Default::default() });
+    println!("  loss {:.2} -> {:.3}", hist[0], hist.last().unwrap());
+
+    // 3. adaptive selection
+    let vsp = VsPrefill::new(ix);
+    let idx = vsp.predict_kv(&head.k, &head.v, 0.5);
+    println!(
+        "selected {} vertical columns, {} slash offsets (density {:.1}%)",
+        idx.vertical.len(),
+        idx.slash.len(),
+        100.0 * idx.density(n)
+    );
+    println!(
+        "  top verticals: {:?}",
+        &idx.vertical[..idx.vertical.len().min(8)]
+    );
+    println!("  top offsets:   {:?}", &idx.slash[..idx.slash.len().min(8)]);
+
+    // 4. fused sparse attention vs 5. exact attention
+    let sparse = sparse_attention_vs(&head.q, &head.k, &head.v, &idx, 64);
+    let dense = flash_attention(&head.q, &head.k, &head.v, 64, 64);
+    let a = attention_probs(&head.q, &head.k);
+    let recall = recall_of_vs(&a, &idx);
+    println!("\nattention recall (Eq. 6): {:.3}", recall);
+    println!("sparse-vs-dense output max |err|: {:.4}", sparse.max_abs_diff(&dense));
+    println!(
+        "flops kept: {:.1}% of dense",
+        100.0 * idx.covered_cells(n) as f64 / (n * (n + 1) / 2) as f64
+    );
+    assert!(recall > 0.8, "quickstart sanity: recall should be high");
+    println!("\nOK — see examples/needle_serving.rs for the serving stack.");
+}

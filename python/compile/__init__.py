@@ -1,0 +1,3 @@
+"""Build-time Python package for VSPrefill: kernels (L1), model/indexer (L2),
+and the AOT pipeline that lowers everything to artifacts consumed by the Rust
+coordinator (L3).  Never imported at runtime."""

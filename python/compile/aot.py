@@ -1,0 +1,197 @@
+"""AOT pipeline: train the VSIndexer, lower every compute graph to HLO text,
+and emit the artifact bundle the Rust runtime consumes.
+
+Interchange format is HLO *text* (never ``.serialize()``): jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+Artifacts (per sequence-length bucket n, head_dim d):
+  flash_attn_{n}.hlo.txt    (q,k,v) -> (out,)                exact baseline
+  vs_aggregate_{n}.hlo.txt  (q,k) -> (av, as)                ground truth (§4.2)
+  indexer_{n}.hlo.txt       (k,v,wu,bu,wv,bv,ws,bs) -> (av, as)   VSIndexer fwd
+  sparse_attn_{n}.hlo.txt   (q,k,v,vidx,sidx,lens) -> (out,) fused VS kernel
+  model_prefill_{n}.hlo.txt (tokens, *weights) -> (logits, ks, vs)
+plus indexer_weights.json, model_weights.json and manifest.json.
+
+Weights are *runtime arguments* of the graphs (not baked constants) so one
+artifact serves any weight set; Rust feeds them from the JSON exports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import indexer as ix
+from . import model as mdl
+from .kernels import flash_attention as fa
+from .kernels import vs_aggregate as agg
+from .kernels import vs_sparse_attention as vsa
+
+BUCKETS = (256, 512, 1024)
+HEAD_DIM = 32
+MODEL_BUCKETS = (256,)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to(path: str, fn, *specs) -> dict:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return {
+        "file": os.path.basename(path),
+        "args": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+    }
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def caps_for(n: int) -> tuple[int, int]:
+    """Static capacities of the padded index lists per bucket."""
+    return max(32, n // 8), max(16, n // 16)
+
+
+def array_to_json(a) -> dict:
+    a = np.asarray(a)
+    return {"shape": list(a.shape), "data": [float(x) for x in a.reshape(-1)]}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--quick", action="store_true", help="skip the 512/1024 buckets")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    d = HEAD_DIM
+    buckets = BUCKETS[:1] if args.quick else BUCKETS
+
+    manifest: dict = {
+        "head_dim": d,
+        "buckets": list(buckets),
+        "model": {
+            "vocab": mdl.TINY.vocab,
+            "d_model": mdl.TINY.d_model,
+            "n_heads": mdl.TINY.n_heads,
+            "n_kv_heads": mdl.TINY.n_kv_heads,
+            "head_dim": mdl.TINY.head_dim,
+            "n_layers": mdl.TINY.n_layers,
+            "rope_base": mdl.TINY.rope_base,
+        },
+        "graphs": {},
+    }
+
+    # ---- 1. Distill the VSIndexer --------------------------------------
+    print("[aot] distilling VSIndexer ...")
+    icfg = ix.IndexerConfig(head_dim=d, hidden=64)
+    tc = ix.TrainConfig(steps=args.steps, batch=4, seq_len=256, loss="kl", seed=0)
+    iparams, hist = ix.distill(icfg, tc, log_every=50)
+    print(f"[aot] distill final loss {hist[-1]:.4f}")
+    with open(os.path.join(args.out, "indexer_weights.json"), "w") as f:
+        json.dump(
+            {
+                "hidden": icfg.hidden,
+                "head_dim": d,
+                "final_loss": hist[-1],
+                "weights": {k: array_to_json(v) for k, v in iparams.items()},
+            },
+            f,
+        )
+
+    # ---- 2. Model weights ----------------------------------------------
+    mrng = np.random.default_rng(42)
+    mparams = mdl.init_params(mrng, mdl.TINY)
+    flat = mdl.flatten_params(mparams, mdl.TINY)
+    with open(os.path.join(args.out, "model_weights.json"), "w") as f:
+        json.dump({"names": [n for n, _ in flat],
+                   "weights": {n: array_to_json(a) for n, a in flat}}, f)
+
+    # ---- 3. Per-bucket kernels ------------------------------------------
+    for n in buckets:
+        kv_cap, ks_cap = caps_for(n)
+        manifest["graphs"][f"flash_attn_{n}"] = lower_to(
+            os.path.join(args.out, f"flash_attn_{n}.hlo.txt"),
+            lambda q, k, v: (fa.flash_attention(q, k, v),),
+            f32(n, d), f32(n, d), f32(n, d),
+        )
+        manifest["graphs"][f"vs_aggregate_{n}"] = lower_to(
+            os.path.join(args.out, f"vs_aggregate_{n}.hlo.txt"),
+            lambda q, k: agg.vs_aggregate(q, k),
+            f32(n, d), f32(n, d),
+        )
+        manifest["graphs"][f"indexer_{n}"] = lower_to(
+            os.path.join(args.out, f"indexer_{n}.hlo.txt"),
+            lambda k, v, wu, bu, wv, bv, ws, bs: ix.indexer_forward(
+                dict(wu=wu, bu=bu, wv=wv, bv=bv, ws=ws, bs=bs), k, v
+            ),
+            f32(n, d), f32(n, d),
+            f32(2 * d, icfg.hidden), f32(icfg.hidden),
+            f32(icfg.hidden, 1), f32(1), f32(icfg.hidden, 1), f32(1),
+        )
+        manifest["graphs"][f"sparse_attn_{n}"] = lower_to(
+            os.path.join(args.out, f"sparse_attn_{n}.hlo.txt"),
+            lambda q, k, v, vi, si, ln: (vsa.vs_sparse_attention(q, k, v, vi, si, ln),),
+            f32(n, d), f32(n, d), f32(n, d), i32(kv_cap), i32(ks_cap), i32(2),
+        )
+        manifest["graphs"][f"sparse_attn_{n}"]["caps"] = [kv_cap, ks_cap]
+        print(f"[aot] bucket {n} lowered (caps kv={kv_cap} ks={ks_cap})")
+
+    # ---- 4. Whole-model prefill graphs ----------------------------------
+    cfg = mdl.TINY
+    for n in MODEL_BUCKETS:
+        weight_specs = [f32(*a.shape) for _, a in flat]
+
+        def prefill_fn(tokens, *weights):
+            params = mdl.unflatten_params(list(weights), cfg)
+            return mdl.prefill_dense(params, tokens, cfg)
+
+        manifest["graphs"][f"model_prefill_{n}"] = lower_to(
+            os.path.join(args.out, f"model_prefill_{n}.hlo.txt"),
+            prefill_fn, i32(n), *weight_specs,
+        )
+        kv_cap, ks_cap = caps_for(n)
+
+        def sparse_prefill_fn(tokens, vi, si, ln, *weights):
+            params = mdl.unflatten_params(list(weights), cfg)
+            return (mdl.prefill_sparse(params, tokens, vi, si, ln, cfg),)
+
+        manifest["graphs"][f"model_prefill_sparse_{n}"] = lower_to(
+            os.path.join(args.out, f"model_prefill_sparse_{n}.hlo.txt"),
+            sparse_prefill_fn,
+            i32(n),
+            i32(cfg.n_layers, cfg.n_kv_heads, kv_cap),
+            i32(cfg.n_layers, cfg.n_kv_heads, ks_cap),
+            i32(cfg.n_layers, cfg.n_kv_heads, 2),
+            *weight_specs,
+        )
+        manifest["graphs"][f"model_prefill_sparse_{n}"]["caps"] = [kv_cap, ks_cap]
+        print(f"[aot] model prefill {n} lowered")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {len(manifest['graphs'])} graphs to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,200 @@
+"""VSIndexer — the paper's lightweight index-prediction module (§4.1) and its
+distillation trainer (§4.2).
+
+Architecture (Eqs. 11-14): X = concat(K_rope, V) in R^{n x 2d};
+Z = silu(X W_U + b_U); vertical scores softmax(Z W_V + b_V) over positions;
+slash scores softmax over *offsets*.  Slash alignment convention: the score
+produced at position j is assigned to offset o = n-1-j (relative distance
+from the final token), so the learned per-position feature "how much do later
+queries attend at my relative distance" lands at the offset the mask
+construction consumes.  The Rust forward (rust/src/indexer/) uses the same
+convention, so the weights exported by ``aot.py`` transfer directly.
+
+The trainer freezes everything except the indexer (the backbone is not even
+differentiated through — inputs are detached by construction) and minimizes
+Eq. 17: KL(pred ‖ target) for both directions.  MSE / MSLE / cosine losses
+are implemented for the Table-4 ablation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import synth
+from .kernels import ref
+
+EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexerConfig:
+    head_dim: int = 32
+    hidden: int = 64  # paper uses 1024 for d=128 heads; scaled to the toy size
+
+    @property
+    def in_dim(self) -> int:
+        return 2 * self.head_dim
+
+
+def init_indexer(rng: np.random.Generator, cfg: IndexerConfig) -> dict:
+    s = (2.0 / cfg.in_dim) ** 0.5
+    return dict(
+        wu=jnp.asarray(rng.normal(size=(cfg.in_dim, cfg.hidden)) * s, jnp.float32),
+        bu=jnp.zeros((cfg.hidden,), jnp.float32),
+        wv=jnp.asarray(rng.normal(size=(cfg.hidden, 1)) * (1.0 / cfg.hidden**0.5), jnp.float32),
+        bv=jnp.zeros((1,), jnp.float32),
+        ws=jnp.asarray(rng.normal(size=(cfg.hidden, 1)) * (1.0 / cfg.hidden**0.5), jnp.float32),
+        bs=jnp.zeros((1,), jnp.float32),
+    )
+
+
+def indexer_forward(p: dict, k_rope: jnp.ndarray, v: jnp.ndarray):
+    """Predict (A_v_hat, A_s_hat), each (n,) summing to 1."""
+    x = jnp.concatenate([k_rope, v], axis=-1)  # (n, 2d)
+    z = jax.nn.silu(x @ p["wu"] + p["bu"])  # (n, h)
+    av_logit = (z @ p["wv"] + p["bv"])[:, 0]  # (n,)
+    as_logit_pos = (z @ p["ws"] + p["bs"])[:, 0]  # (n,) per-position
+    av = jax.nn.softmax(av_logit)
+    a_s = jax.nn.softmax(as_logit_pos[::-1])  # offset o <- position n-1-o
+    return av, a_s
+
+
+# ---------------------------------------------------------------------------
+# Losses (Table 4 ablation).  All take predicted / target distributions (n,).
+# ---------------------------------------------------------------------------
+
+def loss_kl(pred: jnp.ndarray, tgt: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 17: D_KL(pred ‖ target)."""
+    return jnp.sum(pred * (jnp.log(pred + EPS) - jnp.log(tgt + EPS)))
+
+
+def loss_mse(pred: jnp.ndarray, tgt: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((pred - tgt) ** 2) * pred.shape[0]  # scaled to KL magnitude
+
+
+def loss_msle(pred: jnp.ndarray, tgt: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum((jnp.log1p(pred * pred.shape[0]) - jnp.log1p(tgt * tgt.shape[0])) ** 2)
+
+
+def loss_cosine(pred: jnp.ndarray, tgt: jnp.ndarray) -> jnp.ndarray:
+    num = jnp.sum(pred * tgt)
+    den = jnp.sqrt(jnp.sum(pred * pred) * jnp.sum(tgt * tgt)) + EPS
+    return 1.0 - num / den
+
+
+LOSSES = dict(kl=loss_kl, mse=loss_mse, msle=loss_msle, cosine=loss_cosine)
+
+
+# ---------------------------------------------------------------------------
+# Distillation trainer.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 300
+    batch: int = 4
+    seq_len: int = 256
+    lr: float = 3e-3
+    warmup: int = 20
+    loss: str = "kl"
+    seed: int = 0
+    synth_cfg: synth.SynthConfig = dataclasses.field(default_factory=synth.SynthConfig)
+
+
+def make_batch(rng: np.random.Generator, tc: TrainConfig):
+    """One batch of (K_rope, V, A_v, A_s) distillation tuples from the
+    Appendix-A.1 generator; targets via the exact reference aggregation."""
+    ks, vs, avs, ass_ = [], [], [], []
+    for b in range(tc.batch):
+        q, k, v, _ = synth.gen_qkv(rng, tc.seq_len, tc.synth_cfg, head_seed=int(rng.integers(8)))
+        av, a_s = ref.vs_aggregate(jnp.asarray(q), jnp.asarray(k))
+        ks.append(k)
+        vs.append(v)
+        avs.append(av)
+        ass_.append(a_s)
+    return (
+        jnp.asarray(np.stack(ks)),
+        jnp.asarray(np.stack(vs)),
+        jnp.stack(avs),
+        jnp.stack(ass_),
+    )
+
+
+def _lr_at(step: int, tc: TrainConfig) -> float:
+    if step < tc.warmup:
+        return tc.lr * (step + 1) / tc.warmup
+    t = (step - tc.warmup) / max(tc.steps - tc.warmup, 1)
+    return tc.lr * 0.5 * (1.0 + float(np.cos(np.pi * t)))
+
+
+def distill(cfg: IndexerConfig, tc: TrainConfig, log_every: int = 0):
+    """Train the VSIndexer by distillation; returns (params, history)."""
+    rng = np.random.default_rng(tc.seed)
+    params = init_indexer(rng, cfg)
+    loss_fn = LOSSES[tc.loss]
+
+    def batch_loss(p, kb, vb, avb, asb):
+        def one(k, v, av_t, as_t):
+            av_p, as_p = indexer_forward(p, k, v)
+            return loss_fn(av_p, av_t) + loss_fn(as_p, as_t)
+
+        return jnp.mean(jax.vmap(one)(kb, vb, avb, asb))
+
+    grad_fn = jax.jit(jax.value_and_grad(batch_loss))
+
+    # Adam state.
+    m = jax.tree.map(jnp.zeros_like, params)
+    s = jax.tree.map(jnp.zeros_like, params)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    history = []
+    for step in range(tc.steps):
+        kb, vb, avb, asb = make_batch(rng, tc)
+        loss, g = grad_fn(params, kb, vb, avb, asb)
+        lr = _lr_at(step, tc)
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        s = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, s, g)
+        t = step + 1
+        mh = jax.tree.map(lambda a: a / (1 - b1**t), m)
+        sh = jax.tree.map(lambda a: a / (1 - b2**t), s)
+        params = jax.tree.map(lambda p, a, b: p - lr * a / (jnp.sqrt(b) + eps), params, mh, sh)
+        history.append(float(loss))
+        if log_every and step % log_every == 0:
+            print(f"  distill step {step:4d} loss {float(loss):.4f} lr {lr:.2e}")
+    return params, history
+
+
+def recall_at_sparsity(
+    params: dict,
+    rng: np.random.Generator,
+    sparsity: float,
+    *,
+    n: int = 256,
+    trials: int = 8,
+    scfg: synth.SynthConfig | None = None,
+) -> float:
+    """Attention recall (Eq. 6) of the predicted VS mask at a given sparsity.
+
+    The (1-sparsity) * n^2/2 causal budget is split between vertical columns
+    and slash offsets proportionally to their predicted mass.
+    """
+    scfg = scfg or synth.SynthConfig()
+    total = 0.0
+    for t in range(trials):
+        q, k, v, _ = synth.gen_qkv(rng, n, scfg, head_seed=t % 8)
+        av, a_s = indexer_forward(params, jnp.asarray(k), jnp.asarray(v))
+        av, a_s = np.asarray(av), np.asarray(a_s)
+        keep_cells = (1.0 - sparsity) * (n * (n + 1) / 2)
+        mass_v, mass_s = float(av.sum()), float(a_s.sum())
+        # Average causal cells covered: a vertical column ~n/2 cells, a slash
+        # offset o covers n-o cells (~n/2 average).
+        cols = max(1, int(keep_cells * mass_v / (mass_v + mass_s) / (n / 2)))
+        offs = max(1, int(keep_cells * mass_s / (mass_v + mass_s) / (n / 2)))
+        v_idx = np.argsort(-av)[:cols]
+        s_idx = np.argsort(-a_s)[:offs]
+        keep = ref.vs_mask(n, v_idx, s_idx)
+        total += float(ref.attention_recall(jnp.asarray(q), jnp.asarray(k), keep))
+    return total / trials

@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels for VSPrefill (interpret=True on CPU).
+
+Modules:
+  ref                 pure-jnp oracles (materialize n x n; test scale only)
+  flash_attention     dense causal streaming-softmax baseline
+  vs_aggregate        two-pass online vertical/slash aggregation (§4.2)
+  vs_sparse_attention fused vertical-slash sparse attention (§4.3)
+"""
+
+from . import flash_attention, ref, vs_aggregate, vs_sparse_attention  # noqa: F401

@@ -1,0 +1,71 @@
+"""Dense causal FlashAttention Pallas kernel — the exact-attention baseline.
+
+Standard streaming-softmax recurrence (Dao et al., 2022): gridded over query
+blocks, iterating key blocks with running (max, sumexp, output) accumulators
+that are rescaled whenever the running max moves.  Serves two purposes:
+
+  * the FlashAttn rows of Tables 1-2 / Figure 5 (exact baseline);
+  * the computation-flow skeleton that ``vs_aggregate`` extends with online
+    aggregation, so the two kernels share their tiling conventions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, n: int, scale: float):
+    qi = pl.program_id(0)
+    q = q_ref[...]
+    block_q, d = q.shape
+    rows = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+    num_kb = n // block_k
+
+    def body(kb, carry):
+        m, s, acc = carry
+        k = pl.load(k_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(kb * block_k, block_k), slice(None)))
+        cols = kb * block_k + jax.lax.iota(jnp.int32, block_k)
+        p = jnp.dot(q, k.T) * scale
+        p = jnp.where(cols[None, :] <= rows[:, None], p, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(p, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        e = jnp.exp(p - m_new[:, None])
+        s_new = s * alpha + jnp.sum(e, axis=-1)
+        acc_new = acc * alpha[:, None] + jnp.dot(e, v)
+        return m_new, s_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    s0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    a0 = jnp.zeros((block_q, d), dtype=jnp.float32)
+    m, s, acc = jax.lax.fori_loop(0, num_kb, body, (m0, s0, a0))
+    o_ref[...] = acc / s[:, None]
+
+
+def flash_attention(
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *, block_q: int = 64, block_k: int = 64
+) -> jnp.ndarray:
+    """Exact causal attention via the streaming-softmax kernel; (n, d) in/out."""
+    n, d = q.shape
+    block_q = min(block_q, n)
+    block_k = min(block_k, n)
+    assert n % block_q == 0 and n % block_k == 0
+    kernel = functools.partial(_flash_kernel, block_k=block_k, n=n, scale=1.0 / d**0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

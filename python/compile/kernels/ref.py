@@ -1,0 +1,120 @@
+"""Pure-jnp correctness oracles for the VSPrefill kernels.
+
+Everything here materializes the full ``n x n`` attention matrix and is
+therefore only usable at test scale.  The Pallas kernels in this package
+(``vs_aggregate``, ``vs_sparse_attention``, ``flash_attention``) must agree
+with these references to within float tolerance; ``python/tests`` enforces
+that with hypothesis sweeps over shapes and pattern parameters.
+
+Conventions (shared with the Rust side — see rust/src/attention/):
+  * All attention is causal.
+  * ``A_v[j]``  = (1/n) * sum_i A[i, j]                (vertical column mass)
+  * ``A_s[o]``  = (1/n) * sum_{i-j==o} A[i, j]         (slash/offset mass),
+    offsets o in [0, n); both vectors sum to 1 for causal attention.
+  * A vertical-slash mask keeps cell (i, j) iff ``j in I_v`` or
+    ``(i - j) in I_s`` (Eq. 9 of the paper), intersected with causality.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def rope(x: jnp.ndarray, base: float = 10000.0, offset: int = 0) -> jnp.ndarray:
+    """Apply rotary positional embedding to ``x`` of shape (n, d), d even.
+
+    Pairs dimension 2p with 2p+1 and rotates by ``t * theta_p`` with
+    ``theta_p = base ** (-2p / d)`` — Eq. 22 of the paper.
+    """
+    n, d = x.shape
+    assert d % 2 == 0, "rope requires an even head dimension"
+    half = d // 2
+    theta = base ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / d)
+    t = jnp.arange(n, dtype=jnp.float32)[:, None] + float(offset)
+    ang = t * theta[None, :]  # (n, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x_even = x[:, 0::2]
+    x_odd = x[:, 1::2]
+    out = jnp.stack([x_even * cos - x_odd * sin, x_even * sin + x_odd * cos], axis=-1)
+    return out.reshape(n, d)
+
+
+def scaled_causal_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Scaled dot-product scores with the causal mask applied (Eq. 1)."""
+    n, d = q.shape
+    p = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    return jnp.where(j <= i, p, NEG_INF)
+
+
+def attention_probs(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Full causal softmax attention matrix A in [0,1]^{n x n} (Eq. 2)."""
+    return jax.nn.softmax(scaled_causal_scores(q, k), axis=-1)
+
+
+def dense_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """Exact causal attention output O = A @ V (Eq. 3)."""
+    return attention_probs(q, k) @ v
+
+
+def row_lse(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """Per-row logsumexp of the scaled causal scores; pass-1 oracle for the
+    two-pass online aggregation kernel."""
+    p = scaled_causal_scores(q, k)
+    m = jnp.max(p, axis=-1)
+    return m + jnp.log(jnp.sum(jnp.exp(p - m[:, None]), axis=-1))
+
+
+def vs_aggregate(q: jnp.ndarray, k: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Ground-truth vertical/slash aggregation of the attention matrix.
+
+    Returns ``(A_v, A_s)`` both of shape (n,), each summing to 1 (the paper
+    normalizes the n-sum aggregates by n to form distributions) — Eq. 15.
+    """
+    a = attention_probs(q, k)
+    n = a.shape[0]
+    a_v = jnp.sum(a, axis=0) / n
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    off = (i - j).reshape(-1)
+    a_s = (
+        jnp.zeros((n,), dtype=a.dtype)
+        .at[jnp.clip(off, 0, n - 1)]
+        .add(jnp.where(off >= 0, a.reshape(-1), 0.0))
+        / n
+    )
+    return a_v, a_s
+
+
+def vs_mask(n: int, v_idx, s_idx) -> jnp.ndarray:
+    """Boolean keep-mask (n, n) for Eq. 9 intersected with causality."""
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    keep_v = jnp.isin(j, jnp.asarray(np.asarray(v_idx), dtype=jnp.int32))
+    keep_s = jnp.isin(i - j, jnp.asarray(np.asarray(s_idx), dtype=jnp.int32))
+    return (keep_v | keep_s) & (j <= i)
+
+
+def vs_sparse_attention(q, k, v, v_idx, s_idx) -> jnp.ndarray:
+    """Reference sparse attention: softmax restricted to the VS mask (Eq. 4-5).
+
+    The main diagonal (slash offset 0) is always kept so every causal row has
+    finite softmax mass; the fused kernel makes the same guarantee.
+    """
+    n, _ = q.shape
+    keep = vs_mask(n, v_idx, s_idx) | jnp.eye(n, dtype=bool)
+    p = jnp.where(keep, scaled_causal_scores(q, k), NEG_INF)
+    a = jax.nn.softmax(p, axis=-1)
+    return a @ v
+
+
+def attention_recall(q: jnp.ndarray, k: jnp.ndarray, keep: jnp.ndarray) -> jnp.ndarray:
+    """Attention Recall R(S) (Eq. 6): retained causal attention mass / n."""
+    a = attention_probs(q, k)
+    n = a.shape[0]
+    return jnp.sum(jnp.where(keep, a, 0.0)) / n

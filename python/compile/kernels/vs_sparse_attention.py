@@ -1,0 +1,130 @@
+"""Fused vertical-slash sparse attention Pallas kernel (§4.3 of the paper).
+
+For each query row the admissible key set is ``I_v ∪ {i - s : s in I_s}``
+(Eq. 9).  The kernel is gridded over query blocks; within a block it
+
+  1. builds, per row, the merged candidate column list from the (sorted,
+     padded) vertical index list and the slash offset list — the union is
+     formed on the fly, never materialized as an ``n x n`` mask;
+  2. gathers the candidate K/V rows on demand ("fetch key-value pairs on
+     demand", §4.3);
+  3. masks duplicates (a column selected by both a vertical index and a slash
+     offset must be counted once), padding sentinels and non-causal cells;
+  4. runs a numerically stable masked softmax over the ``k_v + k_s``
+     candidates and accumulates the output.
+
+Index lists are fixed-capacity (static shapes for AOT lowering): callers pad
+``v_idx`` / ``s_idx`` with the sentinel ``n`` and pass the true lengths.
+Slash offset 0 (the main diagonal) is implicitly guaranteed by callers that
+need finite rows; the Rust budgeter always includes it, and ``ref.py``
+mirrors the same convention.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the per-row gather
+trades the paper's per-block Merge-Path union (a GPU warp algorithm) for a
+VMEM-resident (block_q, k_v+k_s, d) gather that the MXU consumes as a batch
+of skinny matmuls; the Rust hot path implements the actual Merge-Path
+partitioned union where the block-union strategy pays off.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _vs_sparse_kernel(
+    q_ref, k_ref, v_ref, vidx_ref, sidx_ref, lens_ref, o_ref, *, n: int, scale: float
+):
+    """Grid: (num_q_blocks,)."""
+    qi = pl.program_id(0)
+    q = q_ref[...]  # (block_q, d)
+    block_q = q.shape[0]
+    rows = qi * block_q + jax.lax.iota(jnp.int32, block_q)  # (bq,)
+
+    v_idx = vidx_ref[...]  # (kv,) int32, padded with n
+    s_idx = sidx_ref[...]  # (ks,) int32, padded with n
+    v_len = lens_ref[0]
+    s_len = lens_ref[1]
+    kv = v_idx.shape[0]
+    ks = s_idx.shape[0]
+
+    v_valid = jax.lax.iota(jnp.int32, kv) < v_len  # (kv,)
+    s_valid = jax.lax.iota(jnp.int32, ks) < s_len  # (ks,)
+
+    # Per-row candidate columns: vertical cols broadcast, slash cols i - s.
+    vcols = jnp.broadcast_to(v_idx[None, :], (block_q, kv))  # (bq, kv)
+    scols = rows[:, None] - s_idx[None, :]  # (bq, ks)
+
+    # Validity masks: in range, causal, unpadded.
+    vmask = v_valid[None, :] & (vcols <= rows[:, None]) & (vcols < n)
+    smask = s_valid[None, :] & (scols >= 0) & (scols <= rows[:, None])
+    # Duplicate suppression: drop a slash candidate that also appears as a
+    # valid vertical candidate for the same row.
+    dup = jnp.any(
+        (scols[:, :, None] == vcols[:, None, :]) & vmask[:, None, :], axis=-1
+    )  # (bq, ks)
+    smask = smask & ~dup
+
+    cols = jnp.concatenate([vcols, scols], axis=1)  # (bq, m)
+    mask = jnp.concatenate([vmask, smask], axis=1)  # (bq, m)
+    cols_safe = jnp.clip(cols, 0, n - 1)
+
+    # On-demand K/V gather: (bq, m, d).
+    k_g = pl.load(k_ref, (slice(None), slice(None)))[cols_safe]
+    v_g = pl.load(v_ref, (slice(None), slice(None)))[cols_safe]
+
+    p = jnp.einsum("id,imd->im", q, k_g) * scale
+    p = jnp.where(mask, p, NEG_INF)
+    m_row = jnp.max(p, axis=-1, keepdims=True)
+    # Guard fully-masked rows (can only happen for row 0 when callers omit
+    # offset 0); exp(NEG_INF - NEG_INF) would be NaN otherwise.
+    m_row = jnp.maximum(m_row, -0.5 * jnp.float32(NEG_INF) * 0 + (NEG_INF / 2))
+    e = jnp.where(mask, jnp.exp(p - m_row), 0.0)
+    denom = jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    o_ref[...] = jnp.einsum("im,imd->id", e / denom, v_g)
+
+
+def vs_sparse_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    v_idx: jnp.ndarray,
+    s_idx: jnp.ndarray,
+    lens: jnp.ndarray,
+    *,
+    block_q: int = 64,
+) -> jnp.ndarray:
+    """Fused sparse attention over a vertical-slash index pair.
+
+    Args:
+      q, k, v: (n, d) float32.
+      v_idx:   (kv,) int32 vertical column indices, padded with ``n``.
+      s_idx:   (ks,) int32 slash offsets, padded with ``n``.
+      lens:    (2,)  int32 = [v_len, s_len] true lengths.
+    Returns (n, d) attention output.
+    """
+    n, d = q.shape
+    block_q = min(block_q, n)
+    assert n % block_q == 0
+    scale = 1.0 / (d**0.5)
+    kernel = functools.partial(_vs_sparse_kernel, n=n, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(n // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((v_idx.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((s_idx.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, v_idx.astype(jnp.int32), s_idx.astype(jnp.int32), lens.astype(jnp.int32))

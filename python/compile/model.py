@@ -1,0 +1,170 @@
+"""L2 — toy GQA transformer in JAX, calling the L1 kernels.
+
+A small grouped-query-attention decoder stack standing in for the paper's
+Qwen3-4B / LLaMA-3.1-8B backbones (DESIGN.md substitution #1).  The prefill
+path is expressed twice:
+
+  * ``prefill_dense``  — exact attention via the flash kernel; also returns
+    the per-layer RoPE'd K and V tensors the VSIndexer consumes.
+  * ``prefill_sparse`` — vertical-slash sparse attention via the fused kernel
+    given per-layer/group index lists.
+
+Both are AOT-lowered by ``aot.py`` to HLO text per sequence-length bucket and
+executed from Rust; Python never runs at serving time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import flash_attention as fa
+from .kernels import ref
+from .kernels import vs_sparse_attention as vsa
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    n_kv_heads: int = 2
+    head_dim: int = 32
+    n_layers: int = 2
+    mlp_ratio: int = 4
+    rope_base: float = 10000.0
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+TINY = ModelConfig()
+
+
+def init_params(rng: np.random.Generator, cfg: ModelConfig = TINY) -> dict:
+    """He-style random init; returns a pytree of float32 jnp arrays."""
+
+    def w(*shape, scale=None):
+        s = scale if scale is not None else (2.0 / shape[0]) ** 0.5
+        return jnp.asarray(rng.normal(size=shape) * s, jnp.float32)
+
+    layers = []
+    for _ in range(cfg.n_layers):
+        layers.append(
+            dict(
+                wq=w(cfg.d_model, cfg.n_heads * cfg.head_dim),
+                wk=w(cfg.d_model, cfg.n_kv_heads * cfg.head_dim),
+                wv=w(cfg.d_model, cfg.n_kv_heads * cfg.head_dim),
+                wo=w(cfg.n_heads * cfg.head_dim, cfg.d_model),
+                w1=w(cfg.d_model, cfg.mlp_ratio * cfg.d_model),
+                w2=w(cfg.mlp_ratio * cfg.d_model, cfg.d_model),
+                ln1=jnp.ones((cfg.d_model,), jnp.float32),
+                ln2=jnp.ones((cfg.d_model,), jnp.float32),
+            )
+        )
+    return dict(
+        embed=w(cfg.vocab, cfg.d_model, scale=0.02),
+        lnf=jnp.ones((cfg.d_model,), jnp.float32),
+        layers=layers,
+    )
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    return x * g / jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+
+
+def layer_qkv(lp: dict, x: jnp.ndarray, cfg: ModelConfig):
+    """Project and RoPE one layer's Q/K/V.
+
+    Returns q (H, n, d), k (KV, n, d), v (KV, n, d) — K already RoPE'd, which
+    is exactly the representation the VSIndexer takes as input (§4.1).
+    """
+    n = x.shape[0]
+    h = rmsnorm(x, lp["ln1"])
+    q = (h @ lp["wq"]).reshape(n, cfg.n_heads, cfg.head_dim).transpose(1, 0, 2)
+    k = (h @ lp["wk"]).reshape(n, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+    v = (h @ lp["wv"]).reshape(n, cfg.n_kv_heads, cfg.head_dim).transpose(1, 0, 2)
+    rope = functools.partial(ref.rope, base=cfg.rope_base)
+    q = jax.vmap(rope)(q)
+    k = jax.vmap(rope)(k)
+    return q, k, v
+
+
+def _attn_out_to_residual(lp: dict, x: jnp.ndarray, heads_out: jnp.ndarray, cfg: ModelConfig):
+    n = x.shape[0]
+    o = heads_out.transpose(1, 0, 2).reshape(n, cfg.n_heads * cfg.head_dim)
+    x = x + o @ lp["wo"]
+    h = rmsnorm(x, lp["ln2"])
+    return x + jax.nn.silu(h @ lp["w1"]) @ lp["w2"]
+
+
+def prefill_dense(params: dict, tokens: jnp.ndarray, cfg: ModelConfig = TINY):
+    """Exact prefill. Returns (logits, ks, vs) with ks/vs stacked as
+    (n_layers, n_kv_heads, n, head_dim); K is post-RoPE."""
+    x = params["embed"][tokens]
+    ks, vs = [], []
+    for lp in params["layers"]:
+        q, k, v = layer_qkv(lp, x, cfg)
+        ks.append(k)
+        vs.append(v)
+        kg = jnp.repeat(k, cfg.group_size, axis=0)
+        vg = jnp.repeat(v, cfg.group_size, axis=0)
+        heads_out = jax.vmap(fa.flash_attention)(q, kg, vg)
+        x = _attn_out_to_residual(lp, x, heads_out, cfg)
+    logits = rmsnorm(x, params["lnf"]) @ params["embed"].T
+    return logits, jnp.stack(ks), jnp.stack(vs)
+
+
+def prefill_sparse(
+    params: dict,
+    tokens: jnp.ndarray,
+    v_idx: jnp.ndarray,
+    s_idx: jnp.ndarray,
+    lens: jnp.ndarray,
+    cfg: ModelConfig = TINY,
+):
+    """Sparse prefill: per-(layer, kv-group) vertical/slash index lists.
+
+    Args:
+      v_idx: (n_layers, n_kv_heads, kv_cap) int32, padded with n.
+      s_idx: (n_layers, n_kv_heads, ks_cap) int32, padded with n.
+      lens:  (n_layers, n_kv_heads, 2) int32 true lengths.
+    Returns logits (n, vocab).
+    """
+    x = params["embed"][tokens]
+    for li, lp in enumerate(params["layers"]):
+        q, k, v = layer_qkv(lp, x, cfg)
+        kg = jnp.repeat(k, cfg.group_size, axis=0)
+        vg = jnp.repeat(v, cfg.group_size, axis=0)
+        vi = jnp.repeat(v_idx[li], cfg.group_size, axis=0)
+        si = jnp.repeat(s_idx[li], cfg.group_size, axis=0)
+        ln = jnp.repeat(lens[li], cfg.group_size, axis=0)
+        heads_out = jax.vmap(vsa.vs_sparse_attention)(q, kg, vg, vi, si, ln)
+        x = _attn_out_to_residual(lp, x, heads_out, cfg)
+    return rmsnorm(x, params["lnf"]) @ params["embed"].T
+
+
+def flatten_params(params: dict, cfg: ModelConfig = TINY) -> list[tuple[str, jnp.ndarray]]:
+    """Deterministic (name, array) list for weight export / AOT arguments."""
+    out = [("embed", params["embed"]), ("lnf", params["lnf"])]
+    for i, lp in enumerate(params["layers"]):
+        for key in ("wq", "wk", "wv", "wo", "w1", "w2", "ln1", "ln2"):
+            out.append((f"layers.{i}.{key}", lp[key]))
+    return out
+
+
+def unflatten_params(flat: list[jnp.ndarray], cfg: ModelConfig = TINY) -> dict:
+    """Inverse of flatten_params given arrays in the same order."""
+    it = iter(flat)
+    params = dict(embed=next(it), lnf=next(it), layers=[])
+    for _ in range(cfg.n_layers):
+        lp = {}
+        for key in ("wq", "wk", "wv", "wo", "w1", "w2", "ln1", "ln2"):
+            lp[key] = next(it)
+        params["layers"].append(lp)
+    return params

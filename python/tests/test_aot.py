@@ -1,0 +1,66 @@
+"""AOT pipeline tests: artifacts exist, parse as HLO text, manifest is sane.
+
+These run against the bundle produced by ``make artifacts`` when present;
+otherwise they lower a single small graph in-process to validate the HLO-text
+path end-to-end (the full bundle is exercised by the Rust integration tests).
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrippable():
+    def fn(x, y):
+        return (jnp.matmul(x, y) + 1.0,)
+
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_caps_monotone():
+    prev = (0, 0)
+    for n in (256, 512, 1024, 4096):
+        caps = aot.caps_for(n)
+        assert caps[0] >= prev[0] and caps[1] >= prev[1]
+        assert caps[0] <= n and caps[1] <= n
+        prev = caps
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifact bundle not built")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["head_dim"] == aot.HEAD_DIM
+    for name, g in manifest["graphs"].items():
+        path = os.path.join(ART, g["file"])
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(200)
+        assert "HloModule" in head, name
+        assert len(g["args"]) >= 1
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "indexer_weights.json")),
+                    reason="artifact bundle not built")
+def test_exported_indexer_weights_shapes():
+    with open(os.path.join(ART, "indexer_weights.json")) as f:
+        w = json.load(f)
+    d, h = w["head_dim"], w["hidden"]
+    shapes = {k: v["shape"] for k, v in w["weights"].items()}
+    assert shapes["wu"] == [2 * d, h]
+    assert shapes["wv"] == [h, 1] and shapes["ws"] == [h, 1]
+    for v in w["weights"].values():
+        assert len(v["data"]) == int(np.prod(v["shape"]))
+        assert all(np.isfinite(v["data"]))

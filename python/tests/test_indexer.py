@@ -1,0 +1,90 @@
+"""VSIndexer forward/distillation tests (L2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import indexer as ix
+from compile import synth
+from compile.kernels import ref
+
+CFG = ix.IndexerConfig(head_dim=32, hidden=64)
+
+
+def test_forward_outputs_distributions():
+    rng = np.random.default_rng(0)
+    p = ix.init_indexer(rng, CFG)
+    k = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+    av, a_s = ix.indexer_forward(p, k, v)
+    assert av.shape == (64,) and a_s.shape == (64,)
+    np.testing.assert_allclose(float(av.sum()), 1.0, atol=1e-5)
+    np.testing.assert_allclose(float(a_s.sum()), 1.0, atol=1e-5)
+    assert float(av.min()) >= 0 and float(a_s.min()) >= 0
+
+
+def test_slash_alignment_convention():
+    """The slash score at offset o must come from position n-1-o."""
+    rng = np.random.default_rng(1)
+    p = ix.init_indexer(rng, CFG)
+    k = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+    _, a_s = ix.indexer_forward(p, k, v)
+    # Recompute by hand.
+    import jax
+
+    x = jnp.concatenate([k, v], -1)
+    z = jax.nn.silu(x @ p["wu"] + p["bu"])
+    logits = (z @ p["ws"] + p["bs"])[:, 0]
+    want = jax.nn.softmax(logits[::-1])
+    np.testing.assert_allclose(a_s, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("loss", ["kl", "mse", "msle", "cosine"])
+def test_losses_zero_at_match_and_positive(loss):
+    rng = np.random.default_rng(2)
+    t = rng.random(32).astype(np.float32)
+    t /= t.sum()
+    fn = ix.LOSSES[loss]
+    t = jnp.asarray(t)
+    assert abs(float(fn(t, t))) < 1e-5
+    u = jnp.roll(t, 3)
+    assert float(fn(u, t)) > 1e-4
+
+
+def test_distillation_reduces_loss_and_learns_verticals():
+    tc = ix.TrainConfig(steps=150, batch=4, seq_len=128, loss="kl", seed=0)
+    params, hist = ix.distill(CFG, tc)
+    early = float(np.mean(hist[:5]))
+    late = float(np.mean(hist[-5:]))
+    assert late < early * 0.5, (early, late)
+
+    # The trained indexer should rank injected heavy-hitter columns highly.
+    rng = np.random.default_rng(99)
+    q, k, v, info = synth.gen_qkv(rng, 128, tc.synth_cfg, head_seed=0)
+    av, _ = ix.indexer_forward(params, jnp.asarray(k), jnp.asarray(v))
+    top = set(np.argsort(-np.asarray(av))[:12].tolist())
+    hits = len(top & set(info["heavy"].tolist()))
+    assert hits >= len(info["heavy"]) // 2, (sorted(top), info["heavy"])
+
+
+def test_trained_recall_beats_random():
+    tc = ix.TrainConfig(steps=150, batch=4, seq_len=128, loss="kl", seed=1)
+    params, _ = ix.distill(CFG, tc)
+    rng = np.random.default_rng(5)
+    r_learned = ix.recall_at_sparsity(params, rng, sparsity=0.9, n=128, trials=4)
+
+    # Random baseline with the same budget split.
+    rng2 = np.random.default_rng(5)
+    total = 0.0
+    n = 128
+    for t in range(4):
+        q, k, _, _ = synth.gen_qkv(rng2, n, tc.synth_cfg, head_seed=t % 8)
+        keep_cells = 0.1 * (n * (n + 1) / 2)
+        cols = max(1, int(keep_cells / 2 / (n / 2)))
+        offs = max(1, int(keep_cells / 2 / (n / 2)))
+        ridx = np.random.default_rng(t)
+        keep = ref.vs_mask(n, ridx.choice(n, cols, replace=False), ridx.choice(n, offs, replace=False))
+        total += float(ref.attention_recall(jnp.asarray(q), jnp.asarray(k), keep))
+    r_random = total / 4
+    assert r_learned > r_random + 0.1, (r_learned, r_random)

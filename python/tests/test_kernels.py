@@ -1,0 +1,223 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, block sizes and sparse index sets; every property
+asserts allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import synth
+from compile.kernels import flash_attention as fa
+from compile.kernels import ref
+from compile.kernels import vs_aggregate as agg
+from compile.kernels import vs_sparse_attention as vsa
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def qkv(seed: int, n: int, d: int):
+    rng = np.random.default_rng(seed)
+    mk = lambda: jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    return mk(), mk(), mk()
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    bq=st.sampled_from([16, 32]),
+)
+def test_flash_matches_dense(seed, n, d, bq):
+    q, k, v = qkv(seed, n, d)
+    out = fa.flash_attention(q, k, v, block_q=bq, block_k=bq)
+    want = ref.dense_attention(q, k, v)
+    np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_causality():
+    """Perturbing future keys/values must not change earlier rows."""
+    q, k, v = qkv(0, 64, 16)
+    out1 = fa.flash_attention(q, k, v)
+    k2 = k.at[40:].add(3.0)
+    v2 = v.at[40:].add(-2.0)
+    out2 = fa.flash_attention(q, k2, v2)
+    np.testing.assert_allclose(out1[:40], out2[:40], atol=1e-6)
+    assert not np.allclose(out1[40:], out2[40:])
+
+
+def test_flash_rows_are_convex_combinations():
+    q, k, _ = qkv(1, 64, 16)
+    v = jnp.ones((64, 16), jnp.float32)
+    out = fa.flash_attention(q, k, v)
+    np.testing.assert_allclose(out, 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# vs_aggregate (two-pass online aggregation)
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([8, 32]),
+    bq=st.sampled_from([16, 32]),
+)
+def test_lse_matches(seed, n, d, bq):
+    q, k, _ = qkv(seed, n, d)
+    got = agg.row_lse(q, k, block_q=bq, block_k=bq)
+    np.testing.assert_allclose(got, ref.row_lse(q, k), atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([32, 64, 128]),
+    bq=st.sampled_from([16, 32]),
+    bk=st.sampled_from([16, 32]),
+)
+def test_vs_aggregate_matches(seed, n, bq, bk):
+    q, k, _ = qkv(seed, n, 16)
+    av, a_s = agg.vs_aggregate(q, k, block_q=bq, block_k=bk)
+    av_ref, as_ref = ref.vs_aggregate(q, k)
+    np.testing.assert_allclose(av, av_ref, atol=1e-6)
+    np.testing.assert_allclose(a_s, as_ref, atol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([32, 64]))
+def test_vs_aggregate_is_distribution(seed, n):
+    """Both aggregates are nonnegative and sum to 1 (paper §4.2)."""
+    q, k, _ = qkv(seed, n, 16)
+    av, a_s = agg.vs_aggregate(q, k)
+    assert float(jnp.min(av)) >= 0 and float(jnp.min(a_s)) >= 0
+    np.testing.assert_allclose(float(jnp.sum(av)), 1.0, atol=1e-4)
+    np.testing.assert_allclose(float(jnp.sum(a_s)), 1.0, atol=1e-4)
+
+
+def test_vs_aggregate_detects_injected_verticals():
+    """Heavy-hitter columns injected by the synth generator must dominate A_v."""
+    rng = np.random.default_rng(3)
+    q, k, _, info = synth.gen_qkv(rng, 128, synth.SynthConfig(n_heavy=4))
+    av, _ = agg.vs_aggregate(jnp.asarray(q), jnp.asarray(k))
+    top = set(np.argsort(-np.asarray(av))[: len(info["heavy"]) + 2].tolist())
+    hits = len(top & set(info["heavy"].tolist()))
+    assert hits >= len(info["heavy"]) - 1, (top, info["heavy"])
+
+
+def test_slash_peak_at_zero_under_tied_means():
+    """Appendix A.1, Eq. 28: with mu_q == mu_k every rotation plane has
+    b_p = 0, so the expected score peaks exactly at offset 0."""
+    rng = np.random.default_rng(4)
+    cfg = synth.SynthConfig(tied_means=True, n_heavy=0, sink_tokens=0, query_align=0.0)
+    q, k, _, _ = synth.gen_qkv(rng, 128, cfg)
+    _, a_s = agg.vs_aggregate(jnp.asarray(q), jnp.asarray(k))
+    assert int(np.argmax(np.asarray(a_s))) == 0
+
+
+def test_slash_mass_is_concentrated():
+    """Untied means move the peak but the offset distribution stays peaky —
+    a few offsets must carry most of the slash mass (the paper's Fig. 4)."""
+    rng = np.random.default_rng(4)
+    cfg = synth.SynthConfig(n_heavy=0, sink_tokens=0, query_align=0.0, mean_scale=3.0)
+    q, k, _, _ = synth.gen_qkv(rng, 128, cfg)
+    _, a_s = agg.vs_aggregate(jnp.asarray(q), jnp.asarray(k))
+    a_s = np.sort(np.asarray(a_s))[::-1]
+    assert a_s[:16].sum() > 0.5 * a_s.sum()
+
+
+# ---------------------------------------------------------------------------
+# vs_sparse_attention (fused kernel)
+# ---------------------------------------------------------------------------
+
+def pad_idx(idx, cap, n):
+    out = np.full((cap,), n, np.int32)
+    out[: len(idx)] = np.asarray(idx, np.int32)
+    return jnp.asarray(out)
+
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([32, 64, 128]),
+    nv=st.integers(1, 8),
+    ns=st.integers(1, 6),
+)
+def test_sparse_matches_masked_reference(seed, n, nv, ns):
+    rng = np.random.default_rng(seed)
+    q, k, v = qkv(seed, n, 16)
+    v_idx = np.sort(rng.choice(n, size=nv, replace=False))
+    s_idx = np.unique(np.concatenate([[0], rng.choice(n, size=ns, replace=False)]))
+    out = vsa.vs_sparse_attention(
+        q, k, v,
+        pad_idx(v_idx, 16, n), pad_idx(s_idx, 12, n),
+        jnp.asarray([len(v_idx), len(s_idx)], jnp.int32),
+        block_q=32 if n >= 32 else n,
+    )
+    want = ref.vs_sparse_attention(q, k, v, v_idx, s_idx)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_sparse_duplicate_indices_not_double_counted():
+    """A column that is both vertical and on a selected slash must contribute
+    exactly once to the softmax."""
+    n = 64
+    q, k, v = qkv(7, n, 16)
+    # offset 0 makes column i a slash candidate of row i; also make col 10
+    # vertical — for row 10 they coincide.
+    v_idx = np.array([10], np.int32)
+    s_idx = np.array([0], np.int32)
+    out = vsa.vs_sparse_attention(
+        q, k, v, pad_idx(v_idx, 8, n), pad_idx(s_idx, 8, n),
+        jnp.asarray([1, 1], jnp.int32), block_q=32,
+    )
+    want = ref.vs_sparse_attention(q, k, v, v_idx, s_idx)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_sparse_full_budget_equals_dense():
+    """Selecting every column reduces the sparse kernel to exact attention."""
+    n = 32
+    q, k, v = qkv(9, n, 8)
+    v_idx = np.arange(n)
+    out = vsa.vs_sparse_attention(
+        q, k, v, pad_idx(v_idx, n, n), pad_idx([0], 4, n),
+        jnp.asarray([n, 1], jnp.int32), block_q=16,
+    )
+    want = ref.dense_attention(q, k, v)
+    np.testing.assert_allclose(out, want, atol=3e-5, rtol=3e-5)
+
+
+def test_sparse_padding_is_inert():
+    """Growing the padded capacity must not change the result."""
+    n = 64
+    q, k, v = qkv(11, n, 16)
+    v_idx, s_idx = np.array([0, 5]), np.array([0, 3])
+    lens = jnp.asarray([2, 2], jnp.int32)
+    a = vsa.vs_sparse_attention(q, k, v, pad_idx(v_idx, 4, n), pad_idx(s_idx, 4, n), lens)
+    b = vsa.vs_sparse_attention(q, k, v, pad_idx(v_idx, 32, n), pad_idx(s_idx, 16, n), lens)
+    np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_recall_monotone_in_budget():
+    """Adding indices can only increase attention recall (Eq. 6)."""
+    rng = np.random.default_rng(5)
+    q, k, _, _ = synth.gen_qkv(rng, 128, synth.SynthConfig())
+    q, k = jnp.asarray(q), jnp.asarray(k)
+    av, a_s = ref.vs_aggregate(q, k)
+    order_v = np.argsort(-np.asarray(av))
+    prev = 0.0
+    for nv in (1, 4, 16, 64):
+        keep = ref.vs_mask(128, order_v[:nv], np.array([0]))
+        r = float(ref.attention_recall(q, k, keep))
+        assert r >= prev - 1e-6
+        prev = r
+    assert prev > 0.3

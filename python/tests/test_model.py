@@ -1,0 +1,94 @@
+"""Toy GQA transformer (L2) shape/semantics tests."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as mdl
+from compile.kernels import ref
+
+CFG = mdl.ModelConfig(vocab=64, d_model=32, n_heads=4, n_kv_heads=2, head_dim=8, n_layers=2)
+
+
+def params():
+    return mdl.init_params(np.random.default_rng(0), CFG)
+
+
+def test_prefill_dense_shapes():
+    p = params()
+    tokens = jnp.asarray(np.arange(32) % CFG.vocab, jnp.int32)
+    logits, ks, vs = mdl.prefill_dense(p, tokens, CFG)
+    assert logits.shape == (32, CFG.vocab)
+    assert ks.shape == (CFG.n_layers, CFG.n_kv_heads, 32, CFG.head_dim)
+    assert vs.shape == ks.shape
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_prefill_causality():
+    """Changing a suffix token must not affect earlier logits."""
+    p = params()
+    t1 = jnp.asarray(np.arange(32) % CFG.vocab, jnp.int32)
+    t2 = t1.at[20:].set(7)
+    l1, _, _ = mdl.prefill_dense(p, t1, CFG)
+    l2, _, _ = mdl.prefill_dense(p, t2, CFG)
+    np.testing.assert_allclose(l1[:20], l2[:20], atol=1e-4)
+
+
+def test_sparse_prefill_full_budget_matches_dense():
+    """With every column selected, sparse prefill == dense prefill."""
+    p = params()
+    n = 32
+    tokens = jnp.asarray(np.arange(n) % CFG.vocab, jnp.int32)
+    kv_cap, ks_cap = n, 4
+    vi = np.tile(np.arange(n, dtype=np.int32), (CFG.n_layers, CFG.n_kv_heads, 1))
+    si = np.full((CFG.n_layers, CFG.n_kv_heads, ks_cap), n, np.int32)
+    si[:, :, 0] = 0
+    lens = np.tile(np.asarray([n, 1], np.int32), (CFG.n_layers, CFG.n_kv_heads, 1))
+    sparse = mdl.prefill_sparse(p, tokens, jnp.asarray(vi), jnp.asarray(si), jnp.asarray(lens), CFG)
+    dense, _, _ = mdl.prefill_dense(p, tokens, CFG)
+    np.testing.assert_allclose(sparse, dense, atol=1e-3, rtol=1e-3)
+
+
+def test_sparse_prefill_degrades_gracefully():
+    """A tight-but-sane budget must stay finite and close-ish to dense."""
+    p = params()
+    n = 32
+    tokens = jnp.asarray((np.arange(n) * 3) % CFG.vocab, jnp.int32)
+    kv_cap, ks_cap = 8, 4
+    vi = np.full((CFG.n_layers, CFG.n_kv_heads, kv_cap), n, np.int32)
+    vi[:, :, :4] = np.arange(4)
+    si = np.full((CFG.n_layers, CFG.n_kv_heads, ks_cap), n, np.int32)
+    si[:, :, 0] = 0
+    si[:, :, 1] = 1
+    lens = np.tile(np.asarray([4, 2], np.int32), (CFG.n_layers, CFG.n_kv_heads, 1))
+    sparse = mdl.prefill_sparse(p, tokens, jnp.asarray(vi), jnp.asarray(si), jnp.asarray(lens), CFG)
+    assert np.all(np.isfinite(np.asarray(sparse)))
+
+
+def test_flatten_unflatten_roundtrip():
+    p = params()
+    flat = mdl.flatten_params(p, CFG)
+    p2 = mdl.unflatten_params([a for _, a in flat], CFG)
+    tokens = jnp.asarray(np.arange(16) % CFG.vocab, jnp.int32)
+    l1, _, _ = mdl.prefill_dense(p, tokens, CFG)
+    l2, _, _ = mdl.prefill_dense(p2, tokens, CFG)
+    np.testing.assert_allclose(l1, l2)
+
+
+def test_rope_preserves_norm_and_relativity():
+    """R(t) is orthogonal; q·R(m-n)k == (R(m)q)·(R(n)k)."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 16)), jnp.float32)
+    y = ref.rope(x)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=1),
+        np.linalg.norm(np.asarray(y), axis=1),
+        rtol=1e-5,
+    )
+    # relativity: scores depend only on offset for constant inputs
+    q = jnp.tile(x[:1], (8, 1))
+    k = jnp.tile(x[1:2], (8, 1))
+    qr, kr = ref.rope(q), ref.rope(k)
+    s = np.asarray(qr @ kr.T)
+    for off in range(1, 4):
+        d = np.diagonal(s, -off)
+        np.testing.assert_allclose(d, d[0], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,9 @@
+//! Bench: Figure 2 (accuracy/perplexity vs recall) regeneration.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let pts = vsprefill::experiments::fig2::run(256, 3, 42);
+    println!("{}", vsprefill::experiments::fig2::render(&pts));
+    println!("bench fig2_recall_curve: {:?}", t0.elapsed());
+}

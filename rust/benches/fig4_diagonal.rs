@@ -1,0 +1,10 @@
+//! Bench: Figure 4 (diagonal-aggregated heatmap) — times the online
+//! aggregation across 8 heads and prints the ASCII heatmap.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let profiles = vsprefill::experiments::fig4::run(512, 8, 42);
+    println!("{}", vsprefill::experiments::fig4::render_ascii(&profiles, 64));
+    println!("bench fig4_diagonal: {:?}", t0.elapsed());
+}

@@ -1,0 +1,9 @@
+//! Bench: Figure 5 (Pareto sweep) regeneration at quick lengths.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let pts = vsprefill::experiments::fig5::run(&[4096, 8192], 1, 42);
+    println!("{}", vsprefill::experiments::fig5::render(&pts));
+    println!("bench fig5_pareto: {:?}", t0.elapsed());
+}

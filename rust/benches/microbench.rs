@@ -1,0 +1,106 @@
+//! Microbenchmarks of the hot-path components (the §Perf instrument):
+//!   - dense flash attention executor (cells/s)
+//!   - fused VS sparse executor (cells/s at ~15% density)
+//!   - VSIndexer forward (positions/s)
+//!   - cumulative-threshold budget selection
+//!   - Merge-Path block union
+//!   - PJRT artifact execution (when available): flash / indexer / sparse
+//!
+//! Prints one line per component: name, work, wall time, throughput.
+
+use std::time::Instant;
+
+use vsprefill::attention::flash::flash_attention;
+use vsprefill::indexer::train::{distill, TrainConfig};
+use vsprefill::runtime::ArtifactBundle;
+use vsprefill::sparse::merge::block_columns;
+use vsprefill::sparse_attn::exec::sparse_attention_vs;
+use vsprefill::sparse_attn::VsPrefill;
+use vsprefill::synth::{gen_head, SynthConfig};
+use vsprefill::util::rng::Rng;
+
+fn time<F: FnMut()>(name: &str, work: f64, unit: &str, reps: usize, mut f: F) {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "{name:<28} {work:>12.0} {unit:<10} {:>10.3} ms  {:>12.2e} {unit}/s",
+        dt * 1e3,
+        work / dt
+    );
+}
+
+fn main() {
+    let n = 1024;
+    let mut rng = Rng::new(0);
+    let head = gen_head(&mut rng, n, &SynthConfig::default(), 0);
+    let (ix, _) = distill(&TrainConfig { steps: 150, ..Default::default() });
+    let vsp = VsPrefill::new(ix);
+    let idx = vsp.predict_kv(&head.k, &head.v, 0.5);
+    let dense_cells = (n * (n + 1) / 2) as f64;
+    let sparse_cells = idx.covered_cells(n) as f64;
+
+    println!("component                            work unit            time     throughput");
+    time("flash_attention (native)", dense_cells, "cells", 3, || {
+        std::hint::black_box(flash_attention(&head.q, &head.k, &head.v, 64, 64));
+    });
+    time("vs_sparse_attention (native)", sparse_cells, "cells", 3, || {
+        std::hint::black_box(sparse_attention_vs(&head.q, &head.k, &head.v, &idx, 64));
+    });
+    time("vs_indexer forward", n as f64, "pos", 10, || {
+        std::hint::black_box(vsp.indexer.predict_kv(&head.k, &head.v));
+    });
+    let (a_v, a_s) = vsp.indexer.predict_kv(&head.k, &head.v);
+    time("budget select (Eq.18-19)", n as f64, "pos", 50, || {
+        std::hint::black_box(vsp.select_from_scores(&a_v, &a_s, n, 0.5));
+    });
+    time("merge-path block union", (n / 64) as f64, "blocks", 50, || {
+        for q0 in (0..n).step_by(64) {
+            std::hint::black_box(block_columns(&idx.vertical, &idx.slash, q0, 64, n));
+        }
+    });
+    time("online vs_aggregate (tiled)", dense_cells, "cells", 3, || {
+        std::hint::black_box(vsprefill::attention::aggregate::vs_aggregate_tiled(
+            &head.q, &head.k, 64,
+        ));
+    });
+
+    if ArtifactBundle::available() {
+        let rt = vsprefill::runtime::Engine::load_filtered(
+            &ArtifactBundle::default_dir(),
+            |name| name.ends_with("_256"),
+        )
+        .unwrap();
+        let nb = 256;
+        let mut rng = Rng::new(1);
+        let h = gen_head(&mut rng, nb, &SynthConfig::default(), 0);
+        let cells = (nb * (nb + 1) / 2) as f64;
+        time("PJRT flash_attn_256", cells, "cells", 5, || {
+            std::hint::black_box(rt.flash_attention(nb, &h.q, &h.k, &h.v).unwrap());
+        });
+        time("PJRT vs_aggregate_256", cells, "cells", 5, || {
+            std::hint::black_box(rt.vs_aggregate(nb, &h.q, &h.k).unwrap());
+        });
+        let w = rt.bundle.load_weights("indexer_weights.json").unwrap();
+        time("PJRT indexer_256", nb as f64, "pos", 10, || {
+            std::hint::black_box(rt.indexer_forward(nb, &h.k, &h.v, &w).unwrap());
+        });
+        let idx256 = vsprefill::sparse::VsIndices::new(vec![0, 1, 40, 100], vec![0, 1, 4]);
+        time("PJRT sparse_attn_256", idx256.covered_cells(nb) as f64, "cells", 5, || {
+            std::hint::black_box(rt.sparse_attention(nb, &h.q, &h.k, &h.v, &idx256).unwrap());
+        });
+    } else {
+        println!("(PJRT rows skipped: run `make artifacts`)");
+    }
+
+    // Calibration summary consumed by the cost model.
+    let cm = vsprefill::sparse_attn::cost::CostModel::calibrate();
+    println!(
+        "\ncalibrated cost model: attn {:.2e} flops/s, index {:.2e} flops/s, sparse_eff {:.2}",
+        cm.attn_flops_per_sec, cm.index_flops_per_sec, cm.sparse_eff
+    );
+}

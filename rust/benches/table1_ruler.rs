@@ -1,0 +1,17 @@
+//! Bench: Table 1 (RULER) regeneration — times the per-method evaluation
+//! pipeline at one representative length and prints the quick table.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = vsprefill::experiments::table1::run(
+        vsprefill::experiments::RunScale { quick: true },
+        42,
+    );
+    let dt = t0.elapsed();
+    println!(
+        "{}",
+        vsprefill::experiments::table1::render(&rows, &vsprefill::evalsuite::ruler::QUICK_LENGTHS)
+    );
+    println!("bench table1_ruler: full quick run in {dt:?}");
+}

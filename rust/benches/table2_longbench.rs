@@ -1,0 +1,12 @@
+//! Bench: Table 2 (LongBench) regeneration.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = vsprefill::experiments::table2::run(
+        vsprefill::experiments::RunScale { quick: true },
+        42,
+    );
+    println!("{}", vsprefill::experiments::table2::render(&rows));
+    println!("bench table2_longbench: {:?}", t0.elapsed());
+}

@@ -1,0 +1,9 @@
+//! Bench: Table 3 (recall vs sparsity) regeneration.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = vsprefill::experiments::table3::run(512, 4, 42);
+    println!("{}", vsprefill::experiments::table3::render(&rows));
+    println!("bench table3_recall: {:?}", t0.elapsed());
+}

@@ -1,0 +1,10 @@
+//! Bench: Table 4 (loss ablation) regeneration — dominated by the four
+//! native distillation runs; reports per-loss wall time.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = vsprefill::experiments::table4::run(120, 4, 42);
+    println!("{}", vsprefill::experiments::table4::render(&rows));
+    println!("bench table4_loss: {:?}", t0.elapsed());
+}

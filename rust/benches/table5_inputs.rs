@@ -1,0 +1,9 @@
+//! Bench: Table 5 (input-feature ablation) regeneration.
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    let rows = vsprefill::experiments::table5::run(120, 4, 42);
+    println!("{}", vsprefill::experiments::table5::render(&rows));
+    println!("bench table5_inputs: {:?}", t0.elapsed());
+}

@@ -1,0 +1,139 @@
+//! Vertical/slash aggregation of the attention matrix (§4.2, Eq. 15):
+//! `A_v[j] = (1/n) Σ_i A[i,j]`, `A_s[o] = (1/n) Σ_{i-j=o} A[i,j]`.
+//!
+//! Two implementations:
+//!   * `vs_aggregate`        — from a materialized probability matrix
+//!     (oracle path, used for distillation targets and baselines);
+//!   * `vs_aggregate_tiled`  — two-pass online version that mirrors the L1
+//!     Pallas kernel: pass 1 computes row logsumexps with the streaming
+//!     recurrence, pass 2 re-exponentiates tiles into final probabilities
+//!     and scatters column/offset sums.  Never materializes n x n.
+
+use crate::tensor::ops::dot;
+use crate::tensor::Mat;
+
+use super::dense::{attention_probs, NEG_INF};
+
+/// Aggregate a full probability matrix. Returns (A_v, A_s), each summing to 1.
+pub fn vs_aggregate(a: &Mat) -> (Vec<f32>, Vec<f32>) {
+    let n = a.rows;
+    let mut av = vec![0.0f32; n];
+    let mut as_ = vec![0.0f32; n];
+    for i in 0..n {
+        let row = a.row(i);
+        for j in 0..=i {
+            av[j] += row[j];
+            as_[i - j] += row[j];
+        }
+    }
+    let inv = 1.0 / n as f32;
+    av.iter_mut().for_each(|x| *x *= inv);
+    as_.iter_mut().for_each(|x| *x *= inv);
+    (av, as_)
+}
+
+/// Convenience: aggregate directly from (q, k).
+pub fn vs_aggregate_qk(q: &Mat, k: &Mat) -> (Vec<f32>, Vec<f32>) {
+    vs_aggregate(&attention_probs(q, k))
+}
+
+/// Per-row logsumexp of the scaled causal scores via the streaming
+/// recurrence (pass 1 of the online aggregation).
+pub fn row_lse_tiled(q: &Mat, k: &Mat, block_k: usize) -> Vec<f32> {
+    let (n, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut lse = vec![0.0f32; n];
+    for i in 0..n {
+        let qrow = q.row(i);
+        let mut m = NEG_INF;
+        let mut s = 0.0f32;
+        for k0 in (0..=i).step_by(block_k) {
+            let bk = block_k.min(i + 1 - k0);
+            let mut tile_max = NEG_INF;
+            let mut scores = [0.0f32; 256];
+            assert!(bk <= 256);
+            for j in 0..bk {
+                let x = dot(qrow, k.row(k0 + j)) * scale;
+                scores[j] = x;
+                tile_max = tile_max.max(x);
+            }
+            let m_new = m.max(tile_max);
+            s *= (m - m_new).exp();
+            for &x in scores.iter().take(bk) {
+                s += (x - m_new).exp();
+            }
+            m = m_new;
+        }
+        lse[i] = m + s.ln();
+    }
+    lse
+}
+
+/// Two-pass online aggregation (tiled; linear memory).  Matches
+/// `vs_aggregate_qk` to float tolerance.
+pub fn vs_aggregate_tiled(q: &Mat, k: &Mat, block_k: usize) -> (Vec<f32>, Vec<f32>) {
+    let (n, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let lse = row_lse_tiled(q, k, block_k);
+    let mut av = vec![0.0f32; n];
+    let mut as_ = vec![0.0f32; n];
+    for i in 0..n {
+        let qrow = q.row(i);
+        let l = lse[i];
+        for j in 0..=i {
+            let p = (dot(qrow, k.row(j)) * scale - l).exp();
+            av[j] += p;
+            as_[i - j] += p;
+        }
+    }
+    let inv = 1.0 / n as f32;
+    av.iter_mut().for_each(|x| *x *= inv);
+    as_.iter_mut().for_each(|x| *x *= inv);
+    (av, as_)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn aggregates_are_distributions() {
+        let mut rng = Rng::new(0);
+        let (q, k) = (randn(&mut rng, 48, 8), randn(&mut rng, 48, 8));
+        let (av, as_) = vs_aggregate_qk(&q, &k);
+        let sv: f32 = av.iter().sum();
+        let ss: f32 = as_.iter().sum();
+        assert!((sv - 1.0).abs() < 1e-4, "{sv}");
+        assert!((ss - 1.0).abs() < 1e-4, "{ss}");
+        assert!(av.iter().chain(&as_).all(|x| *x >= 0.0));
+    }
+
+    #[test]
+    fn tiled_matches_oracle() {
+        let mut rng = Rng::new(1);
+        let (q, k) = (randn(&mut rng, 64, 16), randn(&mut rng, 64, 16));
+        let (av1, as1) = vs_aggregate_qk(&q, &k);
+        for bk in [8, 16, 64, 7] {
+            let (av2, as2) = vs_aggregate_tiled(&q, &k, bk);
+            for j in 0..64 {
+                assert!((av1[j] - av2[j]).abs() < 1e-5, "bk={bk} j={j}");
+                assert!((as1[j] - as2[j]).abs() < 1e-5, "bk={bk} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn offset_zero_collects_diagonal() {
+        // With orthogonal rows, each row attends ~uniformly over its prefix;
+        // offset 0 gets 1/n * sum_i 1/(i+1) > 0.
+        let q = Mat::from_fn(16, 4, |i, j| if j == i % 4 { 5.0 } else { 0.0 });
+        let (_, as_) = vs_aggregate_qk(&q, &q);
+        assert!(as_[0] > as_[15]);
+        assert!(as_[0] > 0.05);
+    }
+}

@@ -1,0 +1,85 @@
+//! Exact causal attention (Eqs. 1-3) — the ground-truth oracle.  O(n^2);
+//! test/calibration scale only.
+
+use crate::tensor::ops::{matmul, matmul_bt, softmax_inplace};
+use crate::tensor::Mat;
+
+pub const NEG_INF: f32 = -1e30;
+
+/// Scaled causal scores P/sqrt(d) with -inf above the diagonal.
+pub fn scaled_causal_scores(q: &Mat, k: &Mat) -> Mat {
+    let d = q.cols as f32;
+    let mut p = matmul_bt(q, k);
+    let scale = 1.0 / d.sqrt();
+    for i in 0..p.rows {
+        let row = p.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = if j <= i { *x * scale } else { NEG_INF };
+        }
+    }
+    p
+}
+
+/// Full causal attention probability matrix A (Eq. 2).
+pub fn attention_probs(q: &Mat, k: &Mat) -> Mat {
+    let mut p = scaled_causal_scores(q, k);
+    for i in 0..p.rows {
+        softmax_inplace(p.row_mut(i));
+    }
+    p
+}
+
+/// O = A @ V (Eq. 3).
+pub fn dense_attention(q: &Mat, k: &Mat, v: &Mat) -> Mat {
+    matmul(&attention_probs(q, k), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn rows_are_distributions() {
+        let mut rng = Rng::new(0);
+        let a = attention_probs(&randn(&mut rng, 16, 8), &randn(&mut rng, 16, 8));
+        for i in 0..16 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            for (j, &x) in a.row(i).iter().enumerate() {
+                assert!(x >= 0.0);
+                if j > i {
+                    assert_eq!(x, 0.0, "causality violated at ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn first_row_attends_only_itself() {
+        let mut rng = Rng::new(1);
+        let q = randn(&mut rng, 8, 4);
+        let k = randn(&mut rng, 8, 4);
+        let v = randn(&mut rng, 8, 4);
+        let o = dense_attention(&q, &k, &v);
+        for j in 0..4 {
+            assert!((o.at(0, j) - v.at(0, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn uniform_values_passthrough() {
+        let mut rng = Rng::new(2);
+        let q = randn(&mut rng, 12, 4);
+        let k = randn(&mut rng, 12, 4);
+        let v = Mat::from_fn(12, 4, |_, _| 1.0);
+        let o = dense_attention(&q, &k, &v);
+        for x in &o.data {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+}

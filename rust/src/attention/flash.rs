@@ -1,0 +1,119 @@
+//! Tiled streaming-softmax attention — the CPU analog of FlashAttention
+//! (Dao et al., 2022) and the dense baseline of the cost calibration.
+//! Never materializes the n x n matrix: one (block_q x block_k) score tile
+//! plus running (max, sumexp, acc) per row.
+
+use crate::tensor::ops::dot;
+use crate::tensor::Mat;
+
+use super::dense::NEG_INF;
+
+/// Exact causal attention with O(block_q * block_k) working set.
+pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, block_q: usize, block_k: usize) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    assert_eq!(k.rows, n);
+    assert_eq!(v.rows, n);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(n, d);
+    let mut tile = vec![0.0f32; block_q * block_k];
+
+    for q0 in (0..n).step_by(block_q) {
+        let bq = block_q.min(n - q0);
+        let mut m = vec![NEG_INF; bq];
+        let mut s = vec![0.0f32; bq];
+        let mut acc = vec![0.0f32; bq * d];
+        // Only key blocks at or below the diagonal contribute.
+        for k0 in (0..=q0 + bq - 1).step_by(block_k) {
+            let bk = block_k.min(n - k0);
+            if k0 > q0 + bq - 1 {
+                break;
+            }
+            // score tile
+            for i in 0..bq {
+                let qrow = q.row(q0 + i);
+                let trow = &mut tile[i * block_k..i * block_k + bk];
+                for j in 0..bk {
+                    trow[j] = if k0 + j <= q0 + i {
+                        dot(qrow, k.row(k0 + j)) * scale
+                    } else {
+                        NEG_INF
+                    };
+                }
+            }
+            // online rescale + accumulate
+            for i in 0..bq {
+                let trow = &tile[i * block_k..i * block_k + bk];
+                let tile_max = trow.iter().cloned().fold(NEG_INF, f32::max);
+                if tile_max == NEG_INF {
+                    continue;
+                }
+                let m_new = m[i].max(tile_max);
+                let alpha = (m[i] - m_new).exp();
+                s[i] *= alpha;
+                let arow = &mut acc[i * d..(i + 1) * d];
+                if alpha != 1.0 {
+                    arow.iter_mut().for_each(|x| *x *= alpha);
+                }
+                for j in 0..bk {
+                    if trow[j] == NEG_INF {
+                        continue;
+                    }
+                    let e = (trow[j] - m_new).exp();
+                    s[i] += e;
+                    let vrow = v.row(k0 + j);
+                    for t in 0..d {
+                        arow[t] += e * vrow[t];
+                    }
+                }
+                m[i] = m_new;
+            }
+        }
+        for i in 0..bq {
+            let inv = 1.0 / s[i];
+            let arow = &acc[i * d..(i + 1) * d];
+            let orow = out.row_mut(q0 + i);
+            for t in 0..d {
+                orow[t] = arow[t] * inv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::dense_attention;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn matches_dense_various_blockings() {
+        let mut rng = Rng::new(0);
+        let (q, k, v) = (
+            randn(&mut rng, 96, 16),
+            randn(&mut rng, 96, 16),
+            randn(&mut rng, 96, 16),
+        );
+        let want = dense_attention(&q, &k, &v);
+        for (bq, bk) in [(16, 16), (32, 16), (96, 96), (17, 13), (1, 1)] {
+            let got = flash_attention(&q, &k, &v, bq, bk);
+            assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq} bk={bk}");
+        }
+    }
+
+    #[test]
+    fn huge_logits_stay_finite() {
+        let mut rng = Rng::new(1);
+        let mut q = randn(&mut rng, 32, 8);
+        let mut k = randn(&mut rng, 32, 8);
+        q.data.iter_mut().for_each(|x| *x *= 40.0);
+        k.data.iter_mut().for_each(|x| *x *= 40.0);
+        let v = randn(&mut rng, 32, 8);
+        let o = flash_attention(&q, &k, &v, 8, 8);
+        assert!(o.data.iter().all(|x| x.is_finite()));
+    }
+}

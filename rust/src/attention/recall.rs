@@ -1,0 +1,146 @@
+//! Attention Recall (Eq. 6): the fraction of causal attention mass kept by a
+//! sparse index set.  The surrogate objective the whole paper optimizes;
+//! Figure 2 maps it to downstream accuracy.
+
+use crate::sparse::VsIndices;
+use crate::tensor::Mat;
+
+#[cfg(test)]
+use super::dense::attention_probs;
+
+
+
+/// Recall of an arbitrary keep-mask over the probability matrix.
+pub fn recall_of_mask(a: &Mat, keep: impl Fn(usize, usize) -> bool) -> f32 {
+    let n = a.rows;
+    let mut kept = 0.0f64;
+    for i in 0..n {
+        let row = a.row(i);
+        for j in 0..=i {
+            if keep(i, j) {
+                kept += row[j] as f64;
+            }
+        }
+    }
+    (kept / n as f64) as f32
+}
+
+/// Recall of a vertical-slash index pair (Eq. 9 mask) in O(n * (kv + ks)):
+/// per row, sum probabilities at vertical columns and slash offsets, minus
+/// double-counted intersections.
+pub fn recall_of_vs(a: &Mat, idx: &VsIndices) -> f32 {
+    let n = a.rows;
+    let vset = idx.vertical_bitset(n);
+    let mut kept = 0.0f64;
+    for i in 0..n {
+        let row = a.row(i);
+        for &j in &idx.vertical {
+            if j <= i {
+                kept += row[j] as f64;
+            }
+        }
+        for &o in &idx.slash {
+            if o <= i {
+                let j = i - o;
+                if !vset[j] {
+                    kept += row[j] as f64;
+                }
+            }
+        }
+    }
+    (kept / n as f64) as f32
+}
+
+/// Recall restricted to a set of *critical* key columns (task-relevant
+/// tokens) — the quantity the evalsuite response model consumes.  Returns
+/// the kept fraction of the mass that full attention puts on those columns
+/// from the final `probe_rows` query rows.
+pub fn critical_recall(
+    a: &Mat,
+    critical_cols: &[usize],
+    probe_rows: usize,
+    keep: impl Fn(usize, usize) -> bool,
+) -> f32 {
+    let n = a.rows;
+    let start = n.saturating_sub(probe_rows);
+    let mut total = 0.0f64;
+    let mut kept = 0.0f64;
+    for i in start..n {
+        let row = a.row(i);
+        for &j in critical_cols {
+            if j <= i {
+                total += row[j] as f64;
+                if keep(i, j) {
+                    kept += row[j] as f64;
+                }
+            }
+        }
+    }
+    if total == 0.0 {
+        1.0
+    } else {
+        (kept / total) as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::VsIndices;
+    use crate::util::rng::Rng;
+
+    fn probs(seed: u64, n: usize) -> Mat {
+        let mut rng = Rng::new(seed);
+        let q = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+        attention_probs(&q, &k)
+    }
+
+    #[test]
+    fn full_mask_has_recall_one() {
+        let a = probs(0, 32);
+        assert!((recall_of_mask(&a, |_, _| true) - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn empty_mask_has_recall_zero() {
+        let a = probs(1, 32);
+        assert_eq!(recall_of_mask(&a, |_, _| false), 0.0);
+    }
+
+    #[test]
+    fn vs_recall_matches_mask_recall() {
+        let a = probs(2, 48);
+        let idx = VsIndices {
+            vertical: vec![0, 3, 17, 30],
+            slash: vec![0, 2, 9],
+        };
+        let want = recall_of_mask(&a, |i, j| {
+            idx.vertical.contains(&j) || idx.slash.contains(&(i - j))
+        });
+        let got = recall_of_vs(&a, &idx);
+        assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+    }
+
+    #[test]
+    fn recall_monotone_in_indices() {
+        let a = probs(3, 48);
+        let mut prev = 0.0;
+        for nv in [1usize, 4, 12, 48] {
+            let idx = VsIndices {
+                vertical: (0..nv).collect(),
+                slash: vec![0],
+            };
+            let r = recall_of_vs(&a, &idx);
+            assert!(r >= prev - 1e-6);
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn critical_recall_full_when_kept() {
+        let a = probs(4, 32);
+        assert_eq!(critical_recall(&a, &[5, 9], 8, |_, _| true), 1.0);
+        assert_eq!(critical_recall(&a, &[5, 9], 8, |_, _| false), 0.0);
+    }
+}

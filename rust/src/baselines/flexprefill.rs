@@ -1,0 +1,147 @@
+//! FlexPrefill (Lai et al., 2025): training-free dynamic estimation.
+//!
+//! Samples the last `probe` query rows, computes their exact attention
+//! (O(probe * n * d) — the "iterative sampling" overhead §1 criticizes),
+//! aggregates the sampled rows into vertical/slash estimates, and picks the
+//! budget by a cumulative-threshold criterion gamma (the paper uses
+//! JS-divergence thresholding; both reduce to "keep the smallest prefix
+//! explaining tau of sampled mass" — we implement that common core with
+//! gamma = 0.9 and a minimum token budget).
+
+use crate::sparse::budget::{cumulative_threshold_k, topk_indices};
+use crate::sparse::VsIndices;
+use crate::synth::SynthHead;
+use crate::tensor::Mat;
+
+use super::{MaskSpec, SparsePredictor};
+
+pub struct FlexPrefill {
+    /// Number of probe query rows sampled from the tail.
+    pub probe: usize,
+    /// Cumulative-mass threshold (paper gamma = 0.9).
+    pub gamma: f32,
+    /// Minimum budget in tokens (paper: 1024 at 128k; scaled by caller).
+    pub min_budget: usize,
+}
+
+impl FlexPrefill {
+    pub fn paper_config(n: usize) -> FlexPrefill {
+        FlexPrefill {
+            probe: (n / 32).clamp(4, 64),
+            gamma: 0.9,
+            min_budget: (n / 128).max(4),
+        }
+    }
+}
+
+impl SparsePredictor for FlexPrefill {
+    fn name(&self) -> &'static str {
+        "FlexPre"
+    }
+
+    fn predict(&self, head: &SynthHead, budget: f32) -> MaskSpec {
+        let n = head.q.rows;
+        let probe = self.probe.min(n);
+        // Sampled rows: half from the tail, half spread over the second half
+        // of the context — the estimator does not know which rows are the
+        // "question" (that is what makes it sampling, and what accumulates
+        // error at extreme lengths, Table 1).
+        let mut rows: Vec<usize> = Vec::with_capacity(probe);
+        let tail = probe / 2;
+        for i in 0..tail {
+            rows.push(n - tail + i);
+        }
+        let spread = probe - tail;
+        for i in 0..spread {
+            rows.push(n / 2 + i * (n / 2 - tail) / spread.max(1));
+        }
+        rows.sort_unstable();
+        rows.dedup();
+        let qs = Mat::from_fn(rows.len(), head.q.cols, |i, j| head.q.at(rows[i], j));
+        let a = attention_probs_rows(&qs, &head.k, &rows);
+        // Aggregate samples into vertical/slash estimates.
+        let mut av = vec![0.0f32; n];
+        let mut as_ = vec![0.0f32; n];
+        for (i, &gi) in rows.iter().enumerate() {
+            let row = a.row(i);
+            for j in 0..=gi {
+                av[j] += row[j];
+                as_[gi - j] += row[j];
+            }
+        }
+        // budget scales gamma: lower budget -> lower threshold.
+        let gamma = (self.gamma * (budget / 0.5).clamp(0.3, 1.2)).min(0.995);
+        let kv = cumulative_threshold_k(&av, gamma, self.min_budget, n);
+        let ks = cumulative_threshold_k(&as_, gamma, self.min_budget, n);
+        let mut slash = topk_indices(&as_, ks);
+        if !slash.contains(&0) {
+            slash.push(0);
+        }
+        MaskSpec::Vs(VsIndices::new(topk_indices(&av, kv), slash))
+    }
+
+    fn index_flops(&self, n: usize, d: usize) -> f64 {
+        // probe rows x all keys, scores + softmax-ish constant
+        2.0 * self.probe as f64 * n as f64 * d as f64
+    }
+}
+
+/// Causal attention of the sampled probe rows (global indices in `rows`).
+fn attention_probs_rows(q: &Mat, k: &Mat, rows: &[usize]) -> Mat {
+    use crate::tensor::ops::{matmul_bt, softmax_inplace};
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut p = matmul_bt(q, k);
+    for i in 0..p.rows {
+        let gi = rows[i];
+        let row = p.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x = if j <= gi { *x * scale } else { crate::attention::dense::NEG_INF };
+        }
+        softmax_inplace(row);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{recall_of_spec, RandomVs, SparsePredictor as _};
+    use crate::synth::{gen_head, SynthConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn finds_heavy_hitters_with_enough_probes() {
+        let mut rng = Rng::new(0);
+        let h = gen_head(&mut rng, 192, &SynthConfig::default(), 0);
+        let spec = FlexPrefill { probe: 24, gamma: 0.9, min_budget: 4 }.predict(&h, 0.8);
+        if let MaskSpec::Vs(idx) = &spec {
+            // Late heavies carry little aggregate mass (few causal rows);
+            // require the early ones, allowing one borderline miss.
+            let early: Vec<usize> = h.heavy.iter().cloned().filter(|&p| p < 144).collect();
+            let hits = early.iter().filter(|p| idx.vertical.contains(p)).count();
+            assert!(hits + 1 >= early.len(), "verticals {:?} heavy {early:?}", idx.vertical);
+        } else {
+            panic!("expected VS spec");
+        }
+    }
+
+    #[test]
+    fn beats_random_and_degrades_with_few_probes() {
+        let mut rng = Rng::new(1);
+        let h = gen_head(&mut rng, 192, &SynthConfig::default(), 0);
+        let a = crate::attention::dense::attention_probs(&h.q, &h.k);
+        let many = FlexPrefill { probe: 32, gamma: 0.9, min_budget: 4 }.predict(&h, 0.5);
+        let few = FlexPrefill { probe: 2, gamma: 0.9, min_budget: 4 }.predict(&h, 0.5);
+        let rnd = RandomVs { seed: 7 }.predict(&h, many.density(192) as f32);
+        let (rm, rf, rr) = (recall_of_spec(&a, &many), recall_of_spec(&a, &few), recall_of_spec(&a, &rnd));
+        assert!(rm > rr, "flex {rm} vs random {rr}");
+        assert!(rm >= rf, "more probes should not hurt: {rm} vs {rf}");
+    }
+
+    #[test]
+    fn sampling_cost_scales_with_probes() {
+        let a = FlexPrefill { probe: 8, gamma: 0.9, min_budget: 4 };
+        let b = FlexPrefill { probe: 32, gamma: 0.9, min_budget: 4 };
+        assert!(b.index_flops(1024, 64) > 3.0 * a.index_flops(1024, 64));
+    }
+}

@@ -1,0 +1,222 @@
+//! Baseline sparse-attention methods (§5.1): StreamingLLM, FlexPrefill,
+//! SeerAttention, plus Random / Importance-sampling / Oracle used by the
+//! Table-3 ablation.  Each produces a `MaskSpec`; recall and cost are
+//! computed uniformly over the spec by `attention::recall` / the cost model.
+
+pub mod flexprefill;
+pub mod seer;
+pub mod streaming;
+
+use crate::sparse::VsIndices;
+use crate::synth::SynthHead;
+use crate::tensor::Mat;
+
+pub use flexprefill::FlexPrefill;
+pub use seer::SeerAttention;
+pub use streaming::StreamingLlm;
+
+/// A sparse attention pattern in one of the structural families the paper
+/// compares.
+#[derive(Clone, Debug)]
+pub enum MaskSpec {
+    /// Exact attention (FlashAttention baseline).
+    Full,
+    /// Vertical-slash index pair (VSPrefill, FlexPrefill, StreamingLLM).
+    Vs(VsIndices),
+    /// Block-granular mask: square blocks of `block`, kept (qb, kb) pairs
+    /// sorted lexicographically (SeerAttention).
+    Blocks { block: usize, keep: Vec<(usize, usize)> },
+}
+
+impl MaskSpec {
+    /// Does the mask keep causal cell (i, j)?
+    pub fn keeps(&self, i: usize, j: usize) -> bool {
+        if j > i {
+            return false;
+        }
+        match self {
+            MaskSpec::Full => true,
+            MaskSpec::Vs(idx) => idx.keeps(i, j),
+            MaskSpec::Blocks { block, keep } => {
+                keep.binary_search(&(i / block, j / block)).is_ok()
+            }
+        }
+    }
+
+    /// Causal cells covered (for density/sparsity accounting).
+    pub fn covered_cells(&self, n: usize) -> usize {
+        match self {
+            MaskSpec::Full => n * (n + 1) / 2,
+            MaskSpec::Vs(idx) => idx.covered_cells(n),
+            MaskSpec::Blocks { block, keep } => keep
+                .iter()
+                .map(|&(qb, kb)| {
+                    // closed form: rows i in [r0, r1), cols [c0, c1) ∩ j <= i
+                    let r0 = qb * block;
+                    let r1 = ((qb + 1) * block).min(n);
+                    let c0 = kb * block;
+                    let c1 = ((kb + 1) * block).min(n);
+                    if kb < qb {
+                        // fully below the diagonal
+                        (r1 - r0) * (c1 - c0)
+                    } else {
+                        // diagonal block: sum_i max(0, min(c1, i+1) - c0)
+                        (r0..r1)
+                            .map(|i| (i + 1).min(c1).saturating_sub(c0))
+                            .sum()
+                    }
+                })
+                .sum(),
+        }
+    }
+
+    pub fn density(&self, n: usize) -> f64 {
+        self.covered_cells(n) as f64 / (n * (n + 1) / 2) as f64
+    }
+}
+
+/// Recall (Eq. 6) of a MaskSpec over a probability matrix.
+pub fn recall_of_spec(a: &Mat, spec: &MaskSpec) -> f32 {
+    match spec {
+        MaskSpec::Full => 1.0,
+        MaskSpec::Vs(idx) => crate::attention::recall::recall_of_vs(a, idx),
+        _ => crate::attention::recall::recall_of_mask(a, |i, j| spec.keeps(i, j)),
+    }
+}
+
+/// A sparse-pattern predictor: maps a head's tensors to a mask under an
+/// abstract "budget knob" lambda in (0, 1] (fraction-of-dense compute-ish;
+/// each method interprets it in its own natural parameterization — see the
+/// per-method docs).  Fig. 5 sweeps this knob.
+pub trait SparsePredictor {
+    fn name(&self) -> &'static str;
+    fn predict(&self, head: &SynthHead, budget: f32) -> MaskSpec;
+    /// Index-construction overhead in FLOPs for length n (cost model input).
+    fn index_flops(&self, n: usize, d: usize) -> f64;
+}
+
+/// Exact attention "predictor".
+pub struct FullAttention;
+
+impl SparsePredictor for FullAttention {
+    fn name(&self) -> &'static str {
+        "FlashAttn"
+    }
+    fn predict(&self, _head: &SynthHead, _budget: f32) -> MaskSpec {
+        MaskSpec::Full
+    }
+    fn index_flops(&self, _n: usize, _d: usize) -> f64 {
+        0.0
+    }
+}
+
+/// Uniform-random vertical/slash selection (Table 3 "Random" row).
+pub struct RandomVs {
+    pub seed: u64,
+}
+
+impl SparsePredictor for RandomVs {
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+    fn predict(&self, head: &SynthHead, budget: f32) -> MaskSpec {
+        let n = head.q.rows;
+        let mut rng = crate::util::rng::Rng::new(self.seed ^ n as u64);
+        // budget is the target density: k verticals + k slashes cover ~k*n
+        // of the n(n+1)/2 causal cells, so k = budget * (n+1) / 2.
+        let per_dir = ((budget as f64 * (n as f64 + 1.0)) / 2.0).ceil() as usize;
+        let k = per_dir.clamp(1, n);
+        let vertical = rng.choose_distinct(0, n, k);
+        let slash = rng.choose_distinct(0, n, k);
+        MaskSpec::Vs(VsIndices::new(vertical, slash))
+    }
+    fn index_flops(&self, _n: usize, _d: usize) -> f64 {
+        0.0
+    }
+}
+
+/// Importance sampling: rank columns/offsets by sampled attention estimates
+/// with a *single* probe row (the cheap-but-noisy variant the paper
+/// contrasts in §4: "single-point sampling ... fails to capture global
+/// patterns").
+pub struct ImportanceSampling;
+
+impl SparsePredictor for ImportanceSampling {
+    fn name(&self) -> &'static str {
+        "Importance Sampling"
+    }
+    fn predict(&self, head: &SynthHead, budget: f32) -> MaskSpec {
+        let n = head.q.rows;
+        let probs = crate::attention::dense::attention_probs(
+            &Mat::from_vec(1, head.q.cols, head.q.row(n - 1).to_vec()),
+            &head.k,
+        );
+        // The single probe row is causal-complete (last row).
+        let row = probs.row(0);
+        let per_dir = ((budget as f64 * (n as f64 + 1.0) / 2.0) / 2.0).ceil() as usize;
+        let k = per_dir.clamp(1, n);
+        let vertical = crate::sparse::budget::topk_indices(row, k);
+        // offsets from the same probe: offset o = (n-1) - j
+        let mut offs: Vec<f32> = vec![0.0; n];
+        for (j, &p) in row.iter().enumerate() {
+            offs[n - 1 - j] = p;
+        }
+        let slash = crate::sparse::budget::topk_indices(&offs, k);
+        MaskSpec::Vs(VsIndices::new(vertical, slash))
+    }
+    fn index_flops(&self, n: usize, d: usize) -> f64 {
+        // one probe row against all keys
+        2.0 * n as f64 * d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::attention_probs;
+    use crate::synth::{gen_head, SynthConfig};
+    use crate::util::rng::Rng;
+
+    fn head(n: usize) -> SynthHead {
+        gen_head(&mut Rng::new(0), n, &SynthConfig::default(), 0)
+    }
+
+    #[test]
+    fn full_spec_covers_triangle() {
+        let spec = MaskSpec::Full;
+        assert_eq!(spec.covered_cells(10), 55);
+        assert!((spec.density(10) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_spec_counts_causal_cells() {
+        let spec = MaskSpec::Blocks { block: 4, keep: vec![(0, 0), (2, 1)] };
+        // block (0,0): rows 0..4, cols 0..4 causal -> 1+2+3+4 = 10
+        // block (2,1): rows 8..12, cols 4..8 all causal -> 16
+        assert_eq!(spec.covered_cells(16), 26);
+        assert!(spec.keeps(9, 5));
+        assert!(!spec.keeps(9, 9)); // block (2,2) not kept
+    }
+
+    #[test]
+    fn random_density_tracks_budget() {
+        let h = head(128);
+        for budget in [0.1f32, 0.3, 0.6] {
+            let spec = RandomVs { seed: 1 }.predict(&h, budget);
+            let d = spec.density(128);
+            assert!((d - budget as f64).abs() < 0.15, "budget {budget} density {d}");
+        }
+    }
+
+    #[test]
+    fn importance_beats_random_at_same_density() {
+        let h = head(128);
+        let a = attention_probs(&h.q, &h.k);
+        let b = 0.12f32;
+        let spec_r = RandomVs { seed: 2 }.predict(&h, b);
+        let spec_i = ImportanceSampling.predict(&h, b);
+        let rr = recall_of_spec(&a, &spec_r);
+        let ri = recall_of_spec(&a, &spec_i);
+        assert!(ri > rr, "importance {ri} vs random {rr}");
+    }
+}

@@ -1,0 +1,235 @@
+//! SeerAttention (Gao et al., 2024): learned block-wise prediction.
+//!
+//! Pools queries (avg) and keys (max-min-avg) per block, scores block pairs
+//! through a small learned projection, and keeps the top blocks per query
+//! block.  Accurate, but the (n/B)^2 block-score matrix keeps the
+//! *prediction* quadratic — the overhead that limits its speedup in
+//! Tables 1-2.  We train the projection by ridge regression against
+//! block-aggregated ground truth from the synth generator (the paper's AttnGate
+//! distillation, reduced to its closed-form core).
+
+use crate::attention::dense::attention_probs;
+use crate::synth::{gen_head, SynthConfig, SynthHead};
+use crate::tensor::ops::dot;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::{MaskSpec, SparsePredictor};
+
+pub struct SeerAttention {
+    pub block: usize,
+    /// Learned feature weights over the pooled-feature inner products
+    /// [q_avg·k_avg, q_avg·k_max, q_avg·k_min]; distilled at construction.
+    pub w: [f32; 3],
+}
+
+impl SeerAttention {
+    /// Distill the gate weights on `trials` synthetic heads.  Training heads
+    /// are sized to give the regression a meaningful block grid (>= 8 blocks
+    /// per side).
+    pub fn distilled(block: usize, cfg: &SynthConfig, seed: u64, trials: usize) -> SeerAttention {
+        // Ridge regression: features per (qb, kb) -> block attention mass.
+        let train_n = (8 * block).max(256);
+        let mut xtx = [[0.0f64; 3]; 3];
+        let mut xty = [0.0f64; 3];
+        let mut rng = Rng::new(seed);
+        for _ in 0..trials {
+            let head_seed = rng.below(8) as u64;
+            let h = gen_head(&mut rng, train_n, cfg, head_seed);
+            let a = attention_probs(&h.q, &h.k);
+            let feats = block_features(&h, block);
+            let nb = feats.len();
+            for qb in 0..nb {
+                for kb in 0..=qb {
+                    let x = pair_features(&feats, qb, kb);
+                    let y = block_mass(&a, block, qb, kb) as f64;
+                    for r in 0..3 {
+                        for c in 0..3 {
+                            xtx[r][c] += x[r] as f64 * x[c] as f64;
+                        }
+                        xty[r] += x[r] as f64 * y;
+                    }
+                }
+            }
+        }
+        for r in 0..3 {
+            xtx[r][r] += 1e-3; // ridge
+        }
+        let w = solve3(xtx, xty);
+        SeerAttention { block, w: [w[0] as f32, w[1] as f32, w[2] as f32] }
+    }
+}
+
+#[derive(Clone)]
+struct BlockFeat {
+    q_avg: Vec<f32>,
+    k_avg: Vec<f32>,
+    k_max: Vec<f32>,
+    k_min: Vec<f32>,
+}
+
+fn block_features(h: &SynthHead, block: usize) -> Vec<BlockFeat> {
+    let (n, d) = (h.q.rows, h.q.cols);
+    let nb = n.div_ceil(block);
+    let mut out = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(n);
+        let mut f = BlockFeat {
+            q_avg: vec![0.0; d],
+            k_avg: vec![0.0; d],
+            k_max: vec![f32::NEG_INFINITY; d],
+            k_min: vec![f32::INFINITY; d],
+        };
+        for i in lo..hi {
+            for t in 0..d {
+                f.q_avg[t] += h.q.at(i, t);
+                f.k_avg[t] += h.k.at(i, t);
+                f.k_max[t] = f.k_max[t].max(h.k.at(i, t));
+                f.k_min[t] = f.k_min[t].min(h.k.at(i, t));
+            }
+        }
+        let inv = 1.0 / (hi - lo) as f32;
+        f.q_avg.iter_mut().for_each(|x| *x *= inv);
+        f.k_avg.iter_mut().for_each(|x| *x *= inv);
+        out.push(f);
+    }
+    out
+}
+
+fn pair_features(feats: &[BlockFeat], qb: usize, kb: usize) -> [f32; 3] {
+    let d = feats[qb].q_avg.len() as f32;
+    let s = 1.0 / d.sqrt();
+    [
+        dot(&feats[qb].q_avg, &feats[kb].k_avg) * s,
+        dot(&feats[qb].q_avg, &feats[kb].k_max) * s,
+        dot(&feats[qb].q_avg, &feats[kb].k_min) * s,
+    ]
+}
+
+fn block_mass(a: &Mat, block: usize, qb: usize, kb: usize) -> f32 {
+    let n = a.rows;
+    let mut m = 0.0;
+    for i in qb * block..((qb + 1) * block).min(n) {
+        for j in kb * block..((kb + 1) * block).min(n).min(i + 1) {
+            m += a.at(i, j);
+        }
+    }
+    m / block as f32
+}
+
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    // Gaussian elimination with partial pivoting on a 3x3 system.
+    for col in 0..3 {
+        let piv = (col..3).max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap()).unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let p = a[col][col];
+        for r in (col + 1)..3 {
+            let f = a[r][col] / p;
+            for c in col..3 {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for r in (0..3).rev() {
+        let mut acc = b[r];
+        for c in (r + 1)..3 {
+            acc -= a[r][c] * x[c];
+        }
+        x[r] = acc / a[r][r];
+    }
+    x
+}
+
+impl SparsePredictor for SeerAttention {
+    fn name(&self) -> &'static str {
+        "SeerAttn"
+    }
+
+    fn predict(&self, head: &SynthHead, budget: f32) -> MaskSpec {
+        let n = head.q.rows;
+        let block = self.block;
+        let nb = n.div_ceil(block);
+        let feats = block_features(head, block);
+        let mut keep = Vec::new();
+        for qb in 0..nb {
+            // score all causal key blocks for this query block
+            let mut scores: Vec<(f32, usize)> = (0..=qb)
+                .map(|kb| {
+                    let x = pair_features(&feats, qb, kb);
+                    (self.w[0] * x[0] + self.w[1] * x[1] + self.w[2] * x[2], kb)
+                })
+                .collect();
+            scores.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+            let k = (((qb + 1) as f32) * budget).ceil().max(1.0) as usize;
+            for &(_, kb) in scores.iter().take(k.min(qb + 1)) {
+                keep.push((qb, kb));
+            }
+            // diagonal block always kept (finite softmax rows); sink block
+            // likewise (SeerAttention's published masks retain both).
+            keep.push((qb, qb));
+            keep.push((qb, 0));
+        }
+        keep.sort_unstable();
+        keep.dedup();
+        MaskSpec::Blocks { block, keep }
+    }
+
+    fn index_flops(&self, n: usize, d: usize) -> f64 {
+        let nb = (n / self.block) as f64;
+        // pooling O(n d) + block-pair scoring O(nb^2 * 3d): the quadratic term
+        2.0 * n as f64 * d as f64 + nb * nb / 2.0 * 3.0 * 2.0 * d as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{recall_of_spec, RandomVs};
+
+    #[test]
+    fn solve3_solves() {
+        let a = [[2.0, 1.0, 0.0], [1.0, 3.0, 1.0], [0.0, 1.0, 2.0]];
+        let x = solve3(a, [5.0, 10.0, 7.0]);
+        for (r, want) in a.iter().zip([5.0, 10.0, 7.0]) {
+            let got: f64 = r.iter().zip(&x).map(|(c, v)| c * v).sum();
+            assert!((got - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn distilled_gate_beats_random_at_matched_density() {
+        let cfg = SynthConfig::default();
+        let seer = SeerAttention::distilled(16, &cfg, 0, 4);
+        let mut rng = Rng::new(42);
+        let h = gen_head(&mut rng, 128, &cfg, 1);
+        let a = attention_probs(&h.q, &h.k);
+        let spec = seer.predict(&h, 0.3);
+        let dens = spec.density(128) as f32;
+        let rnd = RandomVs { seed: 9 }.predict(&h, dens);
+        let (rs, rr) = (recall_of_spec(&a, &spec), recall_of_spec(&a, &rnd));
+        assert!(rs > rr, "seer {rs} vs random {rr} at density {dens}");
+    }
+
+    #[test]
+    fn prediction_cost_is_quadratic_in_n() {
+        let seer = SeerAttention { block: 64, w: [1.0, 0.0, 0.0] };
+        let c1 = seer.index_flops(4096, 64);
+        let c2 = seer.index_flops(8192, 64);
+        assert!(c2 / c1 > 3.0, "block scoring must dominate: {}", c2 / c1);
+    }
+
+    #[test]
+    fn diagonal_blocks_always_kept() {
+        let seer = SeerAttention { block: 8, w: [1.0, 0.0, 0.0] };
+        let mut rng = Rng::new(1);
+        let h = gen_head(&mut rng, 64, &SynthConfig::default(), 0);
+        let spec = seer.predict(&h, 0.1);
+        for i in 0..64 {
+            assert!(spec.keeps(i, i), "row {i}");
+        }
+    }
+}

@@ -1,0 +1,102 @@
+//! Bounded admission queue — the backpressure boundary of the service.
+//! `push` fails fast when the queue is full (callers surface HTTP-429-style
+//! rejection); `requeue` re-inserts work the executor could not place (KV
+//! exhaustion) at the front so it retains its position.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+use super::batcher::WorkItem;
+
+#[derive(Debug, thiserror::Error)]
+#[error("admission queue full")]
+pub struct QueueFull(pub WorkItem);
+
+pub struct AdmissionQueue {
+    inner: Mutex<VecDeque<WorkItem>>,
+    cap: usize,
+    cv: Condvar,
+}
+
+impl AdmissionQueue {
+    pub fn new(cap: usize) -> AdmissionQueue {
+        AdmissionQueue { inner: Mutex::new(VecDeque::new()), cap, cv: Condvar::new() }
+    }
+
+    pub fn push(&self, item: WorkItem) -> Result<(), QueueFull> {
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.cap {
+            return Err(QueueFull(item));
+        }
+        q.push_back(item);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Re-insert at the front (used for KV-cache backpressure).
+    pub fn requeue(&self, item: WorkItem) {
+        self.inner.lock().unwrap().push_front(item);
+        self.cv.notify_one();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pop up to `max` items, waiting up to `wait` for the first one.
+    pub fn pop_up_to(&self, max: usize, wait: std::time::Duration) -> Vec<WorkItem> {
+        let mut q = self.inner.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
+            q = guard;
+        }
+        let take = q.len().min(max);
+        q.drain(..take).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AttentionMode, PrefillRequest};
+    use std::sync::mpsc;
+
+    fn item(id: u64) -> WorkItem {
+        let (tx, _rx) = mpsc::channel();
+        std::mem::forget(_rx);
+        WorkItem { req: PrefillRequest::synthetic(id, 64, 0, AttentionMode::Dense), reply: tx }
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.push(item(1)).is_ok());
+        assert!(q.push(item(2)).is_ok());
+        assert!(q.push(item(3)).is_err());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn requeue_goes_to_front() {
+        let q = AdmissionQueue::new(4);
+        q.push(item(1)).unwrap();
+        q.push(item(2)).unwrap();
+        q.requeue(item(99));
+        let items = q.pop_up_to(3, std::time::Duration::from_millis(1));
+        assert_eq!(items[0].req.id, 99);
+        assert_eq!(items[1].req.id, 1);
+    }
+
+    #[test]
+    fn pop_waits_then_times_out() {
+        let q = AdmissionQueue::new(4);
+        let t0 = std::time::Instant::now();
+        let items = q.pop_up_to(4, std::time::Duration::from_millis(20));
+        assert!(items.is_empty());
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(15));
+    }
+}

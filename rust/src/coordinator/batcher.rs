@@ -1,0 +1,112 @@
+//! Length-bucketed dynamic batcher.
+//!
+//! Requests are grouped by the artifact bucket they pad to (PJRT graphs have
+//! static shapes, so a batch must share a bucket), flushed when `max_batch`
+//! accumulate or `max_wait` elapses — the standard continuous-batching
+//! latency/throughput trade, restricted to prefill.
+
+use std::sync::mpsc;
+
+use super::admission::AdmissionQueue;
+use super::request::{PrefillRequest, PrefillResponse};
+
+/// A queued request plus its reply channel.
+#[derive(Debug)]
+pub struct WorkItem {
+    pub req: PrefillRequest,
+    pub reply: mpsc::Sender<PrefillResponse>,
+}
+
+pub struct Batcher {
+    pub max_batch: usize,
+    pub max_wait: std::time::Duration,
+    pub buckets: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: std::time::Duration, buckets: Vec<usize>) -> Batcher {
+        Batcher { max_batch, max_wait, buckets }
+    }
+
+    /// Smallest bucket that fits n (requests above the largest bucket are
+    /// assigned to it and will fail in the engine with a clear error).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .cloned()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or_else(|| self.buckets.last().cloned().unwrap_or(n))
+    }
+
+    /// Pull the next same-bucket batch: drains up to max_batch items from
+    /// admission, keeps the largest same-bucket group, requeues the rest.
+    pub fn next_batch(&self, adm: &AdmissionQueue) -> Vec<WorkItem> {
+        let items = adm.pop_up_to(self.max_batch, self.max_wait);
+        if items.len() <= 1 {
+            return items;
+        }
+        // group by bucket, keep the bucket of the OLDEST item (fairness),
+        // requeue the rest in their original order.
+        let lead_bucket = self.bucket_for(items[0].req.seq_len());
+        let (keep, back): (Vec<_>, Vec<_>) = items
+            .into_iter()
+            .partition(|it| self.bucket_for(it.req.seq_len()) == lead_bucket);
+        for it in back.into_iter().rev() {
+            adm.requeue(it);
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AttentionMode;
+
+    fn item(id: u64, n: usize) -> WorkItem {
+        let (tx, rx) = mpsc::channel();
+        std::mem::forget(rx);
+        WorkItem { req: PrefillRequest::synthetic(id, n, 0, AttentionMode::Dense), reply: tx }
+    }
+
+    fn batcher() -> Batcher {
+        Batcher::new(8, std::time::Duration::from_millis(1), vec![256, 512, 1024])
+    }
+
+    #[test]
+    fn bucket_assignment() {
+        let b = batcher();
+        assert_eq!(b.bucket_for(100), 256);
+        assert_eq!(b.bucket_for(256), 256);
+        assert_eq!(b.bucket_for(300), 512);
+        assert_eq!(b.bucket_for(4096), 1024); // over-cap -> largest (engine errors)
+    }
+
+    #[test]
+    fn same_bucket_batching_with_requeue() {
+        let b = batcher();
+        let adm = AdmissionQueue::new(16);
+        adm.push(item(1, 200)).unwrap(); // bucket 256
+        adm.push(item(2, 400)).unwrap(); // bucket 512
+        adm.push(item(3, 250)).unwrap(); // bucket 256
+        let batch = b.next_batch(&adm);
+        let ids: Vec<u64> = batch.iter().map(|i| i.req.id).collect();
+        assert_eq!(ids, vec![1, 3]);
+        // the 512 request is requeued and comes next
+        let batch2 = b.next_batch(&adm);
+        assert_eq!(batch2.len(), 1);
+        assert_eq!(batch2[0].req.id, 2);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let b = Batcher::new(2, std::time::Duration::from_millis(1), vec![256]);
+        let adm = AdmissionQueue::new(16);
+        for i in 0..5 {
+            adm.push(item(i, 100)).unwrap();
+        }
+        assert_eq!(b.next_batch(&adm).len(), 2);
+        assert_eq!(adm.len(), 3);
+    }
+}

@@ -1,0 +1,125 @@
+//! Config-file loading for the coordinator (JSON), with CLI overrides —
+//! the deployment-facing configuration surface.
+//!
+//! ```json
+//! {
+//!   "max_queue": 256, "max_batch": 8, "max_wait_ms": 5,
+//!   "kv_blocks": 4096, "kv_block_size": 64,
+//!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
+//!               "budget_tau": 0.9 }
+//! }
+//! ```
+
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+use super::CoordinatorConfig;
+
+/// Load a config file and apply `--key value` CLI overrides.
+pub fn load(path: Option<&str>, args: &Args) -> anyhow::Result<CoordinatorConfig> {
+    let mut cfg = CoordinatorConfig::default();
+    if let Some(p) = path {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("reading config {p}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config {p}: {e}"))?;
+        apply_json(&mut cfg, &j)?;
+    }
+    // CLI overrides
+    if let Some(v) = args.str_opt("max-queue") {
+        cfg.max_queue = v.parse()?;
+    }
+    if let Some(v) = args.str_opt("max-batch") {
+        cfg.max_batch = v.parse()?;
+    }
+    if let Some(v) = args.str_opt("max-wait-ms") {
+        cfg.max_wait_ms = v.parse()?;
+    }
+    if let Some(v) = args.str_opt("kv-blocks") {
+        cfg.kv_blocks = v.parse()?;
+    }
+    validate(&cfg)?;
+    Ok(cfg)
+}
+
+fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
+    let get_usize = |key: &str| j.get(key).and_then(|x| x.as_usize());
+    if let Some(v) = get_usize("max_queue") {
+        cfg.max_queue = v;
+    }
+    if let Some(v) = get_usize("max_batch") {
+        cfg.max_batch = v;
+    }
+    if let Some(v) = get_usize("max_wait_ms") {
+        cfg.max_wait_ms = v as u64;
+    }
+    if let Some(v) = get_usize("kv_blocks") {
+        cfg.kv_blocks = v;
+    }
+    if let Some(v) = get_usize("kv_block_size") {
+        cfg.kv_block_size = v;
+    }
+    if let Some(e) = j.get("engine") {
+        if let Some(b) = e.get("buckets") {
+            cfg.engine.buckets = b.as_usize_vec()?;
+        }
+        if let Some(v) = e.get("block_q").and_then(|x| x.as_usize()) {
+            cfg.engine.block_q = v;
+        }
+    }
+    Ok(())
+}
+
+fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
+    anyhow::ensure!(cfg.max_queue > 0, "max_queue must be positive");
+    anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    anyhow::ensure!(!cfg.engine.buckets.is_empty(), "need at least one bucket");
+    anyhow::ensure!(
+        cfg.engine.buckets.windows(2).all(|w| w[0] < w[1]),
+        "buckets must be strictly increasing"
+    );
+    anyhow::ensure!(cfg.kv_block_size > 0, "kv_block_size must be positive");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(raw: &[&str]) -> Args {
+        let v: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+        Args::parse(&v, &["max-queue", "max-batch", "max-wait-ms", "kv-blocks"]).unwrap()
+    }
+
+    #[test]
+    fn file_plus_cli_overrides() {
+        let dir = std::env::temp_dir().join("vsprefill_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(
+            &p,
+            r#"{"max_queue": 32, "engine": {"buckets": [128, 512], "block_q": 32}}"#,
+        )
+        .unwrap();
+        let cfg = load(Some(p.to_str().unwrap()), &args(&["--max-queue", "64"])).unwrap();
+        assert_eq!(cfg.max_queue, 64); // CLI wins
+        assert_eq!(cfg.engine.buckets, vec![128, 512]);
+        assert_eq!(cfg.engine.block_q, 32);
+        assert_eq!(cfg.max_batch, 8); // default preserved
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let dir = std::env::temp_dir().join("vsprefill_cfg_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.json");
+        std::fs::write(&p, r#"{"engine": {"buckets": [512, 128]}}"#).unwrap();
+        assert!(load(Some(p.to_str().unwrap()), &args(&[])).is_err());
+        assert!(load(Some("/nonexistent/x.json"), &args(&[])).is_err());
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let cfg = load(None, &args(&[])).unwrap();
+        assert_eq!(cfg.max_queue, CoordinatorConfig::default().max_queue);
+    }
+}

@@ -1,0 +1,269 @@
+//! The prefill execution pipeline.
+//!
+//! Two backends behind one interface:
+//!   * `Native` — synthesizes the head (Appendix-A.1 generator), runs the
+//!     Rust indexer + budgeter + tiled sparse executor.  No artifacts
+//!     needed; used by unit tests and the ablation harness.
+//!   * `Pjrt`  — the production path: AOT model prefill / indexer / fused
+//!     sparse-attention graphs executed through the PJRT engine, with the
+//!     distilled indexer weights fed as graph arguments.
+//!
+//! Pipeline per request (§4.3): K/V from prefill -> VSIndexer scores ->
+//! cumulative-threshold budgets -> top-k indices (+ merge in the executor)
+//! -> sparse attention -> output digest.
+
+use std::time::Instant;
+
+use crate::indexer::train::{distill, TrainConfig};
+use crate::indexer::Indexer;
+use crate::runtime;
+use crate::sparse_attn::exec::sparse_attention_vs;
+use crate::sparse_attn::VsPrefill;
+use crate::synth::{gen_head, SynthConfig};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::request::{Payload, PrefillRequest, PrefillResponse};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AttentionMode {
+    Dense,
+    Sparse,
+}
+
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub synth: SynthConfig,
+    /// Buckets served (must match artifacts for the PJRT backend).
+    pub buckets: Vec<usize>,
+    /// Block size of the tiled native executor.
+    pub block_q: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            synth: SynthConfig::default(),
+            buckets: vec![128, 256, 512, 1024],
+            block_q: 64,
+        }
+    }
+}
+
+enum Backend {
+    Native,
+    Pjrt(runtime::Engine),
+}
+
+pub struct PrefillEngine {
+    pub cfg: EngineConfig,
+    vsp: VsPrefill,
+    backend: Backend,
+    /// Indexer weights for the PJRT indexer graph (loaded from artifacts).
+    pjrt_weights: Option<std::collections::BTreeMap<String, (Vec<usize>, Vec<f32>)>>,
+}
+
+impl PrefillEngine {
+    /// Native backend with a quickly-distilled indexer (tests, ablations).
+    /// The indexer is distilled once per process and cached — distillation
+    /// dominates startup otherwise.
+    pub fn native_quick(cfg: EngineConfig) -> PrefillEngine {
+        static CACHED: std::sync::OnceLock<Indexer> = std::sync::OnceLock::new();
+        let ix = CACHED
+            .get_or_init(|| {
+                let tc = TrainConfig {
+                    steps: 150,
+                    batch: 3,
+                    seq_len: 128,
+                    hidden_base: 32,
+                    synth: SynthConfig::default(),
+                    ..Default::default()
+                };
+                distill(&tc).0
+            })
+            .clone();
+        PrefillEngine { cfg, vsp: VsPrefill::new(ix), backend: Backend::Native, pjrt_weights: None }
+    }
+
+    /// Native backend with a caller-provided indexer.
+    pub fn native_with(cfg: EngineConfig, indexer: Indexer) -> PrefillEngine {
+        PrefillEngine { cfg, vsp: VsPrefill::new(indexer), backend: Backend::Native, pjrt_weights: None }
+    }
+
+    /// PJRT backend: loads artifacts + the Python-distilled indexer weights.
+    pub fn pjrt(cfg: EngineConfig, rt: runtime::Engine) -> anyhow::Result<PrefillEngine> {
+        let weights = rt.bundle.load_weights("indexer_weights.json")?;
+        let text = std::fs::read_to_string(rt.bundle.dir.join("indexer_weights.json"))?;
+        let ix = Indexer::load_json(&text)?;
+        let buckets = rt.bundle.buckets.clone();
+        let mut cfg = cfg;
+        cfg.buckets = buckets;
+        Ok(PrefillEngine {
+            cfg,
+            vsp: VsPrefill::new(ix),
+            backend: Backend::Pjrt(rt),
+            pjrt_weights: Some(weights),
+        })
+    }
+
+    pub fn buckets(&self) -> Vec<usize> {
+        self.cfg.buckets.clone()
+    }
+
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.cfg.buckets.iter().cloned().filter(|&b| b >= n).min()
+    }
+
+    /// Process one request (called from the executor thread).
+    pub fn process(&mut self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+        let queue_us = req.submitted_at.elapsed().as_micros() as u64;
+        let mut resp = PrefillResponse { id: req.id, queue_us, ..Default::default() };
+        let n = req.seq_len();
+        let bucket = match self.bucket_for(n) {
+            Some(b) => b,
+            None => {
+                resp.error = Some(format!("seq_len {n} exceeds largest bucket"));
+                return resp;
+            }
+        };
+        resp.bucket = bucket;
+        let t0 = Instant::now();
+        let result = match &self.backend {
+            Backend::Native => self.process_native(req, bucket, rng, &mut resp),
+            Backend::Pjrt(_) => self.process_pjrt(req, bucket, rng, &mut resp),
+        };
+        resp.prefill_us = t0.elapsed().as_micros() as u64;
+        match result {
+            Ok(()) => resp.ok = true,
+            Err(e) => resp.error = Some(format!("{e:#}")),
+        }
+        resp
+    }
+
+    fn head_for(&self, req: &PrefillRequest, bucket: usize, rng: &mut Rng) -> crate::synth::SynthHead {
+        match &req.payload {
+            Payload::Synthetic { seed, .. } => {
+                let mut r = Rng::new(*seed);
+                gen_head(&mut r, bucket, &self.cfg.synth, seed % 8)
+            }
+            Payload::Tokens(toks) => {
+                // Derive a deterministic head from the token content so the
+                // native path is usable without the model artifact.
+                let mut h = 0u64;
+                for &t in toks {
+                    h = h.wrapping_mul(31).wrapping_add(t as u64);
+                }
+                let mut r = rng.fork(h);
+                gen_head(&mut r, bucket, &self.cfg.synth, h % 8)
+            }
+        }
+    }
+
+    fn process_native(
+        &self,
+        req: &PrefillRequest,
+        bucket: usize,
+        rng: &mut Rng,
+        resp: &mut PrefillResponse,
+    ) -> anyhow::Result<()> {
+        let head = self.head_for(req, bucket, rng);
+        let out = match req.mode {
+            AttentionMode::Dense => {
+                resp.density = 1.0;
+                crate::attention::flash::flash_attention(
+                    &head.q, &head.k, &head.v, self.cfg.block_q, self.cfg.block_q,
+                )
+            }
+            AttentionMode::Sparse => {
+                let ti = Instant::now();
+                let idx = self.vsp.predict_kv(&head.k, &head.v, req.budget);
+                resp.index_us = ti.elapsed().as_micros() as u64;
+                resp.density = idx.density(bucket);
+                sparse_attention_vs(&head.q, &head.k, &head.v, &idx, self.cfg.block_q)
+            }
+        };
+        resp.output_digest = digest(&out);
+        Ok(())
+    }
+
+    fn process_pjrt(
+        &self,
+        req: &PrefillRequest,
+        bucket: usize,
+        rng: &mut Rng,
+        resp: &mut PrefillResponse,
+    ) -> anyhow::Result<()> {
+        let Backend::Pjrt(rt) = &self.backend else { unreachable!() };
+        let head = self.head_for(req, bucket, rng);
+        let out: Mat = match req.mode {
+            AttentionMode::Dense => {
+                resp.density = 1.0;
+                rt.flash_attention(bucket, &head.q, &head.k, &head.v)?
+            }
+            AttentionMode::Sparse => {
+                let ti = Instant::now();
+                // Index prediction through the AOT indexer graph.
+                let w = self.pjrt_weights.as_ref().unwrap();
+                let (a_v, a_s) = rt.indexer_forward(bucket, &head.k, &head.v, w)?;
+                let caps = rt
+                    .graph(&format!("sparse_attn_{bucket}"))?
+                    .caps
+                    .unwrap_or((bucket, bucket));
+                let capped = VsPrefill {
+                    cap_v: Some(caps.0),
+                    cap_s: Some(caps.1),
+                    ..VsPrefill::new(self.vsp.indexer.clone())
+                };
+                let idx = capped.select_from_scores(&a_v, &a_s, bucket, req.budget);
+                resp.index_us = ti.elapsed().as_micros() as u64;
+                resp.density = idx.density(bucket);
+                rt.sparse_attention(bucket, &head.q, &head.k, &head.v, &idx)?
+            }
+        };
+        resp.output_digest = digest(&out);
+        Ok(())
+    }
+}
+
+fn digest(m: &Mat) -> Vec<f32> {
+    m.data.iter().take(4).cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_engine_dense_vs_sparse_digests_close() {
+        let mut e = PrefillEngine::native_quick(EngineConfig::default());
+        let mut rng = Rng::new(0);
+        let rd = e.process(&PrefillRequest::synthetic(1, 128, 3, AttentionMode::Dense), &mut rng);
+        let rs = e.process(&PrefillRequest::synthetic(2, 128, 3, AttentionMode::Sparse), &mut rng);
+        assert!(rd.ok && rs.ok);
+        assert_eq!(rd.bucket, 128);
+        assert!(rs.density < 1.0);
+        // Same synthetic head; sparse output should approximate dense.
+        for (a, b) in rd.output_digest.iter().zip(&rs.output_digest) {
+            assert!((a - b).abs() < 0.35, "{:?} vs {:?}", rd.output_digest, rs.output_digest);
+        }
+    }
+
+    #[test]
+    fn oversized_request_fails_cleanly() {
+        let mut e = PrefillEngine::native_quick(EngineConfig::default());
+        let mut rng = Rng::new(0);
+        let r = e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense), &mut rng);
+        assert!(!r.ok);
+        assert!(r.error.unwrap().contains("exceeds"));
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let mut e = PrefillEngine::native_quick(EngineConfig::default());
+        let mut rng = Rng::new(0);
+        let a = e.process(&PrefillRequest::synthetic(1, 128, 9, AttentionMode::Sparse), &mut rng);
+        let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse), &mut rng);
+        assert_eq!(a.output_digest, b.output_digest);
+        assert_eq!(a.density, b.density);
+    }
+}

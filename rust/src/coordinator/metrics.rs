@@ -1,0 +1,103 @@
+//! Service metrics: lock-free counters + a mutex-guarded latency reservoir.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{percentile_sorted, summarize};
+
+use super::request::PrefillResponse;
+
+pub struct Metrics {
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub kv_rejections: AtomicU64,
+    prefill_us: Mutex<Vec<f64>>,
+    queue_us: Mutex<Vec<f64>>,
+    index_us: Mutex<Vec<f64>>,
+    densities: Mutex<Vec<f64>>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub completed: u64,
+    pub failed: u64,
+    pub kv_rejections: u64,
+    pub p50_prefill_us: f64,
+    pub p95_prefill_us: f64,
+    pub mean_queue_us: f64,
+    pub mean_index_us: f64,
+    pub mean_density: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            completed: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            kv_rejections: AtomicU64::new(0),
+            prefill_us: Mutex::new(Vec::new()),
+            queue_us: Mutex::new(Vec::new()),
+            index_us: Mutex::new(Vec::new()),
+            densities: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn record(&self, resp: &PrefillResponse) {
+        if resp.ok {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+            self.prefill_us.lock().unwrap().push(resp.prefill_us as f64);
+            self.queue_us.lock().unwrap().push(resp.queue_us as f64);
+            self.index_us.lock().unwrap().push(resp.index_us as f64);
+            self.densities.lock().unwrap().push(resp.density);
+        } else {
+            self.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut prefill = self.prefill_us.lock().unwrap().clone();
+        prefill.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let queue = self.queue_us.lock().unwrap();
+        let index = self.index_us.lock().unwrap();
+        let dens = self.densities.lock().unwrap();
+        Snapshot {
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            kv_rejections: self.kv_rejections.load(Ordering::Relaxed),
+            p50_prefill_us: if prefill.is_empty() { 0.0 } else { percentile_sorted(&prefill, 0.5) },
+            p95_prefill_us: if prefill.is_empty() { 0.0 } else { percentile_sorted(&prefill, 0.95) },
+            mean_queue_us: summarize(&queue).mean,
+            mean_index_us: summarize(&index).mean,
+            mean_density: summarize(&dens).mean,
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resp(ok: bool, prefill_us: u64, density: f64) -> PrefillResponse {
+        PrefillResponse { ok, prefill_us, density, ..Default::default() }
+    }
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        for i in 1..=10 {
+            m.record(&resp(true, i * 100, 0.2));
+        }
+        m.record(&resp(false, 0, 0.0));
+        let s = m.snapshot();
+        assert_eq!(s.completed, 10);
+        assert_eq!(s.failed, 1);
+        assert!((s.p50_prefill_us - 550.0).abs() < 1.0);
+        assert!((s.mean_density - 0.2).abs() < 1e-9);
+    }
+}

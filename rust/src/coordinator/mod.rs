@@ -1,0 +1,243 @@
+//! L3 serving coordinator: the paper's system side.
+//!
+//! A prefill-serving stack in the vLLM-router mold, specialized for
+//! VSPrefill: requests are admitted under backpressure, batched by
+//! sequence-length bucket, scheduled onto an executor that runs
+//! (model prefill -> VSIndexer -> adaptive budget -> fused sparse attention)
+//! per layer and KV group, with KV-cache blocks accounted by a paged
+//! allocator.  Python never runs here; the model graphs are AOT artifacts
+//! executed via PJRT, and the indexer/budget/merge logic is native Rust.
+//!
+//! Module map:
+//!   request    — request/response types and timing breakdowns
+//!   admission  — bounded admission queue (backpressure)
+//!   batcher    — length-bucketed dynamic batching with max-wait flush
+//!   kv_cache   — paged KV block allocator
+//!   engine     — the per-batch execution pipeline (native or PJRT backend)
+//!   metrics    — counters + latency summaries
+//!   server     — TCP JSON-lines front end + client
+
+pub mod admission;
+pub mod batcher;
+pub mod config;
+pub mod engine;
+pub mod kv_cache;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use engine::{AttentionMode, EngineConfig, PrefillEngine};
+pub use request::{PrefillRequest, PrefillResponse};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use crate::util::rng::Rng;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub engine: EngineConfig,
+    pub max_queue: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+    pub kv_blocks: usize,
+    pub kv_block_size: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            engine: EngineConfig::default(),
+            max_queue: 256,
+            max_batch: 8,
+            max_wait_ms: 5,
+            kv_blocks: 4096,
+            kv_block_size: 64,
+        }
+    }
+}
+
+/// The running coordinator: admission -> batcher -> executor thread.
+pub struct Coordinator {
+    pub cfg: CoordinatorConfig,
+    admission: Arc<admission::AdmissionQueue>,
+    pub metrics: Arc<metrics::Metrics>,
+    stop: Arc<AtomicBool>,
+    executor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start the coordinator with the given engine (takes ownership; the
+    /// engine lives on the executor thread).
+    ///
+    /// SAFETY of the Send wrapper: the PJRT wrapper types hold `Rc`s and raw
+    /// executable pointers, which makes `PrefillEngine` `!Send` by
+    /// construction.  The engine is *moved wholesale* into the single
+    /// executor thread here — no clone of any `Rc` stays behind on the
+    /// calling thread, and all subsequent use is from that one thread, which
+    /// is exactly the single-threaded discipline the types assume.
+    pub fn start(cfg: CoordinatorConfig, engine: PrefillEngine) -> Coordinator {
+        struct SendEngine(PrefillEngine);
+        unsafe impl Send for SendEngine {}
+        impl SendEngine {
+            // Method (not field access) so the 2021-edition closure captures
+            // the whole Send wrapper rather than the !Send field.
+            fn into_inner(self) -> PrefillEngine {
+                self.0
+            }
+        }
+        let buckets = engine.buckets();
+        let engine = SendEngine(engine);
+        let admission = Arc::new(admission::AdmissionQueue::new(cfg.max_queue));
+        let metrics = Arc::new(metrics::Metrics::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let kv = Arc::new(Mutex::new(kv_cache::KvCache::new(cfg.kv_blocks, cfg.kv_block_size)));
+
+        let batcher = batcher::Batcher::new(
+            cfg.max_batch,
+            std::time::Duration::from_millis(cfg.max_wait_ms),
+            buckets,
+        );
+        let adm = admission.clone();
+        let met = metrics.clone();
+        let stp = stop.clone();
+        let executor = std::thread::spawn(move || {
+            let mut engine = engine.into_inner();
+            let mut rng = Rng::new(0xC0FFEE);
+            loop {
+                if stp.load(Ordering::Relaxed) && adm.is_empty() {
+                    break;
+                }
+                let batch = batcher.next_batch(&adm);
+                if batch.is_empty() {
+                    if stp.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::thread::sleep(std::time::Duration::from_micros(200));
+                    continue;
+                }
+                // KV admission: allocate blocks for the whole batch; requests
+                // that do not fit are re-queued (backpressure to the batcher).
+                let mut admitted = Vec::new();
+                for item in batch {
+                    let blocks_needed = {
+                        let kvq = kv.lock().unwrap();
+                        kvq.blocks_for(item.req.seq_len())
+                    };
+                    let got = kv.lock().unwrap().allocate(item.req.id, blocks_needed);
+                    if got {
+                        admitted.push(item);
+                    } else {
+                        met.kv_rejections.fetch_add(1, Ordering::Relaxed);
+                        adm.requeue(item);
+                    }
+                }
+                for item in admitted {
+                    let resp = engine.process(&item.req, &mut rng);
+                    kv.lock().unwrap().free(item.req.id);
+                    met.record(&resp);
+                    let _ = item.reply.send(resp);
+                }
+            }
+        });
+
+        Coordinator { cfg, admission, metrics, stop, executor: Some(executor) }
+    }
+
+    /// Submit a request; returns a receiver for the response, or an error
+    /// when the admission queue is full (backpressure).
+    pub fn submit(
+        &self,
+        req: PrefillRequest,
+    ) -> Result<mpsc::Receiver<PrefillResponse>, admission::QueueFull> {
+        let (tx, rx) = mpsc::channel();
+        self.admission.push(batcher::WorkItem { req, reply: tx })?;
+        Ok(rx)
+    }
+
+    /// Convenience: submit and wait.
+    pub fn prefill(&self, req: PrefillRequest) -> anyhow::Result<PrefillResponse> {
+        let rx = self
+            .submit(req)
+            .map_err(|_| anyhow::anyhow!("admission queue full"))?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn shutdown(mut self) -> metrics::Snapshot {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn native_coordinator(max_queue: usize) -> Coordinator {
+        let cfg = CoordinatorConfig {
+            max_queue,
+            max_batch: 4,
+            max_wait_ms: 1,
+            ..Default::default()
+        };
+        let engine = PrefillEngine::native_quick(cfg.engine.clone());
+        Coordinator::start(cfg, engine)
+    }
+
+    #[test]
+    fn serves_a_request_end_to_end() {
+        let c = native_coordinator(16);
+        let resp = c
+            .prefill(PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse))
+            .unwrap();
+        assert_eq!(resp.id, 1);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert!(resp.density > 0.0 && resp.density < 0.8);
+        assert!(resp.prefill_us > 0);
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn serves_concurrent_mixed_batch() {
+        let c = native_coordinator(64);
+        let mut rxs = Vec::new();
+        for i in 0..12 {
+            let mode = if i % 3 == 0 { AttentionMode::Dense } else { AttentionMode::Sparse };
+            let n = if i % 2 == 0 { 128 } else { 256 };
+            rxs.push(c.submit(PrefillRequest::synthetic(i, n, i, mode)).unwrap());
+        }
+        for rx in rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.ok);
+        }
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 12);
+        assert!(snap.p50_prefill_us > 0.0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // max_queue 1: a burst must overflow the admission queue.
+        let c = native_coordinator(1);
+        let mut results = Vec::new();
+        for i in 0..50 {
+            results.push(c.submit(PrefillRequest::synthetic(i, 256, i, AttentionMode::Sparse)).is_ok());
+        }
+        assert!(results.iter().any(|x| !x), "expected at least one rejection");
+        drop(c);
+    }
+}

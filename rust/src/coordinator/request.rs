@@ -1,0 +1,145 @@
+//! Request/response types for the prefill service.
+
+use crate::coordinator::engine::AttentionMode;
+use crate::util::json::Json;
+
+/// The payload of a prefill request.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Token ids into the toy model's vocabulary (PJRT model path).
+    Tokens(Vec<i32>),
+    /// Synthetic-head request: the engine generates (Q, K, V) from the
+    /// Appendix-A.1 model with this seed (native + kernel-level PJRT paths).
+    Synthetic { seq_len: usize, seed: u64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct PrefillRequest {
+    pub id: u64,
+    pub payload: Payload,
+    pub mode: AttentionMode,
+    /// Budget knob in (0, 1]; 0.5 is the paper's default operating point.
+    pub budget: f32,
+    pub submitted_at: std::time::Instant,
+}
+
+impl PrefillRequest {
+    pub fn synthetic(id: u64, seq_len: usize, seed: u64, mode: AttentionMode) -> PrefillRequest {
+        PrefillRequest {
+            id,
+            payload: Payload::Synthetic { seq_len, seed },
+            mode,
+            budget: 0.5,
+            submitted_at: std::time::Instant::now(),
+        }
+    }
+
+    pub fn tokens(id: u64, tokens: Vec<i32>, mode: AttentionMode) -> PrefillRequest {
+        PrefillRequest {
+            id,
+            payload: Payload::Tokens(tokens),
+            mode,
+            budget: 0.5,
+            submitted_at: std::time::Instant::now(),
+        }
+    }
+
+    pub fn seq_len(&self) -> usize {
+        match &self.payload {
+            Payload::Tokens(t) => t.len(),
+            Payload::Synthetic { seq_len, .. } => *seq_len,
+        }
+    }
+}
+
+/// Response with a full timing/quality breakdown (the metrics pipeline and
+/// the benches consume these fields directly).
+#[derive(Clone, Debug, Default)]
+pub struct PrefillResponse {
+    pub id: u64,
+    pub ok: bool,
+    pub error: Option<String>,
+    /// Bucket the request was padded to.
+    pub bucket: usize,
+    /// Microseconds spent waiting in queue.
+    pub queue_us: u64,
+    /// Microseconds of end-to-end prefill (index + attention + model).
+    pub prefill_us: u64,
+    /// Microseconds spent in index prediction + budgeting + merge.
+    pub index_us: u64,
+    /// Density of the selected mask (1.0 for dense).
+    pub density: f64,
+    /// Output checksum (first 4 output values) for cross-backend parity.
+    pub output_digest: Vec<f32>,
+}
+
+impl PrefillResponse {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Num(self.id as f64)),
+            ("ok", Json::Bool(self.ok)),
+            (
+                "error",
+                match &self.error {
+                    Some(e) => Json::s(e.clone()),
+                    None => Json::Null,
+                },
+            ),
+            ("bucket", Json::Num(self.bucket as f64)),
+            ("queue_us", Json::Num(self.queue_us as f64)),
+            ("prefill_us", Json::Num(self.prefill_us as f64)),
+            ("index_us", Json::Num(self.index_us as f64)),
+            ("density", Json::Num(self.density)),
+            ("output_digest", Json::arr_f32(&self.output_digest)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<PrefillResponse> {
+        Ok(PrefillResponse {
+            id: j.req("id")?.as_f64().unwrap_or(0.0) as u64,
+            ok: matches!(j.req("ok")?, Json::Bool(true)),
+            error: j.get("error").and_then(|e| e.as_str()).map(|s| s.to_string()),
+            bucket: j.req("bucket")?.as_usize().unwrap_or(0),
+            queue_us: j.req("queue_us")?.as_f64().unwrap_or(0.0) as u64,
+            prefill_us: j.req("prefill_us")?.as_f64().unwrap_or(0.0) as u64,
+            index_us: j.req("index_us")?.as_f64().unwrap_or(0.0) as u64,
+            density: j.req("density")?.as_f64().unwrap_or(0.0),
+            output_digest: j.req("output_digest")?.as_f32_vec()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_json_roundtrip() {
+        let r = PrefillResponse {
+            id: 42,
+            ok: true,
+            error: None,
+            bucket: 256,
+            queue_us: 10,
+            prefill_us: 1000,
+            index_us: 50,
+            density: 0.18,
+            output_digest: vec![1.0, -2.5, 0.0, 3.25],
+        };
+        let j = r.to_json();
+        let back = PrefillResponse::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.id, 42);
+        assert!(back.ok);
+        assert_eq!(back.bucket, 256);
+        assert_eq!(back.output_digest, r.output_digest);
+        assert!((back.density - 0.18).abs() < 1e-12);
+    }
+
+    #[test]
+    fn seq_len_from_payload() {
+        let r = PrefillRequest::tokens(1, vec![1, 2, 3], AttentionMode::Dense);
+        assert_eq!(r.seq_len(), 3);
+        let s = PrefillRequest::synthetic(2, 128, 0, AttentionMode::Sparse);
+        assert_eq!(s.seq_len(), 128);
+    }
+}

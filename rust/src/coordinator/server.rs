@@ -1,0 +1,231 @@
+//! TCP JSON-lines front end.
+//!
+//! Wire protocol (one JSON object per line):
+//!   request:  {"id": 1, "n": 256, "seed": 7, "mode": "sparse", "budget": 0.5}
+//!             or {"id": 1, "tokens": [..], "mode": "dense"}
+//!   response: PrefillResponse::to_json
+//! The connection handler blocks per request (prefill is the unit of work);
+//! multiple connections are served concurrently, all funneling into the
+//! coordinator's admission queue.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::Json;
+
+use super::engine::AttentionMode;
+use super::request::{PrefillRequest, PrefillResponse};
+use super::Coordinator;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+pub fn parse_request(line: &str) -> anyhow::Result<PrefillRequest> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let id = j.req("id")?.as_f64().unwrap_or(0.0) as u64;
+    let mode = match j.get("mode").and_then(|m| m.as_str()).unwrap_or("sparse") {
+        "dense" => AttentionMode::Dense,
+        _ => AttentionMode::Sparse,
+    };
+    let mut req = if let Some(tokens) = j.get("tokens") {
+        let toks: Vec<i32> = tokens
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tokens must be an array"))?
+            .iter()
+            .map(|t| t.as_f64().unwrap_or(0.0) as i32)
+            .collect();
+        PrefillRequest::tokens(id, toks, mode)
+    } else {
+        let n = j.req("n")?.as_usize().ok_or_else(|| anyhow::anyhow!("n must be a number"))?;
+        let seed = j.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64;
+        PrefillRequest::synthetic(id, n, seed, mode)
+    };
+    if let Some(b) = j.get("budget").and_then(|b| b.as_f64()) {
+        req.budget = b as f32;
+    }
+    Ok(req)
+}
+
+impl Server {
+    /// Bind and serve on 127.0.0.1:`port` (0 = ephemeral).
+    pub fn start(coordinator: Arc<Coordinator>, port: u16) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let c = coordinator.clone();
+                        let s = stop2.clone();
+                        conns.push(std::thread::spawn(move || handle_conn(stream, c, s)));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in conns {
+                let _ = c.join();
+            }
+        });
+        Ok(Server { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+    let peer = stream.peer_addr().ok();
+    // Read timeout so the handler can observe shutdown instead of blocking
+    // forever on an idle client.
+    let _ = stream.set_read_timeout(Some(std::time::Duration::from_millis(100)));
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        // read_line appends; on timeout we keep the partial prefix and retry.
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF
+            Ok(_) if line.ends_with('\n') => {}
+            Ok(_) => continue, // partial line before timeout window closed
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break,
+        }
+        let current = std::mem::take(&mut line);
+        if current.trim().is_empty() {
+            continue;
+        }
+        let line = current;
+        let resp_json = match parse_request(&line) {
+            Ok(req) => match coordinator.prefill(req) {
+                Ok(resp) => resp.to_json(),
+                Err(e) => error_json(0, &format!("{e:#}")),
+            },
+            Err(e) => error_json(0, &format!("bad request from {peer:?}: {e:#}")),
+        };
+        if writeln!(writer, "{}", resp_json.to_string()).is_err() {
+            break;
+        }
+    }
+}
+
+fn error_json(id: u64, msg: &str) -> Json {
+    PrefillResponse {
+        id,
+        ok: false,
+        error: Some(msg.to_string()),
+        ..Default::default()
+    }
+    .to_json()
+}
+
+/// Blocking client for tests, examples and the load generator.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    pub fn prefill_synthetic(
+        &mut self,
+        id: u64,
+        n: usize,
+        seed: u64,
+        mode: &str,
+        budget: f32,
+    ) -> anyhow::Result<PrefillResponse> {
+        let req = Json::obj(vec![
+            ("id", Json::Num(id as f64)),
+            ("n", Json::Num(n as f64)),
+            ("seed", Json::Num(seed as f64)),
+            ("mode", Json::s(mode)),
+            ("budget", Json::Num(budget as f64)),
+        ]);
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+        PrefillResponse::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_variants() {
+        let r = parse_request(r#"{"id": 3, "n": 256, "seed": 9, "mode": "dense"}"#).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.seq_len(), 256);
+        assert_eq!(r.mode, AttentionMode::Dense);
+
+        let r2 = parse_request(r#"{"id": 4, "tokens": [1,2,3], "budget": 0.25}"#).unwrap();
+        assert_eq!(r2.seq_len(), 3);
+        assert_eq!(r2.mode, AttentionMode::Sparse);
+        assert!((r2.budget - 0.25).abs() < 1e-6);
+
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        use crate::coordinator::{CoordinatorConfig, PrefillEngine};
+        let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+        let engine = PrefillEngine::native_quick(cfg.engine.clone());
+        let coordinator = Arc::new(Coordinator::start(cfg, engine));
+        let server = Server::start(coordinator.clone(), 0).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        let resp = client.prefill_synthetic(7, 128, 1, "sparse", 0.5).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.id, 7);
+        assert!(resp.density < 1.0);
+        // second request on the same connection
+        let resp2 = client.prefill_synthetic(8, 128, 1, "dense", 0.5).unwrap();
+        assert!(resp2.ok);
+        assert_eq!(resp2.density, 1.0);
+        server.shutdown();
+    }
+}

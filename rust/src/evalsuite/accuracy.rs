@@ -1,0 +1,67 @@
+//! Recall→accuracy response model, calibrated on the paper's Figure 2:
+//! accuracy is near-zero below ~30% attention recall, rises steeply through
+//! 50%, plateaus above ~70% and is indistinguishable from full attention
+//! beyond 90%.  A logistic in recall with task-specific steepness
+//! (difficulty) reproduces exactly that shape.
+
+use super::TaskInstance;
+
+/// Fidelity factor in [0, 1]: fraction of the full-attention score retained
+/// at a given critical recall.
+pub fn fidelity(recall: f32, difficulty: f32) -> f32 {
+    let r = recall.clamp(0.0, 1.0);
+    let mid = 0.45;
+    let temp = (0.12 / difficulty.max(0.1)).max(0.02);
+    let s = |x: f32| 1.0 / (1.0 + (-(x - mid) / temp).exp());
+    // normalize so recall=1 -> 1.0
+    (s(r) / s(1.0)).clamp(0.0, 1.0)
+}
+
+/// Task score in the paper's 0-100 convention.
+pub fn task_score(inst: &TaskInstance, recall: f32) -> f32 {
+    inst.base_score * fidelity(recall, inst.difficulty)
+}
+
+/// Perplexity proxy for Figure 2's right axis: low and flat above the recall
+/// knee, exploding below it.
+pub fn perplexity_proxy(recall: f32) -> f32 {
+    let base = 6.0;
+    base + 60.0 * (1.0 - fidelity(recall, 1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure2_shape() {
+        // Monotone increasing.
+        let mut prev = -1.0;
+        for i in 0..=20 {
+            let f = fidelity(i as f32 / 20.0, 1.0);
+            assert!(f >= prev - 1e-6);
+            prev = f;
+        }
+        // Plateau: >=90% recall indistinguishable from full (<2% off).
+        assert!(fidelity(0.9, 1.0) > 0.98);
+        // Functional viability above 50%: paper's "stabilized" zone.
+        assert!(fidelity(0.55, 1.0) > 0.6);
+        // Collapse below 30%.
+        assert!(fidelity(0.2, 1.0) < 0.15);
+    }
+
+    #[test]
+    fn difficulty_sharpens_the_knee() {
+        // Below the knee (mid = 0.45), a sharper (harder) sigmoid retains
+        // less; above it, more.  Both saturate far above the knee.
+        assert!(fidelity(0.35, 2.0) < fidelity(0.35, 0.5));
+        assert!(fidelity(0.55, 2.0) > fidelity(0.55, 0.5));
+        assert!(fidelity(0.95, 2.0) > 0.97);
+    }
+
+    #[test]
+    fn perplexity_explodes_below_knee() {
+        assert!(perplexity_proxy(1.0) < 7.0);
+        assert!(perplexity_proxy(0.1) > 50.0);
+    }
+}

@@ -1,0 +1,102 @@
+//! LongBench-like task families (Bai et al., 2024): the 13 columns of the
+//! paper's Table 2, modeled as retrieval/aggregation problems with
+//! family-specific critical-set geometry, base score (anchored to the
+//! paper's FlashAttn rows) and difficulty.
+
+use crate::util::rng::Rng;
+
+use super::TaskInstance;
+
+#[derive(Clone, Copy, Debug)]
+pub struct LongBenchFamily {
+    pub name: &'static str,
+    /// Critical keys per instance (retrieval-heavy: few; summarization/
+    /// few-shot: many spread positions).
+    pub needles: usize,
+    pub probe_rows: usize,
+    /// FlashAttn anchor scores (qwen, llama) from the paper's Table 2.
+    pub base_qwen: f32,
+    pub base_llama: f32,
+    pub difficulty: f32,
+}
+
+/// The paper's 13 LongBench columns with their FlashAttn anchors.
+pub const FAMILIES: [LongBenchFamily; 13] = [
+    LongBenchFamily { name: "Qasper", needles: 3, probe_rows: 24, base_qwen: 40.66, base_llama: 42.98, difficulty: 1.0 },
+    LongBenchFamily { name: "MFQA-en", needles: 4, probe_rows: 24, base_qwen: 22.12, base_llama: 26.18, difficulty: 0.9 },
+    LongBenchFamily { name: "TREC", needles: 16, probe_rows: 32, base_qwen: 72.67, base_llama: 8.00, difficulty: 0.5 },
+    LongBenchFamily { name: "2WikiMQA", needles: 5, probe_rows: 24, base_qwen: 40.28, base_llama: 43.46, difficulty: 1.3 },
+    LongBenchFamily { name: "TOC", needles: 8, probe_rows: 24, base_qwen: 6.41, base_llama: 26.28, difficulty: 0.7 },
+    LongBenchFamily { name: "MultiNews", needles: 20, probe_rows: 32, base_qwen: 50.53, base_llama: 55.25, difficulty: 0.5 },
+    LongBenchFamily { name: "GovReport", needles: 24, probe_rows: 32, base_qwen: 30.75, base_llama: 34.93, difficulty: 0.4 },
+    LongBenchFamily { name: "PassageRet", needles: 1, probe_rows: 16, base_qwen: 100.0, base_llama: 99.67, difficulty: 1.1 },
+    LongBenchFamily { name: "PsgCount", needles: 10, probe_rows: 16, base_qwen: 1.45, base_llama: 11.72, difficulty: 1.4 },
+    LongBenchFamily { name: "SamSum", needles: 12, probe_rows: 24, base_qwen: 35.98, base_llama: 8.13, difficulty: 0.6 },
+    LongBenchFamily { name: "LSHT", needles: 8, probe_rows: 24, base_qwen: 8.25, base_llama: 22.81, difficulty: 0.8 },
+    LongBenchFamily { name: "HotpotQA", needles: 4, probe_rows: 24, base_qwen: 57.61, base_llama: 60.94, difficulty: 1.4 },
+    LongBenchFamily { name: "TriviaQA", needles: 2, probe_rows: 16, base_qwen: 85.49, base_llama: 88.76, difficulty: 0.7 },
+];
+
+/// Instances for one family at a mix of lengths (LongBench inputs are
+/// 2k-32k; we draw from a geometric mix).
+pub fn family_instances(
+    fam: &LongBenchFamily,
+    base_score: f32,
+    reps: usize,
+    seed: u64,
+    lengths: &[usize],
+) -> Vec<TaskInstance> {
+    let mut rng = Rng::new(seed ^ fnv(fam.name));
+    let mut out = Vec::new();
+    for r in 0..reps {
+        let n = lengths[r % lengths.len()];
+        let lo = (n / 20).max(4);
+        let hi = n - fam.probe_rows - 1;
+        let critical = rng.choose_distinct(lo, hi, fam.needles.min(hi - lo));
+        out.push(TaskInstance {
+            task: fam.name,
+            n,
+            critical,
+            probe_rows: fam.probe_rows,
+            base_score,
+            difficulty: fam.difficulty,
+            seed: seed ^ ((r as u64) << 40) ^ fnv(fam.name),
+        });
+    }
+    out
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thirteen_families_match_paper_columns() {
+        assert_eq!(FAMILIES.len(), 13);
+        let names: Vec<&str> = FAMILIES.iter().map(|f| f.name).collect();
+        assert!(names.contains(&"HotpotQA"));
+        assert!(names.contains(&"PassageRet"));
+    }
+
+    #[test]
+    fn instances_respect_geometry() {
+        let fam = &FAMILIES[0];
+        let v = family_instances(fam, fam.base_qwen, 6, 0, &[2048, 4096]);
+        assert_eq!(v.len(), 6);
+        for i in &v {
+            assert!(i.critical.len() <= fam.needles);
+            assert!(i.critical.iter().all(|&c| c < i.n - i.probe_rows));
+        }
+        // mixes both lengths
+        assert!(v.iter().any(|i| i.n == 2048) && v.iter().any(|i| i.n == 4096));
+    }
+}

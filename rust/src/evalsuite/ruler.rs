@@ -1,0 +1,114 @@
+//! RULER-like task generators (Hsieh et al., 2024): needle-in-a-haystack
+//! retrieval at parameterized lengths and difficulties.
+//!
+//! Families:
+//!   niah_single    — one needle at a uniform position
+//!   niah_multi     — 4 needles, all must be retrievable
+//!   variable_track — a chain of k hops; every link is critical
+//!   common_words   — many weakly-critical positions (aggregation)
+//!   qa_distract    — needle among strong distractor heavies
+//!
+//! Base scores anchor the FlashAttn row near the paper's Table 1 values
+//! (Qwen ~79.7, LLaMA ~85.4 on average across lengths).
+
+use crate::util::rng::Rng;
+
+use super::TaskInstance;
+
+#[derive(Clone, Copy, Debug)]
+pub struct RulerFamily {
+    pub name: &'static str,
+    pub needles: usize,
+    pub probe_rows: usize,
+    pub base_score: f32,
+    pub difficulty: f32,
+}
+
+pub const FAMILIES: [RulerFamily; 5] = [
+    RulerFamily { name: "niah_single", needles: 1, probe_rows: 16, base_score: 97.0, difficulty: 0.8 },
+    RulerFamily { name: "niah_multi", needles: 4, probe_rows: 16, base_score: 88.0, difficulty: 1.2 },
+    RulerFamily { name: "variable_track", needles: 6, probe_rows: 24, base_score: 76.0, difficulty: 1.5 },
+    RulerFamily { name: "common_words", needles: 12, probe_rows: 24, base_score: 70.0, difficulty: 0.6 },
+    RulerFamily { name: "qa_distract", needles: 2, probe_rows: 16, base_score: 67.0, difficulty: 1.0 },
+];
+
+/// Generate `reps` instances of every family at length n.
+pub fn instances(n: usize, reps: usize, seed: u64) -> Vec<TaskInstance> {
+    let mut rng = Rng::new(seed ^ n as u64);
+    let mut out = Vec::new();
+    for fam in FAMILIES {
+        for r in 0..reps {
+            // needles land uniformly in the middle 90% (never in the sink
+            // region, never inside the probe tail).
+            let lo = (n / 20).max(4);
+            let hi = n - fam.probe_rows - 1;
+            let critical = rng.choose_distinct(lo, hi, fam.needles.min(hi - lo));
+            out.push(TaskInstance {
+                task: fam.name,
+                n,
+                critical,
+                probe_rows: fam.probe_rows,
+                base_score: fam.base_score,
+                difficulty: fam.difficulty,
+                seed: seed ^ (n as u64) ^ ((r as u64) << 32) ^ fnv(fam.name),
+            });
+        }
+    }
+    out
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The paper's Table 1 length axis.
+pub const PAPER_LENGTHS: [usize; 6] = [4096, 8192, 16384, 32768, 65536, 131072];
+
+/// Scaled-down axis for quick runs (same geometric spread).
+pub const QUICK_LENGTHS: [usize; 6] = [512, 1024, 2048, 4096, 8192, 16384];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_all_families() {
+        let v = instances(4096, 2, 0);
+        assert_eq!(v.len(), FAMILIES.len() * 2);
+        for inst in &v {
+            assert!(inst.critical.len() >= 1);
+            assert!(inst.critical.iter().all(|&c| c > 0 && c < inst.n - inst.probe_rows));
+            assert!(inst.critical.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = instances(2048, 1, 7);
+        let b = instances(2048, 1, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.critical, y.critical);
+            assert_eq!(x.seed, y.seed);
+        }
+        let c = instances(2048, 1, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.critical != y.critical));
+    }
+
+    #[test]
+    fn needles_span_the_context() {
+        // across many instances, needles must appear in the middle (the
+        // region that defeats sink+window baselines)
+        let v = instances(8192, 8, 1);
+        let mid = v
+            .iter()
+            .flat_map(|i| i.critical.iter())
+            .filter(|&&c| c > 2048 && c < 6144)
+            .count();
+        assert!(mid > 10, "only {mid} mid-context needles");
+    }
+}

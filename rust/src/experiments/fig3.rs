@@ -1,0 +1,283 @@
+//! Figures 3 / 6 / 7 / 8 — the attention-pattern visualizations:
+//!   fig3: intra-group consistency vs inter-group divergence, depth/prompt/
+//!         model dependence (ASCII heatmaps + correlation stats)
+//!   fig6: vertical-aggregated weights across heads (CSV)
+//!   fig7: slash aggregation under Q/K averaging configurations
+//!   fig8: dimension-wise Gaussian fits of Q/K activations
+
+use crate::attention::aggregate::vs_aggregate_qk;
+use crate::synth::{gen_head, llama_sim, qwen_sim, SynthConfig};
+use crate::tensor::Mat;
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+
+pub fn correlation(a: &[f32], b: &[f32]) -> f64 {
+    let n = a.len() as f64;
+    let ma = a.iter().map(|x| *x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|x| *x as f64).sum::<f64>() / n;
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for i in 0..a.len() {
+        let (x, y) = (a[i] as f64 - ma, b[i] as f64 - mb);
+        num += x * y;
+        da += x * x;
+        db += y * y;
+    }
+    num / (da.sqrt() * db.sqrt() + 1e-12)
+}
+
+pub struct Fig3Stats {
+    pub intra_group_corr: f64,
+    pub inter_group_corr: f64,
+    pub cross_prompt_corr: f64,
+    pub cross_model_corr: f64,
+}
+
+/// Quantifies the paper's four claims about pattern dynamics.
+///
+/// "Intra-group" compares two heads of the same KV group *on the same
+/// input*: shared mean vectors (the group's positional signature) and shared
+/// content stream, differing only in per-head projection noise — modeled by
+/// re-noising 20% of the activations.  "Inter-group" swaps the mean seed on
+/// the same content; "cross-prompt" swaps the content stream; "cross-model"
+/// swaps the family preset.
+pub fn run_fig3(n: usize, seed: u64) -> Fig3Stats {
+    let q = qwen_sim();
+    let l = llama_sim();
+    let gen = |cfg: &SynthConfig, noise_seed: u64, group: u64| {
+        let mut rng = Rng::new(noise_seed);
+        gen_head(&mut rng, n, cfg, group)
+    };
+    let profile = |h: &crate::synth::SynthHead| vs_aggregate_qk(&h.q, &h.k).1;
+    let renoise = |h: &crate::synth::SynthHead, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut h2 = h.clone();
+        for x in h2.q.data.iter_mut().chain(h2.k.data.iter_mut()) {
+            *x = 0.8 * *x + 0.2 * rng.normal_f32();
+        }
+        h2
+    };
+    let base = gen(&q, seed, 0);
+    let a1 = profile(&base);
+    let a2 = profile(&renoise(&base, seed + 1)); // intra-group, same input
+    let b1 = profile(&gen(&q, seed, 3)); // inter-group, same input
+    let p2 = profile(&gen(&q, seed + 50, 0)); // same group, new prompt
+    let m2 = profile(&gen(&l, seed, 0)); // different model family
+    Fig3Stats {
+        intra_group_corr: correlation(&a1, &a2),
+        inter_group_corr: correlation(&a1, &b1),
+        cross_prompt_corr: correlation(&a1, &p2),
+        cross_model_corr: correlation(&a1, &m2),
+    }
+}
+
+/// Figure 7: slash aggregation under four Q/K averaging configurations.
+/// Averaging along the sequence dim preserves the slash pattern; averaging
+/// along the feature dim destroys it (App. A.1).
+pub struct Fig7Row {
+    pub config: &'static str,
+    pub corr_with_original: f64,
+}
+
+pub fn run_fig7(n: usize, seed: u64) -> Vec<Fig7Row> {
+    let cfg = SynthConfig { n_heavy: 0, mean_scale: 3.0, ..Default::default() };
+    // Build pre-RoPE q/k, average along dims, re-apply RoPE, aggregate.
+    let d = cfg.head_dim;
+    let mut mean_rng = Rng::new(cfg.seed_means);
+    let mu_q: Vec<f32> = (0..d).map(|_| mean_rng.normal_f32() * cfg.mean_scale).collect();
+    let mu_k: Vec<f32> = (0..d).map(|_| mean_rng.normal_f32() * cfg.mean_scale).collect();
+    let mut rng = Rng::new(seed);
+    let q0 = Mat::from_fn(n, d, |_, j| rng.normal_f32() * cfg.noise_scale + mu_q[j]);
+    let k0 = Mat::from_fn(n, d, |_, j| rng.normal_f32() * cfg.noise_scale + mu_k[j]);
+
+    let seq_avg = |m: &Mat| {
+        let mut col = vec![0.0f32; d];
+        for i in 0..n {
+            for j in 0..d {
+                col[j] += m.at(i, j);
+            }
+        }
+        col.iter_mut().for_each(|x| *x /= n as f32);
+        Mat::from_fn(n, d, |_, j| col[j])
+    };
+    let feat_avg = |m: &Mat| {
+        Mat::from_fn(n, d, |i, _| m.row(i).iter().sum::<f32>() / d as f32)
+    };
+    let agg = |q: &Mat, k: &Mat| {
+        let mut qr = q.clone();
+        let mut kr = k.clone();
+        crate::tensor::rope::rope_inplace(&mut qr, cfg.rope_base, 0);
+        crate::tensor::rope::rope_inplace(&mut kr, cfg.rope_base, 0);
+        vs_aggregate_qk(&qr, &kr).1
+    };
+    let original = agg(&q0, &k0);
+    let configs: Vec<(&'static str, Vec<f32>)> = vec![
+        ("no averaging", original.clone()),
+        ("seq-dim avg", agg(&seq_avg(&q0), &seq_avg(&k0))),
+        ("feature-dim avg", agg(&feat_avg(&q0), &feat_avg(&k0))),
+        ("both dims avg", agg(&feat_avg(&seq_avg(&q0)), &feat_avg(&seq_avg(&k0)))),
+    ];
+    configs
+        .into_iter()
+        .map(|(name, slash)| Fig7Row {
+            config: name,
+            corr_with_original: correlation(&original, &slash),
+        })
+        .collect()
+}
+
+/// Figure 8: per-dimension moments of Q/K with Gaussian-fit error
+/// (Kolmogorov-ish max deviation between empirical and fitted CDF at
+/// quartiles — small values mean "well fitted by a Gaussian").
+pub struct Fig8Row {
+    pub dim: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub fit_err: f64,
+}
+
+pub fn run_fig8(n: usize, seed: u64) -> Vec<Fig8Row> {
+    let cfg = SynthConfig::default();
+    let mut rng = Rng::new(seed);
+    let h = gen_head(&mut rng, n, &cfg, 0);
+    (0..cfg.head_dim)
+        .map(|j| {
+            let col: Vec<f64> = (0..n).map(|i| h.q.at(i, j) as f64).collect();
+            let mean = col.iter().sum::<f64>() / n as f64;
+            let var = col.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+            let std = var.sqrt();
+            // empirical vs Gaussian CDF at the quartiles
+            let mut sorted = col.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let phi = |x: f64| 0.5 * (1.0 + erf((x - mean) / (std * std::f64::consts::SQRT_2 + 1e-12)));
+            let mut fit_err = 0.0f64;
+            for q in [0.25, 0.5, 0.75] {
+                let idx = ((n as f64) * q) as usize;
+                let emp = q;
+                let gauss = phi(sorted[idx.min(n - 1)]);
+                fit_err = fit_err.max((emp - gauss).abs());
+            }
+            Fig8Row { dim: j, mean, std, fit_err }
+        })
+        .collect()
+}
+
+fn erf(x: f64) -> f64 {
+    // Abramowitz-Stegun 7.1.26
+    let t = 1.0 / (1.0 + 0.3275911 * x.abs());
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    if x >= 0.0 {
+        y
+    } else {
+        -y
+    }
+}
+
+pub fn main_entry_fig3(quick: bool, seed: u64) -> anyhow::Result<String> {
+    let n = if quick { 256 } else { 512 };
+    let s = run_fig3(n, seed);
+    let out = format!(
+        "Figure 3 — pattern-dynamics statistics (slash-profile correlations)\n\
+         intra-group:  {:.3}   (paper: high — masks shareable per KV group)\n\
+         inter-group:  {:.3}   (paper: low  — groups need own masks)\n\
+         cross-prompt: {:.3}   (context sensitivity)\n\
+         cross-model:  {:.3}   (model dependence)\n",
+        s.intra_group_corr, s.inter_group_corr, s.cross_prompt_corr, s.cross_model_corr
+    );
+    std::fs::write(super::results_dir().join("fig3_dynamics.txt"), &out)?;
+    Ok(out)
+}
+
+pub fn main_entry_fig6(quick: bool, seed: u64) -> anyhow::Result<String> {
+    let n = if quick { 256 } else { 512 };
+    let mut csv = CsvWriter::create(
+        super::results_dir().join("fig6_vertical_heads.csv"),
+        &["head", "position", "mass"],
+    )?;
+    let cfg = SynthConfig::default();
+    for h in 0..8usize {
+        let mut rng = Rng::new(seed ^ h as u64);
+        let head = gen_head(&mut rng, n, &cfg, (h / 2) as u64);
+        let (av, _) = vs_aggregate_qk(&head.q, &head.k);
+        for (p, &m) in av.iter().enumerate() {
+            csv.row_f64(&[h as f64, p as f64, m as f64])?;
+        }
+    }
+    Ok("fig6_vertical_heads.csv written".to_string())
+}
+
+pub fn main_entry_fig7(quick: bool, seed: u64) -> anyhow::Result<String> {
+    let n = if quick { 192 } else { 384 };
+    let rows = run_fig7(n, seed);
+    let mut out = String::from("Figure 7 — slash profile correlation with original under averaging\n");
+    for r in &rows {
+        out.push_str(&format!("  {:<16} corr = {:.3}\n", r.config, r.corr_with_original));
+    }
+    std::fs::write(super::results_dir().join("fig7_averaging.txt"), &out)?;
+    Ok(out)
+}
+
+pub fn main_entry_fig8(quick: bool, seed: u64) -> anyhow::Result<String> {
+    let n = if quick { 512 } else { 2048 };
+    let rows = run_fig8(n, seed);
+    let mut csv = CsvWriter::create(
+        super::results_dir().join("fig8_gaussian_fits.csv"),
+        &["dim", "mean", "std", "fit_err"],
+    )?;
+    let mut max_err = 0.0f64;
+    for r in &rows {
+        csv.row_f64(&[r.dim as f64, r.mean, r.std, r.fit_err])?;
+        max_err = max_err.max(r.fit_err);
+    }
+    Ok(format!(
+        "Figure 8 — {} dims, max quartile CDF deviation from Gaussian fit: {:.4}\n",
+        rows.len(),
+        max_err
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_claims_hold() {
+        let s = run_fig3(192, 5);
+        assert!(s.intra_group_corr > s.inter_group_corr, "{s:?}",);
+        assert!(s.intra_group_corr > 0.5);
+    }
+
+    #[test]
+    fn fig7_feature_averaging_destroys_slash() {
+        let rows = run_fig7(128, 3);
+        let by_name: std::collections::BTreeMap<&str, f64> =
+            rows.iter().map(|r| (r.config, r.corr_with_original)).collect();
+        assert!(by_name["seq-dim avg"] > by_name["feature-dim avg"],
+            "seq {} vs feat {}", by_name["seq-dim avg"], by_name["feature-dim avg"]);
+    }
+
+    #[test]
+    fn fig8_columns_are_gaussian() {
+        let rows = run_fig8(1024, 1);
+        let worst = rows.iter().map(|r| r.fit_err).fold(0.0, f64::max);
+        assert!(worst < 0.11, "worst fit err {worst}");
+        // means vary across dims (heterogeneous statistics)
+        let means: Vec<f64> = rows.iter().map(|r| r.mean).collect();
+        let spread = means.iter().cloned().fold(f64::MIN, f64::max)
+            - means.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.5, "mean spread {spread}");
+    }
+
+    impl std::fmt::Debug for Fig3Stats {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(
+                f,
+                "intra {} inter {} prompt {} model {}",
+                self.intra_group_corr, self.inter_group_corr, self.cross_prompt_corr, self.cross_model_corr
+            )
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Figure 5: accuracy vs speedup Pareto frontier at 32k / 64k / 128k, all
+//! methods, sweeping each method's budget knob.
+
+use crate::evalsuite::{evaluate_methods, ruler};
+use crate::sparse_attn::cost::CostModel;
+use crate::util::csv::CsvWriter;
+use crate::util::table::{f, Table};
+
+use super::MethodSet;
+
+pub struct Point {
+    pub n: usize,
+    pub method: &'static str,
+    pub budget: f32,
+    pub score: f32,
+    pub speedup: f64,
+}
+
+pub fn run(lengths: &[usize], reps: usize, seed: u64) -> Vec<Point> {
+    let synth = crate::synth::qwen_sim();
+    let cost = CostModel::default_calibration();
+    let budgets = [0.15f32, 0.3, 0.5, 0.8];
+    let mut points = Vec::new();
+    for &n in lengths {
+        let set = MethodSet::for_family(&synth, n);
+        let names = ["FlashAttn", "StrLLM", "FlexPre", "SeerAttn", "VSPrefill"];
+        let methods = set.as_dyn();
+        let instances = ruler::instances(n, reps, seed);
+        for (mi, m) in methods.iter().enumerate() {
+            let sweep: &[f32] = if mi == 0 { &[1.0] } else { &budgets };
+            for &b in sweep {
+                let r = evaluate_methods(&[*m], &instances, &synth, b);
+                let head = crate::evalsuite::task_head(&instances[0], &synth);
+                let spec = m.predict(&head, b);
+                let c = cost.cost_of(&spec, *m, n, synth.head_dim);
+                points.push(Point {
+                    n,
+                    method: names[mi],
+                    budget: b,
+                    score: r[0].0,
+                    speedup: c.speedup_vs_dense,
+                });
+            }
+        }
+    }
+    points
+}
+
+pub fn render(points: &[Point]) -> String {
+    let mut t = Table::new(
+        "Figure 5 — accuracy vs speedup Pareto sweep",
+        &["n", "Method", "Budget", "Score", "Speedup"],
+    );
+    for p in points {
+        t.row(vec![
+            format!("{}k", p.n / 1024),
+            p.method.to_string(),
+            f(p.budget as f64, 2),
+            f(p.score as f64, 2),
+            format!("{:.2}x", p.speedup),
+        ]);
+    }
+    t.to_markdown()
+}
+
+pub fn main_entry(quick: bool, seed: u64) -> anyhow::Result<String> {
+    let lengths: Vec<usize> = if quick {
+        vec![4096, 8192, 16384]
+    } else {
+        vec![32768, 65536, 131072]
+    };
+    let points = run(&lengths, if quick { 1 } else { 2 }, seed);
+    let md = render(&points);
+    std::fs::write(super::results_dir().join("fig5_pareto.md"), &md)?;
+    let mut csv = CsvWriter::create(
+        super::results_dir().join("fig5_pareto.csv"),
+        &["n", "method", "budget", "score", "speedup"],
+    )?;
+    for p in &points {
+        csv.row(&[
+            p.n.to_string(),
+            p.method.to_string(),
+            format!("{}", p.budget),
+            format!("{}", p.score),
+            format!("{}", p.speedup),
+        ])?;
+    }
+    Ok(md)
+}

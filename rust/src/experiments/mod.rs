@@ -1,0 +1,119 @@
+//! Experiment harness: one module per table/figure of the paper.
+//!
+//! Every regenerator prints the paper's rows as a markdown table (and dumps
+//! CSV series for the figures into `results/`), using deterministic seeds so
+//! EXPERIMENTS.md is reproducible with `vsprefill exp <name>`.
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+pub mod table4;
+pub mod table5;
+pub mod ttft;
+
+use std::sync::OnceLock;
+
+use crate::baselines::{
+    FlexPrefill, FullAttention, SeerAttention, SparsePredictor, StreamingLlm,
+};
+use crate::indexer::train::{distill, TrainConfig};
+use crate::indexer::Indexer;
+use crate::sparse_attn::VsPrefill;
+use crate::synth::SynthConfig;
+
+/// Where result artifacts (markdown/CSV) land.
+pub fn results_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// The simulated model families of Tables 1-2.
+pub fn model_families() -> Vec<(&'static str, SynthConfig)> {
+    vec![
+        ("Qwen3-4B-sim", crate::synth::qwen_sim()),
+        ("LLaMA-3.1-8B-sim", crate::synth::llama_sim()),
+    ]
+}
+
+/// Distill the experiment indexer once per process (shared across tables).
+pub fn experiment_indexer(synth: &SynthConfig) -> Indexer {
+    static QWEN: OnceLock<Indexer> = OnceLock::new();
+    static LLAMA: OnceLock<Indexer> = OnceLock::new();
+    let cell = if synth.rope_base > 100000.0 { &LLAMA } else { &QWEN };
+    cell.get_or_init(|| {
+        let tc = TrainConfig {
+            steps: 300,
+            batch: 4,
+            seq_len: 192,
+            hidden_base: 64,
+            synth: synth.clone(),
+            ..Default::default()
+        };
+        distill(&tc).0
+    })
+    .clone()
+}
+
+/// The five methods of Tables 1-2 at their paper operating points.
+/// StreamingLLM uses the paper's absolute 128-sink / 2048-window config.
+pub struct MethodSet {
+    pub full: FullAttention,
+    pub streaming: StreamingLlm,
+    pub flex: FlexPrefill,
+    pub seer: SeerAttention,
+    pub vsp: VsPrefill,
+}
+
+impl MethodSet {
+    pub fn for_family(synth: &SynthConfig, n: usize) -> MethodSet {
+        MethodSet {
+            full: FullAttention,
+            streaming: StreamingLlm { sinks: 128.min(n / 8).max(2), window: 2048.min(n / 2).max(8) },
+            flex: FlexPrefill::paper_config(n),
+            seer: SeerAttention::distilled(64.min(n / 4).max(8), synth, 11, 3),
+            vsp: VsPrefill::new(experiment_indexer(synth)),
+        }
+    }
+
+    pub fn as_dyn(&self) -> Vec<&dyn SparsePredictor> {
+        vec![&self.full, &self.streaming, &self.flex, &self.seer, &self.vsp]
+    }
+
+    /// Per-method budget knobs reproducing the paper's operating points
+    /// (SeerAttention runs accurate-but-dense — its limitation is prediction
+    /// overhead, not mask quality).
+    pub fn budgets() -> [f32; 5] {
+        // full, streaming, flex, seer, vsp
+        [1.0, 0.5, 0.5, 0.5, 0.5]
+    }
+}
+
+/// Shared quick/full switch: quick mode shrinks lengths and reps so the
+/// whole suite runs in CI time; full mode uses the paper's axes.
+#[derive(Clone, Copy, Debug)]
+pub struct RunScale {
+    pub quick: bool,
+}
+
+impl RunScale {
+    pub fn lengths(&self) -> Vec<usize> {
+        if self.quick {
+            crate::evalsuite::ruler::QUICK_LENGTHS.to_vec()
+        } else {
+            crate::evalsuite::ruler::PAPER_LENGTHS.to_vec()
+        }
+    }
+
+    pub fn reps(&self) -> usize {
+        if self.quick {
+            1
+        } else {
+            2
+        }
+    }
+}

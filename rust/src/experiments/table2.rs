@@ -1,0 +1,73 @@
+//! Table 2: LongBench 13-task scores for both model families and all five
+//! methods.
+
+use crate::evalsuite::longbench::{family_instances, FAMILIES};
+use crate::evalsuite::evaluate_methods;
+use crate::util::table::{f, Table};
+
+use super::{model_families, MethodSet, RunScale};
+
+pub struct Row {
+    pub model: String,
+    pub method: &'static str,
+    pub per_task: Vec<f32>,
+    pub avg: f32,
+}
+
+pub fn run(scale: RunScale, seed: u64) -> Vec<Row> {
+    let lengths: Vec<usize> = if scale.quick {
+        vec![1024, 2048]
+    } else {
+        vec![2048, 4096, 8192, 16384]
+    };
+    let reps = if scale.quick { 2 } else { 4 };
+    let mut rows = Vec::new();
+    for (fi, (model_name, synth)) in model_families().into_iter().enumerate() {
+        let names = ["FlashAttn", "StrLLM", "FlexPre", "SeerAttn", "VSPrefill"];
+        let mut per_task = vec![Vec::new(); 5];
+        let n_ref = *lengths.last().unwrap();
+        let set = MethodSet::for_family(&synth, n_ref);
+        let methods = set.as_dyn();
+        let budgets = MethodSet::budgets();
+        for fam in FAMILIES {
+            let base = if fi == 0 { fam.base_qwen } else { fam.base_llama };
+            let instances = family_instances(&fam, base, reps, seed, &lengths);
+            for (mi, m) in methods.iter().enumerate() {
+                let r = evaluate_methods(&[*m], &instances, &synth, budgets[mi]);
+                per_task[mi].push(r[0].0);
+            }
+        }
+        for mi in 0..5 {
+            let avg = per_task[mi].iter().sum::<f32>() / per_task[mi].len() as f32;
+            rows.push(Row {
+                model: model_name.to_string(),
+                method: names[mi],
+                per_task: per_task[mi].clone(),
+                avg,
+            });
+        }
+    }
+    rows
+}
+
+pub fn render(rows: &[Row]) -> String {
+    let mut header: Vec<String> = vec!["Model".into(), "Method".into()];
+    header.extend(FAMILIES.iter().map(|f| f.name.to_string()));
+    header.push("Avg".into());
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 2 — LongBench per-task scores", &hdr);
+    for r in rows {
+        let mut cells = vec![r.model.clone(), r.method.to_string()];
+        cells.extend(r.per_task.iter().map(|s| f(*s as f64, 2)));
+        cells.push(f(r.avg as f64, 2));
+        t.row(cells);
+    }
+    t.to_markdown()
+}
+
+pub fn main_entry(quick: bool, seed: u64) -> anyhow::Result<String> {
+    let rows = run(RunScale { quick }, seed);
+    let md = render(&rows);
+    std::fs::write(super::results_dir().join("table2_longbench.md"), &md)?;
+    Ok(md)
+}

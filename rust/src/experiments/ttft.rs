@@ -1,0 +1,20 @@
+//! §2.1 reproduction: attention's share of TTFT vs context length
+//! (the paper: 89.51% at 256k, 98.56% at 1M on Qwen3-4B/H20).
+
+use crate::sparse_attn::cost::CostModel;
+use crate::util::table::{f, Table};
+
+pub fn main_entry(_quick: bool, _seed: u64) -> anyhow::Result<String> {
+    let cm = CostModel::default_calibration();
+    let mut t = Table::new(
+        "§2.1 — attention share of prefill TTFT (cost model, d_model=2560)",
+        &["Context", "Attention share (%)"],
+    );
+    for &n in &[4096usize, 16384, 65536, 262144, 1048576] {
+        let (a, total) = cm.ttft_split(n, 2560);
+        t.row(vec![format!("{}k", n / 1024), f(100.0 * a / total, 2)]);
+    }
+    let md = t.to_markdown();
+    std::fs::write(super::results_dir().join("ttft_split.md"), &md)?;
+    Ok(md)
+}

@@ -1,0 +1,140 @@
+//! Distillation losses (Table 4 ablation) with analytic gradients.
+//!
+//! Each loss maps a predicted distribution `p` (post-softmax) and target `t`
+//! to (value, dL/dp).  `softmax_backward` then pulls dL/dp through the
+//! softmax Jacobian to logit space: dL/dl_j = p_j (g_j - sum_i g_i p_i).
+
+pub const EPS: f32 = 1e-9;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Loss {
+    /// Eq. 17: D_KL(pred ‖ target) — the paper's pick.
+    Kl,
+    Mse,
+    Msle,
+    Cosine,
+}
+
+impl Loss {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::Kl => "KL Divergence",
+            Loss::Mse => "MSE",
+            Loss::Msle => "MSLE",
+            Loss::Cosine => "Cosine Similarity",
+        }
+    }
+
+    pub fn all() -> [Loss; 4] {
+        [Loss::Kl, Loss::Mse, Loss::Msle, Loss::Cosine]
+    }
+
+    /// (value, dL/dp).
+    pub fn value_grad(&self, p: &[f32], t: &[f32]) -> (f32, Vec<f32>) {
+        let n = p.len();
+        match self {
+            Loss::Kl => {
+                let mut val = 0.0;
+                let mut g = vec![0.0; n];
+                for i in 0..n {
+                    let lp = (p[i] + EPS).ln();
+                    let lt = (t[i] + EPS).ln();
+                    val += p[i] * (lp - lt);
+                    g[i] = lp - lt + p[i] / (p[i] + EPS);
+                }
+                (val, g)
+            }
+            Loss::Mse => {
+                // scaled by n to sit in the same magnitude range as KL
+                let s = n as f32;
+                let mut val = 0.0;
+                let mut g = vec![0.0; n];
+                for i in 0..n {
+                    let d = p[i] - t[i];
+                    val += d * d;
+                    g[i] = 2.0 * s * d;
+                }
+                (val * s, g)
+            }
+            Loss::Msle => {
+                let s = n as f32;
+                let mut val = 0.0;
+                let mut g = vec![0.0; n];
+                for i in 0..n {
+                    let d = (1.0 + s * p[i]).ln() - (1.0 + s * t[i]).ln();
+                    val += d * d;
+                    g[i] = 2.0 * d * s / (1.0 + s * p[i]);
+                }
+                (val, g)
+            }
+            Loss::Cosine => {
+                let pt: f32 = p.iter().zip(t).map(|(a, b)| a * b).sum();
+                let pp: f32 = p.iter().map(|a| a * a).sum::<f32>().sqrt() + EPS;
+                let tt: f32 = t.iter().map(|a| a * a).sum::<f32>().sqrt() + EPS;
+                let cos = pt / (pp * tt);
+                let g: Vec<f32> = (0..n)
+                    .map(|i| -(t[i] / (pp * tt)) + cos * p[i] / (pp * pp))
+                    .collect();
+                (1.0 - cos, g)
+            }
+        }
+    }
+}
+
+/// Pull dL/dp through the softmax Jacobian: returns dL/dlogits.
+pub fn softmax_backward(p: &[f32], dldp: &[f32]) -> Vec<f32> {
+    let inner: f32 = p.iter().zip(dldp).map(|(pi, gi)| pi * gi).sum();
+    p.iter().zip(dldp).map(|(pi, gi)| pi * (gi - inner)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::softmax;
+    use crate::util::rng::Rng;
+
+    fn rand_dist(rng: &mut Rng, n: usize) -> Vec<f32> {
+        softmax(&(0..n).map(|_| rng.normal_f32()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn zero_at_match_positive_elsewhere() {
+        let mut rng = Rng::new(0);
+        let t = rand_dist(&mut rng, 16);
+        for loss in Loss::all() {
+            let (v, _) = loss.value_grad(&t, &t);
+            assert!(v.abs() < 1e-4, "{loss:?} {v}");
+            let mut u = t.clone();
+            u.rotate_right(3);
+            let (v2, _) = loss.value_grad(&u, &t);
+            assert!(v2 > 1e-5, "{loss:?} {v2}");
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences_through_softmax() {
+        let mut rng = Rng::new(1);
+        let logits: Vec<f32> = (0..12).map(|_| rng.normal_f32()).collect();
+        let t = rand_dist(&mut rng, 12);
+        for loss in Loss::all() {
+            let p = softmax(&logits);
+            let (_, dldp) = loss.value_grad(&p, &t);
+            let dldl = softmax_backward(&p, &dldp);
+            for j in 0..12 {
+                let eps = 1e-3;
+                let mut lp = logits.clone();
+                lp[j] += eps;
+                let mut lm = logits.clone();
+                lm[j] -= eps;
+                let (vp, _) = loss.value_grad(&softmax(&lp), &t);
+                let (vm, _) = loss.value_grad(&softmax(&lm), &t);
+                let fd = (vp - vm) / (2.0 * eps);
+                assert!(
+                    (dldl[j] - fd).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "{loss:?} j={j}: analytic {} vs fd {fd}",
+                    dldl[j]
+                );
+            }
+        }
+    }
+}

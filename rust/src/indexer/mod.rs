@@ -1,0 +1,198 @@
+//! VSIndexer (§4.1): the lightweight index-prediction module.
+//!
+//! `X = concat(K_rope, V)`; `Z = silu(X W_u + b_u)`;
+//! `A_v = softmax(Z w_v + b_v)` over positions;
+//! `A_s = softmax(reverse(Z w_s + b_s))` over offsets (the per-position
+//! slash score at position j lands at offset n-1-j — the distance from the
+//! final token; identical convention to `python/compile/indexer.py`).
+//!
+//! Weights can be distilled natively (`train`) or imported from the
+//! Python-side distillation (`load_json`), which is what the serving
+//! pipeline does at startup.
+
+pub mod features;
+pub mod loss;
+pub mod train;
+
+use crate::tensor::ops::{dot, silu, softmax_inplace};
+use crate::tensor::Mat;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+pub use features::FeatureSet;
+pub use loss::Loss;
+pub use train::{distill, TrainConfig};
+
+/// Two-layer shared-up-projection scorer (Eqs. 11-14).
+#[derive(Clone, Debug)]
+pub struct Indexer {
+    /// (in_dim, hidden)
+    pub wu: Mat,
+    pub bu: Vec<f32>,
+    /// (hidden,)
+    pub wv: Vec<f32>,
+    pub bv: f32,
+    pub ws: Vec<f32>,
+    pub bs: f32,
+}
+
+impl Indexer {
+    pub fn in_dim(&self) -> usize {
+        self.wu.rows
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.wu.cols
+    }
+
+    pub fn init(rng: &mut Rng, in_dim: usize, hidden: usize) -> Indexer {
+        let su = (2.0 / in_dim as f32).sqrt();
+        let sd = 1.0 / (hidden as f32).sqrt();
+        Indexer {
+            wu: Mat::from_fn(in_dim, hidden, |_, _| rng.normal_f32() * su),
+            bu: vec![0.0; hidden],
+            wv: (0..hidden).map(|_| rng.normal_f32() * sd).collect(),
+            bv: 0.0,
+            ws: (0..hidden).map(|_| rng.normal_f32() * sd).collect(),
+            bs: 0.0,
+        }
+    }
+
+    /// Number of trainable parameters (Table 5 normalizes this).
+    pub fn param_count(&self) -> usize {
+        self.wu.rows * self.wu.cols + self.bu.len() + self.wv.len() + self.ws.len() + 2
+    }
+
+    /// Hidden activations Z and pre-activations (kept for backprop).
+    pub fn hidden_fwd(&self, x: &Mat) -> (Mat, Mat) {
+        assert_eq!(x.cols, self.in_dim(), "indexer input dim mismatch");
+        let h = self.hidden();
+        let mut pre = Mat::zeros(x.rows, h);
+        for i in 0..x.rows {
+            let xrow = x.row(i);
+            let prow = pre.row_mut(i);
+            for (kk, &xv) in xrow.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = self.wu.row(kk);
+                for t in 0..h {
+                    prow[t] += xv * wrow[t];
+                }
+            }
+            for t in 0..h {
+                prow[t] += self.bu[t];
+            }
+        }
+        let z = Mat::from_fn(pre.rows, h, |i, t| silu(pre.at(i, t)));
+        (z, pre)
+    }
+
+    /// Predict (A_v, A_s) from an already-built feature matrix X (n, in_dim).
+    pub fn forward(&self, x: &Mat) -> (Vec<f32>, Vec<f32>) {
+        let (z, _) = self.hidden_fwd(x);
+        self.heads_from_z(&z)
+    }
+
+    /// Score heads given Z (shared with the trainer).
+    pub fn heads_from_z(&self, z: &Mat) -> (Vec<f32>, Vec<f32>) {
+        let n = z.rows;
+        let mut av: Vec<f32> = (0..n).map(|i| dot(z.row(i), &self.wv) + self.bv).collect();
+        let mut as_pos: Vec<f32> = (0..n).map(|i| dot(z.row(i), &self.ws) + self.bs).collect();
+        softmax_inplace(&mut av);
+        as_pos.reverse(); // position n-1-o -> offset o
+        softmax_inplace(&mut as_pos);
+        (av, as_pos)
+    }
+
+    /// Predict from a (K_rope, V) pair — the serving-path entry point.
+    pub fn predict_kv(&self, k: &Mat, v: &Mat) -> (Vec<f32>, Vec<f32>) {
+        self.forward(&k.hcat(v))
+    }
+
+    /// Import weights exported by `python/compile/aot.py`.
+    pub fn load_json(text: &str) -> anyhow::Result<Indexer> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let w = root.req("weights")?;
+        let get = |name: &str| -> anyhow::Result<(Vec<usize>, Vec<f32>)> {
+            let entry = w.req(name)?;
+            Ok((entry.req("shape")?.as_usize_vec()?, entry.req("data")?.as_f32_vec()?))
+        };
+        let (su, du) = get("wu")?;
+        anyhow::ensure!(su.len() == 2, "wu must be 2-d");
+        let (_, bu) = get("bu")?;
+        let (_, wv) = get("wv")?;
+        let (_, bv) = get("bv")?;
+        let (_, ws) = get("ws")?;
+        let (_, bs) = get("bs")?;
+        Ok(Indexer {
+            wu: Mat::from_vec(su[0], su[1], du),
+            bu,
+            wv,
+            bv: bv[0],
+            ws,
+            bs: bs[0],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_outputs_distributions() {
+        let mut rng = Rng::new(0);
+        let ix = Indexer::init(&mut rng, 64, 16);
+        let x = Mat::from_fn(32, 64, |_, _| rng.normal_f32());
+        let (av, as_) = ix.forward(&x);
+        assert_eq!(av.len(), 32);
+        let (sv, ss): (f32, f32) = (av.iter().sum(), as_.iter().sum());
+        assert!((sv - 1.0).abs() < 1e-5 && (ss - 1.0).abs() < 1e-5);
+        assert!(av.iter().chain(&as_).all(|x| *x >= 0.0 && x.is_finite()));
+    }
+
+    #[test]
+    fn slash_reversal_convention() {
+        // Make ws pick out a single hidden unit driven by one input dim;
+        // large input at position p must surface at offset n-1-p.
+        let mut rng = Rng::new(1);
+        let mut ix = Indexer::init(&mut rng, 8, 4);
+        let mut x = Mat::zeros(16, 8);
+        *x.at_mut(3, 0) = 10.0; // position 3 strongly activated
+        ix.ws = vec![5.0; 4];
+        let (_, as_) = ix.forward(&x);
+        let peak = crate::tensor::ops::argsort_desc(&as_)[0];
+        assert_eq!(peak, 16 - 1 - 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let text = r#"{"weights":{
+            "wu":{"shape":[4,2],"data":[0.1,0.2,0.3,0.4,0.5,0.6,0.7,0.8]},
+            "bu":{"shape":[2],"data":[0,0]},
+            "wv":{"shape":[2,1],"data":[1,2]},
+            "bv":{"shape":[1],"data":[0.5]},
+            "ws":{"shape":[2,1],"data":[3,4]},
+            "bs":{"shape":[1],"data":[0]}}}"#;
+        let ix = Indexer::load_json(text).unwrap();
+        assert_eq!(ix.in_dim(), 4);
+        assert_eq!(ix.hidden(), 2);
+        assert_eq!(ix.bv, 0.5);
+        let x = Mat::from_fn(6, 4, |i, j| (i + j) as f32 * 0.1);
+        let (av, _) = ix.forward(&x);
+        assert!((av.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn predict_kv_concatenates() {
+        let mut rng = Rng::new(2);
+        let ix = Indexer::init(&mut rng, 16, 8);
+        let k = Mat::from_fn(10, 8, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(10, 8, |_, _| rng.normal_f32());
+        let (a1, s1) = ix.predict_kv(&k, &v);
+        let (a2, s2) = ix.forward(&k.hcat(&v));
+        assert_eq!(a1, a2);
+        assert_eq!(s1, s2);
+    }
+}

@@ -1,0 +1,259 @@
+//! Native distillation trainer (§4.2) — manual backprop + Adam.
+//!
+//! Used by the Table-4 (loss functions) and Table-5 (input features)
+//! ablations so the whole experiment harness runs without Python.  The
+//! serving pipeline normally imports the Python-distilled weights instead.
+//!
+//! Backprop through: X -> [W_u, b_u] -> silu -> {[w_v, b_v], [w_s, b_s]}
+//! -> softmax (slash head reversed) -> loss.  The backbone is frozen by
+//! construction: gradients stop at X.
+
+use crate::attention::aggregate::vs_aggregate_qk;
+use crate::synth::{gen_head, SynthConfig};
+use crate::tensor::ops::{silu_grad};
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::features::FeatureSet;
+use super::loss::{softmax_backward, Loss};
+use super::Indexer;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub loss: Loss,
+    pub features: FeatureSet,
+    pub hidden_base: usize,
+    pub seed: u64,
+    pub synth: SynthConfig,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 250,
+            batch: 4,
+            seq_len: 192,
+            lr: 3e-3,
+            warmup: 20,
+            loss: Loss::Kl,
+            features: FeatureSet::KV,
+            hidden_base: 64,
+            seed: 0,
+            synth: SynthConfig::default(),
+        }
+    }
+}
+
+struct Grads {
+    wu: Mat,
+    bu: Vec<f32>,
+    wv: Vec<f32>,
+    bv: f32,
+    ws: Vec<f32>,
+    bs: f32,
+}
+
+impl Grads {
+    fn zeros(ix: &Indexer) -> Grads {
+        Grads {
+            wu: Mat::zeros(ix.wu.rows, ix.wu.cols),
+            bu: vec![0.0; ix.bu.len()],
+            wv: vec![0.0; ix.wv.len()],
+            bv: 0.0,
+            ws: vec![0.0; ix.ws.len()],
+            bs: 0.0,
+        }
+    }
+}
+
+/// One sample's loss + gradient accumulation.  Returns the loss value.
+fn backward_sample(ix: &Indexer, x: &Mat, t_v: &[f32], t_s: &[f32], loss: Loss, g: &mut Grads) -> f32 {
+    let n = x.rows;
+    let h = ix.hidden();
+    let (z, pre) = ix.hidden_fwd(x);
+    let (p_v, p_s) = ix.heads_from_z(&z);
+
+    let (lv, gv) = loss.value_grad(&p_v, t_v);
+    let (ls, gs) = loss.value_grad(&p_s, t_s);
+    // dL/dlogits for each head.
+    let dlv = softmax_backward(&p_v, &gv); // (n,) aligned with positions
+    let dls_off = softmax_backward(&p_s, &gs); // (n,) aligned with offsets
+    // slash logits live at position n-1-o.
+    let mut dls = vec![0.0f32; n];
+    for o in 0..n {
+        dls[n - 1 - o] = dls_off[o];
+    }
+
+    // Head-weight grads and dL/dZ.
+    let mut dz = Mat::zeros(n, h);
+    for i in 0..n {
+        let zrow = z.row(i);
+        let dzrow = dz.row_mut(i);
+        let (a, b) = (dlv[i], dls[i]);
+        for t in 0..h {
+            g.wv[t] += a * zrow[t];
+            g.ws[t] += b * zrow[t];
+            dzrow[t] = a * ix.wv[t] + b * ix.ws[t];
+        }
+        g.bv += a;
+        g.bs += b;
+    }
+
+    // Through SiLU and the up projection.
+    for i in 0..n {
+        let xrow = x.row(i);
+        let prow = pre.row(i);
+        let dzrow = dz.row(i);
+        for t in 0..h {
+            let da = dzrow[t] * silu_grad(prow[t]);
+            if da == 0.0 {
+                continue;
+            }
+            g.bu[t] += da;
+            for (kk, &xv) in xrow.iter().enumerate() {
+                *g.wu.at_mut(kk, t) += da * xv;
+            }
+        }
+    }
+    lv + ls
+}
+
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: usize,
+}
+
+impl Adam {
+    fn new(n: usize) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n], t: 0 }
+    }
+
+    fn step(&mut self, params: &mut [&mut f32], grads: &[f32], lr: f32) {
+        self.t += 1;
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let c1 = 1.0 - b1.powi(self.t as i32);
+        let c2 = 1.0 - b2.powi(self.t as i32);
+        for (i, p) in params.iter_mut().enumerate() {
+            self.m[i] = b1 * self.m[i] + (1.0 - b1) * grads[i];
+            self.v[i] = b2 * self.v[i] + (1.0 - b2) * grads[i] * grads[i];
+            **p -= lr * (self.m[i] / c1) / ((self.v[i] / c2).sqrt() + eps);
+        }
+    }
+}
+
+fn lr_at(step: usize, tc: &TrainConfig) -> f32 {
+    if step < tc.warmup {
+        return tc.lr * (step + 1) as f32 / tc.warmup as f32;
+    }
+    let t = (step - tc.warmup) as f32 / (tc.steps - tc.warmup).max(1) as f32;
+    tc.lr * 0.5 * (1.0 + (std::f32::consts::PI * t).cos())
+}
+
+/// Distill an indexer against ground-truth VS aggregates of synthesized
+/// heads.  Returns (indexer, per-step losses).
+pub fn distill(tc: &TrainConfig) -> (Indexer, Vec<f32>) {
+    let mut rng = Rng::new(tc.seed);
+    let d = tc.synth.head_dim;
+    let in_dim = tc.features.in_dim(d);
+    let hidden = tc.features.hidden_for(tc.hidden_base);
+    let mut ix = Indexer::init(&mut rng, in_dim, hidden);
+    let n_params = ix.param_count();
+    let mut adam = Adam::new(n_params);
+    let mut history = Vec::with_capacity(tc.steps);
+
+    for step in 0..tc.steps {
+        let mut g = Grads::zeros(&ix);
+        let mut loss_sum = 0.0;
+        for _ in 0..tc.batch {
+            let head_seed = rng.below(8) as u64;
+            let head = gen_head(&mut rng, tc.seq_len, &tc.synth, head_seed);
+            let (t_v, t_s) = vs_aggregate_qk(&head.q, &head.k);
+            let x = tc.features.build(&head);
+            loss_sum += backward_sample(&ix, &x, &t_v, &t_s, tc.loss, &mut g);
+        }
+        let scale = 1.0 / tc.batch as f32;
+        // Flatten grads in a fixed order matching the params below.
+        let mut flat_g: Vec<f32> = Vec::with_capacity(n_params);
+        flat_g.extend(g.wu.data.iter().map(|x| x * scale));
+        flat_g.extend(g.bu.iter().map(|x| x * scale));
+        flat_g.extend(g.wv.iter().map(|x| x * scale));
+        flat_g.push(g.bv * scale);
+        flat_g.extend(g.ws.iter().map(|x| x * scale));
+        flat_g.push(g.bs * scale);
+
+        let lr = lr_at(step, tc);
+        {
+            let mut params: Vec<&mut f32> = Vec::with_capacity(n_params);
+            params.extend(ix.wu.data.iter_mut());
+            params.extend(ix.bu.iter_mut());
+            params.extend(ix.wv.iter_mut());
+            params.push(&mut ix.bv);
+            params.extend(ix.ws.iter_mut());
+            params.push(&mut ix.bs);
+            adam.step(&mut params, &flat_g, lr);
+        }
+        history.push(loss_sum * scale);
+    }
+    (ix, history)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::argsort_desc;
+
+    fn quick_tc(loss: Loss) -> TrainConfig {
+        TrainConfig {
+            steps: 80,
+            batch: 2,
+            seq_len: 96,
+            loss,
+            hidden_base: 32,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn kl_distillation_converges() {
+        let (_, hist) = distill(&quick_tc(Loss::Kl));
+        let early: f32 = hist[..5].iter().sum::<f32>() / 5.0;
+        let late: f32 = hist[hist.len() - 5..].iter().sum::<f32>() / 5.0;
+        assert!(late < early * 0.6, "early {early} late {late}");
+    }
+
+    #[test]
+    fn trained_indexer_finds_heavy_hitters() {
+        let tc = quick_tc(Loss::Kl);
+        let (ix, _) = distill(&tc);
+        let mut rng = Rng::new(123);
+        let head = gen_head(&mut rng, 96, &tc.synth, 0);
+        let (av, _) = ix.forward(&tc.features.build(&head));
+        let top: Vec<usize> = argsort_desc(&av).into_iter().take(10).collect();
+        let hits = head.heavy.iter().filter(|p| top.contains(p)).count();
+        assert!(hits * 2 >= head.heavy.len(), "top {top:?} heavy {:?}", head.heavy);
+    }
+
+    #[test]
+    fn all_losses_trainable() {
+        for loss in Loss::all() {
+            let (_, hist) = distill(&TrainConfig { steps: 100, batch: 3, seq_len: 96, loss, hidden_base: 32, ..Default::default() });
+            assert!(hist.iter().all(|x| x.is_finite()), "{loss:?}");
+            let early: f32 = hist[..5].iter().sum::<f32>() / 5.0;
+            let late: f32 = hist[hist.len() - 5..].iter().sum::<f32>() / 5.0;
+            assert!(late < early, "{loss:?} did not improve: {early} -> {late}");
+        }
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let tc = TrainConfig::default();
+        assert!(lr_at(0, &tc) < lr_at(tc.warmup, &tc));
+        assert!(lr_at(tc.warmup, &tc) >= lr_at(tc.steps - 1, &tc));
+    }
+}

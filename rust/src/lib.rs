@@ -1,0 +1,29 @@
+//! # VSPrefill
+//!
+//! Reproduction of *VSPrefill: Vertical-Slash Sparse Attention with
+//! Lightweight Indexing for Long-Context Prefilling* as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): online
+//!   vertical/slash aggregation, fused sparse attention, flash baseline.
+//! * **L2** — JAX model + VSIndexer (`python/compile/`), AOT-lowered to HLO
+//!   text artifacts at build time.
+//! * **L3** — this crate: the serving coordinator that predicts, budgets,
+//!   merges and executes vertical-slash sparse prefill via PJRT, plus every
+//!   substrate (synthetic backbones, baselines, eval suites, experiment
+//!   harness) needed to regenerate the paper's tables and figures.
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for results.
+
+pub mod attention;
+pub mod baselines;
+pub mod coordinator;
+pub mod evalsuite;
+pub mod experiments;
+pub mod indexer;
+pub mod runtime;
+pub mod sparse;
+pub mod sparse_attn;
+pub mod synth;
+pub mod tensor;
+pub mod util;

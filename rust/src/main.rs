@@ -1,0 +1,165 @@
+//! VSPrefill CLI: serving, experiments, diagnostics.
+//!
+//! Subcommands:
+//!   serve    — start the TCP prefill service (native or PJRT backend)
+//!   bench    — closed-loop load test against an in-process coordinator
+//!   exp      — regenerate a paper table/figure (table1..5, fig2..8, ttft, all)
+//!   runtime  — smoke-check the PJRT artifact bundle
+//!   info     — print build/config information
+
+use vsprefill::coordinator::{
+    server::Server, AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest,
+};
+use vsprefill::experiments as exp;
+use vsprefill::runtime;
+use vsprefill::util::args::Args;
+
+const KNOWN: &[&str] = &[
+    "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "artifacts",
+    "config", "max-queue", "max-batch", "max-wait-ms", "kv-blocks",
+];
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(KNOWN)?;
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "serve" => serve(&args),
+        "bench" => bench(&args),
+        "exp" => experiment(&args),
+        "runtime" => runtime_smoke(&args),
+        "info" => {
+            println!("vsprefill {} — VSPrefill reproduction (rust+jax+pallas)", env!("CARGO_PKG_VERSION"));
+            println!("subcommands: serve | bench | exp <name> | runtime | info");
+            println!("exp names: table1 table2 table3 table4 table5 fig2 fig3 fig4 fig5 fig6 fig7 fig8 ttft all");
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand '{other}' (try: info)"),
+    }
+}
+
+fn coordinator_config(args: &Args) -> anyhow::Result<CoordinatorConfig> {
+    vsprefill::coordinator::config::load(args.str_opt("config"), args)
+}
+
+fn build_engine(args: &Args) -> anyhow::Result<PrefillEngine> {
+    let cfg = coordinator_config(args)?;
+    match args.str_or("backend", "native").as_str() {
+        "pjrt" => {
+            let dir = args.str_or("artifacts", "artifacts");
+            let rt = runtime::Engine::load(std::path::Path::new(&dir))?;
+            PrefillEngine::pjrt(cfg.engine, rt)
+        }
+        _ => Ok(PrefillEngine::native_quick(cfg.engine)),
+    }
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    let engine = build_engine(args)?;
+    let coordinator = std::sync::Arc::new(Coordinator::start(coordinator_config(args)?, engine));
+    let port = args.usize_or("port", 7791) as u16;
+    let server = Server::start(coordinator.clone(), port)?;
+    println!("vsprefill serving on {}", server.addr);
+    println!("protocol: one JSON per line, e.g. {{\"id\":1,\"n\":256,\"seed\":7,\"mode\":\"sparse\"}}");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn bench(args: &Args) -> anyhow::Result<()> {
+    let engine = build_engine(args)?;
+    let coordinator = Coordinator::start(coordinator_config(args)?, engine);
+    let requests = args.usize_or("requests", 64);
+    let n = args.usize_or("n", 256);
+    let mode = match args.str_or("mode", "sparse").as_str() {
+        "dense" => AttentionMode::Dense,
+        _ => AttentionMode::Sparse,
+    };
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let mut req = PrefillRequest::synthetic(i as u64, n, i as u64, mode);
+        req.budget = args.f64_or("budget", 0.5) as f32;
+        rxs.push(coordinator.submit(req).map_err(|_| anyhow::anyhow!("queue full"))?);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv()?.ok {
+            ok += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let snap = coordinator.shutdown();
+    println!(
+        "bench: {ok}/{requests} ok in {dt:.2}s  ({:.1} req/s, {:.1} tok/s)",
+        requests as f64 / dt,
+        (requests * n) as f64 / dt
+    );
+    println!(
+        "p50 prefill {:.0}us  p95 {:.0}us  mean queue {:.0}us  mean index {:.0}us  mean density {:.3}",
+        snap.p50_prefill_us, snap.p95_prefill_us, snap.mean_queue_us, snap.mean_index_us, snap.mean_density
+    );
+    Ok(())
+}
+
+fn experiment(args: &Args) -> anyhow::Result<()> {
+    let name = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let quick = args.flag("quick");
+    let seed = args.usize_or("seed", 42) as u64;
+    let run_one = |name: &str| -> anyhow::Result<()> {
+        let t0 = std::time::Instant::now();
+        let out = match name {
+            "table1" => exp::table1::main_entry(quick, seed)?,
+            "table2" => exp::table2::main_entry(quick, seed)?,
+            "table3" => exp::table3::main_entry(quick, seed)?,
+            "table4" => exp::table4::main_entry(quick, seed)?,
+            "table5" => exp::table5::main_entry(quick, seed)?,
+            "fig2" => exp::fig2::main_entry(quick, seed)?,
+            "fig3" => exp::fig3::main_entry_fig3(quick, seed)?,
+            "fig4" => exp::fig4::main_entry(quick, seed)?,
+            "fig5" => exp::fig5::main_entry(quick, seed)?,
+            "fig6" => exp::fig3::main_entry_fig6(quick, seed)?,
+            "fig7" => exp::fig3::main_entry_fig7(quick, seed)?,
+            "fig8" => exp::fig3::main_entry_fig8(quick, seed)?,
+            "ttft" => exp::ttft::main_entry(quick, seed)?,
+            other => anyhow::bail!("unknown experiment '{other}'"),
+        };
+        println!("{out}");
+        eprintln!("[exp {name}: {:.1}s]", t0.elapsed().as_secs_f64());
+        Ok(())
+    };
+    if name == "all" {
+        for n in [
+            "table1", "table2", "table3", "table4", "table5", "fig2", "fig3", "fig4", "fig5",
+            "fig6", "fig7", "fig8", "ttft",
+        ] {
+            run_one(n)?;
+        }
+        Ok(())
+    } else {
+        run_one(name)
+    }
+}
+
+fn runtime_smoke(args: &Args) -> anyhow::Result<()> {
+    use vsprefill::tensor::Mat;
+    use vsprefill::util::rng::Rng;
+    let dir = args.str_or("artifacts", "artifacts");
+    let rt = runtime::Engine::load(std::path::Path::new(&dir))?;
+    println!("loaded {} graphs from {dir}", rt.bundle.graphs.len());
+    let n = rt.bundle.buckets[0];
+    let d = rt.bundle.head_dim;
+    let mut rng = Rng::new(0);
+    let q = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+    let k = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+    let v = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+    let o1 = rt.flash_attention(n, &q, &k, &v)?;
+    let o2 = vsprefill::attention::flash::flash_attention(&q, &k, &v, 64, 64);
+    println!("flash_attn_{n}: PJRT vs native max err {:.2e}", o1.max_abs_diff(&o2));
+    let (av, asl) = rt.vs_aggregate(n, &q, &k)?;
+    let (av2, as2) = vsprefill::attention::aggregate::vs_aggregate_qk(&q, &k);
+    let err_v = av.iter().zip(&av2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    let err_s = asl.iter().zip(&as2).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("vs_aggregate_{n}: max err v {err_v:.2e} s {err_s:.2e}");
+    println!("runtime smoke OK");
+    Ok(())
+}

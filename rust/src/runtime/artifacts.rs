@@ -1,0 +1,180 @@
+//! Artifact bundle: manifest + HLO files + exported weights.
+//!
+//! `make artifacts` (python/compile/aot.py) writes:
+//!   manifest.json          — graph name -> {file, args[{shape,dtype}], caps?}
+//!   *.hlo.txt              — HLO text per graph (text, never serialized
+//!                            proto: xla_extension 0.5.1 rejects jax>=0.5's
+//!                            64-bit instruction ids)
+//!   indexer_weights.json   — distilled VSIndexer parameters
+//!   model_weights.json     — toy GQA backbone parameters
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<ArgSpec>,
+    /// (cap_v, cap_s) for sparse-attention graphs.
+    pub caps: Option<(usize, usize)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub rope_base: f64,
+}
+
+#[derive(Debug)]
+pub struct ArtifactBundle {
+    pub dir: PathBuf,
+    pub head_dim: usize,
+    pub buckets: Vec<usize>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+    pub model: ModelMeta,
+}
+
+impl ArtifactBundle {
+    /// Default location relative to the repo root (also checked from
+    /// target/ subdirectories so tests and benches find it).
+    pub fn default_dir() -> PathBuf {
+        for cand in ["artifacts", "../artifacts", "../../artifacts", "../../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.join("manifest.json").exists() {
+                return p;
+            }
+        }
+        PathBuf::from("artifacts")
+    }
+
+    pub fn available() -> bool {
+        Self::default_dir().join("manifest.json").exists()
+    }
+
+    pub fn load_default() -> anyhow::Result<ArtifactBundle> {
+        Self::load(&Self::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<ArtifactBundle> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .map_err(|e| anyhow::anyhow!("reading {manifest_path:?}: {e}; run `make artifacts`"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let head_dim = root.req("head_dim")?.as_usize().unwrap_or(32);
+        let buckets = root.req("buckets")?.as_usize_vec()?;
+        let m = root.req("model")?;
+        let model = ModelMeta {
+            vocab: m.req("vocab")?.as_usize().unwrap(),
+            d_model: m.req("d_model")?.as_usize().unwrap(),
+            n_heads: m.req("n_heads")?.as_usize().unwrap(),
+            n_kv_heads: m.req("n_kv_heads")?.as_usize().unwrap(),
+            head_dim: m.req("head_dim")?.as_usize().unwrap(),
+            n_layers: m.req("n_layers")?.as_usize().unwrap(),
+            rope_base: m.req("rope_base")?.as_f64().unwrap(),
+        };
+        let mut graphs = BTreeMap::new();
+        for (name, g) in root.req("graphs")?.as_obj().unwrap() {
+            let file = dir.join(g.req("file")?.as_str().unwrap());
+            anyhow::ensure!(file.exists(), "artifact file missing: {file:?}");
+            let args = g
+                .req("args")?
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|a| {
+                    Ok(ArgSpec {
+                        shape: a.req("shape")?.as_usize_vec()?,
+                        dtype: a.req("dtype")?.as_str().unwrap_or("float32").to_string(),
+                    })
+                })
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let caps = g.get("caps").map(|c| {
+                let v = c.as_usize_vec().unwrap();
+                (v[0], v[1])
+            });
+            graphs.insert(
+                name.clone(),
+                GraphSpec { name: name.clone(), file, args, caps },
+            );
+        }
+        Ok(ArtifactBundle { dir: dir.to_path_buf(), head_dim, buckets, graphs, model })
+    }
+
+    pub fn graph(&self, name: &str) -> anyhow::Result<&GraphSpec> {
+        self.graphs
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph '{name}' not in manifest"))
+    }
+
+    /// Smallest bucket >= n (requests are padded up to it).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets.iter().cloned().filter(|&b| b >= n).min()
+    }
+
+    /// Parse a weights JSON export ({name: {shape, data}}) into a map.
+    pub fn load_weights(&self, file: &str) -> anyhow::Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>> {
+        let text = std::fs::read_to_string(self.dir.join(file))?;
+        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let w = root.req("weights")?;
+        let mut out = BTreeMap::new();
+        for (name, entry) in w.as_obj().unwrap() {
+            out.insert(
+                name.clone(),
+                (entry.req("shape")?.as_usize_vec()?, entry.req("data")?.as_f32_vec()?),
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = ArtifactBundle {
+            dir: PathBuf::new(),
+            head_dim: 32,
+            buckets: vec![256, 512, 1024],
+            graphs: BTreeMap::new(),
+            model: ModelMeta {
+                vocab: 512, d_model: 128, n_heads: 4, n_kv_heads: 2,
+                head_dim: 32, n_layers: 2, rope_base: 1e4,
+            },
+        };
+        assert_eq!(b.bucket_for(100), Some(256));
+        assert_eq!(b.bucket_for(256), Some(256));
+        assert_eq!(b.bucket_for(600), Some(1024));
+        assert_eq!(b.bucket_for(2000), None);
+    }
+
+    #[test]
+    fn loads_real_bundle_when_present() {
+        if !ArtifactBundle::available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let b = ArtifactBundle::load_default().unwrap();
+        assert!(b.graphs.contains_key("sparse_attn_256"));
+        let g = b.graph("sparse_attn_256").unwrap();
+        assert!(g.caps.is_some());
+        assert_eq!(g.args[0].shape, vec![256, b.head_dim]);
+        let w = b.load_weights("indexer_weights.json").unwrap();
+        assert_eq!(w["wu"].0, vec![2 * b.head_dim, 64]);
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT execution engine: compiles HLO-text artifacts once at startup and
+//! exposes typed entry points for the coordinator's hot path.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `XlaComputation::from_proto` ->
+//! `client.compile` -> `executable.execute`.  All graphs are lowered with
+//! `return_tuple=True`, so outputs are unpacked with `to_tuple`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::sparse::mask::to_padded;
+use crate::sparse::VsIndices;
+use crate::tensor::Mat;
+
+use super::artifacts::ArtifactBundle;
+
+/// A compiled graph plus its static argument shapes.
+pub struct CompiledGraph {
+    pub name: String,
+    pub exe: xla::PjRtLoadedExecutable,
+    pub caps: Option<(usize, usize)>,
+}
+
+/// The process-wide PJRT engine.  One compiled executable per graph.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    pub bundle: ArtifactBundle,
+    compiled: BTreeMap<String, CompiledGraph>,
+}
+
+fn lit_mat(m: &Mat) -> anyhow::Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+fn lit_i32(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn mat_from(lit: &xla::Literal, rows: usize, cols: usize) -> anyhow::Result<Mat> {
+    let data = lit.to_vec::<f32>()?;
+    anyhow::ensure!(data.len() == rows * cols, "literal size mismatch");
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+impl Engine {
+    /// Load the default artifact bundle and compile every graph.
+    pub fn load_default() -> anyhow::Result<Engine> {
+        Self::load(&ArtifactBundle::default_dir())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Engine> {
+        let bundle = ArtifactBundle::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = BTreeMap::new();
+        for (name, spec) in &bundle.graphs {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file
+                    .to_str()
+                    .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            compiled.insert(
+                name.clone(),
+                CompiledGraph { name: name.clone(), exe, caps: spec.caps },
+            );
+        }
+        Ok(Engine { client, bundle, compiled })
+    }
+
+    /// Compile only the graphs whose name passes `filter` (faster startup
+    /// for tools that need a single bucket).
+    pub fn load_filtered(dir: &Path, filter: impl Fn(&str) -> bool) -> anyhow::Result<Engine> {
+        let mut bundle = ArtifactBundle::load(dir)?;
+        bundle.graphs.retain(|name, _| filter(name));
+        let client = xla::PjRtClient::cpu()?;
+        let mut compiled = BTreeMap::new();
+        for (name, spec) in &bundle.graphs {
+            let proto = xla::HloModuleProto::from_text_file(spec.file.to_str().unwrap())?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            compiled.insert(name.clone(), CompiledGraph { name: name.clone(), exe, caps: spec.caps });
+        }
+        Ok(Engine { client, bundle, compiled })
+    }
+
+    pub fn graph(&self, name: &str) -> anyhow::Result<&CompiledGraph> {
+        self.compiled
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("graph '{name}' not compiled"))
+    }
+
+    pub fn has_graph(&self, name: &str) -> bool {
+        self.compiled.contains_key(name)
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let g = self.graph(name)?;
+        let result = g.exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Exact attention via the AOT flash kernel: (q, k, v) (n, d) -> (n, d).
+    pub fn flash_attention(&self, n: usize, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat> {
+        let outs = self.run(
+            &format!("flash_attn_{n}"),
+            &[lit_mat(q)?, lit_mat(k)?, lit_mat(v)?],
+        )?;
+        mat_from(&outs[0], n, q.cols)
+    }
+
+    /// Ground-truth online aggregation: (q, k) -> (A_v, A_s).
+    pub fn vs_aggregate(&self, n: usize, q: &Mat, k: &Mat) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let outs = self.run(&format!("vs_aggregate_{n}"), &[lit_mat(q)?, lit_mat(k)?])?;
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    /// VSIndexer forward through the AOT graph with weights as arguments.
+    pub fn indexer_forward(
+        &self,
+        n: usize,
+        k: &Mat,
+        v: &Mat,
+        w: &BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+    ) -> anyhow::Result<(Vec<f32>, Vec<f32>)> {
+        let arg = |name: &str| -> anyhow::Result<xla::Literal> {
+            let (shape, data) = w
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("missing weight {name}"))?;
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            Ok(xla::Literal::vec1(data).reshape(&dims)?)
+        };
+        let outs = self.run(
+            &format!("indexer_{n}"),
+            &[
+                lit_mat(k)?, lit_mat(v)?,
+                arg("wu")?, arg("bu")?, arg("wv")?, arg("bv")?, arg("ws")?, arg("bs")?,
+            ],
+        )?;
+        Ok((outs[0].to_vec::<f32>()?, outs[1].to_vec::<f32>()?))
+    }
+
+    /// Fused vertical-slash sparse attention via the AOT kernel.
+    pub fn sparse_attention(
+        &self,
+        n: usize,
+        q: &Mat,
+        k: &Mat,
+        v: &Mat,
+        idx: &VsIndices,
+    ) -> anyhow::Result<Mat> {
+        let name = format!("sparse_attn_{n}");
+        let (cap_v, cap_s) = self
+            .graph(&name)?
+            .caps
+            .ok_or_else(|| anyhow::anyhow!("sparse graph missing caps"))?;
+        let (vi, si, lens) = to_padded(idx, n, cap_v, cap_s);
+        let outs = self.run(
+            &name,
+            &[
+                lit_mat(q)?, lit_mat(k)?, lit_mat(v)?,
+                lit_i32(&vi), lit_i32(&si), lit_i32(&lens),
+            ],
+        )?;
+        mat_from(&outs[0], n, q.cols)
+    }
+
+    /// Whole-model dense prefill: tokens -> (logits, per-layer K, per-layer V).
+    pub fn model_prefill(
+        &self,
+        n: usize,
+        tokens: &[i32],
+        weights: &[(String, Vec<usize>, Vec<f32>)],
+    ) -> anyhow::Result<(Mat, Vec<Mat>, Vec<Mat>)> {
+        anyhow::ensure!(tokens.len() == n, "token length mismatch");
+        let m = &self.bundle.model;
+        let mut args = vec![lit_i32(tokens)];
+        for (_, shape, data) in weights {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            args.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let outs = self.run(&format!("model_prefill_{n}"), &args)?;
+        let logits = mat_from(&outs[0], n, m.vocab)?;
+        let ks_flat = outs[1].to_vec::<f32>()?;
+        let vs_flat = outs[2].to_vec::<f32>()?;
+        let per = m.n_kv_heads * n * m.head_dim;
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for l in 0..m.n_layers {
+            // stacked as (layers, kv_heads, n, d); flatten kv heads into rows
+            ks.push(Mat::from_vec(m.n_kv_heads * n, m.head_dim, ks_flat[l * per..(l + 1) * per].to_vec()));
+            vs.push(Mat::from_vec(m.n_kv_heads * n, m.head_dim, vs_flat[l * per..(l + 1) * per].to_vec()));
+        }
+        Ok((logits, ks, vs))
+    }
+
+    /// Whole-model sparse prefill given per-(layer, group) indices.
+    pub fn model_prefill_sparse(
+        &self,
+        n: usize,
+        tokens: &[i32],
+        indices: &[Vec<VsIndices>], // [layer][kv_head]
+        weights: &[(String, Vec<usize>, Vec<f32>)],
+    ) -> anyhow::Result<Mat> {
+        let name = format!("model_prefill_sparse_{n}");
+        let m = &self.bundle.model;
+        let (cap_v, cap_s) = self.graph(&name)?.caps.unwrap();
+        let mut vi_all: Vec<i32> = Vec::new();
+        let mut si_all: Vec<i32> = Vec::new();
+        let mut lens_all: Vec<i32> = Vec::new();
+        for l in 0..m.n_layers {
+            for h in 0..m.n_kv_heads {
+                let (vi, si, lens) = to_padded(&indices[l][h], n, cap_v, cap_s);
+                vi_all.extend(vi);
+                si_all.extend(si);
+                lens_all.extend(lens);
+            }
+        }
+        let dims_v = [m.n_layers as i64, m.n_kv_heads as i64, cap_v as i64];
+        let dims_s = [m.n_layers as i64, m.n_kv_heads as i64, cap_s as i64];
+        let dims_l = [m.n_layers as i64, m.n_kv_heads as i64, 2];
+        let mut args = vec![
+            lit_i32(tokens),
+            xla::Literal::vec1(&vi_all).reshape(&dims_v)?,
+            xla::Literal::vec1(&si_all).reshape(&dims_s)?,
+            xla::Literal::vec1(&lens_all).reshape(&dims_l)?,
+        ];
+        for (_, shape, data) in weights {
+            let dims: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+            args.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let outs = self.run(&name, &args)?;
+        mat_from(&outs[0], n, m.vocab)
+    }
+
+    /// Model weights in the argument order the prefill graphs expect.
+    pub fn model_weight_args(&self) -> anyhow::Result<Vec<(String, Vec<usize>, Vec<f32>)>> {
+        let text = std::fs::read_to_string(self.bundle.dir.join("model_weights.json"))?;
+        let root = crate::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let names: Vec<String> = root
+            .req("names")?
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|x| x.as_str().unwrap().to_string())
+            .collect();
+        let w = root.req("weights")?;
+        names
+            .into_iter()
+            .map(|name| {
+                let entry = w.req(&name)?;
+                Ok((
+                    name.clone(),
+                    entry.req("shape")?.as_usize_vec()?,
+                    entry.req("data")?.as_f32_vec()?,
+                ))
+            })
+            .collect()
+    }
+}

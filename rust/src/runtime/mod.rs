@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by `make artifacts`
+//! and executes them on the CPU PJRT client.  Python never runs here.
+
+pub mod artifacts;
+pub mod executor;
+
+pub use artifacts::{ArtifactBundle, GraphSpec};
+pub use executor::Engine;

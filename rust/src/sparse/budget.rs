@@ -1,0 +1,150 @@
+//! Adaptive sparse index selection (§4.3, Eqs. 18-19): the cumulative-
+//! threshold budgeter picks the minimum top-ranked prefix of each predicted
+//! distribution whose mass clears tau, then top-k selects those indices.
+//!
+//! This is the piece that makes the sparsity *adaptive*: peaky predicted
+//! distributions (easy contexts) get small budgets, flat ones (hard
+//! contexts) expand automatically — per layer, per KV group.
+
+use crate::tensor::ops::argsort_desc;
+
+use super::index_set::VsIndices;
+
+/// How to turn predicted (A_v, A_s) into budgets.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BudgetPolicy {
+    /// Eq. 18: smallest k whose sorted prefix mass >= tau (per direction).
+    CumulativeThreshold { tau_v: f32, tau_s: f32 },
+    /// Fixed counts (ablation / baseline parity).
+    Fixed { k_v: usize, k_s: usize },
+    /// Fixed fraction of n per direction (length-proportional baseline).
+    Proportional { frac_v: f32, frac_s: f32 },
+}
+
+impl BudgetPolicy {
+    pub fn paper_default() -> Self {
+        BudgetPolicy::CumulativeThreshold { tau_v: 0.9, tau_s: 0.9 }
+    }
+}
+
+/// Eq. 18 for one direction: minimal k with sum of top-k >= tau.  Always
+/// returns at least `min_k` (and at most `cap`).
+pub fn cumulative_threshold_k(scores: &[f32], tau: f32, min_k: usize, cap: usize) -> usize {
+    let order = argsort_desc(scores);
+    let total: f32 = scores.iter().sum();
+    let target = tau * total.max(1e-12);
+    let mut acc = 0.0f32;
+    let mut k = 0;
+    for &i in &order {
+        acc += scores[i];
+        k += 1;
+        if acc >= target {
+            break;
+        }
+    }
+    k.max(min_k).min(cap.max(min_k)).min(scores.len())
+}
+
+/// Top-k indices of a score vector (Eq. 19), ascending order.
+pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx = argsort_desc(scores);
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+/// Full Eq. 18-19 selection.  `caps` bound the budgets (the AOT artifacts
+/// have static index capacities); slash offset 0 is always included so every
+/// row keeps finite softmax mass.
+pub fn select_indices(
+    a_v: &[f32],
+    a_s: &[f32],
+    policy: BudgetPolicy,
+    cap_v: usize,
+    cap_s: usize,
+) -> VsIndices {
+    let (k_v, k_s) = match policy {
+        BudgetPolicy::CumulativeThreshold { tau_v, tau_s } => (
+            cumulative_threshold_k(a_v, tau_v, 1, cap_v),
+            cumulative_threshold_k(a_s, tau_s, 1, cap_s),
+        ),
+        BudgetPolicy::Fixed { k_v, k_s } => (k_v.min(cap_v).max(1), k_s.min(cap_s).max(1)),
+        BudgetPolicy::Proportional { frac_v, frac_s } => (
+            ((a_v.len() as f32 * frac_v) as usize).clamp(1, cap_v),
+            ((a_s.len() as f32 * frac_s) as usize).clamp(1, cap_s),
+        ),
+    };
+    let vertical = topk_indices(a_v, k_v);
+    let mut slash = topk_indices(a_s, k_s);
+    if !slash.contains(&0) {
+        if slash.len() >= cap_s && !slash.is_empty() {
+            // evict the weakest selected offset to make room for offset 0
+            let weakest = *slash
+                .iter()
+                .min_by(|&&a, &&b| a_s[a].partial_cmp(&a_s[b]).unwrap())
+                .unwrap();
+            slash.retain(|&o| o != weakest);
+        }
+        slash.push(0);
+    }
+    VsIndices::new(vertical, slash)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_k_minimal_prefix() {
+        let s = [0.5f32, 0.3, 0.1, 0.05, 0.05];
+        assert_eq!(cumulative_threshold_k(&s, 0.5, 1, 10), 1);
+        assert_eq!(cumulative_threshold_k(&s, 0.75, 1, 10), 2);
+        assert_eq!(cumulative_threshold_k(&s, 0.9, 1, 10), 3);
+        assert_eq!(cumulative_threshold_k(&s, 1.0, 1, 10), 5);
+    }
+
+    #[test]
+    fn threshold_adapts_to_peakiness() {
+        // Peaky distribution => small k; flat => large k.  This is the core
+        // adaptivity claim of §4.3.
+        let peaky = [0.97f32, 0.01, 0.01, 0.01];
+        let flat = [0.25f32; 4];
+        let kp = cumulative_threshold_k(&peaky, 0.9, 1, 10);
+        let kf = cumulative_threshold_k(&flat, 0.9, 1, 10);
+        assert!(kp < kf, "{kp} vs {kf}");
+    }
+
+    #[test]
+    fn respects_caps_and_min() {
+        let s = [0.2f32; 10];
+        assert_eq!(cumulative_threshold_k(&s, 1.0, 1, 4), 4);
+        assert_eq!(cumulative_threshold_k(&s, 0.0, 3, 10), 3);
+    }
+
+    #[test]
+    fn select_always_includes_offset_zero() {
+        let a_v = vec![0.1f32; 8];
+        let mut a_s = vec![0.0f32; 8];
+        a_s[5] = 1.0; // offset 0 has no mass
+        let idx = select_indices(&a_v, &a_s, BudgetPolicy::Fixed { k_v: 2, k_s: 1 }, 8, 1);
+        assert!(idx.slash.contains(&0));
+        assert!(idx.slash.len() <= 2);
+    }
+
+    #[test]
+    fn select_picks_top_mass() {
+        let mut a_v = vec![0.01f32; 16];
+        a_v[3] = 0.9;
+        a_v[7] = 0.5;
+        let a_s = vec![1.0f32, 0.1, 0.1, 0.1];
+        let idx = select_indices(
+            &a_v,
+            &a_s,
+            BudgetPolicy::CumulativeThreshold { tau_v: 0.8, tau_s: 0.5 },
+            16,
+            4,
+        );
+        assert!(idx.vertical.contains(&3));
+        assert_eq!(idx.slash, vec![0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! The vertical-slash index pair (I_v, I_s) of Eq. 9 plus geometry helpers
+//! (coverage counting, density) used by budget accounting and the cost model.
+
+/// Selected vertical column indices and slash offsets, both sorted ascending
+/// and deduplicated.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VsIndices {
+    pub vertical: Vec<usize>,
+    pub slash: Vec<usize>,
+}
+
+impl VsIndices {
+    pub fn new(mut vertical: Vec<usize>, mut slash: Vec<usize>) -> Self {
+        vertical.sort_unstable();
+        vertical.dedup();
+        slash.sort_unstable();
+        slash.dedup();
+        VsIndices { vertical, slash }
+    }
+
+    /// Bitset of vertical columns for O(1) membership tests.
+    pub fn vertical_bitset(&self, n: usize) -> Vec<bool> {
+        let mut b = vec![false; n];
+        for &j in &self.vertical {
+            if j < n {
+                b[j] = true;
+            }
+        }
+        b
+    }
+
+    /// Does the Eq. 9 mask keep causal cell (i, j)?
+    pub fn keeps(&self, i: usize, j: usize) -> bool {
+        j <= i && (self.vertical.binary_search(&j).is_ok() || self.slash.binary_search(&(i - j)).is_ok())
+    }
+
+    /// Exact number of causal cells covered by the mask (inclusion-exclusion
+    /// per row would be O(n·k); we count via the union per structure):
+    /// column j covers rows j..n (n-j cells); offset o covers rows o..n
+    /// (n-o cells); intersections are cells (o+j', j') counted once.
+    pub fn covered_cells(&self, n: usize) -> usize {
+        let mut cells: usize = self
+            .vertical
+            .iter()
+            .filter(|&&j| j < n)
+            .map(|&j| n - j)
+            .sum();
+        for &o in &self.slash {
+            if o >= n {
+                continue;
+            }
+            // offset o covers columns 0..n-o once each; those that are also
+            // vertical are already counted.  vertical is sorted, so the
+            // overlap count is a partition-point lookup.
+            let span = n - o;
+            let overlap = self.vertical.partition_point(|&j| j < span);
+            cells += span - overlap;
+        }
+        cells
+    }
+
+    /// Fraction of the causal triangle covered.
+    pub fn density(&self, n: usize) -> f64 {
+        let total = n * (n + 1) / 2;
+        self.covered_cells(n) as f64 / total as f64
+    }
+
+    /// Number of admissible key columns for query row i (the per-row work of
+    /// the fused kernel).
+    pub fn row_width(&self, i: usize) -> usize {
+        let v = self.vertical.iter().filter(|&&j| j <= i).count();
+        let s = self
+            .slash
+            .iter()
+            .filter(|&&o| o <= i && self.vertical.binary_search(&(i - o)).is_err())
+            .count();
+        v + s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_sorts_and_dedups() {
+        let idx = VsIndices::new(vec![5, 1, 5, 3], vec![2, 2, 0]);
+        assert_eq!(idx.vertical, vec![1, 3, 5]);
+        assert_eq!(idx.slash, vec![0, 2]);
+    }
+
+    #[test]
+    fn keeps_matches_definition() {
+        let idx = VsIndices::new(vec![2], vec![1]);
+        assert!(idx.keeps(5, 2)); // vertical
+        assert!(idx.keeps(5, 4)); // offset 1
+        assert!(!idx.keeps(5, 3));
+        assert!(!idx.keeps(1, 2)); // non-causal
+    }
+
+    #[test]
+    fn covered_cells_brute_force() {
+        let n = 24;
+        let idx = VsIndices::new(vec![0, 3, 7, 20], vec![0, 2, 5, 11]);
+        let mut brute = 0;
+        for i in 0..n {
+            for j in 0..=i {
+                if idx.keeps(i, j) {
+                    brute += 1;
+                }
+            }
+        }
+        assert_eq!(idx.covered_cells(n), brute);
+    }
+
+    #[test]
+    fn row_width_brute_force() {
+        let n = 20;
+        let idx = VsIndices::new(vec![1, 4, 9], vec![0, 3, 8]);
+        for i in 0..n {
+            let brute = (0..=i).filter(|&j| idx.keeps(i, j)).count();
+            assert_eq!(idx.row_width(i), brute, "row {i}");
+        }
+    }
+
+    #[test]
+    fn density_bounds() {
+        let idx = VsIndices::new((0..16).collect(), vec![0]);
+        let d = idx.density(16);
+        assert!((d - 1.0).abs() < 1e-9);
+        assert_eq!(VsIndices::default().density(16), 0.0);
+    }
+}

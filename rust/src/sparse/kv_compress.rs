@@ -1,0 +1,151 @@
+//! Decode-phase KV-cache compression — the paper's named future work
+//! ("extending vertical-slash principles to the decoding stage via adaptive
+//! KV cache compression").
+//!
+//! During decode, each new query attends the whole prefix; the vertical
+//! score A_v already ranks prefix keys by their global usefulness, and the
+//! slash score A_s ranks relative offsets.  A compressed cache therefore
+//! keeps (a) the top vertical columns — the heavy hitters every future query
+//! needs — and (b) a recency window sized from the slash mass (offsets the
+//! model habitually attends).  This is SnapKV/H2O-style eviction driven by
+//! the *same* indexer that builds the prefill mask, so it costs nothing
+//! extra at runtime.
+
+use crate::tensor::ops::argsort_desc;
+
+/// The keep-set of a compressed KV cache for a prefix of length n.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompressedKv {
+    /// Kept prefix positions, sorted ascending (union of heavy columns and
+    /// the recency window).
+    pub kept: Vec<usize>,
+    pub n: usize,
+}
+
+impl CompressedKv {
+    pub fn ratio(&self) -> f64 {
+        self.kept.len() as f64 / self.n.max(1) as f64
+    }
+
+    pub fn contains(&self, pos: usize) -> bool {
+        self.kept.binary_search(&pos).is_ok()
+    }
+}
+
+/// Compress: keep the top `budget` positions, allocating between heavy
+/// columns and the recency window proportionally to predicted mass
+/// (Eq. 18's cumulative logic applied to cache eviction).
+pub fn compress(a_v: &[f32], a_s: &[f32], budget: usize) -> CompressedKv {
+    let n = a_v.len();
+    let budget = budget.clamp(1, n);
+    // Slash mass within offset o tells how much decode attends at distance
+    // o; find the window w covering tau of slash mass.
+    let total_s: f32 = a_s.iter().sum();
+    let mut acc = 0.0f32;
+    let mut window = 1usize;
+    for (o, &m) in a_s.iter().enumerate() {
+        acc += m;
+        if acc >= 0.9 * total_s {
+            window = o + 1;
+            break;
+        }
+    }
+    // Split budget: the recency window takes at most half — heavy-hitter
+    // columns are what distinguish this from recency-only eviction, so they
+    // are guaranteed the other half.
+    let w = window.min((budget / 2).max(1));
+    let mut kept: Vec<usize> = (n.saturating_sub(w)..n).collect();
+    for &j in argsort_desc(a_v).iter() {
+        if kept.len() >= budget {
+            break;
+        }
+        if j < n.saturating_sub(w) {
+            kept.push(j);
+        }
+    }
+    kept.sort_unstable();
+    kept.dedup();
+    CompressedKv { kept, n }
+}
+
+/// Attention mass retained by the compressed cache for a decode query whose
+/// attention row is `probs` (length n) — the decode analog of Eq. 6.
+pub fn decode_recall(kv: &CompressedKv, probs: &[f32]) -> f32 {
+    let total: f32 = probs.iter().sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let kept: f32 = kv.kept.iter().filter(|&&j| j < probs.len()).map(|&j| probs[j]).sum();
+    kept / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::aggregate::vs_aggregate_qk;
+    use crate::attention::dense::attention_probs;
+    use crate::synth::{gen_head, SynthConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_recency_and_heavies() {
+        let n = 64;
+        let mut a_v = vec![0.001f32; n];
+        a_v[3] = 0.5;
+        a_v[17] = 0.3;
+        let mut a_s = vec![0.0f32; n];
+        a_s[0] = 0.6;
+        a_s[1] = 0.35; // 90% of slash mass within offsets 0..=1
+        let kv = compress(&a_v, &a_s, 8);
+        assert!(kv.contains(3) && kv.contains(17), "{:?}", kv.kept);
+        assert!(kv.contains(n - 1) && kv.contains(n - 2));
+        assert!(kv.kept.len() <= 8);
+    }
+
+    #[test]
+    fn budget_respected_and_monotone() {
+        let n = 128;
+        let a_v: Vec<f32> = (0..n).map(|i| 1.0 / (i + 1) as f32).collect();
+        let a_s = vec![1.0 / n as f32; n];
+        let k8 = compress(&a_v, &a_s, 8);
+        let k32 = compress(&a_v, &a_s, 32);
+        assert!(k8.kept.len() <= 8);
+        assert!(k32.kept.len() <= 32);
+        for &p in &k8.kept {
+            // growing the budget never evicts previously-kept heavies
+            assert!(k32.contains(p) || p >= n - 32, "lost {p}");
+        }
+    }
+
+    #[test]
+    fn decode_recall_beats_recency_only_on_synthetic_heads() {
+        let mut rng = Rng::new(5);
+        let n = 256;
+        let h = gen_head(&mut rng, n, &SynthConfig::default(), 0);
+        let (a_v, a_s) = vs_aggregate_qk(&h.q, &h.k);
+        let a = attention_probs(&h.q, &h.k);
+        let last_row = a.row(n - 1);
+        let budget = n / 8;
+        let vs_kv = compress(&a_v, &a_s, budget);
+        let recency = CompressedKv { kept: (n - budget..n).collect(), n };
+        let r_vs = decode_recall(&vs_kv, last_row);
+        let r_rec = decode_recall(&recency, last_row);
+        assert!(
+            r_vs > r_rec + 0.05,
+            "vs-compressed {r_vs} vs recency-only {r_rec} at ratio {:.2}",
+            vs_kv.ratio()
+        );
+        // The synthetic final row spreads mass across mean-driven offsets a
+        // 12.5% cache cannot cover; the relative win over recency-only is
+        // the claim under test (real sink-dominated rows score far higher).
+        assert!(r_vs > 0.15, "absolute decode recall too low: {r_vs}");
+    }
+
+    #[test]
+    fn full_budget_keeps_everything() {
+        let n = 32;
+        let kv = compress(&vec![1.0 / n as f32; n], &vec![1.0 / n as f32; n], n);
+        assert_eq!(kv.kept.len(), n);
+        assert!((kv.ratio() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,70 @@
+//! Dense mask materialization and padded-list conversion helpers.
+//!
+//! The dense form exists only for oracles/tests; the serving path always
+//! stays in index form.  `to_padded` produces the fixed-capacity int32
+//! buffers the AOT sparse-attention artifact takes as arguments.
+
+use super::index_set::VsIndices;
+
+/// Materialize the Eq. 9 boolean keep-mask (test scale only).
+pub fn dense_mask(idx: &VsIndices, n: usize) -> Vec<Vec<bool>> {
+    let mut m = vec![vec![false; n]; n];
+    let vset = idx.vertical_bitset(n);
+    for i in 0..n {
+        for j in 0..=i {
+            m[i][j] = vset[j] || idx.slash.binary_search(&(i - j)).is_ok();
+        }
+    }
+    m
+}
+
+/// Pad index lists to the artifact's static capacities with sentinel `n`.
+/// Returns (v_idx, s_idx, lens) ready for the PJRT executor.  Overlong
+/// lists are truncated to the strongest prefix (they are sorted by index,
+/// so the caller should budget within caps — the coordinator enforces it).
+pub fn to_padded(idx: &VsIndices, n: usize, cap_v: usize, cap_s: usize) -> (Vec<i32>, Vec<i32>, [i32; 2]) {
+    let vlen = idx.vertical.len().min(cap_v);
+    let slen = idx.slash.len().min(cap_s);
+    let mut v = vec![n as i32; cap_v];
+    let mut s = vec![n as i32; cap_s];
+    for (t, &j) in idx.vertical.iter().take(vlen).enumerate() {
+        v[t] = j as i32;
+    }
+    for (t, &o) in idx.slash.iter().take(slen).enumerate() {
+        s[t] = o as i32;
+    }
+    (v, s, [vlen as i32, slen as i32])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_mask_matches_keeps() {
+        let idx = VsIndices::new(vec![1, 4], vec![0, 3]);
+        let m = dense_mask(&idx, 12);
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(m[i][j], idx.keeps(i, j), "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_layout() {
+        let idx = VsIndices::new(vec![3, 9], vec![0]);
+        let (v, s, lens) = to_padded(&idx, 16, 4, 2);
+        assert_eq!(v, vec![3, 9, 16, 16]);
+        assert_eq!(s, vec![0, 16]);
+        assert_eq!(lens, [2, 1]);
+    }
+
+    #[test]
+    fn truncates_to_caps() {
+        let idx = VsIndices::new((0..10).collect(), vec![0, 1, 2]);
+        let (v, _, lens) = to_padded(&idx, 16, 4, 2);
+        assert_eq!(v.len(), 4);
+        assert_eq!(lens, [4, 2]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Sorted-union of the per-block vertical and slash column lists.
+//!
+//! §4.3: "since both vertical and slash index lists are naturally sorted,
+//! their union is generated via an efficient GPU-parallel merge operation
+//! based on the Merge Path algorithm (Green, McColl, Bader 2012)".  On CPU
+//! the Merge-Path diagonal-search partitions the merge across threads; the
+//! same partitioning keeps per-core work balanced in the coordinator's
+//! batch pipeline.
+
+/// Sequential two-pointer sorted union with dedup (the per-partition body).
+pub fn merge_union(a: &[usize], b: &[usize], out: &mut Vec<usize>) {
+    out.clear();
+    let (mut i, mut j) = (0, 0);
+    while i < a.len() || j < b.len() {
+        let take_a = match (a.get(i), b.get(j)) {
+            (Some(&x), Some(&y)) => x <= y,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        let v = if take_a {
+            let v = a[i];
+            i += 1;
+            if j < b.len() && b[j] == v {
+                j += 1; // skip duplicate on the other list
+            }
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        if out.last() != Some(&v) {
+            out.push(v);
+        }
+    }
+}
+
+/// Merge-Path diagonal search: find the (i, j) split of diagonal `diag`
+/// such that merging a[..i] and b[..j] consumes exactly `diag` elements and
+/// the split respects the merge order.
+fn diagonal_split(a: &[usize], b: &[usize], diag: usize) -> (usize, usize) {
+    let mut lo = diag.saturating_sub(b.len());
+    let mut hi = diag.min(a.len());
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        // a[mid] vs b[diag - mid - 1]
+        if a[mid] < b[diag - mid - 1] {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    (lo, diag - lo)
+}
+
+/// Partitioned Merge-Path union: splits the merge into `parts` equal-length
+/// segments via diagonal search, merges each independently (parallelizable),
+/// then concatenates with boundary dedup.  Equivalent to `merge_union`.
+pub fn merge_path_union(a: &[usize], b: &[usize], parts: usize) -> Vec<usize> {
+    let total = a.len() + b.len();
+    if total == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, total);
+    let mut out = Vec::with_capacity(total);
+    let mut scratch = Vec::new();
+    let mut prev = (0usize, 0usize);
+    for p in 1..=parts {
+        let diag = total * p / parts;
+        let cur = diagonal_split(a, b, diag);
+        merge_union(&a[prev.0..cur.0], &b[prev.1..cur.1], &mut scratch);
+        for &v in &scratch {
+            if out.last() != Some(&v) {
+                out.push(v);
+            }
+        }
+        prev = cur;
+    }
+    out
+}
+
+/// Columns admissible for the query block [row0, row0+bq) given vertical
+/// columns and slash offsets: the slash contribution of offset o is the
+/// column band [row0-o, row0+bq-1-o] clipped to causal >= 0.  Returns the
+/// sorted deduplicated union — the block's gather list in the fused kernel.
+pub fn block_columns(
+    vertical: &[usize],
+    slash: &[usize],
+    row0: usize,
+    bq: usize,
+    n: usize,
+) -> Vec<usize> {
+    let row_hi = (row0 + bq - 1).min(n - 1);
+    let mut vcols: Vec<usize> = vertical.iter().cloned().filter(|&j| j <= row_hi).collect();
+    vcols.sort_unstable();
+    // Slash bands as intervals: offset o covers [row0-o, row_hi-o].  Slash
+    // is sorted ascending, so the bands arrive in *descending* column order;
+    // reverse, then merge overlapping intervals in O(ks) before
+    // materializing — avoids the O(ks * bq) element blow-up.
+    let mut intervals: Vec<(usize, usize)> = slash
+        .iter()
+        .rev()
+        .filter(|&&o| o <= row_hi)
+        .map(|&o| (row0.saturating_sub(o), row_hi - o))
+        .collect();
+    intervals.dedup();
+    let mut merged: Vec<(usize, usize)> = Vec::with_capacity(intervals.len());
+    for (lo, hi) in intervals {
+        match merged.last_mut() {
+            Some((_, phi)) if lo <= *phi + 1 => *phi = (*phi).max(hi),
+            _ => merged.push((lo, hi)),
+        }
+    }
+    let mut scols: Vec<usize> = Vec::new();
+    for (lo, hi) in merged {
+        scols.extend(lo..=hi);
+    }
+    merge_path_union(&vcols, &scols, 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn brute_union(a: &[usize], b: &[usize]) -> Vec<usize> {
+        let mut v: Vec<usize> = a.iter().chain(b.iter()).cloned().collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn union_basic() {
+        let mut out = Vec::new();
+        merge_union(&[1, 3, 5], &[2, 3, 6], &mut out);
+        assert_eq!(out, vec![1, 2, 3, 5, 6]);
+    }
+
+    #[test]
+    fn union_randomized_matches_brute() {
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let la = rng.below(30);
+            let lb = rng.below(30);
+            let a = rng.choose_distinct(0, 100, la);
+            let b = rng.choose_distinct(0, 100, lb);
+            let mut out = Vec::new();
+            merge_union(&a, &b, &mut out);
+            assert_eq!(out, brute_union(&a, &b));
+            for parts in [1, 2, 3, 8] {
+                assert_eq!(merge_path_union(&a, &b, parts), brute_union(&a, &b));
+            }
+        }
+    }
+
+    #[test]
+    fn merge_path_handles_skew() {
+        let a: Vec<usize> = (0..1000).map(|x| x * 2).collect();
+        let b = vec![1usize];
+        assert_eq!(merge_path_union(&a, &b, 7), brute_union(&a, &b));
+        assert_eq!(merge_path_union(&b, &a, 7), brute_union(&a, &b));
+        assert_eq!(merge_path_union(&[], &[], 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn block_columns_matches_per_row_definition() {
+        let vertical = vec![0, 7, 13];
+        let slash = vec![0, 2, 9];
+        let (n, row0, bq) = (32, 8, 8);
+        let got = block_columns(&vertical, &slash, row0, bq, n);
+        // brute force: a column is admissible if some row in the block keeps it
+        let mut want = Vec::new();
+        for j in 0..n {
+            let mut hit = false;
+            for i in row0..(row0 + bq).min(n) {
+                if j <= i && (vertical.contains(&j) || slash.contains(&(i - j))) {
+                    hit = true;
+                }
+            }
+            if hit {
+                want.push(j);
+            }
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,13 @@
+//! The vertical-slash sparse-index machinery: index sets, the Merge-Path
+//! union used by the fused executor, the adaptive cumulative-threshold
+//! budgeter (Eq. 18-19) and mask utilities.
+
+pub mod budget;
+pub mod index_set;
+pub mod kv_compress;
+pub mod mask;
+pub mod merge;
+
+pub use budget::{select_indices, BudgetPolicy};
+pub use index_set::VsIndices;
+pub use merge::{merge_path_union, merge_union};

@@ -1,0 +1,234 @@
+//! Host tiled sparse-attention executors.
+//!
+//! `sparse_attention_vs` mirrors the fused Pallas kernel (§4.3): per query
+//! block it forms the merged column union via Merge-Path (`block_columns`),
+//! gathers K/V on demand, and runs a masked streaming softmax over the
+//! gathered columns only — work proportional to the union size, not n.
+
+
+use crate::sparse::VsIndices;
+use crate::tensor::ops::dot;
+use crate::tensor::Mat;
+
+use crate::attention::dense::NEG_INF;
+
+/// Fused vertical-slash sparse attention over (q, k, v) with block size bq.
+///
+/// Per-row candidate enumeration: the admissible columns of row i are
+/// exactly `vertical ∪ {i-o : o in slash}` (slash candidates whose column is
+/// also vertical are skipped — the union semantics of Eq. 9).  Work per row
+/// is O(row_width), never O(block-union size); this is the same on-demand
+/// gather the fused Pallas kernel performs (see DESIGN.md
+/// §Hardware-Adaptation and EXPERIMENTS.md §Perf for the before/after).
+pub fn sparse_attention_vs(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices, bq: usize) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(n, d);
+    let vset = idx.vertical_bitset(n);
+    let mut cand: Vec<usize> = Vec::with_capacity(idx.vertical.len() + idx.slash.len());
+    let mut scores: Vec<f32> = Vec::with_capacity(idx.vertical.len() + idx.slash.len());
+    let _ = bq; // tiling kept in the signature for executor parity/ablation
+
+    for i in 0..n {
+        let qrow = q.row(i);
+        cand.clear();
+        scores.clear();
+        let mut m = NEG_INF;
+        // vertical candidates (sorted; stop at the causal frontier)
+        for &j in &idx.vertical {
+            if j > i {
+                break;
+            }
+            let s = dot(qrow, k.row(j)) * scale;
+            cand.push(j);
+            scores.push(s);
+            m = m.max(s);
+        }
+        // slash candidates, deduplicated against verticals
+        for &o in &idx.slash {
+            if o > i {
+                break;
+            }
+            let j = i - o;
+            if vset[j] {
+                continue;
+            }
+            let s = dot(qrow, k.row(j)) * scale;
+            cand.push(j);
+            scores.push(s);
+            m = m.max(s);
+        }
+        if m == NEG_INF {
+            // No admissible column (possible only when offset 0 missing);
+            // fall back to the diagonal cell.
+            out.row_mut(i).copy_from_slice(v.row(i));
+            continue;
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        let orow = out.row_mut(i);
+        for (t, &j) in cand.iter().enumerate() {
+            let w = scores[t] * inv;
+            let vrow = v.row(j);
+            for c in 0..d {
+                orow[c] += w * vrow[c];
+            }
+        }
+    }
+    out
+}
+
+/// Block-sparse attention executor (SeerAttention-style masks).
+pub fn sparse_attention_blocks(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    block: usize,
+    keep: &[(usize, usize)],
+) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(n, d);
+    for i in 0..n {
+        let qb = i / block;
+        let qrow = q.row(i);
+        // gather key blocks kept for this query block
+        let mut cols: Vec<usize> = Vec::new();
+        for &(qq, kb) in keep {
+            if qq == qb {
+                cols.extend((kb * block..((kb + 1) * block).min(n)).filter(|&j| j <= i));
+            }
+        }
+        if cols.is_empty() {
+            out.row_mut(i).copy_from_slice(v.row(i));
+            continue;
+        }
+        let mut m = NEG_INF;
+        let scores: Vec<f32> = cols
+            .iter()
+            .map(|&j| {
+                let s = dot(qrow, k.row(j)) * scale;
+                m = m.max(s);
+                s
+            })
+            .collect();
+        let mut denom = 0.0;
+        let es: Vec<f32> = scores.iter().map(|&s| {
+            let e = (s - m).exp();
+            denom += e;
+            e
+        }).collect();
+        let inv = 1.0 / denom;
+        let orow = out.row_mut(i);
+        for (t, &j) in cols.iter().enumerate() {
+            let w = es[t] * inv;
+            let vrow = v.row(j);
+            for c in 0..d {
+                orow[c] += w * vrow[c];
+            }
+        }
+    }
+    out
+}
+
+/// Reference masked attention (materializes the mask; test oracle).
+pub fn masked_attention_ref(q: &Mat, k: &Mat, v: &Mat, keep: impl Fn(usize, usize) -> bool) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(n, d);
+    for i in 0..n {
+        let qrow = q.row(i);
+        let mut scores = vec![NEG_INF; i + 1];
+        let mut any = false;
+        for j in 0..=i {
+            if keep(i, j) {
+                scores[j] = dot(qrow, k.row(j)) * scale;
+                any = true;
+            }
+        }
+        if !any {
+            out.row_mut(i).copy_from_slice(v.row(i));
+            continue;
+        }
+        let m = scores.iter().cloned().fold(NEG_INF, f32::max);
+        let mut denom = 0.0;
+        for s in scores.iter_mut() {
+            *s = if *s == NEG_INF { 0.0 } else { (*s - m).exp() };
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        let orow = out.row_mut(i);
+        for j in 0..=i {
+            let w = scores[j] * inv;
+            if w > 0.0 {
+                let vrow = v.row(j);
+                for c in 0..d {
+                    orow[c] += w * vrow[c];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::dense_attention;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn vs_executor_matches_masked_reference() {
+        let mut rng = Rng::new(0);
+        let (q, k, v) = (randn(&mut rng, 96, 16), randn(&mut rng, 96, 16), randn(&mut rng, 96, 16));
+        let idx = VsIndices::new(vec![0, 7, 30, 55], vec![0, 2, 11]);
+        let want = masked_attention_ref(&q, &k, &v, |i, j| idx.keeps(i, j));
+        for bq in [8, 32, 96, 5] {
+            let got = sparse_attention_vs(&q, &k, &v, &idx, bq);
+            assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq}");
+        }
+    }
+
+    #[test]
+    fn full_vertical_budget_equals_dense() {
+        let mut rng = Rng::new(1);
+        let (q, k, v) = (randn(&mut rng, 48, 8), randn(&mut rng, 48, 8), randn(&mut rng, 48, 8));
+        let idx = VsIndices::new((0..48).collect(), vec![0]);
+        let got = sparse_attention_vs(&q, &k, &v, &idx, 16);
+        let want = dense_attention(&q, &k, &v);
+        assert!(got.max_abs_diff(&want) < 2e-5);
+    }
+
+    #[test]
+    fn empty_index_falls_back_to_diagonal() {
+        let mut rng = Rng::new(2);
+        let (q, k, v) = (randn(&mut rng, 16, 8), randn(&mut rng, 16, 8), randn(&mut rng, 16, 8));
+        let idx = VsIndices::default();
+        let got = sparse_attention_vs(&q, &k, &v, &idx, 8);
+        for i in 0..16 {
+            for c in 0..8 {
+                assert!((got.at(i, c) - v.at(i, c)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn block_executor_matches_masked_reference() {
+        let mut rng = Rng::new(3);
+        let (q, k, v) = (randn(&mut rng, 64, 8), randn(&mut rng, 64, 8), randn(&mut rng, 64, 8));
+        let keep = vec![(0usize, 0usize), (1, 0), (1, 1), (2, 2), (3, 0), (3, 3)];
+        let got = sparse_attention_blocks(&q, &k, &v, 16, &keep);
+        let want = masked_attention_ref(&q, &k, &v, |i, j| {
+            keep.binary_search(&(i / 16, j / 16)).is_ok()
+        });
+        assert!(got.max_abs_diff(&want) < 2e-5);
+    }
+}

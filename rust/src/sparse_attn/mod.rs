@@ -1,0 +1,15 @@
+//! Sparse attention execution and the cost model.
+//!
+//! `exec` is the host tiled executor over a vertical-slash index pair (the
+//! CPU twin of the fused Pallas kernel, used for calibration and native
+//! serving); `cost` converts method structure into FLOPs/latency estimates
+//! calibrated against measured executor timings; `vsprefill` wires
+//! Indexer -> budget -> merge -> exec into the `SparsePredictor` interface.
+
+pub mod cost;
+pub mod exec;
+pub mod vsprefill;
+
+pub use cost::{CostModel, MethodCost};
+pub use exec::{sparse_attention_vs, sparse_attention_blocks};
+pub use vsprefill::VsPrefill;

@@ -1,0 +1,206 @@
+//! The full VSPrefill pipeline as a `SparsePredictor`:
+//! VSIndexer forward -> adaptive cumulative-threshold budget -> top-k
+//! selection (always keeping slash offset 0).  §4.1 + §4.3 end to end.
+
+use crate::baselines::{MaskSpec, SparsePredictor};
+use crate::indexer::Indexer;
+use crate::sparse::budget::{cumulative_threshold_k, topk_indices};
+use crate::sparse::VsIndices;
+use crate::synth::SynthHead;
+
+pub struct VsPrefill {
+    pub indexer: Indexer,
+    /// Base cumulative-mass threshold at budget knob 0.5 (paper tau).
+    pub tau: f32,
+    /// Calibration exponents applied to the predicted distributions before
+    /// the cumulative threshold (rank-preserving: p^gamma / sum p^gamma).
+    /// The two heads miscalibrate in opposite directions: the vertical head
+    /// is *over-peaky* (reverse-KL mode seeking concentrates on the top
+    /// hitters, which would starve Eq. 18 budgets of the mid-mass columns
+    /// real tasks hinge on), so it is flattened (gamma < 1); the slash head
+    /// under-fits the offset structure and comes out too flat, so it is
+    /// sharpened (gamma > 1).  See EXPERIMENTS.md §Calibration.
+    pub sharpen_v: f32,
+    pub sharpen_s: f32,
+    /// Budget floors: at least `min_frac_v * n` vertical columns and
+    /// `min_k_s` slash offsets are always selected (FlexPrefill's
+    /// minimum-budget guard, same role).
+    pub min_frac_v: f32,
+    pub min_k_s: usize,
+    /// *Absolute* budget ceilings at the default operating point (budget
+    /// knob 0.5), mirroring the fused kernel's fixed index-buffer capacity
+    /// (the paper's TileLang kernel allocates a constant-size index buffer).
+    /// Absolute — not fractional — caps are what make the kept *fraction*
+    /// shrink as context grows, i.e. the paper's increasing speedup with
+    /// length (1.x at 4k -> ~5x at 128k) at flat accuracy.
+    pub max_k_v: usize,
+    pub max_k_s: usize,
+    /// Static caps from the AOT artifact (index-buffer capacities); `None`
+    /// for the native executor which has no static-shape constraint.
+    pub cap_v: Option<usize>,
+    pub cap_s: Option<usize>,
+}
+
+impl VsPrefill {
+    pub fn new(indexer: Indexer) -> VsPrefill {
+        VsPrefill {
+            indexer,
+            tau: 0.9,
+            sharpen_v: 0.5,
+            sharpen_s: 2.0,
+            min_frac_v: 1.0 / 128.0,
+            min_k_s: 4,
+            max_k_v: 4096,
+            max_k_s: 2048,
+            cap_v: None,
+            cap_s: None,
+        }
+    }
+
+    pub fn with_caps(indexer: Indexer, cap_v: usize, cap_s: usize) -> VsPrefill {
+        VsPrefill { cap_v: Some(cap_v), cap_s: Some(cap_s), ..VsPrefill::new(indexer) }
+    }
+
+    /// Predict indices from raw (K_rope, V) — the serving entry point (the
+    /// trait method below adapts it to the SynthHead-based harness).
+    pub fn predict_kv(&self, k: &crate::tensor::Mat, v: &crate::tensor::Mat, budget: f32) -> VsIndices {
+        let n = k.rows;
+        let (a_v, a_s) = self.indexer.predict_kv(k, v);
+        self.select(&a_v, &a_s, n, budget)
+    }
+
+    /// Eq. 18-19 selection from externally-computed scores (e.g. the AOT
+    /// indexer graph's outputs).
+    pub fn select_from_scores(&self, a_v: &[f32], a_s: &[f32], n: usize, budget: f32) -> VsIndices {
+        self.select(a_v, a_s, n, budget)
+    }
+
+    fn select(&self, a_v: &[f32], a_s: &[f32], n: usize, budget: f32) -> VsIndices {
+        // The budget knob rescales tau: knob 0.5 -> tau; 1.0 -> ~0.995.
+        let tau = (self.tau * (budget / 0.5).clamp(0.2, 1.2)).min(0.995);
+        // The budget knob also scales the ceilings so Fig. 5's sweep reaches
+        // both aggressive and permissive operating points.  The effective
+        // ceiling is min(absolute buffer capacity, fraction of n): the
+        // former models the kernel's constant index buffer (dominant at long
+        // context — what makes speedup grow with n), the latter keeps short
+        // contexts meaningfully sparse (the AOT artifacts cap at n/8, n/16).
+        let scale = (budget / 0.5).clamp(0.1, 2.0);
+        let abs_cap_v = ((self.max_k_v as f32 * scale) as usize).max(1);
+        let abs_cap_s = ((self.max_k_s as f32 * scale) as usize).max(1);
+        let frac_cap_v = ((0.25 * scale * n as f32) as usize).max(1);
+        let frac_cap_s = ((0.125 * scale * n as f32) as usize).max(1);
+        let cap_v = self.cap_v.unwrap_or(n).min(abs_cap_v).min(frac_cap_v).min(n);
+        let cap_s = self.cap_s.unwrap_or(n).min(abs_cap_s).min(frac_cap_s).min(n);
+        let sharp = |xs: &[f32], gamma: f32| -> Vec<f32> {
+            let mut v: Vec<f32> = xs.iter().map(|x| x.max(0.0).powf(gamma)).collect();
+            let s: f32 = v.iter().sum();
+            if s > 0.0 {
+                v.iter_mut().for_each(|x| *x /= s);
+            }
+            v
+        };
+        let av_s = sharp(a_v, self.sharpen_v);
+        let as_s = sharp(a_s, self.sharpen_s);
+        let min_k_v = ((self.min_frac_v * n as f32) as usize).max(1);
+        let k_v = cumulative_threshold_k(&av_s, tau, min_k_v, cap_v);
+        let k_s = cumulative_threshold_k(&as_s, tau, self.min_k_s, cap_s);
+        let vertical = topk_indices(a_v, k_v);
+        let mut slash = topk_indices(a_s, k_s);
+        if !slash.contains(&0) {
+            if slash.len() >= cap_s && !slash.is_empty() {
+                let weakest = *slash
+                    .iter()
+                    .min_by(|&&a, &&b| a_s[a].partial_cmp(&a_s[b]).unwrap())
+                    .unwrap();
+                slash.retain(|&o| o != weakest);
+            }
+            slash.push(0);
+        }
+        VsIndices::new(vertical, slash)
+    }
+}
+
+impl SparsePredictor for VsPrefill {
+    fn name(&self) -> &'static str {
+        "VSPrefill"
+    }
+
+    fn predict(&self, head: &SynthHead, budget: f32) -> MaskSpec {
+        MaskSpec::Vs(self.predict_kv(&head.k, &head.v, budget))
+    }
+
+    fn index_flops(&self, n: usize, d: usize) -> f64 {
+        // X W_u (n x 2d x h) + two scoring heads (n x h): strictly linear in n.
+        let h = self.indexer.hidden() as f64;
+        2.0 * n as f64 * (2.0 * d as f64) * h + 2.0 * 2.0 * n as f64 * h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::attention_probs;
+    use crate::baselines::{recall_of_spec, RandomVs};
+    use crate::indexer::train::{distill, TrainConfig};
+    use crate::synth::{gen_head, SynthConfig};
+    use crate::util::rng::Rng;
+
+    fn trained() -> VsPrefill {
+        let tc = TrainConfig { steps: 250, batch: 3, seq_len: 128, hidden_base: 32, ..Default::default() };
+        let (ix, _) = distill(&tc);
+        VsPrefill::new(ix)
+    }
+
+    #[test]
+    fn end_to_end_beats_random_at_matched_density() {
+        let vsp = trained();
+        let mut rng = Rng::new(77);
+        let h = gen_head(&mut rng, 192, &SynthConfig::default(), 2);
+        let a = attention_probs(&h.q, &h.k);
+        let spec = vsp.predict(&h, 0.5);
+        let dens = spec.density(192) as f32;
+        assert!(dens < 0.7, "should be sparse, got {dens}");
+        let rnd = RandomVs { seed: 5 }.predict(&h, dens);
+        let (rv, rr) = (recall_of_spec(&a, &spec), recall_of_spec(&a, &rnd));
+        assert!(rv > rr + 0.1, "vsprefill {rv} vs random {rr} at {dens}");
+        assert!(rv > 0.7, "absolute recall too low: {rv}");
+    }
+
+    #[test]
+    fn budget_knob_is_monotone_in_density() {
+        let vsp = trained();
+        let mut rng = Rng::new(78);
+        let h = gen_head(&mut rng, 128, &SynthConfig::default(), 1);
+        let d1 = vsp.predict(&h, 0.2).density(128);
+        let d2 = vsp.predict(&h, 0.6).density(128);
+        let d3 = vsp.predict(&h, 1.0).density(128);
+        assert!(d1 <= d2 + 1e-9 && d2 <= d3 + 1e-9, "{d1} {d2} {d3}");
+    }
+
+    #[test]
+    fn caps_are_respected() {
+        let vsp = {
+            let mut v = trained();
+            v.cap_v = Some(8);
+            v.cap_s = Some(4);
+            v
+        };
+        let mut rng = Rng::new(79);
+        let h = gen_head(&mut rng, 128, &SynthConfig::default(), 0);
+        if let MaskSpec::Vs(idx) = vsp.predict(&h, 1.0) {
+            assert!(idx.vertical.len() <= 8);
+            assert!(idx.slash.len() <= 4 + 1); // +1 for forced offset 0
+            assert!(idx.slash.contains(&0));
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn indexing_cost_is_linear() {
+        let vsp = trained();
+        let c1 = vsp.index_flops(1024, 32);
+        let c2 = vsp.index_flops(2048, 32);
+        assert!((c2 / c1 - 2.0).abs() < 0.01);
+    }
+}

@@ -1,0 +1,147 @@
+//! Linear-algebra kernels over `Mat`: blocked matmul, softmax, silu, and the
+//! vector helpers shared by the indexer trainer and the attention executors.
+
+use super::Mat;
+
+/// C = A @ B with a k-blocked inner loop (cache-friendlier than naive ijk).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C += A @ B for a preallocated C (hot-loop variant, no allocation).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = c.row_mut(i);
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// A @ B^T — the attention-score shape (avoids materializing B^T).
+pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_bt inner-dim mismatch");
+    Mat::from_fn(a.rows, b.rows, |i, j| dot(a.row(i), b.row(j)))
+}
+
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    // 4-way unrolled accumulation; autovectorizes well.
+    let chunks = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    acc += s0 + s1 + s2 + s3;
+    for k in chunks..a.len() {
+        acc += a[k] * b[k];
+    }
+    acc
+}
+
+/// In-place numerically-stable softmax over a slice.
+pub fn softmax_inplace(xs: &mut [f32]) {
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        let u = 1.0 / xs.len() as f32;
+        xs.iter_mut().for_each(|x| *x = u);
+        return;
+    }
+    let mut sum = 0.0;
+    for x in xs.iter_mut() {
+        *x = (*x - m).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    xs.iter_mut().for_each(|x| *x *= inv);
+}
+
+pub fn softmax(xs: &[f32]) -> Vec<f32> {
+    let mut v = xs.to_vec();
+    softmax_inplace(&mut v);
+    v
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[inline]
+pub fn silu_grad(x: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// argsort descending (stable), used for top-k index selection.
+pub fn argsort_desc(xs: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let b = Mat::from_vec(3, 2, vec![7.0, 8.0, 9.0, 10.0, 11.0, 12.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![58.0, 64.0, 139.0, 154.0]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_matmul() {
+        let a = Mat::from_fn(3, 4, |i, j| (i + j) as f32 * 0.5);
+        let b = Mat::from_fn(5, 4, |i, j| (i * j) as f32 * 0.25 - 1.0);
+        let c1 = matmul_bt(&a, &b);
+        let c2 = matmul(&a, &b.transpose());
+        assert!(c1.max_abs_diff(&c2) < 1e-6);
+    }
+
+    #[test]
+    fn softmax_is_distribution_and_stable() {
+        let mut v = vec![1000.0, 1001.0, 999.0];
+        softmax_inplace(&mut v);
+        let sum: f32 = v.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(v.iter().all(|x| x.is_finite() && *x >= 0.0));
+        assert!(v[1] > v[0] && v[0] > v[2]);
+    }
+
+    #[test]
+    fn silu_grad_is_finite_difference() {
+        for &x in &[-3.0f32, -0.5, 0.0, 0.7, 2.0] {
+            let eps = 1e-3;
+            let fd = (silu(x + eps) - silu(x - eps)) / (2.0 * eps);
+            assert!((silu_grad(x) - fd).abs() < 1e-3, "x={x}");
+        }
+    }
+
+    #[test]
+    fn argsort_desc_orders() {
+        assert_eq!(argsort_desc(&[0.1, 0.9, 0.5]), vec![1, 2, 0]);
+    }
+}

@@ -1,0 +1,99 @@
+//! Rotary positional embedding (Eq. 22): block-diagonal 2x2 rotations with
+//! theta_p = base^(-2p/d).  Must match `python/compile/kernels/ref.py::rope`
+//! bit-for-intent (same pairing convention: dims (2p, 2p+1)).
+
+use super::Mat;
+
+/// Apply RoPE in place to an (n, d) matrix whose row i is position i+offset.
+pub fn rope_inplace(x: &mut Mat, base: f32, offset: usize) {
+    let d = x.cols;
+    assert!(d % 2 == 0, "rope requires even dim");
+    let half = d / 2;
+    let thetas: Vec<f32> = (0..half)
+        .map(|p| base.powf(-(2.0 * p as f32) / d as f32))
+        .collect();
+    for i in 0..x.rows {
+        let t = (i + offset) as f32;
+        let row = x.row_mut(i);
+        for p in 0..half {
+            let ang = t * thetas[p];
+            let (sin, cos) = ang.sin_cos();
+            let a = row[2 * p];
+            let b = row[2 * p + 1];
+            row[2 * p] = a * cos - b * sin;
+            row[2 * p + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+pub fn rope(x: &Mat, base: f32) -> Mat {
+    let mut out = x.clone();
+    rope_inplace(&mut out, base, 0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::dot;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn preserves_row_norms() {
+        let mut rng = Rng::new(0);
+        let x = randn(&mut rng, 6, 8);
+        let y = rope(&x, 10000.0);
+        for i in 0..6 {
+            let nx: f32 = x.row(i).iter().map(|v| v * v).sum();
+            let ny: f32 = y.row(i).iter().map(|v| v * v).sum();
+            assert!((nx - ny).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn position_zero_is_identity() {
+        let mut rng = Rng::new(1);
+        let x = randn(&mut rng, 1, 16);
+        let y = rope(&x, 10000.0);
+        assert!(x.max_abs_diff(&y) < 1e-6);
+    }
+
+    #[test]
+    fn scores_depend_only_on_offset() {
+        // Constant q/k rows: after RoPE, q_m . k_n must be a function of m-n.
+        let mut rng = Rng::new(2);
+        let qrow: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let krow: Vec<f32> = (0..8).map(|_| rng.normal_f32()).collect();
+        let n = 12;
+        let mut q = Mat::from_fn(n, 8, |_, j| qrow[j]);
+        let mut k = Mat::from_fn(n, 8, |_, j| krow[j]);
+        rope_inplace(&mut q, 10000.0, 0);
+        rope_inplace(&mut k, 10000.0, 0);
+        for off in 1..4usize {
+            let s0 = dot(q.row(off), k.row(0));
+            for m in off..n {
+                let s = dot(q.row(m), k.row(m - off));
+                assert!((s - s0).abs() < 1e-3, "off {off} m {m}: {s} vs {s0}");
+            }
+        }
+    }
+
+    #[test]
+    fn offset_shifts_positions() {
+        let mut rng = Rng::new(3);
+        let x = randn(&mut rng, 4, 8);
+        let mut a = x.clone();
+        rope_inplace(&mut a, 10000.0, 2);
+        let mut b = Mat::from_fn(6, 8, |i, j| if i >= 2 { x.at(i - 2, j) } else { 0.0 });
+        rope_inplace(&mut b, 10000.0, 0);
+        for i in 0..4 {
+            for j in 0..8 {
+                assert!((a.at(i, j) - b.at(i + 2, j)).abs() < 1e-5);
+            }
+        }
+    }
+}

@@ -1,0 +1,114 @@
+//! Minimal CLI argument parser (clap is not in the offline set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positionals; typed
+//! getters with defaults.  Unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments against a list of known option names.
+    pub fn parse(raw: &[String], known: &[&str]) -> anyhow::Result<Args> {
+        let mut a = Args {
+            known: known.iter().map(|s| s.to_string()).collect(),
+            ..Default::default()
+        };
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                anyhow::ensure!(
+                    a.known.iter().any(|k| *k == key),
+                    "unknown option --{key} (known: {})",
+                    a.known.join(", ")
+                );
+                let val = if let Some(v) = inline_val {
+                    v
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    i += 1;
+                    raw[i].clone()
+                } else {
+                    "true".to_string() // bare flag
+                };
+                a.flags.insert(key, val);
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(known: &[&str]) -> anyhow::Result<Args> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&raw, known)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.str_opt(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.str_opt(key)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.str_opt(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let a = Args::parse(
+            &v(&["serve", "--port", "8080", "--quiet", "--name=x", "extra"]),
+            &["port", "quiet", "name"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+        assert_eq!(a.usize_or("port", 0), 8080);
+        assert!(a.flag("quiet"));
+        assert_eq!(a.str_or("name", ""), "x");
+        assert_eq!(a.usize_or("missing", 7), 7);
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(Args::parse(&v(&["--nope"]), &["port"]).is_err());
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = Args::parse(&v(&["--x", "-3.5"]), &["x"]).unwrap();
+        assert_eq!(a.f64_or("x", 0.0), -3.5);
+    }
+}

@@ -1,0 +1,57 @@
+//! Tiny CSV writer for figure data series (consumed by external plotters).
+
+use std::io::Write;
+use std::path::Path;
+
+pub struct CsvWriter {
+    out: std::fs::File,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> anyhow::Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut out = std::fs::File::create(path)?;
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(cells.len() == self.cols, "csv arity mismatch");
+        let escaped: Vec<String> = cells
+            .iter()
+            .map(|c| {
+                if c.contains(',') || c.contains('"') || c.contains('\n') {
+                    format!("\"{}\"", c.replace('"', "\"\""))
+                } else {
+                    c.clone()
+                }
+            })
+            .collect();
+        writeln!(self.out, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) -> anyhow::Result<()> {
+        self.row(&cells.iter().map(|x| format!("{x}")).collect::<Vec<_>>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("vsprefill_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["x,y".into(), "1".into()]).unwrap();
+        w.row_f64(&[2.5, 3.0]).unwrap();
+        drop(w);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n\"x,y\",1\n2.5,3\n");
+    }
+}

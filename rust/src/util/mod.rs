@@ -1,0 +1,14 @@
+//! Self-built substrates that would normally come from crates.io.
+//!
+//! This build runs fully offline with only the `xla` crate's dependency
+//! closure available, so the usual ecosystem pieces (serde, clap, rand,
+//! criterion, proptest) are implemented here from scratch, scoped to what
+//! the coordinator and the experiment harness actually need.
+
+pub mod args;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,128 @@
+//! Mini property-testing harness (proptest is not in the offline set).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` generated inputs;
+//! on failure it performs a bounded greedy shrink via the generator's
+//! `shrink` hook and panics with the minimal failing case found.
+
+use crate::util::rng::Rng;
+
+/// A generator of test inputs with an optional shrinker.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller versions of `v` (tried in order).
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run a property over generated cases; panics on the (shrunken) failure.
+pub fn check<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(&G::Value) -> bool) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = gen.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_loop(gen, v, &prop);
+            panic!("property failed (seed {seed}, case {case}): {minimal:?}");
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(gen: &G, mut v: G::Value, prop: &impl Fn(&G::Value) -> bool) -> G::Value {
+    'outer: for _ in 0..200 {
+        for cand in gen.shrink(&v) {
+            if !prop(&cand) {
+                v = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    v
+}
+
+/// Generator: usize in [lo, hi], shrinking toward lo.
+pub struct UsizeRange(pub usize, pub usize);
+
+impl Gen for UsizeRange {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.0 + rng.below(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (*v - self.0) / 2);
+            out.push(*v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Generator: f32 vector of a given length, N(0, scale), shrinking to zeros.
+pub struct VecF32 {
+    pub len: usize,
+    pub scale: f32,
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        (0..self.len).map(|_| rng.normal_f32() * self.scale).collect()
+    }
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        if v.iter().all(|x| *x == 0.0) {
+            return Vec::new();
+        }
+        vec![vec![0.0; v.len()], v.iter().map(|x| x / 2.0).collect()]
+    }
+}
+
+/// Generator: pair of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, &UsizeRange(0, 100), |&x| x <= 100);
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let r = std::panic::catch_unwind(|| {
+            check(2, 200, &UsizeRange(0, 100), |&x| x < 50);
+        });
+        let msg = format!("{:?}", r.unwrap_err().downcast_ref::<String>().unwrap());
+        // Greedy shrink should land on the boundary 50.
+        assert!(msg.contains("50"), "{msg}");
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        check(3, 50, &Pair(UsizeRange(1, 8), VecF32 { len: 4, scale: 1.0 }), |(n, v)| {
+            *n >= 1 && v.len() == 4
+        });
+    }
+}

@@ -1,0 +1,124 @@
+//! End-to-end serving integration: coordinator + TCP server + PJRT backend
+//! (when artifacts exist) under concurrent load, plus property tests on the
+//! coordinator invariants using the in-crate mini property harness.
+
+use std::sync::Arc;
+
+use vsprefill::coordinator::{
+    server::{Client, Server},
+    AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest,
+};
+use vsprefill::runtime::ArtifactBundle;
+use vsprefill::util::prop::{check, Gen, UsizeRange};
+use vsprefill::util::rng::Rng;
+
+fn native_coordinator() -> Arc<Coordinator> {
+    let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+    let engine = PrefillEngine::native_quick(cfg.engine.clone());
+    Arc::new(Coordinator::start(cfg, engine))
+}
+
+#[test]
+fn concurrent_clients_over_tcp() {
+    let coordinator = native_coordinator();
+    let server = Server::start(coordinator.clone(), 0).unwrap();
+    let addr = server.addr;
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for i in 0..5u64 {
+                let mode = if i % 2 == 0 { "sparse" } else { "dense" };
+                let resp = client
+                    .prefill_synthetic(c * 100 + i, 128, i, mode, 0.5)
+                    .unwrap();
+                assert!(resp.ok, "{:?}", resp.error);
+                assert_eq!(resp.id, c * 100 + i);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let snap = coordinator.metrics.snapshot();
+    assert_eq!(snap.completed, 20);
+    server.shutdown();
+}
+
+#[test]
+fn pjrt_backend_serves_when_artifacts_present() {
+    if !ArtifactBundle::available() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+    let rt = vsprefill::runtime::Engine::load_filtered(&ArtifactBundle::default_dir(), |n| {
+        n.ends_with("_256")
+    })
+    .unwrap();
+    let engine = PrefillEngine::pjrt(cfg.engine.clone(), rt).unwrap();
+    let coordinator = Coordinator::start(cfg, engine);
+    for i in 0..4 {
+        let mode = if i % 2 == 0 { AttentionMode::Sparse } else { AttentionMode::Dense };
+        let resp = coordinator
+            .prefill(PrefillRequest::synthetic(i, 200, i, mode))
+            .unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.bucket, 256);
+        if mode == AttentionMode::Sparse {
+            assert!(resp.density < 1.0);
+            assert!(resp.index_us > 0);
+        }
+    }
+    let snap = coordinator.shutdown();
+    assert_eq!(snap.completed, 4);
+}
+
+#[test]
+fn property_every_submitted_request_is_answered_once() {
+    // Property: for any burst size and sequence-length mix within capacity,
+    // every accepted request gets exactly one response with its own id.
+    let coordinator = native_coordinator();
+    check(7, 8, &UsizeRange(1, 24), |&burst| {
+        let mut rng = Rng::new(burst as u64);
+        let mut rxs = Vec::new();
+        for i in 0..burst {
+            let n = [64usize, 128, 200, 256][rng.below(4)];
+            let req = PrefillRequest::synthetic(i as u64, n, i as u64, AttentionMode::Sparse);
+            match coordinator.submit(req) {
+                Ok(rx) => rxs.push((i as u64, rx)),
+                Err(_) => {} // backpressure is allowed
+            }
+        }
+        rxs.into_iter().all(|(id, rx)| {
+            let resp = rx.recv().unwrap();
+            resp.ok && resp.id == id
+        })
+    });
+}
+
+#[test]
+fn property_density_monotone_in_budget() {
+    // Property: a larger budget knob never produces a sparser mask.
+    struct BudgetPair;
+    impl Gen for BudgetPair {
+        type Value = (f32, f32);
+        fn generate(&self, rng: &mut Rng) -> (f32, f32) {
+            let a = 0.1 + 0.8 * rng.f32();
+            let b = (a + 0.1).min(1.0);
+            (a, b)
+        }
+    }
+    let cfg = CoordinatorConfig::default();
+    let engine = std::cell::RefCell::new(PrefillEngine::native_quick(cfg.engine.clone()));
+    let rng0 = std::cell::RefCell::new(Rng::new(0));
+    check(11, 10, &BudgetPair, |&(lo, hi)| {
+        let mut req_lo = PrefillRequest::synthetic(1, 128, 5, AttentionMode::Sparse);
+        req_lo.budget = lo;
+        let mut req_hi = PrefillRequest::synthetic(2, 128, 5, AttentionMode::Sparse);
+        req_hi.budget = hi;
+        let d_lo = engine.borrow_mut().process(&req_lo, &mut rng0.borrow_mut()).density;
+        let d_hi = engine.borrow_mut().process(&req_hi, &mut rng0.borrow_mut()).density;
+        d_lo <= d_hi + 1e-9
+    });
+}
