@@ -16,18 +16,27 @@ use vsprefill::coordinator::{
     Coordinator, CoordinatorConfig, PrefillEngine,
 };
 use vsprefill::evalsuite::{accuracy, task_head, ProbeCache, TaskInstance};
-use vsprefill::runtime::ArtifactBundle;
 use vsprefill::sparse_attn::VsPrefill;
 use vsprefill::synth::qwen_sim;
 
+#[cfg(feature = "pjrt")]
+fn build_engine(cfg: &CoordinatorConfig) -> anyhow::Result<(PrefillEngine, &'static str)> {
+    if vsprefill::runtime::ArtifactBundle::available() {
+        let rt = vsprefill::runtime::Engine::load_default()?;
+        Ok((PrefillEngine::pjrt(cfg.engine.clone(), rt)?, "pjrt"))
+    } else {
+        Ok((PrefillEngine::native_quick(cfg.engine.clone()), "native"))
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_engine(cfg: &CoordinatorConfig) -> anyhow::Result<(PrefillEngine, &'static str)> {
+    Ok((PrefillEngine::native_quick(cfg.engine.clone()), "native"))
+}
+
 fn main() -> anyhow::Result<()> {
     let cfg = CoordinatorConfig { max_wait_ms: 2, ..Default::default() };
-    let (engine, backend) = if ArtifactBundle::available() {
-        let rt = vsprefill::runtime::Engine::load_default()?;
-        (PrefillEngine::pjrt(cfg.engine.clone(), rt)?, "pjrt")
-    } else {
-        (PrefillEngine::native_quick(cfg.engine.clone()), "native")
-    };
+    let (engine, backend) = build_engine(&cfg)?;
     println!("== needle-retrieval serving demo (backend: {backend}) ==\n");
 
     let coordinator = Arc::new(Coordinator::start(cfg, engine));

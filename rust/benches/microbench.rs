@@ -1,37 +1,56 @@
 //! Microbenchmarks of the hot-path components (the §Perf instrument):
 //!   - dense flash attention executor (cells/s)
-//!   - fused VS sparse executor (cells/s at ~15% density)
+//!   - fused VS sparse executor, tiled vs the seed's row-serial baseline
 //!   - VSIndexer forward (positions/s)
 //!   - cumulative-threshold budget selection
 //!   - Merge-Path block union
-//!   - PJRT artifact execution (when available): flash / indexer / sparse
+//!   - PJRT artifact execution (with the `pjrt` feature + artifacts)
 //!
-//! Prints one line per component: name, work, wall time, throughput.
+//! Plus the parallel-engine sweep: thread counts {1, 2, 4, 8} x sequence
+//! lengths {1k, 4k} for the tiled flash and VS sparse executors, with
+//! speedups against the single-thread tiled run and against the seed's
+//! row-serial scalar executor.  Results go to stdout and, machine-readable,
+//! to BENCH_microbench.json (cwd) so later PRs can track the trajectory.
 
 use std::time::Instant;
 
 use vsprefill::attention::flash::flash_attention;
 use vsprefill::indexer::train::{distill, TrainConfig};
-use vsprefill::runtime::ArtifactBundle;
 use vsprefill::sparse::merge::block_columns;
-use vsprefill::sparse_attn::exec::sparse_attention_vs;
+use vsprefill::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_rowserial};
 use vsprefill::sparse_attn::VsPrefill;
 use vsprefill::synth::{gen_head, SynthConfig};
+use vsprefill::util::parallel::{configured_threads, with_threads};
 use vsprefill::util::rng::Rng;
 
 fn time<F: FnMut()>(name: &str, work: f64, unit: &str, reps: usize, mut f: F) {
-    // warmup
+    let ms = time_ms(reps, &mut f);
+    println!(
+        "{name:<28} {work:>12.0} {unit:<10} {ms:>10.3} ms  {:>12.2e} {unit}/s",
+        work / (ms * 1e-3)
+    );
+}
+
+/// Median-free simple timer: one warmup call, then the mean of `reps` runs.
+fn time_ms<F: FnMut()>(reps: usize, f: &mut F) -> f64 {
     f();
     let t0 = Instant::now();
     for _ in 0..reps {
         f();
     }
-    let dt = t0.elapsed().as_secs_f64() / reps as f64;
-    println!(
-        "{name:<28} {work:>12.0} {unit:<10} {:>10.3} ms  {:>12.2e} {unit}/s",
-        dt * 1e3,
-        work / dt
-    );
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+#[derive(Clone)]
+struct SweepRow {
+    kernel: &'static str,
+    n: usize,
+    threads: usize,
+    ms: f64,
+    /// vs the same kernel at 1 thread.
+    speedup_vs_1t: f64,
+    /// vs the seed's row-serial scalar executor (sparse kernel only; 0 = n/a).
+    speedup_vs_rowserial: f64,
 }
 
 fn main() {
@@ -48,8 +67,11 @@ fn main() {
     time("flash_attention (native)", dense_cells, "cells", 3, || {
         std::hint::black_box(flash_attention(&head.q, &head.k, &head.v, 64, 64));
     });
-    time("vs_sparse_attention (native)", sparse_cells, "cells", 3, || {
+    time("vs_sparse tiled (native)", sparse_cells, "cells", 3, || {
         std::hint::black_box(sparse_attention_vs(&head.q, &head.k, &head.v, &idx, 64));
+    });
+    time("vs_sparse row-serial (seed)", sparse_cells, "cells", 3, || {
+        std::hint::black_box(sparse_attention_vs_rowserial(&head.q, &head.k, &head.v, &idx));
     });
     time("vs_indexer forward", n as f64, "pos", 10, || {
         std::hint::black_box(vsp.indexer.predict_kv(&head.k, &head.v));
@@ -69,33 +91,84 @@ fn main() {
         ));
     });
 
-    if ArtifactBundle::available() {
-        let rt = vsprefill::runtime::Engine::load_filtered(
-            &ArtifactBundle::default_dir(),
-            |name| name.ends_with("_256"),
-        )
-        .unwrap();
-        let nb = 256;
-        let mut rng = Rng::new(1);
-        let h = gen_head(&mut rng, nb, &SynthConfig::default(), 0);
-        let cells = (nb * (nb + 1) / 2) as f64;
-        time("PJRT flash_attn_256", cells, "cells", 5, || {
-            std::hint::black_box(rt.flash_attention(nb, &h.q, &h.k, &h.v).unwrap());
+    // ---- parallel-engine sweep: threads x sequence length ----
+    let threads_sweep = [1usize, 2, 4, 8];
+    let lens = [1024usize, 4096];
+    let mut rows: Vec<SweepRow> = Vec::new();
+    println!(
+        "\nthread sweep (pool configured: {}, hw threads: {})",
+        configured_threads(),
+        hw_threads()
+    );
+    println!("kernel                   n  threads       ms   vs 1t   vs row-serial");
+    for &nn in &lens {
+        let mut r = Rng::new(42);
+        let h = gen_head(&mut r, nn, &SynthConfig::default(), 0);
+        let sidx = vsp.predict_kv(&h.k, &h.v, 0.5);
+        let reps = if nn >= 4096 { 2 } else { 3 };
+
+        let rowserial_ms = time_ms(reps, &mut || {
+            std::hint::black_box(sparse_attention_vs_rowserial(&h.q, &h.k, &h.v, &sidx));
         });
-        time("PJRT vs_aggregate_256", cells, "cells", 5, || {
-            std::hint::black_box(rt.vs_aggregate(nb, &h.q, &h.k).unwrap());
+
+        let mut flash_1t = 0.0f64;
+        let mut sparse_1t = 0.0f64;
+        for &t in &threads_sweep {
+            let flash_ms = with_threads(t, || {
+                time_ms(reps, &mut || {
+                    std::hint::black_box(flash_attention(&h.q, &h.k, &h.v, 64, 64));
+                })
+            });
+            if t == 1 {
+                flash_1t = flash_ms;
+            }
+            rows.push(SweepRow {
+                kernel: "flash_attention",
+                n: nn,
+                threads: t,
+                ms: flash_ms,
+                speedup_vs_1t: flash_1t / flash_ms,
+                speedup_vs_rowserial: 0.0,
+            });
+
+            let sparse_ms = with_threads(t, || {
+                time_ms(reps, &mut || {
+                    std::hint::black_box(sparse_attention_vs(&h.q, &h.k, &h.v, &sidx, 64));
+                })
+            });
+            if t == 1 {
+                sparse_1t = sparse_ms;
+            }
+            rows.push(SweepRow {
+                kernel: "sparse_attention_vs",
+                n: nn,
+                threads: t,
+                ms: sparse_ms,
+                speedup_vs_1t: sparse_1t / sparse_ms,
+                speedup_vs_rowserial: rowserial_ms / sparse_ms,
+            });
+        }
+        rows.push(SweepRow {
+            kernel: "sparse_attention_vs_rowserial",
+            n: nn,
+            threads: 1,
+            ms: rowserial_ms,
+            speedup_vs_1t: 1.0,
+            speedup_vs_rowserial: 1.0,
         });
-        let w = rt.bundle.load_weights("indexer_weights.json").unwrap();
-        time("PJRT indexer_256", nb as f64, "pos", 10, || {
-            std::hint::black_box(rt.indexer_forward(nb, &h.k, &h.v, &w).unwrap());
-        });
-        let idx256 = vsprefill::sparse::VsIndices::new(vec![0, 1, 40, 100], vec![0, 1, 4]);
-        time("PJRT sparse_attn_256", idx256.covered_cells(nb) as f64, "cells", 5, || {
-            std::hint::black_box(rt.sparse_attention(nb, &h.q, &h.k, &h.v, &idx256).unwrap());
-        });
-    } else {
-        println!("(PJRT rows skipped: run `make artifacts`)");
+        for row in rows.iter().filter(|r| r.n == nn) {
+            println!(
+                "{:<22} {:>5} {:>8} {:>8.3} {:>7.2} {:>15.2}",
+                row.kernel, row.n, row.threads, row.ms, row.speedup_vs_1t, row.speedup_vs_rowserial
+            );
+        }
     }
+    write_json(&rows);
+
+    #[cfg(feature = "pjrt")]
+    pjrt_rows();
+    #[cfg(not(feature = "pjrt"))]
+    println!("(PJRT rows skipped: built without the `pjrt` feature)");
 
     // Calibration summary consumed by the cost model.
     let cm = vsprefill::sparse_attn::cost::CostModel::calibrate();
@@ -103,4 +176,68 @@ fn main() {
         "\ncalibrated cost model: attn {:.2e} flops/s, index {:.2e} flops/s, sparse_eff {:.2}",
         cm.attn_flops_per_sec, cm.index_flops_per_sec, cm.sparse_eff
     );
+}
+
+fn hw_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+fn write_json(rows: &[SweepRow]) {
+    let mut s = String::from("{\n");
+    s.push_str("  \"bench\": \"microbench\",\n");
+    s.push_str(&format!(
+        "  \"available_parallelism\": {},\n  \"configured_threads\": {},\n  \"sweep\": [\n",
+        hw_threads(),
+        configured_threads()
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"n\": {}, \"threads\": {}, \"ms\": {:.4}, \
+             \"speedup_vs_1t\": {:.3}, \"speedup_vs_rowserial\": {:.3}}}{}\n",
+            r.kernel,
+            r.n,
+            r.threads,
+            r.ms,
+            r.speedup_vs_1t,
+            r.speedup_vs_rowserial,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    let path = "BENCH_microbench.json";
+    match std::fs::write(path, &s) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn pjrt_rows() {
+    use vsprefill::runtime::ArtifactBundle;
+    if !ArtifactBundle::available() {
+        println!("(PJRT rows skipped: run `make artifacts`)");
+        return;
+    }
+    let rt = vsprefill::runtime::Engine::load_filtered(&ArtifactBundle::default_dir(), |name| {
+        name.ends_with("_256")
+    })
+    .unwrap();
+    let nb = 256;
+    let mut rng = Rng::new(1);
+    let h = gen_head(&mut rng, nb, &SynthConfig::default(), 0);
+    let cells = (nb * (nb + 1) / 2) as f64;
+    time("PJRT flash_attn_256", cells, "cells", 5, || {
+        std::hint::black_box(rt.flash_attention(nb, &h.q, &h.k, &h.v).unwrap());
+    });
+    time("PJRT vs_aggregate_256", cells, "cells", 5, || {
+        std::hint::black_box(rt.vs_aggregate(nb, &h.q, &h.k).unwrap());
+    });
+    let w = rt.bundle.load_weights("indexer_weights.json").unwrap();
+    time("PJRT indexer_256", nb as f64, "pos", 10, || {
+        std::hint::black_box(rt.indexer_forward(nb, &h.k, &h.v, &w).unwrap());
+    });
+    let idx256 = vsprefill::sparse::VsIndices::new(vec![0, 1, 40, 100], vec![0, 1, 4]);
+    time("PJRT sparse_attn_256", idx256.covered_cells(nb) as f64, "cells", 5, || {
+        std::hint::black_box(rt.sparse_attention(nb, &h.q, &h.k, &h.v, &idx256).unwrap());
+    });
 }

@@ -1,33 +1,40 @@
 //! Tiled streaming-softmax attention — the CPU analog of FlashAttention
 //! (Dao et al., 2022) and the dense baseline of the cost calibration.
 //! Never materializes the n x n matrix: one (block_q x block_k) score tile
-//! plus running (max, sumexp, acc) per row.
+//! plus running (max, sumexp, acc) per row.  Query blocks are independent,
+//! so they fan out across the worker pool; each worker writes an exclusive
+//! contiguous tile of the output.
 
 use crate::tensor::ops::dot;
 use crate::tensor::Mat;
+use crate::util::parallel::par_chunks_mut;
 
 use super::dense::NEG_INF;
 
-/// Exact causal attention with O(block_q * block_k) working set.
+/// Exact causal attention with O(block_q * block_k) working set per worker.
 pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, block_q: usize, block_k: usize) -> Mat {
     let (n, d) = (q.rows, q.cols);
     assert_eq!(k.rows, n);
     assert_eq!(v.rows, n);
-    let scale = 1.0 / (d as f32).sqrt();
     let mut out = Mat::zeros(n, d);
-    let mut tile = vec![0.0f32; block_q * block_k];
+    if n == 0 {
+        return out;
+    }
+    let block_q = block_q.clamp(1, n);
+    let block_k = block_k.max(1);
+    let scale = 1.0 / (d as f32).sqrt();
 
-    for q0 in (0..n).step_by(block_q) {
-        let bq = block_q.min(n - q0);
+    par_chunks_mut(&mut out.data, block_q * d, |blk, out_chunk| {
+        let q0 = blk * block_q;
+        let bq = out_chunk.len() / d;
+        let mut tile = vec![0.0f32; bq * block_k];
         let mut m = vec![NEG_INF; bq];
         let mut s = vec![0.0f32; bq];
-        let mut acc = vec![0.0f32; bq * d];
-        // Only key blocks at or below the diagonal contribute.
-        for k0 in (0..=q0 + bq - 1).step_by(block_k) {
+        // out_chunk doubles as the rescaled accumulator until the final
+        // normalization.  Only key blocks at or below the diagonal
+        // contribute: the last admissible column is q0 + bq - 1.
+        for k0 in (0..q0 + bq).step_by(block_k) {
             let bk = block_k.min(n - k0);
-            if k0 > q0 + bq - 1 {
-                break;
-            }
             // score tile
             for i in 0..bq {
                 let qrow = q.row(q0 + i);
@@ -50,7 +57,7 @@ pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, block_q: usize, block_k: usize
                 let m_new = m[i].max(tile_max);
                 let alpha = (m[i] - m_new).exp();
                 s[i] *= alpha;
-                let arow = &mut acc[i * d..(i + 1) * d];
+                let arow = &mut out_chunk[i * d..(i + 1) * d];
                 if alpha != 1.0 {
                     arow.iter_mut().for_each(|x| *x *= alpha);
                 }
@@ -70,13 +77,9 @@ pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, block_q: usize, block_k: usize
         }
         for i in 0..bq {
             let inv = 1.0 / s[i];
-            let arow = &acc[i * d..(i + 1) * d];
-            let orow = out.row_mut(q0 + i);
-            for t in 0..d {
-                orow[t] = arow[t] * inv;
-            }
+            out_chunk[i * d..(i + 1) * d].iter_mut().for_each(|x| *x *= inv);
         }
-    }
+    });
     out
 }
 
@@ -100,8 +103,12 @@ mod tests {
         );
         let want = dense_attention(&q, &k, &v);
         for (bq, bk) in [(16, 16), (32, 16), (96, 96), (17, 13), (1, 1)] {
-            let got = flash_attention(&q, &k, &v, bq, bk);
-            assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq} bk={bk}");
+            for threads in [1, 4] {
+                let got = crate::util::parallel::with_threads(threads, || {
+                    flash_attention(&q, &k, &v, bq, bk)
+                });
+                assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq} bk={bk} threads={threads}");
+            }
         }
     }
 

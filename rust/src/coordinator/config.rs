@@ -6,7 +6,7 @@
 //!   "max_queue": 256, "max_batch": 8, "max_wait_ms": 5,
 //!   "kv_blocks": 4096, "kv_block_size": 64,
 //!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
-//!               "budget_tau": 0.9 }
+//!               "threads": 0, "budget_tau": 0.9 }
 //! }
 //! ```
 
@@ -37,6 +37,9 @@ pub fn load(path: Option<&str>, args: &Args) -> anyhow::Result<CoordinatorConfig
     if let Some(v) = args.str_opt("kv-blocks") {
         cfg.kv_blocks = v.parse()?;
     }
+    if let Some(v) = args.str_opt("threads") {
+        cfg.engine.threads = v.parse()?;
+    }
     validate(&cfg)?;
     Ok(cfg)
 }
@@ -64,6 +67,9 @@ fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
         }
         if let Some(v) = e.get("block_q").and_then(|x| x.as_usize()) {
             cfg.engine.block_q = v;
+        }
+        if let Some(v) = e.get("threads").and_then(|x| x.as_usize()) {
+            cfg.engine.threads = v;
         }
     }
     Ok(())

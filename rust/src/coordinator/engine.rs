@@ -16,6 +16,7 @@ use std::time::Instant;
 
 use crate::indexer::train::{distill, TrainConfig};
 use crate::indexer::Indexer;
+#[cfg(feature = "pjrt")]
 use crate::runtime;
 use crate::sparse_attn::exec::sparse_attention_vs;
 use crate::sparse_attn::VsPrefill;
@@ -38,6 +39,10 @@ pub struct EngineConfig {
     pub buckets: Vec<usize>,
     /// Block size of the tiled native executor.
     pub block_q: usize,
+    /// Worker-pool size for the execution engine (kernels and the
+    /// coordinator's batch fan-out).  0 = auto: `VSPREFILL_THREADS` env var,
+    /// else available parallelism.
+    pub threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -46,12 +51,14 @@ impl Default for EngineConfig {
             synth: SynthConfig::default(),
             buckets: vec![128, 256, 512, 1024],
             block_q: 64,
+            threads: 0,
         }
     }
 }
 
 enum Backend {
     Native,
+    #[cfg(feature = "pjrt")]
     Pjrt(runtime::Engine),
 }
 
@@ -60,6 +67,7 @@ pub struct PrefillEngine {
     vsp: VsPrefill,
     backend: Backend,
     /// Indexer weights for the PJRT indexer graph (loaded from artifacts).
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     pjrt_weights: Option<std::collections::BTreeMap<String, (Vec<usize>, Vec<f32>)>>,
 }
 
@@ -91,6 +99,7 @@ impl PrefillEngine {
     }
 
     /// PJRT backend: loads artifacts + the Python-distilled indexer weights.
+    #[cfg(feature = "pjrt")]
     pub fn pjrt(cfg: EngineConfig, rt: runtime::Engine) -> anyhow::Result<PrefillEngine> {
         let weights = rt.bundle.load_weights("indexer_weights.json")?;
         let text = std::fs::read_to_string(rt.bundle.dir.join("indexer_weights.json"))?;
@@ -114,8 +123,21 @@ impl PrefillEngine {
         self.cfg.buckets.iter().cloned().filter(|&b| b >= n).min()
     }
 
-    /// Process one request (called from the executor thread).
-    pub fn process(&mut self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+    /// True when `process` may be called concurrently from several threads
+    /// on a shared reference: the native backend is plain owned data with no
+    /// interior mutability, while the PJRT backend holds single-threaded
+    /// wrapper types (`Rc`s, raw executable pointers).
+    pub fn supports_parallel(&self) -> bool {
+        match &self.backend {
+            Backend::Native => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => false,
+        }
+    }
+
+    /// Process one request (called from the executor thread, or — for the
+    /// native backend — from the coordinator's batch worker pool).
+    pub fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
         let queue_us = req.submitted_at.elapsed().as_micros() as u64;
         let mut resp = PrefillResponse { id: req.id, queue_us, ..Default::default() };
         let n = req.seq_len();
@@ -130,6 +152,7 @@ impl PrefillEngine {
         let t0 = Instant::now();
         let result = match &self.backend {
             Backend::Native => self.process_native(req, bucket, rng, &mut resp),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt(_) => self.process_pjrt(req, bucket, rng, &mut resp),
         };
         resp.prefill_us = t0.elapsed().as_micros() as u64;
@@ -186,6 +209,7 @@ impl PrefillEngine {
         Ok(())
     }
 
+    #[cfg(feature = "pjrt")]
     fn process_pjrt(
         &self,
         req: &PrefillRequest,
@@ -235,7 +259,7 @@ mod tests {
 
     #[test]
     fn native_engine_dense_vs_sparse_digests_close() {
-        let mut e = PrefillEngine::native_quick(EngineConfig::default());
+        let e = PrefillEngine::native_quick(EngineConfig::default());
         let mut rng = Rng::new(0);
         let rd = e.process(&PrefillRequest::synthetic(1, 128, 3, AttentionMode::Dense), &mut rng);
         let rs = e.process(&PrefillRequest::synthetic(2, 128, 3, AttentionMode::Sparse), &mut rng);
@@ -250,7 +274,7 @@ mod tests {
 
     #[test]
     fn oversized_request_fails_cleanly() {
-        let mut e = PrefillEngine::native_quick(EngineConfig::default());
+        let e = PrefillEngine::native_quick(EngineConfig::default());
         let mut rng = Rng::new(0);
         let r = e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense), &mut rng);
         assert!(!r.ok);
@@ -259,7 +283,7 @@ mod tests {
 
     #[test]
     fn deterministic_for_same_seed() {
-        let mut e = PrefillEngine::native_quick(EngineConfig::default());
+        let e = PrefillEngine::native_quick(EngineConfig::default());
         let mut rng = Rng::new(0);
         let a = e.process(&PrefillRequest::synthetic(1, 128, 9, AttentionMode::Sparse), &mut rng);
         let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse), &mut rng);

@@ -75,8 +75,10 @@ impl Coordinator {
     /// executable pointers, which makes `PrefillEngine` `!Send` by
     /// construction.  The engine is *moved wholesale* into the single
     /// executor thread here — no clone of any `Rc` stays behind on the
-    /// calling thread, and all subsequent use is from that one thread, which
-    /// is exactly the single-threaded discipline the types assume.
+    /// calling thread, and all subsequent PJRT use is from that one thread,
+    /// which is exactly the single-threaded discipline the types assume.
+    /// (The native backend additionally shares `&engine` with the scoped
+    /// batch workers — see `supports_parallel`.)
     pub fn start(cfg: CoordinatorConfig, engine: PrefillEngine) -> Coordinator {
         struct SendEngine(PrefillEngine);
         unsafe impl Send for SendEngine {}
@@ -102,10 +104,14 @@ impl Coordinator {
         let adm = admission.clone();
         let met = metrics.clone();
         let stp = stop.clone();
+        // `engine.threads` is scoped to this coordinator's executor thread
+        // (a per-thread override, not process-global state): two
+        // coordinators with different knobs in one process do not fight.
+        let pool_threads = cfg.engine.threads;
         let executor = std::thread::spawn(move || {
-            let mut engine = engine.into_inner();
+            let engine = engine.into_inner();
             let mut rng = Rng::new(0xC0FFEE);
-            loop {
+            let mut run = move || loop {
                 if stp.load(Ordering::Relaxed) && adm.is_empty() {
                     break;
                 }
@@ -133,12 +139,54 @@ impl Coordinator {
                         adm.requeue(item);
                     }
                 }
-                for item in admitted {
-                    let resp = engine.process(&item.req, &mut rng);
-                    kv.lock().unwrap().free(item.req.id);
-                    met.record(&resp);
-                    let _ = item.reply.send(resp);
+                // Execute the drained batch.  The native backend fans the
+                // requests out across the worker pool (each worker runs its
+                // request's kernels serially — the pool pins nested
+                // parallelism to 1); the PJRT backend stays serial on this
+                // thread, matching its single-threaded wrapper types.
+                if engine.supports_parallel() && admitted.len() > 1 {
+                    // SAFETY of the Sync wrapper: taken only when
+                    // supports_parallel() is true, i.e. the Native backend —
+                    // plain owned data, no interior mutability, and process()
+                    // takes &self.
+                    struct ShareEngine<'a>(&'a PrefillEngine);
+                    unsafe impl Sync for ShareEngine<'_> {}
+                    impl<'a> ShareEngine<'a> {
+                        // Method (not field access) so the closure captures
+                        // the whole Sync wrapper rather than the inner
+                        // reference (2021 disjoint capture).
+                        fn engine(&self) -> &'a PrefillEngine {
+                            self.0
+                        }
+                    }
+                    let eng = ShareEngine(&engine);
+                    let jobs: Vec<(batcher::WorkItem, Rng)> = admitted
+                        .into_iter()
+                        .map(|item| {
+                            let r = rng.fork(item.req.id);
+                            (item, r)
+                        })
+                        .collect();
+                    let (kv_ref, met_ref) = (&kv, &met);
+                    crate::util::parallel::par_drain(jobs, |(item, mut r)| {
+                        let resp = eng.engine().process(&item.req, &mut r);
+                        kv_ref.lock().unwrap().free(item.req.id);
+                        met_ref.record(&resp);
+                        let _ = item.reply.send(resp);
+                    });
+                } else {
+                    for item in admitted {
+                        let resp = engine.process(&item.req, &mut rng);
+                        kv.lock().unwrap().free(item.req.id);
+                        met.record(&resp);
+                        let _ = item.reply.send(resp);
+                    }
                 }
+            };
+            if pool_threads > 0 {
+                crate::util::parallel::with_threads(pool_threads, move || run());
+            } else {
+                run();
             }
         });
 

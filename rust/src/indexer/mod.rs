@@ -64,26 +64,31 @@ impl Indexer {
     }
 
     /// Hidden activations Z and pre-activations (kept for backprop).
+    /// Positions are independent, so the forward fans row bands out across
+    /// the worker pool (the serving path scores every KV position at once).
     pub fn hidden_fwd(&self, x: &Mat) -> (Mat, Mat) {
         assert_eq!(x.cols, self.in_dim(), "indexer input dim mismatch");
         let h = self.hidden();
         let mut pre = Mat::zeros(x.rows, h);
-        for i in 0..x.rows {
-            let xrow = x.row(i);
-            let prow = pre.row_mut(i);
-            for (kk, &xv) in xrow.iter().enumerate() {
-                if xv == 0.0 {
-                    continue;
+        let band = 64; // rows per work item
+        crate::util::parallel::par_chunks_mut(&mut pre.data, band * h, |ci, chunk| {
+            let row0 = ci * band;
+            for (r, prow) in chunk.chunks_mut(h).enumerate() {
+                let xrow = x.row(row0 + r);
+                for (kk, &xv) in xrow.iter().enumerate() {
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let wrow = self.wu.row(kk);
+                    for t in 0..h {
+                        prow[t] += xv * wrow[t];
+                    }
                 }
-                let wrow = self.wu.row(kk);
                 for t in 0..h {
-                    prow[t] += xv * wrow[t];
+                    prow[t] += self.bu[t];
                 }
             }
-            for t in 0..h {
-                prow[t] += self.bu[t];
-            }
-        }
+        });
         let z = Mat::from_fn(pre.rows, h, |i, t| silu(pre.at(i, t)));
         (z, pre)
     }

@@ -21,6 +21,10 @@ pub mod coordinator;
 pub mod evalsuite;
 pub mod experiments;
 pub mod indexer;
+/// PJRT execution of the AOT artifacts.  Compiled only with the `pjrt`
+/// feature: it needs the `xla` crate, which the offline tier-1 build does
+/// not have (see Cargo.toml).
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sparse;
 pub mod sparse_attn;

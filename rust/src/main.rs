@@ -11,12 +11,13 @@ use vsprefill::coordinator::{
     server::Server, AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest,
 };
 use vsprefill::experiments as exp;
+#[cfg(feature = "pjrt")]
 use vsprefill::runtime;
 use vsprefill::util::args::Args;
 
 const KNOWN: &[&str] = &[
     "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "artifacts",
-    "config", "max-queue", "max-batch", "max-wait-ms", "kv-blocks",
+    "config", "max-queue", "max-batch", "max-wait-ms", "kv-blocks", "threads",
 ];
 
 fn main() -> anyhow::Result<()> {
@@ -44,11 +45,14 @@ fn coordinator_config(args: &Args) -> anyhow::Result<CoordinatorConfig> {
 fn build_engine(args: &Args) -> anyhow::Result<PrefillEngine> {
     let cfg = coordinator_config(args)?;
     match args.str_or("backend", "native").as_str() {
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let dir = args.str_or("artifacts", "artifacts");
             let rt = runtime::Engine::load(std::path::Path::new(&dir))?;
             PrefillEngine::pjrt(cfg.engine, rt)
         }
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => anyhow::bail!("this binary was built without the `pjrt` feature"),
         _ => Ok(PrefillEngine::native_quick(cfg.engine)),
     }
 }
@@ -140,6 +144,12 @@ fn experiment(args: &Args) -> anyhow::Result<()> {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn runtime_smoke(_args: &Args) -> anyhow::Result<()> {
+    anyhow::bail!("this binary was built without the `pjrt` feature (see rust/README.md)")
+}
+
+#[cfg(feature = "pjrt")]
 fn runtime_smoke(args: &Args) -> anyhow::Result<()> {
     use vsprefill::tensor::Mat;
     use vsprefill::util::rng::Rng;

@@ -2,32 +2,140 @@
 //!
 //! `sparse_attention_vs` mirrors the fused Pallas kernel (§4.3): per query
 //! block it forms the merged column union via Merge-Path (`block_columns`),
-//! gathers K/V on demand, and runs a masked streaming softmax over the
-//! gathered columns only — work proportional to the union size, not n.
+//! gathers the union's K/V rows into contiguous tile buffers, and runs a
+//! streaming softmax over column sub-tiles with per-row causal + membership
+//! masking.  Query blocks fan out across the worker pool
+//! (`util::parallel`), each worker owning an exclusive tile of the output.
 
-
+use crate::sparse::merge::block_columns;
 use crate::sparse::VsIndices;
 use crate::tensor::ops::dot;
 use crate::tensor::Mat;
+use crate::util::parallel::par_chunks_mut;
 
 use crate::attention::dense::NEG_INF;
 
-/// Fused vertical-slash sparse attention over (q, k, v) with block size bq.
+/// Gathered columns processed per streaming step: bounds the K/V tile
+/// working set to `2 * COL_TILE * d` floats per worker regardless of the
+/// union size, the same constant-buffer discipline as the fused kernel.
+const COL_TILE: usize = 256;
+
+/// Fused vertical-slash sparse attention over (q, k, v) with query-block
+/// size bq.
 ///
-/// Per-row candidate enumeration: the admissible columns of row i are
-/// exactly `vertical ∪ {i-o : o in slash}` (slash candidates whose column is
-/// also vertical are skipped — the union semantics of Eq. 9).  Work per row
-/// is O(row_width), never O(block-union size); this is the same on-demand
-/// gather the fused Pallas kernel performs (see DESIGN.md
-/// §Hardware-Adaptation and EXPERIMENTS.md §Perf for the before/after).
+/// Per query block [q0, q0+bq): the admissible columns of the block are the
+/// Merge-Path union of the vertical list and the slash bands (Eq. 9 lifted
+/// to the block, exactly `block_columns`).  K/V rows of the union are
+/// gathered once into contiguous tiles and shared by all bq rows — the
+/// random-access gather is paid once per block, not once per row.  Each row
+/// then streams over the gathered sub-tiles with the flash-style
+/// (max, sumexp, acc) recurrence, masking cells that are non-causal or not
+/// admissible for that particular row (a column kept for a later row of the
+/// block via a slash band may not be kept for an earlier one).
 pub fn sparse_attention_vs(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices, bq: usize) -> Mat {
+    let (n, d) = (q.rows, q.cols);
+    let mut out = Mat::zeros(n, d);
+    if n == 0 {
+        return out;
+    }
+    let bq = bq.clamp(1, n);
+    let scale = 1.0 / (d as f32).sqrt();
+    // O(1) membership tests shared by all workers.
+    let vbit = idx.vertical_bitset(n);
+    let mut sbit = vec![false; n];
+    for &o in &idx.slash {
+        if o < n {
+            sbit[o] = true;
+        }
+    }
+
+    par_chunks_mut(&mut out.data, bq * d, |blk, out_chunk| {
+        let q0 = blk * bq;
+        let rows = out_chunk.len() / d;
+        let cols = block_columns(&idx.vertical, &idx.slash, q0, rows, n);
+        // Streaming state: running max and sum-exp per row; out_chunk itself
+        // is the (rescaled) accumulator.
+        let mut m = vec![NEG_INF; rows];
+        let mut s = vec![0.0f32; rows];
+        let mut kt = vec![0.0f32; COL_TILE * d];
+        let mut vt = vec![0.0f32; COL_TILE * d];
+        let mut scores = vec![0.0f32; COL_TILE];
+        for c0 in (0..cols.len()).step_by(COL_TILE) {
+            let tile = &cols[c0..(c0 + COL_TILE).min(cols.len())];
+            // Contiguous gather of the sub-tile's K/V rows.
+            for (t, &j) in tile.iter().enumerate() {
+                kt[t * d..(t + 1) * d].copy_from_slice(k.row(j));
+                vt[t * d..(t + 1) * d].copy_from_slice(v.row(j));
+            }
+            for r in 0..rows {
+                let i = q0 + r;
+                if tile[0] > i {
+                    continue; // the whole sub-tile is above row i's frontier
+                }
+                let lim = tile.partition_point(|&j| j <= i);
+                let qrow = q.row(i);
+                // Pass 1: score the row's admissible cells of this sub-tile.
+                let mut tile_max = NEG_INF;
+                for (t, &j) in tile[..lim].iter().enumerate() {
+                    if vbit[j] || sbit[i - j] {
+                        let x = dot(qrow, &kt[t * d..(t + 1) * d]) * scale;
+                        scores[t] = x;
+                        tile_max = tile_max.max(x);
+                    } else {
+                        scores[t] = NEG_INF;
+                    }
+                }
+                if tile_max == NEG_INF {
+                    continue;
+                }
+                // Pass 2: online rescale + accumulate into the output tile.
+                let m_new = m[r].max(tile_max);
+                let alpha = (m[r] - m_new).exp();
+                let arow = &mut out_chunk[r * d..(r + 1) * d];
+                if alpha != 1.0 {
+                    s[r] *= alpha;
+                    arow.iter_mut().for_each(|x| *x *= alpha);
+                }
+                for (t, &x) in scores[..lim].iter().enumerate() {
+                    if x == NEG_INF {
+                        continue;
+                    }
+                    let e = (x - m_new).exp();
+                    s[r] += e;
+                    let vrow = &vt[t * d..(t + 1) * d];
+                    for c in 0..d {
+                        arow[c] += e * vrow[c];
+                    }
+                }
+                m[r] = m_new;
+            }
+        }
+        // Finalize: normalize, or fall back to the diagonal cell for rows
+        // with no admissible column (possible only when offset 0 missing).
+        for r in 0..rows {
+            let arow = &mut out_chunk[r * d..(r + 1) * d];
+            if m[r] == NEG_INF {
+                arow.copy_from_slice(v.row(q0 + r));
+            } else {
+                let inv = 1.0 / s[r];
+                arow.iter_mut().for_each(|x| *x *= inv);
+            }
+        }
+    });
+    out
+}
+
+/// The seed's row-serial scalar executor, kept as the perf baseline the
+/// microbench sweep compares against (and as a bq-independent oracle).
+/// Per-row candidate enumeration: the admissible columns of row i are
+/// exactly `vertical ∪ {i-o : o in slash}`; work per row is O(row_width).
+pub fn sparse_attention_vs_rowserial(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices) -> Mat {
     let (n, d) = (q.rows, q.cols);
     let scale = 1.0 / (d as f32).sqrt();
     let mut out = Mat::zeros(n, d);
     let vset = idx.vertical_bitset(n);
     let mut cand: Vec<usize> = Vec::with_capacity(idx.vertical.len() + idx.slash.len());
     let mut scores: Vec<f32> = Vec::with_capacity(idx.vertical.len() + idx.slash.len());
-    let _ = bq; // tiling kept in the signature for executor parity/ablation
 
     for i in 0..n {
         let qrow = q.row(i);
@@ -59,8 +167,6 @@ pub fn sparse_attention_vs(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices, bq: usize
             m = m.max(s);
         }
         if m == NEG_INF {
-            // No admissible column (possible only when offset 0 missing);
-            // fall back to the diagonal cell.
             out.row_mut(i).copy_from_slice(v.row(i));
             continue;
         }
@@ -83,6 +189,11 @@ pub fn sparse_attention_vs(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices, bq: usize
 }
 
 /// Block-sparse attention executor (SeerAttention-style masks).
+///
+/// The kept key-block list is bucketed per query block once up front
+/// (instead of re-scanning `keep` for every row), the block's columns are
+/// gathered into contiguous K/V tiles, and query blocks fan out across the
+/// worker pool.
 pub fn sparse_attention_blocks(
     q: &Mat,
     k: &Mat,
@@ -91,47 +202,73 @@ pub fn sparse_attention_blocks(
     keep: &[(usize, usize)],
 ) -> Mat {
     let (n, d) = (q.rows, q.cols);
-    let scale = 1.0 / (d as f32).sqrt();
     let mut out = Mat::zeros(n, d);
-    for i in 0..n {
-        let qb = i / block;
-        let qrow = q.row(i);
-        // gather key blocks kept for this query block
-        let mut cols: Vec<usize> = Vec::new();
-        for &(qq, kb) in keep {
-            if qq == qb {
-                cols.extend((kb * block..((kb + 1) * block).min(n)).filter(|&j| j <= i));
-            }
-        }
-        if cols.is_empty() {
-            out.row_mut(i).copy_from_slice(v.row(i));
-            continue;
-        }
-        let mut m = NEG_INF;
-        let scores: Vec<f32> = cols
-            .iter()
-            .map(|&j| {
-                let s = dot(qrow, k.row(j)) * scale;
-                m = m.max(s);
-                s
-            })
-            .collect();
-        let mut denom = 0.0;
-        let es: Vec<f32> = scores.iter().map(|&s| {
-            let e = (s - m).exp();
-            denom += e;
-            e
-        }).collect();
-        let inv = 1.0 / denom;
-        let orow = out.row_mut(i);
-        for (t, &j) in cols.iter().enumerate() {
-            let w = es[t] * inv;
-            let vrow = v.row(j);
-            for c in 0..d {
-                orow[c] += w * vrow[c];
-            }
+    if n == 0 {
+        return out;
+    }
+    let block = block.clamp(1, n);
+    let scale = 1.0 / (d as f32).sqrt();
+    // Bucket kept key blocks by query block.
+    let nqb = n.div_ceil(block);
+    let mut kept_blocks: Vec<Vec<usize>> = vec![Vec::new(); nqb];
+    for &(qb, kb) in keep {
+        if qb < nqb {
+            kept_blocks[qb].push(kb);
         }
     }
+    for kbs in kept_blocks.iter_mut() {
+        kbs.sort_unstable();
+        kbs.dedup();
+    }
+
+    par_chunks_mut(&mut out.data, block * d, |qb, out_chunk| {
+        let q0 = qb * block;
+        let rows = out_chunk.len() / d;
+        // Expand kept key blocks into the block's sorted column list and
+        // gather contiguous K/V tiles.
+        let cols: Vec<usize> = kept_blocks[qb]
+            .iter()
+            .flat_map(|&kb| kb * block..((kb + 1) * block).min(n))
+            .take_while(|&j| j <= q0 + rows - 1)
+            .collect();
+        let u = cols.len();
+        let mut kt = vec![0.0f32; u * d];
+        let mut vt = vec![0.0f32; u * d];
+        for (t, &j) in cols.iter().enumerate() {
+            kt[t * d..(t + 1) * d].copy_from_slice(k.row(j));
+            vt[t * d..(t + 1) * d].copy_from_slice(v.row(j));
+        }
+        let mut scores = vec![0.0f32; u];
+        for r in 0..rows {
+            let i = q0 + r;
+            let lim = cols.partition_point(|&j| j <= i);
+            let orow = &mut out_chunk[r * d..(r + 1) * d];
+            if lim == 0 {
+                orow.copy_from_slice(v.row(i));
+                continue;
+            }
+            let qrow = q.row(i);
+            let mut m = NEG_INF;
+            for t in 0..lim {
+                let x = dot(qrow, &kt[t * d..(t + 1) * d]) * scale;
+                scores[t] = x;
+                m = m.max(x);
+            }
+            let mut denom = 0.0f32;
+            for x in scores[..lim].iter_mut() {
+                *x = (*x - m).exp();
+                denom += *x;
+            }
+            let inv = 1.0 / denom;
+            for t in 0..lim {
+                let w = scores[t] * inv;
+                let vrow = &vt[t * d..(t + 1) * d];
+                for c in 0..d {
+                    orow[c] += w * vrow[c];
+                }
+            }
+        }
+    });
     out
 }
 
@@ -179,6 +316,7 @@ pub fn masked_attention_ref(q: &Mat, k: &Mat, v: &Mat, keep: impl Fn(usize, usiz
 mod tests {
     use super::*;
     use crate::attention::dense::dense_attention;
+    use crate::util::parallel::with_threads;
     use crate::util::rng::Rng;
 
     fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
@@ -192,9 +330,13 @@ mod tests {
         let idx = VsIndices::new(vec![0, 7, 30, 55], vec![0, 2, 11]);
         let want = masked_attention_ref(&q, &k, &v, |i, j| idx.keeps(i, j));
         for bq in [8, 32, 96, 5] {
-            let got = sparse_attention_vs(&q, &k, &v, &idx, bq);
-            assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq}");
+            for threads in [1, 4] {
+                let got = with_threads(threads, || sparse_attention_vs(&q, &k, &v, &idx, bq));
+                assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq} threads={threads}");
+            }
         }
+        let got = sparse_attention_vs_rowserial(&q, &k, &v, &idx);
+        assert!(got.max_abs_diff(&want) < 2e-5, "rowserial");
     }
 
     #[test]
@@ -212,12 +354,30 @@ mod tests {
         let mut rng = Rng::new(2);
         let (q, k, v) = (randn(&mut rng, 16, 8), randn(&mut rng, 16, 8), randn(&mut rng, 16, 8));
         let idx = VsIndices::default();
-        let got = sparse_attention_vs(&q, &k, &v, &idx, 8);
-        for i in 0..16 {
-            for c in 0..8 {
-                assert!((got.at(i, c) - v.at(i, c)).abs() < 1e-6);
+        for threads in [1, 3] {
+            let got = with_threads(threads, || sparse_attention_vs(&q, &k, &v, &idx, 8));
+            for i in 0..16 {
+                for c in 0..8 {
+                    assert!((got.at(i, c) - v.at(i, c)).abs() < 1e-6);
+                }
             }
         }
+    }
+
+    #[test]
+    fn union_wider_than_col_tile_streams_correctly() {
+        // Force late query blocks to a column union larger than COL_TILE
+        // (every-2nd-column verticals: the last block's union has ~n/2
+        // columns) so the streaming recurrence crosses sub-tile boundaries.
+        let n = 2 * COL_TILE + 88;
+        let mut rng = Rng::new(7);
+        let (q, k, v) = (randn(&mut rng, n, 8), randn(&mut rng, n, 8), randn(&mut rng, n, 8));
+        let idx = VsIndices::new((0..n).step_by(2).collect(), vec![0, 1, 5]);
+        let last_union = block_columns(&idx.vertical, &idx.slash, n - 64, 64, n);
+        assert!(last_union.len() > COL_TILE);
+        let want = masked_attention_ref(&q, &k, &v, |i, j| idx.keeps(i, j));
+        let got = sparse_attention_vs(&q, &k, &v, &idx, 64);
+        assert!(got.max_abs_diff(&want) < 2e-5);
     }
 
     #[test]
@@ -225,10 +385,12 @@ mod tests {
         let mut rng = Rng::new(3);
         let (q, k, v) = (randn(&mut rng, 64, 8), randn(&mut rng, 64, 8), randn(&mut rng, 64, 8));
         let keep = vec![(0usize, 0usize), (1, 0), (1, 1), (2, 2), (3, 0), (3, 3)];
-        let got = sparse_attention_blocks(&q, &k, &v, 16, &keep);
         let want = masked_attention_ref(&q, &k, &v, |i, j| {
             keep.binary_search(&(i / 16, j / 16)).is_ok()
         });
-        assert!(got.max_abs_diff(&want) < 2e-5);
+        for threads in [1, 4] {
+            let got = with_threads(threads, || sparse_attention_blocks(&q, &k, &v, 16, &keep));
+            assert!(got.max_abs_diff(&want) < 2e-5, "threads={threads}");
+        }
     }
 }

@@ -1,7 +1,23 @@
 //! Linear-algebra kernels over `Mat`: blocked matmul, softmax, silu, and the
 //! vector helpers shared by the indexer trainer and the attention executors.
+//! The matmuls parallelize over output row bands (each band is an exclusive
+//! contiguous slice of C) once the work is large enough to amortize the
+//! fan-out.
 
 use super::Mat;
+
+use crate::util::parallel::par_chunks_mut;
+
+/// Below this many multiply-adds the scoped fan-out costs more than it
+/// saves; run serial.
+const PAR_MIN_FLOPS: usize = 1 << 18;
+
+/// Rows per parallel work item for an output of `rows` x `cols`.
+fn row_band(rows: usize, cols: usize) -> usize {
+    // Aim for work items of ~64k elements so the queue amortizes, while
+    // still producing enough items to balance across workers.
+    ((1 << 16) / cols.max(1)).clamp(1, rows.max(1))
+}
 
 /// C = A @ B with a k-blocked inner loop (cache-friendlier than naive ijk).
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -16,25 +32,54 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     let n = b.cols;
-    for i in 0..a.rows {
-        let arow = a.row(i);
-        let crow = c.row_mut(i);
-        for (kk, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                crow[j] += aik * brow[j];
+    if n == 0 {
+        return;
+    }
+    let add_rows = |row0: usize, chunk: &mut [f32]| {
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = a.row(row0 + r);
+            for (kk, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.data[kk * n..(kk + 1) * n];
+                for j in 0..n {
+                    crow[j] += aik * brow[j];
+                }
             }
         }
+    };
+    if a.rows * a.cols * n < PAR_MIN_FLOPS {
+        add_rows(0, &mut c.data);
+        return;
     }
+    let band = row_band(a.rows, n);
+    par_chunks_mut(&mut c.data, band * n, |ci, chunk| add_rows(ci * band, chunk));
 }
 
 /// A @ B^T — the attention-score shape (avoids materializing B^T).
 pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "matmul_bt inner-dim mismatch");
-    Mat::from_fn(a.rows, b.rows, |i, j| dot(a.row(i), b.row(j)))
+    let mut c = Mat::zeros(a.rows, b.rows);
+    let n = b.rows;
+    if n == 0 {
+        return c;
+    }
+    let fill_rows = |row0: usize, chunk: &mut [f32]| {
+        for (r, crow) in chunk.chunks_mut(n).enumerate() {
+            let arow = a.row(row0 + r);
+            for (j, x) in crow.iter_mut().enumerate() {
+                *x = dot(arow, b.row(j));
+            }
+        }
+    };
+    if a.rows * a.cols * n < PAR_MIN_FLOPS {
+        fill_rows(0, &mut c.data);
+    } else {
+        let band = row_band(a.rows, n);
+        par_chunks_mut(&mut c.data, band * n, |ci, chunk| fill_rows(ci * band, chunk));
+    }
+    c
 }
 
 #[inline]

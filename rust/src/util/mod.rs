@@ -8,6 +8,7 @@
 pub mod args;
 pub mod csv;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,199 @@
+//! Dependency-free scoped worker pool for the execution engine.
+//!
+//! rayon is not in the offline set, so the data-parallel substrate is built
+//! from `std::thread::scope` plus an mpsc channel used as the work queue.
+//! Every helper here is *scoped*: workers borrow the caller's data, all
+//! joins happen before the call returns, and a panic in any worker
+//! propagates to the caller (scope re-raises it).
+//!
+//! Thread-count resolution, in priority order:
+//!   1. a `with_threads(n, ..)` override active on the calling thread
+//!      (used by the microbench sweep and the coordinator's batch fan-out);
+//!   2. `set_configured_threads(n)` — wired to the coordinator config's
+//!      `engine.threads` knob;
+//!   3. the `VSPREFILL_THREADS` environment variable;
+//!   4. `std::thread::available_parallelism()`.
+//!
+//! Workers run with their own override pinned to 1, so nested calls inside a
+//! parallel region degrade to the serial path instead of oversubscribing —
+//! e.g. a batch fanned out across requests does not also fan out each
+//! request's attention kernel.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
+
+/// Process-wide configured thread count; 0 = not resolved yet.
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Per-thread override (None = use the configured count).
+    static LOCAL_OVERRIDE: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Pin the process-wide thread count (the config-file path).  Values < 1 are
+/// clamped to 1.
+pub fn set_configured_threads(n: usize) {
+    CONFIGURED.store(n.max(1), Ordering::SeqCst);
+}
+
+/// The process-wide thread count: configured value, else `VSPREFILL_THREADS`,
+/// else available parallelism.  Resolved once and cached.
+pub fn configured_threads() -> usize {
+    let cached = CONFIGURED.load(Ordering::SeqCst);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::env::var("VSPREFILL_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1));
+    CONFIGURED.store(n, Ordering::SeqCst);
+    n
+}
+
+/// The thread count parallel helpers use on THIS thread right now.
+pub fn num_threads() -> usize {
+    LOCAL_OVERRIDE.with(|c| c.get()).unwrap_or_else(configured_threads)
+}
+
+/// Run `f` with the calling thread's parallelism pinned to `n` (restored on
+/// exit, panic-safe).  The benches use this to sweep thread counts.
+pub fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<usize>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            let prev = self.0;
+            LOCAL_OVERRIDE.with(|c| c.set(prev));
+        }
+    }
+    let _restore = Restore(LOCAL_OVERRIDE.with(|c| c.replace(Some(n.max(1)))));
+    f()
+}
+
+/// Move each item of `items` to exactly one worker — the pool's single
+/// dispatch loop; the other helpers are adapters over it.  Items are handed
+/// out through a channel so fast workers steal the remainder (uneven
+/// per-item cost balances itself); `f` must tolerate any execution order.
+pub fn par_drain<T: Send>(items: Vec<T>, f: impl Fn(T) + Sync) {
+    let threads = num_threads().min(items.len());
+    if threads <= 1 {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let (tx, rx) = mpsc::channel();
+    for item in items {
+        tx.send(item).expect("queue send");
+    }
+    drop(tx);
+    let queue = Mutex::new(rx);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| {
+                LOCAL_OVERRIDE.with(|c| c.set(Some(1)));
+                loop {
+                    let next = queue.lock().unwrap().recv();
+                    match next {
+                        Ok(item) => f(item),
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Fan the closure over `0..count` across the pool.
+pub fn par_for(count: usize, f: impl Fn(usize) + Sync) {
+    if num_threads() <= 1 {
+        for i in 0..count {
+            f(i);
+        }
+        return;
+    }
+    par_drain((0..count).collect(), f);
+}
+
+/// Split `data` into consecutive chunks of at most `chunk` elements and run
+/// `f(chunk_index, chunk)` for each, fanned across the pool.  This is the
+/// kernel-side primitive: an output matrix chunked by query-block rows gives
+/// every worker an exclusive, contiguous tile to write.
+pub fn par_chunks_mut<T: Send>(data: &mut [T], chunk: usize, f: impl Fn(usize, &mut [T]) + Sync) {
+    assert!(chunk > 0, "chunk size must be positive");
+    if num_threads() <= 1 {
+        for (ci, c) in data.chunks_mut(chunk).enumerate() {
+            f(ci, c);
+        }
+        return;
+    }
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk).enumerate().collect();
+    par_drain(chunks, |(ci, c)| f(ci, c));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn par_for_covers_every_index_once() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        for t in [1, 2, 7] {
+            hits.iter().for_each(|h| h.store(0, Ordering::SeqCst));
+            with_threads(t, || {
+                par_for(100, |i| {
+                    hits[i].fetch_add(1, Ordering::SeqCst);
+                })
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1), "threads={t}");
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_writes_disjoint_tiles() {
+        let mut data = vec![0u32; 103]; // deliberately not a multiple of 8
+        with_threads(4, || {
+            par_chunks_mut(&mut data, 8, |ci, c| {
+                for (off, x) in c.iter_mut().enumerate() {
+                    *x = (ci * 8 + off) as u32;
+                }
+            })
+        });
+        for (i, &x) in data.iter().enumerate() {
+            assert_eq!(x, i as u32);
+        }
+    }
+
+    #[test]
+    fn par_drain_consumes_each_item_once() {
+        let sum = AtomicU64::new(0);
+        with_threads(3, || {
+            par_drain((1..=50u64).collect(), |x| {
+                sum.fetch_add(x, Ordering::SeqCst);
+            })
+        });
+        assert_eq!(sum.load(Ordering::SeqCst), 50 * 51 / 2);
+    }
+
+    #[test]
+    fn nested_parallelism_degrades_to_serial() {
+        // Inside a worker the override pins num_threads() to 1.
+        let saw_nested = AtomicU64::new(0);
+        with_threads(4, || {
+            par_for(4, |_| {
+                saw_nested.fetch_add(num_threads() as u64, Ordering::SeqCst);
+            })
+        });
+        assert_eq!(saw_nested.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn with_threads_restores_on_exit() {
+        let before = num_threads();
+        with_threads(2, || assert_eq!(num_threads(), 2));
+        assert_eq!(num_threads(), before);
+    }
+}

@@ -4,7 +4,10 @@
 //! architecture.
 //!
 //! Requires `make artifacts`; every test skips cleanly when the bundle is
-//! absent so `cargo test` stays green pre-build.
+//! absent so `cargo test` stays green pre-build.  The whole file is compiled
+//! only with the `pjrt` feature (the offline build has no `xla` crate).
+
+#![cfg(feature = "pjrt")]
 
 use vsprefill::attention;
 use vsprefill::runtime::{ArtifactBundle, Engine};

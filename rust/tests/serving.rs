@@ -8,6 +8,7 @@ use vsprefill::coordinator::{
     server::{Client, Server},
     AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest,
 };
+#[cfg(feature = "pjrt")]
 use vsprefill::runtime::ArtifactBundle;
 use vsprefill::util::prop::{check, Gen, UsizeRange};
 use vsprefill::util::rng::Rng;
@@ -45,6 +46,7 @@ fn concurrent_clients_over_tcp() {
     server.shutdown();
 }
 
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_backend_serves_when_artifacts_present() {
     if !ArtifactBundle::available() {

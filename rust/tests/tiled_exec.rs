@@ -1,0 +1,168 @@
+//! Property tests for the parallel block-tiled executors: the fused
+//! `sparse_attention_vs` and the tiled `flash_attention` must agree with the
+//! masked/dense references within 2e-5 for any random index set, block
+//! size, and worker-pool width — including the empty-index and full-budget
+//! edge cases.
+
+use vsprefill::attention::dense::dense_attention;
+use vsprefill::attention::flash::flash_attention;
+use vsprefill::sparse::VsIndices;
+use vsprefill::sparse_attn::exec::{
+    masked_attention_ref, sparse_attention_blocks, sparse_attention_vs,
+    sparse_attention_vs_rowserial,
+};
+use vsprefill::tensor::Mat;
+use vsprefill::util::parallel::with_threads;
+use vsprefill::util::prop::{check, Gen};
+use vsprefill::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 3, 8];
+const TOL: f32 = 2e-5;
+
+/// A random sparse-attention scenario: shapes, an index set, and a block
+/// size.  Shrinks toward smaller sequences and emptier indices.
+#[derive(Clone, Debug)]
+struct Scenario {
+    n: usize,
+    d: usize,
+    bq: usize,
+    vertical: Vec<usize>,
+    slash: Vec<usize>,
+    seed: u64,
+}
+
+struct ScenarioGen;
+
+impl Gen for ScenarioGen {
+    type Value = Scenario;
+
+    fn generate(&self, rng: &mut Rng) -> Scenario {
+        let n = 8 + rng.below(120); // 8..=127
+        let d = [4, 8, 16][rng.below(3)];
+        let bq = 1 + rng.below(2 * n); // deliberately allows bq > n
+        let kv = rng.below(n / 2 + 1);
+        let ks = rng.below(8);
+        Scenario {
+            n,
+            d,
+            bq,
+            vertical: rng.choose_distinct(0, n, kv),
+            slash: rng.choose_distinct(0, n, ks),
+            seed: rng.next_u64(),
+        }
+    }
+
+    fn shrink(&self, v: &Scenario) -> Vec<Scenario> {
+        let mut out = Vec::new();
+        if v.n > 8 {
+            out.push(Scenario { n: 8 + (v.n - 8) / 2, ..v.clone() });
+        }
+        if !v.vertical.is_empty() || !v.slash.is_empty() {
+            out.push(Scenario { vertical: Vec::new(), slash: Vec::new(), ..v.clone() });
+        }
+        if v.bq > 1 {
+            out.push(Scenario { bq: v.bq / 2, ..v.clone() });
+        }
+        out
+    }
+}
+
+fn head(sc: &Scenario) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(sc.seed);
+    let mut m = || Mat::from_fn(sc.n, sc.d, |_, _| rng.normal_f32());
+    (m(), m(), m())
+}
+
+#[test]
+fn property_tiled_vs_matches_masked_reference() {
+    check(101, 40, &ScenarioGen, |sc| {
+        let (q, k, v) = head(sc);
+        let idx = VsIndices::new(sc.vertical.clone(), sc.slash.clone());
+        let want = masked_attention_ref(&q, &k, &v, |i, j| idx.keeps(i, j));
+        THREADS.iter().all(|&t| {
+            let got = with_threads(t, || sparse_attention_vs(&q, &k, &v, &idx, sc.bq));
+            got.max_abs_diff(&want) < TOL
+        })
+    });
+}
+
+#[test]
+fn property_tiled_vs_matches_rowserial_seed_executor() {
+    check(102, 25, &ScenarioGen, |sc| {
+        let (q, k, v) = head(sc);
+        let idx = VsIndices::new(sc.vertical.clone(), sc.slash.clone());
+        let want = sparse_attention_vs_rowserial(&q, &k, &v, &idx);
+        let got = with_threads(8, || sparse_attention_vs(&q, &k, &v, &idx, sc.bq));
+        got.max_abs_diff(&want) < TOL
+    });
+}
+
+#[test]
+fn property_tiled_flash_matches_dense() {
+    check(103, 30, &ScenarioGen, |sc| {
+        let (q, k, v) = head(sc);
+        let want = dense_attention(&q, &k, &v);
+        let bk = 1 + sc.bq % 37; // reuse bq entropy for the key block size
+        THREADS.iter().all(|&t| {
+            let got = with_threads(t, || flash_attention(&q, &k, &v, sc.bq, bk));
+            got.max_abs_diff(&want) < TOL
+        })
+    });
+}
+
+#[test]
+fn property_block_executor_matches_masked_reference() {
+    check(104, 25, &ScenarioGen, |sc| {
+        let (q, k, v) = head(sc);
+        let block = 1 + sc.bq % 24;
+        let nb = sc.n.div_ceil(block);
+        // Derive a random kept-block list from the scenario's entropy.
+        let mut rng = Rng::new(sc.seed ^ 0xB10C);
+        let mut keep: Vec<(usize, usize)> = Vec::new();
+        for qb in 0..nb {
+            for kb in 0..=qb {
+                if rng.below(3) == 0 {
+                    keep.push((qb, kb));
+                }
+            }
+        }
+        let want = masked_attention_ref(&q, &k, &v, |i, j| {
+            keep.binary_search(&(i / block, j / block)).is_ok()
+        });
+        THREADS.iter().all(|&t| {
+            let got = with_threads(t, || sparse_attention_blocks(&q, &k, &v, block, &keep));
+            got.max_abs_diff(&want) < TOL
+        })
+    });
+}
+
+#[test]
+fn empty_index_diagonal_fallback_under_all_thread_counts() {
+    let mut rng = Rng::new(9);
+    let n = 48;
+    let q = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+    let k = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+    let v = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+    let idx = VsIndices::default();
+    for &t in &THREADS {
+        let got = with_threads(t, || sparse_attention_vs(&q, &k, &v, &idx, 16));
+        assert!(got.max_abs_diff(&v) < 1e-6, "threads={t}");
+    }
+}
+
+#[test]
+fn full_budget_equals_dense_under_all_thread_counts() {
+    let mut rng = Rng::new(10);
+    let n = 96;
+    let q = Mat::from_fn(n, 16, |_, _| rng.normal_f32());
+    let k = Mat::from_fn(n, 16, |_, _| rng.normal_f32());
+    let v = Mat::from_fn(n, 16, |_, _| rng.normal_f32());
+    let idx = VsIndices::new((0..n).collect(), vec![0]);
+    let want = dense_attention(&q, &k, &v);
+    for &t in &THREADS {
+        for bq in [1, 17, 64, 96, 200] {
+            let got = with_threads(t, || sparse_attention_vs(&q, &k, &v, &idx, bq));
+            assert!(got.max_abs_diff(&want) < TOL, "threads={t} bq={bq}");
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The tier-1 build runs with no network and no registry, so the real
+//! `anyhow` cannot be fetched.  This shim implements exactly the surface the
+//! workspace uses — `Result`, `Error`, `anyhow!`, `bail!`, `ensure!`, and
+//! `?`-conversion from any `std::error::Error` — with the same semantics.
+//! Swapping in the real crate is a one-line Cargo.toml change.
+
+use std::fmt;
+
+/// Boxed dynamic error.  Like the real `anyhow::Error`, this type does NOT
+/// implement `std::error::Error` itself: that is what keeps the blanket
+/// `From<E: Error>` impl below coherent with core's reflexive `From`.
+pub struct Error {
+    inner: Box<dyn std::error::Error + Send + Sync + 'static>,
+}
+
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(msg: M) -> Error {
+        Error { inner: Box::new(MessageError(msg.to_string())) }
+    }
+
+    /// The chain of sources, starting at this error (message only here —
+    /// the shim does not track causes).
+    pub fn root_cause(&self) -> &(dyn std::error::Error + 'static) {
+        &*self.inner
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { inner: Box::new(e) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> crate::Result<i32> {
+            let n: i32 = "42".parse()?;
+            Ok(n)
+        }
+        assert_eq!(inner().unwrap(), 42);
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::Error::from(std::io::Error::new(std::io::ErrorKind::Other, "io"));
+        assert_eq!(format!("{e}"), "io");
+        let x = 7;
+        let e = anyhow!("bad value {x}");
+        assert_eq!(format!("{e:#}"), "bad value 7");
+        fn f(ok: bool) -> crate::Result<()> {
+            ensure!(ok, "must be ok");
+            bail!("reached the end")
+        }
+        assert!(f(false).is_err());
+        assert_eq!(format!("{}", f(true).unwrap_err()), "reached the end");
+    }
+}
