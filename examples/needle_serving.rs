@@ -1,7 +1,7 @@
-//! Needle-retrieval serving demo: the full L3 stack (admission -> bucketed
-//! batcher -> KV-cache accounting -> engine) serving a mixed workload of
-//! dense and sparse prefill requests over the TCP JSON-lines protocol, with
-//! a needle-retrieval quality check per request budget.
+//! Needle-retrieval serving demo: the full L3 stack (admission -> chunked
+//! scheduler -> paged KV store -> engine) serving a mixed workload of dense
+//! and sparse prefill requests over the TCP JSON-lines protocol, with a
+//! needle-retrieval quality check per request budget.
 //!
 //! Uses the PJRT backend when `make artifacts` has run; falls back to the
 //! native backend otherwise.

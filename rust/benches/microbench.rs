@@ -165,6 +165,8 @@ fn main() {
     }
     write_json(&rows);
 
+    chunked_sweep();
+
     #[cfg(feature = "pjrt")]
     pjrt_rows();
     #[cfg(not(feature = "pjrt"))]
@@ -180,6 +182,120 @@ fn main() {
 
 fn hw_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+/// Chunked-vs-monolithic prefill sweep through the serving stack: chunk
+/// sizes {256, 512, 1024} at n {4k, 8k} (monolithic = one chunk of n), plus
+/// a mixed short/long workload measuring the short requests' latency with
+/// and without chunk interleaving.  Writes BENCH_chunked.json.
+fn chunked_sweep() {
+    use vsprefill::coordinator::{
+        AttentionMode, Coordinator, CoordinatorConfig, EngineConfig, PrefillEngine,
+        PrefillRequest,
+    };
+
+    let mk_cfg = |chunk: usize, threads: usize| CoordinatorConfig {
+        engine: EngineConfig {
+            buckets: vec![256, 4096, 8192],
+            threads,
+            ..EngineConfig::default()
+        },
+        chunk_tokens: chunk,
+        kv_blocks: 512, // 32k rows of paged K/V
+        max_wait_ms: 1,
+        ..Default::default()
+    };
+    let mut json = String::from("{\n  \"bench\": \"chunked_prefill\",\n  \"sweep\": [\n");
+    let mut first = true;
+
+    println!("\nchunked vs monolithic prefill (through coordinator + paged KV store)");
+    println!("n        chunk     prefill_ms   ttft_ms   chunks");
+    for &n in &[4096usize, 8192] {
+        // chunk == n is the monolithic baseline (single chunk).
+        for &chunk in &[256usize, 512, 1024, n] {
+            let cfg = mk_cfg(chunk, 0);
+            let engine = PrefillEngine::native_quick(cfg.engine.clone());
+            let c = Coordinator::start(cfg, engine);
+            let resp = c
+                .prefill(PrefillRequest::synthetic(1, n, 7, AttentionMode::Sparse))
+                .unwrap();
+            assert!(resp.ok, "{:?}", resp.error);
+            let label = if chunk == n { "mono".to_string() } else { chunk.to_string() };
+            println!(
+                "{n:<8} {label:<9} {:>10.2} {:>9.2} {:>8}",
+                resp.prefill_us as f64 / 1e3,
+                resp.ttft_us as f64 / 1e3,
+                resp.chunks
+            );
+            if !first {
+                json.push_str(",\n");
+            }
+            first = false;
+            json.push_str(&format!(
+                "    {{\"n\": {n}, \"chunk\": {chunk}, \"monolithic\": {}, \
+                 \"prefill_ms\": {:.3}, \"ttft_ms\": {:.3}, \"chunks\": {}}}",
+                chunk == n,
+                resp.prefill_us as f64 / 1e3,
+                resp.ttft_us as f64 / 1e3,
+                resp.chunks
+            ));
+            drop(c);
+        }
+    }
+
+    // Mixed workload: one long (4k) prefill, then short (256) requests
+    // behind it.  Chunk interleaving should cut the shorts' latency by
+    // roughly the long prefill's remaining time.
+    println!("\nmixed short/long latency (1 x 4k + 6 x 256 sparse)");
+    println!("schedule          short_mean_ms  short_p95_ms  long_ms");
+    json.push_str("\n  ],\n  \"mixed\": [\n");
+    for (si, &chunk) in [256usize, 4096].iter().enumerate() {
+        // One pool thread isolates the scheduling policy: with a wide pool
+        // the monolithic round would hide head-of-line blocking by running
+        // the long and short requests on different workers.
+        let cfg = mk_cfg(chunk, 1);
+        let engine = PrefillEngine::native_quick(cfg.engine.clone());
+        let c = Coordinator::start(cfg, engine);
+        let t0 = Instant::now();
+        let long_rx = c
+            .submit(PrefillRequest::synthetic(0, 4096, 7, AttentionMode::Sparse))
+            .unwrap();
+        let short_rxs: Vec<_> = (1..=6u64)
+            .map(|i| {
+                c.submit(PrefillRequest::synthetic(i, 256, i, AttentionMode::Sparse)).unwrap()
+            })
+            .collect();
+        let mut shorts: Vec<f64> = Vec::new();
+        for rx in short_rxs {
+            let r = rx.recv().unwrap();
+            assert!(r.ok, "{:?}", r.error);
+            // Shorts are single-chunk, so ttft_us is their full wall-clock
+            // latency from submission — including time spent blocked behind
+            // the long prefill, which queue_us + prefill_us would miss.
+            assert_eq!(r.chunks, 1);
+            shorts.push(r.ttft_us as f64 / 1e3);
+        }
+        let long = long_rx.recv().unwrap();
+        assert!(long.ok, "{:?}", long.error);
+        let long_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mean = shorts.iter().sum::<f64>() / shorts.len() as f64;
+        let mut sorted = shorts.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p95 = sorted[(sorted.len() - 1).min(sorted.len() * 95 / 100)];
+        let label = if chunk == 4096 { "monolithic" } else { "chunked(256)" };
+        println!("{label:<17} {mean:>13.2} {p95:>13.2} {long_ms:>8.2}");
+        json.push_str(&format!(
+            "    {{\"schedule\": \"{label}\", \"short_mean_ms\": {mean:.3}, \
+             \"short_p95_ms\": {p95:.3}, \"long_wall_ms\": {long_ms:.3}}}{}\n",
+            if si == 0 { "," } else { "" }
+        ));
+        drop(c);
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_chunked.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_chunked.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_chunked.json: {e}"),
+    }
 }
 
 fn write_json(rows: &[SweepRow]) {

@@ -6,6 +6,7 @@
 //! contiguous tile of the output.
 
 use crate::tensor::ops::dot;
+use crate::tensor::paged::PagedKv;
 use crate::tensor::Mat;
 use crate::util::parallel::par_chunks_mut;
 
@@ -83,10 +84,94 @@ pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, block_q: usize, block_k: usize
     out
 }
 
+/// `flash_attention` with K/V read through a paged-KV block table — the
+/// chunked-prefill executor.  `q` holds the queries of one chunk whose
+/// absolute positions are `q_start .. q_start + q.rows`; keys/values are the
+/// `kv.len` rows already resident in the paged store.  Causality is over
+/// absolute positions, so concatenating the per-chunk outputs of a full
+/// chunk schedule reproduces `flash_attention` on the whole sequence
+/// bit-for-bit (identical tile order, identical arithmetic — only the
+/// gather is indirected through the block table).
+pub fn flash_attention_paged(
+    q: &Mat,
+    q_start: usize,
+    kv: &PagedKv<'_>,
+    block_q: usize,
+    block_k: usize,
+) -> Mat {
+    let (m, d) = (q.rows, q.cols);
+    assert_eq!(kv.head_dim(), d, "paged kv head_dim mismatch");
+    assert!(q_start + m <= kv.len, "queries not yet resident in the paged store");
+    let mut out = Mat::zeros(m, d);
+    if m == 0 {
+        return out;
+    }
+    let block_q = block_q.clamp(1, m);
+    let block_k = block_k.max(1);
+    let scale = 1.0 / (d as f32).sqrt();
+
+    par_chunks_mut(&mut out.data, block_q * d, |blk, out_chunk| {
+        let r0 = blk * block_q; // chunk-relative first row
+        let bq = out_chunk.len() / d;
+        let a0 = q_start + r0; // absolute first row
+        let mut tile = vec![0.0f32; bq * block_k];
+        let mut mrow = vec![NEG_INF; bq];
+        let mut s = vec![0.0f32; bq];
+        // Same key-tile walk as the contiguous executor: the last admissible
+        // column of the block is a0 + bq - 1 (< kv.len by the entry assert).
+        for k0 in (0..a0 + bq).step_by(block_k) {
+            let bk = block_k.min(kv.len - k0);
+            for i in 0..bq {
+                let qrow = q.row(r0 + i);
+                let trow = &mut tile[i * block_k..i * block_k + bk];
+                for (j, t) in trow.iter_mut().enumerate() {
+                    *t = if k0 + j <= a0 + i {
+                        dot(qrow, kv.k_row(k0 + j)) * scale
+                    } else {
+                        NEG_INF
+                    };
+                }
+            }
+            for i in 0..bq {
+                let trow = &tile[i * block_k..i * block_k + bk];
+                let tile_max = trow.iter().cloned().fold(NEG_INF, f32::max);
+                if tile_max == NEG_INF {
+                    continue;
+                }
+                let m_new = mrow[i].max(tile_max);
+                let alpha = (mrow[i] - m_new).exp();
+                s[i] *= alpha;
+                let arow = &mut out_chunk[i * d..(i + 1) * d];
+                if alpha != 1.0 {
+                    arow.iter_mut().for_each(|x| *x *= alpha);
+                }
+                for (j, &t) in trow.iter().enumerate() {
+                    if t == NEG_INF {
+                        continue;
+                    }
+                    let e = (t - m_new).exp();
+                    s[i] += e;
+                    let vrow = kv.v_row(k0 + j);
+                    for c in 0..d {
+                        arow[c] += e * vrow[c];
+                    }
+                }
+                mrow[i] = m_new;
+            }
+        }
+        for i in 0..bq {
+            let inv = 1.0 / s[i];
+            out_chunk[i * d..(i + 1) * d].iter_mut().for_each(|x| *x *= inv);
+        }
+    });
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::attention::dense::dense_attention;
+    use crate::tensor::paged::PagedKvStore;
     use crate::util::rng::Rng;
 
     fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
@@ -110,6 +195,34 @@ mod tests {
                 assert!(got.max_abs_diff(&want) < 2e-5, "bq={bq} bk={bk} threads={threads}");
             }
         }
+    }
+
+    #[test]
+    fn paged_chunk_schedule_matches_contiguous() {
+        let n = 96;
+        let mut rng = Rng::new(2);
+        let (q, k, v) = (
+            randn(&mut rng, n, 16),
+            randn(&mut rng, n, 16),
+            randn(&mut rng, n, 16),
+        );
+        let want = flash_attention(&q, &k, &v, 32, 16);
+        let store = PagedKvStore::new(16, 8, 16);
+        assert!(store.reserve(1, n));
+        let mut got = Mat::zeros(n, 16);
+        let mut lo = 0;
+        for chunk in [32usize, 17, 47] {
+            let hi = lo + chunk;
+            store.append(1, &k.sub_rows(lo, hi), &v.sub_rows(lo, hi)).unwrap();
+            let qc = q.sub_rows(lo, hi);
+            let view = store.view(1).unwrap();
+            let oc = flash_attention_paged(&qc, lo, &view, 32, 16);
+            for r in 0..chunk {
+                got.row_mut(lo + r).copy_from_slice(oc.row(r));
+            }
+            lo = hi;
+        }
+        assert!(got.max_abs_diff(&want) < 1e-6, "chunked paged vs contiguous");
     }
 
     #[test]

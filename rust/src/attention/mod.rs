@@ -12,5 +12,5 @@ pub mod recall;
 
 pub use aggregate::{vs_aggregate, vs_aggregate_tiled};
 pub use dense::{attention_probs, dense_attention, scaled_causal_scores};
-pub use flash::flash_attention;
+pub use flash::{flash_attention, flash_attention_paged};
 pub use recall::{recall_of_mask, recall_of_vs};

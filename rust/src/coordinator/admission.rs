@@ -1,16 +1,32 @@
 //! Bounded admission queue — the backpressure boundary of the service.
 //! `push` fails fast when the queue is full (callers surface HTTP-429-style
-//! rejection); `requeue` re-inserts work the executor could not place (KV
+//! rejection); `requeue` re-inserts work the scheduler could not place (KV
 //! exhaustion) at the front so it retains its position.
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::fmt;
+use std::sync::{mpsc, Condvar, Mutex};
 
-use super::batcher::WorkItem;
+use super::request::{PrefillRequest, PrefillResponse};
 
-#[derive(Debug, thiserror::Error)]
-#[error("admission queue full")]
+/// A queued request plus its reply channel.
+#[derive(Debug)]
+pub struct WorkItem {
+    pub req: PrefillRequest,
+    pub reply: mpsc::Sender<PrefillResponse>,
+}
+
+/// Push rejection carrying the item back to the caller.
+#[derive(Debug)]
 pub struct QueueFull(pub WorkItem);
+
+impl fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("admission queue full")
+    }
+}
+
+impl std::error::Error for QueueFull {}
 
 pub struct AdmissionQueue {
     inner: Mutex<VecDeque<WorkItem>>,
@@ -50,7 +66,7 @@ impl AdmissionQueue {
     /// Pop up to `max` items, waiting up to `wait` for the first one.
     pub fn pop_up_to(&self, max: usize, wait: std::time::Duration) -> Vec<WorkItem> {
         let mut q = self.inner.lock().unwrap();
-        if q.is_empty() {
+        if q.is_empty() && !wait.is_zero() {
             let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
             q = guard;
         }
@@ -63,7 +79,6 @@ impl AdmissionQueue {
 mod tests {
     use super::*;
     use crate::coordinator::{AttentionMode, PrefillRequest};
-    use std::sync::mpsc;
 
     fn item(id: u64) -> WorkItem {
         let (tx, _rx) = mpsc::channel();
@@ -98,5 +113,15 @@ mod tests {
         let items = q.pop_up_to(4, std::time::Duration::from_millis(20));
         assert!(items.is_empty());
         assert!(t0.elapsed() >= std::time::Duration::from_millis(15));
+    }
+
+    #[test]
+    fn zero_wait_pop_never_blocks() {
+        let q = AdmissionQueue::new(4);
+        let t0 = std::time::Instant::now();
+        assert!(q.pop_up_to(4, std::time::Duration::ZERO).is_empty());
+        assert!(t0.elapsed() < std::time::Duration::from_millis(10));
+        q.push(item(1)).unwrap();
+        assert_eq!(q.pop_up_to(4, std::time::Duration::ZERO).len(), 1);
     }
 }

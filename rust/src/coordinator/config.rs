@@ -3,8 +3,8 @@
 //!
 //! ```json
 //! {
-//!   "max_queue": 256, "max_batch": 8, "max_wait_ms": 5,
-//!   "kv_blocks": 4096, "kv_block_size": 64,
+//!   "max_queue": 256, "chunk_tokens": 256, "max_inflight": 8,
+//!   "max_wait_ms": 5, "kv_blocks": 1024, "kv_block_size": 64,
 //!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
 //!               "threads": 0, "budget_tau": 0.9 }
 //! }
@@ -28,8 +28,11 @@ pub fn load(path: Option<&str>, args: &Args) -> anyhow::Result<CoordinatorConfig
     if let Some(v) = args.str_opt("max-queue") {
         cfg.max_queue = v.parse()?;
     }
-    if let Some(v) = args.str_opt("max-batch") {
-        cfg.max_batch = v.parse()?;
+    if let Some(v) = args.str_opt("chunk-tokens") {
+        cfg.chunk_tokens = v.parse()?;
+    }
+    if let Some(v) = args.str_opt("max-inflight") {
+        cfg.max_inflight = v.parse()?;
     }
     if let Some(v) = args.str_opt("max-wait-ms") {
         cfg.max_wait_ms = v.parse()?;
@@ -49,8 +52,11 @@ fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
     if let Some(v) = get_usize("max_queue") {
         cfg.max_queue = v;
     }
-    if let Some(v) = get_usize("max_batch") {
-        cfg.max_batch = v;
+    if let Some(v) = get_usize("chunk_tokens") {
+        cfg.chunk_tokens = v;
+    }
+    if let Some(v) = get_usize("max_inflight") {
+        cfg.max_inflight = v;
     }
     if let Some(v) = get_usize("max_wait_ms") {
         cfg.max_wait_ms = v as u64;
@@ -77,13 +83,23 @@ fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
 
 fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
     anyhow::ensure!(cfg.max_queue > 0, "max_queue must be positive");
-    anyhow::ensure!(cfg.max_batch > 0, "max_batch must be positive");
+    anyhow::ensure!(cfg.chunk_tokens > 0, "chunk_tokens must be positive");
+    anyhow::ensure!(cfg.max_inflight > 0, "max_inflight must be positive");
     anyhow::ensure!(!cfg.engine.buckets.is_empty(), "need at least one bucket");
     anyhow::ensure!(
         cfg.engine.buckets.windows(2).all(|w| w[0] < w[1]),
         "buckets must be strictly increasing"
     );
     anyhow::ensure!(cfg.kv_block_size > 0, "kv_block_size must be positive");
+    // The paged store must be able to hold at least one max-bucket request,
+    // or nothing that pads to the largest bucket could ever be admitted.
+    let largest = cfg.engine.buckets.last().copied().unwrap_or(0);
+    anyhow::ensure!(
+        cfg.kv_blocks * cfg.kv_block_size >= largest,
+        "kv pool ({} blocks x {} rows) smaller than the largest bucket ({largest})",
+        cfg.kv_blocks,
+        cfg.kv_block_size
+    );
     Ok(())
 }
 
@@ -93,7 +109,11 @@ mod tests {
 
     fn args(raw: &[&str]) -> Args {
         let v: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
-        Args::parse(&v, &["max-queue", "max-batch", "max-wait-ms", "kv-blocks"]).unwrap()
+        Args::parse(
+            &v,
+            &["max-queue", "chunk-tokens", "max-inflight", "max-wait-ms", "kv-blocks"],
+        )
+        .unwrap()
     }
 
     #[test]
@@ -103,14 +123,15 @@ mod tests {
         let p = dir.join("c.json");
         std::fs::write(
             &p,
-            r#"{"max_queue": 32, "engine": {"buckets": [128, 512], "block_q": 32}}"#,
+            r#"{"max_queue": 32, "chunk_tokens": 128, "engine": {"buckets": [128, 512], "block_q": 32}}"#,
         )
         .unwrap();
         let cfg = load(Some(p.to_str().unwrap()), &args(&["--max-queue", "64"])).unwrap();
         assert_eq!(cfg.max_queue, 64); // CLI wins
+        assert_eq!(cfg.chunk_tokens, 128);
         assert_eq!(cfg.engine.buckets, vec![128, 512]);
         assert_eq!(cfg.engine.block_q, 32);
-        assert_eq!(cfg.max_batch, 8); // default preserved
+        assert_eq!(cfg.max_inflight, 8); // default preserved
     }
 
     #[test]
@@ -121,11 +142,19 @@ mod tests {
         std::fs::write(&p, r#"{"engine": {"buckets": [512, 128]}}"#).unwrap();
         assert!(load(Some(p.to_str().unwrap()), &args(&[])).is_err());
         assert!(load(Some("/nonexistent/x.json"), &args(&[])).is_err());
+        let p2 = dir.join("bad2.json");
+        std::fs::write(&p2, r#"{"chunk_tokens": 0}"#).unwrap();
+        assert!(load(Some(p2.to_str().unwrap()), &args(&[])).is_err());
+        let p3 = dir.join("bad3.json");
+        // Pool smaller than the largest default bucket (1024 rows).
+        std::fs::write(&p3, r#"{"kv_blocks": 4, "kv_block_size": 16}"#).unwrap();
+        assert!(load(Some(p3.to_str().unwrap()), &args(&[])).is_err());
     }
 
     #[test]
     fn defaults_without_file() {
         let cfg = load(None, &args(&[])).unwrap();
         assert_eq!(cfg.max_queue, CoordinatorConfig::default().max_queue);
+        assert_eq!(cfg.chunk_tokens, CoordinatorConfig::default().chunk_tokens);
     }
 }

@@ -14,16 +14,18 @@
 
 use std::time::Instant;
 
+use crate::attention::flash::flash_attention_paged;
 use crate::indexer::train::{distill, TrainConfig};
-use crate::indexer::Indexer;
+use crate::indexer::{IncrementalScores, Indexer};
 #[cfg(feature = "pjrt")]
 use crate::runtime;
-use crate::sparse_attn::exec::sparse_attention_vs;
+use crate::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_paged};
 use crate::sparse_attn::VsPrefill;
-use crate::synth::{gen_head, SynthConfig};
+use crate::synth::{gen_head, SynthConfig, SynthHead};
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
+use super::kv_cache::PagedKvStore;
 use super::request::{Payload, PrefillRequest, PrefillResponse};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -156,11 +158,118 @@ impl PrefillEngine {
             Backend::Pjrt(_) => self.process_pjrt(req, bucket, rng, &mut resp),
         };
         resp.prefill_us = t0.elapsed().as_micros() as u64;
+        // Monolithic execution is one chunk: TTFT is the full prefill.
+        resp.chunks = 1;
+        resp.chunk_us = vec![resp.prefill_us];
+        resp.ttft_us = resp.queue_us + resp.prefill_us;
         match result {
             Ok(()) => resp.ok = true,
             Err(e) => resp.error = Some(format!("{e:#}")),
         }
         resp
+    }
+
+    /// True when the backend can run the chunked pipeline (paged KV store +
+    /// incremental indexing).  The PJRT backend's AOT graphs are
+    /// whole-bucket, so it falls back to monolithic execution per request.
+    pub fn supports_chunked(&self) -> bool {
+        match &self.backend {
+            Backend::Native => true,
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => false,
+        }
+    }
+
+    /// Start a chunked prefill: the caller has already resolved `bucket`
+    /// (via [`bucket_for`](Self::bucket_for)) and reserved `bucket` rows in
+    /// the paged store.  `chunk` is the coordinator's default chunk size;
+    /// the request's own `chunk` field overrides it.
+    pub fn begin_chunked(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        chunk: usize,
+        rng: &mut Rng,
+    ) -> ChunkRun {
+        let queue_us = req.submitted_at.elapsed().as_micros() as u64;
+        let resp = PrefillResponse { id: req.id, queue_us, bucket, ..Default::default() };
+        let mut run_rng = rng.fork(req.id);
+        let head = self.head_for(&req, bucket, &mut run_rng);
+        let chunk = req.chunk.unwrap_or(chunk).clamp(1, bucket);
+        ChunkRun {
+            req,
+            bucket,
+            chunk,
+            next: 0,
+            head,
+            inc: IncrementalScores::new(),
+            rng: run_rng,
+            resp,
+        }
+    }
+
+    /// Execute the next chunk of `run` against the paged store: append the
+    /// chunk's K/V rows, update the incremental index scores, and run the
+    /// paged attention executor over the chunk's queries.  Returns
+    /// `ChunkStep::Done` with the finished response after the last chunk
+    /// (the caller frees the store reservation and replies).
+    pub fn process_chunk(&self, run: &mut ChunkRun, store: &PagedKvStore) -> ChunkStep {
+        if !self.supports_chunked() {
+            // Whole-bucket AOT graphs (PJRT): execute monolithically as one
+            // chunk.
+            return ChunkStep::Done(self.process(&run.req, &mut run.rng));
+        }
+        let t0 = Instant::now();
+        let lo = run.next;
+        let hi = (lo + run.chunk).min(run.bucket);
+        let kc = run.head.k.sub_rows(lo, hi);
+        let vc = run.head.v.sub_rows(lo, hi);
+        if let Err(e) = store.append(run.req.id, &kc, &vc) {
+            run.resp.error = Some(format!("{e:#}"));
+            return ChunkStep::Done(std::mem::take(&mut run.resp));
+        }
+        let Some(view) = store.view(run.req.id) else {
+            run.resp.error = Some(format!("request {} lost its kv reservation", run.req.id));
+            return ChunkStep::Done(std::mem::take(&mut run.resp));
+        };
+        let qc = run.head.q.sub_rows(lo, hi);
+        let out = match run.req.mode {
+            AttentionMode::Dense => {
+                run.resp.density = 1.0;
+                flash_attention_paged(&qc, lo, &view, self.cfg.block_q, self.cfg.block_q)
+            }
+            AttentionMode::Sparse => {
+                let ti = Instant::now();
+                // Incremental scoring over the newly-arrived rows, then
+                // selection over every key resident so far.  On the final
+                // chunk the scores equal the monolithic `predict_kv`
+                // exactly, so the reported density matches monolithic
+                // execution bit-for-bit.
+                self.vsp.indexer.score_chunk(&mut run.inc, &kc, &vc);
+                let (a_v, a_s) = run.inc.finalize();
+                let idx = self.vsp.select_from_scores(&a_v, &a_s, hi, run.req.budget);
+                run.resp.index_us += ti.elapsed().as_micros() as u64;
+                run.resp.density = idx.density(hi);
+                sparse_attention_vs_paged(&qc, lo, &view, &idx, self.cfg.block_q)
+            }
+        };
+        if lo == 0 {
+            run.resp.output_digest = digest(&out);
+        }
+        let dt = t0.elapsed().as_micros() as u64;
+        run.resp.chunk_us.push(dt);
+        run.resp.prefill_us += dt;
+        run.resp.chunks += 1;
+        if run.resp.chunks == 1 {
+            run.resp.ttft_us = run.req.submitted_at.elapsed().as_micros() as u64;
+        }
+        run.next = hi;
+        if hi >= run.bucket {
+            run.resp.ok = true;
+            ChunkStep::Done(std::mem::take(&mut run.resp))
+        } else {
+            ChunkStep::Progress
+        }
     }
 
     fn head_for(&self, req: &PrefillRequest, bucket: usize, rng: &mut Rng) -> crate::synth::SynthHead {
@@ -249,6 +358,34 @@ impl PrefillEngine {
     }
 }
 
+/// In-flight chunked prefill for one request: the synthesized head (the
+/// stand-in for the model forward), the incremental index-score state, the
+/// cursor into the sequence, and the accumulating response.
+pub struct ChunkRun {
+    pub req: PrefillRequest,
+    /// Bucket the request was padded to (also its row reservation in the
+    /// paged store).
+    pub bucket: usize,
+    /// Rows per chunk.
+    pub chunk: usize,
+    /// Next absolute row to process (== rows appended to the store so far).
+    pub next: usize,
+    head: SynthHead,
+    inc: IncrementalScores,
+    /// Consumed by the monolithic (non-chunked backend) fallback.
+    rng: Rng,
+    resp: PrefillResponse,
+}
+
+/// Outcome of one `process_chunk` call.
+pub enum ChunkStep {
+    /// More chunks remain; the run goes back in the ready queue.
+    Progress,
+    /// The request finished (successfully or with `error` set); the caller
+    /// frees the KV reservation and replies.
+    Done(PrefillResponse),
+}
+
 fn digest(m: &Mat) -> Vec<f32> {
     m.data.iter().take(4).cloned().collect()
 }
@@ -279,6 +416,58 @@ mod tests {
         let r = e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense), &mut rng);
         assert!(!r.ok);
         assert!(r.error.unwrap().contains("exceeds"));
+    }
+
+    #[test]
+    fn chunked_dense_matches_monolithic_digest_exactly() {
+        let e = PrefillEngine::native_quick(EngineConfig::default());
+        let mut rng = Rng::new(0);
+        let mono = e.process(&PrefillRequest::synthetic(1, 256, 3, AttentionMode::Dense), &mut rng);
+        assert!(mono.ok);
+        assert_eq!(mono.chunks, 1);
+        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
+        let bucket = e.bucket_for(256).unwrap();
+        assert!(store.reserve(2, bucket));
+        let req = PrefillRequest::synthetic(2, 256, 3, AttentionMode::Dense);
+        let mut run = e.begin_chunked(req, bucket, 100, &mut rng);
+        let resp = loop {
+            match e.process_chunk(&mut run, &store) {
+                ChunkStep::Done(r) => break r,
+                ChunkStep::Progress => {}
+            }
+        };
+        store.free(2);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.chunks, 3, "256 rows at chunk 100 -> 3 chunks");
+        assert_eq!(resp.chunk_us.len(), 3);
+        assert_eq!(resp.output_digest, mono.output_digest, "paged chunked == contiguous");
+        assert!(resp.ttft_us > 0 && resp.ttft_us <= resp.queue_us + resp.prefill_us);
+    }
+
+    #[test]
+    fn chunked_sparse_density_matches_monolithic() {
+        let e = PrefillEngine::native_quick(EngineConfig::default());
+        let mut rng = Rng::new(0);
+        let mono = e.process(&PrefillRequest::synthetic(1, 256, 9, AttentionMode::Sparse), &mut rng);
+        assert!(mono.ok);
+        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
+        let bucket = e.bucket_for(256).unwrap();
+        assert!(store.reserve(2, bucket));
+        let req = PrefillRequest::synthetic(2, 256, 9, AttentionMode::Sparse);
+        let mut run = e.begin_chunked(req, bucket, 64, &mut rng);
+        let resp = loop {
+            match e.process_chunk(&mut run, &store) {
+                ChunkStep::Done(r) => break r,
+                ChunkStep::Progress => {}
+            }
+        };
+        store.free(2);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.chunks, 4);
+        // The final chunk's incremental scores equal the monolithic
+        // predict_kv exactly, so the selected mask (and density) agree.
+        assert_eq!(resp.density, mono.density);
+        assert!(resp.index_us > 0);
     }
 
     #[test]

@@ -1,113 +1,9 @@
-//! Paged KV-cache block allocator (vLLM-style accounting).
+//! The coordinator's paged KV store — a re-export of `tensor::paged`.
 //!
-//! The prefill service reserves `ceil(n / block_size)` blocks per in-flight
-//! request; allocation failure backpressures the batcher.  Tracking is by
-//! request id; a real decode path would hand these blocks to the KV reader,
-//! here they bound prefill concurrency exactly the way a real pool would.
+//! The store itself lives in the tensor layer so the attention kernels
+//! (`flash_attention_paged`, `sparse_attention_vs_paged`) can read through
+//! `PagedKv` views without depending upward on the serving stack; the
+//! coordinator keeps this module as its canonical name for the store
+//! (admission reserves, chunks append, completion frees).
 
-use std::collections::BTreeMap;
-
-pub struct KvCache {
-    pub total_blocks: usize,
-    pub block_size: usize,
-    free: Vec<usize>,
-    held: BTreeMap<u64, Vec<usize>>,
-    /// High-water mark of allocated blocks (observability).
-    pub peak_used: usize,
-}
-
-impl KvCache {
-    pub fn new(total_blocks: usize, block_size: usize) -> KvCache {
-        KvCache {
-            total_blocks,
-            block_size,
-            free: (0..total_blocks).rev().collect(),
-            held: BTreeMap::new(),
-            peak_used: 0,
-        }
-    }
-
-    pub fn blocks_for(&self, seq_len: usize) -> usize {
-        seq_len.div_ceil(self.block_size)
-    }
-
-    pub fn used(&self) -> usize {
-        self.total_blocks - self.free.len()
-    }
-
-    /// Allocate `count` blocks for a request; all-or-nothing.
-    pub fn allocate(&mut self, req_id: u64, count: usize) -> bool {
-        if self.free.len() < count || self.held.contains_key(&req_id) {
-            return false;
-        }
-        let blocks: Vec<usize> = (0..count).map(|_| self.free.pop().unwrap()).collect();
-        self.held.insert(req_id, blocks);
-        self.peak_used = self.peak_used.max(self.used());
-        true
-    }
-
-    pub fn free(&mut self, req_id: u64) {
-        if let Some(blocks) = self.held.remove(&req_id) {
-            self.free.extend(blocks);
-        }
-    }
-
-    pub fn holds(&self, req_id: u64) -> bool {
-        self.held.contains_key(&req_id)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn allocation_lifecycle() {
-        let mut kv = KvCache::new(10, 64);
-        assert_eq!(kv.blocks_for(100), 2);
-        assert_eq!(kv.blocks_for(64), 1);
-        assert!(kv.allocate(1, 4));
-        assert!(kv.holds(1));
-        assert_eq!(kv.used(), 4);
-        assert!(kv.allocate(2, 6));
-        assert!(!kv.allocate(3, 1), "pool exhausted");
-        kv.free(1);
-        assert!(kv.allocate(3, 3));
-        assert_eq!(kv.peak_used, 10);
-    }
-
-    #[test]
-    fn all_or_nothing() {
-        let mut kv = KvCache::new(4, 64);
-        assert!(!kv.allocate(1, 5));
-        assert_eq!(kv.used(), 0);
-    }
-
-    #[test]
-    fn double_allocate_same_id_rejected() {
-        let mut kv = KvCache::new(8, 64);
-        assert!(kv.allocate(1, 2));
-        assert!(!kv.allocate(1, 2));
-        kv.free(1);
-        assert!(kv.allocate(1, 2));
-    }
-
-    #[test]
-    fn free_unknown_id_is_noop() {
-        let mut kv = KvCache::new(4, 64);
-        kv.free(99);
-        assert_eq!(kv.used(), 0);
-    }
-
-    #[test]
-    fn blocks_returned_exactly_once() {
-        let mut kv = KvCache::new(6, 64);
-        assert!(kv.allocate(1, 3));
-        assert!(kv.allocate(2, 3));
-        kv.free(1);
-        kv.free(1); // double free is a no-op
-        assert_eq!(kv.used(), 3);
-        assert!(kv.allocate(3, 3));
-        assert!(!kv.allocate(4, 1));
-    }
-}
+pub use crate::tensor::paged::{PagedKv, PagedKvStore};

@@ -11,9 +11,12 @@ pub struct Metrics {
     pub completed: AtomicU64,
     pub failed: AtomicU64,
     pub kv_rejections: AtomicU64,
+    /// Total prefill chunks executed across completed requests.
+    pub chunks_executed: AtomicU64,
     prefill_us: Mutex<Vec<f64>>,
     queue_us: Mutex<Vec<f64>>,
     index_us: Mutex<Vec<f64>>,
+    ttft_us: Mutex<Vec<f64>>,
     densities: Mutex<Vec<f64>>,
 }
 
@@ -22,8 +25,11 @@ pub struct Snapshot {
     pub completed: u64,
     pub failed: u64,
     pub kv_rejections: u64,
+    pub chunks_executed: u64,
     pub p50_prefill_us: f64,
     pub p95_prefill_us: f64,
+    pub p50_ttft_us: f64,
+    pub p95_ttft_us: f64,
     pub mean_queue_us: f64,
     pub mean_index_us: f64,
     pub mean_density: f64,
@@ -35,9 +41,11 @@ impl Metrics {
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             kv_rejections: AtomicU64::new(0),
+            chunks_executed: AtomicU64::new(0),
             prefill_us: Mutex::new(Vec::new()),
             queue_us: Mutex::new(Vec::new()),
             index_us: Mutex::new(Vec::new()),
+            ttft_us: Mutex::new(Vec::new()),
             densities: Mutex::new(Vec::new()),
         }
     }
@@ -45,9 +53,11 @@ impl Metrics {
     pub fn record(&self, resp: &PrefillResponse) {
         if resp.ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
+            self.chunks_executed.fetch_add(resp.chunks, Ordering::Relaxed);
             self.prefill_us.lock().unwrap().push(resp.prefill_us as f64);
             self.queue_us.lock().unwrap().push(resp.queue_us as f64);
             self.index_us.lock().unwrap().push(resp.index_us as f64);
+            self.ttft_us.lock().unwrap().push(resp.ttft_us as f64);
             self.densities.lock().unwrap().push(resp.density);
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
@@ -57,15 +67,21 @@ impl Metrics {
     pub fn snapshot(&self) -> Snapshot {
         let mut prefill = self.prefill_us.lock().unwrap().clone();
         prefill.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut ttft = self.ttft_us.lock().unwrap().clone();
+        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let queue = self.queue_us.lock().unwrap();
         let index = self.index_us.lock().unwrap();
         let dens = self.densities.lock().unwrap();
+        let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile_sorted(xs, p) };
         Snapshot {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             kv_rejections: self.kv_rejections.load(Ordering::Relaxed),
-            p50_prefill_us: if prefill.is_empty() { 0.0 } else { percentile_sorted(&prefill, 0.5) },
-            p95_prefill_us: if prefill.is_empty() { 0.0 } else { percentile_sorted(&prefill, 0.95) },
+            chunks_executed: self.chunks_executed.load(Ordering::Relaxed),
+            p50_prefill_us: pct(&prefill, 0.5),
+            p95_prefill_us: pct(&prefill, 0.95),
+            p50_ttft_us: pct(&ttft, 0.5),
+            p95_ttft_us: pct(&ttft, 0.95),
             mean_queue_us: summarize(&queue).mean,
             mean_index_us: summarize(&index).mean,
             mean_density: summarize(&dens).mean,
@@ -84,7 +100,7 @@ mod tests {
     use super::*;
 
     fn resp(ok: bool, prefill_us: u64, density: f64) -> PrefillResponse {
-        PrefillResponse { ok, prefill_us, density, ..Default::default() }
+        PrefillResponse { ok, prefill_us, density, chunks: 2, ttft_us: prefill_us / 2, ..Default::default() }
     }
 
     #[test]
@@ -97,7 +113,10 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.completed, 10);
         assert_eq!(s.failed, 1);
+        assert_eq!(s.chunks_executed, 20);
         assert!((s.p50_prefill_us - 550.0).abs() < 1.0);
+        assert!((s.p50_ttft_us - 275.0).abs() < 1.0);
+        assert!(s.p95_ttft_us >= s.p50_ttft_us);
         assert!((s.mean_density - 0.2).abs() < 1e-9);
     }
 }

@@ -1,36 +1,47 @@
 //! L3 serving coordinator: the paper's system side.
 //!
 //! A prefill-serving stack in the vLLM-router mold, specialized for
-//! VSPrefill: requests are admitted under backpressure, batched by
-//! sequence-length bucket, scheduled onto an executor that runs
-//! (model prefill -> VSIndexer -> adaptive budget -> fused sparse attention)
-//! per layer and KV group, with KV-cache blocks accounted by a paged
-//! allocator.  Python never runs here; the model graphs are AOT artifacts
-//! executed via PJRT, and the indexer/budget/merge logic is native Rust.
+//! VSPrefill and built around **chunked prefill over a paged KV store**:
+//! requests are admitted under backpressure, their padded sequence is
+//! reserved all-or-nothing in a paged block pool that holds the actual K/V
+//! rows, and a chunk-granular scheduler interleaves chunks from different
+//! requests across the worker pool — a 128k prefill no longer
+//! head-of-line-blocks the short requests behind it.  Per chunk, the engine
+//! appends the chunk's K/V to the paged store, updates the incremental
+//! vertical/slash index scores, and runs a block-table-aware executor
+//! (`flash_attention_paged` / `sparse_attention_vs_paged`) over the chunk's
+//! queries.  Python never runs here; the PJRT backend executes whole-bucket
+//! AOT graphs and therefore schedules as single-chunk requests.
 //!
 //! Module map:
-//!   request    — request/response types and timing breakdowns
-//!   admission  — bounded admission queue (backpressure)
-//!   batcher    — length-bucketed dynamic batching with max-wait flush
-//!   kv_cache   — paged KV block allocator
-//!   engine     — the per-batch execution pipeline (native or PJRT backend)
-//!   metrics    — counters + latency summaries
+//!   request    — request/response types; per-chunk timing + TTFT breakdown
+//!   admission  — bounded admission queue (backpressure) + WorkItem
+//!   scheduler  — chunk-granular round-robin scheduler (admission ->
+//!                bucket/KV reservation -> per-round chunk dispatch)
+//!   kv_cache   — paged KV store: block arenas holding real K/V rows,
+//!                per-request block tables, append/view/gather/free
+//!                (re-export of `tensor::paged` — the attention kernels
+//!                read through it, so it lives below them)
+//!   engine     — the execution pipeline: monolithic `process` (parity
+//!                baseline, PJRT) and chunked `begin_chunked`/`process_chunk`
+//!   metrics    — counters + latency/TTFT summaries
 //!   server     — TCP JSON-lines front end + client
 
 pub mod admission;
-pub mod batcher;
 pub mod config;
 pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 
 pub use engine::{AttentionMode, EngineConfig, PrefillEngine};
+pub use kv_cache::{PagedKv, PagedKvStore};
 pub use request::{PrefillRequest, PrefillResponse};
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 
 use crate::util::rng::Rng;
 
@@ -39,8 +50,15 @@ use crate::util::rng::Rng;
 pub struct CoordinatorConfig {
     pub engine: EngineConfig,
     pub max_queue: usize,
-    pub max_batch: usize,
+    /// Default rows per prefill chunk (per-request `chunk` overrides).
+    pub chunk_tokens: usize,
+    /// Chunks dispatched per scheduling round — the interleaving width and
+    /// the batch-level parallelism of the native backend.
+    pub max_inflight: usize,
     pub max_wait_ms: u64,
+    /// Paged KV pool geometry.  Unlike the seed's accounting-only cache,
+    /// blocks hold real K/V rows: memory is
+    /// `2 * kv_blocks * kv_block_size * head_dim * 4` bytes.
     pub kv_blocks: usize,
     pub kv_block_size: usize,
 }
@@ -50,19 +68,24 @@ impl Default for CoordinatorConfig {
         CoordinatorConfig {
             engine: EngineConfig::default(),
             max_queue: 256,
-            max_batch: 8,
+            chunk_tokens: 256,
+            max_inflight: 8,
             max_wait_ms: 5,
-            kv_blocks: 4096,
+            kv_blocks: 1024,
             kv_block_size: 64,
         }
     }
 }
 
-/// The running coordinator: admission -> batcher -> executor thread.
+/// The running coordinator: admission -> chunk scheduler on the executor
+/// thread, reading/writing the shared paged KV store.
 pub struct Coordinator {
     pub cfg: CoordinatorConfig,
     admission: Arc<admission::AdmissionQueue>,
     pub metrics: Arc<metrics::Metrics>,
+    /// The paged KV store (shared with the executor thread; exposed for
+    /// observability: `used()`, `peak_used()`).
+    pub kv: Arc<kv_cache::PagedKvStore>,
     stop: Arc<AtomicBool>,
     executor: Option<std::thread::JoinHandle<()>>,
 }
@@ -78,7 +101,7 @@ impl Coordinator {
     /// calling thread, and all subsequent PJRT use is from that one thread,
     /// which is exactly the single-threaded discipline the types assume.
     /// (The native backend additionally shares `&engine` with the scoped
-    /// batch workers — see `supports_parallel`.)
+    /// chunk workers — see `supports_parallel`.)
     pub fn start(cfg: CoordinatorConfig, engine: PrefillEngine) -> Coordinator {
         struct SendEngine(PrefillEngine);
         unsafe impl Send for SendEngine {}
@@ -89,21 +112,25 @@ impl Coordinator {
                 self.0
             }
         }
-        let buckets = engine.buckets();
         let engine = SendEngine(engine);
         let admission = Arc::new(admission::AdmissionQueue::new(cfg.max_queue));
         let metrics = Arc::new(metrics::Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
-        let kv = Arc::new(Mutex::new(kv_cache::KvCache::new(cfg.kv_blocks, cfg.kv_block_size)));
+        let kv = Arc::new(kv_cache::PagedKvStore::new(
+            cfg.kv_blocks,
+            cfg.kv_block_size,
+            cfg.engine.synth.head_dim,
+        ));
 
-        let batcher = batcher::Batcher::new(
-            cfg.max_batch,
-            std::time::Duration::from_millis(cfg.max_wait_ms),
-            buckets,
-        );
+        let scfg = scheduler::SchedulerConfig {
+            chunk_tokens: cfg.chunk_tokens.max(1),
+            max_inflight: cfg.max_inflight.max(1),
+            max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
+        };
         let adm = admission.clone();
         let met = metrics.clone();
         let stp = stop.clone();
+        let store = kv.clone();
         // `engine.threads` is scoped to this coordinator's executor thread
         // (a per-thread override, not process-global state): two
         // coordinators with different knobs in one process do not fight.
@@ -111,77 +138,8 @@ impl Coordinator {
         let executor = std::thread::spawn(move || {
             let engine = engine.into_inner();
             let mut rng = Rng::new(0xC0FFEE);
-            let mut run = move || loop {
-                if stp.load(Ordering::Relaxed) && adm.is_empty() {
-                    break;
-                }
-                let batch = batcher.next_batch(&adm);
-                if batch.is_empty() {
-                    if stp.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    std::thread::sleep(std::time::Duration::from_micros(200));
-                    continue;
-                }
-                // KV admission: allocate blocks for the whole batch; requests
-                // that do not fit are re-queued (backpressure to the batcher).
-                let mut admitted = Vec::new();
-                for item in batch {
-                    let blocks_needed = {
-                        let kvq = kv.lock().unwrap();
-                        kvq.blocks_for(item.req.seq_len())
-                    };
-                    let got = kv.lock().unwrap().allocate(item.req.id, blocks_needed);
-                    if got {
-                        admitted.push(item);
-                    } else {
-                        met.kv_rejections.fetch_add(1, Ordering::Relaxed);
-                        adm.requeue(item);
-                    }
-                }
-                // Execute the drained batch.  The native backend fans the
-                // requests out across the worker pool (each worker runs its
-                // request's kernels serially — the pool pins nested
-                // parallelism to 1); the PJRT backend stays serial on this
-                // thread, matching its single-threaded wrapper types.
-                if engine.supports_parallel() && admitted.len() > 1 {
-                    // SAFETY of the Sync wrapper: taken only when
-                    // supports_parallel() is true, i.e. the Native backend —
-                    // plain owned data, no interior mutability, and process()
-                    // takes &self.
-                    struct ShareEngine<'a>(&'a PrefillEngine);
-                    unsafe impl Sync for ShareEngine<'_> {}
-                    impl<'a> ShareEngine<'a> {
-                        // Method (not field access) so the closure captures
-                        // the whole Sync wrapper rather than the inner
-                        // reference (2021 disjoint capture).
-                        fn engine(&self) -> &'a PrefillEngine {
-                            self.0
-                        }
-                    }
-                    let eng = ShareEngine(&engine);
-                    let jobs: Vec<(batcher::WorkItem, Rng)> = admitted
-                        .into_iter()
-                        .map(|item| {
-                            let r = rng.fork(item.req.id);
-                            (item, r)
-                        })
-                        .collect();
-                    let (kv_ref, met_ref) = (&kv, &met);
-                    crate::util::parallel::par_drain(jobs, |(item, mut r)| {
-                        let resp = eng.engine().process(&item.req, &mut r);
-                        kv_ref.lock().unwrap().free(item.req.id);
-                        met_ref.record(&resp);
-                        let _ = item.reply.send(resp);
-                    });
-                } else {
-                    for item in admitted {
-                        let resp = engine.process(&item.req, &mut rng);
-                        kv.lock().unwrap().free(item.req.id);
-                        met.record(&resp);
-                        let _ = item.reply.send(resp);
-                    }
-                }
+            let mut run = move || {
+                scheduler::run_loop(&scfg, &engine, &adm, &store, &met, &stp, &mut rng);
             };
             if pool_threads > 0 {
                 crate::util::parallel::with_threads(pool_threads, move || run());
@@ -190,7 +148,7 @@ impl Coordinator {
             }
         });
 
-        Coordinator { cfg, admission, metrics, stop, executor: Some(executor) }
+        Coordinator { cfg, admission, metrics, kv, stop, executor: Some(executor) }
     }
 
     /// Submit a request; returns a receiver for the response, or an error
@@ -200,7 +158,7 @@ impl Coordinator {
         req: PrefillRequest,
     ) -> Result<mpsc::Receiver<PrefillResponse>, admission::QueueFull> {
         let (tx, rx) = mpsc::channel();
-        self.admission.push(batcher::WorkItem { req, reply: tx })?;
+        self.admission.push(admission::WorkItem { req, reply: tx })?;
         Ok(rx)
     }
 
@@ -237,7 +195,7 @@ mod tests {
     fn native_coordinator(max_queue: usize) -> Coordinator {
         let cfg = CoordinatorConfig {
             max_queue,
-            max_batch: 4,
+            max_inflight: 4,
             max_wait_ms: 1,
             ..Default::default()
         };
@@ -255,8 +213,11 @@ mod tests {
         assert!(resp.ok, "{:?}", resp.error);
         assert!(resp.density > 0.0 && resp.density < 0.8);
         assert!(resp.prefill_us > 0);
+        assert!(resp.chunks >= 1);
+        assert!(resp.ttft_us > 0);
         let snap = c.shutdown();
         assert_eq!(snap.completed, 1);
+        assert!(snap.chunks_executed >= 1);
     }
 
     #[test]
@@ -275,6 +236,7 @@ mod tests {
         let snap = c.shutdown();
         assert_eq!(snap.completed, 12);
         assert!(snap.p50_prefill_us > 0.0);
+        assert!(snap.p50_ttft_us > 0.0);
     }
 
     #[test]
@@ -287,5 +249,18 @@ mod tests {
         }
         assert!(results.iter().any(|x| !x), "expected at least one rejection");
         drop(c);
+    }
+
+    #[test]
+    fn per_request_chunk_override_is_respected() {
+        let c = native_coordinator(16);
+        let mut req = PrefillRequest::synthetic(1, 256, 3, AttentionMode::Sparse);
+        req.chunk = Some(64);
+        let resp = c.prefill(req).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.chunks, 4, "256 rows at chunk 64");
+        assert_eq!(resp.chunk_us.len(), 4);
+        let snap = c.shutdown();
+        assert_eq!(snap.chunks_executed, 4);
     }
 }

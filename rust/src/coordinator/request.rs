@@ -20,6 +20,9 @@ pub struct PrefillRequest {
     pub mode: AttentionMode,
     /// Budget knob in (0, 1]; 0.5 is the paper's default operating point.
     pub budget: f32,
+    /// Per-request chunk-size override (rows per prefill chunk); `None`
+    /// uses the coordinator's `chunk_tokens`.
+    pub chunk: Option<usize>,
     pub submitted_at: std::time::Instant,
 }
 
@@ -30,6 +33,7 @@ impl PrefillRequest {
             payload: Payload::Synthetic { seq_len, seed },
             mode,
             budget: 0.5,
+            chunk: None,
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -40,6 +44,7 @@ impl PrefillRequest {
             payload: Payload::Tokens(tokens),
             mode,
             budget: 0.5,
+            chunk: None,
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -67,6 +72,15 @@ pub struct PrefillResponse {
     pub prefill_us: u64,
     /// Microseconds spent in index prediction + budgeting + merge.
     pub index_us: u64,
+    /// Microseconds from submission to the first chunk's output landing —
+    /// the TTFT-style progress signal of chunked prefill (equals
+    /// queue + first-chunk compute; for monolithic execution it equals
+    /// queue_us + prefill_us).
+    pub ttft_us: u64,
+    /// Number of prefill chunks executed (1 for monolithic execution).
+    pub chunks: u64,
+    /// Per-chunk compute microseconds, in schedule order.
+    pub chunk_us: Vec<u64>,
     /// Density of the selected mask (1.0 for dense).
     pub density: f64,
     /// Output checksum (first 4 output values) for cross-backend parity.
@@ -89,6 +103,12 @@ impl PrefillResponse {
             ("queue_us", Json::Num(self.queue_us as f64)),
             ("prefill_us", Json::Num(self.prefill_us as f64)),
             ("index_us", Json::Num(self.index_us as f64)),
+            ("ttft_us", Json::Num(self.ttft_us as f64)),
+            ("chunks", Json::Num(self.chunks as f64)),
+            (
+                "chunk_us",
+                Json::Arr(self.chunk_us.iter().map(|&u| Json::Num(u as f64)).collect()),
+            ),
             ("density", Json::Num(self.density)),
             ("output_digest", Json::arr_f32(&self.output_digest)),
         ])
@@ -103,6 +123,15 @@ impl PrefillResponse {
             queue_us: j.req("queue_us")?.as_f64().unwrap_or(0.0) as u64,
             prefill_us: j.req("prefill_us")?.as_f64().unwrap_or(0.0) as u64,
             index_us: j.req("index_us")?.as_f64().unwrap_or(0.0) as u64,
+            // Chunk fields default to zero/empty so pre-chunking peers on
+            // the wire stay parseable.
+            ttft_us: j.get("ttft_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            chunks: j.get("chunks").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            chunk_us: j
+                .get("chunk_us")
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().map(|u| u.as_f64().unwrap_or(0.0) as u64).collect())
+                .unwrap_or_default(),
             density: j.req("density")?.as_f64().unwrap_or(0.0),
             output_digest: j.req("output_digest")?.as_f32_vec()?,
         })
@@ -123,6 +152,9 @@ mod tests {
             queue_us: 10,
             prefill_us: 1000,
             index_us: 50,
+            ttft_us: 400,
+            chunks: 3,
+            chunk_us: vec![120, 130, 140],
             density: 0.18,
             output_digest: vec![1.0, -2.5, 0.0, 3.25],
         };
@@ -133,6 +165,9 @@ mod tests {
         assert_eq!(back.bucket, 256);
         assert_eq!(back.output_digest, r.output_digest);
         assert!((back.density - 0.18).abs() < 1e-12);
+        assert_eq!(back.ttft_us, 400);
+        assert_eq!(back.chunks, 3);
+        assert_eq!(back.chunk_us, vec![120, 130, 140]);
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! Chunk-granular prefill scheduler (replaces the seed's length-bucketed
+//! batcher).
+//!
+//! The unit of scheduling is one *chunk* of one request, not a whole
+//! request: every round the scheduler (1) admits new work — resolving the
+//! request's bucket, rejecting over-cap requests at admission with a clear
+//! error, and reserving the full padded sequence in the paged KV store
+//! all-or-nothing (so an admitted request can always run to completion and
+//! chunk interleaving cannot deadlock); then (2) dispatches the next chunk
+//! of up to `max_inflight` ready requests round-robin across the worker
+//! pool.  A 128-chunk prefill therefore no longer head-of-line-blocks a
+//! 1-chunk request that arrives behind it: the short request boards the
+//! next round and completes while the long one is still mid-sequence.
+//!
+//! Backends that cannot chunk (PJRT's whole-bucket AOT graphs) run each
+//! request as a single chunk through the same rounds, which degrades to the
+//! seed's behavior per request while keeping admission/backpressure
+//! identical.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Mutex};
+
+use crate::util::rng::Rng;
+
+use super::admission::{AdmissionQueue, WorkItem};
+use super::engine::{ChunkRun, ChunkStep, PrefillEngine};
+use super::kv_cache::PagedKvStore;
+use super::metrics::Metrics;
+use super::request::PrefillResponse;
+
+/// Scheduler knobs (from `CoordinatorConfig`).
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Default rows per prefill chunk (a request's `chunk` field overrides).
+    pub chunk_tokens: usize,
+    /// Chunks dispatched per scheduling round — the interleaving width.
+    pub max_inflight: usize,
+    /// How long to wait for work when idle.
+    pub max_wait: std::time::Duration,
+}
+
+/// One in-flight request: its chunk state plus the reply channel.
+struct Inflight {
+    run: ChunkRun,
+    reply: mpsc::Sender<PrefillResponse>,
+}
+
+/// The scheduler loop: runs on the coordinator's executor thread until
+/// `stop` is set and all queues drain.
+pub(crate) fn run_loop(
+    cfg: &SchedulerConfig,
+    engine: &PrefillEngine,
+    adm: &AdmissionQueue,
+    store: &PagedKvStore,
+    met: &Metrics,
+    stop: &AtomicBool,
+    rng: &mut Rng,
+) {
+    let mut ready: VecDeque<Inflight> = VecDeque::new();
+    loop {
+        if stop.load(Ordering::Relaxed) && adm.is_empty() && ready.is_empty() {
+            break;
+        }
+        admit(cfg, engine, adm, store, met, &mut ready, rng);
+        if ready.is_empty() {
+            if stop.load(Ordering::Relaxed) && adm.is_empty() {
+                break;
+            }
+            continue; // `admit` already waited up to max_wait
+        }
+        dispatch_round(cfg, engine, store, met, &mut ready);
+    }
+}
+
+/// Pull new requests out of admission into the ready ring.  Over-cap
+/// requests are rejected here — at admission, with a clear error — instead
+/// of failing deep in the engine; requests the KV pool cannot hold yet are
+/// requeued (backpressure) and admission pauses until blocks free up.
+fn admit(
+    cfg: &SchedulerConfig,
+    engine: &PrefillEngine,
+    adm: &AdmissionQueue,
+    store: &PagedKvStore,
+    met: &Metrics,
+    ready: &mut VecDeque<Inflight>,
+    rng: &mut Rng,
+) {
+    // `max_inflight` bounds admitted requests (each holds a full padded KV
+    // reservation), not just chunks per round: a full ready ring admits
+    // nothing until something completes.
+    let want = cfg.max_inflight.saturating_sub(ready.len());
+    if want == 0 {
+        return;
+    }
+    // Only block waiting for work when there is nothing to schedule.
+    let wait = if ready.is_empty() { cfg.max_wait } else { std::time::Duration::ZERO };
+    let mut pending: VecDeque<WorkItem> = adm.pop_up_to(want, wait).into();
+    while let Some(item) = pending.pop_front() {
+        let n = item.req.seq_len();
+        let Some(bucket) = engine.bucket_for(n) else {
+            let largest = engine.buckets().into_iter().max().unwrap_or(0);
+            reject(
+                met,
+                &item,
+                format!("rejected at admission: seq_len {n} exceeds largest bucket {largest}"),
+            );
+            continue;
+        };
+        if bucket > store.total_blocks * store.block_size {
+            // Can NEVER fit, even with the pool idle: requeueing would spin
+            // forever and head-of-line-block everything behind it.
+            reject(
+                met,
+                &item,
+                format!(
+                    "rejected at admission: bucket {bucket} exceeds kv pool capacity ({} blocks x {} rows)",
+                    store.total_blocks, store.block_size
+                ),
+            );
+            continue;
+        }
+        if !store.reserve(item.req.id, bucket) {
+            met.kv_rejections.fetch_add(1, Ordering::Relaxed);
+            // Pool is full right now: put this item and everything popped
+            // behind it back at the FRONT of admission in arrival order,
+            // and retry after in-flight work frees blocks.
+            pending.push_front(item);
+            while let Some(it) = pending.pop_back() {
+                adm.requeue(it);
+            }
+            break;
+        }
+        let run = engine.begin_chunked(item.req, bucket, cfg.chunk_tokens, rng);
+        ready.push_back(Inflight { run, reply: item.reply });
+    }
+}
+
+/// Fail a request at admission with a clear error.
+fn reject(met: &Metrics, item: &WorkItem, msg: String) {
+    let resp = PrefillResponse { id: item.req.id, error: Some(msg), ..Default::default() };
+    met.record(&resp);
+    let _ = item.reply.send(resp);
+}
+
+/// Dispatch one chunk for up to `max_inflight` ready requests.  The native
+/// backend fans the chunks across the worker pool (each worker runs its
+/// chunk's kernels serially — the pool pins nested parallelism to 1);
+/// non-parallel backends process the round serially on this thread.
+/// Unfinished runs rejoin the BACK of the ready ring, which is what makes
+/// scheduling round-robin.
+fn dispatch_round(
+    cfg: &SchedulerConfig,
+    engine: &PrefillEngine,
+    store: &PagedKvStore,
+    met: &Metrics,
+    ready: &mut VecDeque<Inflight>,
+) {
+    let take = ready.len().min(cfg.max_inflight.max(1));
+    let round: Vec<Inflight> = ready.drain(..take).collect();
+    let survivors: Mutex<Vec<Inflight>> = Mutex::new(Vec::with_capacity(take));
+    let step = |mut job: Inflight, eng: &PrefillEngine| match eng.process_chunk(&mut job.run, store) {
+        ChunkStep::Progress => survivors.lock().unwrap().push(job),
+        ChunkStep::Done(resp) => {
+            store.free(job.run.req.id);
+            met.record(&resp);
+            let _ = job.reply.send(resp);
+        }
+    };
+    if engine.supports_parallel() && round.len() > 1 {
+        // SAFETY of the Sync wrapper: taken only when supports_parallel()
+        // is true, i.e. the Native backend — plain owned data with no
+        // interior mutability, and process_chunk takes &self on the engine.
+        struct ShareEngine<'a>(&'a PrefillEngine);
+        unsafe impl Sync for ShareEngine<'_> {}
+        impl<'a> ShareEngine<'a> {
+            // Method (not field access) so the closure captures the whole
+            // Sync wrapper rather than the inner reference (2021 disjoint
+            // capture).
+            fn engine(&self) -> &'a PrefillEngine {
+                self.0
+            }
+        }
+        let eng = ShareEngine(engine);
+        crate::util::parallel::par_drain(round, |job| step(job, eng.engine()));
+    } else {
+        for job in round {
+            step(job, engine);
+        }
+    }
+    // Survivors rejoin in request-id order for determinism (par_drain
+    // completes in arbitrary order), behind any newly admitted work that is
+    // already queued — round-robin across rounds either way.
+    let mut back = survivors.into_inner().unwrap();
+    back.sort_by_key(|j| j.run.req.id);
+    for job in back {
+        ready.push_back(job);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineConfig;
+    use crate::coordinator::{AttentionMode, PrefillRequest};
+
+    fn setup() -> (SchedulerConfig, PrefillEngine, AdmissionQueue, PagedKvStore, Metrics) {
+        let ecfg = EngineConfig::default();
+        let engine = PrefillEngine::native_quick(ecfg.clone());
+        let store = PagedKvStore::new(256, 64, ecfg.synth.head_dim);
+        (
+            SchedulerConfig {
+                chunk_tokens: 128,
+                max_inflight: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            engine,
+            AdmissionQueue::new(64),
+            store,
+            Metrics::new(),
+        )
+    }
+
+    fn submit(adm: &AdmissionQueue, id: u64, n: usize) -> mpsc::Receiver<PrefillResponse> {
+        let (tx, rx) = mpsc::channel();
+        let req = PrefillRequest::synthetic(id, n, id, AttentionMode::Sparse);
+        adm.push(WorkItem { req, reply: tx }).unwrap();
+        rx
+    }
+
+    #[test]
+    fn drains_all_work_then_stops() {
+        let (cfg, engine, adm, store, met) = setup();
+        let rxs: Vec<_> = (0..6).map(|i| submit(&adm, i, 128 + (i as usize % 2) * 128)).collect();
+        let stop = AtomicBool::new(true); // pre-set: loop exits once drained
+        let mut rng = Rng::new(1);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().ok);
+        }
+        assert_eq!(met.snapshot().completed, 6);
+        assert_eq!(store.used(), 0, "all reservations freed");
+    }
+
+    #[test]
+    fn over_cap_rejected_at_admission() {
+        let (cfg, engine, adm, store, met) = setup();
+        let rx = submit(&adm, 1, 999_999);
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(2);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        let resp = rx.recv().unwrap();
+        assert!(!resp.ok);
+        let err = resp.error.unwrap();
+        assert!(err.contains("rejected at admission"), "{err}");
+        assert!(err.contains("exceeds largest bucket"), "{err}");
+        assert_eq!(met.snapshot().failed, 1);
+        assert_eq!(store.used(), 0);
+    }
+
+    #[test]
+    fn never_fit_bucket_rejected_not_requeued() {
+        let (cfg, engine, adm, big_store, met) = setup();
+        // Pool (4 x 64 = 256 rows) smaller than the 512 bucket: the request
+        // must be rejected at admission, not requeued forever, and must not
+        // block the servable request behind it.
+        let store = PagedKvStore::new(4, 64, big_store.head_dim);
+        let bad_rx = submit(&adm, 1, 512);
+        let ok_rx = submit(&adm, 2, 128);
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(4);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        let bad = bad_rx.recv().unwrap();
+        assert!(!bad.ok);
+        assert!(bad.error.unwrap().contains("exceeds kv pool capacity"));
+        assert!(ok_rx.recv().unwrap().ok);
+        assert_eq!(met.snapshot().completed, 1);
+        assert_eq!(met.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn kv_exhaustion_requeues_and_recovers() {
+        let (cfg, engine, adm, big_store, met) = setup();
+        // Pool that fits exactly one 1024-bucket request at a time.
+        let store = PagedKvStore::new(16, 64, big_store.head_dim);
+        let rxs: Vec<_> = (0..3).map(|i| submit(&adm, i, 1024)).collect();
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(3);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().ok, "requeued requests complete eventually");
+        }
+        let snap = met.snapshot();
+        assert_eq!(snap.completed, 3);
+        assert!(snap.kv_rejections > 0, "backpressure must have engaged");
+    }
+}

@@ -1,8 +1,10 @@
 //! TCP JSON-lines front end.
 //!
 //! Wire protocol (one JSON object per line):
-//!   request:  {"id": 1, "n": 256, "seed": 7, "mode": "sparse", "budget": 0.5}
+//!   request:  {"id": 1, "n": 256, "seed": 7, "mode": "sparse", "budget": 0.5,
+//!              "chunk": 256}
 //!             or {"id": 1, "tokens": [..], "mode": "dense"}
+//!   ("chunk" optionally overrides the coordinator's prefill chunk size)
 //!   response: PrefillResponse::to_json
 //! The connection handler blocks per request (prefill is the unit of work);
 //! multiple connections are served concurrently, all funneling into the
@@ -47,6 +49,10 @@ pub fn parse_request(line: &str) -> anyhow::Result<PrefillRequest> {
     };
     if let Some(b) = j.get("budget").and_then(|b| b.as_f64()) {
         req.budget = b as f32;
+    }
+    if let Some(c) = j.get("chunk").and_then(|c| c.as_usize()) {
+        anyhow::ensure!(c > 0, "chunk must be positive");
+        req.chunk = Some(c);
     }
     Ok(req)
 }
@@ -205,6 +211,11 @@ mod tests {
         assert_eq!(r2.seq_len(), 3);
         assert_eq!(r2.mode, AttentionMode::Sparse);
         assert!((r2.budget - 0.25).abs() < 1e-6);
+        assert_eq!(r2.chunk, None);
+
+        let r3 = parse_request(r#"{"id": 5, "n": 512, "chunk": 128}"#).unwrap();
+        assert_eq!(r3.chunk, Some(128));
+        assert!(parse_request(r#"{"id": 6, "n": 512, "chunk": 0}"#).is_err());
 
         assert!(parse_request("{}").is_err());
         assert!(parse_request("not json").is_err());

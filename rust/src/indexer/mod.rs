@@ -139,6 +139,59 @@ impl Indexer {
             bs: bs[0],
         })
     }
+
+    /// Score one K/V chunk into an incremental state — the chunked-prefill
+    /// indexing path.  Positions are scored independently (the hidden
+    /// forward and both head dot-products are per-row), so only the final
+    /// softmax normalization couples positions; it is deferred to
+    /// [`IncrementalScores::finalize`], making the incremental result
+    /// *identical* to `predict_kv` on the concatenated K/V.
+    pub fn score_chunk(&self, state: &mut IncrementalScores, k: &Mat, v: &Mat) {
+        let x = k.hcat(v);
+        let (z, _) = self.hidden_fwd(&x);
+        state.logit_v.reserve(z.rows);
+        state.logit_s.reserve(z.rows);
+        for i in 0..z.rows {
+            state.logit_v.push(dot(z.row(i), &self.wv) + self.bv);
+            state.logit_s.push(dot(z.row(i), &self.ws) + self.bs);
+        }
+    }
+}
+
+/// Accumulated per-position vertical/slash logits for a sequence whose K/V
+/// arrives chunk by chunk.  `Indexer::score_chunk` appends; `finalize`
+/// applies the softmax (and the slash reversal: per-position score at
+/// position j lands at offset n-1-j) over everything seen so far.
+#[derive(Clone, Debug, Default)]
+pub struct IncrementalScores {
+    logit_v: Vec<f32>,
+    logit_s: Vec<f32>,
+}
+
+impl IncrementalScores {
+    pub fn new() -> IncrementalScores {
+        IncrementalScores::default()
+    }
+
+    /// Positions scored so far.
+    pub fn len(&self) -> usize {
+        self.logit_v.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.logit_v.is_empty()
+    }
+
+    /// (A_v, A_s) over the positions seen so far — exactly what
+    /// `Indexer::predict_kv` returns on the concatenated prefix.
+    pub fn finalize(&self) -> (Vec<f32>, Vec<f32>) {
+        let mut av = self.logit_v.clone();
+        softmax_inplace(&mut av);
+        let mut as_off = self.logit_s.clone();
+        as_off.reverse();
+        softmax_inplace(&mut as_off);
+        (av, as_off)
+    }
 }
 
 #[cfg(test)]
@@ -187,6 +240,26 @@ mod tests {
         let x = Mat::from_fn(6, 4, |i, j| (i + j) as f32 * 0.1);
         let (av, _) = ix.forward(&x);
         assert!((av.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn incremental_scores_match_batch_exactly() {
+        let mut rng = Rng::new(3);
+        let ix = Indexer::init(&mut rng, 16, 8);
+        let k = Mat::from_fn(37, 8, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(37, 8, |_, _| rng.normal_f32());
+        let mut inc = IncrementalScores::new();
+        let mut lo = 0;
+        for chunk in [5usize, 16, 16] {
+            ix.score_chunk(&mut inc, &k.sub_rows(lo, lo + chunk), &v.sub_rows(lo, lo + chunk));
+            lo += chunk;
+            // every prefix matches the batch path on that prefix
+            let (want_v, want_s) = ix.predict_kv(&k.sub_rows(0, lo), &v.sub_rows(0, lo));
+            let (got_v, got_s) = inc.finalize();
+            assert_eq!(got_v, want_v, "prefix {lo} vertical");
+            assert_eq!(got_s, want_s, "prefix {lo} slash");
+        }
+        assert_eq!(inc.len(), 37);
     }
 
     #[test]

@@ -17,7 +17,7 @@ use vsprefill::util::args::Args;
 
 const KNOWN: &[&str] = &[
     "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "artifacts",
-    "config", "max-queue", "max-batch", "max-wait-ms", "kv-blocks", "threads",
+    "config", "max-queue", "chunk-tokens", "max-inflight", "max-wait-ms", "kv-blocks", "threads",
 ];
 
 fn main() -> anyhow::Result<()> {
@@ -99,8 +99,9 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         (requests * n) as f64 / dt
     );
     println!(
-        "p50 prefill {:.0}us  p95 {:.0}us  mean queue {:.0}us  mean index {:.0}us  mean density {:.3}",
-        snap.p50_prefill_us, snap.p95_prefill_us, snap.mean_queue_us, snap.mean_index_us, snap.mean_density
+        "p50 prefill {:.0}us  p95 {:.0}us  p50 ttft {:.0}us  mean queue {:.0}us  mean index {:.0}us  mean density {:.3}  chunks {}",
+        snap.p50_prefill_us, snap.p95_prefill_us, snap.p50_ttft_us, snap.mean_queue_us,
+        snap.mean_index_us, snap.mean_density, snap.chunks_executed
     );
     Ok(())
 }

@@ -10,6 +10,7 @@
 use crate::sparse::merge::block_columns;
 use crate::sparse::VsIndices;
 use crate::tensor::ops::dot;
+use crate::tensor::paged::PagedKv;
 use crate::tensor::Mat;
 use crate::util::parallel::par_chunks_mut;
 
@@ -116,6 +117,111 @@ pub fn sparse_attention_vs(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices, bq: usize
             let arow = &mut out_chunk[r * d..(r + 1) * d];
             if m[r] == NEG_INF {
                 arow.copy_from_slice(v.row(q0 + r));
+            } else {
+                let inv = 1.0 / s[r];
+                arow.iter_mut().for_each(|x| *x *= inv);
+            }
+        }
+    });
+    out
+}
+
+/// `sparse_attention_vs` with K/V read through a paged-KV block table — the
+/// chunked-prefill sparse executor.  `q` holds one chunk's queries at
+/// absolute positions `q_start .. q_start + q.rows`; `idx` selects over the
+/// `kv.len` key positions resident in the store; the per-block Merge-Path
+/// union, tile gathers and streaming softmax are identical to the
+/// contiguous executor, with the gather indirected through the block table.
+/// With the same `idx` and aligned query blocks the outputs match the
+/// contiguous executor bit-for-bit; across arbitrary chunk schedules the
+/// per-row column order is unchanged, so outputs agree to float round-off.
+pub fn sparse_attention_vs_paged(
+    q: &Mat,
+    q_start: usize,
+    kv: &PagedKv<'_>,
+    idx: &VsIndices,
+    bq: usize,
+) -> Mat {
+    let (m, d) = (q.rows, q.cols);
+    assert_eq!(kv.head_dim(), d, "paged kv head_dim mismatch");
+    assert!(q_start + m <= kv.len, "queries not yet resident in the paged store");
+    let mut out = Mat::zeros(m, d);
+    if m == 0 {
+        return out;
+    }
+    let n = kv.len;
+    let bq = bq.clamp(1, m);
+    let scale = 1.0 / (d as f32).sqrt();
+    let vbit = idx.vertical_bitset(n);
+    let mut sbit = vec![false; n];
+    for &o in &idx.slash {
+        if o < n {
+            sbit[o] = true;
+        }
+    }
+
+    par_chunks_mut(&mut out.data, bq * d, |blk, out_chunk| {
+        let r0 = blk * bq; // chunk-relative
+        let rows = out_chunk.len() / d;
+        let a0 = q_start + r0; // absolute
+        let cols = block_columns(&idx.vertical, &idx.slash, a0, rows, n);
+        let mut mrow = vec![NEG_INF; rows];
+        let mut s = vec![0.0f32; rows];
+        let mut kt = vec![0.0f32; COL_TILE * d];
+        let mut vt = vec![0.0f32; COL_TILE * d];
+        let mut scores = vec![0.0f32; COL_TILE];
+        for c0 in (0..cols.len()).step_by(COL_TILE) {
+            let tile = &cols[c0..(c0 + COL_TILE).min(cols.len())];
+            // Gather through the block table instead of contiguous rows.
+            for (t, &j) in tile.iter().enumerate() {
+                kt[t * d..(t + 1) * d].copy_from_slice(kv.k_row(j));
+                vt[t * d..(t + 1) * d].copy_from_slice(kv.v_row(j));
+            }
+            for r in 0..rows {
+                let i = a0 + r;
+                if tile[0] > i {
+                    continue;
+                }
+                let lim = tile.partition_point(|&j| j <= i);
+                let qrow = q.row(r0 + r);
+                let mut tile_max = NEG_INF;
+                for (t, &j) in tile[..lim].iter().enumerate() {
+                    if vbit[j] || sbit[i - j] {
+                        let x = dot(qrow, &kt[t * d..(t + 1) * d]) * scale;
+                        scores[t] = x;
+                        tile_max = tile_max.max(x);
+                    } else {
+                        scores[t] = NEG_INF;
+                    }
+                }
+                if tile_max == NEG_INF {
+                    continue;
+                }
+                let m_new = mrow[r].max(tile_max);
+                let alpha = (mrow[r] - m_new).exp();
+                let arow = &mut out_chunk[r * d..(r + 1) * d];
+                if alpha != 1.0 {
+                    s[r] *= alpha;
+                    arow.iter_mut().for_each(|x| *x *= alpha);
+                }
+                for (t, &x) in scores[..lim].iter().enumerate() {
+                    if x == NEG_INF {
+                        continue;
+                    }
+                    let e = (x - m_new).exp();
+                    s[r] += e;
+                    let vrow = &vt[t * d..(t + 1) * d];
+                    for c in 0..d {
+                        arow[c] += e * vrow[c];
+                    }
+                }
+                mrow[r] = m_new;
+            }
+        }
+        for r in 0..rows {
+            let arow = &mut out_chunk[r * d..(r + 1) * d];
+            if mrow[r] == NEG_INF {
+                arow.copy_from_slice(kv.v_row(a0 + r));
             } else {
                 let inv = 1.0 / s[r];
                 arow.iter_mut().for_each(|x| *x *= inv);
@@ -378,6 +484,34 @@ mod tests {
         let want = masked_attention_ref(&q, &k, &v, |i, j| idx.keeps(i, j));
         let got = sparse_attention_vs(&q, &k, &v, &idx, 64);
         assert!(got.max_abs_diff(&want) < 2e-5);
+    }
+
+    #[test]
+    fn paged_vs_executor_matches_contiguous() {
+        use crate::tensor::paged::PagedKvStore;
+        let n = 96;
+        let mut rng = Rng::new(5);
+        let (q, k, v) = (randn(&mut rng, n, 16), randn(&mut rng, n, 16), randn(&mut rng, n, 16));
+        let idx = VsIndices::new(vec![0, 3, 17, 40, 77], vec![0, 1, 9]);
+        let want = sparse_attention_vs(&q, &k, &v, &idx, 32);
+        let store = PagedKvStore::new(24, 8, 16);
+        assert!(store.reserve(1, n));
+        // Aligned chunk schedule (multiples of bq): bit-for-bit expected,
+        // checked at a tight tolerance.
+        let mut got = Mat::zeros(n, 16);
+        let mut lo = 0;
+        for chunk in [32usize, 64] {
+            let hi = lo + chunk;
+            store.append(1, &k.sub_rows(lo, hi), &v.sub_rows(lo, hi)).unwrap();
+            let qc = q.sub_rows(lo, hi);
+            let view = store.view(1).unwrap();
+            let oc = sparse_attention_vs_paged(&qc, lo, &view, &idx, 32);
+            for r in 0..chunk {
+                got.row_mut(lo + r).copy_from_slice(oc.row(r));
+            }
+            lo = hi;
+        }
+        assert!(got.max_abs_diff(&want) < 1e-6, "aligned chunked paged vs contiguous");
     }
 
     #[test]

@@ -11,5 +11,8 @@ pub mod exec;
 pub mod vsprefill;
 
 pub use cost::{CostModel, MethodCost};
-pub use exec::{sparse_attention_blocks, sparse_attention_vs, sparse_attention_vs_rowserial};
+pub use exec::{
+    sparse_attention_blocks, sparse_attention_vs, sparse_attention_vs_paged,
+    sparse_attention_vs_rowserial,
+};
 pub use vsprefill::VsPrefill;

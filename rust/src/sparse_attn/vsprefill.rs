@@ -192,7 +192,7 @@ mod tests {
             assert!(idx.slash.len() <= 4 + 1); // +1 for forced offset 0
             assert!(idx.slash.contains(&0));
         } else {
-            panic!()
+            unreachable!("VsPrefill::predict always returns MaskSpec::Vs")
         }
     }
 

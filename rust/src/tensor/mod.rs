@@ -6,6 +6,7 @@
 //! executor used for calibration.
 
 pub mod ops;
+pub mod paged;
 pub mod rope;
 
 /// Dense row-major matrix of f32.
@@ -56,6 +57,17 @@ impl Mat {
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of rows [lo, hi) as a new matrix (the chunked-prefill row
+    /// slicer: chunk inputs are `sub_rows` of the request's Q/K/V).
+    pub fn sub_rows(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows, "sub_rows [{lo}, {hi}) out of 0..{}", self.rows);
+        Mat {
+            rows: hi - lo,
+            cols: self.cols,
+            data: self.data[lo * self.cols..hi * self.cols].to_vec(),
+        }
     }
 
     /// Concatenate columns: [self | other].

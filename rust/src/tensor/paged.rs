@@ -1,0 +1,454 @@
+//! Paged KV store (vLLM-style) holding real K/V bytes.
+//!
+//! Lives in the tensor layer (not the coordinator) because the attention
+//! kernels read through it: `flash_attention_paged` and
+//! `sparse_attention_vs_paged` must not depend upward on the serving stack.
+//! The coordinator re-exports it as `coordinator::kv_cache`.
+//!
+//! The seed's `KvCache` was accounting-only: it bounded concurrency but no
+//! tensor data ever lived in the blocks.  This store is the real thing: two
+//! f32 arenas (one for K, one for V) are divided into fixed-size blocks of
+//! `block_size` rows x `head_dim` floats, sequences own blocks through a
+//! per-request block table, and the chunked prefill pipeline appends K/V
+//! rows as chunks arrive and reads them back through `PagedKv` views inside
+//! the paged attention executors.
+//!
+//! Concurrency model.  All *metadata* (free list, block tables, lengths) is
+//! behind one mutex.  The *row data* is read and written through raw
+//! pointers into shared arenas, which the store keeps race-free by
+//! construction — callers need no discipline beyond the safe API:
+//!
+//!   * a block belongs to exactly one sequence from `reserve` until its
+//!     blocks are released; the free list never hands out a held block, so
+//!     data accesses of different sequences are disjoint in the arena;
+//!   * `append` copies rows while holding the metadata mutex (concurrent
+//!     appends to one sequence serialize, each writing rows at and above
+//!     the length it observed) and `view` snapshots the table/length under
+//!     the same mutex, giving readers a happens-before edge on every row
+//!     below the snapshotted length; writers never touch rows below a
+//!     published length;
+//!   * `free` defers while views are live: each `PagedKv` holds a refcount
+//!     on its sequence, and a freed sequence's blocks return to the pool
+//!     only when the last view drops — a stale view can therefore never
+//!     observe a recycled block.
+
+use std::cell::UnsafeCell;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use super::Mat;
+
+/// A contiguous f32 arena that tolerates concurrent access to *disjoint*
+/// regions.  `UnsafeCell<f32>` is `repr(transparent)`, so the boxed slice is
+/// plain float storage; disjointness is the caller's (the store's)
+/// invariant, documented above.
+struct Arena {
+    data: Box<[UnsafeCell<f32>]>,
+}
+
+// SAFETY: see the module-level concurrency model — regions accessed from
+// different threads never overlap, and the metadata mutex orders same-region
+// writes before reads.
+unsafe impl Sync for Arena {}
+unsafe impl Send for Arena {}
+
+impl Arena {
+    fn new(len: usize) -> Arena {
+        let v: Vec<UnsafeCell<f32>> = (0..len).map(|_| UnsafeCell::new(0.0)).collect();
+        Arena { data: v.into_boxed_slice() }
+    }
+
+    /// SAFETY: caller guarantees no concurrent write overlaps [off, off+len).
+    #[inline]
+    unsafe fn read(&self, off: usize, len: usize) -> &[f32] {
+        debug_assert!(off + len <= self.data.len());
+        std::slice::from_raw_parts(self.data[off].get(), len)
+    }
+
+    /// SAFETY: caller guarantees exclusive access to [off, off+src.len()).
+    #[inline]
+    unsafe fn write(&self, off: usize, src: &[f32]) {
+        debug_assert!(off + src.len() <= self.data.len());
+        let dst = std::slice::from_raw_parts_mut(self.data[off].get(), src.len());
+        dst.copy_from_slice(src);
+    }
+}
+
+struct Seq {
+    /// Physical block ids, one per `block_size` rows, in logical order.
+    table: Vec<usize>,
+    /// Rows appended so far.
+    len: usize,
+    /// Row capacity reserved at admission (`table.len() * block_size` >= this).
+    capacity: usize,
+    /// Live `PagedKv` views of this sequence.
+    views: usize,
+    /// `free` was called; blocks return to the pool when `views` hits 0.
+    dying: bool,
+}
+
+struct Meta {
+    free: Vec<usize>,
+    seqs: BTreeMap<u64, Seq>,
+    peak_used: usize,
+}
+
+pub struct PagedKvStore {
+    pub total_blocks: usize,
+    pub block_size: usize,
+    pub head_dim: usize,
+    meta: Mutex<Meta>,
+    k_data: Arena,
+    v_data: Arena,
+}
+
+impl PagedKvStore {
+    pub fn new(total_blocks: usize, block_size: usize, head_dim: usize) -> PagedKvStore {
+        assert!(block_size > 0 && head_dim > 0);
+        let floats = total_blocks * block_size * head_dim;
+        PagedKvStore {
+            total_blocks,
+            block_size,
+            head_dim,
+            meta: Mutex::new(Meta {
+                free: (0..total_blocks).rev().collect(),
+                seqs: BTreeMap::new(),
+                peak_used: 0,
+            }),
+            k_data: Arena::new(floats),
+            v_data: Arena::new(floats),
+        }
+    }
+
+    pub fn blocks_for(&self, seq_len: usize) -> usize {
+        seq_len.div_ceil(self.block_size)
+    }
+
+    pub fn used(&self) -> usize {
+        self.total_blocks - self.meta.lock().unwrap().free.len()
+    }
+
+    pub fn peak_used(&self) -> usize {
+        self.meta.lock().unwrap().peak_used
+    }
+
+    pub fn holds(&self, req_id: u64) -> bool {
+        self.meta.lock().unwrap().seqs.contains_key(&req_id)
+    }
+
+    /// Reserve blocks for a sequence of (final) length `seq_len` rows;
+    /// all-or-nothing.  Reserving everything at admission (rather than block
+    /// by block as chunks arrive) is what makes chunk interleaving
+    /// deadlock-free: an admitted request can always run to completion.
+    pub fn reserve(&self, req_id: u64, seq_len: usize) -> bool {
+        let need = self.blocks_for(seq_len);
+        let mut m = self.meta.lock().unwrap();
+        if m.free.len() < need || m.seqs.contains_key(&req_id) {
+            return false;
+        }
+        let table: Vec<usize> = (0..need).map(|_| m.free.pop().unwrap()).collect();
+        m.seqs.insert(req_id, Seq { table, len: 0, capacity: seq_len, views: 0, dying: false });
+        let used = self.total_blocks - m.free.len();
+        m.peak_used = m.peak_used.max(used);
+        true
+    }
+
+    /// Append `k_rows`/`v_rows` (same shape, `head_dim` columns) to the
+    /// sequence — the chunked-prefill write path.  Errors on unknown ids,
+    /// shape mismatches, and appends beyond the reservation.
+    pub fn append(&self, req_id: u64, k_rows: &Mat, v_rows: &Mat) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            k_rows.rows == v_rows.rows && k_rows.cols == self.head_dim && v_rows.cols == self.head_dim,
+            "kv append shape mismatch: k {}x{}, v {}x{}, head_dim {}",
+            k_rows.rows,
+            k_rows.cols,
+            v_rows.rows,
+            v_rows.cols,
+            self.head_dim
+        );
+        let mut m = self.meta.lock().unwrap();
+        let seq = m
+            .seqs
+            .get_mut(&req_id)
+            .ok_or_else(|| anyhow::anyhow!("kv append to unknown request {req_id}"))?;
+        anyhow::ensure!(!seq.dying, "kv append to freed request {req_id}");
+        anyhow::ensure!(
+            seq.len + k_rows.rows <= seq.capacity,
+            "kv append overflows reservation: {} + {} > {}",
+            seq.len,
+            k_rows.rows,
+            seq.capacity
+        );
+        for r in 0..k_rows.rows {
+            let row = seq.len + r;
+            let block = seq.table[row / self.block_size];
+            let off = (block * self.block_size + row % self.block_size) * self.head_dim;
+            // SAFETY: `block` is held by this sequence alone, and the meta
+            // mutex is held, so nothing else touches this region.
+            unsafe {
+                self.k_data.write(off, k_rows.row(r));
+                self.v_data.write(off, v_rows.row(r));
+            }
+        }
+        seq.len += k_rows.rows;
+        Ok(())
+    }
+
+    /// Snapshot a read view of the rows appended so far.  The view holds a
+    /// refcount on the sequence: its blocks cannot return to the pool (and
+    /// so cannot be recycled under the reader) until the view drops.
+    pub fn view(&self, req_id: u64) -> Option<PagedKv<'_>> {
+        let mut m = self.meta.lock().unwrap();
+        let seq = m.seqs.get_mut(&req_id)?;
+        if seq.dying {
+            return None;
+        }
+        seq.views += 1;
+        Some(PagedKv {
+            store: self,
+            id: req_id,
+            table: seq.table.clone(),
+            len: seq.len,
+        })
+    }
+
+    /// Release one view refcount (called from `PagedKv::drop`).
+    fn release_view(&self, req_id: u64) {
+        let mut m = self.meta.lock().unwrap();
+        let release = if let Some(seq) = m.seqs.get_mut(&req_id) {
+            seq.views -= 1;
+            seq.dying && seq.views == 0
+        } else {
+            false
+        };
+        if release {
+            let seq = m.seqs.remove(&req_id).unwrap();
+            m.free.extend(seq.table);
+        }
+    }
+
+    /// Copy rows [lo, hi) back out as contiguous matrices (tests and the
+    /// monolithic fallback; the hot path reads through `PagedKv` instead).
+    pub fn gather(&self, req_id: u64, lo: usize, hi: usize) -> Option<(Mat, Mat)> {
+        let view = self.view(req_id)?;
+        if lo > hi || hi > view.len {
+            return None;
+        }
+        let d = self.head_dim;
+        let mut k = Mat::zeros(hi - lo, d);
+        let mut v = Mat::zeros(hi - lo, d);
+        for i in lo..hi {
+            k.row_mut(i - lo).copy_from_slice(view.k_row(i));
+            v.row_mut(i - lo).copy_from_slice(view.v_row(i));
+        }
+        Some((k, v))
+    }
+
+    /// Release the sequence's blocks back to the pool.  No-op for unknown
+    /// ids.  If views of the sequence are still live, the release is
+    /// deferred until the last one drops (the sequence stops accepting
+    /// appends and new views immediately).
+    pub fn free(&self, req_id: u64) {
+        let mut m = self.meta.lock().unwrap();
+        let defer = match m.seqs.get_mut(&req_id) {
+            Some(seq) if seq.views > 0 => {
+                seq.dying = true;
+                true
+            }
+            Some(_) => false,
+            None => return,
+        };
+        if !defer {
+            let seq = m.seqs.remove(&req_id).unwrap();
+            m.free.extend(seq.table);
+        }
+    }
+}
+
+/// Read view of one sequence's K/V through its block table — what the paged
+/// attention executors consume.  Row lookups translate a logical row index
+/// to (block, offset) through the table; no contiguity is assumed.  While
+/// the view lives, the sequence's blocks are pinned (see
+/// [`PagedKvStore::view`]).
+pub struct PagedKv<'a> {
+    store: &'a PagedKvStore,
+    id: u64,
+    table: Vec<usize>,
+    /// Rows visible to this view (appended before the snapshot).
+    pub len: usize,
+}
+
+impl Drop for PagedKv<'_> {
+    fn drop(&mut self) {
+        self.store.release_view(self.id);
+    }
+}
+
+impl PagedKv<'_> {
+    pub fn head_dim(&self) -> usize {
+        self.store.head_dim
+    }
+
+    pub fn block_table(&self) -> &[usize] {
+        &self.table
+    }
+
+    #[inline]
+    fn offset(&self, i: usize) -> usize {
+        debug_assert!(i < self.len, "paged row {i} out of bounds ({} rows)", self.len);
+        let bs = self.store.block_size;
+        (self.table[i / bs] * bs + i % bs) * self.store.head_dim
+    }
+
+    #[inline]
+    pub fn k_row(&self, i: usize) -> &[f32] {
+        // SAFETY: rows below `len` were fully written before the view was
+        // snapshotted (meta mutex), no writer touches rows below a
+        // published length, and the view's refcount pins the blocks against
+        // recycling.
+        unsafe { self.store.k_data.read(self.offset(i), self.store.head_dim) }
+    }
+
+    #[inline]
+    pub fn v_row(&self, i: usize) -> &[f32] {
+        // SAFETY: as `k_row`.
+        unsafe { self.store.v_data.read(self.offset(i), self.store.head_dim) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn reserve_lifecycle_and_accounting() {
+        let kv = PagedKvStore::new(10, 64, 8);
+        assert_eq!(kv.blocks_for(100), 2);
+        assert_eq!(kv.blocks_for(64), 1);
+        assert!(kv.reserve(1, 4 * 64));
+        assert!(kv.holds(1));
+        assert_eq!(kv.used(), 4);
+        assert!(kv.reserve(2, 6 * 64));
+        assert!(!kv.reserve(3, 1), "pool exhausted");
+        kv.free(1);
+        assert!(kv.reserve(3, 3 * 64));
+        assert_eq!(kv.peak_used(), 10);
+    }
+
+    #[test]
+    fn all_or_nothing_and_double_reserve() {
+        let kv = PagedKvStore::new(4, 64, 8);
+        assert!(!kv.reserve(1, 5 * 64));
+        assert_eq!(kv.used(), 0);
+        assert!(kv.reserve(1, 2 * 64));
+        assert!(!kv.reserve(1, 64), "double reserve same id rejected");
+        kv.free(1);
+        kv.free(1); // double free is a no-op
+        assert_eq!(kv.used(), 0);
+    }
+
+    #[test]
+    fn append_then_gather_roundtrip() {
+        let mut rng = Rng::new(3);
+        let kv = PagedKvStore::new(8, 16, 8);
+        let (k, v) = (randm(&mut rng, 50, 8), randm(&mut rng, 50, 8));
+        assert!(kv.reserve(7, 50));
+        // Append in uneven chunks that straddle block boundaries.
+        let mut lo = 0;
+        for chunk in [13usize, 16, 1, 20] {
+            let hi = lo + chunk;
+            kv.append(7, &k.sub_rows(lo, hi), &v.sub_rows(lo, hi)).unwrap();
+            lo = hi;
+        }
+        let (gk, gv) = kv.gather(7, 0, 50).unwrap();
+        assert_eq!(gk, k);
+        assert_eq!(gv, v);
+        let view = kv.view(7).unwrap();
+        assert_eq!(view.len, 50);
+        for i in 0..50 {
+            assert_eq!(view.k_row(i), k.row(i));
+            assert_eq!(view.v_row(i), v.row(i));
+        }
+    }
+
+    #[test]
+    fn fragmented_tables_read_correctly() {
+        // Free a middle sequence so the free list is out of order, then
+        // reserve across the fragmentation: the new table is non-contiguous
+        // but reads must still be exact.
+        let mut rng = Rng::new(4);
+        let kv = PagedKvStore::new(6, 4, 8);
+        assert!(kv.reserve(1, 8)); // blocks 0..2
+        assert!(kv.reserve(2, 8)); // blocks 2..4
+        assert!(kv.reserve(3, 8)); // blocks 4..6
+        kv.free(2);
+        kv.free(1);
+        assert!(kv.reserve(9, 16)); // 4 blocks from the shuffled free list
+        let (k, v) = (randm(&mut rng, 16, 8), randm(&mut rng, 16, 8));
+        kv.append(9, &k, &v).unwrap();
+        let (gk, gv) = kv.gather(9, 0, 16).unwrap();
+        assert_eq!(gk, k);
+        assert_eq!(gv, v);
+        // And the untouched survivor still owns its blocks.
+        assert!(kv.holds(3));
+        assert!(!kv.reserve(10, 9), "only fragmented leftovers remain");
+    }
+
+    #[test]
+    fn append_beyond_reservation_errors() {
+        let mut rng = Rng::new(5);
+        let kv = PagedKvStore::new(2, 4, 8);
+        assert!(kv.reserve(1, 6));
+        let (k, v) = (randm(&mut rng, 7, 8), randm(&mut rng, 7, 8));
+        assert!(kv.append(1, &k, &v).is_err());
+        assert!(kv.append(99, &k, &v).is_err(), "unknown id");
+        let (k6, v6) = (randm(&mut rng, 6, 8), randm(&mut rng, 6, 8));
+        kv.append(1, &k6, &v6).unwrap();
+        let (k1, v1) = (randm(&mut rng, 1, 8), randm(&mut rng, 1, 8));
+        assert!(kv.append(1, &k1, &v1).is_err(), "reservation exactly full");
+    }
+
+    #[test]
+    fn live_view_pins_blocks_against_recycling() {
+        let mut rng = Rng::new(8);
+        let kv = PagedKvStore::new(2, 8, 8);
+        assert!(kv.reserve(1, 16));
+        let (k, v) = (randm(&mut rng, 16, 8), randm(&mut rng, 16, 8));
+        kv.append(1, &k, &v).unwrap();
+        let view = kv.view(1).unwrap();
+        kv.free(1); // deferred: the view is live
+        assert_eq!(kv.used(), 2, "blocks stay pinned under the live view");
+        assert!(!kv.reserve(2, 16), "no capacity until the view drops");
+        assert!(kv.view(1).is_none(), "freed sequence takes no new views");
+        assert!(kv.append(1, &k, &v).is_err(), "freed sequence takes no appends");
+        for i in 0..16 {
+            assert_eq!(view.k_row(i), k.row(i), "stale view still reads its own rows");
+        }
+        drop(view);
+        assert_eq!(kv.used(), 0);
+        assert!(kv.reserve(2, 16));
+        kv.free(2);
+        kv.free(2); // double free stays a no-op
+        assert_eq!(kv.used(), 0);
+    }
+
+    #[test]
+    fn view_snapshots_length() {
+        let mut rng = Rng::new(6);
+        let kv = PagedKvStore::new(4, 8, 8);
+        assert!(kv.reserve(1, 20));
+        let (k, v) = (randm(&mut rng, 10, 8), randm(&mut rng, 10, 8));
+        kv.append(1, &k, &v).unwrap();
+        let view = kv.view(1).unwrap();
+        assert_eq!(view.len, 10);
+        let (k2, v2) = (randm(&mut rng, 5, 8), randm(&mut rng, 5, 8));
+        kv.append(1, &k2, &v2).unwrap();
+        assert_eq!(view.len, 10, "old view is a stable snapshot");
+        assert_eq!(kv.view(1).unwrap().len, 15);
+    }
+}

@@ -77,6 +77,59 @@ fn pjrt_backend_serves_when_artifacts_present() {
 }
 
 #[test]
+fn short_request_overtakes_long_prefill() {
+    // The acceptance property of chunk-granular scheduling: a short request
+    // submitted AFTER a long one completes BEFORE the long one finishes,
+    // because the scheduler interleaves chunks instead of running the long
+    // prefill to completion first.
+    let cfg = CoordinatorConfig {
+        max_wait_ms: 1,
+        chunk_tokens: 64, // 1024-row request => 16 chunks; 128-row => 2
+        ..Default::default()
+    };
+    let engine = PrefillEngine::native_quick(cfg.engine.clone());
+    let c = Coordinator::start(cfg, engine);
+    let long_rx = c
+        .submit(PrefillRequest::synthetic(1, 1024, 7, AttentionMode::Sparse))
+        .unwrap();
+    let short_rx = c
+        .submit(PrefillRequest::synthetic(2, 128, 7, AttentionMode::Sparse))
+        .unwrap();
+    // Block until the short one is done; the long one must still be
+    // mid-sequence (it needs 16 rounds, the short one at most a few).
+    let short = short_rx.recv().unwrap();
+    assert!(short.ok, "{:?}", short.error);
+    assert_eq!(
+        long_rx.try_recv().err(),
+        Some(std::sync::mpsc::TryRecvError::Empty),
+        "long prefill should still be in flight when the short one completes"
+    );
+    let long = long_rx.recv().unwrap();
+    assert!(long.ok, "{:?}", long.error);
+    assert_eq!(long.chunks, 16);
+    assert_eq!(short.chunks, 2);
+    // TTFT of the long request arrives with its first chunk — far earlier
+    // than its full prefill.
+    assert!(long.ttft_us < long.queue_us + long.prefill_us);
+    let snap = c.shutdown();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.chunks_executed, 18);
+}
+
+#[test]
+fn chunked_response_reports_progress_over_tcp() {
+    let coordinator = native_coordinator();
+    let server = Server::start(coordinator.clone(), 0).unwrap();
+    let mut client = Client::connect(server.addr).unwrap();
+    let resp = client.prefill_synthetic(11, 512, 3, "sparse", 0.5).unwrap();
+    assert!(resp.ok, "{:?}", resp.error);
+    assert_eq!(resp.chunks, 2, "512 rows at the default 256-row chunk");
+    assert_eq!(resp.chunk_us.len(), 2);
+    assert!(resp.ttft_us > 0);
+    server.shutdown();
+}
+
+#[test]
 fn property_every_submitted_request_is_answered_once() {
     // Property: for any burst size and sequence-length mix within capacity,
     // every accepted request gets exactly one response with its own id.
