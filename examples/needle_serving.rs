@@ -65,13 +65,38 @@ fn main() -> anyhow::Result<()> {
     for h in handles {
         lats.extend(h.join().unwrap()?);
     }
-    let snap = coordinator.metrics.snapshot();
     let s = vsprefill::util::stats::summarize(&lats);
     println!("\n24 requests served:");
     println!("  client-side latency p50 {:.1}ms p95 {:.1}ms", s.p50, s.p95);
+    {
+        let snap = coordinator.metrics.snapshot();
+        println!(
+            "  engine prefill p50 {:.0}us p95 {:.0}us | mean queue {:.0}us | mean density {:.3}",
+            snap.p50_prefill_us, snap.p95_prefill_us, snap.mean_queue_us, snap.mean_density
+        );
+    }
+
+    // Token generation over the same wire: request decode tokens and print
+    // the streamed frames as they arrive ahead of the final response.
+    println!("\ntoken generation (n = 256, 8 new tokens, sparse decode):");
+    let mut gen_client = Client::connect(addr)?;
+    let (frames, resp) = gen_client.generate(500, 256, 9, "sparse", 0.5, 8)?;
+    anyhow::ensure!(resp.ok, "{:?}", resp.error);
+    for f in &frames {
+        println!("  frame {}: pos {}  token {}  itl {}us", f.index, f.pos, f.token, f.itl_us);
+    }
+    let tpot =
+        resp.decode_us.iter().sum::<u64>() as f64 / resp.decode_us.len().max(1) as f64;
     println!(
-        "  engine prefill p50 {:.0}us p95 {:.0}us | mean queue {:.0}us | mean density {:.3}",
-        snap.p50_prefill_us, snap.p95_prefill_us, snap.mean_queue_us, snap.mean_density
+        "  final: {} tokens | ttft {:.1}ms | mean tpot {:.0}us",
+        resp.tokens.len(),
+        resp.ttft_us as f64 / 1e3,
+        tpot
+    );
+    let snap = coordinator.metrics.snapshot();
+    println!(
+        "  service itl p50 {:.0}us p95 {:.0}us | {} tokens generated",
+        snap.p50_itl_us, snap.p95_itl_us, snap.tokens_generated
     );
 
     // Needle-retrieval quality at three budgets (offline check through the

@@ -167,6 +167,8 @@ fn main() {
 
     chunked_sweep();
 
+    decode_sweep();
+
     #[cfg(feature = "pjrt")]
     pjrt_rows();
     #[cfg(not(feature = "pjrt"))]
@@ -267,7 +269,7 @@ fn chunked_sweep() {
             .collect();
         let mut shorts: Vec<f64> = Vec::new();
         for rx in short_rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.wait().unwrap();
             assert!(r.ok, "{:?}", r.error);
             // Shorts are single-chunk, so ttft_us is their full wall-clock
             // latency from submission — including time spent blocked behind
@@ -275,7 +277,7 @@ fn chunked_sweep() {
             assert_eq!(r.chunks, 1);
             shorts.push(r.ttft_us as f64 / 1e3);
         }
-        let long = long_rx.recv().unwrap();
+        let long = long_rx.wait().unwrap();
         assert!(long.ok, "{:?}", long.error);
         let long_ms = t0.elapsed().as_secs_f64() * 1e3;
         let mean = shorts.iter().sum::<f64>() / shorts.len() as f64;
@@ -295,6 +297,82 @@ fn chunked_sweep() {
     match std::fs::write("BENCH_chunked.json", &json) {
         Ok(()) => println!("\nwrote BENCH_chunked.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_chunked.json: {e}"),
+    }
+}
+
+/// Decode-throughput sweep: batch size x context length for the batched
+/// single-query decode kernel over paged block tables, dense
+/// (`flash_decode_paged`) vs sparse (budgeted `sparse_decode_vs_into` with
+/// the default top-64 + 64-window decode budget), both fanned across the
+/// worker pool.  Tokens/s is the decode headline number: one output row
+/// per sequence per step.  Writes BENCH_decode.json.
+fn decode_sweep() {
+    use vsprefill::attention::decode::flash_decode_paged;
+    use vsprefill::sparse_attn::exec::{decode_columns, sparse_decode_vs_into};
+    use vsprefill::tensor::paged::PagedKvStore;
+    use vsprefill::tensor::Mat;
+    use vsprefill::util::parallel::par_chunks_mut;
+
+    let d = SynthConfig::default().head_dim;
+    let (top_k, window) = (64usize, 64usize);
+    println!("\ndecode throughput (batched single-query over paged block tables)");
+    println!("n        batch    dense_ms  dense_tok/s   sparse_ms  sparse_tok/s  cols");
+    let mut json = String::from("{\n  \"bench\": \"decode\",\n  \"sweep\": [\n");
+    let mut first = true;
+    for &n in &[1024usize, 4096] {
+        let mut rng = Rng::new(7);
+        let head = gen_head(&mut rng, n, &SynthConfig::default(), 0);
+        // Vertical scores for the sparse budget (static here: the bench
+        // measures kernel throughput, not index maintenance).
+        let (ix, _) = distill(&TrainConfig { steps: 60, ..Default::default() });
+        let (a_v, _) = ix.predict_kv(&head.k, &head.v);
+        let cols = decode_columns(&a_v, n, top_k, window);
+        for &batch in &[1usize, 2, 4, 8] {
+            let store = PagedKvStore::new(batch * n.div_ceil(64), 64, d);
+            for b in 0..batch {
+                assert!(store.reserve(b as u64, n));
+                store.append(b as u64, &head.k, &head.v).unwrap();
+            }
+            let views: Vec<_> = (0..batch).map(|b| store.view(b as u64).unwrap()).collect();
+            let mut qs = Mat::zeros(batch, d);
+            for b in 0..batch {
+                qs.row_mut(b).copy_from_slice(head.q.row(n - 1));
+            }
+            let reps = if n >= 4096 { 20 } else { 50 };
+            let dense_ms = time_ms(reps, &mut || {
+                std::hint::black_box(flash_decode_paged(&qs, &views, 64));
+            });
+            // Same execution shape as the dense side (batch fanned across
+            // the pool) so the two columns are comparable.
+            let sparse_ms = time_ms(reps, &mut || {
+                let mut out = Mat::zeros(batch, d);
+                par_chunks_mut(&mut out.data, d, |i, chunk| {
+                    sparse_decode_vs_into(qs.row(i), &views[i], &cols, chunk);
+                });
+                std::hint::black_box(out);
+            });
+            let dense_tps = batch as f64 / (dense_ms * 1e-3);
+            let sparse_tps = batch as f64 / (sparse_ms * 1e-3);
+            println!(
+                "{n:<8} {batch:<8} {dense_ms:>9.3} {dense_tps:>12.0} {sparse_ms:>11.3} {sparse_tps:>13.0} {:>5}",
+                cols.len()
+            );
+            if !first {
+                json.push_str(",\n");
+            }
+            first = false;
+            json.push_str(&format!(
+                "    {{\"n\": {n}, \"batch\": {batch}, \"dense_ms\": {dense_ms:.4}, \
+                 \"dense_tok_per_s\": {dense_tps:.1}, \"sparse_ms\": {sparse_ms:.4}, \
+                 \"sparse_tok_per_s\": {sparse_tps:.1}, \"sparse_cols\": {}}}",
+                cols.len()
+            ));
+        }
+    }
+    json.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_decode.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_decode.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_decode.json: {e}"),
     }
 }
 

@@ -1,0 +1,171 @@
+//! Single-query decode attention over the paged KV store.
+//!
+//! Decode is the other half of serving: after prefill, each request
+//! generates one token at a time, and the attention of that one new query
+//! runs over *all* K/V rows resident in the request's block table.  The
+//! kernel is the single-row specialization of `flash_attention_paged`
+//! (identical streaming-softmax recurrence and key-tile walk, so one decode
+//! step reproduces the last query row of monolithic `flash_attention` on
+//! the same K/V), batched across requests: every sequence in the batch
+//! contributes one query and one block table, and the batch fans out across
+//! the worker pool.
+
+use crate::tensor::ops::dot;
+use crate::tensor::paged::PagedKv;
+use crate::tensor::Mat;
+use crate::util::parallel::par_chunks_mut;
+
+use super::dense::NEG_INF;
+
+/// One decode step for one sequence: attention of the single query `q`
+/// (the newest position) over the `kv.len` rows resident in the paged
+/// store, streamed over key tiles of `block_k` with the flash-style
+/// (max, sumexp, acc) recurrence.  Writes the attended value row into
+/// `out`.  The query's position is `kv.len - 1`, so every resident row is
+/// causal — no masking is needed.
+pub fn flash_decode_into(q: &[f32], kv: &PagedKv<'_>, block_k: usize, out: &mut [f32]) {
+    let d = kv.head_dim();
+    assert_eq!(q.len(), d, "decode query dim mismatch");
+    assert_eq!(out.len(), d, "decode output dim mismatch");
+    out.fill(0.0);
+    let n = kv.len;
+    if n == 0 {
+        return;
+    }
+    let block_k = block_k.max(1);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = vec![0.0f32; block_k];
+    let mut m = NEG_INF;
+    let mut s = 0.0f32;
+    for k0 in (0..n).step_by(block_k) {
+        let bk = block_k.min(n - k0);
+        let mut tile_max = NEG_INF;
+        for (j, sc) in scores[..bk].iter_mut().enumerate() {
+            let x = dot(q, kv.k_row(k0 + j)) * scale;
+            *sc = x;
+            tile_max = tile_max.max(x);
+        }
+        let m_new = m.max(tile_max);
+        let alpha = (m - m_new).exp();
+        if alpha != 1.0 {
+            s *= alpha;
+            out.iter_mut().for_each(|x| *x *= alpha);
+        }
+        for (j, &x) in scores[..bk].iter().enumerate() {
+            let e = (x - m_new).exp();
+            s += e;
+            let vrow = kv.v_row(k0 + j);
+            for c in 0..d {
+                out[c] += e * vrow[c];
+            }
+        }
+        m = m_new;
+    }
+    let inv = 1.0 / s;
+    out.iter_mut().for_each(|x| *x *= inv);
+}
+
+/// Batched single-query decode over block tables: row `i` of `qs` is the
+/// newest query of sequence `i`, attending the `kvs[i].len` rows resident
+/// in that sequence's block table.  Sequences are independent, so the
+/// batch fans out across the worker pool — this is the decode analog of
+/// the per-chunk fan-out on the prefill side, and the kernel the
+/// continuous-batching scheduler's decode round is built on.
+pub fn flash_decode_paged(qs: &Mat, kvs: &[PagedKv<'_>], block_k: usize) -> Mat {
+    assert_eq!(qs.rows, kvs.len(), "one query row per sequence");
+    let d = qs.cols;
+    let mut out = Mat::zeros(qs.rows, d);
+    if qs.rows == 0 {
+        return out;
+    }
+    par_chunks_mut(&mut out.data, d, |i, chunk| {
+        flash_decode_into(qs.row(i), &kvs[i], block_k, chunk);
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::flash::flash_attention;
+    use crate::tensor::paged::PagedKvStore;
+    use crate::util::parallel::with_threads;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, r: usize, c: usize) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.normal_f32())
+    }
+
+    #[test]
+    fn decode_matches_last_row_of_flash() {
+        let n = 96;
+        let mut rng = Rng::new(0);
+        let (q, k, v) = (
+            randn(&mut rng, n, 16),
+            randn(&mut rng, n, 16),
+            randn(&mut rng, n, 16),
+        );
+        let want = flash_attention(&q, &k, &v, 32, 16);
+        let store = PagedKvStore::new(16, 8, 16);
+        assert!(store.reserve(1, n));
+        store.append(1, &k, &v).unwrap();
+        let view = store.view(1).unwrap();
+        for block_k in [1usize, 7, 16, 96, 200] {
+            let mut out = vec![0.0f32; 16];
+            flash_decode_into(q.row(n - 1), &view, block_k, &mut out);
+            for c in 0..16 {
+                assert!(
+                    (out[c] - want.at(n - 1, c)).abs() < 1e-5,
+                    "block_k={block_k} col {c}: {} vs {}",
+                    out[c],
+                    want.at(n - 1, c)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_decode_matches_per_sequence() {
+        // 3 sequences of different lengths; the batched kernel must equal
+        // the single-sequence kernel per row, under both thread counts.
+        let mut rng = Rng::new(3);
+        let d = 8;
+        let store = PagedKvStore::new(32, 4, d);
+        let lens = [13usize, 40, 27];
+        let mut qs = Mat::zeros(lens.len(), d);
+        for (i, &n) in lens.iter().enumerate() {
+            let (k, v) = (randn(&mut rng, n, d), randn(&mut rng, n, d));
+            assert!(store.reserve(i as u64, n));
+            store.append(i as u64, &k, &v).unwrap();
+            qs.row_mut(i).copy_from_slice(randn(&mut rng, 1, d).row(0));
+        }
+        let views: Vec<_> = (0..lens.len()).map(|i| store.view(i as u64).unwrap()).collect();
+        for threads in [1, 4] {
+            let got = with_threads(threads, || flash_decode_paged(&qs, &views, 16));
+            for i in 0..lens.len() {
+                let mut want = vec![0.0f32; d];
+                flash_decode_into(qs.row(i), &views[i], 16, &mut want);
+                for c in 0..d {
+                    assert!((got.at(i, c) - want[c]).abs() < 1e-6, "seq {i} threads {threads}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_resident_row_returns_its_value() {
+        let mut rng = Rng::new(5);
+        let d = 8;
+        let store = PagedKvStore::new(2, 4, d);
+        assert!(store.reserve(1, 1));
+        let (k, v) = (randn(&mut rng, 1, d), randn(&mut rng, 1, d));
+        store.append(1, &k, &v).unwrap();
+        let view = store.view(1).unwrap();
+        let q = randn(&mut rng, 1, d);
+        let mut out = vec![0.0f32; d];
+        flash_decode_into(q.row(0), &view, 8, &mut out);
+        for c in 0..d {
+            assert!((out[c] - v.at(0, c)).abs() < 1e-6, "softmax over one key is its value");
+        }
+    }
+}

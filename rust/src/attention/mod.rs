@@ -1,16 +1,18 @@
 //! Attention math on the host: the exact reference, a tiled
-//! streaming-softmax executor (CPU analog of FlashAttention), the
-//! vertical/slash aggregation of §4.2 and the Attention Recall metric
-//! (Eq. 6).  These mirror `python/compile/kernels/` one-to-one; the
-//! cross-language agreement is checked by `rust/tests/parity.rs` through the
-//! PJRT-loaded artifacts.
+//! streaming-softmax executor (CPU analog of FlashAttention), the batched
+//! single-query decode kernel, the vertical/slash aggregation of §4.2 and
+//! the Attention Recall metric (Eq. 6).  These mirror
+//! `python/compile/kernels/` one-to-one; the cross-language agreement is
+//! checked by `rust/tests/parity.rs` through the PJRT-loaded artifacts.
 
 pub mod aggregate;
+pub mod decode;
 pub mod dense;
 pub mod flash;
 pub mod recall;
 
 pub use aggregate::{vs_aggregate, vs_aggregate_tiled};
+pub use decode::{flash_decode_into, flash_decode_paged};
 pub use dense::{attention_probs, dense_attention, scaled_causal_scores};
 pub use flash::{flash_attention, flash_attention_paged};
 pub use recall::{recall_of_mask, recall_of_vs};

@@ -7,13 +7,14 @@ use std::collections::VecDeque;
 use std::fmt;
 use std::sync::{mpsc, Condvar, Mutex};
 
-use super::request::{PrefillRequest, PrefillResponse};
+use super::request::{PrefillRequest, ResponseEvent};
 
-/// A queued request plus its reply channel.
+/// A queued request plus its reply channel (a stream: token frames during
+/// decode, then exactly one final response).
 #[derive(Debug)]
 pub struct WorkItem {
     pub req: PrefillRequest,
-    pub reply: mpsc::Sender<PrefillResponse>,
+    pub reply: mpsc::Sender<ResponseEvent>,
 }
 
 /// Push rejection carrying the item back to the caller.
@@ -81,7 +82,7 @@ mod tests {
     use crate::coordinator::{AttentionMode, PrefillRequest};
 
     fn item(id: u64) -> WorkItem {
-        let (tx, _rx) = mpsc::channel();
+        let (tx, _rx) = mpsc::channel::<ResponseEvent>();
         std::mem::forget(_rx);
         WorkItem { req: PrefillRequest::synthetic(id, 64, 0, AttentionMode::Dense), reply: tx }
     }

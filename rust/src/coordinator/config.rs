@@ -4,9 +4,11 @@
 //! ```json
 //! {
 //!   "max_queue": 256, "chunk_tokens": 256, "max_inflight": 8,
-//!   "max_wait_ms": 5, "kv_blocks": 1024, "kv_block_size": 64,
+//!   "max_wait_ms": 5, "max_new_cap": 256,
+//!   "kv_blocks": 1024, "kv_block_size": 64,
 //!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
-//!               "threads": 0, "budget_tau": 0.9 }
+//!               "threads": 0, "budget_tau": 0.9,
+//!               "decode_top_k": 64, "decode_window": 64 }
 //! }
 //! ```
 
@@ -37,6 +39,9 @@ pub fn load(path: Option<&str>, args: &Args) -> anyhow::Result<CoordinatorConfig
     if let Some(v) = args.str_opt("max-wait-ms") {
         cfg.max_wait_ms = v.parse()?;
     }
+    if let Some(v) = args.str_opt("max-new-cap") {
+        cfg.max_new_cap = v.parse()?;
+    }
     if let Some(v) = args.str_opt("kv-blocks") {
         cfg.kv_blocks = v.parse()?;
     }
@@ -61,6 +66,9 @@ fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
     if let Some(v) = get_usize("max_wait_ms") {
         cfg.max_wait_ms = v as u64;
     }
+    if let Some(v) = get_usize("max_new_cap") {
+        cfg.max_new_cap = v;
+    }
     if let Some(v) = get_usize("kv_blocks") {
         cfg.kv_blocks = v;
     }
@@ -77,6 +85,12 @@ fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
         if let Some(v) = e.get("threads").and_then(|x| x.as_usize()) {
             cfg.engine.threads = v;
         }
+        if let Some(v) = e.get("decode_top_k").and_then(|x| x.as_usize()) {
+            cfg.engine.decode_top_k = v;
+        }
+        if let Some(v) = e.get("decode_window").and_then(|x| x.as_usize()) {
+            cfg.engine.decode_window = v;
+        }
     }
     Ok(())
 }
@@ -91,8 +105,14 @@ fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
         "buckets must be strictly increasing"
     );
     anyhow::ensure!(cfg.kv_block_size > 0, "kv_block_size must be positive");
+    anyhow::ensure!(
+        cfg.engine.decode_window >= 1,
+        "decode_window must be at least 1 (the newest position is always attended)"
+    );
     // The paged store must be able to hold at least one max-bucket request,
     // or nothing that pads to the largest bucket could ever be admitted.
+    // (Per-request decode budgets are checked at admission, where the
+    // actual prompt + max_new footprint is known.)
     let largest = cfg.engine.buckets.last().copied().unwrap_or(0);
     anyhow::ensure!(
         cfg.kv_blocks * cfg.kv_block_size >= largest,
@@ -111,7 +131,14 @@ mod tests {
         let v: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
         Args::parse(
             &v,
-            &["max-queue", "chunk-tokens", "max-inflight", "max-wait-ms", "kv-blocks"],
+            &[
+                "max-queue",
+                "chunk-tokens",
+                "max-inflight",
+                "max-wait-ms",
+                "max-new-cap",
+                "kv-blocks",
+            ],
         )
         .unwrap()
     }
@@ -132,6 +159,28 @@ mod tests {
         assert_eq!(cfg.engine.buckets, vec![128, 512]);
         assert_eq!(cfg.engine.block_q, 32);
         assert_eq!(cfg.max_inflight, 8); // default preserved
+        assert_eq!(cfg.max_new_cap, 256); // default preserved
+    }
+
+    #[test]
+    fn decode_knobs_load_and_override() {
+        let dir = std::env::temp_dir().join("vsprefill_cfg_test_decode");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.json");
+        std::fs::write(
+            &p,
+            r#"{"max_new_cap": 32, "engine": {"decode_top_k": 16, "decode_window": 8}}"#,
+        )
+        .unwrap();
+        let cfg = load(Some(p.to_str().unwrap()), &args(&["--max-new-cap", "64"])).unwrap();
+        assert_eq!(cfg.max_new_cap, 64); // CLI wins
+        assert_eq!(cfg.engine.decode_top_k, 16);
+        assert_eq!(cfg.engine.decode_window, 8);
+        // A zero decode window is rejected (the newest position must be
+        // attendable).
+        let p2 = dir.join("bad_window.json");
+        std::fs::write(&p2, r#"{"engine": {"decode_window": 0}}"#).unwrap();
+        assert!(load(Some(p2.to_str().unwrap()), &args(&[])).is_err());
     }
 
     #[test]

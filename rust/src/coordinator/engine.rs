@@ -14,19 +14,24 @@
 
 use std::time::Instant;
 
+use crate::attention::decode::flash_decode_into;
 use crate::attention::flash::flash_attention_paged;
 use crate::indexer::train::{distill, TrainConfig};
 use crate::indexer::{IncrementalScores, Indexer};
 #[cfg(feature = "pjrt")]
 use crate::runtime;
-use crate::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_paged};
+use crate::sparse_attn::exec::{
+    decode_columns, sparse_attention_vs, sparse_attention_vs_paged, sparse_decode_vs_into,
+};
 use crate::sparse_attn::VsPrefill;
-use crate::synth::{gen_head, SynthConfig, SynthHead};
+use crate::synth::{gen_head, SynthConfig, SynthHead, SynthStream};
+use crate::tensor::paged::PagedKv;
 use crate::tensor::Mat;
+use crate::util::parallel::par_chunks_mut;
 use crate::util::rng::Rng;
 
 use super::kv_cache::PagedKvStore;
-use super::request::{Payload, PrefillRequest, PrefillResponse};
+use super::request::{Payload, PrefillRequest, PrefillResponse, TokenFrame};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AttentionMode {
@@ -45,6 +50,13 @@ pub struct EngineConfig {
     /// coordinator's batch fan-out).  0 = auto: `VSPREFILL_THREADS` env var,
     /// else available parallelism.
     pub threads: usize,
+    /// Decode budget: vertical columns kept per sparse decode step (top-k
+    /// of the request's incrementally-maintained vertical index scores).
+    pub decode_top_k: usize,
+    /// Decode budget: local window of most recent positions always attended
+    /// by a sparse decode step (the slash structure collapsed onto the
+    /// single decode row).
+    pub decode_window: usize,
 }
 
 impl Default for EngineConfig {
@@ -54,6 +66,8 @@ impl Default for EngineConfig {
             buckets: vec![128, 256, 512, 1024],
             block_q: 64,
             threads: 0,
+            decode_top_k: 64,
+            decode_window: 64,
         }
     }
 }
@@ -194,7 +208,7 @@ impl PrefillEngine {
         let queue_us = req.submitted_at.elapsed().as_micros() as u64;
         let resp = PrefillResponse { id: req.id, queue_us, bucket, ..Default::default() };
         let mut run_rng = rng.fork(req.id);
-        let head = self.head_for(&req, bucket, &mut run_rng);
+        let (head, stream) = self.synth_parts(&req, bucket, &mut run_rng);
         let chunk = req.chunk.unwrap_or(chunk).clamp(1, bucket);
         ChunkRun {
             req,
@@ -202,6 +216,7 @@ impl PrefillEngine {
             chunk,
             next: 0,
             head,
+            stream,
             inc: IncrementalScores::new(),
             rng: run_rng,
             resp,
@@ -272,11 +287,24 @@ impl PrefillEngine {
         }
     }
 
-    fn head_for(&self, req: &PrefillRequest, bucket: usize, rng: &mut Rng) -> crate::synth::SynthHead {
+    /// Synthesize the prompt head plus the decode-phase continuation
+    /// stream.  The stream is handed the content RNG in the same freshly
+    /// seeded state `gen_head` receives it, so it re-derives the head's
+    /// mean vectors and heavy-hitter direction exactly — decode rows come
+    /// from the same distribution family as the prompt.
+    fn synth_parts(
+        &self,
+        req: &PrefillRequest,
+        bucket: usize,
+        rng: &mut Rng,
+    ) -> (SynthHead, SynthStream) {
         match &req.payload {
             Payload::Synthetic { seed, .. } => {
                 let mut r = Rng::new(*seed);
-                gen_head(&mut r, bucket, &self.cfg.synth, seed % 8)
+                let head = gen_head(&mut r, bucket, &self.cfg.synth, seed % 8);
+                let stream =
+                    SynthStream::continue_head(&self.cfg.synth, Rng::new(*seed), seed % 8, bucket);
+                (head, stream)
             }
             Payload::Tokens(toks) => {
                 // Derive a deterministic head from the token content so the
@@ -285,10 +313,16 @@ impl PrefillEngine {
                 for &t in toks {
                     h = h.wrapping_mul(31).wrapping_add(t as u64);
                 }
-                let mut r = rng.fork(h);
-                gen_head(&mut r, bucket, &self.cfg.synth, h % 8)
+                let r = rng.fork(h);
+                let head = gen_head(&mut r.clone(), bucket, &self.cfg.synth, h % 8);
+                let stream = SynthStream::continue_head(&self.cfg.synth, r, h % 8, bucket);
+                (head, stream)
             }
         }
+    }
+
+    fn head_for(&self, req: &PrefillRequest, bucket: usize, rng: &mut Rng) -> SynthHead {
+        self.synth_parts(req, bucket, rng).0
     }
 
     fn process_native(
@@ -363,14 +397,17 @@ impl PrefillEngine {
 /// cursor into the sequence, and the accumulating response.
 pub struct ChunkRun {
     pub req: PrefillRequest,
-    /// Bucket the request was padded to (also its row reservation in the
-    /// paged store).
+    /// Bucket the request was padded to (its prompt-row reservation in the
+    /// paged store; the full reservation additionally covers
+    /// `max_new_tokens` decode rows).
     pub bucket: usize,
     /// Rows per chunk.
     pub chunk: usize,
     /// Next absolute row to process (== rows appended to the store so far).
     pub next: usize,
     head: SynthHead,
+    /// Decode-phase continuation of the head (positions >= bucket).
+    stream: SynthStream,
     inc: IncrementalScores,
     /// Consumed by the monolithic (non-chunked backend) fallback.
     rng: Rng,
@@ -382,8 +419,170 @@ pub enum ChunkStep {
     /// More chunks remain; the run goes back in the ready queue.
     Progress,
     /// The request finished (successfully or with `error` set); the caller
-    /// frees the KV reservation and replies.
+    /// transitions it to decode (if tokens were requested) or frees the KV
+    /// reservation and replies.
     Done(PrefillResponse),
+}
+
+/// In-flight decode for one request that finished prefill: the synth
+/// continuation stream, the carried-over incremental index scores (sparse
+/// column selection stays fresh as new K/V rows land), and the accumulating
+/// response.
+pub struct DecodeState {
+    pub req: PrefillRequest,
+    /// Prompt rows resident in the paged store (the padded bucket).
+    pub bucket: usize,
+    /// Tokens generated so far.
+    pub generated: usize,
+    /// Tokens to generate (already capped at admission; > 0 by
+    /// construction — zero-token requests never enter decode).
+    pub max_new: usize,
+    stream: SynthStream,
+    inc: IncrementalScores,
+    resp: PrefillResponse,
+    /// Wall-clock anchor for inter-token latency (set at the prefill ->
+    /// decode transition, advanced every step).
+    last_token_at: Instant,
+}
+
+/// Outcome of one decode step for one request.
+pub enum DecodeStep {
+    /// A token was generated; more remain.
+    Token(TokenFrame),
+    /// The final token was generated; the caller frees the KV reservation
+    /// and replies with the finished response.
+    Done(TokenFrame, PrefillResponse),
+    /// The step failed (store error); the caller frees and replies.
+    Failed(PrefillResponse),
+}
+
+impl PrefillEngine {
+    /// Transition a finished chunked prefill into the decode phase.  The
+    /// run's KV reservation stays live (it covers `bucket + max_new` rows);
+    /// `resp` is the completed prefill response the decode phase keeps
+    /// accumulating tokens and timings into.
+    pub fn begin_decode(&self, run: ChunkRun, resp: PrefillResponse) -> DecodeState {
+        DecodeState {
+            bucket: run.bucket,
+            generated: 0,
+            max_new: run.req.max_new_tokens,
+            stream: run.stream,
+            inc: run.inc,
+            resp,
+            req: run.req,
+            last_token_at: Instant::now(),
+        }
+    }
+
+    /// One batched decode step: every state in `states` generates its next
+    /// token.  Phase 1 (serial, cheap) synthesizes each request's next
+    /// (q, k, v) row, appends K/V to the paged store and — for sparse
+    /// requests — scores the new row into the incremental index state and
+    /// selects the step's columns (top-k verticals + local window).  Phase 2
+    /// runs the batch's single-query attention fanned across the worker
+    /// pool (the batched-decode analog of the prefill chunk fan-out).
+    /// Phase 3 (serial) turns outputs into token frames and completion
+    /// transitions.  Returns one `DecodeStep` per state, index-aligned.
+    pub fn decode_round(&self, states: &mut [DecodeState], store: &PagedKvStore) -> Vec<DecodeStep> {
+        let d = self.cfg.synth.head_dim;
+        let block_k = self.cfg.block_q.max(1);
+        // Phase 1: generate + append + index-score.
+        enum Job<'s> {
+            Ready { q: Mat, view: PagedKv<'s>, cols: Option<Vec<usize>> },
+            Failed,
+        }
+        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(states.len());
+        for st in states.iter_mut() {
+            let (q, k, v) = st.stream.next_row();
+            if let Err(e) = store.append(st.req.id, &k, &v) {
+                st.resp.error = Some(format!("{e:#}"));
+                jobs.push(Job::Failed);
+                continue;
+            }
+            let Some(view) = store.view(st.req.id) else {
+                st.resp.error =
+                    Some(format!("request {} lost its kv reservation mid-decode", st.req.id));
+                jobs.push(Job::Failed);
+                continue;
+            };
+            let cols = match st.req.mode {
+                AttentionMode::Dense => None,
+                AttentionMode::Sparse => {
+                    let ti = Instant::now();
+                    self.vsp.indexer.score_chunk(&mut st.inc, &k, &v);
+                    let a_v = st.inc.finalize_vertical();
+                    let c = decode_columns(
+                        &a_v,
+                        view.len,
+                        self.cfg.decode_top_k,
+                        self.cfg.decode_window,
+                    );
+                    st.resp.index_us += ti.elapsed().as_micros() as u64;
+                    Some(c)
+                }
+            };
+            jobs.push(Job::Ready { q, view, cols });
+        }
+        // Phase 2: batched single-query attention across the pool.  The
+        // closure captures only the jobs and free-function kernels (not
+        // `self`), so it stays Sync regardless of backend.
+        let mut out = Mat::zeros(states.len(), d.max(1));
+        par_chunks_mut(&mut out.data, d.max(1), |i, chunk| {
+            if let Job::Ready { q, view, cols } = &jobs[i] {
+                match cols {
+                    None => flash_decode_into(q.row(0), view, block_k, chunk),
+                    Some(c) => sparse_decode_vs_into(q.row(0), view, c, chunk),
+                }
+            }
+        });
+        // Phase 3: tokens, frames, transitions.
+        let now = Instant::now();
+        let mut steps = Vec::with_capacity(states.len());
+        for (i, (st, job)) in states.iter_mut().zip(jobs).enumerate() {
+            match job {
+                Job::Failed => {
+                    let mut resp = std::mem::take(&mut st.resp);
+                    resp.ok = false;
+                    steps.push(DecodeStep::Failed(resp));
+                }
+                Job::Ready { .. } => {
+                    let token = token_from(out.row(i));
+                    let itl = now.duration_since(st.last_token_at).as_micros() as u64;
+                    st.last_token_at = now;
+                    let frame = TokenFrame {
+                        id: st.req.id,
+                        index: st.generated,
+                        pos: st.bucket + st.generated,
+                        token,
+                        itl_us: itl,
+                    };
+                    st.generated += 1;
+                    st.resp.tokens.push(token);
+                    st.resp.decode_us.push(itl);
+                    if st.generated >= st.max_new {
+                        let mut resp = std::mem::take(&mut st.resp);
+                        resp.ok = resp.error.is_none();
+                        steps.push(DecodeStep::Done(frame, resp));
+                    } else {
+                        steps.push(DecodeStep::Token(frame));
+                    }
+                }
+            }
+        }
+        steps
+    }
+}
+
+/// Deterministic synthetic token readout: FNV-1a over the attended output's
+/// bits, folded into a 32k vocabulary.  Stands in for the LM head + sampler
+/// the toy model does not have — what matters for the serving stack is that
+/// tokens are cheap, deterministic, and depend on the attention output.
+fn token_from(out: &[f32]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &x in out {
+        h = (h ^ x.to_bits()).wrapping_mul(16_777_619);
+    }
+    h % 32_000
 }
 
 fn digest(m: &Mat) -> Vec<f32> {
@@ -478,5 +677,73 @@ mod tests {
         let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse), &mut rng);
         assert_eq!(a.output_digest, b.output_digest);
         assert_eq!(a.density, b.density);
+    }
+
+    /// Drive one request through chunked prefill into decode, returning the
+    /// finished response.
+    fn prefill_then_decode(
+        e: &PrefillEngine,
+        store: &PagedKvStore,
+        req: PrefillRequest,
+        chunk: usize,
+    ) -> PrefillResponse {
+        let mut rng = Rng::new(0);
+        let bucket = e.bucket_for(req.seq_len()).unwrap();
+        let max_new = req.max_new_tokens;
+        assert!(store.reserve(req.id, bucket + max_new));
+        let id = req.id;
+        let mut run = e.begin_chunked(req, bucket, chunk, &mut rng);
+        let prefill_resp = loop {
+            match e.process_chunk(&mut run, store) {
+                ChunkStep::Done(r) => break r,
+                ChunkStep::Progress => {}
+            }
+        };
+        assert!(prefill_resp.ok, "{:?}", prefill_resp.error);
+        let mut states = vec![e.begin_decode(run, prefill_resp)];
+        let resp = loop {
+            let steps = e.decode_round(&mut states, store);
+            match steps.into_iter().next().unwrap() {
+                DecodeStep::Token(_) => {}
+                DecodeStep::Done(frame, resp) => {
+                    assert_eq!(frame.index + 1, max_new);
+                    break resp;
+                }
+                DecodeStep::Failed(resp) => break resp,
+            }
+        };
+        store.free(id);
+        resp
+    }
+
+    #[test]
+    fn decode_generates_requested_tokens_and_appends_kv() {
+        let e = PrefillEngine::native_quick(EngineConfig::default());
+        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
+        let mut req = PrefillRequest::synthetic(1, 128, 5, AttentionMode::Sparse);
+        req.max_new_tokens = 6;
+        let resp = prefill_then_decode(&e, &store, req, 64);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 6);
+        assert_eq!(resp.decode_us.len(), 6);
+        assert!(resp.tokens.iter().all(|&t| t < 32_000));
+        assert_eq!(store.used(), 0, "reservation freed after decode");
+    }
+
+    #[test]
+    fn decode_tokens_deterministic_across_ids() {
+        let e = PrefillEngine::native_quick(EngineConfig::default());
+        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
+        let mk = |id: u64, mode: AttentionMode| {
+            let mut r = PrefillRequest::synthetic(id, 128, 5, mode);
+            r.max_new_tokens = 4;
+            r
+        };
+        let a = prefill_then_decode(&e, &store, mk(1, AttentionMode::Sparse), 64);
+        let b = prefill_then_decode(&e, &store, mk(2, AttentionMode::Sparse), 64);
+        assert_eq!(a.tokens, b.tokens, "same seed => same token stream, id-independent");
+        let c = prefill_then_decode(&e, &store, mk(3, AttentionMode::Dense), 64);
+        let d = prefill_then_decode(&e, &store, mk(4, AttentionMode::Dense), 64);
+        assert_eq!(c.tokens, d.tokens, "dense decode deterministic too");
     }
 }

@@ -1,11 +1,22 @@
-//! Service metrics: lock-free counters + a mutex-guarded latency reservoir.
+//! Service metrics: lock-free counters + mutex-guarded latency reservoirs.
+//!
+//! The latency/density streams are recorded into fixed-capacity sampling
+//! reservoirs (`util::stats::Reservoir`, Algorithm R), so a long-running
+//! server's metrics memory is bounded no matter how many requests or tokens
+//! it serves; percentiles over the reservoir estimate the full stream's.
+//! Snapshots serialize to JSON with non-finite values guarded (the JSON
+//! writer renders them as null), so NaN/Inf can never corrupt the wire.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use crate::util::stats::{percentile_sorted, summarize};
+use crate::util::json::Json;
+use crate::util::stats::{mean, percentile_sorted, Reservoir};
 
 use super::request::PrefillResponse;
+
+/// Samples kept per latency stream — bounded memory for unbounded uptime.
+const RESERVOIR_CAP: usize = 4096;
 
 pub struct Metrics {
     pub completed: AtomicU64,
@@ -13,11 +24,15 @@ pub struct Metrics {
     pub kv_rejections: AtomicU64,
     /// Total prefill chunks executed across completed requests.
     pub chunks_executed: AtomicU64,
-    prefill_us: Mutex<Vec<f64>>,
-    queue_us: Mutex<Vec<f64>>,
-    index_us: Mutex<Vec<f64>>,
-    ttft_us: Mutex<Vec<f64>>,
-    densities: Mutex<Vec<f64>>,
+    /// Total tokens generated across completed requests.
+    pub tokens_generated: AtomicU64,
+    prefill_us: Mutex<Reservoir>,
+    queue_us: Mutex<Reservoir>,
+    index_us: Mutex<Reservoir>,
+    ttft_us: Mutex<Reservoir>,
+    /// Per-token inter-token latencies (one sample per generated token).
+    itl_us: Mutex<Reservoir>,
+    densities: Mutex<Reservoir>,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -26,10 +41,16 @@ pub struct Snapshot {
     pub failed: u64,
     pub kv_rejections: u64,
     pub chunks_executed: u64,
+    pub tokens_generated: u64,
     pub p50_prefill_us: f64,
     pub p95_prefill_us: f64,
     pub p50_ttft_us: f64,
     pub p95_ttft_us: f64,
+    /// Inter-token latency percentiles across all generated tokens.
+    pub p50_itl_us: f64,
+    pub p95_itl_us: f64,
+    /// Mean time per output token (the mean ITL) — the TPOT headline.
+    pub mean_tpot_us: f64,
     pub mean_queue_us: f64,
     pub mean_index_us: f64,
     pub mean_density: f64,
@@ -37,16 +58,19 @@ pub struct Snapshot {
 
 impl Metrics {
     pub fn new() -> Metrics {
+        let res = || Mutex::new(Reservoir::new(RESERVOIR_CAP));
         Metrics {
             completed: AtomicU64::new(0),
             failed: AtomicU64::new(0),
             kv_rejections: AtomicU64::new(0),
             chunks_executed: AtomicU64::new(0),
-            prefill_us: Mutex::new(Vec::new()),
-            queue_us: Mutex::new(Vec::new()),
-            index_us: Mutex::new(Vec::new()),
-            ttft_us: Mutex::new(Vec::new()),
-            densities: Mutex::new(Vec::new()),
+            tokens_generated: AtomicU64::new(0),
+            prefill_us: res(),
+            queue_us: res(),
+            index_us: res(),
+            ttft_us: res(),
+            itl_us: res(),
+            densities: res(),
         }
     }
 
@@ -54,37 +78,49 @@ impl Metrics {
         if resp.ok {
             self.completed.fetch_add(1, Ordering::Relaxed);
             self.chunks_executed.fetch_add(resp.chunks, Ordering::Relaxed);
+            self.tokens_generated.fetch_add(resp.tokens.len() as u64, Ordering::Relaxed);
             self.prefill_us.lock().unwrap().push(resp.prefill_us as f64);
             self.queue_us.lock().unwrap().push(resp.queue_us as f64);
             self.index_us.lock().unwrap().push(resp.index_us as f64);
             self.ttft_us.lock().unwrap().push(resp.ttft_us as f64);
             self.densities.lock().unwrap().push(resp.density);
+            let mut itl = self.itl_us.lock().unwrap();
+            for &us in &resp.decode_us {
+                itl.push(us as f64);
+            }
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let mut prefill = self.prefill_us.lock().unwrap().clone();
-        prefill.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let mut ttft = self.ttft_us.lock().unwrap().clone();
-        ttft.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let queue = self.queue_us.lock().unwrap();
-        let index = self.index_us.lock().unwrap();
-        let dens = self.densities.lock().unwrap();
-        let pct = |xs: &[f64], p: f64| if xs.is_empty() { 0.0 } else { percentile_sorted(xs, p) };
+        let sorted = |r: &Mutex<Reservoir>| {
+            let mut v = r.lock().unwrap().values().to_vec();
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v
+        };
+        let prefill = sorted(&self.prefill_us);
+        let ttft = sorted(&self.ttft_us);
+        let itl = sorted(&self.itl_us);
+        let queue = self.queue_us.lock().unwrap().values().to_vec();
+        let index = self.index_us.lock().unwrap().values().to_vec();
+        let dens = self.densities.lock().unwrap().values().to_vec();
         Snapshot {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             kv_rejections: self.kv_rejections.load(Ordering::Relaxed),
             chunks_executed: self.chunks_executed.load(Ordering::Relaxed),
-            p50_prefill_us: pct(&prefill, 0.5),
-            p95_prefill_us: pct(&prefill, 0.95),
-            p50_ttft_us: pct(&ttft, 0.5),
-            p95_ttft_us: pct(&ttft, 0.95),
-            mean_queue_us: summarize(&queue).mean,
-            mean_index_us: summarize(&index).mean,
-            mean_density: summarize(&dens).mean,
+            tokens_generated: self.tokens_generated.load(Ordering::Relaxed),
+            p50_prefill_us: percentile_sorted(&prefill, 0.5),
+            p95_prefill_us: percentile_sorted(&prefill, 0.95),
+            p50_ttft_us: percentile_sorted(&ttft, 0.5),
+            p95_ttft_us: percentile_sorted(&ttft, 0.95),
+            p50_itl_us: percentile_sorted(&itl, 0.5),
+            p95_itl_us: percentile_sorted(&itl, 0.95),
+            mean_tpot_us: mean(&itl),
+            mean_queue_us: mean(&queue),
+            mean_index_us: mean(&index),
+            mean_density: mean(&dens),
         }
     }
 }
@@ -95,12 +131,46 @@ impl Default for Metrics {
     }
 }
 
+impl Snapshot {
+    /// Wire form of the snapshot.  Counters are exact; latency fields are
+    /// reservoir estimates.  Non-finite values are impossible by
+    /// construction (the reservoirs reject them and empty percentiles are
+    /// 0), and the JSON writer additionally renders any non-finite number
+    /// as null — belt and braces for the wire format.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("completed", Json::Num(self.completed as f64)),
+            ("failed", Json::Num(self.failed as f64)),
+            ("kv_rejections", Json::Num(self.kv_rejections as f64)),
+            ("chunks_executed", Json::Num(self.chunks_executed as f64)),
+            ("tokens_generated", Json::Num(self.tokens_generated as f64)),
+            ("p50_prefill_us", Json::Num(self.p50_prefill_us)),
+            ("p95_prefill_us", Json::Num(self.p95_prefill_us)),
+            ("p50_ttft_us", Json::Num(self.p50_ttft_us)),
+            ("p95_ttft_us", Json::Num(self.p95_ttft_us)),
+            ("p50_itl_us", Json::Num(self.p50_itl_us)),
+            ("p95_itl_us", Json::Num(self.p95_itl_us)),
+            ("mean_tpot_us", Json::Num(self.mean_tpot_us)),
+            ("mean_queue_us", Json::Num(self.mean_queue_us)),
+            ("mean_index_us", Json::Num(self.mean_index_us)),
+            ("mean_density", Json::Num(self.mean_density)),
+        ])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn resp(ok: bool, prefill_us: u64, density: f64) -> PrefillResponse {
-        PrefillResponse { ok, prefill_us, density, chunks: 2, ttft_us: prefill_us / 2, ..Default::default() }
+        PrefillResponse {
+            ok,
+            prefill_us,
+            density,
+            chunks: 2,
+            ttft_us: prefill_us / 2,
+            ..Default::default()
+        }
     }
 
     #[test]
@@ -118,5 +188,50 @@ mod tests {
         assert!((s.p50_ttft_us - 275.0).abs() < 1.0);
         assert!(s.p95_ttft_us >= s.p50_ttft_us);
         assert!((s.mean_density - 0.2).abs() < 1e-9);
+    }
+
+    #[test]
+    fn records_token_streams_and_itl() {
+        let m = Metrics::new();
+        let mut r = resp(true, 500, 0.3);
+        r.tokens = vec![1, 2, 3, 4];
+        r.decode_us = vec![100, 200, 300, 400];
+        m.record(&r);
+        let s = m.snapshot();
+        assert_eq!(s.tokens_generated, 4);
+        assert!((s.p50_itl_us - 250.0).abs() < 1.0);
+        assert!(s.p95_itl_us >= s.p50_itl_us);
+        assert!((s.mean_tpot_us - 250.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoirs_bound_memory_under_load() {
+        // Far more requests than the reservoir capacity: snapshots stay
+        // sane and the per-stream sample count is capped.
+        let m = Metrics::new();
+        for i in 0..(2 * 4096u64) {
+            let mut r = resp(true, 100 + i % 500, 0.2);
+            r.decode_us = vec![50 + i % 100];
+            r.tokens = vec![1];
+            m.record(&r);
+        }
+        assert_eq!(m.prefill_us.lock().unwrap().len(), 4096);
+        assert_eq!(m.itl_us.lock().unwrap().len(), 4096);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 2 * 4096);
+        assert_eq!(s.tokens_generated, 2 * 4096);
+        assert!(s.p50_prefill_us >= 100.0 && s.p50_prefill_us <= 600.0);
+    }
+
+    #[test]
+    fn empty_snapshot_serializes_finite_json() {
+        // No samples recorded: every field must serialize to parseable JSON
+        // with zeros, never NaN.
+        let s = Metrics::new().snapshot();
+        let text = s.to_json().to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("p50_itl_us").and_then(|x| x.as_f64()), Some(0.0));
+        assert_eq!(back.get("mean_tpot_us").and_then(|x| x.as_f64()), Some(0.0));
+        assert!(!text.contains("NaN") && !text.contains("inf"), "{text}");
     }
 }

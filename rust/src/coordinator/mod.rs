@@ -1,31 +1,43 @@
 //! L3 serving coordinator: the paper's system side.
 //!
-//! A prefill-serving stack in the vLLM-router mold, specialized for
-//! VSPrefill and built around **chunked prefill over a paged KV store**:
-//! requests are admitted under backpressure, their padded sequence is
-//! reserved all-or-nothing in a paged block pool that holds the actual K/V
-//! rows, and a chunk-granular scheduler interleaves chunks from different
-//! requests across the worker pool — a 128k prefill no longer
-//! head-of-line-blocks the short requests behind it.  Per chunk, the engine
-//! appends the chunk's K/V to the paged store, updates the incremental
-//! vertical/slash index scores, and runs a block-table-aware executor
-//! (`flash_attention_paged` / `sparse_attention_vs_paged`) over the chunk's
-//! queries.  Python never runs here; the PJRT backend executes whole-bucket
-//! AOT graphs and therefore schedules as single-chunk requests.
+//! A full-duplex token-serving stack in the vLLM-router mold, specialized
+//! for VSPrefill and built around **continuous batching over a paged KV
+//! store**: requests are admitted under backpressure, their padded prompt
+//! *plus* token budget is reserved all-or-nothing in a paged block pool
+//! that holds the actual K/V rows, and every scheduler round interleaves
+//! one prefill chunk per prefilling request with one batched decode step
+//! across all decoding requests — a 128k prefill neither blocks the short
+//! requests behind it nor starves the token streams already flowing.  Per
+//! prefill chunk, the engine appends the chunk's K/V to the paged store,
+//! updates the incremental vertical/slash index scores, and runs a
+//! block-table-aware executor (`flash_attention_paged` /
+//! `sparse_attention_vs_paged`) over the chunk's queries.  Per decode step,
+//! each request synthesizes its next (q, k, v) row, appends the K/V to the
+//! same reservation, and runs single-query attention over its block table —
+//! dense (`flash_decode_paged`-style streaming) or sparse (top-k vertical
+//! columns of the request's live index scores + a local window).  Token
+//! frames stream to the client as they are produced; the final response
+//! carries the token list and per-token ITL.  Python never runs here; the
+//! PJRT backend executes whole-bucket AOT graphs, schedules as single-chunk
+//! requests, and completes at prefill (decode is a paged-store capability).
 //!
 //! Module map:
-//!   request    — request/response types; per-chunk timing + TTFT breakdown
+//!   request    — request/response/stream types: per-chunk timing + TTFT,
+//!                `max_new_tokens`, TokenFrame / ResponseEvent /
+//!                ResponseHandle (frames then final response)
 //!   admission  — bounded admission queue (backpressure) + WorkItem
-//!   scheduler  — chunk-granular round-robin scheduler (admission ->
-//!                bucket/KV reservation -> per-round chunk dispatch)
+//!   scheduler  — continuous-batching scheduler (admission -> bucket +
+//!                token-budget KV reservation -> per-round chunk dispatch +
+//!                batched decode step; prefill -> decode -> complete)
 //!   kv_cache   — paged KV store: block arenas holding real K/V rows,
 //!                per-request block tables, append/view/gather/free
 //!                (re-export of `tensor::paged` — the attention kernels
 //!                read through it, so it lives below them)
 //!   engine     — the execution pipeline: monolithic `process` (parity
-//!                baseline, PJRT) and chunked `begin_chunked`/`process_chunk`
-//!   metrics    — counters + latency/TTFT summaries
-//!   server     — TCP JSON-lines front end + client
+//!                baseline, PJRT), chunked `begin_chunked`/`process_chunk`,
+//!                and the decode phase `begin_decode`/`decode_round`
+//!   metrics    — counters + reservoir-sampled latency/TTFT/ITL summaries
+//!   server     — TCP JSON-lines front end + client (streams token frames)
 
 pub mod admission;
 pub mod config;
@@ -38,7 +50,7 @@ pub mod server;
 
 pub use engine::{AttentionMode, EngineConfig, PrefillEngine};
 pub use kv_cache::{PagedKv, PagedKvStore};
-pub use request::{PrefillRequest, PrefillResponse};
+pub use request::{PrefillRequest, PrefillResponse, ResponseEvent, ResponseHandle, TokenFrame};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -56,6 +68,10 @@ pub struct CoordinatorConfig {
     /// the batch-level parallelism of the native backend.
     pub max_inflight: usize,
     pub max_wait_ms: u64,
+    /// Server-side cap on per-request `max_new_tokens` (requests asking for
+    /// more are clamped at admission; the KV reservation covers
+    /// `prompt + max_new_tokens`).
+    pub max_new_cap: usize,
     /// Paged KV pool geometry.  Unlike the seed's accounting-only cache,
     /// blocks hold real K/V rows: memory is
     /// `2 * kv_blocks * kv_block_size * head_dim * 4` bytes.
@@ -71,6 +87,7 @@ impl Default for CoordinatorConfig {
             chunk_tokens: 256,
             max_inflight: 8,
             max_wait_ms: 5,
+            max_new_cap: 256,
             kv_blocks: 1024,
             kv_block_size: 64,
         }
@@ -126,6 +143,7 @@ impl Coordinator {
             chunk_tokens: cfg.chunk_tokens.max(1),
             max_inflight: cfg.max_inflight.max(1),
             max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
+            max_new_cap: cfg.max_new_cap,
         };
         let adm = admission.clone();
         let met = metrics.clone();
@@ -151,23 +169,25 @@ impl Coordinator {
         Coordinator { cfg, admission, metrics, kv, stop, executor: Some(executor) }
     }
 
-    /// Submit a request; returns a receiver for the response, or an error
-    /// when the admission queue is full (backpressure).
+    /// Submit a request; returns a handle on the response stream (token
+    /// frames during decode, then the final response), or an error when the
+    /// admission queue is full (backpressure).
     pub fn submit(
         &self,
         req: PrefillRequest,
-    ) -> Result<mpsc::Receiver<PrefillResponse>, admission::QueueFull> {
+    ) -> Result<request::ResponseHandle, admission::QueueFull> {
         let (tx, rx) = mpsc::channel();
         self.admission.push(admission::WorkItem { req, reply: tx })?;
-        Ok(rx)
+        Ok(request::ResponseHandle::new(rx))
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit and block for the final response (any token
+    /// frames are folded into its `tokens`/`decode_us`).
     pub fn prefill(&self, req: PrefillRequest) -> anyhow::Result<PrefillResponse> {
         let rx = self
             .submit(req)
             .map_err(|_| anyhow::anyhow!("admission queue full"))?;
-        Ok(rx.recv()?)
+        Ok(rx.wait()?)
     }
 
     pub fn shutdown(mut self) -> metrics::Snapshot {
@@ -230,13 +250,28 @@ mod tests {
             rxs.push(c.submit(PrefillRequest::synthetic(i, n, i, mode)).unwrap());
         }
         for rx in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.wait().unwrap();
             assert!(r.ok);
         }
         let snap = c.shutdown();
         assert_eq!(snap.completed, 12);
         assert!(snap.p50_prefill_us > 0.0);
         assert!(snap.p50_ttft_us > 0.0);
+    }
+
+    #[test]
+    fn coordinator_serves_generation_end_to_end() {
+        let c = native_coordinator(16);
+        let mut req = PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse);
+        req.max_new_tokens = 4;
+        let resp = c.prefill(req).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 4);
+        assert_eq!(resp.decode_us.len(), 4);
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.tokens_generated, 4);
+        assert!(snap.p50_itl_us > 0.0, "ITL percentiles recorded");
     }
 
     #[test]

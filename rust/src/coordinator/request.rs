@@ -1,4 +1,7 @@
-//! Request/response types for the prefill service.
+//! Request/response/stream types for the serving lifecycle
+//! (prefill -> decode -> complete).
+
+use std::sync::mpsc;
 
 use crate::coordinator::engine::AttentionMode;
 use crate::util::json::Json;
@@ -23,6 +26,11 @@ pub struct PrefillRequest {
     /// Per-request chunk-size override (rows per prefill chunk); `None`
     /// uses the coordinator's `chunk_tokens`.
     pub chunk: Option<usize>,
+    /// Tokens to generate after prefill (0 = prefill only).  Clamped to the
+    /// coordinator's `max_new_cap` at admission; the KV reservation covers
+    /// `prompt + max_new_tokens` rows so an admitted request can always
+    /// decode to completion.
+    pub max_new_tokens: usize,
     pub submitted_at: std::time::Instant,
 }
 
@@ -34,6 +42,7 @@ impl PrefillRequest {
             mode,
             budget: 0.5,
             chunk: None,
+            max_new_tokens: 0,
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -45,6 +54,7 @@ impl PrefillRequest {
             mode,
             budget: 0.5,
             chunk: None,
+            max_new_tokens: 0,
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -53,6 +63,103 @@ impl PrefillRequest {
         match &self.payload {
             Payload::Tokens(t) => t.len(),
             Payload::Synthetic { seq_len, .. } => *seq_len,
+        }
+    }
+}
+
+/// One generated token, streamed to the client as soon as its decode step
+/// completes (long before the final response).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TokenFrame {
+    /// Request id the frame belongs to.
+    pub id: u64,
+    /// 0-based index of the token within the generation.
+    pub index: usize,
+    /// Absolute position of the token's K/V row in the paged store.
+    pub pos: usize,
+    /// Synthetic token id (deterministic readout of the attended output).
+    pub token: u32,
+    /// Inter-token latency: microseconds since the previous frame (for the
+    /// first token, since prefill completed) — wall clock, so it includes
+    /// rounds spent interleaved with other requests' prefill chunks.
+    pub itl_us: u64,
+}
+
+impl TokenFrame {
+    /// Wire form: carries a `"frame": "token"` discriminator so clients can
+    /// tell streamed frames from the final response line.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("frame", Json::s("token")),
+            ("id", Json::Num(self.id as f64)),
+            ("index", Json::Num(self.index as f64)),
+            ("pos", Json::Num(self.pos as f64)),
+            ("token", Json::Num(self.token as f64)),
+            ("itl_us", Json::Num(self.itl_us as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<TokenFrame> {
+        anyhow::ensure!(
+            j.get("frame").and_then(|f| f.as_str()) == Some("token"),
+            "not a token frame"
+        );
+        Ok(TokenFrame {
+            id: j.req("id")?.as_f64().unwrap_or(0.0) as u64,
+            index: j.req("index")?.as_usize().unwrap_or(0),
+            pos: j.req("pos")?.as_usize().unwrap_or(0),
+            token: j.req("token")?.as_f64().unwrap_or(0.0) as u32,
+            itl_us: j.req("itl_us")?.as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+}
+
+/// What flows back to a submitter: zero or more token frames, then exactly
+/// one final response (success or failure).
+#[derive(Clone, Debug)]
+pub enum ResponseEvent {
+    Token(TokenFrame),
+    Done(PrefillResponse),
+}
+
+/// The submitter's end of a request's event stream.  `wait` is the
+/// request-level blocking call (drains frames, returns the final
+/// response, which carries the full token list anyway); `next_event`
+/// exposes the stream for consumers that render tokens as they arrive.
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<ResponseEvent>,
+}
+
+impl ResponseHandle {
+    pub fn new(rx: mpsc::Receiver<ResponseEvent>) -> ResponseHandle {
+        ResponseHandle { rx }
+    }
+
+    /// Next event (blocking): token frames in generation order, then Done.
+    pub fn next_event(&self) -> Result<ResponseEvent, mpsc::RecvError> {
+        self.rx.recv()
+    }
+
+    /// Block until the final response (token frames are discarded — the
+    /// final response's `tokens`/`decode_us` carry the same data).
+    pub fn wait(&self) -> Result<PrefillResponse, mpsc::RecvError> {
+        loop {
+            if let ResponseEvent::Done(resp) = self.rx.recv()? {
+                return Ok(resp);
+            }
+        }
+    }
+
+    /// Non-blocking completion probe: consumes any already-delivered token
+    /// frames; `None` while the request is still in flight (or the
+    /// coordinator is gone without having replied).
+    pub fn try_done(&self) -> Option<PrefillResponse> {
+        loop {
+            match self.rx.try_recv() {
+                Ok(ResponseEvent::Done(resp)) => return Some(resp),
+                Ok(ResponseEvent::Token(_)) => continue,
+                Err(_) => return None,
+            }
         }
     }
 }
@@ -81,6 +188,12 @@ pub struct PrefillResponse {
     pub chunks: u64,
     /// Per-chunk compute microseconds, in schedule order.
     pub chunk_us: Vec<u64>,
+    /// Generated token ids, in order (empty for prefill-only requests).
+    pub tokens: Vec<u32>,
+    /// Per-token inter-token latency in microseconds (same length as
+    /// `tokens`); TPOT is its mean, ITL percentiles come from the metrics
+    /// reservoir.
+    pub decode_us: Vec<u64>,
     /// Density of the selected mask (1.0 for dense).
     pub density: f64,
     /// Output checksum (first 4 output values) for cross-backend parity.
@@ -109,12 +222,26 @@ impl PrefillResponse {
                 "chunk_us",
                 Json::Arr(self.chunk_us.iter().map(|&u| Json::Num(u as f64)).collect()),
             ),
+            (
+                "tokens",
+                Json::Arr(self.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+            (
+                "decode_us",
+                Json::Arr(self.decode_us.iter().map(|&u| Json::Num(u as f64)).collect()),
+            ),
             ("density", Json::Num(self.density)),
             ("output_digest", Json::arr_f32(&self.output_digest)),
         ])
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<PrefillResponse> {
+        let u64_arr = |key: &str| -> Vec<u64> {
+            j.get(key)
+                .and_then(|x| x.as_arr())
+                .map(|a| a.iter().map(|u| u.as_f64().unwrap_or(0.0) as u64).collect())
+                .unwrap_or_default()
+        };
         Ok(PrefillResponse {
             id: j.req("id")?.as_f64().unwrap_or(0.0) as u64,
             ok: matches!(j.req("ok")?, Json::Bool(true)),
@@ -123,15 +250,17 @@ impl PrefillResponse {
             queue_us: j.req("queue_us")?.as_f64().unwrap_or(0.0) as u64,
             prefill_us: j.req("prefill_us")?.as_f64().unwrap_or(0.0) as u64,
             index_us: j.req("index_us")?.as_f64().unwrap_or(0.0) as u64,
-            // Chunk fields default to zero/empty so pre-chunking peers on
-            // the wire stay parseable.
+            // Chunk/decode fields default to zero/empty so pre-chunking and
+            // pre-decode peers on the wire stay parseable.
             ttft_us: j.get("ttft_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             chunks: j.get("chunks").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
-            chunk_us: j
-                .get("chunk_us")
+            chunk_us: u64_arr("chunk_us"),
+            tokens: j
+                .get("tokens")
                 .and_then(|x| x.as_arr())
-                .map(|a| a.iter().map(|u| u.as_f64().unwrap_or(0.0) as u64).collect())
+                .map(|a| a.iter().map(|t| t.as_f64().unwrap_or(0.0) as u32).collect())
                 .unwrap_or_default(),
+            decode_us: u64_arr("decode_us"),
             density: j.req("density")?.as_f64().unwrap_or(0.0),
             output_digest: j.req("output_digest")?.as_f32_vec()?,
         })
@@ -155,6 +284,8 @@ mod tests {
             ttft_us: 400,
             chunks: 3,
             chunk_us: vec![120, 130, 140],
+            tokens: vec![17, 29_999, 4],
+            decode_us: vec![90, 80, 85],
             density: 0.18,
             output_digest: vec![1.0, -2.5, 0.0, 3.25],
         };
@@ -168,12 +299,47 @@ mod tests {
         assert_eq!(back.ttft_us, 400);
         assert_eq!(back.chunks, 3);
         assert_eq!(back.chunk_us, vec![120, 130, 140]);
+        assert_eq!(back.tokens, vec![17, 29_999, 4]);
+        assert_eq!(back.decode_us, vec![90, 80, 85]);
+    }
+
+    #[test]
+    fn token_frame_roundtrip_and_discriminator() {
+        let f = TokenFrame { id: 7, index: 2, pos: 258, token: 12_345, itl_us: 480 };
+        let j = f.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("frame").and_then(|x| x.as_str()), Some("token"));
+        assert_eq!(TokenFrame::from_json(&parsed).unwrap(), f);
+        // The final-response line has no "frame" key; from_json must refuse.
+        let resp = PrefillResponse { id: 7, ok: true, ..Default::default() };
+        assert!(TokenFrame::from_json(&resp.to_json()).is_err());
+    }
+
+    #[test]
+    fn handle_streams_frames_then_done() {
+        let (tx, rx) = mpsc::channel();
+        let handle = ResponseHandle::new(rx);
+        let frame = TokenFrame { id: 1, index: 0, pos: 128, token: 9, itl_us: 10 };
+        tx.send(ResponseEvent::Token(frame.clone())).unwrap();
+        assert!(handle.try_done().is_none(), "frame alone is not completion");
+        tx.send(ResponseEvent::Token(frame.clone())).unwrap();
+        tx.send(ResponseEvent::Done(PrefillResponse {
+            id: 1,
+            ok: true,
+            tokens: vec![9, 9],
+            ..Default::default()
+        }))
+        .unwrap();
+        let resp = handle.wait().unwrap();
+        assert!(resp.ok);
+        assert_eq!(resp.tokens, vec![9, 9]);
     }
 
     #[test]
     fn seq_len_from_payload() {
         let r = PrefillRequest::tokens(1, vec![1, 2, 3], AttentionMode::Dense);
         assert_eq!(r.seq_len(), 3);
+        assert_eq!(r.max_new_tokens, 0);
         let s = PrefillRequest::synthetic(2, 128, 0, AttentionMode::Sparse);
         assert_eq!(s.seq_len(), 128);
     }

@@ -1,21 +1,27 @@
-//! Chunk-granular prefill scheduler (replaces the seed's length-bucketed
-//! batcher).
+//! Continuous-batching scheduler: chunk-granular prefill interleaved with a
+//! batched decode stream (the full request lifecycle, vLLM-style).
 //!
-//! The unit of scheduling is one *chunk* of one request, not a whole
-//! request: every round the scheduler (1) admits new work — resolving the
-//! request's bucket, rejecting over-cap requests at admission with a clear
-//! error, and reserving the full padded sequence in the paged KV store
-//! all-or-nothing (so an admitted request can always run to completion and
-//! chunk interleaving cannot deadlock); then (2) dispatches the next chunk
-//! of up to `max_inflight` ready requests round-robin across the worker
-//! pool.  A 128-chunk prefill therefore no longer head-of-line-blocks a
-//! 1-chunk request that arrives behind it: the short request boards the
-//! next round and completes while the long one is still mid-sequence.
+//! Requests move through three states: *prefilling* (chunk-granular, as in
+//! PR 2), *decoding* (one token per round, new K/V appended to the same
+//! paged reservation), and *complete* (KV freed, final response sent).
+//! Every scheduling round (1) admits new work — resolving the request's
+//! bucket, clamping `max_new_tokens` to the coordinator cap, rejecting
+//! never-fit requests at admission, and reserving `bucket + max_new` rows
+//! in the paged KV store all-or-nothing so an admitted request can always
+//! prefill *and* decode to completion; (2) dispatches the next chunk of
+//! every prefilling request across the worker pool; and (3) runs one
+//! batched decode step across all decoding requests.  Decode streams
+//! therefore keep producing tokens while a 128k prefill is mid-sequence —
+//! neither direction can starve the other, because both get exactly one
+//! round of service per loop iteration.
 //!
-//! Backends that cannot chunk (PJRT's whole-bucket AOT graphs) run each
-//! request as a single chunk through the same rounds, which degrades to the
-//! seed's behavior per request while keeping admission/backpressure
-//! identical.
+//! Prefill completions with `max_new_tokens > 0` transition to the decode
+//! lane instead of replying; each decode round streams one `TokenFrame`
+//! per request through the reply channel, and the final response (tokens,
+//! per-token ITL) follows the last frame.  Backends that cannot chunk
+//! (PJRT's whole-bucket AOT graphs) never touch the paged store, so their
+//! requests complete at prefill and `max_new_tokens` is ignored — decode
+//! is a native-backend (paged-store) capability.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -24,26 +30,53 @@ use std::sync::{mpsc, Mutex};
 use crate::util::rng::Rng;
 
 use super::admission::{AdmissionQueue, WorkItem};
-use super::engine::{ChunkRun, ChunkStep, PrefillEngine};
+use super::engine::{ChunkRun, ChunkStep, DecodeState, DecodeStep, PrefillEngine};
 use super::kv_cache::PagedKvStore;
 use super::metrics::Metrics;
-use super::request::PrefillResponse;
+use super::request::{PrefillResponse, ResponseEvent};
 
 /// Scheduler knobs (from `CoordinatorConfig`).
 #[derive(Clone, Debug)]
 pub struct SchedulerConfig {
     /// Default rows per prefill chunk (a request's `chunk` field overrides).
     pub chunk_tokens: usize,
-    /// Chunks dispatched per scheduling round — the interleaving width.
+    /// Requests admitted concurrently (prefilling + decoding) — the
+    /// interleaving width and the decode batch-size ceiling.
     pub max_inflight: usize,
     /// How long to wait for work when idle.
     pub max_wait: std::time::Duration,
+    /// Server-side cap on per-request `max_new_tokens` (requests asking for
+    /// more are clamped at admission).
+    pub max_new_cap: usize,
 }
 
-/// One in-flight request: its chunk state plus the reply channel.
+/// One prefilling request: its chunk state plus the reply channel.
 struct Inflight {
     run: ChunkRun,
-    reply: mpsc::Sender<PrefillResponse>,
+    reply: mpsc::Sender<ResponseEvent>,
+}
+
+/// The decode batch: states and reply channels, index-aligned (the engine's
+/// `decode_round` takes a bare `&mut [DecodeState]`).
+#[derive(Default)]
+struct DecodeLane {
+    states: Vec<DecodeState>,
+    replies: Vec<mpsc::Sender<ResponseEvent>>,
+}
+
+impl DecodeLane {
+    fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    fn push(&mut self, state: DecodeState, reply: mpsc::Sender<ResponseEvent>) {
+        self.states.push(state);
+        self.replies.push(reply);
+    }
 }
 
 /// The scheduler loop: runs on the coordinator's executor thread until
@@ -58,18 +91,28 @@ pub(crate) fn run_loop(
     rng: &mut Rng,
 ) {
     let mut ready: VecDeque<Inflight> = VecDeque::new();
+    let mut decoding = DecodeLane::default();
     loop {
-        if stop.load(Ordering::Relaxed) && adm.is_empty() && ready.is_empty() {
+        if stop.load(Ordering::Relaxed) && adm.is_empty() && ready.is_empty() && decoding.is_empty()
+        {
             break;
         }
-        admit(cfg, engine, adm, store, met, &mut ready, rng);
-        if ready.is_empty() {
+        admit(cfg, engine, adm, store, met, &mut ready, decoding.len(), rng);
+        if ready.is_empty() && decoding.is_empty() {
             if stop.load(Ordering::Relaxed) && adm.is_empty() {
                 break;
             }
             continue; // `admit` already waited up to max_wait
         }
-        dispatch_round(cfg, engine, store, met, &mut ready);
+        // One prefill chunk per prefilling request...
+        if !ready.is_empty() {
+            dispatch_round(cfg, engine, store, met, &mut ready, &mut decoding);
+        }
+        // ...and one batched decode step across all decoding requests, every
+        // round — decode streams flow while long prefills are mid-sequence.
+        if !decoding.is_empty() {
+            decode_round(engine, store, met, &mut decoding);
+        }
     }
 }
 
@@ -84,19 +127,20 @@ fn admit(
     store: &PagedKvStore,
     met: &Metrics,
     ready: &mut VecDeque<Inflight>,
+    decoding: usize,
     rng: &mut Rng,
 ) {
-    // `max_inflight` bounds admitted requests (each holds a full padded KV
-    // reservation), not just chunks per round: a full ready ring admits
-    // nothing until something completes.
-    let want = cfg.max_inflight.saturating_sub(ready.len());
+    // `max_inflight` bounds admitted requests across both lifecycle phases
+    // (each holds a full `bucket + max_new` KV reservation): a full system
+    // admits nothing until something completes.
+    let want = cfg.max_inflight.saturating_sub(ready.len() + decoding);
     if want == 0 {
         return;
     }
-    // Only block waiting for work when there is nothing to schedule.
-    let wait = if ready.is_empty() { cfg.max_wait } else { std::time::Duration::ZERO };
+    // Only block waiting for work when there is nothing at all to schedule.
+    let wait = if ready.is_empty() && decoding == 0 { cfg.max_wait } else { std::time::Duration::ZERO };
     let mut pending: VecDeque<WorkItem> = adm.pop_up_to(want, wait).into();
-    while let Some(item) = pending.pop_front() {
+    while let Some(mut item) = pending.pop_front() {
         let n = item.req.seq_len();
         let Some(bucket) = engine.bucket_for(n) else {
             let largest = engine.buckets().into_iter().max().unwrap_or(0);
@@ -107,20 +151,30 @@ fn admit(
             );
             continue;
         };
-        if bucket > store.total_blocks * store.block_size {
+        // Decode rows live in the same reservation as the prompt, so the
+        // clamped token budget is part of the admission footprint.
+        item.req.max_new_tokens = item.req.max_new_tokens.min(cfg.max_new_cap);
+        if !engine.supports_chunked() {
+            // Non-chunked backends (PJRT's whole-bucket graphs) never touch
+            // the paged store and complete at prefill: don't reserve — or
+            // reject for — decode rows that can never be used.
+            item.req.max_new_tokens = 0;
+        }
+        let rows = bucket + item.req.max_new_tokens;
+        if rows > store.total_blocks * store.block_size {
             // Can NEVER fit, even with the pool idle: requeueing would spin
             // forever and head-of-line-block everything behind it.
             reject(
                 met,
                 &item,
                 format!(
-                    "rejected at admission: bucket {bucket} exceeds kv pool capacity ({} blocks x {} rows)",
-                    store.total_blocks, store.block_size
+                    "rejected at admission: bucket {bucket} + {} new tokens exceeds kv pool capacity ({} blocks x {} rows)",
+                    item.req.max_new_tokens, store.total_blocks, store.block_size
                 ),
             );
             continue;
         }
-        if !store.reserve(item.req.id, bucket) {
+        if !store.reserve(item.req.id, rows) {
             met.kv_rejections.fetch_add(1, Ordering::Relaxed);
             // Pool is full right now: put this item and everything popped
             // behind it back at the FRONT of admission in arrival order,
@@ -140,7 +194,7 @@ fn admit(
 fn reject(met: &Metrics, item: &WorkItem, msg: String) {
     let resp = PrefillResponse { id: item.req.id, error: Some(msg), ..Default::default() };
     met.record(&resp);
-    let _ = item.reply.send(resp);
+    let _ = item.reply.send(ResponseEvent::Done(resp));
 }
 
 /// Dispatch one chunk for up to `max_inflight` ready requests.  The native
@@ -148,23 +202,36 @@ fn reject(met: &Metrics, item: &WorkItem, msg: String) {
 /// chunk's kernels serially — the pool pins nested parallelism to 1);
 /// non-parallel backends process the round serially on this thread.
 /// Unfinished runs rejoin the BACK of the ready ring, which is what makes
-/// scheduling round-robin.
+/// scheduling round-robin; finished runs that requested tokens transition
+/// to the decode lane with their KV reservation intact.
 fn dispatch_round(
     cfg: &SchedulerConfig,
     engine: &PrefillEngine,
     store: &PagedKvStore,
     met: &Metrics,
     ready: &mut VecDeque<Inflight>,
+    decoding: &mut DecodeLane,
 ) {
     let take = ready.len().min(cfg.max_inflight.max(1));
     let round: Vec<Inflight> = ready.drain(..take).collect();
     let survivors: Mutex<Vec<Inflight>> = Mutex::new(Vec::with_capacity(take));
-    let step = |mut job: Inflight, eng: &PrefillEngine| match eng.process_chunk(&mut job.run, store) {
+    let entering_decode: Mutex<Vec<(DecodeState, mpsc::Sender<ResponseEvent>)>> =
+        Mutex::new(Vec::new());
+    let step = |mut job: Inflight, eng: &PrefillEngine| match eng.process_chunk(&mut job.run, store)
+    {
         ChunkStep::Progress => survivors.lock().unwrap().push(job),
         ChunkStep::Done(resp) => {
-            store.free(job.run.req.id);
-            met.record(&resp);
-            let _ = job.reply.send(resp);
+            // Only the chunked (paged-store) path can decode: the monolithic
+            // fallback never appended K/V, so it completes at prefill.
+            if resp.ok && job.run.req.max_new_tokens > 0 && eng.supports_chunked() {
+                let Inflight { run, reply } = job;
+                let state = eng.begin_decode(run, resp);
+                entering_decode.lock().unwrap().push((state, reply));
+            } else {
+                store.free(job.run.req.id);
+                met.record(&resp);
+                let _ = job.reply.send(ResponseEvent::Done(resp));
+            }
         }
     };
     if engine.supports_parallel() && round.len() > 1 {
@@ -188,13 +255,51 @@ fn dispatch_round(
             step(job, engine);
         }
     }
-    // Survivors rejoin in request-id order for determinism (par_drain
-    // completes in arbitrary order), behind any newly admitted work that is
-    // already queued — round-robin across rounds either way.
+    // Survivors and decode entrants rejoin in request-id order for
+    // determinism (par_drain completes in arbitrary order).
     let mut back = survivors.into_inner().unwrap();
     back.sort_by_key(|j| j.run.req.id);
     for job in back {
         ready.push_back(job);
+    }
+    let mut entrants = entering_decode.into_inner().unwrap();
+    entrants.sort_by_key(|(s, _)| s.req.id);
+    for (state, reply) in entrants {
+        decoding.push(state, reply);
+    }
+}
+
+/// One batched decode step: every decoding request generates its next token
+/// (the engine fans the batch's attention across the worker pool), frames
+/// stream out as soon as they exist, and finished requests free their KV and
+/// reply.
+fn decode_round(
+    engine: &PrefillEngine,
+    store: &PagedKvStore,
+    met: &Metrics,
+    decoding: &mut DecodeLane,
+) {
+    let steps = engine.decode_round(&mut decoding.states, store);
+    let states = std::mem::take(&mut decoding.states);
+    let replies = std::mem::take(&mut decoding.replies);
+    for ((state, reply), step) in states.into_iter().zip(replies).zip(steps) {
+        match step {
+            DecodeStep::Token(frame) => {
+                let _ = reply.send(ResponseEvent::Token(frame));
+                decoding.push(state, reply);
+            }
+            DecodeStep::Done(frame, resp) => {
+                let _ = reply.send(ResponseEvent::Token(frame));
+                store.free(state.req.id);
+                met.record(&resp);
+                let _ = reply.send(ResponseEvent::Done(resp));
+            }
+            DecodeStep::Failed(resp) => {
+                store.free(state.req.id);
+                met.record(&resp);
+                let _ = reply.send(ResponseEvent::Done(resp));
+            }
+        }
     }
 }
 
@@ -213,6 +318,7 @@ mod tests {
                 chunk_tokens: 128,
                 max_inflight: 8,
                 max_wait: std::time::Duration::from_millis(1),
+                max_new_cap: 256,
             },
             engine,
             AdmissionQueue::new(64),
@@ -221,11 +327,32 @@ mod tests {
         )
     }
 
-    fn submit(adm: &AdmissionQueue, id: u64, n: usize) -> mpsc::Receiver<PrefillResponse> {
+    fn submit(adm: &AdmissionQueue, id: u64, n: usize) -> mpsc::Receiver<ResponseEvent> {
+        submit_gen(adm, id, n, 0)
+    }
+
+    fn submit_gen(
+        adm: &AdmissionQueue,
+        id: u64,
+        n: usize,
+        max_new: usize,
+    ) -> mpsc::Receiver<ResponseEvent> {
         let (tx, rx) = mpsc::channel();
-        let req = PrefillRequest::synthetic(id, n, id, AttentionMode::Sparse);
+        let mut req = PrefillRequest::synthetic(id, n, id, AttentionMode::Sparse);
+        req.max_new_tokens = max_new;
         adm.push(WorkItem { req, reply: tx }).unwrap();
         rx
+    }
+
+    /// Drain a reply stream to its final response, counting token frames.
+    fn final_of(rx: &mpsc::Receiver<ResponseEvent>) -> (usize, PrefillResponse) {
+        let mut frames = 0;
+        loop {
+            match rx.recv().unwrap() {
+                ResponseEvent::Token(_) => frames += 1,
+                ResponseEvent::Done(resp) => return (frames, resp),
+            }
+        }
     }
 
     #[test]
@@ -236,7 +363,7 @@ mod tests {
         let mut rng = Rng::new(1);
         run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
         for rx in rxs {
-            assert!(rx.recv().unwrap().ok);
+            assert!(final_of(&rx).1.ok);
         }
         assert_eq!(met.snapshot().completed, 6);
         assert_eq!(store.used(), 0, "all reservations freed");
@@ -249,7 +376,7 @@ mod tests {
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(2);
         run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
-        let resp = rx.recv().unwrap();
+        let (_, resp) = final_of(&rx);
         assert!(!resp.ok);
         let err = resp.error.unwrap();
         assert!(err.contains("rejected at admission"), "{err}");
@@ -270,12 +397,30 @@ mod tests {
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(4);
         run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
-        let bad = bad_rx.recv().unwrap();
+        let (_, bad) = final_of(&bad_rx);
         assert!(!bad.ok);
         assert!(bad.error.unwrap().contains("exceeds kv pool capacity"));
-        assert!(ok_rx.recv().unwrap().ok);
+        assert!(final_of(&ok_rx).1.ok);
         assert_eq!(met.snapshot().completed, 1);
         assert_eq!(met.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn decode_footprint_counts_against_pool_capacity() {
+        let (cfg, engine, adm, big_store, met) = setup();
+        // Pool of exactly 256 rows: a 256-row prompt fits alone, but the
+        // same prompt + 10 decode tokens can never fit and must be rejected
+        // at admission (the reservation covers prompt + max_new).
+        let store = PagedKvStore::new(4, 64, big_store.head_dim);
+        let bad_rx = submit_gen(&adm, 1, 256, 10);
+        let ok_rx = submit_gen(&adm, 2, 256, 0);
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(5);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        let (_, bad) = final_of(&bad_rx);
+        assert!(!bad.ok);
+        assert!(bad.error.unwrap().contains("new tokens exceeds kv pool capacity"));
+        assert!(final_of(&ok_rx).1.ok);
     }
 
     #[test]
@@ -288,10 +433,42 @@ mod tests {
         let mut rng = Rng::new(3);
         run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
         for rx in rxs {
-            assert!(rx.recv().unwrap().ok, "requeued requests complete eventually");
+            assert!(final_of(&rx).1.ok, "requeued requests complete eventually");
         }
         let snap = met.snapshot();
         assert_eq!(snap.completed, 3);
         assert!(snap.kv_rejections > 0, "backpressure must have engaged");
+    }
+
+    #[test]
+    fn generation_streams_frames_then_final_response() {
+        let (cfg, engine, adm, store, met) = setup();
+        let rx = submit_gen(&adm, 1, 128, 5);
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(6);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        let (frames, resp) = final_of(&rx);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(frames, 5, "one streamed frame per generated token");
+        assert_eq!(resp.tokens.len(), 5);
+        assert_eq!(resp.decode_us.len(), 5);
+        assert_eq!(store.used(), 0, "prompt + decode reservation freed");
+        let snap = met.snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.tokens_generated, 5);
+    }
+
+    #[test]
+    fn max_new_tokens_clamped_to_cap() {
+        let (mut cfg, engine, adm, store, met) = setup();
+        cfg.max_new_cap = 3;
+        let rx = submit_gen(&adm, 1, 128, 100);
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(7);
+        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        let (frames, resp) = final_of(&rx);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 3, "clamped to max_new_cap");
+        assert_eq!(frames, 3);
     }
 }

@@ -2,13 +2,18 @@
 //!
 //! Wire protocol (one JSON object per line):
 //!   request:  {"id": 1, "n": 256, "seed": 7, "mode": "sparse", "budget": 0.5,
-//!              "chunk": 256}
+//!              "chunk": 256, "max_new_tokens": 16}
 //!             or {"id": 1, "tokens": [..], "mode": "dense"}
-//!   ("chunk" optionally overrides the coordinator's prefill chunk size)
-//!   response: PrefillResponse::to_json
-//! The connection handler blocks per request (prefill is the unit of work);
-//! multiple connections are served concurrently, all funneling into the
-//! coordinator's admission queue.
+//!   ("chunk" optionally overrides the coordinator's prefill chunk size;
+//!    "max_new_tokens" requests token generation after prefill)
+//!   stream:   zero or more {"frame": "token", "id": .., "index": ..,
+//!             "pos": .., "token": .., "itl_us": ..} lines, written as each
+//!             decode step completes (TokenFrame::to_json)
+//!   response: PrefillResponse::to_json (always the final line; carries the
+//!             full token list + per-token ITL)
+//! The connection handler blocks per request (one request's stream at a
+//! time per connection); multiple connections are served concurrently, all
+//! funneling into the coordinator's admission queue.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -18,7 +23,7 @@ use std::sync::Arc;
 use crate::util::json::Json;
 
 use super::engine::AttentionMode;
-use super::request::{PrefillRequest, PrefillResponse};
+use super::request::{PrefillRequest, PrefillResponse, ResponseEvent, TokenFrame};
 use super::Coordinator;
 
 pub struct Server {
@@ -53,6 +58,9 @@ pub fn parse_request(line: &str) -> anyhow::Result<PrefillRequest> {
     if let Some(c) = j.get("chunk").and_then(|c| c.as_usize()) {
         anyhow::ensure!(c > 0, "chunk must be positive");
         req.chunk = Some(c);
+    }
+    if let Some(m) = j.get("max_new_tokens").and_then(|m| m.as_usize()) {
+        req.max_new_tokens = m;
     }
     Ok(req)
 }
@@ -138,9 +146,21 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
         }
         let line = current;
         let resp_json = match parse_request(&line) {
-            Ok(req) => match coordinator.prefill(req) {
-                Ok(resp) => resp.to_json(),
-                Err(e) => error_json(0, &format!("{e:#}")),
+            Ok(req) => match coordinator.submit(req) {
+                // Stream the request's events: token frames as they land,
+                // then the final response line.
+                Ok(handle) => loop {
+                    match handle.next_event() {
+                        Ok(ResponseEvent::Token(frame)) => {
+                            if writeln!(writer, "{}", frame.to_json().to_string()).is_err() {
+                                return;
+                            }
+                        }
+                        Ok(ResponseEvent::Done(resp)) => break resp.to_json(),
+                        Err(_) => break error_json(0, "coordinator stopped mid-request"),
+                    }
+                },
+                Err(_) => error_json(0, "admission queue full"),
             },
             Err(e) => error_json(0, &format!("bad request from {peer:?}: {e:#}")),
         };
@@ -181,18 +201,43 @@ impl Client {
         mode: &str,
         budget: f32,
     ) -> anyhow::Result<PrefillResponse> {
+        let (frames, resp) = self.generate(id, n, seed, mode, budget, 0)?;
+        debug_assert!(frames.is_empty(), "prefill-only request must not stream frames");
+        Ok(resp)
+    }
+
+    /// Submit a request with a token budget and read the full stream: the
+    /// token frames in generation order, then the final response.
+    pub fn generate(
+        &mut self,
+        id: u64,
+        n: usize,
+        seed: u64,
+        mode: &str,
+        budget: f32,
+        max_new_tokens: usize,
+    ) -> anyhow::Result<(Vec<TokenFrame>, PrefillResponse)> {
         let req = Json::obj(vec![
             ("id", Json::Num(id as f64)),
             ("n", Json::Num(n as f64)),
             ("seed", Json::Num(seed as f64)),
             ("mode", Json::s(mode)),
             ("budget", Json::Num(budget as f64)),
+            ("max_new_tokens", Json::Num(max_new_tokens as f64)),
         ]);
         writeln!(self.writer, "{}", req.to_string())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
-        PrefillResponse::from_json(&j)
+        let mut frames = Vec::new();
+        loop {
+            let mut line = String::new();
+            let read = self.reader.read_line(&mut line)?;
+            anyhow::ensure!(read > 0, "connection closed mid-stream");
+            let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+            if j.get("frame").is_some() {
+                frames.push(TokenFrame::from_json(&j)?);
+            } else {
+                return Ok((frames, PrefillResponse::from_json(&j)?));
+            }
+        }
     }
 }
 
@@ -217,6 +262,10 @@ mod tests {
         assert_eq!(r3.chunk, Some(128));
         assert!(parse_request(r#"{"id": 6, "n": 512, "chunk": 0}"#).is_err());
 
+        let r4 = parse_request(r#"{"id": 7, "n": 256, "max_new_tokens": 16}"#).unwrap();
+        assert_eq!(r4.max_new_tokens, 16);
+        assert_eq!(r3.max_new_tokens, 0, "absent field defaults to prefill-only");
+
         assert!(parse_request("{}").is_err());
         assert!(parse_request("not json").is_err());
     }
@@ -237,6 +286,32 @@ mod tests {
         let resp2 = client.prefill_synthetic(8, 128, 1, "dense", 0.5).unwrap();
         assert!(resp2.ok);
         assert_eq!(resp2.density, 1.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn generation_streams_frames_over_tcp() {
+        use crate::coordinator::{CoordinatorConfig, PrefillEngine};
+        let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+        let engine = PrefillEngine::native_quick(cfg.engine.clone());
+        let coordinator = Arc::new(Coordinator::start(cfg, engine));
+        let server = Server::start(coordinator.clone(), 0).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        let (frames, resp) = client.generate(9, 128, 2, "sparse", 0.5, 5).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(frames.len(), 5, "one frame line per generated token");
+        assert_eq!(resp.tokens.len(), 5);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f.id, 9);
+            assert_eq!(f.index, i);
+            assert_eq!(f.pos, resp.bucket + i, "token K/V rows extend the prompt");
+            assert_eq!(f.token, resp.tokens[i], "frames and final response agree");
+        }
+        assert_eq!(
+            frames.iter().map(|f| f.itl_us).collect::<Vec<_>>(),
+            resp.decode_us,
+            "per-token ITL matches between stream and final response"
+        );
         server.shutdown();
     }
 }

@@ -192,6 +192,16 @@ impl IncrementalScores {
         softmax_inplace(&mut as_off);
         (av, as_off)
     }
+
+    /// Vertical scores only — the decode-step hot path: per-token column
+    /// selection needs just A_v (the slash structure collapses to a fixed
+    /// local window at decode), so skip the slash clone + softmax.
+    /// Identical to `finalize().0`.
+    pub fn finalize_vertical(&self) -> Vec<f32> {
+        let mut av = self.logit_v.clone();
+        softmax_inplace(&mut av);
+        av
+    }
 }
 
 #[cfg(test)]
@@ -260,6 +270,65 @@ mod tests {
             assert_eq!(got_s, want_s, "prefix {lo} slash");
         }
         assert_eq!(inc.len(), 37);
+    }
+
+    #[test]
+    fn incremental_scores_match_batch_at_non_dividing_chunks() {
+        // Chunk schedules that do not divide seq_len, including the
+        // trailing-remainder shapes the chunked scheduler actually
+        // produces.  Parity with batch predict_kv must be exact at every
+        // prefix.
+        let mut rng = Rng::new(7);
+        let ix = Indexer::init(&mut rng, 16, 8);
+        let n = 41; // prime: nothing divides it
+        let k = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+        for schedule in [vec![13usize, 13, 13, 2], vec![40, 1], vec![7, 11, 23]] {
+            assert_eq!(schedule.iter().sum::<usize>(), n);
+            let mut inc = IncrementalScores::new();
+            let mut lo = 0;
+            for chunk in schedule {
+                ix.score_chunk(&mut inc, &k.sub_rows(lo, lo + chunk), &v.sub_rows(lo, lo + chunk));
+                lo += chunk;
+                let (want_v, want_s) = ix.predict_kv(&k.sub_rows(0, lo), &v.sub_rows(0, lo));
+                let (got_v, got_s) = inc.finalize();
+                assert_eq!(got_v, want_v, "prefix {lo} vertical");
+                assert_eq!(got_s, want_s, "prefix {lo} slash");
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_scores_match_batch_at_single_token_chunks() {
+        // The decode path scores exactly one K/V row per step: every
+        // 1-row chunk must keep exact parity with the batch path, position
+        // by position — this is what keeps sparse decode's column selection
+        // honest as tokens are generated.
+        let mut rng = Rng::new(8);
+        let ix = Indexer::init(&mut rng, 16, 8);
+        let n = 23;
+        let k = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(n, 8, |_, _| rng.normal_f32());
+        let mut inc = IncrementalScores::new();
+        for i in 0..n {
+            ix.score_chunk(&mut inc, &k.sub_rows(i, i + 1), &v.sub_rows(i, i + 1));
+            let (want_v, want_s) = ix.predict_kv(&k.sub_rows(0, i + 1), &v.sub_rows(0, i + 1));
+            let (got_v, got_s) = inc.finalize();
+            assert_eq!(got_v, want_v, "position {i} vertical");
+            assert_eq!(got_s, want_s, "position {i} slash");
+            assert_eq!(inc.finalize_vertical(), want_v, "position {i} vertical-only fast path");
+        }
+        // Mixed prefill-then-decode shape: a bulk chunk followed by
+        // single-token chunks (the real serving sequence).
+        let mut inc2 = IncrementalScores::new();
+        ix.score_chunk(&mut inc2, &k.sub_rows(0, 16), &v.sub_rows(0, 16));
+        for i in 16..n {
+            ix.score_chunk(&mut inc2, &k.sub_rows(i, i + 1), &v.sub_rows(i, i + 1));
+        }
+        let (got_v, got_s) = inc2.finalize();
+        let (want_v, want_s) = ix.predict_kv(&k, &v);
+        assert_eq!(got_v, want_v);
+        assert_eq!(got_s, want_s);
     }
 
     #[test]

@@ -16,8 +16,9 @@ use vsprefill::runtime;
 use vsprefill::util::args::Args;
 
 const KNOWN: &[&str] = &[
-    "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "artifacts",
-    "config", "max-queue", "chunk-tokens", "max-inflight", "max-wait-ms", "kv-blocks", "threads",
+    "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "max-new", "artifacts",
+    "config", "max-queue", "chunk-tokens", "max-inflight", "max-wait-ms", "max-new-cap",
+    "kv-blocks", "threads",
 ];
 
 fn main() -> anyhow::Result<()> {
@@ -78,16 +79,18 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         "dense" => AttentionMode::Dense,
         _ => AttentionMode::Sparse,
     };
+    let max_new = args.usize_or("max-new", 0);
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for i in 0..requests {
         let mut req = PrefillRequest::synthetic(i as u64, n, i as u64, mode);
         req.budget = args.f64_or("budget", 0.5) as f32;
+        req.max_new_tokens = max_new;
         rxs.push(coordinator.submit(req).map_err(|_| anyhow::anyhow!("queue full"))?);
     }
     let mut ok = 0;
     for rx in rxs {
-        if rx.recv()?.ok {
+        if rx.wait()?.ok {
             ok += 1;
         }
     }
@@ -103,6 +106,12 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         snap.p50_prefill_us, snap.p95_prefill_us, snap.p50_ttft_us, snap.mean_queue_us,
         snap.mean_index_us, snap.mean_density, snap.chunks_executed
     );
+    if snap.tokens_generated > 0 {
+        println!(
+            "decode: {} tokens  p50 itl {:.0}us  p95 itl {:.0}us  mean tpot {:.0}us",
+            snap.tokens_generated, snap.p50_itl_us, snap.p95_itl_us, snap.mean_tpot_us
+        );
+    }
     Ok(())
 }
 

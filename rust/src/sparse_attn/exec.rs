@@ -231,6 +231,76 @@ pub fn sparse_attention_vs_paged(
     out
 }
 
+/// Decode-step column selection: the sparse analog of the vertical/slash
+/// mask collapsed onto a single query row.  The decode query sits at
+/// position `n - 1`, so its slash offsets `0..window` are exactly the
+/// `window` most recent positions — a local window — while the vertical
+/// structure survives as the `top_k` highest-scoring columns of the
+/// request's (incrementally maintained) vertical index scores `a_v`.
+/// Returns sorted, deduplicated absolute key positions, at most
+/// `top_k + window` of them (the decode budget), always including the
+/// newest position `n - 1`.
+pub fn decode_columns(a_v: &[f32], n: usize, top_k: usize, window: usize) -> Vec<usize> {
+    let n = n.min(a_v.len());
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut cols = crate::sparse::budget::topk_indices(&a_v[..n], top_k.min(n));
+    let w0 = n.saturating_sub(window.max(1));
+    cols.extend(w0..n);
+    cols.sort_unstable();
+    cols.dedup();
+    cols
+}
+
+/// Single-query sparse decode through the paged store: the newest query
+/// attends only the `cols` key positions (sorted ascending, all < kv.len —
+/// the output of [`decode_columns`]), gathered through the block table.
+/// One softmax pass over a budgeted candidate set: O(|cols| * d) per token
+/// instead of O(kv.len * d) for dense decode.
+pub fn sparse_decode_vs_into(q: &[f32], kv: &PagedKv<'_>, cols: &[usize], out: &mut [f32]) {
+    let d = kv.head_dim();
+    assert_eq!(q.len(), d, "decode query dim mismatch");
+    assert_eq!(out.len(), d, "decode output dim mismatch");
+    out.fill(0.0);
+    if cols.is_empty() {
+        // Degenerate budget: fall back to the newest value row (the same
+        // diagonal fallback the prefill executors use).
+        if kv.len > 0 {
+            out.copy_from_slice(kv.v_row(kv.len - 1));
+        }
+        return;
+    }
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut scores = Vec::with_capacity(cols.len());
+    let mut m = NEG_INF;
+    for &j in cols {
+        let x = dot(q, kv.k_row(j)) * scale;
+        scores.push(x);
+        m = m.max(x);
+    }
+    let mut s = 0.0f32;
+    for x in scores.iter_mut() {
+        *x = (*x - m).exp();
+        s += *x;
+    }
+    let inv = 1.0 / s;
+    for (t, &j) in cols.iter().enumerate() {
+        let w = scores[t] * inv;
+        let vrow = kv.v_row(j);
+        for c in 0..d {
+            out[c] += w * vrow[c];
+        }
+    }
+}
+
+/// Owned-result wrapper over [`sparse_decode_vs_into`] (tests, benches).
+pub fn sparse_decode_vs_paged(q: &[f32], kv: &PagedKv<'_>, cols: &[usize]) -> Vec<f32> {
+    let mut out = vec![0.0f32; kv.head_dim()];
+    sparse_decode_vs_into(q, kv, cols, &mut out);
+    out
+}
+
 /// The seed's row-serial scalar executor, kept as the perf baseline the
 /// microbench sweep compares against (and as a bq-independent oracle).
 /// Per-row candidate enumeration: the admissible columns of row i are
@@ -512,6 +582,88 @@ mod tests {
             lo = hi;
         }
         assert!(got.max_abs_diff(&want) < 1e-6, "aligned chunked paged vs contiguous");
+    }
+
+    #[test]
+    fn decode_columns_respect_budget_and_include_newest() {
+        let mut rng = Rng::new(9);
+        let n = 200;
+        let a_v: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+        for (top_k, window) in [(8usize, 16usize), (1, 1), (64, 32), (300, 300)] {
+            let cols = decode_columns(&a_v, n, top_k, window);
+            assert!(cols.len() <= top_k + window, "budget exceeded: {} cols", cols.len());
+            assert!(!cols.is_empty());
+            assert!(cols.contains(&(n - 1)), "newest position always attended");
+            assert!(cols.windows(2).all(|w| w[0] < w[1]), "sorted + deduped");
+            assert!(cols.iter().all(|&j| j < n));
+            // The local window is fully present.
+            let w0 = n.saturating_sub(window.max(1));
+            assert!((w0..n).all(|j| cols.contains(&j)));
+        }
+        // Top-scoring vertical survives even when outside the window.
+        let mut peaked = vec![0.0f32; n];
+        peaked[3] = 1.0;
+        let cols = decode_columns(&peaked, n, 4, 8);
+        assert!(cols.contains(&3));
+    }
+
+    #[test]
+    fn sparse_decode_matches_manual_softmax_over_columns() {
+        use crate::tensor::paged::PagedKvStore;
+        let n = 80;
+        let d = 16;
+        let mut rng = Rng::new(12);
+        let (k, v) = (randn(&mut rng, n, d), randn(&mut rng, n, d));
+        let q = randn(&mut rng, 1, d);
+        let store = PagedKvStore::new(16, 8, d);
+        assert!(store.reserve(1, n));
+        store.append(1, &k, &v).unwrap();
+        let view = store.view(1).unwrap();
+        let cols = vec![0usize, 3, 17, 40, 76, 77, 78, 79];
+        let got = sparse_decode_vs_paged(q.row(0), &view, &cols);
+        // Manual reference over the same columns on the contiguous K/V.
+        let scale = 1.0 / (d as f32).sqrt();
+        let scores: Vec<f32> = cols.iter().map(|&j| dot(q.row(0), k.row(j)) * scale).collect();
+        let m = scores.iter().cloned().fold(NEG_INF, f32::max);
+        let exps: Vec<f32> = scores.iter().map(|x| (x - m).exp()).collect();
+        let s: f32 = exps.iter().sum();
+        let mut want = vec![0.0f32; d];
+        for (t, &j) in cols.iter().enumerate() {
+            let w = exps[t] / s;
+            for c in 0..d {
+                want[c] += w * v.at(j, c);
+            }
+        }
+        for c in 0..d {
+            assert!((got[c] - want[c]).abs() < 1e-5, "col {c}: {} vs {}", got[c], want[c]);
+        }
+        // Empty budget falls back to the newest value row.
+        let fb = sparse_decode_vs_paged(q.row(0), &view, &[]);
+        for c in 0..d {
+            assert!((fb[c] - v.at(n - 1, c)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sparse_decode_with_all_columns_equals_dense_decode() {
+        use crate::attention::decode::flash_decode_into;
+        use crate::tensor::paged::PagedKvStore;
+        let n = 64;
+        let d = 8;
+        let mut rng = Rng::new(13);
+        let (k, v) = (randn(&mut rng, n, d), randn(&mut rng, n, d));
+        let q = randn(&mut rng, 1, d);
+        let store = PagedKvStore::new(16, 8, d);
+        assert!(store.reserve(1, n));
+        store.append(1, &k, &v).unwrap();
+        let view = store.view(1).unwrap();
+        let cols: Vec<usize> = (0..n).collect();
+        let sparse = sparse_decode_vs_paged(q.row(0), &view, &cols);
+        let mut dense = vec![0.0f32; d];
+        flash_decode_into(q.row(0), &view, 16, &mut dense);
+        for c in 0..d {
+            assert!((sparse[c] - dense[c]).abs() < 1e-5);
+        }
     }
 
     #[test]

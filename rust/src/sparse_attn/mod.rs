@@ -12,7 +12,7 @@ pub mod vsprefill;
 
 pub use cost::{CostModel, MethodCost};
 pub use exec::{
-    sparse_attention_blocks, sparse_attention_vs, sparse_attention_vs_paged,
-    sparse_attention_vs_rowserial,
+    decode_columns, sparse_attention_blocks, sparse_attention_vs, sparse_attention_vs_paged,
+    sparse_attention_vs_rowserial, sparse_decode_vs_into, sparse_decode_vs_paged,
 };
 pub use vsprefill::VsPrefill;

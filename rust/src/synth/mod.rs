@@ -72,22 +72,7 @@ pub struct SynthHead {
 /// intra-group consistency, Fig. 3a-b).
 pub fn gen_head(rng: &mut Rng, n: usize, cfg: &SynthConfig, head_seed: u64) -> SynthHead {
     let d = cfg.head_dim;
-    let mut mean_rng = Rng::new(cfg.seed_means + 1000 * head_seed);
-    let mu_q: Vec<f32> = (0..d).map(|_| mean_rng.normal_f32() * cfg.mean_scale).collect();
-    let mu_k: Vec<f32> = if cfg.tied_means {
-        mu_q.clone()
-    } else {
-        (0..d).map(|_| mean_rng.normal_f32() * cfg.mean_scale).collect()
-    };
-    // The heavy-hitter direction u is drawn from the *content* stream (per
-    // sample), not the per-head mean stream: which direction heavy keys
-    // align with is context-dependent, and the indexer must learn to detect
-    // "keys with an out-of-distribution boost that queries share" for any
-    // direction — that is precisely the generalization the paper's
-    // lightweight training claims.
-    let mut u: Vec<f32> = (0..d).map(|_| rng.normal_f32()).collect();
-    let norm = (u.iter().map(|x| x * x).sum::<f32>()).sqrt();
-    u.iter_mut().for_each(|x| *x /= norm);
+    let (mu_q, mu_k, u) = head_params(cfg, head_seed, rng);
 
     let mut q = Mat::zeros(n, d);
     let mut k = Mat::zeros(n, d);
@@ -131,6 +116,97 @@ pub fn gen_head(rng: &mut Rng, n: usize, cfg: &SynthConfig, head_seed: u64) -> S
     }
     let v = Mat::from_fn(n, d, |_, _| rng.normal_f32());
     SynthHead { q, k, v, heavy }
+}
+
+/// The per-head distribution parameters both `gen_head` and `SynthStream`
+/// draw before any row is generated: mean vectors from the dedicated mean
+/// stream, and the heavy-hitter direction u from the *content* stream (per
+/// sample), not the per-head mean stream — which direction heavy keys align
+/// with is context-dependent, and the indexer must learn to detect "keys
+/// with an out-of-distribution boost that queries share" for any direction;
+/// that is precisely the generalization the paper's lightweight training
+/// claims.  Shared so the decode continuation is bit-identical to the
+/// prompt's derivation by construction.
+fn head_params(
+    cfg: &SynthConfig,
+    head_seed: u64,
+    content_rng: &mut Rng,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let d = cfg.head_dim;
+    let mut mean_rng = Rng::new(cfg.seed_means + 1000 * head_seed);
+    let mu_q: Vec<f32> = (0..d).map(|_| mean_rng.normal_f32() * cfg.mean_scale).collect();
+    let mu_k: Vec<f32> = if cfg.tied_means {
+        mu_q.clone()
+    } else {
+        (0..d).map(|_| mean_rng.normal_f32() * cfg.mean_scale).collect()
+    };
+    let mut u: Vec<f32> = (0..d).map(|_| content_rng.normal_f32()).collect();
+    let norm = (u.iter().map(|x| x * x).sum::<f32>()).sqrt();
+    u.iter_mut().for_each(|x| *x /= norm);
+    (mu_q, mu_k, u)
+}
+
+/// Step-wise continuation of a synthesized head — the decode-phase
+/// generator.  `gen_head` produces the whole prompt at once; a decode step
+/// needs exactly one more (q, k, v) row at the next absolute position, drawn
+/// from the *same* per-head mean vectors and heavy-hitter direction so the
+/// new queries keep attending the prompt's heavy columns and the slash
+/// structure extends past the prompt boundary.
+///
+/// `continue_head` must be given the same content RNG (freshly seeded, i.e.
+/// in the state `gen_head` received it) and `head_seed` that produced the
+/// head: it re-derives `mu_q`/`mu_k` from the mean stream and the direction
+/// `u` from the content stream exactly as `gen_head` does, then draws each
+/// subsequent row from the content stream.
+pub struct SynthStream {
+    cfg: SynthConfig,
+    mu_q: Vec<f32>,
+    mu_k: Vec<f32>,
+    u: Vec<f32>,
+    pos: usize,
+    rng: Rng,
+}
+
+impl SynthStream {
+    pub fn continue_head(
+        cfg: &SynthConfig,
+        mut content_rng: Rng,
+        head_seed: u64,
+        start_pos: usize,
+    ) -> SynthStream {
+        // Same `head_params` call gen_head opens with: given the same
+        // content RNG state and head_seed, mu/u match bit-for-bit.
+        let (mu_q, mu_k, u) = head_params(cfg, head_seed, &mut content_rng);
+        SynthStream { cfg: cfg.clone(), mu_q, mu_k, u, pos: start_pos, rng: content_rng }
+    }
+
+    /// Next absolute position this stream will generate.
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Generate the (q, k, v) rows (1 x head_dim each) for the next position
+    /// and advance the cursor.
+    pub fn next_row(&mut self) -> (Mat, Mat, Mat) {
+        let d = self.cfg.head_dim;
+        let mut q = Mat::zeros(1, d);
+        let mut k = Mat::zeros(1, d);
+        for j in 0..d {
+            *q.at_mut(0, j) = self.rng.normal_f32() * self.cfg.noise_scale + self.mu_q[j];
+            *k.at_mut(0, j) = self.rng.normal_f32() * self.cfg.noise_scale + self.mu_k[j];
+        }
+        rope_inplace(&mut q, self.cfg.rope_base, self.pos);
+        rope_inplace(&mut k, self.cfg.rope_base, self.pos);
+        // New queries carry the shared heavy-hitter alignment (post-RoPE,
+        // like gen_head); new keys get no heavy boost — generated tokens are
+        // ordinary content, not injected needles.
+        for j in 0..d {
+            *q.at_mut(0, j) += self.cfg.query_align * self.u[j];
+        }
+        let v = Mat::from_fn(1, d, |_, _| self.rng.normal_f32());
+        self.pos += 1;
+        (q, k, v)
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +268,46 @@ mod tests {
         let (_, s3) = vs_aggregate_qk(&h3.q, &h3.k);
         let cross = correlation(&s1, &s3);
         assert!(corr > cross, "intra {corr} vs inter {cross}");
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_positional() {
+        let cfg = SynthConfig::default();
+        let mut s1 = SynthStream::continue_head(&cfg, Rng::new(9), 2, 64);
+        let mut s2 = SynthStream::continue_head(&cfg, Rng::new(9), 2, 64);
+        assert_eq!(s1.pos(), 64);
+        let (q1, k1, v1) = s1.next_row();
+        let (q2, k2, v2) = s2.next_row();
+        assert_eq!((q1.rows, q1.cols), (1, cfg.head_dim));
+        assert_eq!(q1, q2);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+        assert_eq!(s1.pos(), 65);
+        // Successive rows differ (fresh noise + advancing RoPE position).
+        let (q3, _, _) = s1.next_row();
+        assert!(q1.max_abs_diff(&q3) > 1e-6);
+    }
+
+    #[test]
+    fn stream_queries_attend_prompt_heavy_columns() {
+        // The continuation shares the prompt's heavy-hitter direction, so a
+        // decode query must score the boosted prompt keys far above the
+        // ordinary ones.
+        let cfg = SynthConfig::default();
+        let n = 96;
+        let mut rng = Rng::new(11);
+        let h = gen_head(&mut rng, n, &cfg, 11 % 8);
+        let mut stream = SynthStream::continue_head(&cfg, Rng::new(11), 11 % 8, n);
+        let (q, _, _) = stream.next_row();
+        let score = |j: usize| crate::tensor::ops::dot(q.row(0), h.k.row(j));
+        let heavy_mean: f32 =
+            h.heavy.iter().map(|&j| score(j)).sum::<f32>() / h.heavy.len() as f32;
+        let plain: Vec<usize> = (0..n).filter(|j| !h.heavy.contains(j)).collect();
+        let plain_mean: f32 = plain.iter().map(|&j| score(j)).sum::<f32>() / plain.len() as f32;
+        assert!(
+            heavy_mean > plain_mean + 5.0,
+            "heavy {heavy_mean} vs plain {plain_mean}"
+        );
     }
 
     fn correlation(a: &[f32], b: &[f32]) -> f32 {

@@ -139,7 +139,13 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // NaN/Inf have no JSON representation; emitting them
+                    // verbatim would corrupt the wire format, so they
+                    // serialize as null (readers already default absent /
+                    // null numbers to 0).
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -411,6 +417,19 @@ mod tests {
     fn rejects_garbage() {
         for src in ["", "{", "[1,]", "{\"a\":}", "tru", "1.2.3", "[1] x"] {
             assert!(Json::parse(src).is_err(), "{src}");
+        }
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // A NaN that slips into a metrics snapshot must not corrupt the
+        // wire: the serialized line stays parseable JSON.
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let j = Json::obj(vec![("x", Json::Num(bad)), ("ok", Json::Bool(true))]);
+            let s = j.to_string();
+            let back = Json::parse(&s).unwrap();
+            assert_eq!(back.get("x"), Some(&Json::Null), "{s}");
+            assert_eq!(back.get("ok"), Some(&Json::Bool(true)));
         }
     }
 

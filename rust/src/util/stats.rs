@@ -1,4 +1,9 @@
-//! Summary statistics used by the bench harness and the metrics pipeline.
+//! Summary statistics used by the bench harness and the metrics pipeline,
+//! plus a fixed-capacity sampling reservoir for long-running servers.
+//!
+//! Everything here is wire-adjacent (metrics snapshots serialize these
+//! numbers), so empty inputs and non-finite samples must degrade to zeros
+//! instead of leaking NaN/Inf into JSON.
 
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
@@ -12,12 +17,14 @@ pub struct Summary {
     pub p99: f64,
 }
 
-/// Compute a full summary; input need not be sorted.
+/// Compute a full summary; input need not be sorted.  Non-finite samples
+/// are dropped (they would poison every aggregate and NaN breaks the sort),
+/// and an empty (or all-non-finite) input yields the all-zero default.
 pub fn summarize(xs: &[f64]) -> Summary {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return Summary::default();
     }
-    let mut v: Vec<f64> = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let n = v.len();
     let mean = v.iter().sum::<f64>() / n as f64;
@@ -34,9 +41,13 @@ pub fn summarize(xs: &[f64]) -> Summary {
     }
 }
 
-/// Linear-interpolated percentile of an ascending-sorted slice.
+/// Linear-interpolated percentile of an ascending-sorted slice.  Empty
+/// input yields 0.0 (a percentile of nothing is rendered as zero on the
+/// wire, never NaN).
 pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
-    assert!(!sorted.is_empty());
+    if sorted.is_empty() {
+        return 0.0;
+    }
     let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -50,6 +61,71 @@ pub fn mean(xs: &[f64]) -> f64 {
         0.0
     } else {
         xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Fixed-capacity uniform sampling reservoir (Vitter's Algorithm R): after
+/// `seen` pushes every sample had an equal `cap/seen` chance of surviving,
+/// so percentiles over `values()` estimate the full stream's percentiles
+/// while memory stays bounded — the latency reservoirs of a long-running
+/// server must not grow with request count.  Uses a deterministic
+/// xorshift64* stream (no RNG dependency, reproducible tests); non-finite
+/// samples are rejected at the door so NaN/Inf can never reach a snapshot.
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    xs: Vec<f64>,
+    state: u64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        Reservoir { cap, seen: 0, xs: Vec::new(), state: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.seen += 1;
+        if self.xs.len() < self.cap {
+            self.xs.push(x);
+            return;
+        }
+        // Replace a uniformly-random slot with probability cap/seen.
+        let j = self.next_u64() % self.seen;
+        if (j as usize) < self.cap {
+            self.xs[j as usize] = x;
+        }
+    }
+
+    /// The surviving samples (unsorted).
+    pub fn values(&self) -> &[f64] {
+        &self.xs
+    }
+
+    /// Total finite samples ever pushed (not just the survivors).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
     }
 }
 
@@ -78,5 +154,70 @@ mod tests {
     #[test]
     fn empty_is_default() {
         assert_eq!(summarize(&[]).n, 0);
+    }
+
+    #[test]
+    fn empty_percentile_is_zero_not_nan() {
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+        assert_eq!(percentile_sorted(&[], 0.95), 0.0);
+    }
+
+    #[test]
+    fn summarize_drops_non_finite() {
+        let s = summarize(&[1.0, f64::NAN, 2.0, f64::INFINITY, 3.0, f64::NEG_INFINITY]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!(s.max.is_finite() && s.min.is_finite());
+        // All-non-finite degrades to the zero default, never NaN.
+        let z = summarize(&[f64::NAN]);
+        assert_eq!(z.n, 0);
+        assert_eq!(z.mean, 0.0);
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_counts_stream() {
+        let mut r = Reservoir::new(64);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 64, "capacity is a hard bound");
+        assert_eq!(r.seen(), 10_000);
+        assert!(r.values().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn reservoir_keeps_everything_under_capacity() {
+        let mut r = Reservoir::new(16);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.values(), &(0..10).map(|i| i as f64).collect::<Vec<_>>()[..]);
+    }
+
+    #[test]
+    fn reservoir_rejects_non_finite() {
+        let mut r = Reservoir::new(4);
+        r.push(f64::NAN);
+        r.push(f64::INFINITY);
+        r.push(1.5);
+        assert_eq!(r.seen(), 1);
+        assert_eq!(r.values(), &[1.5]);
+    }
+
+    #[test]
+    fn reservoir_sample_is_roughly_uniform() {
+        // Mean of a uniform sample of 0..100_000 should be near the stream
+        // mean; a reservoir stuck on the prefix or suffix would be far off.
+        let mut r = Reservoir::new(512);
+        let n = 100_000;
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        let m = mean(r.values());
+        let stream_mean = (n - 1) as f64 / 2.0;
+        assert!(
+            (m - stream_mean).abs() < 0.1 * stream_mean,
+            "sample mean {m} vs stream mean {stream_mean}"
+        );
     }
 }

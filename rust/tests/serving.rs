@@ -97,14 +97,13 @@ fn short_request_overtakes_long_prefill() {
         .unwrap();
     // Block until the short one is done; the long one must still be
     // mid-sequence (it needs 16 rounds, the short one at most a few).
-    let short = short_rx.recv().unwrap();
+    let short = short_rx.wait().unwrap();
     assert!(short.ok, "{:?}", short.error);
-    assert_eq!(
-        long_rx.try_recv().err(),
-        Some(std::sync::mpsc::TryRecvError::Empty),
+    assert!(
+        long_rx.try_done().is_none(),
         "long prefill should still be in flight when the short one completes"
     );
-    let long = long_rx.recv().unwrap();
+    let long = long_rx.wait().unwrap();
     assert!(long.ok, "{:?}", long.error);
     assert_eq!(long.chunks, 16);
     assert_eq!(short.chunks, 2);
@@ -146,7 +145,7 @@ fn property_every_submitted_request_is_answered_once() {
             }
         }
         rxs.into_iter().all(|(id, rx)| {
-            let resp = rx.recv().unwrap();
+            let resp = rx.wait().unwrap();
             resp.ok && resp.id == id
         })
     });
