@@ -4,7 +4,7 @@
 //! needle-retrieval quality check per request budget.
 //!
 //! Uses the PJRT backend when `make artifacts` has run; falls back to the
-//! native backend otherwise.
+//! native backend otherwise (`BackendKind::Auto` — the builder decides).
 //!
 //! Run: `cargo run --release --example needle_serving`
 
@@ -13,33 +13,21 @@ use std::sync::Arc;
 use vsprefill::baselines::SparsePredictor;
 use vsprefill::coordinator::{
     server::{Client, Server},
-    Coordinator, CoordinatorConfig, PrefillEngine,
+    CoordinatorConfig,
 };
 use vsprefill::evalsuite::{accuracy, task_head, ProbeCache, TaskInstance};
+use vsprefill::serve::{BackendKind, EngineBuilder};
 use vsprefill::sparse_attn::VsPrefill;
 use vsprefill::synth::qwen_sim;
 
-#[cfg(feature = "pjrt")]
-fn build_engine(cfg: &CoordinatorConfig) -> anyhow::Result<(PrefillEngine, &'static str)> {
-    if vsprefill::runtime::ArtifactBundle::available() {
-        let rt = vsprefill::runtime::Engine::load_default()?;
-        Ok((PrefillEngine::pjrt(cfg.engine.clone(), rt)?, "pjrt"))
-    } else {
-        Ok((PrefillEngine::native_quick(cfg.engine.clone()), "native"))
-    }
-}
-
-#[cfg(not(feature = "pjrt"))]
-fn build_engine(cfg: &CoordinatorConfig) -> anyhow::Result<(PrefillEngine, &'static str)> {
-    Ok((PrefillEngine::native_quick(cfg.engine.clone()), "native"))
-}
-
 fn main() -> anyhow::Result<()> {
     let cfg = CoordinatorConfig { max_wait_ms: 2, ..Default::default() };
-    let (engine, backend) = build_engine(&cfg)?;
-    println!("== needle-retrieval serving demo (backend: {backend}) ==\n");
+    // `Auto` picks the PJRT backend when compiled in and artifacts exist,
+    // else the native backend — same builder call either way.
+    let coordinator =
+        Arc::new(EngineBuilder::new().config(cfg).backend(BackendKind::Auto).build()?);
+    println!("== needle-retrieval serving demo ==\n");
 
-    let coordinator = Arc::new(Coordinator::start(cfg, engine));
     let server = Server::start(coordinator.clone(), 0)?;
     println!("serving on {}", server.addr);
 

@@ -5,6 +5,7 @@
 //!   3. pick budgets with the adaptive cumulative threshold (Eq. 18-19)
 //!   4. execute fused vertical-slash sparse attention
 //!   5. compare against exact attention: recall, density, max error
+//!   6. serve one request through the real stack (`serve::EngineBuilder`)
 //!
 //! Run: `cargo run --release --example quickstart`
 
@@ -59,5 +60,30 @@ fn main() {
         100.0 * idx.covered_cells(n) as f64 / (n * (n + 1) / 2) as f64
     );
     assert!(recall > 0.8, "quickstart sanity: recall should be high");
-    println!("\nOK — see examples/needle_serving.rs for the serving stack.");
+
+    // 6. the same pipeline through the serving stack: every embedder-facing
+    //    entry point is one EngineBuilder call away.
+    println!("\nserving one request through EngineBuilder (native backend) ...");
+    let coordinator = vsprefill::serve::EngineBuilder::new()
+        .indexer(vsp.indexer.clone())
+        .build()
+        .expect("default config is valid");
+    let mut req = vsprefill::coordinator::PrefillRequest::synthetic(
+        1,
+        n,
+        7,
+        vsprefill::coordinator::AttentionMode::Sparse,
+    );
+    req.max_new_tokens = 4;
+    let resp = coordinator.prefill(req).expect("admission");
+    assert!(resp.ok, "{:?}", resp.error);
+    println!(
+        "  served: bucket {}  density {:.3}  ttft {:.1}ms  tokens {:?}",
+        resp.bucket,
+        resp.density,
+        resp.ttft_us as f64 / 1e3,
+        resp.tokens
+    );
+
+    println!("\nOK — see examples/needle_serving.rs for the full serving stack.");
 }

@@ -191,10 +191,8 @@ fn hw_threads() -> usize {
 /// a mixed short/long workload measuring the short requests' latency with
 /// and without chunk interleaving.  Writes BENCH_chunked.json.
 fn chunked_sweep() {
-    use vsprefill::coordinator::{
-        AttentionMode, Coordinator, CoordinatorConfig, EngineConfig, PrefillEngine,
-        PrefillRequest,
-    };
+    use vsprefill::coordinator::{AttentionMode, CoordinatorConfig, EngineConfig, PrefillRequest};
+    use vsprefill::serve::EngineBuilder;
 
     let mk_cfg = |chunk: usize, threads: usize| CoordinatorConfig {
         engine: EngineConfig {
@@ -216,8 +214,7 @@ fn chunked_sweep() {
         // chunk == n is the monolithic baseline (single chunk).
         for &chunk in &[256usize, 512, 1024, n] {
             let cfg = mk_cfg(chunk, 0);
-            let engine = PrefillEngine::native_quick(cfg.engine.clone());
-            let c = Coordinator::start(cfg, engine);
+            let c = EngineBuilder::new().config(cfg).build().unwrap();
             let resp = c
                 .prefill(PrefillRequest::synthetic(1, n, 7, AttentionMode::Sparse))
                 .unwrap();
@@ -256,8 +253,7 @@ fn chunked_sweep() {
         // the monolithic round would hide head-of-line blocking by running
         // the long and short requests on different workers.
         let cfg = mk_cfg(chunk, 1);
-        let engine = PrefillEngine::native_quick(cfg.engine.clone());
-        let c = Coordinator::start(cfg, engine);
+        let c = EngineBuilder::new().config(cfg).build().unwrap();
         let t0 = Instant::now();
         let long_rx = c
             .submit(PrefillRequest::synthetic(0, 4096, 7, AttentionMode::Sparse))

@@ -1,0 +1,725 @@
+//! Pluggable execution backends behind one object-safe trait.
+//!
+//! The coordinator used to expose three parallel lifecycles (monolithic
+//! `process`, chunked `begin_chunked`/`process_chunk`, decode
+//! `begin_decode`/`decode_round`) glued together by `supports_*`
+//! capability probes and `#[cfg(feature = "pjrt")]` dispatch arms.  This
+//! module replaces all of that with a single typed lifecycle:
+//!
+//! ```text
+//! begin(request)             -> RunState            (Prefilling)
+//! prefill_chunk(&mut run)    -> Progress | EnterDecode | Done(response)
+//! decode_step(&mut [run])    -> Token | Done | Failed   (per run)
+//! ```
+//!
+//! plus a [`Capabilities`] struct that replaces the ad-hoc probes.  The
+//! scheduler, server, benches and examples talk only to `dyn ExecBackend`;
+//! adding a backend means adding one file here and one arm to
+//! [`crate::serve::EngineBuilder`].
+//!
+//! [`RunState`] is a typed state machine (`Prefilling -> Decoding ->
+//! Finished`).  Its phase and transitions are private to this module tree,
+//! so invalid transitions — e.g. decoding a request that never finished
+//! prefill — are unrepresentable outside it: the only way a `RunState`
+//! enters the decode phase is `prefill_chunk` returning
+//! [`ChunkStep::EnterDecode`].
+//!
+//! Backends:
+//!   * [`native`]    — fused tiled kernels over the paged KV store, the
+//!     production CPU path (chunked prefill + batched decode, both fanned
+//!     across the worker pool).
+//!   * [`reference`] — the seed's row-serial executor behind the same
+//!     trait: a slow, obviously-correct conformance oracle (serial
+//!     scheduling, exact per-row softmax).
+//!   * `pjrt`        — whole-bucket AOT graphs through the PJRT runtime
+//!     (`pjrt` cargo feature); schedules as single-chunk monolithic runs.
+
+use std::any::Any;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::attention::decode::flash_decode_into;
+use crate::indexer::train::{distill, TrainConfig};
+use crate::indexer::{IncrementalScores, Indexer};
+use crate::sparse::VsIndices;
+use crate::sparse_attn::exec::{decode_columns, sparse_decode_vs_into};
+use crate::sparse_attn::VsPrefill;
+use crate::synth::{gen_head, SynthConfig, SynthHead, SynthStream};
+use crate::tensor::paged::PagedKv;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::engine::{AttentionMode, EngineConfig};
+use super::kv_cache::PagedKvStore;
+use super::request::{Payload, PrefillRequest, PrefillResponse, TokenFrame};
+
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod reference;
+
+/// What a backend can do — replaces the old `supports_chunked` /
+/// `supports_parallel` probes and the implicit "PJRT cannot decode" rule.
+///
+/// `parallel` (the scheduler sharing `&self` across worker threads) is a
+/// *memory-safety* promise, not a plain flag, so it cannot be set from
+/// safe code: construct with [`Capabilities::new`] (serial) and opt in
+/// through the `unsafe` [`Capabilities::with_parallel_dispatch`].
+#[derive(Clone, Copy, Debug)]
+pub struct Capabilities {
+    /// The backend executes prefill chunk-by-chunk against the paged KV
+    /// store.  Non-chunked backends complete each run in one
+    /// `prefill_chunk` call without touching the store — the scheduler
+    /// admits their requests without a KV reservation.
+    pub chunked: bool,
+    /// The backend can run the decode phase (token generation).  Requests
+    /// to a non-decoding backend have `max_new_tokens` zeroed at admission.
+    pub decode: bool,
+    /// Largest admissible bucket (requests padding beyond it are rejected
+    /// at admission).
+    pub max_bucket: usize,
+    /// Set only through [`Capabilities::with_parallel_dispatch`].
+    parallel: bool,
+}
+
+impl Capabilities {
+    /// Serial capabilities: the scheduler drives the backend one call at a
+    /// time on its executor thread (always sound).
+    pub fn new(chunked: bool, decode: bool, max_bucket: usize) -> Capabilities {
+        Capabilities { chunked, decode, max_bucket, parallel: false }
+    }
+
+    /// Opt in to parallel chunk dispatch: the scheduler will share `&self`
+    /// with its scoped worker threads and call `prefill_chunk`
+    /// concurrently.
+    ///
+    /// # Safety
+    ///
+    /// The implementing backend must be soundly shareable across threads
+    /// through `&self`: plain owned data with no un-synchronized interior
+    /// mutability and no thread-affine handles — i.e. it would be correct
+    /// to `impl Sync` for it.  The scheduler's fan-out relies on this
+    /// promise for memory safety (it wraps the trait object in an
+    /// `unsafe impl Sync` shim gated on this flag).
+    pub unsafe fn with_parallel_dispatch(mut self) -> Capabilities {
+        self.parallel = true;
+        self
+    }
+
+    /// Whether the scheduler may share `&self` across worker threads.
+    pub fn parallel(&self) -> bool {
+        self.parallel
+    }
+}
+
+/// Outcome of one [`ExecBackend::prefill_chunk`] call.
+pub enum ChunkStep {
+    /// More prefill chunks remain; the run goes back in the ready queue.
+    Progress,
+    /// Prefill finished and the run transitioned into the decode phase
+    /// (its KV reservation stays live).
+    EnterDecode,
+    /// The run finished — successfully or with `error` set.  The caller
+    /// frees the KV reservation and replies.
+    Done(PrefillResponse),
+}
+
+/// Outcome of one decode step for one run.
+pub enum DecodeStep {
+    /// A token was generated; more remain.
+    Token(TokenFrame),
+    /// The final token was generated (the budget was reached or the
+    /// request's stop token fired); the caller frees the KV reservation
+    /// and replies with the finished response.
+    Done(TokenFrame, PrefillResponse),
+    /// The step failed (store error); the caller frees and replies.
+    Failed(PrefillResponse),
+}
+
+/// One execution backend: everything the scheduler needs to run the full
+/// request lifecycle, behind an object-safe trait.
+///
+/// `Send` is a supertrait: the coordinator moves the backend onto its
+/// executor thread.  Backends wrapping thread-affine runtimes (PJRT's
+/// `Rc`s and raw executable pointers) carry their own scoped
+/// `unsafe impl Send` with the move-wholesale argument — see
+/// `backend/pjrt.rs`.
+pub trait ExecBackend: Send {
+    /// Short stable name (config / CLI / logs).
+    fn name(&self) -> &'static str;
+
+    /// Static capabilities; the scheduler keys its dispatch on these
+    /// instead of downcasting or probing.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Buckets served, ascending.
+    fn buckets(&self) -> &[usize];
+
+    /// Smallest bucket that fits a sequence of `n` rows.
+    fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.buckets().iter().copied().filter(|&b| b >= n).min()
+    }
+
+    /// Start a run: the caller has resolved `bucket` (via
+    /// [`bucket_for`](Self::bucket_for)) and reserved
+    /// `bucket + max_new_tokens` rows in the paged store.  `default_chunk`
+    /// is the coordinator's chunk size; the request's own `chunk` field
+    /// overrides it.
+    fn begin(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        rng: &mut Rng,
+    ) -> RunState;
+
+    /// Execute the next prefill chunk of `run` against the paged store.
+    fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep;
+
+    /// One batched decode step: every run in `runs` generates its next
+    /// token.  Returns one `DecodeStep` per run, index-aligned.  Only
+    /// called with runs in the decode phase (i.e. after `EnterDecode`).
+    fn decode_step(&self, runs: &mut [RunState], _store: &PagedKvStore) -> Vec<DecodeStep> {
+        runs.iter_mut()
+            .map(|r| {
+                r.resp.error = Some(format!("backend '{}' does not support decode", self.name()));
+                DecodeStep::Failed(r.fail_decode())
+            })
+            .collect()
+    }
+
+    /// Monolithic single-request execution — the parity baseline the
+    /// conformance suite compares the chunked lifecycle against, and the
+    /// substrate of non-chunked backends.  Does not touch the paged store.
+    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse;
+}
+
+// ---------------------------------------------------------------------------
+// RunState: the typed request lifecycle.
+// ---------------------------------------------------------------------------
+
+/// Backend-private per-run scratch (synthesized head, streams, incremental
+/// scores, RNGs ...) carried through the lifecycle as a type-erased box.
+type Scratch = Box<dyn Any + Send>;
+
+/// One in-flight run: request, accumulating response, and the private
+/// lifecycle phase.  Constructed only by [`ExecBackend::begin`]; mutated
+/// only through backend calls — the scheduler sees read-only accessors.
+pub struct RunState {
+    req: PrefillRequest,
+    bucket: usize,
+    chunk: usize,
+    resp: PrefillResponse,
+    phase: Phase,
+}
+
+enum Phase {
+    Prefilling { next: usize, scratch: Scratch },
+    Decoding { generated: usize, last_token_at: Instant, scratch: Scratch },
+    Finished,
+}
+
+/// Disjoint mutable access to the pieces a backend needs while prefilling.
+struct PrefillAccess<'a> {
+    req: &'a PrefillRequest,
+    bucket: usize,
+    chunk: usize,
+    /// Next absolute row to process (== rows appended to the store so far).
+    next: usize,
+    scratch: &'a mut (dyn Any + Send),
+    resp: &'a mut PrefillResponse,
+}
+
+/// Disjoint mutable access for one decode step.
+struct DecodeAccess<'a> {
+    req: &'a PrefillRequest,
+    scratch: &'a mut (dyn Any + Send),
+    resp: &'a mut PrefillResponse,
+}
+
+impl RunState {
+    /// Enter the lifecycle (phase `Prefilling`): stamps queue time and
+    /// resolves the effective chunk size.
+    fn begin(
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        scratch: Scratch,
+    ) -> RunState {
+        let queue_us = req.submitted_at.elapsed().as_micros() as u64;
+        let resp = PrefillResponse { id: req.id, queue_us, bucket, ..Default::default() };
+        let chunk = req.chunk.unwrap_or(default_chunk).clamp(1, bucket.max(1));
+        RunState { req, bucket, chunk, resp, phase: Phase::Prefilling { next: 0, scratch } }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.req.id
+    }
+
+    pub fn request(&self) -> &PrefillRequest {
+        &self.req
+    }
+
+    /// Bucket the request was padded to (its prompt-row reservation; the
+    /// full reservation additionally covers `max_new_tokens` decode rows).
+    pub fn bucket(&self) -> usize {
+        self.bucket
+    }
+
+    /// Effective rows per prefill chunk.
+    pub fn chunk_rows(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn is_prefilling(&self) -> bool {
+        matches!(self.phase, Phase::Prefilling { .. })
+    }
+
+    pub fn is_decoding(&self) -> bool {
+        matches!(self.phase, Phase::Decoding { .. })
+    }
+
+    pub fn is_finished(&self) -> bool {
+        matches!(self.phase, Phase::Finished)
+    }
+
+    /// Tokens generated so far.
+    pub fn generated(&self) -> usize {
+        match &self.phase {
+            Phase::Decoding { generated, .. } => *generated,
+            _ => self.resp.tokens.len(),
+        }
+    }
+
+    fn prefill_mut(&mut self) -> Option<PrefillAccess<'_>> {
+        match &mut self.phase {
+            Phase::Prefilling { next, scratch } => Some(PrefillAccess {
+                req: &self.req,
+                bucket: self.bucket,
+                chunk: self.chunk,
+                next: *next,
+                scratch: &mut **scratch,
+                resp: &mut self.resp,
+            }),
+            _ => None,
+        }
+    }
+
+    fn decode_mut(&mut self) -> Option<DecodeAccess<'_>> {
+        match &mut self.phase {
+            Phase::Decoding { scratch, .. } => {
+                Some(DecodeAccess { req: &self.req, scratch: &mut **scratch, resp: &mut self.resp })
+            }
+            _ => None,
+        }
+    }
+
+    /// Record one executed prefill chunk (timings, TTFT) and advance the
+    /// cursor to `hi`.
+    fn note_chunk(&mut self, hi: usize, dt_us: u64) {
+        self.resp.chunk_us.push(dt_us);
+        self.resp.prefill_us += dt_us;
+        self.resp.chunks += 1;
+        if self.resp.chunks == 1 {
+            self.resp.ttft_us = self.req.submitted_at.elapsed().as_micros() as u64;
+        }
+        if let Phase::Prefilling { next, .. } = &mut self.phase {
+            *next = hi;
+        }
+    }
+
+    /// Terminal transition on error: `Finished`, response carries `error`.
+    fn fail_now(&mut self, msg: String) -> ChunkStep {
+        if self.resp.error.is_none() {
+            self.resp.error = Some(msg);
+        }
+        self.phase = Phase::Finished;
+        ChunkStep::Done(std::mem::take(&mut self.resp))
+    }
+
+    /// Terminal transition with an externally-built response (non-chunked
+    /// backends executing monolithically — currently only the PJRT
+    /// backend).
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    fn finish_with(&mut self, resp: PrefillResponse) -> ChunkStep {
+        self.phase = Phase::Finished;
+        ChunkStep::Done(resp)
+    }
+
+    /// Prefill completed: either enter the decode phase (tokens requested
+    /// and supported; `into_decode` converts the prefill scratch into
+    /// decode scratch) or finish.
+    fn complete_prefill(
+        &mut self,
+        decode_supported: bool,
+        into_decode: impl FnOnce(Scratch) -> Scratch,
+    ) -> ChunkStep {
+        let Phase::Prefilling { scratch, .. } = std::mem::replace(&mut self.phase, Phase::Finished)
+        else {
+            return self.fail_now("complete_prefill on a non-prefilling run".to_string());
+        };
+        self.resp.ok = true;
+        if decode_supported && self.req.max_new_tokens > 0 {
+            self.phase = Phase::Decoding {
+                generated: 0,
+                last_token_at: Instant::now(),
+                scratch: into_decode(scratch),
+            };
+            ChunkStep::EnterDecode
+        } else {
+            ChunkStep::Done(std::mem::take(&mut self.resp))
+        }
+    }
+
+    /// Record one generated token: appends to the response, advances the
+    /// ITL clock, and returns the frame to stream.
+    fn emit_token(&mut self, token: u32, now: Instant) -> TokenFrame {
+        let Phase::Decoding { generated, last_token_at, .. } = &mut self.phase else {
+            unreachable!("emit_token outside the decode phase")
+        };
+        let itl = now.duration_since(*last_token_at).as_micros() as u64;
+        *last_token_at = now;
+        let frame = TokenFrame {
+            id: self.req.id,
+            index: *generated,
+            pos: self.bucket + *generated,
+            token,
+            itl_us: itl,
+        };
+        *generated += 1;
+        self.resp.tokens.push(token);
+        self.resp.decode_us.push(itl);
+        frame
+    }
+
+    /// Terminal transition out of decode (budget reached or stop token).
+    fn finish_decode(&mut self) -> PrefillResponse {
+        self.phase = Phase::Finished;
+        let mut resp = std::mem::take(&mut self.resp);
+        resp.ok = resp.error.is_none();
+        resp
+    }
+
+    /// Terminal transition out of a failed decode step.
+    fn fail_decode(&mut self) -> PrefillResponse {
+        if self.resp.error.is_none() {
+            self.resp.error = Some("decode step failed".to_string());
+        }
+        self.phase = Phase::Finished;
+        let mut resp = std::mem::take(&mut self.resp);
+        resp.ok = false;
+        resp
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared substrate for the synthetic-head backends (native + reference).
+// ---------------------------------------------------------------------------
+
+/// Prefill-phase scratch of the synthetic-head backends.
+struct SynthPrefill {
+    head: SynthHead,
+    stream: SynthStream,
+    inc: IncrementalScores,
+}
+
+/// Decode-phase scratch (the head is dropped at the transition; the stream
+/// and incremental scores carry over).
+struct SynthDecode {
+    stream: SynthStream,
+    inc: IncrementalScores,
+}
+
+fn synth_into_decode(scratch: Scratch) -> Scratch {
+    let sp = scratch.downcast::<SynthPrefill>().expect("synth prefill scratch");
+    Box::new(SynthDecode { stream: sp.stream, inc: sp.inc })
+}
+
+/// A quickly-distilled indexer, cached per process (distillation dominates
+/// startup otherwise).  Shared by the native and reference backends so
+/// conformance comparisons run the same index model.
+fn quick_indexer() -> Indexer {
+    static CACHED: OnceLock<Indexer> = OnceLock::new();
+    CACHED
+        .get_or_init(|| {
+            let tc = TrainConfig {
+                steps: 150,
+                batch: 3,
+                seq_len: 128,
+                hidden_base: 32,
+                synth: SynthConfig::default(),
+                ..Default::default()
+            };
+            distill(&tc).0
+        })
+        .clone()
+}
+
+/// The VSPrefill selection pipeline with the engine's tau applied.
+fn selection_pipeline(indexer: Indexer, cfg: &EngineConfig) -> VsPrefill {
+    let mut vsp = VsPrefill::new(indexer);
+    vsp.tau = cfg.budget_tau;
+    vsp
+}
+
+/// Synthesize the prompt head plus the decode-phase continuation stream.
+/// The stream is handed the content RNG in the same freshly seeded state
+/// `gen_head` receives it, so it re-derives the head's mean vectors and
+/// heavy-hitter direction exactly — decode rows come from the same
+/// distribution family as the prompt.
+fn synth_parts(
+    synth: &SynthConfig,
+    req: &PrefillRequest,
+    bucket: usize,
+    rng: &mut Rng,
+) -> (SynthHead, SynthStream) {
+    match &req.payload {
+        Payload::Synthetic { seed, .. } => {
+            let mut r = Rng::new(*seed);
+            let head = gen_head(&mut r, bucket, synth, seed % 8);
+            let stream = SynthStream::continue_head(synth, Rng::new(*seed), seed % 8, bucket);
+            (head, stream)
+        }
+        Payload::Tokens(toks) => {
+            // Derive a deterministic head from the token content so the
+            // native path is usable without the model artifact.
+            let mut h = 0u64;
+            for &t in toks {
+                h = h.wrapping_mul(31).wrapping_add(t as u64);
+            }
+            let r = rng.fork(h);
+            let head = gen_head(&mut r.clone(), bucket, synth, h % 8);
+            let stream = SynthStream::continue_head(synth, r, h % 8, bucket);
+            (head, stream)
+        }
+    }
+}
+
+/// Shared `begin` of the synthetic-head backends.
+fn synth_begin(
+    synth: &SynthConfig,
+    req: PrefillRequest,
+    bucket: usize,
+    default_chunk: usize,
+    rng: &mut Rng,
+) -> RunState {
+    let mut run_rng = rng.fork(req.id);
+    let (head, stream) = synth_parts(synth, &req, bucket, &mut run_rng);
+    RunState::begin(
+        req,
+        bucket,
+        default_chunk,
+        Box::new(SynthPrefill { head, stream, inc: IncrementalScores::new() }),
+    )
+}
+
+/// Shared chunked-prefill step of the synthetic-head backends: append the
+/// chunk's K/V rows to the paged store, update the incremental index
+/// scores, select indices, and delegate the attention itself to `exec`
+/// (`idx` is `None` for dense execution).  On the final chunk the
+/// incremental scores equal the monolithic `predict_kv` exactly, so the
+/// reported density matches monolithic execution bit-for-bit.
+fn synth_prefill_chunk(
+    vsp: &VsPrefill,
+    decode_supported: bool,
+    run: &mut RunState,
+    store: &PagedKvStore,
+    exec: &dyn Fn(&Mat, usize, &PagedKv<'_>, Option<&VsIndices>) -> Mat,
+) -> ChunkStep {
+    if !run.is_prefilling() {
+        return run.fail_now("prefill_chunk on a non-prefilling run".to_string());
+    }
+    let id = run.id();
+    let t0 = Instant::now();
+    enum Outcome {
+        Ran { hi: usize, done: bool },
+        Err(String),
+    }
+    let outcome = {
+        let acc = run.prefill_mut().expect("phase checked above");
+        let sp = acc.scratch.downcast_mut::<SynthPrefill>().expect("synth prefill scratch");
+        let lo = acc.next;
+        let hi = (lo + acc.chunk).min(acc.bucket);
+        let kc = sp.head.k.sub_rows(lo, hi);
+        let vc = sp.head.v.sub_rows(lo, hi);
+        match store.append(id, &kc, &vc) {
+            Err(e) => Outcome::Err(format!("{e:#}")),
+            Ok(()) => match store.view(id) {
+                None => Outcome::Err(format!("request {id} lost its kv reservation")),
+                Some(view) => {
+                    let qc = sp.head.q.sub_rows(lo, hi);
+                    let out = match acc.req.mode {
+                        AttentionMode::Dense => {
+                            acc.resp.density = 1.0;
+                            exec(&qc, lo, &view, None)
+                        }
+                        AttentionMode::Sparse => {
+                            let ti = Instant::now();
+                            vsp.indexer.score_chunk(&mut sp.inc, &kc, &vc);
+                            let (a_v, a_s) = sp.inc.finalize();
+                            let idx = vsp.select_from_scores(&a_v, &a_s, hi, acc.req.budget);
+                            acc.resp.index_us += ti.elapsed().as_micros() as u64;
+                            acc.resp.density = idx.density(hi);
+                            exec(&qc, lo, &view, Some(&idx))
+                        }
+                    };
+                    if lo == 0 {
+                        acc.resp.output_digest = digest(&out);
+                    }
+                    Outcome::Ran { hi, done: hi >= acc.bucket }
+                }
+            },
+        }
+    };
+    // The PrefillAccess borrow ends with the block; transitions re-borrow.
+    match outcome {
+        Outcome::Err(msg) => run.fail_now(msg),
+        Outcome::Ran { hi, done } => {
+            run.note_chunk(hi, t0.elapsed().as_micros() as u64);
+            if done {
+                run.complete_prefill(decode_supported, synth_into_decode)
+            } else {
+                ChunkStep::Progress
+            }
+        }
+    }
+}
+
+/// Per-run output slot of one decode step.
+struct DecodeSlot {
+    out: Vec<f32>,
+    ok: bool,
+}
+
+impl DecodeSlot {
+    fn new(d: usize) -> DecodeSlot {
+        DecodeSlot { out: vec![0.0; d], ok: true }
+    }
+}
+
+/// The per-run half of a decode step: synthesize the next (q, k, v) row,
+/// append K/V to the run's paged reservation and — for sparse requests —
+/// refresh the incremental index scores and select this step's columns
+/// (top-k verticals + local window), then run single-query attention into
+/// `slot.out`.  Runs are independent, so callers may fan this across the
+/// worker pool (the native backend does; the reference backend stays
+/// serial).
+fn decode_one(
+    vsp: &VsPrefill,
+    cfg: &EngineConfig,
+    store: &PagedKvStore,
+    run: &mut RunState,
+    slot: &mut DecodeSlot,
+) {
+    let id = run.id();
+    let block_k = cfg.block_q.max(1);
+    let Some(acc) = run.decode_mut() else {
+        slot.ok = false;
+        return;
+    };
+    let sc = acc.scratch.downcast_mut::<SynthDecode>().expect("synth decode scratch");
+    let (q, k, v) = sc.stream.next_row();
+    if let Err(e) = store.append(id, &k, &v) {
+        acc.resp.error = Some(format!("{e:#}"));
+        slot.ok = false;
+        return;
+    }
+    let Some(view) = store.view(id) else {
+        acc.resp.error = Some(format!("request {id} lost its kv reservation mid-decode"));
+        slot.ok = false;
+        return;
+    };
+    match acc.req.mode {
+        AttentionMode::Dense => flash_decode_into(q.row(0), &view, block_k, &mut slot.out),
+        AttentionMode::Sparse => {
+            let ti = Instant::now();
+            vsp.indexer.score_chunk(&mut sc.inc, &k, &v);
+            let a_v = sc.inc.finalize_vertical();
+            let cols = decode_columns(&a_v, view.len, cfg.decode_top_k, cfg.decode_window);
+            acc.resp.index_us += ti.elapsed().as_micros() as u64;
+            sparse_decode_vs_into(q.row(0), &view, &cols, &mut slot.out);
+        }
+    }
+}
+
+/// The serial tail of a decode step: turn the attended outputs into token
+/// frames and lifecycle transitions, one `DecodeStep` per run.  Requests
+/// whose token matches their `stop_token` finish early; the unused tail
+/// blocks of their KV reservation are reclaimed immediately (the rest is
+/// freed by the scheduler on `Done`).
+fn finish_decode_round(
+    runs: &mut [RunState],
+    slots: Vec<DecodeSlot>,
+    store: &PagedKvStore,
+) -> Vec<DecodeStep> {
+    let now = Instant::now();
+    runs.iter_mut()
+        .zip(slots)
+        .map(|(run, slot)| {
+            if !slot.ok {
+                return DecodeStep::Failed(run.fail_decode());
+            }
+            let token = token_from(&slot.out);
+            let frame = run.emit_token(token, now);
+            let stopped = run.request().stop_token == Some(token);
+            if stopped || run.generated() >= run.request().max_new_tokens {
+                if run.generated() < run.request().max_new_tokens {
+                    // Early stop: the rows past bucket + generated can never
+                    // be written now — return whole unused tail blocks to
+                    // the pool before the final free (which may lag while
+                    // the response is still streaming).
+                    store.shrink_to(run.id(), run.bucket() + run.generated());
+                }
+                DecodeStep::Done(frame, run.finish_decode())
+            } else {
+                DecodeStep::Token(frame)
+            }
+        })
+        .collect()
+}
+
+/// The monolithic-execution envelope shared by every backend's `process`:
+/// queue time, bucket resolution, whole-prefill timing, single-chunk TTFT
+/// accounting.  `body` runs the backend's actual pipeline.
+fn run_monolithic(
+    req: &PrefillRequest,
+    bucket: Option<usize>,
+    body: impl FnOnce(usize, &mut PrefillResponse) -> anyhow::Result<()>,
+) -> PrefillResponse {
+    let queue_us = req.submitted_at.elapsed().as_micros() as u64;
+    let mut resp = PrefillResponse { id: req.id, queue_us, ..Default::default() };
+    let Some(bucket) = bucket else {
+        resp.error = Some(format!("seq_len {} exceeds largest bucket", req.seq_len()));
+        return resp;
+    };
+    resp.bucket = bucket;
+    let t0 = Instant::now();
+    let result = body(bucket, &mut resp);
+    resp.prefill_us = t0.elapsed().as_micros() as u64;
+    // Monolithic execution is one chunk: TTFT is the full prefill.
+    resp.chunks = 1;
+    resp.chunk_us = vec![resp.prefill_us];
+    resp.ttft_us = resp.queue_us + resp.prefill_us;
+    match result {
+        Ok(()) => resp.ok = true,
+        Err(e) => resp.error = Some(format!("{e:#}")),
+    }
+    resp
+}
+
+/// Deterministic synthetic token readout: FNV-1a over the attended output's
+/// bits, folded into a 32k vocabulary.  Stands in for the LM head + sampler
+/// the toy model does not have — what matters for the serving stack is that
+/// tokens are cheap, deterministic, and depend on the attention output.
+fn token_from(out: &[f32]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &x in out {
+        h = (h ^ x.to_bits()).wrapping_mul(16_777_619);
+    }
+    h % 32_000
+}
+
+/// Output checksum (first 4 output values) for cross-backend parity.
+fn digest(m: &Mat) -> Vec<f32> {
+    m.data.iter().take(4).cloned().collect()
+}

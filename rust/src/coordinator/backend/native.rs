@@ -1,0 +1,171 @@
+//! The native backend: fused tiled kernels over the paged KV store.
+//!
+//! Pipeline per request (§4.3): synthesized head (Appendix-A.1 generator)
+//! -> VSIndexer scores -> cumulative-threshold budgets -> top-k indices
+//! (+ merge in the executor) -> sparse attention -> output digest.  Chunked
+//! prefill runs the paged executors (`flash_attention_paged` /
+//! `sparse_attention_vs_paged`); decode runs the batched single-query
+//! kernels, with each run's generate + append + index-score refresh — the
+//! O(n) vertical softmax that used to serialize the decode round — fanned
+//! across the worker pool alongside the attention itself.
+
+use crate::attention::flash::{flash_attention, flash_attention_paged};
+use crate::indexer::Indexer;
+use crate::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_paged};
+use crate::sparse_attn::VsPrefill;
+use crate::util::parallel::par_drain;
+use crate::util::rng::Rng;
+
+use super::{
+    decode_one, digest, finish_decode_round, quick_indexer, run_monolithic, selection_pipeline,
+    synth_begin, synth_parts, synth_prefill_chunk, AttentionMode, Capabilities, ChunkStep,
+    DecodeSlot, DecodeStep, EngineConfig, ExecBackend, PagedKvStore, PrefillRequest,
+    PrefillResponse, RunState,
+};
+
+pub struct NativeBackend {
+    pub cfg: EngineConfig,
+    vsp: VsPrefill,
+}
+
+impl NativeBackend {
+    /// Native backend with a quickly-distilled indexer (tests, ablations);
+    /// the indexer is distilled once per process and cached.
+    pub fn quick(cfg: EngineConfig) -> NativeBackend {
+        NativeBackend::with_indexer(cfg, quick_indexer())
+    }
+
+    /// Native backend with a caller-provided indexer.
+    pub fn with_indexer(cfg: EngineConfig, indexer: Indexer) -> NativeBackend {
+        let vsp = selection_pipeline(indexer, &cfg);
+        NativeBackend { cfg, vsp }
+    }
+}
+
+impl ExecBackend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        let caps =
+            Capabilities::new(true, true, self.cfg.buckets.iter().copied().max().unwrap_or(0));
+        // SAFETY: `NativeBackend` is plain owned data (engine config +
+        // indexer weights) with no interior mutability or thread-affine
+        // handles — sharing `&self` across the scheduler's worker threads
+        // is sound.
+        unsafe { caps.with_parallel_dispatch() }
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.cfg.buckets
+    }
+
+    fn begin(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        rng: &mut Rng,
+    ) -> RunState {
+        synth_begin(&self.cfg.synth, req, bucket, default_chunk, rng)
+    }
+
+    fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
+        let bq = self.cfg.block_q;
+        synth_prefill_chunk(&self.vsp, true, run, store, &|qc, lo, view, idx| match idx {
+            None => flash_attention_paged(qc, lo, view, bq, bq),
+            Some(idx) => sparse_attention_vs_paged(qc, lo, view, idx, bq),
+        })
+    }
+
+    /// One batched decode step.  Each run's work — synthesize the next row,
+    /// append K/V, refresh the incremental vertical scores, select columns,
+    /// and run single-query attention — is independent of every other
+    /// run's, so the whole per-run pipeline fans across the worker pool
+    /// (workers pin nested parallelism to 1).  The frame/transition tail
+    /// stays serial.
+    fn decode_step(&self, runs: &mut [RunState], store: &PagedKvStore) -> Vec<DecodeStep> {
+        let d = self.cfg.synth.head_dim.max(1);
+        let mut slots: Vec<DecodeSlot> = runs.iter().map(|_| DecodeSlot::new(d)).collect();
+        let work: Vec<(&mut RunState, &mut DecodeSlot)> =
+            runs.iter_mut().zip(slots.iter_mut()).collect();
+        par_drain(work, |(run, slot)| decode_one(&self.vsp, &self.cfg, store, run, slot));
+        finish_decode_round(runs, slots, store)
+    }
+
+    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+        run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
+            let head = synth_parts(&self.cfg.synth, req, bucket, rng).0;
+            let out = match req.mode {
+                AttentionMode::Dense => {
+                    resp.density = 1.0;
+                    flash_attention(&head.q, &head.k, &head.v, self.cfg.block_q, self.cfg.block_q)
+                }
+                AttentionMode::Sparse => {
+                    let ti = std::time::Instant::now();
+                    let idx = self.vsp.predict_kv(&head.k, &head.v, req.budget);
+                    resp.index_us = ti.elapsed().as_micros() as u64;
+                    resp.density = idx.density(bucket);
+                    sparse_attention_vs(&head.q, &head.k, &head.v, &idx, self.cfg.block_q)
+                }
+            };
+            resp.output_digest = digest(&out);
+            Ok(())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> NativeBackend {
+        NativeBackend::quick(EngineConfig::default())
+    }
+
+    #[test]
+    fn native_dense_vs_sparse_digests_close() {
+        let e = backend();
+        let mut rng = Rng::new(0);
+        let rd = e.process(&PrefillRequest::synthetic(1, 128, 3, AttentionMode::Dense), &mut rng);
+        let rs = e.process(&PrefillRequest::synthetic(2, 128, 3, AttentionMode::Sparse), &mut rng);
+        assert!(rd.ok && rs.ok);
+        assert_eq!(rd.bucket, 128);
+        assert!(rs.density < 1.0);
+        // Same synthetic head; sparse output should approximate dense.
+        for (a, b) in rd.output_digest.iter().zip(&rs.output_digest) {
+            assert!((a - b).abs() < 0.35, "{:?} vs {:?}", rd.output_digest, rs.output_digest);
+        }
+    }
+
+    #[test]
+    fn oversized_request_fails_cleanly() {
+        let e = backend();
+        let mut rng = Rng::new(0);
+        let r =
+            e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense), &mut rng);
+        assert!(!r.ok);
+        assert!(r.error.unwrap().contains("exceeds"));
+    }
+
+    #[test]
+    fn deterministic_for_same_seed() {
+        let e = backend();
+        let mut rng = Rng::new(0);
+        let a = e.process(&PrefillRequest::synthetic(1, 128, 9, AttentionMode::Sparse), &mut rng);
+        let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse), &mut rng);
+        assert_eq!(a.output_digest, b.output_digest);
+        assert_eq!(a.density, b.density);
+    }
+
+    #[test]
+    fn capabilities_reflect_native_features() {
+        let e = backend();
+        let caps = e.capabilities();
+        assert!(caps.chunked && caps.parallel() && caps.decode);
+        assert_eq!(caps.max_bucket, 1024);
+        assert_eq!(e.bucket_for(200), Some(256));
+        assert_eq!(e.bucket_for(99_999), None);
+    }
+}

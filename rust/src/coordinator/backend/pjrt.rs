@@ -1,0 +1,135 @@
+//! The PJRT backend: whole-bucket AOT graphs (model prefill / indexer /
+//! fused sparse attention) executed through the PJRT runtime, with the
+//! distilled indexer weights fed as graph arguments.
+//!
+//! The AOT graphs are compiled per bucket, so this backend cannot chunk:
+//! `prefill_chunk` executes the whole request monolithically in one call
+//! and never touches the paged store (`Capabilities::chunked == false`).
+//! It holds single-threaded wrapper types (`Rc`s, raw executable
+//! pointers), so it is driven serially (`parallel == false`) and lives on
+//! the coordinator's executor thread; decode needs per-step graphs that do
+//! not exist yet (`decode == false` — `max_new_tokens` is zeroed at
+//! admission).
+
+use std::collections::BTreeMap;
+
+use crate::indexer::Indexer;
+use crate::runtime;
+use crate::sparse_attn::VsPrefill;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::{
+    digest, run_monolithic, selection_pipeline, synth_parts, AttentionMode, Capabilities,
+    ChunkStep, EngineConfig, ExecBackend, PagedKvStore, PrefillRequest, PrefillResponse, RunState,
+};
+
+pub struct PjrtBackend {
+    pub cfg: EngineConfig,
+    vsp: VsPrefill,
+    rt: runtime::Engine,
+    /// Indexer weights for the PJRT indexer graph (loaded from artifacts).
+    weights: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+// SAFETY: `ExecBackend` requires `Send`, but the PJRT wrapper types hold
+// `Rc`s and raw executable pointers, which makes `PjrtBackend` `!Send` by
+// construction.  The backend is only ever *moved wholesale* between
+// threads (builder thread -> the coordinator's executor thread) — no clone
+// of any `Rc` stays behind on the sending thread, and all use happens from
+// one thread at a time, which is exactly the single-threaded discipline
+// the types assume.  It never opts into parallel dispatch
+// (`Capabilities::new` leaves the parallel promise off), so `&self` is
+// never shared across threads.
+unsafe impl Send for PjrtBackend {}
+
+impl PjrtBackend {
+    /// Load the artifact bundle + the Python-distilled indexer weights.
+    /// The bundle's bucket list overrides the config's.
+    pub fn load(cfg: EngineConfig, rt: runtime::Engine) -> anyhow::Result<PjrtBackend> {
+        // One read + parse of the weights file feeds both the graph
+        // arguments and the selection pipeline's indexer.
+        let text = std::fs::read_to_string(rt.bundle.dir.join("indexer_weights.json"))?;
+        let weights = runtime::ArtifactBundle::parse_weights(&text)?;
+        let ix = Indexer::load_json(&text)?;
+        let mut cfg = cfg;
+        cfg.buckets = rt.bundle.buckets.clone();
+        let vsp = selection_pipeline(ix, &cfg);
+        Ok(PjrtBackend { cfg, vsp, rt, weights })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        Capabilities::new(false, false, self.cfg.buckets.iter().copied().max().unwrap_or(0))
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.cfg.buckets
+    }
+
+    fn begin(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        rng: &mut Rng,
+    ) -> RunState {
+        // Whole-bucket graphs: the run's only scratch is the RNG the
+        // monolithic execution consumes.
+        let run_rng = rng.fork(req.id);
+        RunState::begin(req, bucket, default_chunk, Box::new(run_rng))
+    }
+
+    /// Whole-bucket AOT graphs: execute monolithically as one chunk (the
+    /// paged store is never touched).
+    fn prefill_chunk(&self, run: &mut RunState, _store: &PagedKvStore) -> ChunkStep {
+        if !run.is_prefilling() {
+            return run.fail_now("prefill_chunk on a non-prefilling run".to_string());
+        }
+        let resp = {
+            let acc = run.prefill_mut().expect("phase checked above");
+            let rng = acc.scratch.downcast_mut::<Rng>().expect("pjrt rng scratch");
+            self.process(acc.req, rng)
+        };
+        run.finish_with(resp)
+    }
+
+    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+        run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
+            let head = synth_parts(&self.cfg.synth, req, bucket, rng).0;
+            let out: Mat = match req.mode {
+                AttentionMode::Dense => {
+                    resp.density = 1.0;
+                    self.rt.flash_attention(bucket, &head.q, &head.k, &head.v)?
+                }
+                AttentionMode::Sparse => {
+                    let ti = std::time::Instant::now();
+                    // Index prediction through the AOT indexer graph.
+                    let (a_v, a_s) =
+                        self.rt.indexer_forward(bucket, &head.k, &head.v, &self.weights)?;
+                    let caps = self
+                        .rt
+                        .graph(&format!("sparse_attn_{bucket}"))?
+                        .caps
+                        .unwrap_or((bucket, bucket));
+                    let capped = VsPrefill {
+                        cap_v: Some(caps.0),
+                        cap_s: Some(caps.1),
+                        ..selection_pipeline(self.vsp.indexer.clone(), &self.cfg)
+                    };
+                    let idx = capped.select_from_scores(&a_v, &a_s, bucket, req.budget);
+                    resp.index_us = ti.elapsed().as_micros() as u64;
+                    resp.density = idx.density(bucket);
+                    self.rt.sparse_attention(bucket, &head.q, &head.k, &head.v, &idx)?
+                }
+            };
+            resp.output_digest = digest(&out);
+            Ok(())
+        })
+    }
+}

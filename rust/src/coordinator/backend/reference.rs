@@ -1,0 +1,204 @@
+//! The reference backend: the seed's row-serial executor behind the same
+//! `ExecBackend` trait — a slow, obviously-correct conformance oracle.
+//!
+//! Every query row is processed independently with an exact two-pass
+//! softmax (no tiling, no streaming rescale, no fan-out), and scheduling is
+//! fully serial (no parallel-dispatch opt-in), so the scheduler's
+//! serial dispatch path gets exercised too.  Index selection and decode
+//! reuse the exact same scoring/budget/kernels as the native backend, which
+//! makes token streams bit-comparable across backends: any divergence
+//! beyond float round-off in the prefill outputs — or any token mismatch in
+//! decode — is a bug in one of the executors, not an artifact of the
+//! harness.  See `tests/backend_conformance.rs`.
+
+use crate::indexer::Indexer;
+use crate::sparse_attn::exec::{sparse_attention_vs_rowserial, sparse_attention_vs_rowserial_rows};
+use crate::sparse_attn::VsPrefill;
+use crate::tensor::ops::dot;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+use super::{
+    decode_one, digest, finish_decode_round, quick_indexer, run_monolithic, selection_pipeline,
+    synth_begin, synth_parts, synth_prefill_chunk, AttentionMode, Capabilities, ChunkStep,
+    DecodeSlot, DecodeStep, EngineConfig, ExecBackend, PagedKvStore, PrefillRequest,
+    PrefillResponse, RunState,
+};
+
+pub struct ReferenceBackend {
+    pub cfg: EngineConfig,
+    vsp: VsPrefill,
+}
+
+impl ReferenceBackend {
+    /// Reference backend with the shared quickly-distilled indexer (the
+    /// same cached indexer `NativeBackend::quick` uses, so conformance
+    /// comparisons run the same index model).
+    pub fn quick(cfg: EngineConfig) -> ReferenceBackend {
+        ReferenceBackend::with_indexer(cfg, quick_indexer())
+    }
+
+    pub fn with_indexer(cfg: EngineConfig, indexer: Indexer) -> ReferenceBackend {
+        let vsp = selection_pipeline(indexer, &cfg);
+        ReferenceBackend { cfg, vsp }
+    }
+}
+
+impl ExecBackend for ReferenceBackend {
+    fn name(&self) -> &'static str {
+        "reference"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        // Deliberately serial: the oracle also covers the scheduler's
+        // non-parallel dispatch path.
+        Capabilities::new(true, true, self.cfg.buckets.iter().copied().max().unwrap_or(0))
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.cfg.buckets
+    }
+
+    fn begin(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        rng: &mut Rng,
+    ) -> RunState {
+        synth_begin(&self.cfg.synth, req, bucket, default_chunk, rng)
+    }
+
+    fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
+        synth_prefill_chunk(&self.vsp, true, run, store, &|qc, lo, view, idx| {
+            // Copy the resident prefix back out of the paged store and run
+            // the exact row-serial executor over this chunk's rows — the
+            // paged read path is part of what the oracle covers.
+            let hi = lo + qc.rows;
+            let (k, v) = view.gather_rows(0, hi);
+            match idx {
+                None => rowserial_dense_rows(qc, lo, &k, &v),
+                Some(idx) => sparse_attention_vs_rowserial_rows(qc, lo, &k, &v, idx),
+            }
+        })
+    }
+
+    /// Serial decode: identical per-run pipeline as the native backend
+    /// (same scoring, same budget, same single-query kernels — token
+    /// streams match bit-for-bit), driven one run at a time.
+    fn decode_step(&self, runs: &mut [RunState], store: &PagedKvStore) -> Vec<DecodeStep> {
+        let d = self.cfg.synth.head_dim.max(1);
+        let mut slots: Vec<DecodeSlot> = runs.iter().map(|_| DecodeSlot::new(d)).collect();
+        for (run, slot) in runs.iter_mut().zip(slots.iter_mut()) {
+            decode_one(&self.vsp, &self.cfg, store, run, slot);
+        }
+        finish_decode_round(runs, slots, store)
+    }
+
+    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+        run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
+            let head = synth_parts(&self.cfg.synth, req, bucket, rng).0;
+            let out = match req.mode {
+                AttentionMode::Dense => {
+                    resp.density = 1.0;
+                    rowserial_dense_rows(&head.q, 0, &head.k, &head.v)
+                }
+                AttentionMode::Sparse => {
+                    let ti = std::time::Instant::now();
+                    let idx = self.vsp.predict_kv(&head.k, &head.v, req.budget);
+                    resp.index_us = ti.elapsed().as_micros() as u64;
+                    resp.density = idx.density(bucket);
+                    sparse_attention_vs_rowserial(&head.q, &head.k, &head.v, &idx)
+                }
+            };
+            resp.output_digest = digest(&out);
+            Ok(())
+        })
+    }
+}
+
+/// Exact dense causal attention for query rows `lo..lo + q_chunk.rows`,
+/// one row at a time with a two-pass softmax.
+fn rowserial_dense_rows(q_chunk: &Mat, lo: usize, k: &Mat, v: &Mat) -> Mat {
+    let d = q_chunk.cols;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = Mat::zeros(q_chunk.rows, d);
+    let mut scores: Vec<f32> = Vec::new();
+    for r in 0..q_chunk.rows {
+        let i = lo + r;
+        let qrow = q_chunk.row(r);
+        scores.clear();
+        let mut m = f32::NEG_INFINITY;
+        for j in 0..=i {
+            let s = dot(qrow, k.row(j)) * scale;
+            scores.push(s);
+            m = m.max(s);
+        }
+        let mut denom = 0.0f32;
+        for s in scores.iter_mut() {
+            *s = (*s - m).exp();
+            denom += *s;
+        }
+        let inv = 1.0 / denom;
+        let orow = out.row_mut(r);
+        for (j, &w) in scores.iter().enumerate() {
+            let vrow = v.row(j);
+            let w = w * inv;
+            for c in 0..d {
+                orow[c] += w * vrow[c];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::flash::flash_attention;
+
+    #[test]
+    fn rowserial_dense_matches_flash() {
+        let mut rng = Rng::new(5);
+        let n = 96;
+        let d = 16;
+        let q = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let exact = rowserial_dense_rows(&q, 0, &k, &v);
+        let tiled = flash_attention(&q, &k, &v, 32, 16);
+        assert!(exact.max_abs_diff(&tiled) < 1e-5);
+        // Restricted to a row range, the rows agree with the full run.
+        let part = rowserial_dense_rows(&q.sub_rows(40, 70), 40, &k, &v);
+        for r in 0..30 {
+            assert_eq!(part.row(r), exact.row(40 + r));
+        }
+    }
+
+    #[test]
+    fn rowserial_vs_row_range_matches_full_executor() {
+        use crate::sparse::VsIndices;
+        let mut rng = Rng::new(6);
+        let n = 120;
+        let d = 16;
+        let q = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let k = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let v = Mat::from_fn(n, d, |_, _| rng.normal_f32());
+        let idx = VsIndices::new(vec![0, 3, 17, 50, 90], vec![0, 1, 2, 9]);
+        let want = sparse_attention_vs_rowserial(&q, &k, &v, &idx);
+        // A restricted row range is bit-identical to the same rows of the
+        // full run (same function underneath — the full executor is the
+        // lo = 0 case).
+        let part = sparse_attention_vs_rowserial_rows(&q.sub_rows(33, 77), 33, &k, &v, &idx);
+        for r in 0..(77 - 33) {
+            assert_eq!(part.row(r), want.row(33 + r));
+        }
+    }
+
+    #[test]
+    fn reference_capabilities_are_serial() {
+        let e = ReferenceBackend::quick(EngineConfig::default());
+        let caps = e.capabilities();
+        assert!(caps.chunked && caps.decode && !caps.parallel());
+    }
+}

@@ -1,6 +1,14 @@
 //! Config-file loading for the coordinator (JSON), with CLI overrides —
 //! the deployment-facing configuration surface.
 //!
+//! Both surfaces are driven from **one declarative key table** ([`KEYS`]):
+//! every entry names its JSON path (dotted for nested keys, e.g.
+//! `engine.decode_top_k`), its CLI flag (`--decode-top-k`), its type, and
+//! its getter/setter.  Adding a knob means adding one table row — the JSON
+//! reader, the CLI override pass, the binary's known-flag list
+//! ([`cli_keys`]) and the round-trip test all follow automatically, so the
+//! two surfaces cannot drift apart again.
+//!
 //! ```json
 //! {
 //!   "max_queue": 256, "chunk_tokens": 256, "max_inflight": 8,
@@ -17,85 +25,209 @@ use crate::util::json::Json;
 
 use super::CoordinatorConfig;
 
-/// Load a config file and apply `--key value` CLI overrides.
+/// The type of one configuration key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyKind {
+    Usize,
+    F32,
+    /// Comma-separated on the CLI (`--buckets 256,1024`), array in JSON.
+    UsizeList,
+}
+
+/// A typed configuration value in transit between the surfaces and the
+/// config struct.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KeyValue {
+    Usize(usize),
+    F32(f32),
+    UsizeList(Vec<usize>),
+}
+
+/// One row of the declarative key table.
+pub struct ConfigKey {
+    /// JSON path; dotted for nested keys (`engine.block_q`).
+    pub json: &'static str,
+    /// CLI flag name (without the `--`).
+    pub cli: &'static str,
+    pub kind: KeyKind,
+    pub help: &'static str,
+    get: fn(&CoordinatorConfig) -> KeyValue,
+    set: fn(&mut CoordinatorConfig, KeyValue),
+}
+
+macro_rules! usize_key {
+    ($json:expr, $cli:expr, $help:expr, $($field:ident).+) => {
+        ConfigKey {
+            json: $json,
+            cli: $cli,
+            kind: KeyKind::Usize,
+            help: $help,
+            get: |c| KeyValue::Usize(c.$($field).+ as usize),
+            set: |c, v| {
+                if let KeyValue::Usize(x) = v {
+                    c.$($field).+ = x as _;
+                }
+            },
+        }
+    };
+}
+
+/// The single source of truth for every deployment-facing knob.
+// The macro's `as` casts are identity casts for `usize` fields (they exist
+// for the `u64` ones).
+#[allow(clippy::unnecessary_cast)]
+pub const KEYS: &[ConfigKey] = &[
+    usize_key!("max_queue", "max-queue", "admission queue capacity", max_queue),
+    usize_key!("chunk_tokens", "chunk-tokens", "default rows per prefill chunk", chunk_tokens),
+    usize_key!("max_inflight", "max-inflight", "requests admitted concurrently", max_inflight),
+    usize_key!("max_wait_ms", "max-wait-ms", "idle wait for new work (ms)", max_wait_ms),
+    usize_key!(
+        "max_new_cap",
+        "max-new-cap",
+        "server-side cap on per-request max_new_tokens",
+        max_new_cap
+    ),
+    usize_key!("kv_blocks", "kv-blocks", "paged KV pool: number of blocks", kv_blocks),
+    usize_key!("kv_block_size", "kv-block-size", "paged KV pool: rows per block", kv_block_size),
+    ConfigKey {
+        json: "engine.buckets",
+        cli: "buckets",
+        kind: KeyKind::UsizeList,
+        help: "buckets served, ascending (CLI: comma-separated)",
+        get: |c| KeyValue::UsizeList(c.engine.buckets.clone()),
+        set: |c, v| {
+            if let KeyValue::UsizeList(x) = v {
+                c.engine.buckets = x;
+            }
+        },
+    },
+    usize_key!(
+        "engine.block_q",
+        "block-q",
+        "query-block size of the tiled executors",
+        engine.block_q
+    ),
+    usize_key!("engine.threads", "threads", "worker-pool size (0 = auto)", engine.threads),
+    ConfigKey {
+        json: "engine.budget_tau",
+        cli: "budget-tau",
+        kind: KeyKind::F32,
+        help: "cumulative-mass threshold of budget selection (Eq. 18)",
+        get: |c| KeyValue::F32(c.engine.budget_tau),
+        set: |c, v| {
+            if let KeyValue::F32(x) = v {
+                c.engine.budget_tau = x;
+            }
+        },
+    },
+    usize_key!(
+        "engine.decode_top_k",
+        "decode-top-k",
+        "sparse decode budget: vertical columns kept per step",
+        engine.decode_top_k
+    ),
+    usize_key!(
+        "engine.decode_window",
+        "decode-window",
+        "sparse decode budget: local window of recent positions",
+        engine.decode_window
+    ),
+];
+
+/// CLI flag names of every key in the table — splice into the binary's
+/// known-option list so the CLI surface tracks the table automatically.
+pub fn cli_keys() -> Vec<&'static str> {
+    KEYS.iter().map(|k| k.cli).collect()
+}
+
+impl KeyKind {
+    /// Parse a CLI string into a value of this kind.
+    fn parse_cli(self, s: &str) -> anyhow::Result<KeyValue> {
+        Ok(match self {
+            KeyKind::Usize => KeyValue::Usize(s.parse()?),
+            KeyKind::F32 => KeyValue::F32(s.parse()?),
+            KeyKind::UsizeList => KeyValue::UsizeList(
+                s.split(',')
+                    .map(|p| p.trim().parse::<usize>().map_err(anyhow::Error::from))
+                    .collect::<anyhow::Result<Vec<usize>>>()?,
+            ),
+        })
+    }
+
+    /// Convert a JSON value into a value of this kind.
+    fn from_json(self, j: &Json) -> anyhow::Result<KeyValue> {
+        Ok(match self {
+            KeyKind::Usize => KeyValue::Usize(
+                j.as_usize().ok_or_else(|| anyhow::anyhow!("expected a non-negative number"))?,
+            ),
+            KeyKind::F32 => KeyValue::F32(
+                j.as_f64().ok_or_else(|| anyhow::anyhow!("expected a number"))? as f32,
+            ),
+            KeyKind::UsizeList => KeyValue::UsizeList(j.as_usize_vec()?),
+        })
+    }
+}
+
+impl ConfigKey {
+    /// Current value of this key in `cfg`.
+    pub fn get(&self, cfg: &CoordinatorConfig) -> KeyValue {
+        (self.get)(cfg)
+    }
+
+    /// Render the value the way the CLI accepts it (round-trip form).
+    pub fn render_cli(&self, v: &KeyValue) -> String {
+        match v {
+            KeyValue::Usize(x) => x.to_string(),
+            KeyValue::F32(x) => x.to_string(),
+            KeyValue::UsizeList(xs) => {
+                xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
+            }
+        }
+    }
+
+    fn lookup<'a>(&self, root: &'a Json) -> Option<&'a Json> {
+        let mut j = root;
+        for part in self.json.split('.') {
+            j = j.get(part)?;
+        }
+        Some(j)
+    }
+}
+
+/// Load a config file and apply `--key value` CLI overrides, both driven
+/// from [`KEYS`].
 pub fn load(path: Option<&str>, args: &Args) -> anyhow::Result<CoordinatorConfig> {
     let mut cfg = CoordinatorConfig::default();
     if let Some(p) = path {
-        let text = std::fs::read_to_string(p)
-            .map_err(|e| anyhow::anyhow!("reading config {p}: {e}"))?;
+        let text =
+            std::fs::read_to_string(p).map_err(|e| anyhow::anyhow!("reading config {p}: {e}"))?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("config {p}: {e}"))?;
-        apply_json(&mut cfg, &j)?;
+        for key in KEYS {
+            if let Some(v) = key.lookup(&j) {
+                let v = key
+                    .kind
+                    .from_json(v)
+                    .map_err(|e| anyhow::anyhow!("config {p}: key '{}': {e}", key.json))?;
+                (key.set)(&mut cfg, v);
+            }
+        }
     }
-    // CLI overrides
-    if let Some(v) = args.str_opt("max-queue") {
-        cfg.max_queue = v.parse()?;
-    }
-    if let Some(v) = args.str_opt("chunk-tokens") {
-        cfg.chunk_tokens = v.parse()?;
-    }
-    if let Some(v) = args.str_opt("max-inflight") {
-        cfg.max_inflight = v.parse()?;
-    }
-    if let Some(v) = args.str_opt("max-wait-ms") {
-        cfg.max_wait_ms = v.parse()?;
-    }
-    if let Some(v) = args.str_opt("max-new-cap") {
-        cfg.max_new_cap = v.parse()?;
-    }
-    if let Some(v) = args.str_opt("kv-blocks") {
-        cfg.kv_blocks = v.parse()?;
-    }
-    if let Some(v) = args.str_opt("threads") {
-        cfg.engine.threads = v.parse()?;
+    for key in KEYS {
+        if let Some(s) = args.str_opt(key.cli) {
+            let v = key
+                .kind
+                .parse_cli(s)
+                .map_err(|e| anyhow::anyhow!("--{} {s}: {e}", key.cli))?;
+            (key.set)(&mut cfg, v);
+        }
     }
     validate(&cfg)?;
     Ok(cfg)
 }
 
-fn apply_json(cfg: &mut CoordinatorConfig, j: &Json) -> anyhow::Result<()> {
-    let get_usize = |key: &str| j.get(key).and_then(|x| x.as_usize());
-    if let Some(v) = get_usize("max_queue") {
-        cfg.max_queue = v;
-    }
-    if let Some(v) = get_usize("chunk_tokens") {
-        cfg.chunk_tokens = v;
-    }
-    if let Some(v) = get_usize("max_inflight") {
-        cfg.max_inflight = v;
-    }
-    if let Some(v) = get_usize("max_wait_ms") {
-        cfg.max_wait_ms = v as u64;
-    }
-    if let Some(v) = get_usize("max_new_cap") {
-        cfg.max_new_cap = v;
-    }
-    if let Some(v) = get_usize("kv_blocks") {
-        cfg.kv_blocks = v;
-    }
-    if let Some(v) = get_usize("kv_block_size") {
-        cfg.kv_block_size = v;
-    }
-    if let Some(e) = j.get("engine") {
-        if let Some(b) = e.get("buckets") {
-            cfg.engine.buckets = b.as_usize_vec()?;
-        }
-        if let Some(v) = e.get("block_q").and_then(|x| x.as_usize()) {
-            cfg.engine.block_q = v;
-        }
-        if let Some(v) = e.get("threads").and_then(|x| x.as_usize()) {
-            cfg.engine.threads = v;
-        }
-        if let Some(v) = e.get("decode_top_k").and_then(|x| x.as_usize()) {
-            cfg.engine.decode_top_k = v;
-        }
-        if let Some(v) = e.get("decode_window").and_then(|x| x.as_usize()) {
-            cfg.engine.decode_window = v;
-        }
-    }
-    Ok(())
-}
-
-fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
+/// Sanity-check a configuration (also run by
+/// [`crate::serve::EngineBuilder::build`]).
+pub fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
     anyhow::ensure!(cfg.max_queue > 0, "max_queue must be positive");
     anyhow::ensure!(cfg.chunk_tokens > 0, "chunk_tokens must be positive");
     anyhow::ensure!(cfg.max_inflight > 0, "max_inflight must be positive");
@@ -105,6 +237,10 @@ fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
         "buckets must be strictly increasing"
     );
     anyhow::ensure!(cfg.kv_block_size > 0, "kv_block_size must be positive");
+    anyhow::ensure!(
+        cfg.engine.budget_tau > 0.0 && cfg.engine.budget_tau <= 1.0,
+        "budget_tau must be in (0, 1]"
+    );
     anyhow::ensure!(
         cfg.engine.decode_window >= 1,
         "decode_window must be at least 1 (the newest position is always attended)"
@@ -129,58 +265,110 @@ mod tests {
 
     fn args(raw: &[&str]) -> Args {
         let v: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
-        Args::parse(
-            &v,
-            &[
-                "max-queue",
-                "chunk-tokens",
-                "max-inflight",
-                "max-wait-ms",
-                "max-new-cap",
-                "kv-blocks",
-            ],
-        )
-        .unwrap()
+        Args::parse(&v, &cli_keys()).unwrap()
+    }
+
+    /// A distinct, validation-consistent value for every key (different
+    /// from every default so overrides are observable).
+    fn distinct_value(key: &ConfigKey) -> KeyValue {
+        match (key.json, key.kind) {
+            ("engine.buckets", _) => KeyValue::UsizeList(vec![96, 192]),
+            (_, KeyKind::F32) => KeyValue::F32(0.55),
+            ("max_wait_ms", _) => KeyValue::Usize(7),
+            ("kv_blocks", _) => KeyValue::Usize(31),
+            ("kv_block_size", _) => KeyValue::Usize(48),
+            ("engine.threads", _) => KeyValue::Usize(3),
+            ("engine.block_q", _) => KeyValue::Usize(17),
+            ("engine.decode_top_k", _) => KeyValue::Usize(23),
+            ("engine.decode_window", _) => KeyValue::Usize(11),
+            ("max_queue", _) => KeyValue::Usize(41),
+            ("chunk_tokens", _) => KeyValue::Usize(33),
+            ("max_inflight", _) => KeyValue::Usize(5),
+            ("max_new_cap", _) => KeyValue::Usize(77),
+            (other, _) => unreachable!("add a distinct value for new key '{other}'"),
+        }
+    }
+
+    /// Build a JSON config text setting every key in the table.
+    fn full_json() -> String {
+        let mut top = Vec::new();
+        let mut engine = Vec::new();
+        for key in KEYS {
+            let v = distinct_value(key);
+            let rendered = match &v {
+                KeyValue::Usize(x) => x.to_string(),
+                KeyValue::F32(x) => x.to_string(),
+                KeyValue::UsizeList(xs) => format!(
+                    "[{}]",
+                    xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
+                ),
+            };
+            match key.json.strip_prefix("engine.") {
+                Some(name) => engine.push(format!("\"{name}\": {rendered}")),
+                None => top.push(format!("\"{}\": {rendered}", key.json)),
+            }
+        }
+        format!("{{{}, \"engine\": {{{}}}}}", top.join(", "), engine.join(", "))
     }
 
     #[test]
-    fn file_plus_cli_overrides() {
-        let dir = std::env::temp_dir().join("vsprefill_cfg_test");
+    fn every_table_key_round_trips_from_json() {
+        let dir = std::env::temp_dir().join("vsprefill_cfg_table_json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("full.json");
+        std::fs::write(&p, full_json()).unwrap();
+        let cfg = load(Some(p.to_str().unwrap()), &args(&[])).unwrap();
+        for key in KEYS {
+            assert_eq!(
+                key.get(&cfg),
+                distinct_value(key),
+                "JSON key '{}' not honored",
+                key.json
+            );
+        }
+    }
+
+    #[test]
+    fn every_table_key_round_trips_from_cli() {
+        let mut raw: Vec<String> = Vec::new();
+        for key in KEYS {
+            raw.push(format!("--{}", key.cli));
+            raw.push(key.render_cli(&distinct_value(key)));
+        }
+        let refs: Vec<&str> = raw.iter().map(|s| s.as_str()).collect();
+        let cfg = load(None, &args(&refs)).unwrap();
+        for key in KEYS {
+            assert_eq!(
+                key.get(&cfg),
+                distinct_value(key),
+                "CLI flag '--{}' not honored",
+                key.cli
+            );
+        }
+    }
+
+    #[test]
+    fn cli_overrides_beat_json() {
+        let dir = std::env::temp_dir().join("vsprefill_cfg_table_both");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("c.json");
         std::fs::write(
             &p,
-            r#"{"max_queue": 32, "chunk_tokens": 128, "engine": {"buckets": [128, 512], "block_q": 32}}"#,
+            r#"{"max_queue": 32, "chunk_tokens": 128, "engine": {"buckets": [128, 512], "block_q": 32, "budget_tau": 0.8}}"#,
         )
         .unwrap();
-        let cfg = load(Some(p.to_str().unwrap()), &args(&["--max-queue", "64"])).unwrap();
+        let cfg = load(
+            Some(p.to_str().unwrap()),
+            &args(&["--max-queue", "64", "--buckets", "64,256", "--budget-tau", "0.7"]),
+        )
+        .unwrap();
         assert_eq!(cfg.max_queue, 64); // CLI wins
-        assert_eq!(cfg.chunk_tokens, 128);
-        assert_eq!(cfg.engine.buckets, vec![128, 512]);
+        assert_eq!(cfg.chunk_tokens, 128); // JSON survives
+        assert_eq!(cfg.engine.buckets, vec![64, 256]); // CLI wins
+        assert!((cfg.engine.budget_tau - 0.7).abs() < 1e-6);
         assert_eq!(cfg.engine.block_q, 32);
         assert_eq!(cfg.max_inflight, 8); // default preserved
         assert_eq!(cfg.max_new_cap, 256); // default preserved
-    }
-
-    #[test]
-    fn decode_knobs_load_and_override() {
-        let dir = std::env::temp_dir().join("vsprefill_cfg_test_decode");
-        std::fs::create_dir_all(&dir).unwrap();
-        let p = dir.join("d.json");
-        std::fs::write(
-            &p,
-            r#"{"max_new_cap": 32, "engine": {"decode_top_k": 16, "decode_window": 8}}"#,
-        )
-        .unwrap();
-        let cfg = load(Some(p.to_str().unwrap()), &args(&["--max-new-cap", "64"])).unwrap();
-        assert_eq!(cfg.max_new_cap, 64); // CLI wins
-        assert_eq!(cfg.engine.decode_top_k, 16);
-        assert_eq!(cfg.engine.decode_window, 8);
-        // A zero decode window is rejected (the newest position must be
-        // attendable).
-        let p2 = dir.join("bad_window.json");
-        std::fs::write(&p2, r#"{"engine": {"decode_window": 0}}"#).unwrap();
-        assert!(load(Some(p2.to_str().unwrap()), &args(&[])).is_err());
     }
 
     #[test]
@@ -198,6 +386,17 @@ mod tests {
         // Pool smaller than the largest default bucket (1024 rows).
         std::fs::write(&p3, r#"{"kv_blocks": 4, "kv_block_size": 16}"#).unwrap();
         assert!(load(Some(p3.to_str().unwrap()), &args(&[])).is_err());
+        // A zero decode window is rejected (the newest position must be
+        // attendable).
+        let p4 = dir.join("bad4.json");
+        std::fs::write(&p4, r#"{"engine": {"decode_window": 0}}"#).unwrap();
+        assert!(load(Some(p4.to_str().unwrap()), &args(&[])).is_err());
+        // budget_tau outside (0, 1].
+        assert!(load(None, &args(&["--budget-tau", "1.5"])).is_err());
+        assert!(load(None, &args(&["--budget-tau", "0"])).is_err());
+        // Malformed CLI values fail loudly, naming the flag.
+        let err = load(None, &args(&["--buckets", "64,abc"])).unwrap_err();
+        assert!(format!("{err}").contains("--buckets"), "{err}");
     }
 
     #[test]
@@ -205,5 +404,6 @@ mod tests {
         let cfg = load(None, &args(&[])).unwrap();
         assert_eq!(cfg.max_queue, CoordinatorConfig::default().max_queue);
         assert_eq!(cfg.chunk_tokens, CoordinatorConfig::default().chunk_tokens);
+        assert!((cfg.engine.budget_tau - 0.9).abs() < 1e-6);
     }
 }

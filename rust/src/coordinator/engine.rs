@@ -1,44 +1,24 @@
-//! The prefill execution pipeline.
+//! Engine-facing configuration — the thin facade left of the old
+//! `PrefillEngine`.
 //!
-//! Two backends behind one interface:
-//!   * `Native` — synthesizes the head (Appendix-A.1 generator), runs the
-//!     Rust indexer + budgeter + tiled sparse executor.  No artifacts
-//!     needed; used by unit tests and the ablation harness.
-//!   * `Pjrt`  — the production path: AOT model prefill / indexer / fused
-//!     sparse-attention graphs executed through the PJRT engine, with the
-//!     distilled indexer weights fed as graph arguments.
-//!
-//! Pipeline per request (§4.3): K/V from prefill -> VSIndexer scores ->
-//! cumulative-threshold budgets -> top-k indices (+ merge in the executor)
-//! -> sparse attention -> output digest.
+//! Execution itself lives behind the [`ExecBackend`](super::backend::ExecBackend)
+//! trait in [`super::backend`]: `backend::native` (fused tiled kernels over
+//! the paged store), `backend::reference` (the seed's row-serial executor,
+//! kept as a drop-in conformance oracle) and `backend::pjrt` (AOT graphs via
+//! PJRT, behind the `pjrt` cargo feature).  This module only defines the
+//! knobs shared by every backend; construct a backend — or a whole serving
+//! stack — through [`crate::serve::EngineBuilder`].
 
-use std::time::Instant;
+use crate::synth::SynthConfig;
 
-use crate::attention::decode::flash_decode_into;
-use crate::attention::flash::flash_attention_paged;
-use crate::indexer::train::{distill, TrainConfig};
-use crate::indexer::{IncrementalScores, Indexer};
-#[cfg(feature = "pjrt")]
-use crate::runtime;
-use crate::sparse_attn::exec::{
-    decode_columns, sparse_attention_vs, sparse_attention_vs_paged, sparse_decode_vs_into,
-};
-use crate::sparse_attn::VsPrefill;
-use crate::synth::{gen_head, SynthConfig, SynthHead, SynthStream};
-use crate::tensor::paged::PagedKv;
-use crate::tensor::Mat;
-use crate::util::parallel::par_chunks_mut;
-use crate::util::rng::Rng;
-
-use super::kv_cache::PagedKvStore;
-use super::request::{Payload, PrefillRequest, PrefillResponse, TokenFrame};
-
+/// Attention execution mode of a request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AttentionMode {
     Dense,
     Sparse,
 }
 
+/// Knobs shared by every execution backend.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub synth: SynthConfig,
@@ -50,6 +30,9 @@ pub struct EngineConfig {
     /// coordinator's batch fan-out).  0 = auto: `VSPREFILL_THREADS` env var,
     /// else available parallelism.
     pub threads: usize,
+    /// Base cumulative-mass threshold of the budget selection (Eq. 18) at
+    /// budget knob 0.5 — the paper's tau.
+    pub budget_tau: f32,
     /// Decode budget: vertical columns kept per sparse decode step (top-k
     /// of the request's incrementally-maintained vertical index scores).
     pub decode_top_k: usize,
@@ -66,684 +49,9 @@ impl Default for EngineConfig {
             buckets: vec![128, 256, 512, 1024],
             block_q: 64,
             threads: 0,
+            budget_tau: 0.9,
             decode_top_k: 64,
             decode_window: 64,
         }
-    }
-}
-
-enum Backend {
-    Native,
-    #[cfg(feature = "pjrt")]
-    Pjrt(runtime::Engine),
-}
-
-pub struct PrefillEngine {
-    pub cfg: EngineConfig,
-    vsp: VsPrefill,
-    backend: Backend,
-    /// Indexer weights for the PJRT indexer graph (loaded from artifacts).
-    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
-    pjrt_weights: Option<std::collections::BTreeMap<String, (Vec<usize>, Vec<f32>)>>,
-}
-
-impl PrefillEngine {
-    /// Native backend with a quickly-distilled indexer (tests, ablations).
-    /// The indexer is distilled once per process and cached — distillation
-    /// dominates startup otherwise.
-    pub fn native_quick(cfg: EngineConfig) -> PrefillEngine {
-        static CACHED: std::sync::OnceLock<Indexer> = std::sync::OnceLock::new();
-        let ix = CACHED
-            .get_or_init(|| {
-                let tc = TrainConfig {
-                    steps: 150,
-                    batch: 3,
-                    seq_len: 128,
-                    hidden_base: 32,
-                    synth: SynthConfig::default(),
-                    ..Default::default()
-                };
-                distill(&tc).0
-            })
-            .clone();
-        PrefillEngine { cfg, vsp: VsPrefill::new(ix), backend: Backend::Native, pjrt_weights: None }
-    }
-
-    /// Native backend with a caller-provided indexer.
-    pub fn native_with(cfg: EngineConfig, indexer: Indexer) -> PrefillEngine {
-        PrefillEngine { cfg, vsp: VsPrefill::new(indexer), backend: Backend::Native, pjrt_weights: None }
-    }
-
-    /// PJRT backend: loads artifacts + the Python-distilled indexer weights.
-    #[cfg(feature = "pjrt")]
-    pub fn pjrt(cfg: EngineConfig, rt: runtime::Engine) -> anyhow::Result<PrefillEngine> {
-        let weights = rt.bundle.load_weights("indexer_weights.json")?;
-        let text = std::fs::read_to_string(rt.bundle.dir.join("indexer_weights.json"))?;
-        let ix = Indexer::load_json(&text)?;
-        let buckets = rt.bundle.buckets.clone();
-        let mut cfg = cfg;
-        cfg.buckets = buckets;
-        Ok(PrefillEngine {
-            cfg,
-            vsp: VsPrefill::new(ix),
-            backend: Backend::Pjrt(rt),
-            pjrt_weights: Some(weights),
-        })
-    }
-
-    pub fn buckets(&self) -> Vec<usize> {
-        self.cfg.buckets.clone()
-    }
-
-    pub fn bucket_for(&self, n: usize) -> Option<usize> {
-        self.cfg.buckets.iter().cloned().filter(|&b| b >= n).min()
-    }
-
-    /// True when `process` may be called concurrently from several threads
-    /// on a shared reference: the native backend is plain owned data with no
-    /// interior mutability, while the PJRT backend holds single-threaded
-    /// wrapper types (`Rc`s, raw executable pointers).
-    pub fn supports_parallel(&self) -> bool {
-        match &self.backend {
-            Backend::Native => true,
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(_) => false,
-        }
-    }
-
-    /// Process one request (called from the executor thread, or — for the
-    /// native backend — from the coordinator's batch worker pool).
-    pub fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
-        let queue_us = req.submitted_at.elapsed().as_micros() as u64;
-        let mut resp = PrefillResponse { id: req.id, queue_us, ..Default::default() };
-        let n = req.seq_len();
-        let bucket = match self.bucket_for(n) {
-            Some(b) => b,
-            None => {
-                resp.error = Some(format!("seq_len {n} exceeds largest bucket"));
-                return resp;
-            }
-        };
-        resp.bucket = bucket;
-        let t0 = Instant::now();
-        let result = match &self.backend {
-            Backend::Native => self.process_native(req, bucket, rng, &mut resp),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(_) => self.process_pjrt(req, bucket, rng, &mut resp),
-        };
-        resp.prefill_us = t0.elapsed().as_micros() as u64;
-        // Monolithic execution is one chunk: TTFT is the full prefill.
-        resp.chunks = 1;
-        resp.chunk_us = vec![resp.prefill_us];
-        resp.ttft_us = resp.queue_us + resp.prefill_us;
-        match result {
-            Ok(()) => resp.ok = true,
-            Err(e) => resp.error = Some(format!("{e:#}")),
-        }
-        resp
-    }
-
-    /// True when the backend can run the chunked pipeline (paged KV store +
-    /// incremental indexing).  The PJRT backend's AOT graphs are
-    /// whole-bucket, so it falls back to monolithic execution per request.
-    pub fn supports_chunked(&self) -> bool {
-        match &self.backend {
-            Backend::Native => true,
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt(_) => false,
-        }
-    }
-
-    /// Start a chunked prefill: the caller has already resolved `bucket`
-    /// (via [`bucket_for`](Self::bucket_for)) and reserved `bucket` rows in
-    /// the paged store.  `chunk` is the coordinator's default chunk size;
-    /// the request's own `chunk` field overrides it.
-    pub fn begin_chunked(
-        &self,
-        req: PrefillRequest,
-        bucket: usize,
-        chunk: usize,
-        rng: &mut Rng,
-    ) -> ChunkRun {
-        let queue_us = req.submitted_at.elapsed().as_micros() as u64;
-        let resp = PrefillResponse { id: req.id, queue_us, bucket, ..Default::default() };
-        let mut run_rng = rng.fork(req.id);
-        let (head, stream) = self.synth_parts(&req, bucket, &mut run_rng);
-        let chunk = req.chunk.unwrap_or(chunk).clamp(1, bucket);
-        ChunkRun {
-            req,
-            bucket,
-            chunk,
-            next: 0,
-            head,
-            stream,
-            inc: IncrementalScores::new(),
-            rng: run_rng,
-            resp,
-        }
-    }
-
-    /// Execute the next chunk of `run` against the paged store: append the
-    /// chunk's K/V rows, update the incremental index scores, and run the
-    /// paged attention executor over the chunk's queries.  Returns
-    /// `ChunkStep::Done` with the finished response after the last chunk
-    /// (the caller frees the store reservation and replies).
-    pub fn process_chunk(&self, run: &mut ChunkRun, store: &PagedKvStore) -> ChunkStep {
-        if !self.supports_chunked() {
-            // Whole-bucket AOT graphs (PJRT): execute monolithically as one
-            // chunk.
-            return ChunkStep::Done(self.process(&run.req, &mut run.rng));
-        }
-        let t0 = Instant::now();
-        let lo = run.next;
-        let hi = (lo + run.chunk).min(run.bucket);
-        let kc = run.head.k.sub_rows(lo, hi);
-        let vc = run.head.v.sub_rows(lo, hi);
-        if let Err(e) = store.append(run.req.id, &kc, &vc) {
-            run.resp.error = Some(format!("{e:#}"));
-            return ChunkStep::Done(std::mem::take(&mut run.resp));
-        }
-        let Some(view) = store.view(run.req.id) else {
-            run.resp.error = Some(format!("request {} lost its kv reservation", run.req.id));
-            return ChunkStep::Done(std::mem::take(&mut run.resp));
-        };
-        let qc = run.head.q.sub_rows(lo, hi);
-        let out = match run.req.mode {
-            AttentionMode::Dense => {
-                run.resp.density = 1.0;
-                flash_attention_paged(&qc, lo, &view, self.cfg.block_q, self.cfg.block_q)
-            }
-            AttentionMode::Sparse => {
-                let ti = Instant::now();
-                // Incremental scoring over the newly-arrived rows, then
-                // selection over every key resident so far.  On the final
-                // chunk the scores equal the monolithic `predict_kv`
-                // exactly, so the reported density matches monolithic
-                // execution bit-for-bit.
-                self.vsp.indexer.score_chunk(&mut run.inc, &kc, &vc);
-                let (a_v, a_s) = run.inc.finalize();
-                let idx = self.vsp.select_from_scores(&a_v, &a_s, hi, run.req.budget);
-                run.resp.index_us += ti.elapsed().as_micros() as u64;
-                run.resp.density = idx.density(hi);
-                sparse_attention_vs_paged(&qc, lo, &view, &idx, self.cfg.block_q)
-            }
-        };
-        if lo == 0 {
-            run.resp.output_digest = digest(&out);
-        }
-        let dt = t0.elapsed().as_micros() as u64;
-        run.resp.chunk_us.push(dt);
-        run.resp.prefill_us += dt;
-        run.resp.chunks += 1;
-        if run.resp.chunks == 1 {
-            run.resp.ttft_us = run.req.submitted_at.elapsed().as_micros() as u64;
-        }
-        run.next = hi;
-        if hi >= run.bucket {
-            run.resp.ok = true;
-            ChunkStep::Done(std::mem::take(&mut run.resp))
-        } else {
-            ChunkStep::Progress
-        }
-    }
-
-    /// Synthesize the prompt head plus the decode-phase continuation
-    /// stream.  The stream is handed the content RNG in the same freshly
-    /// seeded state `gen_head` receives it, so it re-derives the head's
-    /// mean vectors and heavy-hitter direction exactly — decode rows come
-    /// from the same distribution family as the prompt.
-    fn synth_parts(
-        &self,
-        req: &PrefillRequest,
-        bucket: usize,
-        rng: &mut Rng,
-    ) -> (SynthHead, SynthStream) {
-        match &req.payload {
-            Payload::Synthetic { seed, .. } => {
-                let mut r = Rng::new(*seed);
-                let head = gen_head(&mut r, bucket, &self.cfg.synth, seed % 8);
-                let stream =
-                    SynthStream::continue_head(&self.cfg.synth, Rng::new(*seed), seed % 8, bucket);
-                (head, stream)
-            }
-            Payload::Tokens(toks) => {
-                // Derive a deterministic head from the token content so the
-                // native path is usable without the model artifact.
-                let mut h = 0u64;
-                for &t in toks {
-                    h = h.wrapping_mul(31).wrapping_add(t as u64);
-                }
-                let r = rng.fork(h);
-                let head = gen_head(&mut r.clone(), bucket, &self.cfg.synth, h % 8);
-                let stream = SynthStream::continue_head(&self.cfg.synth, r, h % 8, bucket);
-                (head, stream)
-            }
-        }
-    }
-
-    fn head_for(&self, req: &PrefillRequest, bucket: usize, rng: &mut Rng) -> SynthHead {
-        self.synth_parts(req, bucket, rng).0
-    }
-
-    fn process_native(
-        &self,
-        req: &PrefillRequest,
-        bucket: usize,
-        rng: &mut Rng,
-        resp: &mut PrefillResponse,
-    ) -> anyhow::Result<()> {
-        let head = self.head_for(req, bucket, rng);
-        let out = match req.mode {
-            AttentionMode::Dense => {
-                resp.density = 1.0;
-                crate::attention::flash::flash_attention(
-                    &head.q, &head.k, &head.v, self.cfg.block_q, self.cfg.block_q,
-                )
-            }
-            AttentionMode::Sparse => {
-                let ti = Instant::now();
-                let idx = self.vsp.predict_kv(&head.k, &head.v, req.budget);
-                resp.index_us = ti.elapsed().as_micros() as u64;
-                resp.density = idx.density(bucket);
-                sparse_attention_vs(&head.q, &head.k, &head.v, &idx, self.cfg.block_q)
-            }
-        };
-        resp.output_digest = digest(&out);
-        Ok(())
-    }
-
-    #[cfg(feature = "pjrt")]
-    fn process_pjrt(
-        &self,
-        req: &PrefillRequest,
-        bucket: usize,
-        rng: &mut Rng,
-        resp: &mut PrefillResponse,
-    ) -> anyhow::Result<()> {
-        let Backend::Pjrt(rt) = &self.backend else { unreachable!() };
-        let head = self.head_for(req, bucket, rng);
-        let out: Mat = match req.mode {
-            AttentionMode::Dense => {
-                resp.density = 1.0;
-                rt.flash_attention(bucket, &head.q, &head.k, &head.v)?
-            }
-            AttentionMode::Sparse => {
-                let ti = Instant::now();
-                // Index prediction through the AOT indexer graph.
-                let w = self.pjrt_weights.as_ref().unwrap();
-                let (a_v, a_s) = rt.indexer_forward(bucket, &head.k, &head.v, w)?;
-                let caps = rt
-                    .graph(&format!("sparse_attn_{bucket}"))?
-                    .caps
-                    .unwrap_or((bucket, bucket));
-                let capped = VsPrefill {
-                    cap_v: Some(caps.0),
-                    cap_s: Some(caps.1),
-                    ..VsPrefill::new(self.vsp.indexer.clone())
-                };
-                let idx = capped.select_from_scores(&a_v, &a_s, bucket, req.budget);
-                resp.index_us = ti.elapsed().as_micros() as u64;
-                resp.density = idx.density(bucket);
-                rt.sparse_attention(bucket, &head.q, &head.k, &head.v, &idx)?
-            }
-        };
-        resp.output_digest = digest(&out);
-        Ok(())
-    }
-}
-
-/// In-flight chunked prefill for one request: the synthesized head (the
-/// stand-in for the model forward), the incremental index-score state, the
-/// cursor into the sequence, and the accumulating response.
-pub struct ChunkRun {
-    pub req: PrefillRequest,
-    /// Bucket the request was padded to (its prompt-row reservation in the
-    /// paged store; the full reservation additionally covers
-    /// `max_new_tokens` decode rows).
-    pub bucket: usize,
-    /// Rows per chunk.
-    pub chunk: usize,
-    /// Next absolute row to process (== rows appended to the store so far).
-    pub next: usize,
-    head: SynthHead,
-    /// Decode-phase continuation of the head (positions >= bucket).
-    stream: SynthStream,
-    inc: IncrementalScores,
-    /// Consumed by the monolithic (non-chunked backend) fallback.
-    rng: Rng,
-    resp: PrefillResponse,
-}
-
-/// Outcome of one `process_chunk` call.
-pub enum ChunkStep {
-    /// More chunks remain; the run goes back in the ready queue.
-    Progress,
-    /// The request finished (successfully or with `error` set); the caller
-    /// transitions it to decode (if tokens were requested) or frees the KV
-    /// reservation and replies.
-    Done(PrefillResponse),
-}
-
-/// In-flight decode for one request that finished prefill: the synth
-/// continuation stream, the carried-over incremental index scores (sparse
-/// column selection stays fresh as new K/V rows land), and the accumulating
-/// response.
-pub struct DecodeState {
-    pub req: PrefillRequest,
-    /// Prompt rows resident in the paged store (the padded bucket).
-    pub bucket: usize,
-    /// Tokens generated so far.
-    pub generated: usize,
-    /// Tokens to generate (already capped at admission; > 0 by
-    /// construction — zero-token requests never enter decode).
-    pub max_new: usize,
-    stream: SynthStream,
-    inc: IncrementalScores,
-    resp: PrefillResponse,
-    /// Wall-clock anchor for inter-token latency (set at the prefill ->
-    /// decode transition, advanced every step).
-    last_token_at: Instant,
-}
-
-/// Outcome of one decode step for one request.
-pub enum DecodeStep {
-    /// A token was generated; more remain.
-    Token(TokenFrame),
-    /// The final token was generated; the caller frees the KV reservation
-    /// and replies with the finished response.
-    Done(TokenFrame, PrefillResponse),
-    /// The step failed (store error); the caller frees and replies.
-    Failed(PrefillResponse),
-}
-
-impl PrefillEngine {
-    /// Transition a finished chunked prefill into the decode phase.  The
-    /// run's KV reservation stays live (it covers `bucket + max_new` rows);
-    /// `resp` is the completed prefill response the decode phase keeps
-    /// accumulating tokens and timings into.
-    pub fn begin_decode(&self, run: ChunkRun, resp: PrefillResponse) -> DecodeState {
-        DecodeState {
-            bucket: run.bucket,
-            generated: 0,
-            max_new: run.req.max_new_tokens,
-            stream: run.stream,
-            inc: run.inc,
-            resp,
-            req: run.req,
-            last_token_at: Instant::now(),
-        }
-    }
-
-    /// One batched decode step: every state in `states` generates its next
-    /// token.  Phase 1 (serial, cheap) synthesizes each request's next
-    /// (q, k, v) row, appends K/V to the paged store and — for sparse
-    /// requests — scores the new row into the incremental index state and
-    /// selects the step's columns (top-k verticals + local window).  Phase 2
-    /// runs the batch's single-query attention fanned across the worker
-    /// pool (the batched-decode analog of the prefill chunk fan-out).
-    /// Phase 3 (serial) turns outputs into token frames and completion
-    /// transitions.  Returns one `DecodeStep` per state, index-aligned.
-    pub fn decode_round(&self, states: &mut [DecodeState], store: &PagedKvStore) -> Vec<DecodeStep> {
-        let d = self.cfg.synth.head_dim;
-        let block_k = self.cfg.block_q.max(1);
-        // Phase 1: generate + append + index-score.
-        enum Job<'s> {
-            Ready { q: Mat, view: PagedKv<'s>, cols: Option<Vec<usize>> },
-            Failed,
-        }
-        let mut jobs: Vec<Job<'_>> = Vec::with_capacity(states.len());
-        for st in states.iter_mut() {
-            let (q, k, v) = st.stream.next_row();
-            if let Err(e) = store.append(st.req.id, &k, &v) {
-                st.resp.error = Some(format!("{e:#}"));
-                jobs.push(Job::Failed);
-                continue;
-            }
-            let Some(view) = store.view(st.req.id) else {
-                st.resp.error =
-                    Some(format!("request {} lost its kv reservation mid-decode", st.req.id));
-                jobs.push(Job::Failed);
-                continue;
-            };
-            let cols = match st.req.mode {
-                AttentionMode::Dense => None,
-                AttentionMode::Sparse => {
-                    let ti = Instant::now();
-                    self.vsp.indexer.score_chunk(&mut st.inc, &k, &v);
-                    let a_v = st.inc.finalize_vertical();
-                    let c = decode_columns(
-                        &a_v,
-                        view.len,
-                        self.cfg.decode_top_k,
-                        self.cfg.decode_window,
-                    );
-                    st.resp.index_us += ti.elapsed().as_micros() as u64;
-                    Some(c)
-                }
-            };
-            jobs.push(Job::Ready { q, view, cols });
-        }
-        // Phase 2: batched single-query attention across the pool.  The
-        // closure captures only the jobs and free-function kernels (not
-        // `self`), so it stays Sync regardless of backend.
-        let mut out = Mat::zeros(states.len(), d.max(1));
-        par_chunks_mut(&mut out.data, d.max(1), |i, chunk| {
-            if let Job::Ready { q, view, cols } = &jobs[i] {
-                match cols {
-                    None => flash_decode_into(q.row(0), view, block_k, chunk),
-                    Some(c) => sparse_decode_vs_into(q.row(0), view, c, chunk),
-                }
-            }
-        });
-        // Phase 3: tokens, frames, transitions.
-        let now = Instant::now();
-        let mut steps = Vec::with_capacity(states.len());
-        for (i, (st, job)) in states.iter_mut().zip(jobs).enumerate() {
-            match job {
-                Job::Failed => {
-                    let mut resp = std::mem::take(&mut st.resp);
-                    resp.ok = false;
-                    steps.push(DecodeStep::Failed(resp));
-                }
-                Job::Ready { .. } => {
-                    let token = token_from(out.row(i));
-                    let itl = now.duration_since(st.last_token_at).as_micros() as u64;
-                    st.last_token_at = now;
-                    let frame = TokenFrame {
-                        id: st.req.id,
-                        index: st.generated,
-                        pos: st.bucket + st.generated,
-                        token,
-                        itl_us: itl,
-                    };
-                    st.generated += 1;
-                    st.resp.tokens.push(token);
-                    st.resp.decode_us.push(itl);
-                    if st.generated >= st.max_new {
-                        let mut resp = std::mem::take(&mut st.resp);
-                        resp.ok = resp.error.is_none();
-                        steps.push(DecodeStep::Done(frame, resp));
-                    } else {
-                        steps.push(DecodeStep::Token(frame));
-                    }
-                }
-            }
-        }
-        steps
-    }
-}
-
-/// Deterministic synthetic token readout: FNV-1a over the attended output's
-/// bits, folded into a 32k vocabulary.  Stands in for the LM head + sampler
-/// the toy model does not have — what matters for the serving stack is that
-/// tokens are cheap, deterministic, and depend on the attention output.
-fn token_from(out: &[f32]) -> u32 {
-    let mut h: u32 = 0x811c_9dc5;
-    for &x in out {
-        h = (h ^ x.to_bits()).wrapping_mul(16_777_619);
-    }
-    h % 32_000
-}
-
-fn digest(m: &Mat) -> Vec<f32> {
-    m.data.iter().take(4).cloned().collect()
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn native_engine_dense_vs_sparse_digests_close() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let mut rng = Rng::new(0);
-        let rd = e.process(&PrefillRequest::synthetic(1, 128, 3, AttentionMode::Dense), &mut rng);
-        let rs = e.process(&PrefillRequest::synthetic(2, 128, 3, AttentionMode::Sparse), &mut rng);
-        assert!(rd.ok && rs.ok);
-        assert_eq!(rd.bucket, 128);
-        assert!(rs.density < 1.0);
-        // Same synthetic head; sparse output should approximate dense.
-        for (a, b) in rd.output_digest.iter().zip(&rs.output_digest) {
-            assert!((a - b).abs() < 0.35, "{:?} vs {:?}", rd.output_digest, rs.output_digest);
-        }
-    }
-
-    #[test]
-    fn oversized_request_fails_cleanly() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let mut rng = Rng::new(0);
-        let r = e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense), &mut rng);
-        assert!(!r.ok);
-        assert!(r.error.unwrap().contains("exceeds"));
-    }
-
-    #[test]
-    fn chunked_dense_matches_monolithic_digest_exactly() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let mut rng = Rng::new(0);
-        let mono = e.process(&PrefillRequest::synthetic(1, 256, 3, AttentionMode::Dense), &mut rng);
-        assert!(mono.ok);
-        assert_eq!(mono.chunks, 1);
-        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
-        let bucket = e.bucket_for(256).unwrap();
-        assert!(store.reserve(2, bucket));
-        let req = PrefillRequest::synthetic(2, 256, 3, AttentionMode::Dense);
-        let mut run = e.begin_chunked(req, bucket, 100, &mut rng);
-        let resp = loop {
-            match e.process_chunk(&mut run, &store) {
-                ChunkStep::Done(r) => break r,
-                ChunkStep::Progress => {}
-            }
-        };
-        store.free(2);
-        assert!(resp.ok, "{:?}", resp.error);
-        assert_eq!(resp.chunks, 3, "256 rows at chunk 100 -> 3 chunks");
-        assert_eq!(resp.chunk_us.len(), 3);
-        assert_eq!(resp.output_digest, mono.output_digest, "paged chunked == contiguous");
-        assert!(resp.ttft_us > 0 && resp.ttft_us <= resp.queue_us + resp.prefill_us);
-    }
-
-    #[test]
-    fn chunked_sparse_density_matches_monolithic() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let mut rng = Rng::new(0);
-        let mono = e.process(&PrefillRequest::synthetic(1, 256, 9, AttentionMode::Sparse), &mut rng);
-        assert!(mono.ok);
-        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
-        let bucket = e.bucket_for(256).unwrap();
-        assert!(store.reserve(2, bucket));
-        let req = PrefillRequest::synthetic(2, 256, 9, AttentionMode::Sparse);
-        let mut run = e.begin_chunked(req, bucket, 64, &mut rng);
-        let resp = loop {
-            match e.process_chunk(&mut run, &store) {
-                ChunkStep::Done(r) => break r,
-                ChunkStep::Progress => {}
-            }
-        };
-        store.free(2);
-        assert!(resp.ok, "{:?}", resp.error);
-        assert_eq!(resp.chunks, 4);
-        // The final chunk's incremental scores equal the monolithic
-        // predict_kv exactly, so the selected mask (and density) agree.
-        assert_eq!(resp.density, mono.density);
-        assert!(resp.index_us > 0);
-    }
-
-    #[test]
-    fn deterministic_for_same_seed() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let mut rng = Rng::new(0);
-        let a = e.process(&PrefillRequest::synthetic(1, 128, 9, AttentionMode::Sparse), &mut rng);
-        let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse), &mut rng);
-        assert_eq!(a.output_digest, b.output_digest);
-        assert_eq!(a.density, b.density);
-    }
-
-    /// Drive one request through chunked prefill into decode, returning the
-    /// finished response.
-    fn prefill_then_decode(
-        e: &PrefillEngine,
-        store: &PagedKvStore,
-        req: PrefillRequest,
-        chunk: usize,
-    ) -> PrefillResponse {
-        let mut rng = Rng::new(0);
-        let bucket = e.bucket_for(req.seq_len()).unwrap();
-        let max_new = req.max_new_tokens;
-        assert!(store.reserve(req.id, bucket + max_new));
-        let id = req.id;
-        let mut run = e.begin_chunked(req, bucket, chunk, &mut rng);
-        let prefill_resp = loop {
-            match e.process_chunk(&mut run, store) {
-                ChunkStep::Done(r) => break r,
-                ChunkStep::Progress => {}
-            }
-        };
-        assert!(prefill_resp.ok, "{:?}", prefill_resp.error);
-        let mut states = vec![e.begin_decode(run, prefill_resp)];
-        let resp = loop {
-            let steps = e.decode_round(&mut states, store);
-            match steps.into_iter().next().unwrap() {
-                DecodeStep::Token(_) => {}
-                DecodeStep::Done(frame, resp) => {
-                    assert_eq!(frame.index + 1, max_new);
-                    break resp;
-                }
-                DecodeStep::Failed(resp) => break resp,
-            }
-        };
-        store.free(id);
-        resp
-    }
-
-    #[test]
-    fn decode_generates_requested_tokens_and_appends_kv() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
-        let mut req = PrefillRequest::synthetic(1, 128, 5, AttentionMode::Sparse);
-        req.max_new_tokens = 6;
-        let resp = prefill_then_decode(&e, &store, req, 64);
-        assert!(resp.ok, "{:?}", resp.error);
-        assert_eq!(resp.tokens.len(), 6);
-        assert_eq!(resp.decode_us.len(), 6);
-        assert!(resp.tokens.iter().all(|&t| t < 32_000));
-        assert_eq!(store.used(), 0, "reservation freed after decode");
-    }
-
-    #[test]
-    fn decode_tokens_deterministic_across_ids() {
-        let e = PrefillEngine::native_quick(EngineConfig::default());
-        let store = PagedKvStore::new(64, 16, e.cfg.synth.head_dim);
-        let mk = |id: u64, mode: AttentionMode| {
-            let mut r = PrefillRequest::synthetic(id, 128, 5, mode);
-            r.max_new_tokens = 4;
-            r
-        };
-        let a = prefill_then_decode(&e, &store, mk(1, AttentionMode::Sparse), 64);
-        let b = prefill_then_decode(&e, &store, mk(2, AttentionMode::Sparse), 64);
-        assert_eq!(a.tokens, b.tokens, "same seed => same token stream, id-independent");
-        let c = prefill_then_decode(&e, &store, mk(3, AttentionMode::Dense), 64);
-        let d = prefill_then_decode(&e, &store, mk(4, AttentionMode::Dense), 64);
-        assert_eq!(c.tokens, d.tokens, "dense decode deterministic too");
     }
 }

@@ -26,6 +26,9 @@ pub struct Metrics {
     pub chunks_executed: AtomicU64,
     /// Total tokens generated across completed requests.
     pub tokens_generated: AtomicU64,
+    /// Generations ended by a stop token before `max_new_tokens` (their
+    /// unused KV tail blocks were reclaimed early).
+    pub early_stopped: AtomicU64,
     prefill_us: Mutex<Reservoir>,
     queue_us: Mutex<Reservoir>,
     index_us: Mutex<Reservoir>,
@@ -42,6 +45,7 @@ pub struct Snapshot {
     pub kv_rejections: u64,
     pub chunks_executed: u64,
     pub tokens_generated: u64,
+    pub early_stopped: u64,
     pub p50_prefill_us: f64,
     pub p95_prefill_us: f64,
     pub p50_ttft_us: f64,
@@ -65,6 +69,7 @@ impl Metrics {
             kv_rejections: AtomicU64::new(0),
             chunks_executed: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
+            early_stopped: AtomicU64::new(0),
             prefill_us: res(),
             queue_us: res(),
             index_us: res(),
@@ -111,6 +116,7 @@ impl Metrics {
             kv_rejections: self.kv_rejections.load(Ordering::Relaxed),
             chunks_executed: self.chunks_executed.load(Ordering::Relaxed),
             tokens_generated: self.tokens_generated.load(Ordering::Relaxed),
+            early_stopped: self.early_stopped.load(Ordering::Relaxed),
             p50_prefill_us: percentile_sorted(&prefill, 0.5),
             p95_prefill_us: percentile_sorted(&prefill, 0.95),
             p50_ttft_us: percentile_sorted(&ttft, 0.5),
@@ -144,6 +150,7 @@ impl Snapshot {
             ("kv_rejections", Json::Num(self.kv_rejections as f64)),
             ("chunks_executed", Json::Num(self.chunks_executed as f64)),
             ("tokens_generated", Json::Num(self.tokens_generated as f64)),
+            ("early_stopped", Json::Num(self.early_stopped as f64)),
             ("p50_prefill_us", Json::Num(self.p50_prefill_us)),
             ("p95_prefill_us", Json::Num(self.p95_prefill_us)),
             ("p50_ttft_us", Json::Num(self.p50_ttft_us)),

@@ -7,39 +7,48 @@
 //! that holds the actual K/V rows, and every scheduler round interleaves
 //! one prefill chunk per prefilling request with one batched decode step
 //! across all decoding requests — a 128k prefill neither blocks the short
-//! requests behind it nor starves the token streams already flowing.  Per
-//! prefill chunk, the engine appends the chunk's K/V to the paged store,
-//! updates the incremental vertical/slash index scores, and runs a
-//! block-table-aware executor (`flash_attention_paged` /
-//! `sparse_attention_vs_paged`) over the chunk's queries.  Per decode step,
-//! each request synthesizes its next (q, k, v) row, appends the K/V to the
-//! same reservation, and runs single-query attention over its block table —
-//! dense (`flash_decode_paged`-style streaming) or sparse (top-k vertical
-//! columns of the request's live index scores + a local window).  Token
-//! frames stream to the client as they are produced; the final response
-//! carries the token list and per-token ITL.  Python never runs here; the
-//! PJRT backend executes whole-bucket AOT graphs, schedules as single-chunk
-//! requests, and completes at prefill (decode is a paged-store capability).
+//! requests behind it nor starves the token streams already flowing.
+//!
+//! Execution is pluggable: the scheduler drives `dyn`
+//! [`ExecBackend`](backend::ExecBackend) through one typed lifecycle
+//! (`begin` -> `prefill_chunk`* -> `decode_step`*), and a
+//! [`Capabilities`](backend::Capabilities) struct tells it what the
+//! backend can do (chunked? parallel? decode? largest bucket?).  Swapping
+//! the fused tiled kernels for the seed's row-serial oracle — or for the
+//! PJRT AOT graphs — changes one constructor call, nothing in the
+//! scheduler.  Embedders construct the whole stack through
+//! [`crate::serve::EngineBuilder`].
 //!
 //! Module map:
 //!   request    — request/response/stream types: per-chunk timing + TTFT,
-//!                `max_new_tokens`, TokenFrame / ResponseEvent /
-//!                ResponseHandle (frames then final response)
+//!                `max_new_tokens` / `stop_token`, TokenFrame /
+//!                ResponseEvent / ResponseHandle (frames then final
+//!                response)
 //!   admission  — bounded admission queue (backpressure) + WorkItem
 //!   scheduler  — continuous-batching scheduler (admission -> bucket +
 //!                token-budget KV reservation -> per-round chunk dispatch +
-//!                batched decode step; prefill -> decode -> complete)
+//!                batched decode step), driven entirely through
+//!                `dyn ExecBackend` + `Capabilities`
+//!   backend    — the execution backends behind one object-safe trait and
+//!                a typed `RunState` lifecycle: `backend::native` (fused
+//!                tiled kernels), `backend::reference` (seed row-serial
+//!                conformance oracle), `backend::pjrt` (AOT graphs, `pjrt`
+//!                feature)
+//!   engine     — shared backend configuration (`EngineConfig`,
+//!                `AttentionMode`) — the thin facade left of the old
+//!                `PrefillEngine`
 //!   kv_cache   — paged KV store: block arenas holding real K/V rows,
-//!                per-request block tables, append/view/gather/free
+//!                per-request block tables, append/view/gather/shrink/free
 //!                (re-export of `tensor::paged` — the attention kernels
 //!                read through it, so it lives below them)
-//!   engine     — the execution pipeline: monolithic `process` (parity
-//!                baseline, PJRT), chunked `begin_chunked`/`process_chunk`,
-//!                and the decode phase `begin_decode`/`decode_round`
+//!   config     — the deployment-facing configuration surface: one
+//!                declarative key table drives both the JSON file format
+//!                and the `--key value` CLI overrides
 //!   metrics    — counters + reservoir-sampled latency/TTFT/ITL summaries
 //!   server     — TCP JSON-lines front end + client (streams token frames)
 
 pub mod admission;
+pub mod backend;
 pub mod config;
 pub mod engine;
 pub mod kv_cache;
@@ -48,7 +57,8 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use engine::{AttentionMode, EngineConfig, PrefillEngine};
+pub use backend::{Capabilities, ChunkStep, DecodeStep, ExecBackend, RunState};
+pub use engine::{AttentionMode, EngineConfig};
 pub use kv_cache::{PagedKv, PagedKvStore};
 pub use request::{PrefillRequest, PrefillResponse, ResponseEvent, ResponseHandle, TokenFrame};
 
@@ -65,7 +75,7 @@ pub struct CoordinatorConfig {
     /// Default rows per prefill chunk (per-request `chunk` overrides).
     pub chunk_tokens: usize,
     /// Chunks dispatched per scheduling round — the interleaving width and
-    /// the batch-level parallelism of the native backend.
+    /// the batch-level parallelism of parallel backends.
     pub max_inflight: usize,
     pub max_wait_ms: u64,
     /// Server-side cap on per-request `max_new_tokens` (requests asking for
@@ -108,28 +118,13 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the coordinator with the given engine (takes ownership; the
-    /// engine lives on the executor thread).
-    ///
-    /// SAFETY of the Send wrapper: the PJRT wrapper types hold `Rc`s and raw
-    /// executable pointers, which makes `PrefillEngine` `!Send` by
-    /// construction.  The engine is *moved wholesale* into the single
-    /// executor thread here — no clone of any `Rc` stays behind on the
-    /// calling thread, and all subsequent PJRT use is from that one thread,
-    /// which is exactly the single-threaded discipline the types assume.
-    /// (The native backend additionally shares `&engine` with the scoped
-    /// chunk workers — see `supports_parallel`.)
-    pub fn start(cfg: CoordinatorConfig, engine: PrefillEngine) -> Coordinator {
-        struct SendEngine(PrefillEngine);
-        unsafe impl Send for SendEngine {}
-        impl SendEngine {
-            // Method (not field access) so the 2021-edition closure captures
-            // the whole Send wrapper rather than the !Send field.
-            fn into_inner(self) -> PrefillEngine {
-                self.0
-            }
-        }
-        let engine = SendEngine(engine);
+    /// Start the coordinator with the given backend (takes ownership; the
+    /// backend is `Send` by trait bound and lives on the executor thread —
+    /// backends that additionally allow `&self` to be shared with the
+    /// scoped chunk workers opt in through
+    /// [`Capabilities::with_parallel_dispatch`]).  Prefer
+    /// [`crate::serve::EngineBuilder`] over calling this directly.
+    pub fn start(cfg: CoordinatorConfig, backend: Box<dyn ExecBackend>) -> Coordinator {
         let admission = Arc::new(admission::AdmissionQueue::new(cfg.max_queue));
         let metrics = Arc::new(metrics::Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
@@ -154,10 +149,9 @@ impl Coordinator {
         // coordinators with different knobs in one process do not fight.
         let pool_threads = cfg.engine.threads;
         let executor = std::thread::spawn(move || {
-            let engine = engine.into_inner();
             let mut rng = Rng::new(0xC0FFEE);
             let mut run = move || {
-                scheduler::run_loop(&scfg, &engine, &adm, &store, &met, &stp, &mut rng);
+                scheduler::run_loop(&scfg, backend.as_ref(), &adm, &store, &met, &stp, &mut rng);
             };
             if pool_threads > 0 {
                 crate::util::parallel::with_threads(pool_threads, move || run());
@@ -184,9 +178,7 @@ impl Coordinator {
     /// Convenience: submit and block for the final response (any token
     /// frames are folded into its `tokens`/`decode_us`).
     pub fn prefill(&self, req: PrefillRequest) -> anyhow::Result<PrefillResponse> {
-        let rx = self
-            .submit(req)
-            .map_err(|_| anyhow::anyhow!("admission queue full"))?;
+        let rx = self.submit(req).map_err(|_| anyhow::anyhow!("admission queue full"))?;
         Ok(rx.wait()?)
     }
 
@@ -211,6 +203,7 @@ impl Drop for Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::serve::{BackendKind, EngineBuilder};
 
     fn native_coordinator(max_queue: usize) -> Coordinator {
         let cfg = CoordinatorConfig {
@@ -219,16 +212,13 @@ mod tests {
             max_wait_ms: 1,
             ..Default::default()
         };
-        let engine = PrefillEngine::native_quick(cfg.engine.clone());
-        Coordinator::start(cfg, engine)
+        EngineBuilder::new().config(cfg).build().unwrap()
     }
 
     #[test]
     fn serves_a_request_end_to_end() {
         let c = native_coordinator(16);
-        let resp = c
-            .prefill(PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse))
-            .unwrap();
+        let resp = c.prefill(PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse)).unwrap();
         assert_eq!(resp.id, 1);
         assert!(resp.ok, "{:?}", resp.error);
         assert!(resp.density > 0.0 && resp.density < 0.8);
@@ -280,7 +270,8 @@ mod tests {
         let c = native_coordinator(1);
         let mut results = Vec::new();
         for i in 0..50 {
-            results.push(c.submit(PrefillRequest::synthetic(i, 256, i, AttentionMode::Sparse)).is_ok());
+            let req = PrefillRequest::synthetic(i, 256, i, AttentionMode::Sparse);
+            results.push(c.submit(req).is_ok());
         }
         assert!(results.iter().any(|x| !x), "expected at least one rejection");
         drop(c);
@@ -297,5 +288,18 @@ mod tests {
         assert_eq!(resp.chunk_us.len(), 4);
         let snap = c.shutdown();
         assert_eq!(snap.chunks_executed, 4);
+    }
+
+    #[test]
+    fn reference_backend_serves_through_the_same_coordinator() {
+        let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+        let c = EngineBuilder::new().config(cfg).backend(BackendKind::Reference).build().unwrap();
+        let mut req = PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse);
+        req.max_new_tokens = 3;
+        let resp = c.prefill(req).unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 3);
+        let snap = c.shutdown();
+        assert_eq!(snap.completed, 1);
     }
 }

@@ -31,6 +31,11 @@ pub struct PrefillRequest {
     /// `prompt + max_new_tokens` rows so an admitted request can always
     /// decode to completion.
     pub max_new_tokens: usize,
+    /// Generation ends early when this token is produced (the stop token is
+    /// still emitted and counted).  The unused tail blocks of the KV
+    /// reservation are reclaimed immediately on early stop, so long-running
+    /// servers don't strand capacity on short generations.
+    pub stop_token: Option<u32>,
     pub submitted_at: std::time::Instant,
 }
 
@@ -43,6 +48,7 @@ impl PrefillRequest {
             budget: 0.5,
             chunk: None,
             max_new_tokens: 0,
+            stop_token: None,
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -55,6 +61,7 @@ impl PrefillRequest {
             budget: 0.5,
             chunk: None,
             max_new_tokens: 0,
+            stop_token: None,
             submitted_at: std::time::Instant::now(),
         }
     }

@@ -1,27 +1,30 @@
 //! Continuous-batching scheduler: chunk-granular prefill interleaved with a
-//! batched decode stream (the full request lifecycle, vLLM-style).
+//! batched decode stream (the full request lifecycle, vLLM-style), driven
+//! entirely through `dyn ExecBackend`.
 //!
-//! Requests move through three states: *prefilling* (chunk-granular, as in
-//! PR 2), *decoding* (one token per round, new K/V appended to the same
-//! paged reservation), and *complete* (KV freed, final response sent).
-//! Every scheduling round (1) admits new work — resolving the request's
-//! bucket, clamping `max_new_tokens` to the coordinator cap, rejecting
-//! never-fit requests at admission, and reserving `bucket + max_new` rows
-//! in the paged KV store all-or-nothing so an admitted request can always
-//! prefill *and* decode to completion; (2) dispatches the next chunk of
-//! every prefilling request across the worker pool; and (3) runs one
+//! Requests move through the typed [`RunState`] lifecycle: *prefilling*
+//! (chunk-granular), *decoding* (one token per round, new K/V appended to
+//! the same paged reservation), and *finished* (KV freed, final response
+//! sent).  Every scheduling round (1) admits new work — resolving the
+//! request's bucket, clamping `max_new_tokens` to the coordinator cap (and
+//! to zero for backends without the decode capability), rejecting
+//! never-fit requests at admission, and — for backends with the `chunked`
+//! capability, the only ones that touch the paged store — reserving
+//! `bucket + max_new` rows in the paged KV store all-or-nothing so an
+//! admitted request can always prefill *and* decode to completion;
+//! (2) dispatches the next chunk of
+//! every prefilling request — across the worker pool when the backend's
+//! [`Capabilities`] allow sharing, serially otherwise; and (3) runs one
 //! batched decode step across all decoding requests.  Decode streams
 //! therefore keep producing tokens while a 128k prefill is mid-sequence —
 //! neither direction can starve the other, because both get exactly one
 //! round of service per loop iteration.
 //!
-//! Prefill completions with `max_new_tokens > 0` transition to the decode
-//! lane instead of replying; each decode round streams one `TokenFrame`
-//! per request through the reply channel, and the final response (tokens,
-//! per-token ITL) follows the last frame.  Backends that cannot chunk
-//! (PJRT's whole-bucket AOT graphs) never touch the paged store, so their
-//! requests complete at prefill and `max_new_tokens` is ignored — decode
-//! is a native-backend (paged-store) capability.
+//! The scheduler never inspects which backend it is running: everything it
+//! needs to know (chunked? parallel? decode? largest bucket?) comes from
+//! [`Capabilities`], and the prefill -> decode transition is the backend's
+//! call ([`ChunkStep::EnterDecode`]) — there is no capability probing or
+//! feature-gated dispatch here.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -30,7 +33,7 @@ use std::sync::{mpsc, Mutex};
 use crate::util::rng::Rng;
 
 use super::admission::{AdmissionQueue, WorkItem};
-use super::engine::{ChunkRun, ChunkStep, DecodeState, DecodeStep, PrefillEngine};
+use super::backend::{Capabilities, ChunkStep, DecodeStep, ExecBackend, RunState};
 use super::kv_cache::PagedKvStore;
 use super::metrics::Metrics;
 use super::request::{PrefillResponse, ResponseEvent};
@@ -50,31 +53,31 @@ pub struct SchedulerConfig {
     pub max_new_cap: usize,
 }
 
-/// One prefilling request: its chunk state plus the reply channel.
+/// One prefilling request: its run state plus the reply channel.
 struct Inflight {
-    run: ChunkRun,
+    run: RunState,
     reply: mpsc::Sender<ResponseEvent>,
 }
 
-/// The decode batch: states and reply channels, index-aligned (the engine's
-/// `decode_round` takes a bare `&mut [DecodeState]`).
+/// The decode batch: runs and reply channels, index-aligned (the backend's
+/// `decode_step` takes a bare `&mut [RunState]`).
 #[derive(Default)]
 struct DecodeLane {
-    states: Vec<DecodeState>,
+    runs: Vec<RunState>,
     replies: Vec<mpsc::Sender<ResponseEvent>>,
 }
 
 impl DecodeLane {
     fn len(&self) -> usize {
-        self.states.len()
+        self.runs.len()
     }
 
     fn is_empty(&self) -> bool {
-        self.states.is_empty()
+        self.runs.is_empty()
     }
 
-    fn push(&mut self, state: DecodeState, reply: mpsc::Sender<ResponseEvent>) {
-        self.states.push(state);
+    fn push(&mut self, run: RunState, reply: mpsc::Sender<ResponseEvent>) {
+        self.runs.push(run);
         self.replies.push(reply);
     }
 }
@@ -83,13 +86,24 @@ impl DecodeLane {
 /// `stop` is set and all queues drain.
 pub(crate) fn run_loop(
     cfg: &SchedulerConfig,
-    engine: &PrefillEngine,
+    backend: &dyn ExecBackend,
     adm: &AdmissionQueue,
     store: &PagedKvStore,
     met: &Metrics,
     stop: &AtomicBool,
     rng: &mut Rng,
 ) {
+    let caps = backend.capabilities();
+    // `max_bucket` is the second copy of what `buckets()` already says;
+    // enforce the single-source invariant once, loudly, so an out-of-tree
+    // backend cannot ship an inconsistent pair (the admission error message
+    // cites `max_bucket`, the admission decision uses `bucket_for`).
+    assert_eq!(
+        Some(caps.max_bucket),
+        backend.buckets().iter().copied().max(),
+        "backend '{}' reports max_bucket inconsistent with its bucket list",
+        backend.name()
+    );
     let mut ready: VecDeque<Inflight> = VecDeque::new();
     let mut decoding = DecodeLane::default();
     loop {
@@ -97,7 +111,7 @@ pub(crate) fn run_loop(
         {
             break;
         }
-        admit(cfg, engine, adm, store, met, &mut ready, decoding.len(), rng);
+        admit(cfg, backend, &caps, adm, store, met, &mut ready, decoding.len(), rng);
         if ready.is_empty() && decoding.is_empty() {
             if stop.load(Ordering::Relaxed) && adm.is_empty() {
                 break;
@@ -106,23 +120,25 @@ pub(crate) fn run_loop(
         }
         // One prefill chunk per prefilling request...
         if !ready.is_empty() {
-            dispatch_round(cfg, engine, store, met, &mut ready, &mut decoding);
+            dispatch_round(cfg, backend, &caps, store, met, &mut ready, &mut decoding);
         }
         // ...and one batched decode step across all decoding requests, every
         // round — decode streams flow while long prefills are mid-sequence.
         if !decoding.is_empty() {
-            decode_round(engine, store, met, &mut decoding);
+            decode_round(backend, store, met, &mut decoding);
         }
     }
 }
 
 /// Pull new requests out of admission into the ready ring.  Over-cap
 /// requests are rejected here — at admission, with a clear error — instead
-/// of failing deep in the engine; requests the KV pool cannot hold yet are
+/// of failing deep in the backend; requests the KV pool cannot hold yet are
 /// requeued (backpressure) and admission pauses until blocks free up.
+#[allow(clippy::too_many_arguments)]
 fn admit(
     cfg: &SchedulerConfig,
-    engine: &PrefillEngine,
+    backend: &dyn ExecBackend,
+    caps: &Capabilities,
     adm: &AdmissionQueue,
     store: &PagedKvStore,
     met: &Metrics,
@@ -138,54 +154,63 @@ fn admit(
         return;
     }
     // Only block waiting for work when there is nothing at all to schedule.
-    let wait = if ready.is_empty() && decoding == 0 { cfg.max_wait } else { std::time::Duration::ZERO };
+    let wait =
+        if ready.is_empty() && decoding == 0 { cfg.max_wait } else { std::time::Duration::ZERO };
     let mut pending: VecDeque<WorkItem> = adm.pop_up_to(want, wait).into();
     while let Some(mut item) = pending.pop_front() {
         let n = item.req.seq_len();
-        let Some(bucket) = engine.bucket_for(n) else {
-            let largest = engine.buckets().into_iter().max().unwrap_or(0);
+        let Some(bucket) = backend.bucket_for(n) else {
             reject(
                 met,
                 &item,
-                format!("rejected at admission: seq_len {n} exceeds largest bucket {largest}"),
+                format!(
+                    "rejected at admission: seq_len {n} exceeds largest bucket {}",
+                    caps.max_bucket
+                ),
             );
             continue;
         };
         // Decode rows live in the same reservation as the prompt, so the
         // clamped token budget is part of the admission footprint.
         item.req.max_new_tokens = item.req.max_new_tokens.min(cfg.max_new_cap);
-        if !engine.supports_chunked() {
-            // Non-chunked backends (PJRT's whole-bucket graphs) never touch
-            // the paged store and complete at prefill: don't reserve — or
-            // reject for — decode rows that can never be used.
+        if !caps.decode {
+            // Backends without the decode capability complete at prefill:
+            // don't reserve — or reject for — decode rows that can never be
+            // used.
             item.req.max_new_tokens = 0;
         }
-        let rows = bucket + item.req.max_new_tokens;
-        if rows > store.total_blocks * store.block_size {
-            // Can NEVER fit, even with the pool idle: requeueing would spin
-            // forever and head-of-line-block everything behind it.
-            reject(
-                met,
-                &item,
-                format!(
-                    "rejected at admission: bucket {bucket} + {} new tokens exceeds kv pool capacity ({} blocks x {} rows)",
-                    item.req.max_new_tokens, store.total_blocks, store.block_size
-                ),
-            );
-            continue;
-        }
-        if !store.reserve(item.req.id, rows) {
-            met.kv_rejections.fetch_add(1, Ordering::Relaxed);
-            // Pool is full right now: put this item and everything popped
-            // behind it back at the FRONT of admission in arrival order,
-            // and retry after in-flight work frees blocks.
-            pending.push_front(item);
-            while let Some(it) = pending.pop_back() {
-                adm.requeue(it);
+        // Only chunked backends touch the paged store: reserving rows for a
+        // backend that executes monolithically would strand pool capacity
+        // on pure accounting (and spuriously reject on small pools).
+        if caps.chunked {
+            let rows = bucket + item.req.max_new_tokens;
+            if rows > store.total_blocks * store.block_size {
+                // Can NEVER fit, even with the pool idle: requeueing would
+                // spin forever and head-of-line-block everything behind it.
+                reject(
+                    met,
+                    &item,
+                    format!(
+                        "rejected at admission: bucket {bucket} + {} new tokens exceeds kv pool capacity ({} blocks x {} rows)",
+                        item.req.max_new_tokens, store.total_blocks, store.block_size
+                    ),
+                );
+                continue;
             }
-            break;
+            if !store.reserve(item.req.id, rows) {
+                met.kv_rejections.fetch_add(1, Ordering::Relaxed);
+                // Pool is full right now: put this item and everything
+                // popped behind it back at the FRONT of admission in
+                // arrival order, and retry after in-flight work frees
+                // blocks.
+                pending.push_front(item);
+                while let Some(it) = pending.pop_back() {
+                    adm.requeue(it);
+                }
+                break;
+            }
         }
-        let run = engine.begin_chunked(item.req, bucket, cfg.chunk_tokens, rng);
+        let run = backend.begin(item.req, bucket, cfg.chunk_tokens, rng);
         ready.push_back(Inflight { run, reply: item.reply });
     }
 }
@@ -197,16 +222,18 @@ fn reject(met: &Metrics, item: &WorkItem, msg: String) {
     let _ = item.reply.send(ResponseEvent::Done(resp));
 }
 
-/// Dispatch one chunk for up to `max_inflight` ready requests.  The native
-/// backend fans the chunks across the worker pool (each worker runs its
-/// chunk's kernels serially — the pool pins nested parallelism to 1);
-/// non-parallel backends process the round serially on this thread.
+/// Dispatch one chunk for up to `max_inflight` ready requests.  Backends
+/// with the `parallel` capability fan the chunks across the worker pool
+/// (each worker runs its chunk's kernels serially — the pool pins nested
+/// parallelism to 1); others process the round serially on this thread.
 /// Unfinished runs rejoin the BACK of the ready ring, which is what makes
-/// scheduling round-robin; finished runs that requested tokens transition
-/// to the decode lane with their KV reservation intact.
+/// scheduling round-robin; runs the backend transitioned into the decode
+/// phase ([`ChunkStep::EnterDecode`]) move to the decode lane with their KV
+/// reservation intact.
 fn dispatch_round(
     cfg: &SchedulerConfig,
-    engine: &PrefillEngine,
+    backend: &dyn ExecBackend,
+    caps: &Capabilities,
     store: &PagedKvStore,
     met: &Metrics,
     ready: &mut VecDeque<Inflight>,
@@ -215,87 +242,93 @@ fn dispatch_round(
     let take = ready.len().min(cfg.max_inflight.max(1));
     let round: Vec<Inflight> = ready.drain(..take).collect();
     let survivors: Mutex<Vec<Inflight>> = Mutex::new(Vec::with_capacity(take));
-    let entering_decode: Mutex<Vec<(DecodeState, mpsc::Sender<ResponseEvent>)>> =
-        Mutex::new(Vec::new());
-    let step = |mut job: Inflight, eng: &PrefillEngine| match eng.process_chunk(&mut job.run, store)
+    let entering_decode: Mutex<Vec<Inflight>> = Mutex::new(Vec::new());
+    let step = |mut job: Inflight, b: &dyn ExecBackend| match b.prefill_chunk(&mut job.run, store)
     {
         ChunkStep::Progress => survivors.lock().unwrap().push(job),
+        ChunkStep::EnterDecode => entering_decode.lock().unwrap().push(job),
         ChunkStep::Done(resp) => {
-            // Only the chunked (paged-store) path can decode: the monolithic
-            // fallback never appended K/V, so it completes at prefill.
-            if resp.ok && job.run.req.max_new_tokens > 0 && eng.supports_chunked() {
-                let Inflight { run, reply } = job;
-                let state = eng.begin_decode(run, resp);
-                entering_decode.lock().unwrap().push((state, reply));
-            } else {
-                store.free(job.run.req.id);
-                met.record(&resp);
-                let _ = job.reply.send(ResponseEvent::Done(resp));
-            }
+            store.free(job.run.id());
+            met.record(&resp);
+            let _ = job.reply.send(ResponseEvent::Done(resp));
         }
     };
-    if engine.supports_parallel() && round.len() > 1 {
-        // SAFETY of the Sync wrapper: taken only when supports_parallel()
-        // is true, i.e. the Native backend — plain owned data with no
-        // interior mutability, and process_chunk takes &self on the engine.
-        struct ShareEngine<'a>(&'a PrefillEngine);
-        unsafe impl Sync for ShareEngine<'_> {}
-        impl<'a> ShareEngine<'a> {
+    if caps.parallel() && round.len() > 1 {
+        // SAFETY of the Sync wrapper: taken only when the backend opted
+        // into parallel dispatch through the *unsafe*
+        // `Capabilities::with_parallel_dispatch`, whose contract is exactly
+        // this — `&self` is soundly shareable across threads (plain owned
+        // data, no interior mutability); `prefill_chunk` takes `&self`.
+        struct ShareBackend<'a>(&'a dyn ExecBackend);
+        unsafe impl Sync for ShareBackend<'_> {}
+        impl<'a> ShareBackend<'a> {
             // Method (not field access) so the closure captures the whole
             // Sync wrapper rather than the inner reference (2021 disjoint
             // capture).
-            fn engine(&self) -> &'a PrefillEngine {
+            fn backend(&self) -> &'a dyn ExecBackend {
                 self.0
             }
         }
-        let eng = ShareEngine(engine);
-        crate::util::parallel::par_drain(round, |job| step(job, eng.engine()));
+        let b = ShareBackend(backend);
+        crate::util::parallel::par_drain(round, |job| step(job, b.backend()));
     } else {
         for job in round {
-            step(job, engine);
+            step(job, backend);
         }
     }
     // Survivors and decode entrants rejoin in request-id order for
     // determinism (par_drain completes in arbitrary order).
     let mut back = survivors.into_inner().unwrap();
-    back.sort_by_key(|j| j.run.req.id);
+    back.sort_by_key(|j| j.run.id());
     for job in back {
         ready.push_back(job);
     }
     let mut entrants = entering_decode.into_inner().unwrap();
-    entrants.sort_by_key(|(s, _)| s.req.id);
-    for (state, reply) in entrants {
-        decoding.push(state, reply);
+    entrants.sort_by_key(|j| j.run.id());
+    for Inflight { run, reply } in entrants {
+        debug_assert!(run.is_decoding(), "EnterDecode must leave the run in the decode phase");
+        decoding.push(run, reply);
     }
 }
 
 /// One batched decode step: every decoding request generates its next token
-/// (the engine fans the batch's attention across the worker pool), frames
-/// stream out as soon as they exist, and finished requests free their KV and
-/// reply.
+/// (the backend may fan the batch across the worker pool), frames stream
+/// out as soon as they exist, and finished requests free their KV and
+/// reply.  Early-stopped generations (stop token before `max_new_tokens`)
+/// are counted separately; their unused KV tail was already reclaimed by
+/// the backend.
 fn decode_round(
-    engine: &PrefillEngine,
+    backend: &dyn ExecBackend,
     store: &PagedKvStore,
     met: &Metrics,
     decoding: &mut DecodeLane,
 ) {
-    let steps = engine.decode_round(&mut decoding.states, store);
-    let states = std::mem::take(&mut decoding.states);
+    let steps = backend.decode_step(&mut decoding.runs, store);
+    assert_eq!(
+        steps.len(),
+        decoding.runs.len(),
+        "backend '{}' broke the decode_step contract: one index-aligned DecodeStep per run",
+        backend.name()
+    );
+    let runs = std::mem::take(&mut decoding.runs);
     let replies = std::mem::take(&mut decoding.replies);
-    for ((state, reply), step) in states.into_iter().zip(replies).zip(steps) {
+    for ((run, reply), step) in runs.into_iter().zip(replies).zip(steps) {
         match step {
             DecodeStep::Token(frame) => {
                 let _ = reply.send(ResponseEvent::Token(frame));
-                decoding.push(state, reply);
+                decoding.push(run, reply);
             }
             DecodeStep::Done(frame, resp) => {
                 let _ = reply.send(ResponseEvent::Token(frame));
-                store.free(state.req.id);
+                if resp.tokens.len() < run.request().max_new_tokens {
+                    met.early_stopped.fetch_add(1, Ordering::Relaxed);
+                }
+                store.free(run.id());
                 met.record(&resp);
                 let _ = reply.send(ResponseEvent::Done(resp));
             }
             DecodeStep::Failed(resp) => {
-                store.free(state.req.id);
+                store.free(run.id());
                 met.record(&resp);
                 let _ = reply.send(ResponseEvent::Done(resp));
             }
@@ -306,12 +339,14 @@ fn decode_round(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::native::NativeBackend;
+    use crate::coordinator::backend::reference::ReferenceBackend;
     use crate::coordinator::engine::EngineConfig;
     use crate::coordinator::{AttentionMode, PrefillRequest};
 
-    fn setup() -> (SchedulerConfig, PrefillEngine, AdmissionQueue, PagedKvStore, Metrics) {
+    fn setup() -> (SchedulerConfig, NativeBackend, AdmissionQueue, PagedKvStore, Metrics) {
         let ecfg = EngineConfig::default();
-        let engine = PrefillEngine::native_quick(ecfg.clone());
+        let backend = NativeBackend::quick(ecfg.clone());
         let store = PagedKvStore::new(256, 64, ecfg.synth.head_dim);
         (
             SchedulerConfig {
@@ -320,7 +355,7 @@ mod tests {
                 max_wait: std::time::Duration::from_millis(1),
                 max_new_cap: 256,
             },
-            engine,
+            backend,
             AdmissionQueue::new(64),
             store,
             Metrics::new(),
@@ -357,11 +392,11 @@ mod tests {
 
     #[test]
     fn drains_all_work_then_stops() {
-        let (cfg, engine, adm, store, met) = setup();
+        let (cfg, backend, adm, store, met) = setup();
         let rxs: Vec<_> = (0..6).map(|i| submit(&adm, i, 128 + (i as usize % 2) * 128)).collect();
         let stop = AtomicBool::new(true); // pre-set: loop exits once drained
         let mut rng = Rng::new(1);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         for rx in rxs {
             assert!(final_of(&rx).1.ok);
         }
@@ -370,12 +405,30 @@ mod tests {
     }
 
     #[test]
+    fn serial_backend_drains_the_same_workload() {
+        // The reference backend reports `parallel: false`, driving the
+        // scheduler's serial dispatch path through the identical lifecycle.
+        let (cfg, _backend, adm, store, met) = setup();
+        let backend = ReferenceBackend::quick(EngineConfig::default());
+        assert!(!backend.capabilities().parallel());
+        let rxs: Vec<_> = (0..4).map(|i| submit(&adm, i, 128)).collect();
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(8);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        for rx in rxs {
+            assert!(final_of(&rx).1.ok);
+        }
+        assert_eq!(met.snapshot().completed, 4);
+        assert_eq!(store.used(), 0);
+    }
+
+    #[test]
     fn over_cap_rejected_at_admission() {
-        let (cfg, engine, adm, store, met) = setup();
+        let (cfg, backend, adm, store, met) = setup();
         let rx = submit(&adm, 1, 999_999);
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(2);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (_, resp) = final_of(&rx);
         assert!(!resp.ok);
         let err = resp.error.unwrap();
@@ -387,7 +440,7 @@ mod tests {
 
     #[test]
     fn never_fit_bucket_rejected_not_requeued() {
-        let (cfg, engine, adm, big_store, met) = setup();
+        let (cfg, backend, adm, big_store, met) = setup();
         // Pool (4 x 64 = 256 rows) smaller than the 512 bucket: the request
         // must be rejected at admission, not requeued forever, and must not
         // block the servable request behind it.
@@ -396,7 +449,7 @@ mod tests {
         let ok_rx = submit(&adm, 2, 128);
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(4);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (_, bad) = final_of(&bad_rx);
         assert!(!bad.ok);
         assert!(bad.error.unwrap().contains("exceeds kv pool capacity"));
@@ -407,7 +460,7 @@ mod tests {
 
     #[test]
     fn decode_footprint_counts_against_pool_capacity() {
-        let (cfg, engine, adm, big_store, met) = setup();
+        let (cfg, backend, adm, big_store, met) = setup();
         // Pool of exactly 256 rows: a 256-row prompt fits alone, but the
         // same prompt + 10 decode tokens can never fit and must be rejected
         // at admission (the reservation covers prompt + max_new).
@@ -416,7 +469,7 @@ mod tests {
         let ok_rx = submit_gen(&adm, 2, 256, 0);
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(5);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (_, bad) = final_of(&bad_rx);
         assert!(!bad.ok);
         assert!(bad.error.unwrap().contains("new tokens exceeds kv pool capacity"));
@@ -425,13 +478,13 @@ mod tests {
 
     #[test]
     fn kv_exhaustion_requeues_and_recovers() {
-        let (cfg, engine, adm, big_store, met) = setup();
+        let (cfg, backend, adm, big_store, met) = setup();
         // Pool that fits exactly one 1024-bucket request at a time.
         let store = PagedKvStore::new(16, 64, big_store.head_dim);
         let rxs: Vec<_> = (0..3).map(|i| submit(&adm, i, 1024)).collect();
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(3);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         for rx in rxs {
             assert!(final_of(&rx).1.ok, "requeued requests complete eventually");
         }
@@ -442,11 +495,11 @@ mod tests {
 
     #[test]
     fn generation_streams_frames_then_final_response() {
-        let (cfg, engine, adm, store, met) = setup();
+        let (cfg, backend, adm, store, met) = setup();
         let rx = submit_gen(&adm, 1, 128, 5);
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(6);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (frames, resp) = final_of(&rx);
         assert!(resp.ok, "{:?}", resp.error);
         assert_eq!(frames, 5, "one streamed frame per generated token");
@@ -456,19 +509,48 @@ mod tests {
         let snap = met.snapshot();
         assert_eq!(snap.completed, 1);
         assert_eq!(snap.tokens_generated, 5);
+        assert_eq!(snap.early_stopped, 0);
     }
 
     #[test]
     fn max_new_tokens_clamped_to_cap() {
-        let (mut cfg, engine, adm, store, met) = setup();
+        let (mut cfg, backend, adm, store, met) = setup();
         cfg.max_new_cap = 3;
         let rx = submit_gen(&adm, 1, 128, 100);
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(7);
-        run_loop(&cfg, &engine, &adm, &store, &met, &stop, &mut rng);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (frames, resp) = final_of(&rx);
         assert!(resp.ok, "{:?}", resp.error);
         assert_eq!(resp.tokens.len(), 3, "clamped to max_new_cap");
         assert_eq!(frames, 3);
+    }
+
+    #[test]
+    fn stop_token_ends_generation_early_and_reclaims_kv() {
+        let (cfg, backend, adm, store, met) = setup();
+        // Learn the deterministic token stream first, then replay the same
+        // request with its second token as the stop token.
+        let probe_rx = submit_gen(&adm, 1, 128, 6);
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(9);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        let (_, probe) = final_of(&probe_rx);
+        assert!(probe.ok, "{:?}", probe.error);
+        assert_eq!(probe.tokens.len(), 6);
+
+        let (tx, rx) = mpsc::channel();
+        let mut req = PrefillRequest::synthetic(2, 128, 1, AttentionMode::Sparse);
+        req.max_new_tokens = 6;
+        req.stop_token = Some(probe.tokens[1]);
+        adm.push(WorkItem { req, reply: tx }).unwrap();
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        let (frames, resp) = final_of(&rx);
+        assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 2, "generation stops at the stop token");
+        assert_eq!(resp.tokens, probe.tokens[..2], "stop token itself is emitted");
+        assert_eq!(frames, 2);
+        assert_eq!(store.used(), 0, "early-stopped reservation fully reclaimed");
+        assert_eq!(met.snapshot().early_stopped, 1);
     }
 }

@@ -2,10 +2,11 @@
 //!
 //! Wire protocol (one JSON object per line):
 //!   request:  {"id": 1, "n": 256, "seed": 7, "mode": "sparse", "budget": 0.5,
-//!              "chunk": 256, "max_new_tokens": 16}
+//!              "chunk": 256, "max_new_tokens": 16, "stop_token": 1234}
 //!             or {"id": 1, "tokens": [..], "mode": "dense"}
 //!   ("chunk" optionally overrides the coordinator's prefill chunk size;
-//!    "max_new_tokens" requests token generation after prefill)
+//!    "max_new_tokens" requests token generation after prefill;
+//!    "stop_token" ends generation early when that token is produced)
 //!   stream:   zero or more {"frame": "token", "id": .., "index": ..,
 //!             "pos": .., "token": .., "itl_us": ..} lines, written as each
 //!             decode step completes (TokenFrame::to_json)
@@ -61,6 +62,9 @@ pub fn parse_request(line: &str) -> anyhow::Result<PrefillRequest> {
     }
     if let Some(m) = j.get("max_new_tokens").and_then(|m| m.as_usize()) {
         req.max_new_tokens = m;
+    }
+    if let Some(t) = j.get("stop_token").and_then(|t| t.as_f64()) {
+        req.stop_token = Some(t as u32);
     }
     Ok(req)
 }
@@ -262,9 +266,12 @@ mod tests {
         assert_eq!(r3.chunk, Some(128));
         assert!(parse_request(r#"{"id": 6, "n": 512, "chunk": 0}"#).is_err());
 
-        let r4 = parse_request(r#"{"id": 7, "n": 256, "max_new_tokens": 16}"#).unwrap();
+        let r4 = parse_request(r#"{"id": 7, "n": 256, "max_new_tokens": 16, "stop_token": 99}"#)
+            .unwrap();
         assert_eq!(r4.max_new_tokens, 16);
+        assert_eq!(r4.stop_token, Some(99));
         assert_eq!(r3.max_new_tokens, 0, "absent field defaults to prefill-only");
+        assert_eq!(r3.stop_token, None);
 
         assert!(parse_request("{}").is_err());
         assert!(parse_request("not json").is_err());
@@ -272,10 +279,10 @@ mod tests {
 
     #[test]
     fn tcp_round_trip() {
-        use crate::coordinator::{CoordinatorConfig, PrefillEngine};
+        use crate::coordinator::CoordinatorConfig;
+        use crate::serve::EngineBuilder;
         let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
-        let engine = PrefillEngine::native_quick(cfg.engine.clone());
-        let coordinator = Arc::new(Coordinator::start(cfg, engine));
+        let coordinator = Arc::new(EngineBuilder::new().config(cfg).build().unwrap());
         let server = Server::start(coordinator.clone(), 0).unwrap();
         let mut client = Client::connect(server.addr).unwrap();
         let resp = client.prefill_synthetic(7, 128, 1, "sparse", 0.5).unwrap();
@@ -291,10 +298,10 @@ mod tests {
 
     #[test]
     fn generation_streams_frames_over_tcp() {
-        use crate::coordinator::{CoordinatorConfig, PrefillEngine};
+        use crate::coordinator::CoordinatorConfig;
+        use crate::serve::EngineBuilder;
         let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
-        let engine = PrefillEngine::native_quick(cfg.engine.clone());
-        let coordinator = Arc::new(Coordinator::start(cfg, engine));
+        let coordinator = Arc::new(EngineBuilder::new().config(cfg).build().unwrap());
         let server = Server::start(coordinator.clone(), 0).unwrap();
         let mut client = Client::connect(server.addr).unwrap();
         let (frames, resp) = client.generate(9, 128, 2, "sparse", 0.5, 5).unwrap();

@@ -26,6 +26,8 @@ pub mod indexer;
 /// not have (see Cargo.toml).
 #[cfg(feature = "pjrt")]
 pub mod runtime;
+/// The embedder-facing serving API: [`serve::EngineBuilder`].
+pub mod serve;
 pub mod sparse;
 pub mod sparse_attn;
 pub mod synth;

@@ -1,28 +1,30 @@
 //! VSPrefill CLI: serving, experiments, diagnostics.
 //!
 //! Subcommands:
-//!   serve    — start the TCP prefill service (native or PJRT backend)
+//!   serve    — start the TCP prefill service (--backend
+//!              native|reference|pjrt|auto)
 //!   bench    — closed-loop load test against an in-process coordinator
 //!   exp      — regenerate a paper table/figure (table1..5, fig2..8, ttft, all)
 //!   runtime  — smoke-check the PJRT artifact bundle
 //!   info     — print build/config information
 
-use vsprefill::coordinator::{
-    server::Server, AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest,
-};
+use vsprefill::coordinator::{server::Server, AttentionMode, Coordinator, PrefillRequest};
 use vsprefill::experiments as exp;
-#[cfg(feature = "pjrt")]
-use vsprefill::runtime;
+use vsprefill::serve::EngineBuilder;
 use vsprefill::util::args::Args;
 
-const KNOWN: &[&str] = &[
-    "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "max-new", "artifacts",
-    "config", "max-queue", "chunk-tokens", "max-inflight", "max-wait-ms", "max-new-cap",
-    "kv-blocks", "threads",
+/// Flags owned by the binary itself; every config knob's `--key value`
+/// override comes from the declarative key table (`config::cli_keys`), so
+/// the CLI surface can never drift from the JSON surface.
+const BASE_KNOWN: &[&str] = &[
+    "port", "backend", "quick", "seed", "requests", "budget", "mode", "n", "max-new",
+    "stop-token", "artifacts", "config",
 ];
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::from_env(KNOWN)?;
+    let mut known: Vec<&str> = BASE_KNOWN.to_vec();
+    known.extend(vsprefill::coordinator::config::cli_keys());
+    let args = Args::from_env(&known)?;
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
         "serve" => serve(&args),
@@ -39,28 +41,17 @@ fn main() -> anyhow::Result<()> {
     }
 }
 
-fn coordinator_config(args: &Args) -> anyhow::Result<CoordinatorConfig> {
-    vsprefill::coordinator::config::load(args.str_opt("config"), args)
-}
-
-fn build_engine(args: &Args) -> anyhow::Result<PrefillEngine> {
-    let cfg = coordinator_config(args)?;
-    match args.str_or("backend", "native").as_str() {
-        #[cfg(feature = "pjrt")]
-        "pjrt" => {
-            let dir = args.str_or("artifacts", "artifacts");
-            let rt = runtime::Engine::load(std::path::Path::new(&dir))?;
-            PrefillEngine::pjrt(cfg.engine, rt)
-        }
-        #[cfg(not(feature = "pjrt"))]
-        "pjrt" => anyhow::bail!("this binary was built without the `pjrt` feature"),
-        _ => Ok(PrefillEngine::native_quick(cfg.engine)),
-    }
+fn build_coordinator(args: &Args) -> anyhow::Result<Coordinator> {
+    let cfg = vsprefill::coordinator::config::load(args.str_opt("config"), args)?;
+    EngineBuilder::new()
+        .config(cfg)
+        .backend_name(&args.str_or("backend", "native"))?
+        .artifacts(&args.str_or("artifacts", "artifacts"))
+        .build()
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
-    let engine = build_engine(args)?;
-    let coordinator = std::sync::Arc::new(Coordinator::start(coordinator_config(args)?, engine));
+    let coordinator = std::sync::Arc::new(build_coordinator(args)?);
     let port = args.usize_or("port", 7791) as u16;
     let server = Server::start(coordinator.clone(), port)?;
     println!("vsprefill serving on {}", server.addr);
@@ -71,8 +62,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
 }
 
 fn bench(args: &Args) -> anyhow::Result<()> {
-    let engine = build_engine(args)?;
-    let coordinator = Coordinator::start(coordinator_config(args)?, engine);
+    let coordinator = build_coordinator(args)?;
     let requests = args.usize_or("requests", 64);
     let n = args.usize_or("n", 256);
     let mode = match args.str_or("mode", "sparse").as_str() {
@@ -80,12 +70,14 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         _ => AttentionMode::Sparse,
     };
     let max_new = args.usize_or("max-new", 0);
+    let stop_token = args.str_opt("stop-token").map(|s| s.parse::<u32>()).transpose()?;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for i in 0..requests {
         let mut req = PrefillRequest::synthetic(i as u64, n, i as u64, mode);
         req.budget = args.f64_or("budget", 0.5) as f32;
         req.max_new_tokens = max_new;
+        req.stop_token = stop_token;
         rxs.push(coordinator.submit(req).map_err(|_| anyhow::anyhow!("queue full"))?);
     }
     let mut ok = 0;
@@ -108,8 +100,9 @@ fn bench(args: &Args) -> anyhow::Result<()> {
     );
     if snap.tokens_generated > 0 {
         println!(
-            "decode: {} tokens  p50 itl {:.0}us  p95 itl {:.0}us  mean tpot {:.0}us",
-            snap.tokens_generated, snap.p50_itl_us, snap.p95_itl_us, snap.mean_tpot_us
+            "decode: {} tokens  p50 itl {:.0}us  p95 itl {:.0}us  mean tpot {:.0}us  early stops {}",
+            snap.tokens_generated, snap.p50_itl_us, snap.p95_itl_us, snap.mean_tpot_us,
+            snap.early_stopped
         );
     }
     Ok(())
@@ -164,7 +157,7 @@ fn runtime_smoke(args: &Args) -> anyhow::Result<()> {
     use vsprefill::tensor::Mat;
     use vsprefill::util::rng::Rng;
     let dir = args.str_or("artifacts", "artifacts");
-    let rt = runtime::Engine::load(std::path::Path::new(&dir))?;
+    let rt = vsprefill::runtime::Engine::load(std::path::Path::new(&dir))?;
     println!("loaded {} graphs from {dir}", rt.bundle.graphs.len());
     let n = rt.bundle.buckets[0];
     let d = rt.bundle.head_dim;

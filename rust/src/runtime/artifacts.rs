@@ -128,7 +128,13 @@ impl ArtifactBundle {
     /// Parse a weights JSON export ({name: {shape, data}}) into a map.
     pub fn load_weights(&self, file: &str) -> anyhow::Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>> {
         let text = std::fs::read_to_string(self.dir.join(file))?;
-        let root = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::parse_weights(&text)
+    }
+
+    /// Parse an already-read weights file (callers that need both the
+    /// weight map and another view of the same JSON read the file once).
+    pub fn parse_weights(text: &str) -> anyhow::Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>> {
+        let root = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
         let w = root.req("weights")?;
         let mut out = BTreeMap::new();
         for (name, entry) in w.as_obj().unwrap() {

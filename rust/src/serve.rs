@@ -1,0 +1,233 @@
+//! The embedder-facing serving API.
+//!
+//! [`EngineBuilder`] is the one way the binary, the examples, the benches
+//! and the tests construct a serving stack: pick a backend, apply
+//! configuration, `build()` a running [`Coordinator`] whose
+//! [`submit`](Coordinator::submit) returns the streaming
+//! [`ResponseHandle`](crate::coordinator::ResponseHandle).
+//!
+//! ```no_run
+//! use vsprefill::coordinator::{AttentionMode, PrefillRequest};
+//! use vsprefill::serve::EngineBuilder;
+//!
+//! let coordinator = EngineBuilder::new()
+//!     .buckets(vec![256, 1024])
+//!     .threads(4)
+//!     .build()
+//!     .unwrap();
+//! let resp = coordinator
+//!     .prefill(PrefillRequest::synthetic(1, 900, 7, AttentionMode::Sparse))
+//!     .unwrap();
+//! assert!(resp.ok);
+//! ```
+//!
+//! Backend selection is data, not code: `backend(BackendKind::..)` or
+//! `backend_name("native" | "reference" | "pjrt" | "auto")` — everything
+//! downstream of the builder talks `dyn ExecBackend`.
+
+use crate::coordinator::backend::native::NativeBackend;
+use crate::coordinator::backend::reference::ReferenceBackend;
+use crate::coordinator::{config, Coordinator, CoordinatorConfig, EngineConfig, ExecBackend};
+use crate::indexer::Indexer;
+
+/// Which execution backend to build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Fused tiled kernels over the paged KV store (the production CPU
+    /// path; chunked prefill + batched decode, fanned across the pool).
+    Native,
+    /// The seed's row-serial executor — slow, obviously correct, serial;
+    /// the conformance oracle.
+    Reference,
+    /// Whole-bucket AOT graphs through the PJRT runtime.  Requires the
+    /// `pjrt` cargo feature and a built artifact bundle.
+    Pjrt,
+    /// `Pjrt` when it loads (feature compiled in and a bundle present at
+    /// the configured artifacts directory), else `Native`.
+    Auto,
+}
+
+impl BackendKind {
+    /// Parse a backend name (config / CLI surface).
+    pub fn from_name(name: &str) -> anyhow::Result<BackendKind> {
+        match name {
+            "native" => Ok(BackendKind::Native),
+            "reference" => Ok(BackendKind::Reference),
+            "pjrt" => Ok(BackendKind::Pjrt),
+            "auto" => Ok(BackendKind::Auto),
+            other => anyhow::bail!(
+                "unknown backend '{other}' (known: native, reference, pjrt, auto)"
+            ),
+        }
+    }
+}
+
+/// Builder for a serving stack: backend selection + configuration in one
+/// place.  See the module docs for an example.
+pub struct EngineBuilder {
+    cfg: CoordinatorConfig,
+    kind: BackendKind,
+    indexer: Option<Indexer>,
+    /// Artifact-bundle directory; only read by the PJRT arm.
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    artifacts: String,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder {
+            cfg: CoordinatorConfig::default(),
+            kind: BackendKind::Native,
+            indexer: None,
+            artifacts: "artifacts".to_string(),
+        }
+    }
+
+    /// Replace the whole configuration (e.g. one loaded through
+    /// [`config::load`]).
+    pub fn config(mut self, cfg: CoordinatorConfig) -> EngineBuilder {
+        self.cfg = cfg;
+        self
+    }
+
+    pub fn backend(mut self, kind: BackendKind) -> EngineBuilder {
+        self.kind = kind;
+        self
+    }
+
+    /// Select the backend by name (`"native"`, `"reference"`, `"pjrt"`,
+    /// `"auto"`).
+    pub fn backend_name(mut self, name: &str) -> anyhow::Result<EngineBuilder> {
+        self.kind = BackendKind::from_name(name)?;
+        Ok(self)
+    }
+
+    /// Buckets served (ascending).  The PJRT backend overrides these with
+    /// the artifact bundle's bucket list.
+    pub fn buckets(mut self, buckets: Vec<usize>) -> EngineBuilder {
+        self.cfg.engine.buckets = buckets;
+        self
+    }
+
+    /// Worker-pool size (0 = auto).
+    pub fn threads(mut self, threads: usize) -> EngineBuilder {
+        self.cfg.engine.threads = threads;
+        self
+    }
+
+    /// Default rows per prefill chunk.
+    pub fn chunk_tokens(mut self, chunk: usize) -> EngineBuilder {
+        self.cfg.chunk_tokens = chunk;
+        self
+    }
+
+    /// Use a caller-provided indexer instead of the cached quick-distilled
+    /// one (native / reference backends).
+    pub fn indexer(mut self, ix: Indexer) -> EngineBuilder {
+        self.indexer = Some(ix);
+        self
+    }
+
+    /// Artifact-bundle directory for the PJRT backend (default
+    /// `artifacts`).
+    pub fn artifacts(mut self, dir: &str) -> EngineBuilder {
+        self.artifacts = dir.to_string();
+        self
+    }
+
+    /// Build just the backend (engine-level tests, conformance suites).
+    /// Validates the configuration first, exactly like [`build`](Self::build).
+    pub fn build_backend(&self) -> anyhow::Result<Box<dyn ExecBackend>> {
+        config::validate(&self.cfg)?;
+        let ecfg = self.cfg.engine.clone();
+        Ok(match self.kind {
+            BackendKind::Native => self.native(ecfg),
+            BackendKind::Reference => match &self.indexer {
+                Some(ix) => Box::new(ReferenceBackend::with_indexer(ecfg, ix.clone())),
+                None => Box::new(ReferenceBackend::quick(ecfg)),
+            },
+            BackendKind::Pjrt => self.build_pjrt(ecfg)?,
+            // Auto actually *tries* the PJRT load against the configured
+            // artifacts directory (not just a default-path probe), so an
+            // `.artifacts(..)` override is honored; any load failure —
+            // feature off, bundle missing or malformed — falls back to
+            // native.
+            BackendKind::Auto => match self.build_pjrt(ecfg.clone()) {
+                Ok(b) => b,
+                Err(_) => self.native(ecfg),
+            },
+        })
+    }
+
+    /// Build the full serving stack: construct the backend (validating the
+    /// configuration on the way) and start the coordinator.
+    pub fn build(self) -> anyhow::Result<Coordinator> {
+        let backend = self.build_backend()?;
+        Ok(Coordinator::start(self.cfg, backend))
+    }
+
+    fn native(&self, ecfg: EngineConfig) -> Box<dyn ExecBackend> {
+        match &self.indexer {
+            Some(ix) => Box::new(NativeBackend::with_indexer(ecfg, ix.clone())),
+            None => Box::new(NativeBackend::quick(ecfg)),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn build_pjrt(&self, ecfg: EngineConfig) -> anyhow::Result<Box<dyn ExecBackend>> {
+        use crate::coordinator::backend::pjrt::PjrtBackend;
+        let rt = crate::runtime::Engine::load(std::path::Path::new(&self.artifacts))?;
+        Ok(Box::new(PjrtBackend::load(ecfg, rt)?))
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    fn build_pjrt(&self, _ecfg: EngineConfig) -> anyhow::Result<Box<dyn ExecBackend>> {
+        anyhow::bail!("this binary was built without the `pjrt` feature (see rust/README.md)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_selects_backends_by_name() {
+        assert_eq!(BackendKind::from_name("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::from_name("reference").unwrap(), BackendKind::Reference);
+        assert_eq!(BackendKind::from_name("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::from_name("tpu").is_err());
+        let b = EngineBuilder::new().backend_name("reference").unwrap().build_backend().unwrap();
+        assert_eq!(b.name(), "reference");
+        let b = EngineBuilder::new().backend_name("native").unwrap().build_backend().unwrap();
+        assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn builder_rejects_invalid_configs() {
+        let cfg = CoordinatorConfig { chunk_tokens: 0, ..Default::default() };
+        assert!(EngineBuilder::new().config(cfg).build().is_err());
+    }
+
+    #[test]
+    fn builder_knobs_reach_the_backend() {
+        let b = EngineBuilder::new().buckets(vec![64, 96]).build_backend().unwrap();
+        assert_eq!(b.buckets(), vec![64, 96]);
+        assert_eq!(b.capabilities().max_bucket, 96);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_without_feature_is_a_clear_error() {
+        let err = EngineBuilder::new().backend(BackendKind::Pjrt).build_backend().unwrap_err();
+        assert!(format!("{err}").contains("pjrt"));
+        // Auto falls back to native instead of erroring.
+        let b = EngineBuilder::new().backend(BackendKind::Auto).build_backend().unwrap();
+        assert_eq!(b.name(), "native");
+    }
+}

@@ -306,15 +306,31 @@ pub fn sparse_decode_vs_paged(q: &[f32], kv: &PagedKv<'_>, cols: &[usize]) -> Ve
 /// Per-row candidate enumeration: the admissible columns of row i are
 /// exactly `vertical ∪ {i-o : o in slash}`; work per row is O(row_width).
 pub fn sparse_attention_vs_rowserial(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices) -> Mat {
-    let (n, d) = (q.rows, q.cols);
+    sparse_attention_vs_rowserial_rows(q, 0, k, v, idx)
+}
+
+/// [`sparse_attention_vs_rowserial`] restricted to the query rows
+/// `lo..lo + q_chunk.rows` (absolute row `i = lo + r` against the full
+/// `k`/`v`) — the chunked form the reference execution backend runs; the
+/// full executor above is the `lo = 0` special case, so the two can never
+/// diverge.
+pub fn sparse_attention_vs_rowserial_rows(
+    q_chunk: &Mat,
+    lo: usize,
+    k: &Mat,
+    v: &Mat,
+    idx: &VsIndices,
+) -> Mat {
+    let (n, d) = (k.rows, q_chunk.cols);
     let scale = 1.0 / (d as f32).sqrt();
-    let mut out = Mat::zeros(n, d);
+    let mut out = Mat::zeros(q_chunk.rows, d);
     let vset = idx.vertical_bitset(n);
     let mut cand: Vec<usize> = Vec::with_capacity(idx.vertical.len() + idx.slash.len());
     let mut scores: Vec<f32> = Vec::with_capacity(idx.vertical.len() + idx.slash.len());
 
-    for i in 0..n {
-        let qrow = q.row(i);
+    for r in 0..q_chunk.rows {
+        let i = lo + r;
+        let qrow = q_chunk.row(r);
         cand.clear();
         scores.clear();
         let mut m = NEG_INF;
@@ -343,7 +359,7 @@ pub fn sparse_attention_vs_rowserial(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices)
             m = m.max(s);
         }
         if m == NEG_INF {
-            out.row_mut(i).copy_from_slice(v.row(i));
+            out.row_mut(r).copy_from_slice(v.row(i));
             continue;
         }
         let mut denom = 0.0f32;
@@ -352,7 +368,7 @@ pub fn sparse_attention_vs_rowserial(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices)
             denom += *s;
         }
         let inv = 1.0 / denom;
-        let orow = out.row_mut(i);
+        let orow = out.row_mut(r);
         for (t, &j) in cand.iter().enumerate() {
             let w = scores[t] * inv;
             let vrow = v.row(j);

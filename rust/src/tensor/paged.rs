@@ -234,14 +234,36 @@ impl PagedKvStore {
         if lo > hi || hi > view.len {
             return None;
         }
-        let d = self.head_dim;
-        let mut k = Mat::zeros(hi - lo, d);
-        let mut v = Mat::zeros(hi - lo, d);
-        for i in lo..hi {
-            k.row_mut(i - lo).copy_from_slice(view.k_row(i));
-            v.row_mut(i - lo).copy_from_slice(view.v_row(i));
+        Some(view.gather_rows(lo, hi))
+    }
+
+    /// Shrink a sequence's reservation to `rows` capacity, returning whole
+    /// unused tail blocks to the pool immediately.  The new capacity is
+    /// clamped up to the rows already appended, so resident data is never
+    /// cut; freed blocks were never written, so live `PagedKv` views (which
+    /// only read rows below their snapshotted length) are unaffected.  This
+    /// is the reclamation path for early-stopped generations: a request
+    /// that reserved `bucket + max_new` rows but stopped after `g` tokens
+    /// gives `max_new - g` rows' worth of whole blocks back without waiting
+    /// for its final `free`.  Returns the number of blocks reclaimed.
+    pub fn shrink_to(&self, req_id: u64, rows: usize) -> usize {
+        let mut m = self.meta.lock().unwrap();
+        let Some(seq) = m.seqs.get_mut(&req_id) else {
+            return 0;
+        };
+        if seq.dying {
+            return 0; // blocks already on their way back to the pool
         }
-        Some((k, v))
+        let capacity = rows.max(seq.len).min(seq.capacity);
+        let keep = capacity.div_ceil(self.block_size).max(1);
+        if keep >= seq.table.len() {
+            return 0;
+        }
+        let tail: Vec<usize> = seq.table.split_off(keep);
+        seq.capacity = capacity;
+        let freed = tail.len();
+        m.free.extend(tail);
+        freed
     }
 
     /// Release the sequence's blocks back to the pool.  No-op for unknown
@@ -313,6 +335,22 @@ impl PagedKv<'_> {
     pub fn v_row(&self, i: usize) -> &[f32] {
         // SAFETY: as `k_row`.
         unsafe { self.store.v_data.read(self.offset(i), self.store.head_dim) }
+    }
+
+    /// Copy rows [lo, hi) back out of the view as contiguous (K, V)
+    /// matrices — the one row-copy loop shared by [`PagedKvStore::gather`]
+    /// and consumers that only hold a view (e.g. the reference execution
+    /// backend's contiguous oracle path).
+    pub fn gather_rows(&self, lo: usize, hi: usize) -> (Mat, Mat) {
+        assert!(lo <= hi && hi <= self.len, "gather_rows range out of bounds");
+        let d = self.head_dim();
+        let mut k = Mat::zeros(hi - lo, d);
+        let mut v = Mat::zeros(hi - lo, d);
+        for i in lo..hi {
+            k.row_mut(i - lo).copy_from_slice(self.k_row(i));
+            v.row_mut(i - lo).copy_from_slice(self.v_row(i));
+        }
+        (k, v)
     }
 }
 
@@ -435,6 +473,37 @@ mod tests {
         kv.free(2);
         kv.free(2); // double free stays a no-op
         assert_eq!(kv.used(), 0);
+    }
+
+    #[test]
+    fn shrink_reclaims_unused_tail_blocks() {
+        let mut rng = Rng::new(9);
+        let kv = PagedKvStore::new(10, 4, 8);
+        assert!(kv.reserve(1, 40)); // 10 blocks — the whole pool
+        assert_eq!(kv.used(), 10);
+        let (k, v) = (randm(&mut rng, 10, 8), randm(&mut rng, 10, 8));
+        kv.append(1, &k, &v).unwrap();
+        let view = kv.view(1).unwrap();
+        // 10 rows resident -> 3 blocks stay (ceil(10/4)), 7 come back, even
+        // while a view is live (it never reads past its length).
+        assert_eq!(kv.shrink_to(1, 10), 7);
+        assert_eq!(kv.used(), 3);
+        for i in 0..10 {
+            assert_eq!(view.k_row(i), k.row(i), "resident rows survive the shrink");
+        }
+        // Reclaimed capacity is immediately reservable by others.
+        assert!(kv.reserve(2, 7 * 4));
+        // Shrinking below the resident rows clamps; shrinking again is a
+        // no-op; appends beyond the shrunk capacity now error.
+        assert_eq!(kv.shrink_to(1, 0), 0);
+        assert_eq!(kv.shrink_to(1, 10), 0);
+        let (k1, v1) = (randm(&mut rng, 3, 8), randm(&mut rng, 3, 8));
+        assert!(kv.append(1, &k1, &v1).is_err(), "capacity now 10 rows");
+        assert_eq!(kv.shrink_to(99, 1), 0, "unknown id is a no-op");
+        drop(view);
+        kv.free(1);
+        kv.free(2);
+        assert_eq!(kv.used(), 0, "no blocks leaked through shrink + free");
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Backend conformance suite: every `ExecBackend` is driven through the
+//! same typed lifecycle — via the trait object, exactly as the scheduler
+//! drives it — and must agree with (a) its own monolithic `process` parity
+//! baseline and (b) every other backend.
+//!
+//! The native backend (fused tiled kernels, parallel fan-out) and the
+//! reference backend (the seed's row-serial executor, fully serial) share
+//! the index model, budget selection and decode kernels, so the contract
+//! is tight: identical densities, identical first-chunk digests, and
+//! bit-identical token streams — across backends, across chunk sizes, and
+//! across fragmented block tables.
+
+use vsprefill::coordinator::backend::{ChunkStep, DecodeStep, ExecBackend};
+use vsprefill::coordinator::{AttentionMode, PagedKvStore, PrefillRequest, PrefillResponse};
+use vsprefill::serve::EngineBuilder;
+use vsprefill::synth::SynthConfig;
+use vsprefill::util::rng::Rng;
+
+fn backends() -> Vec<Box<dyn ExecBackend>> {
+    vec![
+        EngineBuilder::new().backend_name("native").unwrap().build_backend().unwrap(),
+        EngineBuilder::new().backend_name("reference").unwrap().build_backend().unwrap(),
+    ]
+}
+
+fn head_dim() -> usize {
+    SynthConfig::default().head_dim
+}
+
+/// A store large enough for one bucket + decode budget.
+fn clean_store() -> PagedKvStore {
+    PagedKvStore::new(64, 32, head_dim())
+}
+
+/// A store whose free list is scrambled so the next reservation gets a
+/// fragmented, out-of-order block table.
+fn fragmented_store() -> PagedKvStore {
+    let store = PagedKvStore::new(64, 32, head_dim());
+    assert!(store.reserve(901, 64));
+    assert!(store.reserve(902, 64));
+    assert!(store.reserve(903, 64));
+    store.free(902);
+    store.free(901);
+    store.free(903);
+    store
+}
+
+/// Drive one request through the full typed lifecycle (prefill chunks,
+/// then decode if the backend enters it), exactly like the scheduler does.
+fn drive(
+    backend: &dyn ExecBackend,
+    store: &PagedKvStore,
+    req: PrefillRequest,
+    chunk: usize,
+) -> PrefillResponse {
+    let mut rng = Rng::new(0);
+    let id = req.id;
+    let bucket = backend.bucket_for(req.seq_len()).expect("request fits a bucket");
+    assert!(store.reserve(id, bucket + req.max_new_tokens), "store sized for the test");
+    let mut run = backend.begin(req, bucket, chunk, &mut rng);
+    assert!(run.is_prefilling() && !run.is_decoding() && !run.is_finished());
+    loop {
+        match backend.prefill_chunk(&mut run, store) {
+            ChunkStep::Progress => assert!(run.is_prefilling(), "Progress keeps prefilling"),
+            ChunkStep::Done(resp) => {
+                assert!(run.is_finished(), "Done leaves the run finished");
+                store.free(id);
+                return resp;
+            }
+            ChunkStep::EnterDecode => {
+                assert!(run.is_decoding(), "EnterDecode leaves the run decoding");
+                let mut runs = vec![run];
+                loop {
+                    let steps = backend.decode_step(&mut runs, store);
+                    assert_eq!(steps.len(), 1, "one step per run, index-aligned");
+                    match steps.into_iter().next().unwrap() {
+                        DecodeStep::Token(_) => {}
+                        DecodeStep::Done(_, resp) | DecodeStep::Failed(resp) => {
+                            store.free(id);
+                            return resp;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn capabilities_and_buckets_are_consistent() {
+    for b in backends() {
+        let caps = b.capabilities();
+        let buckets = b.buckets();
+        assert_eq!(
+            caps.max_bucket,
+            buckets.iter().copied().max().unwrap(),
+            "backend '{}': max_bucket must match the bucket list",
+            b.name()
+        );
+        assert_eq!(b.bucket_for(1), Some(buckets[0]));
+        assert_eq!(b.bucket_for(caps.max_bucket + 1), None);
+        assert!(caps.chunked && caps.decode, "both test backends serve the full lifecycle");
+    }
+}
+
+#[test]
+fn chunked_lifecycle_matches_monolithic_process() {
+    // For every backend and both attention modes: the chunked paged
+    // lifecycle reproduces the monolithic parity baseline — same density
+    // (the incremental scores equal batch `predict_kv` on the final chunk)
+    // and the same first-chunk output digest.
+    for b in backends() {
+        for mode in [AttentionMode::Dense, AttentionMode::Sparse] {
+            let mut rng = Rng::new(1);
+            let mono = b.process(&PrefillRequest::synthetic(1, 250, 9, mode), &mut rng);
+            assert!(mono.ok, "{}: {:?}", b.name(), mono.error);
+            assert_eq!(mono.chunks, 1);
+
+            let store = clean_store();
+            let resp = drive(b.as_ref(), &store, PrefillRequest::synthetic(2, 250, 9, mode), 100);
+            assert!(resp.ok, "{}: {:?}", b.name(), resp.error);
+            assert_eq!(resp.bucket, mono.bucket);
+            assert_eq!(resp.chunks, 3, "256-row bucket at chunk 100");
+            assert_eq!(resp.chunk_us.len(), 3);
+            assert_eq!(
+                resp.output_digest, mono.output_digest,
+                "backend '{}' mode {mode:?}: chunked digest != monolithic",
+                b.name()
+            );
+            assert_eq!(
+                resp.density, mono.density,
+                "backend '{}' mode {mode:?}: chunked density != monolithic",
+                b.name()
+            );
+            assert_eq!(store.used(), 0, "reservation freed");
+        }
+    }
+}
+
+#[test]
+fn backends_agree_with_each_other() {
+    // Same request through different backends: identical density and
+    // digest, for monolithic and for chunked execution alike.
+    let all = backends();
+    for mode in [AttentionMode::Dense, AttentionMode::Sparse] {
+        let results: Vec<PrefillResponse> = all
+            .iter()
+            .map(|b| {
+                let store = clean_store();
+                drive(b.as_ref(), &store, PrefillRequest::synthetic(7, 200, 4, mode), 64)
+            })
+            .collect();
+        for (b, r) in all.iter().zip(&results) {
+            assert!(r.ok, "{}: {:?}", b.name(), r.error);
+        }
+        let first = &results[0];
+        for (b, r) in all.iter().zip(&results).skip(1) {
+            assert_eq!(
+                r.density, first.density,
+                "mode {mode:?}: '{}' density disagrees with '{}'",
+                b.name(),
+                all[0].name()
+            );
+            assert_eq!(
+                r.output_digest, first.output_digest,
+                "mode {mode:?}: '{}' digest disagrees with '{}'",
+                b.name(),
+                all[0].name()
+            );
+        }
+    }
+}
+
+#[test]
+fn token_streams_agree_across_backends_and_chunk_sizes() {
+    // Decode is chunk-size-independent (incremental scores are exact at
+    // any chunking) and backend-independent (shared scoring + kernels):
+    // the token streams must match bit-for-bit.
+    for mode in [AttentionMode::Dense, AttentionMode::Sparse] {
+        let mut streams: Vec<(String, Vec<u32>)> = Vec::new();
+        for b in backends() {
+            for chunk in [64usize, 100, 256] {
+                let store = clean_store();
+                let mut req = PrefillRequest::synthetic(11, 200, 6, mode);
+                req.max_new_tokens = 5;
+                let resp = drive(b.as_ref(), &store, req, chunk);
+                assert!(resp.ok, "{}: {:?}", b.name(), resp.error);
+                assert_eq!(resp.tokens.len(), 5);
+                assert_eq!(resp.decode_us.len(), 5);
+                streams.push((format!("{}/chunk{}", b.name(), chunk), resp.tokens));
+            }
+        }
+        let (ref name0, ref tokens0) = streams[0];
+        for (name, tokens) in &streams[1..] {
+            assert_eq!(tokens, tokens0, "mode {mode:?}: {name} diverges from {name0}");
+        }
+    }
+}
+
+#[test]
+fn fragmented_block_tables_do_not_change_results() {
+    // A scrambled free list gives the run an out-of-order block table; the
+    // paged read paths of every backend must be table-agnostic.
+    for b in backends() {
+        let mut req = PrefillRequest::synthetic(21, 180, 3, AttentionMode::Sparse);
+        req.max_new_tokens = 4;
+        let clean = drive(b.as_ref(), &clean_store(), req.clone(), 48);
+        let store = fragmented_store();
+        let frag = drive(b.as_ref(), &store, req, 48);
+        assert!(clean.ok && frag.ok, "{}: {:?} {:?}", b.name(), clean.error, frag.error);
+        assert_eq!(frag.output_digest, clean.output_digest, "{}", b.name());
+        assert_eq!(frag.density, clean.density, "{}", b.name());
+        assert_eq!(frag.tokens, clean.tokens, "{}", b.name());
+        assert_eq!(store.used(), 0);
+    }
+}
+
+#[test]
+fn stop_token_conformance() {
+    // Early stop behaves identically through every backend: the stream
+    // truncates at the stop token (inclusive) and the reservation is fully
+    // reclaimed.
+    for b in backends() {
+        let store = clean_store();
+        let mut probe = PrefillRequest::synthetic(31, 128, 5, AttentionMode::Sparse);
+        probe.max_new_tokens = 6;
+        let full = drive(b.as_ref(), &store, probe, 64);
+        assert!(full.ok, "{}: {:?}", b.name(), full.error);
+        assert_eq!(full.tokens.len(), 6);
+
+        let mut req = PrefillRequest::synthetic(32, 128, 5, AttentionMode::Sparse);
+        req.max_new_tokens = 6;
+        req.stop_token = Some(full.tokens[2]);
+        let stopped = drive(b.as_ref(), &store, req, 64);
+        assert!(stopped.ok, "{}: {:?}", b.name(), stopped.error);
+        assert_eq!(stopped.tokens, full.tokens[..3], "{}: stop token is emitted", b.name());
+        assert_eq!(store.used(), 0, "{}: early-stopped reservation reclaimed", b.name());
+    }
+}

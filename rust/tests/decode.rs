@@ -6,9 +6,8 @@
 
 use vsprefill::attention::decode::{flash_decode_into, flash_decode_paged};
 use vsprefill::attention::flash::flash_attention;
-use vsprefill::coordinator::{
-    AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest, ResponseEvent,
-};
+use vsprefill::coordinator::{AttentionMode, CoordinatorConfig, PrefillRequest, ResponseEvent};
+use vsprefill::serve::EngineBuilder;
 use vsprefill::sparse_attn::exec::{decode_columns, sparse_decode_vs_paged};
 use vsprefill::tensor::paged::PagedKvStore;
 use vsprefill::tensor::Mat;
@@ -127,8 +126,7 @@ fn sparse_decode_respects_budget() {
 #[test]
 fn requests_generate_tokens_through_the_coordinator() {
     let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
-    let engine = PrefillEngine::native_quick(cfg.engine.clone());
-    let c = Coordinator::start(cfg, engine);
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
     let mut req = PrefillRequest::synthetic(1, 256, 3, AttentionMode::Sparse);
     req.max_new_tokens = 8;
     let resp = c.prefill(req).unwrap();
@@ -157,8 +155,7 @@ fn decode_streams_not_starved_by_long_prefill() {
         chunk_tokens: 64, // 1024-row request => 16 chunk rounds
         ..Default::default()
     };
-    let engine = PrefillEngine::native_quick(cfg.engine.clone());
-    let c = Coordinator::start(cfg, engine);
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
     let long_rx = c
         .submit(PrefillRequest::synthetic(1, 1024, 7, AttentionMode::Sparse))
         .unwrap();
@@ -199,8 +196,7 @@ fn dense_and_sparse_modes_both_generate() {
     // lifecycle through the coordinator (dense exercises the streaming
     // decode kernel, sparse the budgeted column path).
     let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
-    let engine = PrefillEngine::native_quick(cfg.engine.clone());
-    let c = Coordinator::start(cfg, engine);
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
     let mut dense = PrefillRequest::synthetic(1, 128, 5, AttentionMode::Dense);
     dense.max_new_tokens = 4;
     let mut sparse = PrefillRequest::synthetic(2, 128, 5, AttentionMode::Sparse);

@@ -6,17 +6,17 @@ use std::sync::Arc;
 
 use vsprefill::coordinator::{
     server::{Client, Server},
-    AttentionMode, Coordinator, CoordinatorConfig, PrefillEngine, PrefillRequest,
+    AttentionMode, Coordinator, CoordinatorConfig, ExecBackend, PrefillRequest,
 };
 #[cfg(feature = "pjrt")]
 use vsprefill::runtime::ArtifactBundle;
+use vsprefill::serve::EngineBuilder;
 use vsprefill::util::prop::{check, Gen, UsizeRange};
 use vsprefill::util::rng::Rng;
 
 fn native_coordinator() -> Arc<Coordinator> {
     let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
-    let engine = PrefillEngine::native_quick(cfg.engine.clone());
-    Arc::new(Coordinator::start(cfg, engine))
+    Arc::new(EngineBuilder::new().config(cfg).build().unwrap())
 }
 
 #[test]
@@ -58,8 +58,9 @@ fn pjrt_backend_serves_when_artifacts_present() {
         n.ends_with("_256")
     })
     .unwrap();
-    let engine = PrefillEngine::pjrt(cfg.engine.clone(), rt).unwrap();
-    let coordinator = Coordinator::start(cfg, engine);
+    let backend =
+        vsprefill::coordinator::backend::pjrt::PjrtBackend::load(cfg.engine.clone(), rt).unwrap();
+    let coordinator = Coordinator::start(cfg, Box::new(backend));
     for i in 0..4 {
         let mode = if i % 2 == 0 { AttentionMode::Sparse } else { AttentionMode::Dense };
         let resp = coordinator
@@ -87,8 +88,7 @@ fn short_request_overtakes_long_prefill() {
         chunk_tokens: 64, // 1024-row request => 16 chunks; 128-row => 2
         ..Default::default()
     };
-    let engine = PrefillEngine::native_quick(cfg.engine.clone());
-    let c = Coordinator::start(cfg, engine);
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
     let long_rx = c
         .submit(PrefillRequest::synthetic(1, 1024, 7, AttentionMode::Sparse))
         .unwrap();
@@ -163,16 +163,15 @@ fn property_density_monotone_in_budget() {
             (a, b)
         }
     }
-    let cfg = CoordinatorConfig::default();
-    let engine = std::cell::RefCell::new(PrefillEngine::native_quick(cfg.engine.clone()));
+    let backend = EngineBuilder::new().build_backend().unwrap();
     let rng0 = std::cell::RefCell::new(Rng::new(0));
     check(11, 10, &BudgetPair, |&(lo, hi)| {
         let mut req_lo = PrefillRequest::synthetic(1, 128, 5, AttentionMode::Sparse);
         req_lo.budget = lo;
         let mut req_hi = PrefillRequest::synthetic(2, 128, 5, AttentionMode::Sparse);
         req_hi.budget = hi;
-        let d_lo = engine.borrow_mut().process(&req_lo, &mut rng0.borrow_mut()).density;
-        let d_hi = engine.borrow_mut().process(&req_hi, &mut rng0.borrow_mut()).density;
+        let d_lo = backend.process(&req_lo, &mut rng0.borrow_mut()).density;
+        let d_hi = backend.process(&req_hi, &mut rng0.borrow_mut()).density;
         d_lo <= d_hi + 1e-9
     });
 }
