@@ -191,7 +191,10 @@ pub trait ExecBackend: Send {
     /// Monolithic single-request execution — the parity baseline the
     /// conformance suite compares the chunked lifecycle against, and the
     /// substrate of non-chunked backends.  Does not touch the paged store.
-    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse;
+    /// Fully determined by the request content (no RNG parameter: the
+    /// synthesized inputs derive from the request's seed / token hash, so
+    /// the same request always produces the same response).
+    fn process(&self, req: &PrefillRequest) -> PrefillResponse;
 }
 
 // ---------------------------------------------------------------------------
@@ -462,37 +465,45 @@ fn selection_pipeline(indexer: Indexer, cfg: &EngineConfig) -> VsPrefill {
     vsp
 }
 
+/// Content hash of a token payload — the seed of its synthesized head.
+/// Colliding token lists get the same head, which is consistent: identical
+/// synthetic content is indistinguishable downstream.
+fn token_content_hash(toks: &[i32]) -> u64 {
+    let mut h = 0u64;
+    for &t in toks {
+        h = h.wrapping_mul(31).wrapping_add(t as u64);
+    }
+    h
+}
+
 /// Synthesize the prompt head plus the decode-phase continuation stream.
 /// The stream is handed the content RNG in the same freshly seeded state
 /// `gen_head` receives it, so it re-derives the head's mean vectors and
 /// heavy-hitter direction exactly — decode rows come from the same
 /// distribution family as the prompt.
+///
+/// Both payload kinds derive the head from the request content alone
+/// (synthetic seed or token hash).  The token arm used to fork the
+/// scheduler's long-lived RNG, which made "the same token prompt" produce a
+/// different head on every submission (and on every backend) — breaking the
+/// documented content-determinism and with it cross-run reproducibility.
 fn synth_parts(
     synth: &SynthConfig,
     req: &PrefillRequest,
     bucket: usize,
-    rng: &mut Rng,
 ) -> (SynthHead, SynthStream) {
-    match &req.payload {
-        Payload::Synthetic { seed, .. } => {
-            let mut r = Rng::new(*seed);
-            let head = gen_head(&mut r, bucket, synth, seed % 8);
-            let stream = SynthStream::continue_head(synth, Rng::new(*seed), seed % 8, bucket);
-            (head, stream)
-        }
+    let (seed, head_seed) = match &req.payload {
+        Payload::Synthetic { seed, .. } => (*seed, *seed % 8),
         Payload::Tokens(toks) => {
-            // Derive a deterministic head from the token content so the
-            // native path is usable without the model artifact.
-            let mut h = 0u64;
-            for &t in toks {
-                h = h.wrapping_mul(31).wrapping_add(t as u64);
-            }
-            let r = rng.fork(h);
-            let head = gen_head(&mut r.clone(), bucket, synth, h % 8);
-            let stream = SynthStream::continue_head(synth, r, h % 8, bucket);
-            (head, stream)
+            let h = token_content_hash(toks);
+            // Salted so token hash h and synthetic seed h don't alias.
+            (h ^ 0xA5A5_5A5A_C0DE_F00D, h % 8)
         }
-    }
+    };
+    let mut r = Rng::new(seed);
+    let head = gen_head(&mut r, bucket, synth, head_seed);
+    let stream = SynthStream::continue_head(synth, Rng::new(seed), head_seed, bucket);
+    (head, stream)
 }
 
 /// Shared `begin` of the synthetic-head backends.
@@ -501,10 +512,8 @@ fn synth_begin(
     req: PrefillRequest,
     bucket: usize,
     default_chunk: usize,
-    rng: &mut Rng,
 ) -> RunState {
-    let mut run_rng = rng.fork(req.id);
-    let (head, stream) = synth_parts(synth, &req, bucket, &mut run_rng);
+    let (head, stream) = synth_parts(synth, &req, bucket);
     RunState::begin(
         req,
         bucket,

@@ -66,9 +66,9 @@ impl ExecBackend for NativeBackend {
         req: PrefillRequest,
         bucket: usize,
         default_chunk: usize,
-        rng: &mut Rng,
+        _rng: &mut Rng,
     ) -> RunState {
-        synth_begin(&self.cfg.synth, req, bucket, default_chunk, rng)
+        synth_begin(&self.cfg.synth, req, bucket, default_chunk)
     }
 
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
@@ -94,9 +94,9 @@ impl ExecBackend for NativeBackend {
         finish_decode_round(runs, slots, store)
     }
 
-    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+    fn process(&self, req: &PrefillRequest) -> PrefillResponse {
         run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
-            let head = synth_parts(&self.cfg.synth, req, bucket, rng).0;
+            let head = synth_parts(&self.cfg.synth, req, bucket).0;
             let out = match req.mode {
                 AttentionMode::Dense => {
                     resp.density = 1.0;
@@ -127,9 +127,8 @@ mod tests {
     #[test]
     fn native_dense_vs_sparse_digests_close() {
         let e = backend();
-        let mut rng = Rng::new(0);
-        let rd = e.process(&PrefillRequest::synthetic(1, 128, 3, AttentionMode::Dense), &mut rng);
-        let rs = e.process(&PrefillRequest::synthetic(2, 128, 3, AttentionMode::Sparse), &mut rng);
+        let rd = e.process(&PrefillRequest::synthetic(1, 128, 3, AttentionMode::Dense));
+        let rs = e.process(&PrefillRequest::synthetic(2, 128, 3, AttentionMode::Sparse));
         assert!(rd.ok && rs.ok);
         assert_eq!(rd.bucket, 128);
         assert!(rs.density < 1.0);
@@ -142,9 +141,7 @@ mod tests {
     #[test]
     fn oversized_request_fails_cleanly() {
         let e = backend();
-        let mut rng = Rng::new(0);
-        let r =
-            e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense), &mut rng);
+        let r = e.process(&PrefillRequest::synthetic(1, 999_999, 0, AttentionMode::Dense));
         assert!(!r.ok);
         assert!(r.error.unwrap().contains("exceeds"));
     }
@@ -152,9 +149,8 @@ mod tests {
     #[test]
     fn deterministic_for_same_seed() {
         let e = backend();
-        let mut rng = Rng::new(0);
-        let a = e.process(&PrefillRequest::synthetic(1, 128, 9, AttentionMode::Sparse), &mut rng);
-        let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse), &mut rng);
+        let a = e.process(&PrefillRequest::synthetic(1, 128, 9, AttentionMode::Sparse));
+        let b = e.process(&PrefillRequest::synthetic(2, 128, 9, AttentionMode::Sparse));
         assert_eq!(a.output_digest, b.output_digest);
         assert_eq!(a.density, b.density);
     }

@@ -77,12 +77,11 @@ impl ExecBackend for PjrtBackend {
         req: PrefillRequest,
         bucket: usize,
         default_chunk: usize,
-        rng: &mut Rng,
+        _rng: &mut Rng,
     ) -> RunState {
-        // Whole-bucket graphs: the run's only scratch is the RNG the
-        // monolithic execution consumes.
-        let run_rng = rng.fork(req.id);
-        RunState::begin(req, bucket, default_chunk, Box::new(run_rng))
+        // Whole-bucket graphs execute monolithically in `prefill_chunk`;
+        // the run needs no scratch state.
+        RunState::begin(req, bucket, default_chunk, Box::new(()))
     }
 
     /// Whole-bucket AOT graphs: execute monolithically as one chunk (the
@@ -93,15 +92,14 @@ impl ExecBackend for PjrtBackend {
         }
         let resp = {
             let acc = run.prefill_mut().expect("phase checked above");
-            let rng = acc.scratch.downcast_mut::<Rng>().expect("pjrt rng scratch");
-            self.process(acc.req, rng)
+            self.process(acc.req)
         };
         run.finish_with(resp)
     }
 
-    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+    fn process(&self, req: &PrefillRequest) -> PrefillResponse {
         run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
-            let head = synth_parts(&self.cfg.synth, req, bucket, rng).0;
+            let head = synth_parts(&self.cfg.synth, req, bucket).0;
             let out: Mat = match req.mode {
                 AttentionMode::Dense => {
                     resp.density = 1.0;

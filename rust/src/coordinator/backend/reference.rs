@@ -64,9 +64,9 @@ impl ExecBackend for ReferenceBackend {
         req: PrefillRequest,
         bucket: usize,
         default_chunk: usize,
-        rng: &mut Rng,
+        _rng: &mut Rng,
     ) -> RunState {
-        synth_begin(&self.cfg.synth, req, bucket, default_chunk, rng)
+        synth_begin(&self.cfg.synth, req, bucket, default_chunk)
     }
 
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
@@ -95,9 +95,9 @@ impl ExecBackend for ReferenceBackend {
         finish_decode_round(runs, slots, store)
     }
 
-    fn process(&self, req: &PrefillRequest, rng: &mut Rng) -> PrefillResponse {
+    fn process(&self, req: &PrefillRequest) -> PrefillResponse {
         run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
-            let head = synth_parts(&self.cfg.synth, req, bucket, rng).0;
+            let head = synth_parts(&self.cfg.synth, req, bucket).0;
             let out = match req.mode {
                 AttentionMode::Dense => {
                     resp.density = 1.0;

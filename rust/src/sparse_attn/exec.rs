@@ -240,6 +240,16 @@ pub fn sparse_attention_vs_paged(
 /// Returns sorted, deduplicated absolute key positions, at most
 /// `top_k + window` of them (the decode budget), always including the
 /// newest position `n - 1`.
+///
+/// Invariant: **the newest position is always attended** — a decode step
+/// that cannot see the token it just appended produces garbage, so the
+/// window is widened to at least 1 here as a last-resort guard.  This
+/// widening is deliberately *not* the configuration surface for
+/// "verticals only": `engine.decode_window = 0` is rejected with an
+/// explicit error at the `config::KEYS` layer
+/// ([`crate::coordinator::config::validate`]) instead of being silently
+/// reinterpreted, so a deployment asking for an unsupported budget finds
+/// out at load time, not from quietly different attention.
 pub fn decode_columns(a_v: &[f32], n: usize, top_k: usize, window: usize) -> Vec<usize> {
     let n = n.min(a_v.len());
     if n == 0 {

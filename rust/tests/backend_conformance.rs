@@ -111,8 +111,7 @@ fn chunked_lifecycle_matches_monolithic_process() {
     // and the same first-chunk output digest.
     for b in backends() {
         for mode in [AttentionMode::Dense, AttentionMode::Sparse] {
-            let mut rng = Rng::new(1);
-            let mono = b.process(&PrefillRequest::synthetic(1, 250, 9, mode), &mut rng);
+            let mono = b.process(&PrefillRequest::synthetic(1, 250, 9, mode));
             assert!(mono.ok, "{}: {:?}", b.name(), mono.error);
             assert_eq!(mono.chunks, 1);
 

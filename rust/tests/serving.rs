@@ -164,14 +164,13 @@ fn property_density_monotone_in_budget() {
         }
     }
     let backend = EngineBuilder::new().build_backend().unwrap();
-    let rng0 = std::cell::RefCell::new(Rng::new(0));
     check(11, 10, &BudgetPair, |&(lo, hi)| {
         let mut req_lo = PrefillRequest::synthetic(1, 128, 5, AttentionMode::Sparse);
         req_lo.budget = lo;
         let mut req_hi = PrefillRequest::synthetic(2, 128, 5, AttentionMode::Sparse);
         req_hi.budget = hi;
-        let d_lo = backend.process(&req_lo, &mut rng0.borrow_mut()).density;
-        let d_hi = backend.process(&req_hi, &mut rng0.borrow_mut()).density;
+        let d_lo = backend.process(&req_lo).density;
+        let d_hi = backend.process(&req_hi).density;
         d_lo <= d_hi + 1e-9
     });
 }
