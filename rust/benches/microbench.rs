@@ -169,6 +169,8 @@ fn main() {
 
     decode_sweep();
 
+    prefix_sweep();
+
     #[cfg(feature = "pjrt")]
     pjrt_rows();
     #[cfg(not(feature = "pjrt"))]
@@ -369,6 +371,78 @@ fn decode_sweep() {
     match std::fs::write("BENCH_decode.json", &json) {
         Ok(()) => println!("\nwrote BENCH_decode.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_decode.json: {e}"),
+    }
+}
+
+/// Repeated-prefix prefill sweep through the serving stack: the same
+/// prompt is served `REPS + 1` times sequentially (so each request after
+/// the first can hit the blocks the previous one published); TTFT of the
+/// cold first request vs the mean of the warm repeats, with the prefix
+/// cache on and off.  Writes BENCH_prefix.json.
+fn prefix_sweep() {
+    use vsprefill::coordinator::{AttentionMode, CoordinatorConfig, EngineConfig, PrefillRequest};
+    use vsprefill::serve::EngineBuilder;
+
+    const REPS: usize = 4;
+    println!("\nprefix cache: repeated-prefix TTFT (sequential, same 4k prompt)");
+    println!("cache    n        cold_ttft_ms  warm_ttft_ms  speedup  hits  blocks_shared");
+    let mut json = String::from("{\n  \"bench\": \"prefix_cache\",\n  \"sweep\": [\n");
+    let mut first = true;
+    for &n in &[1024usize, 4096] {
+        for &cached in &[false, true] {
+            let cfg = CoordinatorConfig {
+                engine: EngineConfig { buckets: vec![256, 1024, 4096], ..EngineConfig::default() },
+                chunk_tokens: 256,
+                kv_blocks: 256, // 16k rows of paged K/V
+                max_wait_ms: 1,
+                kv_prefix_cache: cached,
+                ..Default::default()
+            };
+            let c = EngineBuilder::new().config(cfg).build().unwrap();
+            let mut ttfts = Vec::new();
+            for i in 0..=REPS {
+                // Sequential: each request completes (and publishes its
+                // prompt) before the next is submitted.
+                let resp = c
+                    .prefill(PrefillRequest::synthetic(i as u64, n, 7, AttentionMode::Sparse))
+                    .unwrap();
+                assert!(resp.ok, "{:?}", resp.error);
+                assert_eq!(
+                    resp.cached_rows > 0,
+                    cached && i > 0,
+                    "hit pattern: warm repeats iff the cache is on"
+                );
+                ttfts.push(resp.ttft_us as f64 / 1e3);
+            }
+            let snap = c.shutdown();
+            let cold = ttfts[0];
+            let warm = ttfts[1..].iter().sum::<f64>() / REPS as f64;
+            let label = if cached { "on" } else { "off" };
+            println!(
+                "{label:<8} {n:<8} {cold:>12.2} {warm:>13.2} {:>8.2} {:>5} {:>14}",
+                cold / warm,
+                snap.prefix_hits,
+                snap.prefix_blocks_shared
+            );
+            if !first {
+                json.push_str(",\n");
+            }
+            first = false;
+            json.push_str(&format!(
+                "    {{\"cache\": {cached}, \"n\": {n}, \"cold_ttft_ms\": {cold:.3}, \
+                 \"warm_mean_ttft_ms\": {warm:.3}, \"speedup\": {:.3}, \
+                 \"prefix_hits\": {}, \"prefix_blocks_shared\": {}, \"prefix_evictions\": {}}}",
+                cold / warm,
+                snap.prefix_hits,
+                snap.prefix_blocks_shared,
+                snap.prefix_evictions
+            ));
+        }
+    }
+    json.push_str("\n  ]\n}\n");
+    match std::fs::write("BENCH_prefix.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_prefix.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_prefix.json: {e}"),
     }
 }
 

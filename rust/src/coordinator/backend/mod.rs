@@ -35,7 +35,7 @@
 //!     (`pjrt` cargo feature); schedules as single-chunk monolithic runs.
 
 use std::any::Any;
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use crate::attention::decode::flash_decode_into;
@@ -45,7 +45,7 @@ use crate::sparse::VsIndices;
 use crate::sparse_attn::exec::{decode_columns, sparse_decode_vs_into};
 use crate::sparse_attn::VsPrefill;
 use crate::synth::{gen_head, SynthConfig, SynthHead, SynthStream};
-use crate::tensor::paged::PagedKv;
+use crate::tensor::paged::{hash_words, PagedKv, PrefixAux, PrefixChain};
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
@@ -112,6 +112,19 @@ impl Capabilities {
     }
 }
 
+/// What the scheduler learned at admission about a request's cached
+/// prefix: the content chain (kept so the backend can publish its groups
+/// at prefill completion), the rows already resident in the paged store,
+/// and the per-group sidecars to resume from (indexer logits, digest).
+pub struct PrefixHit {
+    pub chain: PrefixChain,
+    /// Leading prompt rows already resident — prefill starts here.
+    pub rows: usize,
+    /// Aux of each matched group, chain order
+    /// ([`PagedKvStore::reserve_with_prefix`]'s `aux`).
+    pub aux: Vec<PrefixAux>,
+}
+
 /// Outcome of one [`ExecBackend::prefill_chunk`] call.
 pub enum ChunkStep {
     /// More prefill chunks remain; the run goes back in the ready queue.
@@ -160,16 +173,34 @@ pub trait ExecBackend: Send {
         self.buckets().iter().copied().filter(|&b| b >= n).min()
     }
 
+    /// Content-identity chain of the request's prompt block groups for
+    /// prefix-cache sharing, or `None` to opt out (the default — only
+    /// backends whose row content is a pure function of the request can
+    /// share KV blocks between requests).  Called by the scheduler at
+    /// admission, before `reserve_with_prefix`.
+    fn prefix_chain(
+        &self,
+        _req: &PrefillRequest,
+        _bucket: usize,
+        _block_size: usize,
+    ) -> Option<PrefixChain> {
+        None
+    }
+
     /// Start a run: the caller has resolved `bucket` (via
     /// [`bucket_for`](Self::bucket_for)) and reserved
     /// `bucket + max_new_tokens` rows in the paged store.  `default_chunk`
     /// is the coordinator's chunk size; the request's own `chunk` field
-    /// overrides it.
+    /// overrides it.  `prefix` is the admission-time prefix-cache outcome
+    /// (chain + resident rows + sidecars); backends that returned a chain
+    /// from [`prefix_chain`](Self::prefix_chain) must resume from it —
+    /// the paged reservation already contains `prefix.rows` rows.
     fn begin(
         &self,
         req: PrefillRequest,
         bucket: usize,
         default_chunk: usize,
+        prefix: Option<PrefixHit>,
         rng: &mut Rng,
     ) -> RunState;
 
@@ -214,6 +245,13 @@ pub struct RunState {
     chunk: usize,
     resp: PrefillResponse,
     phase: Phase,
+    /// Leading prompt rows resident from the prefix cache at `begin` (the
+    /// prefill cursor starts here; 0 on a cold run).
+    prefix_rows: usize,
+    /// The prompt's content chain, kept so prefill completion can publish
+    /// the groups into the store's prefix index.  `None` when the prefix
+    /// cache is off or the backend opted out.
+    chain: Option<PrefixChain>,
 }
 
 enum Phase {
@@ -231,6 +269,8 @@ struct PrefillAccess<'a> {
     next: usize,
     scratch: &'a mut (dyn Any + Send),
     resp: &'a mut PrefillResponse,
+    /// The run's prefix chain (for publishing at prefill completion).
+    chain: Option<&'a PrefixChain>,
 }
 
 /// Disjoint mutable access for one decode step.
@@ -252,7 +292,33 @@ impl RunState {
         let queue_us = req.submitted_at.elapsed().as_micros() as u64;
         let resp = PrefillResponse { id: req.id, queue_us, bucket, ..Default::default() };
         let chunk = req.chunk.unwrap_or(default_chunk).clamp(1, bucket.max(1));
-        RunState { req, bucket, chunk, resp, phase: Phase::Prefilling { next: 0, scratch } }
+        RunState {
+            req,
+            bucket,
+            chunk,
+            resp,
+            phase: Phase::Prefilling { next: 0, scratch },
+            prefix_rows: 0,
+            chain: None,
+        }
+    }
+
+    /// Attach the admission-time prefix-cache outcome: the prefill cursor
+    /// starts past the `rows` already resident in the paged reservation,
+    /// and the chain is kept for publishing at prefill completion.
+    fn set_prefix(&mut self, rows: usize, chain: Option<PrefixChain>) {
+        debug_assert!(rows <= self.bucket, "cached rows cannot exceed the prompt");
+        self.prefix_rows = rows;
+        self.resp.cached_rows = rows;
+        self.chain = chain;
+        if let Phase::Prefilling { next, .. } = &mut self.phase {
+            *next = rows;
+        }
+    }
+
+    /// Leading prompt rows served from the prefix cache (0 on a cold run).
+    pub fn cached_rows(&self) -> usize {
+        self.prefix_rows
     }
 
     pub fn id(&self) -> u64 {
@@ -303,6 +369,7 @@ impl RunState {
                 next: *next,
                 scratch: &mut **scratch,
                 resp: &mut self.resp,
+                chain: self.chain.as_ref(),
             }),
             _ => None,
         }
@@ -506,20 +573,136 @@ fn synth_parts(
     (head, stream)
 }
 
-/// Shared `begin` of the synthetic-head backends.
+/// What the synthetic backends persist per cached block group: the group's
+/// slice of the incremental indexer logits (so a warm run resumes scoring
+/// exactly where the populating run left off — bit-identical to rescoring
+/// the rows) and, on group 0 only, the first-chunk output digest (the one
+/// observable a warm run skips computing).
+struct PrefixGroupAux {
+    logit_v: Vec<f32>,
+    logit_s: Vec<f32>,
+    digest: Vec<f32>,
+}
+
+/// The shared `prefix_chain` of the synthetic-head backends: row content is
+/// a pure function of (payload content, bucket, synth config), so the chain
+/// folds all three.  The attention mode is folded in too — dense and sparse
+/// chains stay separate because the cached sidecar differs (sparse chains
+/// carry indexer logits) and conformance metadata is compared per mode.
+/// The request's *budget* is deliberately NOT part of the identity: KV rows
+/// and indexer logits are budget-independent, and a warm run re-runs
+/// selection, so requests at different budgets share cached blocks.
+fn synth_prefix_chain(
+    synth: &SynthConfig,
+    req: &PrefillRequest,
+    bucket: usize,
+    block_size: usize,
+) -> Option<PrefixChain> {
+    let word = match &req.payload {
+        Payload::Synthetic { seed, .. } => hash_words(0x53_59_4e, &[*seed]),
+        Payload::Tokens(toks) => hash_words(0x54_4f_4b, &[token_content_hash(toks)]),
+    };
+    let mode_tag = match req.mode {
+        AttentionMode::Dense => 1u64,
+        AttentionMode::Sparse => 2u64,
+    };
+    let base = hash_words(
+        mode_tag,
+        &[
+            bucket as u64,
+            word,
+            synth.head_dim as u64,
+            synth.rope_base.to_bits() as u64,
+            synth.mean_scale.to_bits() as u64,
+            synth.noise_scale.to_bits() as u64,
+            synth.n_heavy as u64,
+            synth.heavy_strength.to_bits() as u64,
+            synth.sink_tokens as u64,
+            synth.sink_boost.to_bits() as u64,
+            synth.query_align.to_bits() as u64,
+            synth.seed_means,
+            synth.tied_means as u64,
+        ],
+    );
+    Some(PrefixChain::rolling(base, bucket, block_size, |_| word))
+}
+
+/// Shared `begin` of the synthetic-head backends.  A prefix hit seeds the
+/// run: the incremental indexer scores resume from the cached groups'
+/// logits, the response digest comes from group 0's sidecar (a warm run
+/// never executes the first chunk that would compute it), and the prefill
+/// cursor starts at the first non-resident row.
 fn synth_begin(
     synth: &SynthConfig,
     req: PrefillRequest,
     bucket: usize,
     default_chunk: usize,
+    prefix: Option<PrefixHit>,
 ) -> RunState {
     let (head, stream) = synth_parts(synth, &req, bucket);
-    RunState::begin(
+    let mut inc = IncrementalScores::new();
+    let mut digest_seed: Vec<f32> = Vec::new();
+    let mut rows = 0usize;
+    let mut chain = None;
+    if let Some(hit) = prefix {
+        for (gi, aux) in hit.aux.iter().enumerate() {
+            let a = aux
+                .downcast_ref::<PrefixGroupAux>()
+                .expect("prefix aux published by a synthetic backend");
+            if gi == 0 {
+                digest_seed = a.digest.clone();
+            }
+            inc.extend_logits(&a.logit_v, &a.logit_s);
+        }
+        rows = hit.rows;
+        debug_assert!(
+            req.mode == AttentionMode::Dense || inc.len() == rows,
+            "sparse prefix aux must cover every cached row"
+        );
+        chain = Some(hit.chain);
+    }
+    let mut run = RunState::begin(
         req,
         bucket,
         default_chunk,
-        Box::new(SynthPrefill { head, stream, inc: IncrementalScores::new() }),
-    )
+        Box::new(SynthPrefill { head, stream, inc }),
+    );
+    run.set_prefix(rows, chain);
+    run.resp.output_digest = digest_seed;
+    run
+}
+
+/// Publish a completed prompt's groups (with their resume sidecars) into
+/// the store's prefix index.  No-op when the run has no chain (prefix cache
+/// off, or a backend that opted out).  Warm runs re-publish the same
+/// hashes; the store keeps existing entries and only adds the novel tail.
+fn synth_publish(
+    store: &PagedKvStore,
+    id: u64,
+    chain: Option<&PrefixChain>,
+    inc: &IncrementalScores,
+    digest: &[f32],
+) {
+    let Some(chain) = chain else {
+        return;
+    };
+    let (lv, ls) = inc.logits();
+    let mut aux: Vec<PrefixAux> = Vec::with_capacity(chain.groups.len());
+    let mut row = 0usize;
+    for (gi, g) in chain.groups.iter().enumerate() {
+        let end = row + g.rows;
+        // Dense runs never score, so their groups carry empty logits (and
+        // dense chains are hash-separated from sparse ones).
+        let (gv, gs) = if lv.len() >= end {
+            (lv[row..end].to_vec(), ls[row..end].to_vec())
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let gd = if gi == 0 { digest.to_vec() } else { Vec::new() };
+        aux.push(Arc::new(PrefixGroupAux { logit_v: gv, logit_s: gs, digest: gd }));
+        row = end;
+    }
+    store.publish_prefix(id, chain, aux);
 }
 
 /// Shared chunked-prefill step of the synthetic-head backends: append the
@@ -548,36 +731,63 @@ fn synth_prefill_chunk(
         let acc = run.prefill_mut().expect("phase checked above");
         let sp = acc.scratch.downcast_mut::<SynthPrefill>().expect("synth prefill scratch");
         let lo = acc.next;
-        let hi = (lo + acc.chunk).min(acc.bucket);
-        let kc = sp.head.k.sub_rows(lo, hi);
-        let vc = sp.head.v.sub_rows(lo, hi);
-        match store.append(id, &kc, &vc) {
-            Err(e) => Outcome::Err(format!("{e:#}")),
-            Ok(()) => match store.view(id) {
-                None => Outcome::Err(format!("request {id} lost its kv reservation")),
-                Some(view) => {
-                    let qc = sp.head.q.sub_rows(lo, hi);
-                    let out = match acc.req.mode {
-                        AttentionMode::Dense => {
-                            acc.resp.density = 1.0;
-                            exec(&qc, lo, &view, None)
-                        }
-                        AttentionMode::Sparse => {
-                            let ti = Instant::now();
-                            vsp.indexer.score_chunk(&mut sp.inc, &kc, &vc);
-                            let (a_v, a_s) = sp.inc.finalize();
-                            let idx = vsp.select_from_scores(&a_v, &a_s, hi, acc.req.budget);
-                            acc.resp.index_us += ti.elapsed().as_micros() as u64;
-                            acc.resp.density = idx.density(hi);
-                            exec(&qc, lo, &view, Some(&idx))
-                        }
-                    };
-                    if lo == 0 {
-                        acc.resp.output_digest = digest(&out);
-                    }
-                    Outcome::Ran { hi, done: hi >= acc.bucket }
+        if lo >= acc.bucket {
+            // Fully cached prompt: every KV row and every indexer logit is
+            // already resident (seeded at `begin`), and the digest came
+            // from the cache.  The only remaining prefill work is the
+            // final budget selection, which depends on this request's own
+            // `budget` knob — running it here keeps the reported density
+            // bit-identical to a cold run at any budget.
+            match acc.req.mode {
+                AttentionMode::Dense => acc.resp.density = 1.0,
+                AttentionMode::Sparse => {
+                    let ti = Instant::now();
+                    let (a_v, a_s) = sp.inc.finalize();
+                    let idx = vsp.select_from_scores(&a_v, &a_s, acc.bucket, acc.req.budget);
+                    acc.resp.index_us += ti.elapsed().as_micros() as u64;
+                    acc.resp.density = idx.density(acc.bucket);
                 }
-            },
+            }
+            synth_publish(store, id, acc.chain, &sp.inc, &acc.resp.output_digest);
+            Outcome::Ran { hi: acc.bucket, done: true }
+        } else {
+            let hi = (lo + acc.chunk).min(acc.bucket);
+            let kc = sp.head.k.sub_rows(lo, hi);
+            let vc = sp.head.v.sub_rows(lo, hi);
+            match store.append(id, &kc, &vc) {
+                Err(e) => Outcome::Err(format!("{e:#}")),
+                Ok(()) => match store.view(id) {
+                    None => Outcome::Err(format!("request {id} lost its kv reservation")),
+                    Some(view) => {
+                        let qc = sp.head.q.sub_rows(lo, hi);
+                        let out = match acc.req.mode {
+                            AttentionMode::Dense => {
+                                acc.resp.density = 1.0;
+                                exec(&qc, lo, &view, None)
+                            }
+                            AttentionMode::Sparse => {
+                                let ti = Instant::now();
+                                vsp.indexer.score_chunk(&mut sp.inc, &kc, &vc);
+                                let (a_v, a_s) = sp.inc.finalize();
+                                let idx = vsp.select_from_scores(&a_v, &a_s, hi, acc.req.budget);
+                                acc.resp.index_us += ti.elapsed().as_micros() as u64;
+                                acc.resp.density = idx.density(hi);
+                                exec(&qc, lo, &view, Some(&idx))
+                            }
+                        };
+                        if lo == 0 {
+                            acc.resp.output_digest = digest(&out);
+                        }
+                        let done = hi >= acc.bucket;
+                        if done {
+                            // The prompt is fully appended and scored: make
+                            // its groups hittable for the next request.
+                            synth_publish(store, id, acc.chain, &sp.inc, &acc.resp.output_digest);
+                        }
+                        Outcome::Ran { hi, done }
+                    }
+                },
+            }
         }
     };
     // The PrefillAccess borrow ends with the block; transitions re-borrow.

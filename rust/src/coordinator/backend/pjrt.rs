@@ -77,10 +77,15 @@ impl ExecBackend for PjrtBackend {
         req: PrefillRequest,
         bucket: usize,
         default_chunk: usize,
+        prefix: Option<super::PrefixHit>,
         _rng: &mut Rng,
     ) -> RunState {
         // Whole-bucket graphs execute monolithically in `prefill_chunk`;
-        // the run needs no scratch state.
+        // the run needs no scratch state.  Non-chunked backends never
+        // reserve in the paged store, so there is no prefix to resume
+        // (`prefix_chain` keeps its opt-out default).
+        debug_assert!(prefix.is_none(), "non-chunked backend admitted with a prefix hit");
+        let _ = prefix; // (only read by the debug assertion)
         RunState::begin(req, bucket, default_chunk, Box::new(()))
     }
 

@@ -20,9 +20,9 @@ use crate::util::rng::Rng;
 
 use super::{
     decode_one, digest, finish_decode_round, quick_indexer, run_monolithic, selection_pipeline,
-    synth_begin, synth_parts, synth_prefill_chunk, AttentionMode, Capabilities, ChunkStep,
-    DecodeSlot, DecodeStep, EngineConfig, ExecBackend, PagedKvStore, PrefillRequest,
-    PrefillResponse, RunState,
+    synth_begin, synth_parts, synth_prefill_chunk, synth_prefix_chain, AttentionMode,
+    Capabilities, ChunkStep, DecodeSlot, DecodeStep, EngineConfig, ExecBackend, PagedKvStore,
+    PrefillRequest, PrefillResponse, PrefixChain, PrefixHit, RunState,
 };
 
 pub struct ReferenceBackend {
@@ -59,14 +59,24 @@ impl ExecBackend for ReferenceBackend {
         &self.cfg.buckets
     }
 
+    fn prefix_chain(
+        &self,
+        req: &PrefillRequest,
+        bucket: usize,
+        block_size: usize,
+    ) -> Option<PrefixChain> {
+        synth_prefix_chain(&self.cfg.synth, req, bucket, block_size)
+    }
+
     fn begin(
         &self,
         req: PrefillRequest,
         bucket: usize,
         default_chunk: usize,
+        prefix: Option<PrefixHit>,
         _rng: &mut Rng,
     ) -> RunState {
-        synth_begin(&self.cfg.synth, req, bucket, default_chunk)
+        synth_begin(&self.cfg.synth, req, bucket, default_chunk, prefix)
     }
 
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {

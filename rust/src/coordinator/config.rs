@@ -30,6 +30,8 @@ use super::CoordinatorConfig;
 pub enum KeyKind {
     Usize,
     F32,
+    /// `true`/`false` (also `1`/`0`) on the CLI, boolean in JSON.
+    Bool,
     /// Comma-separated on the CLI (`--buckets 256,1024`), array in JSON.
     UsizeList,
 }
@@ -40,6 +42,7 @@ pub enum KeyKind {
 pub enum KeyValue {
     Usize(usize),
     F32(f32),
+    Bool(bool),
     UsizeList(Vec<usize>),
 }
 
@@ -89,6 +92,18 @@ pub const KEYS: &[ConfigKey] = &[
     ),
     usize_key!("kv_blocks", "kv-blocks", "paged KV pool: number of blocks", kv_blocks),
     usize_key!("kv_block_size", "kv-block-size", "paged KV pool: rows per block", kv_block_size),
+    ConfigKey {
+        json: "kv_prefix_cache",
+        cli: "kv-prefix-cache",
+        kind: KeyKind::Bool,
+        help: "share identical prompt-prefix KV blocks between requests",
+        get: |c| KeyValue::Bool(c.kv_prefix_cache),
+        set: |c, v| {
+            if let KeyValue::Bool(x) = v {
+                c.kv_prefix_cache = x;
+            }
+        },
+    },
     ConfigKey {
         json: "engine.buckets",
         cli: "buckets",
@@ -146,6 +161,11 @@ impl KeyKind {
         Ok(match self {
             KeyKind::Usize => KeyValue::Usize(s.parse()?),
             KeyKind::F32 => KeyValue::F32(s.parse()?),
+            KeyKind::Bool => KeyValue::Bool(match s {
+                "true" | "1" => true,
+                "false" | "0" => false,
+                other => anyhow::bail!("expected true/false/1/0, got '{other}'"),
+            }),
             KeyKind::UsizeList => KeyValue::UsizeList(
                 s.split(',')
                     .map(|p| p.trim().parse::<usize>().map_err(anyhow::Error::from))
@@ -163,6 +183,9 @@ impl KeyKind {
             KeyKind::F32 => KeyValue::F32(
                 j.as_f64().ok_or_else(|| anyhow::anyhow!("expected a number"))? as f32,
             ),
+            KeyKind::Bool => KeyValue::Bool(
+                j.as_bool().ok_or_else(|| anyhow::anyhow!("expected a boolean"))?,
+            ),
             KeyKind::UsizeList => KeyValue::UsizeList(j.as_usize_vec()?),
         })
     }
@@ -179,6 +202,7 @@ impl ConfigKey {
         match v {
             KeyValue::Usize(x) => x.to_string(),
             KeyValue::F32(x) => x.to_string(),
+            KeyValue::Bool(x) => x.to_string(),
             KeyValue::UsizeList(xs) => {
                 xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
             }
@@ -274,6 +298,8 @@ mod tests {
         match (key.json, key.kind) {
             ("engine.buckets", _) => KeyValue::UsizeList(vec![96, 192]),
             (_, KeyKind::F32) => KeyValue::F32(0.55),
+            // Defaults to true, so the observable distinct value is false.
+            ("kv_prefix_cache", _) => KeyValue::Bool(false),
             ("max_wait_ms", _) => KeyValue::Usize(7),
             ("kv_blocks", _) => KeyValue::Usize(31),
             ("kv_block_size", _) => KeyValue::Usize(48),
@@ -298,6 +324,7 @@ mod tests {
             let rendered = match &v {
                 KeyValue::Usize(x) => x.to_string(),
                 KeyValue::F32(x) => x.to_string(),
+                KeyValue::Bool(x) => x.to_string(),
                 KeyValue::UsizeList(xs) => format!(
                     "[{}]",
                     xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")

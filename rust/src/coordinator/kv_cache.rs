@@ -6,4 +6,6 @@
 //! coordinator keeps this module as its canonical name for the store
 //! (admission reserves, chunks append, completion frees).
 
-pub use crate::tensor::paged::{PagedKv, PagedKvStore};
+pub use crate::tensor::paged::{
+    PagedKv, PagedKvStore, PrefixAux, PrefixChain, PrefixGroup, ReserveOutcome,
+};

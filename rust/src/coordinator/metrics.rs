@@ -29,6 +29,14 @@ pub struct Metrics {
     /// Generations ended by a stop token before `max_new_tokens` (their
     /// unused KV tail blocks were reclaimed early).
     pub early_stopped: AtomicU64,
+    /// Requests admitted with at least one prompt block served from the
+    /// shared-prefix KV cache.
+    pub prefix_hits: AtomicU64,
+    /// Total cached blocks pinned (shared, not recomputed) across all
+    /// admissions.
+    pub prefix_blocks_shared: AtomicU64,
+    /// Idle cached blocks evicted (LRU) to make room for reservations.
+    pub prefix_evictions: AtomicU64,
     prefill_us: Mutex<Reservoir>,
     queue_us: Mutex<Reservoir>,
     index_us: Mutex<Reservoir>,
@@ -46,6 +54,9 @@ pub struct Snapshot {
     pub chunks_executed: u64,
     pub tokens_generated: u64,
     pub early_stopped: u64,
+    pub prefix_hits: u64,
+    pub prefix_blocks_shared: u64,
+    pub prefix_evictions: u64,
     pub p50_prefill_us: f64,
     pub p95_prefill_us: f64,
     pub p50_ttft_us: f64,
@@ -70,6 +81,9 @@ impl Metrics {
             chunks_executed: AtomicU64::new(0),
             tokens_generated: AtomicU64::new(0),
             early_stopped: AtomicU64::new(0),
+            prefix_hits: AtomicU64::new(0),
+            prefix_blocks_shared: AtomicU64::new(0),
+            prefix_evictions: AtomicU64::new(0),
             prefill_us: res(),
             queue_us: res(),
             index_us: res(),
@@ -117,6 +131,9 @@ impl Metrics {
             chunks_executed: self.chunks_executed.load(Ordering::Relaxed),
             tokens_generated: self.tokens_generated.load(Ordering::Relaxed),
             early_stopped: self.early_stopped.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_blocks_shared: self.prefix_blocks_shared.load(Ordering::Relaxed),
+            prefix_evictions: self.prefix_evictions.load(Ordering::Relaxed),
             p50_prefill_us: percentile_sorted(&prefill, 0.5),
             p95_prefill_us: percentile_sorted(&prefill, 0.95),
             p50_ttft_us: percentile_sorted(&ttft, 0.5),
@@ -151,6 +168,9 @@ impl Snapshot {
             ("chunks_executed", Json::Num(self.chunks_executed as f64)),
             ("tokens_generated", Json::Num(self.tokens_generated as f64)),
             ("early_stopped", Json::Num(self.early_stopped as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefix_blocks_shared", Json::Num(self.prefix_blocks_shared as f64)),
+            ("prefix_evictions", Json::Num(self.prefix_evictions as f64)),
             ("p50_prefill_us", Json::Num(self.p50_prefill_us)),
             ("p95_prefill_us", Json::Num(self.p95_prefill_us)),
             ("p50_ttft_us", Json::Num(self.p50_ttft_us)),
@@ -228,6 +248,20 @@ mod tests {
         assert_eq!(s.completed, 2 * 4096);
         assert_eq!(s.tokens_generated, 2 * 4096);
         assert!(s.p50_prefill_us >= 100.0 && s.p50_prefill_us <= 600.0);
+    }
+
+    #[test]
+    fn prefix_counters_reach_snapshot_and_wire() {
+        let m = Metrics::new();
+        m.prefix_hits.fetch_add(3, Ordering::Relaxed);
+        m.prefix_blocks_shared.fetch_add(12, Ordering::Relaxed);
+        m.prefix_evictions.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.prefix_hits, s.prefix_blocks_shared, s.prefix_evictions), (3, 12, 2));
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("prefix_hits").and_then(|x| x.as_f64()), Some(3.0));
+        assert_eq!(back.get("prefix_blocks_shared").and_then(|x| x.as_f64()), Some(12.0));
+        assert_eq!(back.get("prefix_evictions").and_then(|x| x.as_f64()), Some(2.0));
     }
 
     #[test]

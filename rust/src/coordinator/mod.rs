@@ -40,7 +40,13 @@
 //!   kv_cache   — paged KV store: block arenas holding real K/V rows,
 //!                per-request block tables, append/view/gather/shrink/free
 //!                (re-export of `tensor::paged` — the attention kernels
-//!                read through it, so it lives below them)
+//!                read through it, so it lives below them).  Blocks are
+//!                refcounted for the shared-prefix cache: completed
+//!                prompts stay resident (idle, LRU-evicted tails-first)
+//!                keyed by a rolling per-block-group content hash, new
+//!                requests pin matching leading blocks at admission
+//!                (`reserve_with_prefix`), and a partially filled shared
+//!                tail is copied-on-write into the reservation budget
 //!   config     — the deployment-facing configuration surface: one
 //!                declarative key table drives both the JSON file format
 //!                and the `--key value` CLI overrides
@@ -57,7 +63,7 @@ pub mod request;
 pub mod scheduler;
 pub mod server;
 
-pub use backend::{Capabilities, ChunkStep, DecodeStep, ExecBackend, RunState};
+pub use backend::{Capabilities, ChunkStep, DecodeStep, ExecBackend, PrefixHit, RunState};
 pub use engine::{AttentionMode, EngineConfig};
 pub use kv_cache::{PagedKv, PagedKvStore};
 pub use request::{PrefillRequest, PrefillResponse, ResponseEvent, ResponseHandle, TokenFrame};
@@ -87,6 +93,11 @@ pub struct CoordinatorConfig {
     /// `2 * kv_blocks * kv_block_size * head_dim * 4` bytes.
     pub kv_blocks: usize,
     pub kv_block_size: usize,
+    /// Share identical prompt-prefix KV blocks between requests: completed
+    /// prompts stay resident (idle, LRU-evictable) in the paged pool, and
+    /// a new request whose prompt content matches pins those blocks
+    /// instead of recomputing attention and indexer scores over them.
+    pub kv_prefix_cache: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -100,6 +111,7 @@ impl Default for CoordinatorConfig {
             max_new_cap: 256,
             kv_blocks: 1024,
             kv_block_size: 64,
+            kv_prefix_cache: true,
         }
     }
 }
@@ -139,6 +151,7 @@ impl Coordinator {
             max_inflight: cfg.max_inflight.max(1),
             max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
             max_new_cap: cfg.max_new_cap,
+            prefix_cache: cfg.kv_prefix_cache,
         };
         let adm = admission.clone();
         let met = metrics.clone();

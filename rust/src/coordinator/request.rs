@@ -193,6 +193,9 @@ pub struct PrefillResponse {
     pub ttft_us: u64,
     /// Number of prefill chunks executed (1 for monolithic execution).
     pub chunks: u64,
+    /// Leading prompt rows served from the shared-prefix KV cache instead
+    /// of being recomputed (0 on a cold run).
+    pub cached_rows: usize,
     /// Per-chunk compute microseconds, in schedule order.
     pub chunk_us: Vec<u64>,
     /// Generated token ids, in order (empty for prefill-only requests).
@@ -225,6 +228,7 @@ impl PrefillResponse {
             ("index_us", Json::Num(self.index_us as f64)),
             ("ttft_us", Json::Num(self.ttft_us as f64)),
             ("chunks", Json::Num(self.chunks as f64)),
+            ("cached_rows", Json::Num(self.cached_rows as f64)),
             (
                 "chunk_us",
                 Json::Arr(self.chunk_us.iter().map(|&u| Json::Num(u as f64)).collect()),
@@ -261,6 +265,7 @@ impl PrefillResponse {
             // pre-decode peers on the wire stay parseable.
             ttft_us: j.get("ttft_us").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
             chunks: j.get("chunks").and_then(|x| x.as_f64()).unwrap_or(0.0) as u64,
+            cached_rows: j.get("cached_rows").and_then(|x| x.as_usize()).unwrap_or(0),
             chunk_us: u64_arr("chunk_us"),
             tokens: j
                 .get("tokens")
@@ -290,6 +295,7 @@ mod tests {
             index_us: 50,
             ttft_us: 400,
             chunks: 3,
+            cached_rows: 192,
             chunk_us: vec![120, 130, 140],
             tokens: vec![17, 29_999, 4],
             decode_us: vec![90, 80, 85],
@@ -305,6 +311,7 @@ mod tests {
         assert!((back.density - 0.18).abs() < 1e-12);
         assert_eq!(back.ttft_us, 400);
         assert_eq!(back.chunks, 3);
+        assert_eq!(back.cached_rows, 192);
         assert_eq!(back.chunk_us, vec![120, 130, 140]);
         assert_eq!(back.tokens, vec![17, 29_999, 4]);
         assert_eq!(back.decode_us, vec![90, 80, 85]);

@@ -11,7 +11,14 @@
 //! never-fit requests at admission, and — for backends with the `chunked`
 //! capability, the only ones that touch the paged store — reserving
 //! `bucket + max_new` rows in the paged KV store all-or-nothing so an
-//! admitted request can always prefill *and* decode to completion;
+//! admitted request can always prefill *and* decode to completion.
+//! With the prefix cache on, the reservation first probes the store's
+//! shared-prefix index with the backend's content chain
+//! ([`ExecBackend::prefix_chain`]): already-resident leading prompt
+//! blocks are pinned (shared) instead of re-reserved, the hit rides into
+//! [`ExecBackend::begin`] so the backend resumes past the cached rows,
+//! and `prefix_hits` / `prefix_blocks_shared` / `prefix_evictions` land
+//! in the metrics;
 //! (2) dispatches the next chunk of
 //! every prefilling request — across the worker pool when the backend's
 //! [`Capabilities`] allow sharing, serially otherwise; and (3) runs one
@@ -51,6 +58,10 @@ pub struct SchedulerConfig {
     /// Server-side cap on per-request `max_new_tokens` (requests asking for
     /// more are clamped at admission).
     pub max_new_cap: usize,
+    /// Probe the paged store's shared-prefix index at admission and pin
+    /// already-resident prompt blocks into new reservations (chunked
+    /// backends only).
+    pub prefix_cache: bool,
 }
 
 /// One prefilling request: its run state plus the reply channel.
@@ -182,6 +193,7 @@ fn admit(
         // Only chunked backends touch the paged store: reserving rows for a
         // backend that executes monolithically would strand pool capacity
         // on pure accounting (and spuriously reject on small pools).
+        let mut prefix: Option<super::backend::PrefixHit> = None;
         if caps.chunked {
             let rows = bucket + item.req.max_new_tokens;
             if rows > store.total_blocks * store.block_size {
@@ -197,7 +209,17 @@ fn admit(
                 );
                 continue;
             }
-            if !store.reserve(item.req.id, rows) {
+            // Prefix-cache admission: probe the store's index with the
+            // request's content chain; matching leading blocks are pinned
+            // (shared) into the reservation and only the tail is fresh.
+            let chain = if cfg.prefix_cache {
+                backend.prefix_chain(&item.req, bucket, store.block_size)
+            } else {
+                None
+            };
+            let outcome = store.reserve_with_prefix(item.req.id, rows, chain.as_ref());
+            met.prefix_evictions.fetch_add(outcome.evicted as u64, Ordering::Relaxed);
+            if !outcome.reserved {
                 met.kv_rejections.fetch_add(1, Ordering::Relaxed);
                 // Pool is full right now: put this item and everything
                 // popped behind it back at the FRONT of admission in
@@ -209,8 +231,17 @@ fn admit(
                 }
                 break;
             }
+            if outcome.hit_rows > 0 {
+                met.prefix_hits.fetch_add(1, Ordering::Relaxed);
+                met.prefix_blocks_shared.fetch_add(outcome.hit_blocks as u64, Ordering::Relaxed);
+            }
+            prefix = chain.map(|chain| super::backend::PrefixHit {
+                chain,
+                rows: outcome.hit_rows,
+                aux: outcome.aux,
+            });
         }
-        let run = backend.begin(item.req, bucket, cfg.chunk_tokens, rng);
+        let run = backend.begin(item.req, bucket, cfg.chunk_tokens, prefix, rng);
         ready.push_back(Inflight { run, reply: item.reply });
     }
 }
@@ -354,6 +385,7 @@ mod tests {
                 max_inflight: 8,
                 max_wait: std::time::Duration::from_millis(1),
                 max_new_cap: 256,
+                prefix_cache: true,
             },
             backend,
             AdmissionQueue::new(64),
@@ -524,6 +556,74 @@ mod tests {
         assert!(resp.ok, "{:?}", resp.error);
         assert_eq!(resp.tokens.len(), 3, "clamped to max_new_cap");
         assert_eq!(frames, 3);
+    }
+
+    #[test]
+    fn repeated_prefix_skips_prefill_and_counts_hits() {
+        let (cfg, backend, adm, store, met) = setup();
+        // Cold request: same seed replayed later under a different id.
+        let cold_rx = {
+            let (tx, rx) = mpsc::channel();
+            let req = PrefillRequest::synthetic(1, 256, 77, AttentionMode::Sparse);
+            adm.push(WorkItem { req, reply: tx }).unwrap();
+            rx
+        };
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(10);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        let (_, cold) = final_of(&cold_rx);
+        assert!(cold.ok, "{:?}", cold.error);
+        assert_eq!(cold.chunks, 2, "256 rows at chunk 128");
+        assert_eq!(cold.cached_rows, 0);
+        assert_eq!(store.used(), 0, "cached blocks are idle capacity, not usage");
+        assert!(store.cached_idle() > 0, "completed prompt stays resident");
+
+        let warm_rx = {
+            let (tx, rx) = mpsc::channel();
+            let req = PrefillRequest::synthetic(2, 256, 77, AttentionMode::Sparse);
+            adm.push(WorkItem { req, reply: tx }).unwrap();
+            rx
+        };
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        let (_, warm) = final_of(&warm_rx);
+        assert!(warm.ok, "{:?}", warm.error);
+        assert_eq!(warm.cached_rows, 256, "whole prompt served from the cache");
+        assert_eq!(warm.chunks, 1, "one bookkeeping round instead of two compute chunks");
+        assert_eq!(warm.output_digest, cold.output_digest, "digest identical to the cold run");
+        assert_eq!(warm.density, cold.density, "density identical to the cold run");
+        let snap = met.snapshot();
+        assert_eq!(snap.prefix_hits, 1);
+        assert_eq!(snap.prefix_blocks_shared, 4, "256 rows at 64-row blocks");
+        store.assert_consistent();
+
+        // A different prompt shares nothing.
+        let other_rx = submit(&adm, 3, 256);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        let (_, other) = final_of(&other_rx);
+        assert!(other.ok);
+        assert_eq!(other.cached_rows, 0);
+        assert_eq!(met.snapshot().prefix_hits, 1, "no spurious hits");
+    }
+
+    #[test]
+    fn prefix_cache_off_means_no_sharing() {
+        let (mut cfg, backend, adm, store, met) = setup();
+        cfg.prefix_cache = false;
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(12);
+        for id in [1u64, 2] {
+            let (tx, rx) = mpsc::channel();
+            let req = PrefillRequest::synthetic(id, 256, 99, AttentionMode::Sparse);
+            adm.push(WorkItem { req, reply: tx }).unwrap();
+            run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+            let (_, resp) = final_of(&rx);
+            assert!(resp.ok);
+            assert_eq!(resp.cached_rows, 0);
+            assert_eq!(resp.chunks, 2, "full prefill both times");
+        }
+        let snap = met.snapshot();
+        assert_eq!(snap.prefix_hits, 0);
+        assert_eq!(store.cached_idle(), 0, "nothing published with the cache off");
     }
 
     #[test]

@@ -202,6 +202,24 @@ impl IncrementalScores {
         softmax_inplace(&mut av);
         av
     }
+
+    /// The raw per-position (vertical, slash) logits accumulated so far —
+    /// what the prefix cache persists per block group so a later request
+    /// with the same prompt can resume scoring without recomputing the
+    /// indexer forward over the cached rows.
+    pub fn logits(&self) -> (&[f32], &[f32]) {
+        (&self.logit_v, &self.logit_s)
+    }
+
+    /// Seed the state with logits computed earlier over the same rows (the
+    /// prefix-cache warm-start path).  Appending previously-exported logits
+    /// is bit-identical to re-scoring the rows: `score_chunk` is a pure
+    /// per-row map, so state(seeded prefix) + score(tail) == state(full).
+    pub fn extend_logits(&mut self, logit_v: &[f32], logit_s: &[f32]) {
+        assert_eq!(logit_v.len(), logit_s.len(), "paired per-position logits");
+        self.logit_v.extend_from_slice(logit_v);
+        self.logit_s.extend_from_slice(logit_s);
+    }
 }
 
 #[cfg(test)]

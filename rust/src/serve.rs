@@ -127,6 +127,14 @@ impl EngineBuilder {
         self
     }
 
+    /// Enable/disable shared-prefix KV caching (on by default): completed
+    /// prompts stay resident in the paged pool and requests with identical
+    /// leading content pin those blocks instead of recomputing them.
+    pub fn prefix_cache(mut self, on: bool) -> EngineBuilder {
+        self.cfg.kv_prefix_cache = on;
+        self
+    }
+
     /// Use a caller-provided indexer instead of the cached quick-distilled
     /// one (native / reference backends).
     pub fn indexer(mut self, ix: Indexer) -> EngineBuilder {

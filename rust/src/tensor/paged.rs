@@ -31,10 +31,34 @@
 //!     on its sequence, and a freed sequence's blocks return to the pool
 //!     only when the last view drops — a stale view can therefore never
 //!     observe a recycled block.
+//!
+//! Prefix cache.  Blocks additionally carry a *shared* refcount: a block
+//! may appear in several sequences' tables at once, because the leading
+//! blocks of a prompt that the system has served before can be pinned into
+//! a new request's table instead of being recomputed (`reserve_with_prefix`
+//! probes a prefix index keyed by a rolling content hash of block-aligned
+//! prompt groups — see [`PrefixChain`]).  The sharing-safety invariant is
+//! row-granular, not block-granular: **published rows are immutable, and a
+//! writer only ever touches rows at or above its own published length.**
+//! A shared block is never any sequence's append target — the one
+//! candidate, a partially filled chain tail the reservation must extend
+//! past, is copied to a fresh block at reservation time (copy-on-write,
+//! budgeted into the reservation so `append` can never run out of room —
+//! the PR-2 "admitted requests always complete" invariant survives
+//! sharing).  The converse does NOT hold: a block a sequence is still
+//! appending decode rows into may simultaneously be published and pinned
+//! by other sequences reading its cached *leading* rows; those accesses
+//! are disjoint by the row-granular invariant.  When a sequence is freed, each
+//! block's refcount drops; blocks referenced by the prefix index stay
+//! *resident* at refcount zero (idle) so future requests can hit them, and
+//! are evicted LRU — chain tails before heads, so partial hits survive —
+//! only when a reservation would otherwise fail.  `used()` counts blocks
+//! held by live sequences; idle cached blocks are reclaimable capacity.
 
+use std::any::Any;
 use std::cell::UnsafeCell;
-use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::{Arc, Mutex};
 
 use super::Mat;
 
@@ -74,6 +98,122 @@ impl Arena {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Prefix-cache identity: rolling content hashes over block-aligned groups.
+// ---------------------------------------------------------------------------
+
+/// Opaque per-group sidecar attached by the execution layer when a prompt's
+/// groups are published into the prefix index, and handed back verbatim on
+/// a hit.  The backends stash whatever they need to *resume* from a cached
+/// prefix (incremental indexer logits, the first-chunk digest); the store
+/// never looks inside.
+pub type PrefixAux = Arc<dyn Any + Send + Sync>;
+
+/// One block-aligned group of a prompt: its rolling content hash and its
+/// row count (`block_size` for every group except a partial tail).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PrefixGroup {
+    pub hash: u64,
+    pub rows: usize,
+}
+
+/// The content identity of a prompt for prefix sharing: one group per
+/// `block_size` rows.  Each group's hash folds the base word and every
+/// group before it (rolling), so a cache probe can only ever match a
+/// *leading* run of groups — matching group `i` implies groups `0..i`
+/// matched too.  Two prompts share cached blocks exactly as far as their
+/// chains agree.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PrefixChain {
+    pub groups: Vec<PrefixGroup>,
+}
+
+/// FNV-1a fold of `words` onto `seed` — the hash primitive of the chain.
+/// 64-bit: a collision would alias two different prompts' cached blocks;
+/// at prefix-index sizes (≤ pool blocks) the probability is negligible.
+pub fn hash_words(seed: u64, words: &[u64]) -> u64 {
+    let mut h = seed;
+    for w in words {
+        for b in w.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+impl PrefixChain {
+    /// Build the chain for a `total_rows`-row prompt: group `g` covers rows
+    /// `[g * block_size, ...)` and hashes `word(g)` folded onto everything
+    /// before it.  `base` should fingerprint whatever beyond the per-group
+    /// words determines row content (generator config, bucket, mode).
+    pub fn rolling(
+        base: u64,
+        total_rows: usize,
+        block_size: usize,
+        mut word: impl FnMut(usize) -> u64,
+    ) -> PrefixChain {
+        assert!(block_size > 0, "block_size must be positive");
+        let mut h = hash_words(0xcbf2_9ce4_8422_2325, &[base]);
+        let mut groups = Vec::with_capacity(total_rows.div_ceil(block_size));
+        let mut row = 0;
+        let mut g = 0;
+        while row < total_rows {
+            let rows = block_size.min(total_rows - row);
+            h = hash_words(h, &[word(g), rows as u64]);
+            groups.push(PrefixGroup { hash: h, rows });
+            row += rows;
+            g += 1;
+        }
+        PrefixChain { groups }
+    }
+
+    /// Total prompt rows the chain covers.
+    pub fn rows(&self) -> usize {
+        self.groups.iter().map(|g| g.rows).sum()
+    }
+}
+
+/// What [`PagedKvStore::reserve_with_prefix`] did: whether the reservation
+/// succeeded, how much of the prompt was already resident, and the sidecar
+/// data of the matched groups (chain order) for the backend to resume from.
+#[derive(Default)]
+pub struct ReserveOutcome {
+    pub reserved: bool,
+    /// Leading prompt rows already resident from the cache (the sequence's
+    /// initial `len`: appends continue from here).
+    pub hit_rows: usize,
+    /// Cached blocks pinned (shared, not copied) into the new table.
+    pub hit_blocks: usize,
+    /// Idle cached blocks evicted to make room for this reservation.
+    pub evicted: usize,
+    /// Per matched group: the aux attached when the group was published.
+    pub aux: Vec<PrefixAux>,
+}
+
+/// Per-physical-block state: how many sequences' tables hold it, and
+/// whether the prefix index references it (resident while idle).
+#[derive(Clone, Copy, Default)]
+struct BlockState {
+    refs: u32,
+    cached: bool,
+}
+
+/// One published group in the prefix index.
+struct CacheEntry {
+    block: usize,
+    rows: usize,
+    aux: PrefixAux,
+    /// LRU stamp; higher = more recently used.  Within one publish/touch
+    /// the stamp decreases toward the chain tail, so eviction takes tails
+    /// before heads and a partially evicted chain still yields partial
+    /// hits.
+    stamp: u64,
+}
+
+/// Stamp stride between publish/touch serials (chain position occupies the
+/// low bits).
+const LRU_STRIDE: u64 = 1 << 16;
+
 struct Seq {
     /// Physical block ids, one per `block_size` rows, in logical order.
     table: Vec<usize>,
@@ -90,7 +230,69 @@ struct Seq {
 struct Meta {
     free: Vec<usize>,
     seqs: BTreeMap<u64, Seq>,
+    blocks: Vec<BlockState>,
+    /// Prefix index: rolling group hash -> resident cached block.
+    prefix: HashMap<u64, CacheEntry>,
+    /// Blocks with `refs == 0` kept resident because the index references
+    /// them — reclaimable capacity, excluded from `used()`.
+    idle_cached: usize,
+    /// Monotonic serial for LRU stamps.
+    serial: u64,
     peak_used: usize,
+}
+
+/// Drop one table reference to block `b`; at zero the block either parks as
+/// idle cached capacity (prefix index still references it) or returns to
+/// the free pool.
+fn release_block(m: &mut Meta, b: usize) {
+    let st = &mut m.blocks[b];
+    debug_assert!(st.refs > 0, "releasing unreferenced block {b}");
+    st.refs -= 1;
+    if st.refs == 0 {
+        if st.cached {
+            m.idle_cached += 1;
+        } else {
+            m.free.push(b);
+        }
+    }
+}
+
+/// Evictable cache entries — idle (refs == 0) and not in `protect` (the
+/// blocks a reservation in progress is about to pin or copy from) — as
+/// `(stamp, hash)` in LRU order (lowest stamp first: older chains before
+/// newer, tails before heads).  One O(entries) pass + sort, so callers can
+/// count *and* evict from a single scan instead of re-scanning the map per
+/// victim under the store's global mutex.
+fn idle_candidates(m: &Meta, protect: &[usize]) -> Vec<(u64, u64)> {
+    let mut v: Vec<(u64, u64)> = m
+        .prefix
+        .iter()
+        .filter(|(_, e)| m.blocks[e.block].refs == 0 && !protect.contains(&e.block))
+        .map(|(h, e)| (e.stamp, *h))
+        .collect();
+    v.sort_unstable();
+    v
+}
+
+/// Drop the given cache entries (from [`idle_candidates`]) into the free
+/// pool.  Returns the number of blocks freed.
+fn evict_entries(m: &mut Meta, victims: &[(u64, u64)]) -> usize {
+    for &(_, h) in victims {
+        let e = m.prefix.remove(&h).expect("victim came from the live candidate scan");
+        debug_assert_eq!(m.blocks[e.block].refs, 0, "evicting a pinned block");
+        m.blocks[e.block].cached = false;
+        m.idle_cached -= 1;
+        m.free.push(e.block);
+    }
+    victims.len()
+}
+
+/// A probe match held while building a reservation.
+struct MatchedGroup {
+    hash: u64,
+    block: usize,
+    rows: usize,
+    aux: PrefixAux,
 }
 
 pub struct PagedKvStore {
@@ -113,6 +315,10 @@ impl PagedKvStore {
             meta: Mutex::new(Meta {
                 free: (0..total_blocks).rev().collect(),
                 seqs: BTreeMap::new(),
+                blocks: vec![BlockState::default(); total_blocks],
+                prefix: HashMap::new(),
+                idle_cached: 0,
+                serial: 0,
                 peak_used: 0,
             }),
             k_data: Arena::new(floats),
@@ -124,8 +330,22 @@ impl PagedKvStore {
         seq_len.div_ceil(self.block_size)
     }
 
+    /// Blocks held by live sequences.  Idle cached blocks (resident for
+    /// prefix hits but owned by no sequence) are reclaimable capacity and
+    /// are *not* counted — see [`cached_idle`](Self::cached_idle).
     pub fn used(&self) -> usize {
-        self.total_blocks - self.meta.lock().unwrap().free.len()
+        let m = self.meta.lock().unwrap();
+        self.total_blocks - m.free.len() - m.idle_cached
+    }
+
+    /// Blocks resident at refcount zero purely as prefix-cache capacity.
+    pub fn cached_idle(&self) -> usize {
+        self.meta.lock().unwrap().idle_cached
+    }
+
+    /// Groups currently published in the prefix index.
+    pub fn prefix_entries(&self) -> usize {
+        self.meta.lock().unwrap().prefix.len()
     }
 
     pub fn peak_used(&self) -> usize {
@@ -141,16 +361,233 @@ impl PagedKvStore {
     /// by block as chunks arrive) is what makes chunk interleaving
     /// deadlock-free: an admitted request can always run to completion.
     pub fn reserve(&self, req_id: u64, seq_len: usize) -> bool {
-        let need = self.blocks_for(seq_len);
+        self.reserve_with_prefix(req_id, seq_len, None).reserved
+    }
+
+    /// [`reserve`](Self::reserve) with prefix-cache admission: probe the
+    /// index with `chain`, pin the longest resident leading run of groups
+    /// into the new table (shared, refcounted), and reserve fresh blocks
+    /// only for the unmatched tail.  The sequence starts with
+    /// `len == hit_rows`: those rows are already resident and readable;
+    /// appends continue from there.
+    ///
+    /// Copy-on-write: the only *shared* block a sequence could ever append
+    /// into is a partially filled chain tail that this reservation must
+    /// extend past (`seq_len > hit_rows` with `hit_rows` mid-block).  That
+    /// block is copied into a fresh one here, at admission — the copy is
+    /// part of the reservation's block budget, so `append` can never come
+    /// up short mid-flight and admitted requests still always complete.
+    ///
+    /// When the free pool cannot cover the fresh tail, idle cached blocks
+    /// are evicted LRU (never the ones this reservation pins).  Failure is
+    /// side-effect-free apart from counting nothing: no pins are taken and
+    /// nothing is evicted, so the caller can requeue under backpressure.
+    pub fn reserve_with_prefix(
+        &self,
+        req_id: u64,
+        seq_len: usize,
+        chain: Option<&PrefixChain>,
+    ) -> ReserveOutcome {
+        let need_total = self.blocks_for(seq_len);
         let mut m = self.meta.lock().unwrap();
-        if m.free.len() < need || m.seqs.contains_key(&req_id) {
-            return false;
+        let mut out = ReserveOutcome::default();
+        if m.seqs.contains_key(&req_id) {
+            return out;
         }
-        let table: Vec<usize> = (0..need).map(|_| m.free.pop().unwrap()).collect();
-        m.seqs.insert(req_id, Seq { table, len: 0, capacity: seq_len, views: 0, dying: false });
-        let used = self.total_blocks - m.free.len();
+        // Probe: the longest leading run of chain groups resident in the
+        // index (rolling hashes make any match a leading match; the row
+        // check guards against geometry drift and hash collisions).
+        let mut matched: Vec<MatchedGroup> = Vec::new();
+        let mut hit_rows = 0usize;
+        if let Some(chain) = chain {
+            for g in &chain.groups {
+                if hit_rows + g.rows > seq_len {
+                    break;
+                }
+                match m.prefix.get(&g.hash) {
+                    Some(e) if e.rows == g.rows => {
+                        matched.push(MatchedGroup {
+                            hash: g.hash,
+                            block: e.block,
+                            rows: e.rows,
+                            aux: e.aux.clone(),
+                        });
+                        hit_rows += g.rows;
+                    }
+                    _ => break,
+                }
+            }
+        }
+        let tail_partial = hit_rows % self.block_size != 0;
+        let cow = tail_partial && seq_len > hit_rows;
+        let shared_count = matched.len() - (cow as usize);
+        let fresh = need_total - shared_count;
+        let shortfall = fresh.saturating_sub(m.free.len());
+        if shortfall > 0 {
+            let protect: Vec<usize> = matched.iter().map(|g| g.block).collect();
+            let candidates = idle_candidates(&m, &protect);
+            if candidates.len() < shortfall {
+                return out; // genuine exhaustion: caller requeues
+            }
+            out.evicted = evict_entries(&mut m, &candidates[..shortfall]);
+        }
+        // Build the table: pinned shared blocks, then the COW copy of a
+        // partial tail (if any), then fresh blocks.
+        m.serial += 1;
+        let serial = m.serial;
+        let clen = matched.len() as u64;
+        let mut table: Vec<usize> = Vec::with_capacity(need_total);
+        for (gi, g) in matched.iter().enumerate() {
+            out.aux.push(g.aux.clone());
+            if let Some(e) = m.prefix.get_mut(&g.hash) {
+                e.stamp = serial * LRU_STRIDE + (clen - gi as u64);
+            }
+            if gi < shared_count {
+                let st = &mut m.blocks[g.block];
+                if st.refs == 0 {
+                    m.idle_cached -= 1;
+                }
+                st.refs += 1;
+                table.push(g.block);
+            }
+        }
+        if cow {
+            let src = matched.last().expect("cow implies a matched partial tail");
+            let nb = m.free.pop().expect("budgeted by the shortfall check");
+            debug_assert!(m.blocks[nb].refs == 0 && !m.blocks[nb].cached);
+            m.blocks[nb].refs = 1;
+            // SAFETY: `nb` comes off the free list (unreferenced, uncached),
+            // the source rows sit below a published prefix length (no writer
+            // ever touches them again), and the meta lock is held.
+            unsafe { self.copy_block_rows(src.block, nb, src.rows) };
+            table.push(nb);
+        }
+        while table.len() < need_total {
+            let b = m.free.pop().expect("budgeted by the shortfall check");
+            debug_assert!(m.blocks[b].refs == 0 && !m.blocks[b].cached);
+            m.blocks[b].refs = 1;
+            table.push(b);
+        }
+        m.seqs.insert(
+            req_id,
+            Seq { table, len: hit_rows, capacity: seq_len, views: 0, dying: false },
+        );
+        out.reserved = true;
+        out.hit_rows = hit_rows;
+        out.hit_blocks = shared_count;
+        let used = self.total_blocks - m.free.len() - m.idle_cached;
         m.peak_used = m.peak_used.max(used);
-        true
+        out
+    }
+
+    /// Publish a completed prompt's leading groups into the prefix index so
+    /// later requests with the same content can share the blocks.  `aux`
+    /// carries one sidecar per chain group (what a hit needs to resume —
+    /// see [`PrefixAux`]).  Only groups fully appended are published; a
+    /// group already present keeps its original block (first writer wins).
+    /// Returns the number of newly published groups.
+    pub fn publish_prefix(&self, req_id: u64, chain: &PrefixChain, aux: Vec<PrefixAux>) -> usize {
+        debug_assert_eq!(chain.groups.len(), aux.len(), "one aux per chain group");
+        let mut m = self.meta.lock().unwrap();
+        let Some(seq) = m.seqs.get(&req_id) else {
+            return 0;
+        };
+        if seq.dying {
+            return 0;
+        }
+        let (table, len) = (seq.table.clone(), seq.len);
+        m.serial += 1;
+        let serial = m.serial;
+        let clen = chain.groups.len() as u64;
+        let mut row0 = 0usize;
+        let mut published = 0;
+        for (gi, (g, a)) in chain.groups.iter().zip(aux).enumerate() {
+            if row0 + g.rows > len {
+                break; // not fully appended yet
+            }
+            debug_assert_eq!(row0 % self.block_size, 0, "chain groups are block-aligned");
+            let b = table[row0 / self.block_size];
+            let stamp = serial * LRU_STRIDE + (clen - gi as u64);
+            match m.prefix.entry(g.hash) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    e.get_mut().stamp = stamp;
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(CacheEntry { block: b, rows: g.rows, aux: a, stamp });
+                    m.blocks[b].cached = true;
+                    published += 1;
+                }
+            }
+            row0 += g.rows;
+        }
+        published
+    }
+
+    /// Drop up to `max_blocks` idle cached blocks (LRU order) back into the
+    /// free pool — the operational "shrink the prefix cache" control.
+    pub fn evict_idle(&self, max_blocks: usize) -> usize {
+        let mut m = self.meta.lock().unwrap();
+        let candidates = idle_candidates(&m, &[]);
+        let take = candidates.len().min(max_blocks);
+        evict_entries(&mut m, &candidates[..take])
+    }
+
+    /// Copy the `rows` leading rows of block `src` into block `dst` in both
+    /// arenas (the COW path).
+    ///
+    /// SAFETY: caller holds the meta lock, `dst` is unreferenced, and the
+    /// copied `src` rows are below a published length (immutable).
+    unsafe fn copy_block_rows(&self, src: usize, dst: usize, rows: usize) {
+        debug_assert!(rows <= self.block_size);
+        let n = rows * self.head_dim;
+        let so = src * self.block_size * self.head_dim;
+        let doff = dst * self.block_size * self.head_dim;
+        let k: Vec<f32> = self.k_data.read(so, n).to_vec();
+        self.k_data.write(doff, &k);
+        let v: Vec<f32> = self.v_data.read(so, n).to_vec();
+        self.v_data.write(doff, &v);
+    }
+
+    /// Exhaustively check the store's block-accounting invariants (tests
+    /// and the concurrency stress suite; O(blocks + sequences)).
+    #[doc(hidden)]
+    pub fn assert_consistent(&self) {
+        let m = self.meta.lock().unwrap();
+        let mut refs = vec![0u32; self.total_blocks];
+        for seq in m.seqs.values() {
+            for &b in &seq.table {
+                refs[b] += 1;
+            }
+        }
+        for b in 0..self.total_blocks {
+            assert_eq!(refs[b], m.blocks[b].refs, "block {b}: refcount vs table occurrences");
+        }
+        let mut in_free = vec![false; self.total_blocks];
+        for &b in &m.free {
+            assert!(!in_free[b], "free list double-counts block {b}");
+            in_free[b] = true;
+            assert_eq!(m.blocks[b].refs, 0, "free block {b} still referenced");
+            assert!(!m.blocks[b].cached, "free block {b} still cached");
+        }
+        let mut in_entry = vec![false; self.total_blocks];
+        for e in m.prefix.values() {
+            assert!(!in_entry[e.block], "two prefix entries share block {}", e.block);
+            in_entry[e.block] = true;
+            assert!(m.blocks[e.block].cached, "entry block {} not flagged cached", e.block);
+            assert!(!in_free[e.block], "entry block {} also on the free list", e.block);
+        }
+        for b in 0..self.total_blocks {
+            assert_eq!(m.blocks[b].cached, in_entry[b], "cached flag vs index on block {b}");
+        }
+        let idle =
+            (0..self.total_blocks).filter(|&b| m.blocks[b].refs == 0 && m.blocks[b].cached).count();
+        assert_eq!(idle, m.idle_cached, "idle_cached counter drift");
+        let live = (0..self.total_blocks).filter(|&b| m.blocks[b].refs > 0).count();
+        assert_eq!(
+            m.free.len() + live + idle,
+            self.total_blocks,
+            "every block must be exactly one of free / live / idle-cached"
+        );
     }
 
     /// Append `k_rows`/`v_rows` (same shape, `head_dim` columns) to the
@@ -183,8 +620,20 @@ impl PagedKvStore {
             let row = seq.len + r;
             let block = seq.table[row / self.block_size];
             let off = (block * self.block_size + row % self.block_size) * self.head_dim;
-            // SAFETY: `block` is held by this sequence alone, and the meta
-            // mutex is held, so nothing else touches this region.
+            // SAFETY: writes land at rows >= this sequence's published
+            // `len`, and every *other* access to this block touches only
+            // rows below a published length — concurrent readers read rows
+            // below a view's snapshotted `len`, prefix hits read/copy rows
+            // below a published group's `rows`, and this sequence is the
+            // block's only appender (a shared block is never any
+            // sequence's append target: the one candidate, a partially
+            // filled chain tail, is COW-copied at reservation).  The
+            // regions are therefore disjoint, and the meta mutex orders
+            // the length publication itself.  NOTE: exclusivity of the
+            // whole block is NOT guaranteed — a block this sequence is
+            // still appending into may already be published and pinned by
+            // other sequences reading its cached leading rows; never write
+            // below `seq.len`.
             unsafe {
                 self.k_data.write(off, k_rows.row(r));
                 self.v_data.write(off, v_rows.row(r));
@@ -236,7 +685,9 @@ impl PagedKvStore {
         };
         if release {
             let seq = m.seqs.remove(&req_id).unwrap();
-            m.free.extend(seq.table);
+            for b in seq.table {
+                release_block(&mut m, b);
+            }
         }
         drop(m);
         debug_assert!(
@@ -283,7 +734,9 @@ impl PagedKvStore {
         let tail: Vec<usize> = seq.table.split_off(keep);
         seq.capacity = capacity;
         let freed = tail.len();
-        m.free.extend(tail);
+        for b in tail {
+            release_block(&mut m, b);
+        }
         freed
     }
 
@@ -303,7 +756,9 @@ impl PagedKvStore {
         };
         if !defer {
             let seq = m.seqs.remove(&req_id).unwrap();
-            m.free.extend(seq.table);
+            for b in seq.table {
+                release_block(&mut m, b);
+            }
         }
     }
 }
@@ -575,6 +1030,184 @@ mod tests {
         assert_eq!(kv.used(), 1, "refcount not underflowed: free defers");
         drop(view);
         assert_eq!(kv.used(), 0, "last real view still triggers the reclaim");
+    }
+
+    /// A chain whose per-group word is constant: content identity is the
+    /// base word (how the synthetic backends use it — row content derives
+    /// from one seed).
+    fn chain(base: u64, rows: usize, bs: usize) -> PrefixChain {
+        PrefixChain::rolling(base, rows, bs, |_| base)
+    }
+
+    fn aux_all(chain: &PrefixChain) -> Vec<PrefixAux> {
+        chain.groups.iter().map(|g| Arc::new(g.rows) as PrefixAux).collect()
+    }
+
+    #[test]
+    fn rolling_chains_are_leading_prefix_only() {
+        let a = chain(7, 96, 32);
+        let b = chain(7, 96, 32);
+        assert_eq!(a, b, "same content, same chain");
+        assert_eq!(a.rows(), 96);
+        assert_eq!(a.groups.len(), 3);
+        let c = chain(8, 96, 32);
+        for (ga, gc) in a.groups.iter().zip(&c.groups) {
+            assert_ne!(ga.hash, gc.hash, "different base diverges from group 0");
+        }
+        // Partial tail group carries its row count.
+        let d = chain(7, 80, 32);
+        assert_eq!(d.groups.last().unwrap().rows, 16);
+        assert_ne!(d.groups[2].hash, a.groups[2].hash, "row count is folded in");
+        assert_eq!(d.groups[0].hash, a.groups[0].hash, "shared leading groups agree");
+    }
+
+    #[test]
+    fn prefix_hit_shares_blocks_and_returns_aux() {
+        let mut rng = Rng::new(21);
+        let kv = PagedKvStore::new(8, 16, 8);
+        let ch = chain(5, 48, 16); // 3 full groups
+        let cold = kv.reserve_with_prefix(1, 48, Some(&ch));
+        assert!(cold.reserved);
+        assert_eq!((cold.hit_rows, cold.hit_blocks), (0, 0), "empty cache: cold");
+        let (k, v) = (randm(&mut rng, 48, 8), randm(&mut rng, 48, 8));
+        kv.append(1, &k, &v).unwrap();
+        assert_eq!(kv.publish_prefix(1, &ch, aux_all(&ch)), 3);
+        kv.free(1);
+        assert_eq!(kv.used(), 0, "idle cached blocks are reclaimable, not used");
+        assert_eq!(kv.cached_idle(), 3);
+
+        let warm = kv.reserve_with_prefix(2, 48, Some(&ch));
+        assert!(warm.reserved);
+        assert_eq!((warm.hit_rows, warm.hit_blocks), (48, 3));
+        assert_eq!(warm.aux.len(), 3);
+        assert_eq!(*warm.aux[0].downcast_ref::<usize>().unwrap(), 16, "aux round-trips");
+        // The cached rows are already resident and readable.
+        let view = kv.view(2).unwrap();
+        assert_eq!(view.len, 48);
+        for i in 0..48 {
+            assert_eq!(view.k_row(i), k.row(i), "shared block serves the original bytes");
+            assert_eq!(view.v_row(i), v.row(i));
+        }
+        drop(view);
+        // A different prompt shares nothing.
+        let miss = kv.reserve_with_prefix(3, 48, Some(&chain(6, 48, 16)));
+        assert!(miss.reserved);
+        assert_eq!(miss.hit_rows, 0);
+        kv.free(2);
+        kv.free(3);
+        kv.assert_consistent();
+    }
+
+    #[test]
+    fn partial_tail_hit_copies_on_write_before_appends() {
+        // Prompt of 40 rows at block size 16: groups [16, 16, 8] — the last
+        // cached block is partially filled.  A warm request that will
+        // append (decode rows) past row 40 must NOT write into the shared
+        // tail block; the store copies it at reservation time.
+        let mut rng = Rng::new(22);
+        let kv = PagedKvStore::new(8, 16, 8);
+        let ch = chain(9, 40, 16);
+        assert!(kv.reserve_with_prefix(1, 40, Some(&ch)).reserved);
+        let (k, v) = (randm(&mut rng, 40, 8), randm(&mut rng, 40, 8));
+        kv.append(1, &k, &v).unwrap();
+        kv.publish_prefix(1, &ch, aux_all(&ch));
+        kv.free(1);
+
+        // Warm request with decode capacity: partial tail is copied, the
+        // two full groups are shared.
+        let warm = kv.reserve_with_prefix(2, 40 + 8, Some(&ch));
+        assert!(warm.reserved);
+        assert_eq!(warm.hit_rows, 40, "all 40 cached rows resident, including the copied tail");
+        assert_eq!(warm.hit_blocks, 2, "only the full groups are shared");
+        let (k2, v2) = (randm(&mut rng, 8, 8), randm(&mut rng, 8, 8));
+        kv.append(2, &k2, &v2).unwrap(); // decode rows land in the COW copy
+        let view = kv.view(2).unwrap();
+        for i in 0..40 {
+            assert_eq!(view.k_row(i), k.row(i), "row {i}: cached prefix intact");
+        }
+        for i in 0..8 {
+            assert_eq!(view.k_row(40 + i), k2.row(i), "row {}: appended tail", 40 + i);
+        }
+        drop(view);
+
+        // The cached original was never written: a prefill-only warm
+        // request (capacity == cached rows) shares all three blocks and
+        // still reads the pristine prompt.
+        let ro = kv.reserve_with_prefix(3, 40, Some(&ch));
+        assert_eq!((ro.hit_rows, ro.hit_blocks), (40, 3), "no appends coming: share the tail too");
+        let view3 = kv.view(3).unwrap();
+        for i in 0..40 {
+            assert_eq!(view3.k_row(i), k.row(i), "row {i}: original prompt bytes");
+        }
+        drop(view3);
+        kv.free(2);
+        kv.free(3);
+        kv.assert_consistent();
+    }
+
+    #[test]
+    fn eviction_is_lru_tails_first_and_never_breaks_reservations() {
+        let mut rng = Rng::new(23);
+        let kv = PagedKvStore::new(4, 16, 8);
+        let ch = chain(3, 48, 16); // 3 groups
+        assert!(kv.reserve_with_prefix(1, 48, Some(&ch)).reserved);
+        let (k, v) = (randm(&mut rng, 48, 8), randm(&mut rng, 48, 8));
+        kv.append(1, &k, &v).unwrap();
+        kv.publish_prefix(1, &ch, aux_all(&ch));
+        kv.free(1);
+        assert_eq!(kv.cached_idle(), 3);
+
+        // A 2-block cold reservation must evict 1 cached block (3 idle + 1
+        // free, need 2): LRU takes the chain TAIL, so the head groups stay
+        // hittable.
+        let cold = kv.reserve_with_prefix(2, 32, Some(&chain(4, 32, 16)));
+        assert!(cold.reserved);
+        assert_eq!(cold.evicted, 1);
+        assert_eq!(kv.prefix_entries(), 2, "chain tail evicted, head survives");
+        kv.free(2);
+
+        // The surviving head yields a partial hit.
+        let part = kv.reserve_with_prefix(5, 48, Some(&ch));
+        assert!(part.reserved);
+        assert_eq!(part.hit_rows, 32, "leading 2 groups still cached");
+        assert_eq!(part.aux.len(), 2);
+        let view = kv.view(5).unwrap();
+        for i in 0..32 {
+            assert_eq!(view.k_row(i), k.row(i), "row {i} of the partial hit");
+        }
+        drop(view);
+        kv.free(5);
+        kv.assert_consistent();
+
+        // Pinned cached blocks are never evicted: with a live sharer, a
+        // reservation that would need them fails cleanly instead.
+        let hold = kv.reserve_with_prefix(6, 48, Some(&ch));
+        assert_eq!(hold.hit_rows, 32);
+        let too_big = kv.reserve_with_prefix(7, 64, None);
+        assert!(!too_big.reserved, "cannot evict blocks pinned by request 6");
+        assert!(kv.holds(6));
+        kv.free(6);
+        kv.assert_consistent();
+    }
+
+    #[test]
+    fn explicit_evict_idle_drains_the_cache() {
+        let mut rng = Rng::new(24);
+        let kv = PagedKvStore::new(6, 8, 8);
+        let ch = chain(11, 32, 8);
+        assert!(kv.reserve_with_prefix(1, 32, Some(&ch)).reserved);
+        let (k, v) = (randm(&mut rng, 32, 8), randm(&mut rng, 32, 8));
+        kv.append(1, &k, &v).unwrap();
+        kv.publish_prefix(1, &ch, aux_all(&ch));
+        kv.free(1);
+        assert_eq!(kv.cached_idle(), 4);
+        assert_eq!(kv.evict_idle(2), 2);
+        assert_eq!(kv.cached_idle(), 2);
+        assert_eq!(kv.evict_idle(usize::MAX), 2);
+        assert_eq!((kv.cached_idle(), kv.prefix_entries()), (0, 0));
+        assert!(kv.reserve(2, 6 * 8), "whole pool free again");
+        kv.free(2);
+        kv.assert_consistent();
     }
 
     #[test]

@@ -57,7 +57,7 @@ fn drive(
     let id = req.id;
     let bucket = backend.bucket_for(req.seq_len()).expect("request fits a bucket");
     assert!(store.reserve(id, bucket + req.max_new_tokens), "store sized for the test");
-    let mut run = backend.begin(req, bucket, chunk, &mut rng);
+    let mut run = backend.begin(req, bucket, chunk, None, &mut rng);
     assert!(run.is_prefilling() && !run.is_decoding() && !run.is_finished());
     loop {
         match backend.prefill_chunk(&mut run, store) {

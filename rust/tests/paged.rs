@@ -4,10 +4,13 @@
 //! reproduce their contiguous counterparts, and the store must hand back
 //! exactly the bytes that were appended.
 
+use std::sync::Arc;
+
 use vsprefill::attention::flash::{flash_attention, flash_attention_paged};
 use vsprefill::coordinator::kv_cache::PagedKvStore;
 use vsprefill::sparse::VsIndices;
 use vsprefill::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_paged};
+use vsprefill::tensor::paged::{PrefixAux, PrefixChain};
 use vsprefill::tensor::Mat;
 use vsprefill::util::rng::Rng;
 
@@ -149,6 +152,137 @@ fn single_chunk_paged_equals_contiguous_bit_for_bit() {
         assert_eq!(vs_c.data, vs_p.data, "sparse n={n}");
         store.free(3);
     }
+}
+
+/// Concurrency stress: worker threads race view/append/shrink_to/free plus
+/// shared-prefix reservations, publishes, copy-on-write tails and explicit
+/// eviction against one store.  Two invariants are asserted throughout:
+///
+/// 1. **No block is ever simultaneously writable by two sequences.**  The
+///    detector is content integrity: every sequence's canonical prefix and
+///    private tail must read back exactly; a write landing in a block
+///    another sequence holds (e.g. a decode append into a *shared* —
+///    instead of COW-copied — tail block) would corrupt a concurrent
+///    reader's bytes.
+/// 2. **The free list never double-counts.**  `assert_consistent()` checks
+///    free-list uniqueness, per-block refcounts vs table occurrences, the
+///    idle-cached ledger, and that every block is exactly one of
+///    free / live / idle-cached — interleaved with the races and again
+///    after the drain.
+#[test]
+fn concurrent_prefix_sharing_cow_and_reclaim_stay_consistent() {
+    const THREADS: u64 = 8;
+    const ITERS: u64 = 30;
+    const BS: usize = 8;
+    const D: usize = 8;
+    // 36 canonical rows = 4 full groups + 1 partial (COW territory).
+    const CANON_ROWS: usize = 36;
+
+    let store = Arc::new(PagedKvStore::new(96, BS, D));
+    let mut seed_rng = Rng::new(0xA11CE);
+    let canon_k = Arc::new(randn(&mut seed_rng, CANON_ROWS, D));
+    let canon_v = Arc::new(randn(&mut seed_rng, CANON_ROWS, D));
+    let chain = Arc::new(PrefixChain::rolling(0xC0FFEE, CANON_ROWS, BS, |_| 0xC0FFEE));
+
+    std::thread::scope(|scope| {
+        for t in 0..THREADS {
+            let store = store.clone();
+            let canon_k = canon_k.clone();
+            let canon_v = canon_v.clone();
+            let chain = chain.clone();
+            scope.spawn(move || {
+                let mut rng = Rng::new(0xBEEF ^ t);
+                for i in 0..ITERS {
+                    let id = t * 10_000 + i;
+                    match rng.below(4) {
+                        // Shared-prefix request: hit whatever leading run is
+                        // resident, append the canonical remainder + a
+                        // private random tail, publish, verify, reclaim.
+                        0 | 1 => {
+                            let extra = rng.below(2 * BS);
+                            let cap = CANON_ROWS + extra;
+                            let out = store.reserve_with_prefix(id, cap, Some(&chain));
+                            if !out.reserved {
+                                continue; // transient exhaustion is fine
+                            }
+                            assert!(out.hit_rows <= CANON_ROWS);
+                            let groups = out.hit_rows.div_ceil(BS);
+                            assert_eq!(out.aux.len(), groups, "one aux per matched group");
+                            // Fill the non-resident canonical tail with the
+                            // SAME content every sequence derives (what the
+                            // backends do from the shared seed).
+                            if out.hit_rows < CANON_ROWS {
+                                store
+                                    .append(
+                                        id,
+                                        &canon_k.sub_rows(out.hit_rows, CANON_ROWS),
+                                        &canon_v.sub_rows(out.hit_rows, CANON_ROWS),
+                                    )
+                                    .unwrap();
+                            }
+                            let aux: Vec<PrefixAux> = chain
+                                .groups
+                                .iter()
+                                .map(|g| Arc::new(g.rows) as PrefixAux)
+                                .collect();
+                            store.publish_prefix(id, &chain, aux);
+                            // Private decode-style tail (unique content).
+                            let (pk, pv) = (randn(&mut rng, extra, D), randn(&mut rng, extra, D));
+                            if extra > 0 {
+                                store.append(id, &pk, &pv).unwrap();
+                            }
+                            let view = store.view(id).unwrap();
+                            assert_eq!(view.len, cap);
+                            for r in 0..CANON_ROWS {
+                                assert_eq!(view.k_row(r), canon_k.row(r), "canonical row {r}");
+                                assert_eq!(view.v_row(r), canon_v.row(r), "canonical row {r}");
+                            }
+                            for r in 0..extra {
+                                assert_eq!(view.k_row(CANON_ROWS + r), pk.row(r), "extra row {r}");
+                            }
+                            drop(view);
+                            if rng.below(2) == 0 {
+                                store.shrink_to(id, CANON_ROWS);
+                            }
+                            store.free(id);
+                        }
+                        // Private sequence: unique content, full roundtrip.
+                        2 => {
+                            let rows = 1 + rng.below(4 * BS);
+                            if !store.reserve(id, rows) {
+                                continue;
+                            }
+                            let (k, v) = (randn(&mut rng, rows, D), randn(&mut rng, rows, D));
+                            let mut lo = 0;
+                            while lo < rows {
+                                let hi = (lo + 1 + rng.below(BS)).min(rows);
+                                store.append(id, &k.sub_rows(lo, hi), &v.sub_rows(lo, hi)).unwrap();
+                                lo = hi;
+                            }
+                            let (gk, gv) = store.gather(id, 0, rows).unwrap();
+                            assert_eq!(gk, k);
+                            assert_eq!(gv, v);
+                            store.free(id);
+                        }
+                        // Cache pressure + global invariants.
+                        _ => {
+                            store.evict_idle(1 + rng.below(3));
+                            store.assert_consistent();
+                        }
+                    }
+                }
+            });
+        }
+    });
+
+    store.assert_consistent();
+    assert_eq!(store.used(), 0, "every sequence drained");
+    // The cache may retain idle blocks; draining it returns every block.
+    store.evict_idle(usize::MAX);
+    store.assert_consistent();
+    assert_eq!(store.cached_idle(), 0);
+    assert!(store.reserve(424_242, 96 * BS), "the whole pool is reservable again");
+    store.free(424_242);
 }
 
 #[test]

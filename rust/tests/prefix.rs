@@ -1,0 +1,290 @@
+//! Shared-prefix KV cache conformance: a warm (cache-hit) run must be
+//! *observationally identical* to a cold run of the same request — same
+//! first-chunk output digest, same selected density, same token stream,
+//! bit for bit — across backends, chunk sizes, budgets, fragmented block
+//! tables, and partially evicted chains.  Only the work (and the chunk
+//! count) may differ.
+//!
+//! The drive harness goes through the same admission path the scheduler
+//! uses: `prefix_chain` -> `reserve_with_prefix` -> `begin(prefix)` ->
+//! chunk/decode loop; prefill completion publishes the prompt's groups, so
+//! one store accumulates cache state across drives exactly like a live
+//! coordinator.
+
+use vsprefill::coordinator::backend::{ChunkStep, DecodeStep, ExecBackend, PrefixHit};
+use vsprefill::coordinator::{AttentionMode, PagedKvStore, PrefillRequest, PrefillResponse};
+use vsprefill::serve::EngineBuilder;
+use vsprefill::synth::SynthConfig;
+use vsprefill::util::rng::Rng;
+
+fn backends() -> Vec<Box<dyn ExecBackend>> {
+    vec![
+        EngineBuilder::new().backend_name("native").unwrap().build_backend().unwrap(),
+        EngineBuilder::new().backend_name("reference").unwrap().build_backend().unwrap(),
+    ]
+}
+
+fn head_dim() -> usize {
+    SynthConfig::default().head_dim
+}
+
+fn store_with(blocks: usize, block_size: usize) -> PagedKvStore {
+    PagedKvStore::new(blocks, block_size, head_dim())
+}
+
+/// A store whose free list is scrambled so reservations get fragmented,
+/// out-of-order block tables.
+fn fragmented_store(blocks: usize, block_size: usize) -> PagedKvStore {
+    let store = store_with(blocks, block_size);
+    let rows = 2 * block_size;
+    assert!(store.reserve(901, rows));
+    assert!(store.reserve(902, rows));
+    assert!(store.reserve(903, rows));
+    store.free(902);
+    store.free(901);
+    store.free(903);
+    store
+}
+
+/// Drive one request through the prefix-aware admission path and the full
+/// typed lifecycle, like the scheduler does.  Returns the response and the
+/// rows the cache served.
+fn drive(
+    backend: &dyn ExecBackend,
+    store: &PagedKvStore,
+    req: PrefillRequest,
+    chunk: usize,
+) -> PrefillResponse {
+    let mut rng = Rng::new(0);
+    let id = req.id;
+    let bucket = backend.bucket_for(req.seq_len()).expect("request fits a bucket");
+    let chain = backend.prefix_chain(&req, bucket, store.block_size);
+    let outcome =
+        store.reserve_with_prefix(id, bucket + req.max_new_tokens, chain.as_ref());
+    assert!(outcome.reserved, "store sized for the test");
+    let prefix = chain.map(|chain| PrefixHit {
+        chain,
+        rows: outcome.hit_rows,
+        aux: outcome.aux,
+    });
+    let mut run = backend.begin(req, bucket, chunk, prefix, &mut rng);
+    loop {
+        match backend.prefill_chunk(&mut run, store) {
+            ChunkStep::Progress => {}
+            ChunkStep::Done(resp) => {
+                store.free(id);
+                store.assert_consistent();
+                return resp;
+            }
+            ChunkStep::EnterDecode => {
+                let mut runs = vec![run];
+                loop {
+                    let steps = backend.decode_step(&mut runs, store);
+                    match steps.into_iter().next().unwrap() {
+                        DecodeStep::Token(_) => {}
+                        DecodeStep::Done(_, resp) | DecodeStep::Failed(resp) => {
+                            store.free(id);
+                            store.assert_consistent();
+                            return resp;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn gen_req(id: u64, n: usize, seed: u64, max_new: usize) -> PrefillRequest {
+    let mut req = PrefillRequest::synthetic(id, n, seed, AttentionMode::Sparse);
+    req.max_new_tokens = max_new;
+    req
+}
+
+/// The acceptance-criteria conformance matrix: warm == cold on digest,
+/// density and token stream, for both backends, at two chunk sizes, on a
+/// fragmented table.
+#[test]
+fn warm_run_is_bit_identical_to_cold_run() {
+    for b in backends() {
+        for &chunk in &[64usize, 100] {
+            // Fresh (cold) store vs a store pre-warmed by an identical
+            // request; the warm store's free list is also fragmented.
+            let cold_store = store_with(64, 32);
+            let cold = drive(b.as_ref(), &cold_store, gen_req(1, 200, 6, 5), chunk);
+            assert!(cold.ok, "{}: {:?}", b.name(), cold.error);
+            assert_eq!(cold.cached_rows, 0);
+
+            let warm_store = fragmented_store(64, 32);
+            let first = drive(b.as_ref(), &warm_store, gen_req(2, 200, 6, 5), chunk);
+            assert!(first.ok, "{}: {:?}", b.name(), first.error);
+            assert_eq!(first.cached_rows, 0, "first drive on this store is cold");
+            let warm = drive(b.as_ref(), &warm_store, gen_req(3, 200, 6, 5), chunk);
+            assert!(warm.ok, "{}: {:?}", b.name(), warm.error);
+
+            assert_eq!(warm.cached_rows, 256, "whole padded prompt cached");
+            assert_eq!(warm.chunks, 1, "warm prefill is one bookkeeping round");
+            assert!(warm.chunks < cold.chunks);
+            assert_eq!(
+                warm.output_digest, cold.output_digest,
+                "{} chunk {chunk}: warm digest != cold",
+                b.name()
+            );
+            assert_eq!(
+                warm.density, cold.density,
+                "{} chunk {chunk}: warm density != cold",
+                b.name()
+            );
+            assert_eq!(
+                warm.tokens, cold.tokens,
+                "{} chunk {chunk}: warm token stream != cold",
+                b.name()
+            );
+            assert_eq!(warm_store.used(), 0);
+        }
+    }
+}
+
+/// Warm runs at a chunk size *different* from the populating run still
+/// reproduce the cold result (chunk boundaries are not part of the cached
+/// state), and dense-mode requests do not alias sparse-mode cache entries.
+#[test]
+fn warm_hits_are_chunk_size_and_mode_independent() {
+    let b = &backends()[0];
+    let store = store_with(64, 32);
+    let cold = drive(b.as_ref(), &store, gen_req(1, 200, 9, 4), 64);
+    assert!(cold.ok);
+    let warm = drive(b.as_ref(), &store, gen_req(2, 200, 9, 4), 100);
+    assert_eq!(warm.cached_rows, 256, "hit despite a different chunk size");
+    assert_eq!(warm.output_digest, cold.output_digest);
+    assert_eq!(warm.density, cold.density);
+    assert_eq!(warm.tokens, cold.tokens);
+
+    // Same seed, dense mode: a separate chain — no hit, and a cold dense
+    // run's results.
+    let mut dense = PrefillRequest::synthetic(3, 200, 9, AttentionMode::Dense);
+    dense.max_new_tokens = 4;
+    let dense_resp = drive(b.as_ref(), &store, dense, 64);
+    assert!(dense_resp.ok);
+    assert_eq!(dense_resp.cached_rows, 0, "mode is part of the content identity");
+    assert_eq!(dense_resp.density, 1.0);
+}
+
+/// The budget knob is NOT part of the cache identity: KV rows and indexer
+/// logits are budget-independent, and a warm run re-runs selection — so a
+/// hit at a different budget must reproduce that budget's own cold
+/// density, not the populating run's.
+#[test]
+fn warm_hit_at_different_budget_matches_that_budgets_cold_run() {
+    let b = &backends()[0];
+    let cold_store = store_with(64, 32);
+    let mut lo = gen_req(1, 200, 11, 3);
+    lo.budget = 0.3;
+    let cold_lo = drive(b.as_ref(), &cold_store, lo.clone(), 64);
+    assert!(cold_lo.ok);
+
+    let store = store_with(64, 32);
+    let mut hi = gen_req(2, 200, 11, 3);
+    hi.budget = 0.8;
+    let cold_hi = drive(b.as_ref(), &store, hi, 64);
+    assert!(cold_hi.ok);
+    lo.id = 3;
+    let warm_lo = drive(b.as_ref(), &store, lo, 64);
+    assert_eq!(warm_lo.cached_rows, 256, "budget does not split the cache");
+    assert_eq!(warm_lo.density, cold_lo.density, "density follows the request's own budget");
+    assert_eq!(warm_lo.output_digest, cold_lo.output_digest);
+    assert_eq!(warm_lo.tokens, cold_lo.tokens);
+    assert_ne!(warm_lo.density, cold_hi.density, "budgets genuinely differ");
+}
+
+/// A block size that does not divide the bucket exercises the partial
+/// chain tail: prefill-only warm runs share it outright; generating warm
+/// runs get a copy-on-write tail and must still match cold decode.
+#[test]
+fn partial_tail_block_cow_preserves_token_parity() {
+    for b in backends() {
+        // bucket 256 at block size 48: groups [48 x 5, 16] — partial tail.
+        let cold_store = store_with(64, 48);
+        let cold = drive(b.as_ref(), &cold_store, gen_req(1, 200, 13, 6), 64);
+        assert!(cold.ok, "{}: {:?}", b.name(), cold.error);
+
+        let store = store_with(64, 48);
+        let first = drive(b.as_ref(), &store, gen_req(2, 200, 13, 6), 64);
+        assert!(first.ok);
+        let warm = drive(b.as_ref(), &store, gen_req(3, 200, 13, 6), 64);
+        assert_eq!(warm.cached_rows, 256, "{}: partial tail rows still served", b.name());
+        assert_eq!(warm.output_digest, cold.output_digest, "{}", b.name());
+        assert_eq!(warm.density, cold.density, "{}", b.name());
+        assert_eq!(warm.tokens, cold.tokens, "{}: tokens through the COW tail", b.name());
+        // And the pristine cached prompt still serves prefill-only hits.
+        let again = drive(b.as_ref(), &store, gen_req(4, 200, 13, 0), 64);
+        assert_eq!(again.cached_rows, 256, "{}", b.name());
+        assert_eq!(again.output_digest, cold.output_digest, "{}", b.name());
+    }
+}
+
+/// Evicting the tail of a cached chain leaves a *partial* hit: the head
+/// groups seed the run, the tail re-executes, and the result is still
+/// bit-identical to cold.
+#[test]
+fn partially_evicted_chain_yields_partial_hit_with_cold_results() {
+    let b = &backends()[0];
+    let cold_store = store_with(64, 32);
+    let cold = drive(b.as_ref(), &cold_store, gen_req(1, 200, 17, 5), 64);
+    assert!(cold.ok);
+
+    let store = store_with(64, 32);
+    let first = drive(b.as_ref(), &store, gen_req(2, 200, 17, 5), 64);
+    assert!(first.ok);
+    assert_eq!(store.cached_idle(), 8, "256-row prompt at 32-row blocks");
+    // LRU evicts chain tails first: dropping 3 blocks leaves groups 0..5.
+    assert_eq!(store.evict_idle(3), 3);
+    let warm = drive(b.as_ref(), &store, gen_req(3, 200, 17, 5), 64);
+    assert_eq!(warm.cached_rows, 5 * 32, "leading groups survive as a partial hit");
+    assert!(warm.chunks > 1, "the novel tail still runs real chunks");
+    assert_eq!(warm.output_digest, cold.output_digest);
+    assert_eq!(warm.density, cold.density);
+    assert_eq!(warm.tokens, cold.tokens);
+}
+
+/// Token-payload requests share by content hash: the same token list hits,
+/// a different one misses.
+#[test]
+fn token_payload_prompts_share_by_content() {
+    let b = &backends()[0];
+    let store = store_with(64, 32);
+    let toks: Vec<i32> = (0..150).map(|i| (i * 7) % 1000).collect();
+    let tok_req = |id: u64, t: Vec<i32>| PrefillRequest::tokens(id, t, AttentionMode::Sparse);
+    let cold = drive(b.as_ref(), &store, tok_req(1, toks.clone()), 64);
+    assert!(cold.ok, "{:?}", cold.error);
+    let warm = drive(b.as_ref(), &store, tok_req(2, toks.clone()), 64);
+    assert_eq!(warm.cached_rows, 256, "same token content hits");
+    assert_eq!(warm.output_digest, cold.output_digest);
+    assert_eq!(warm.density, cold.density);
+    let mut other = toks;
+    other[0] += 1;
+    let miss = drive(b.as_ref(), &store, tok_req(3, other), 64);
+    assert!(miss.ok);
+    assert_eq!(miss.cached_rows, 0, "different content misses");
+    assert_ne!(miss.output_digest, cold.output_digest, "different head entirely");
+}
+
+/// Cross-backend sharing: one backend populates, the other hits (both use
+/// the same synth derivation and indexer, so the chain and the sidecar
+/// agree) and reproduces its own cold results.
+#[test]
+fn cache_populated_by_one_backend_serves_the_other() {
+    let all = backends();
+    let (native, reference) = (&all[0], &all[1]);
+    let cold_store = store_with(64, 32);
+    let cold_ref = drive(reference.as_ref(), &cold_store, gen_req(1, 200, 21, 5), 64);
+    assert!(cold_ref.ok);
+
+    let store = store_with(64, 32);
+    let populate = drive(native.as_ref(), &store, gen_req(2, 200, 21, 5), 64);
+    assert!(populate.ok);
+    let warm_ref = drive(reference.as_ref(), &store, gen_req(3, 200, 21, 5), 64);
+    assert_eq!(warm_ref.cached_rows, 256, "reference hits native's cache");
+    assert_eq!(warm_ref.output_digest, cold_ref.output_digest);
+    assert_eq!(warm_ref.density, cold_ref.density);
+    assert_eq!(warm_ref.tokens, cold_ref.tokens);
+}
