@@ -1,0 +1,143 @@
+//! Offline *type-level* stand-in for the `xla` crate (the PJRT bindings).
+//!
+//! The tier-1 build runs with no network and no registry, so the real
+//! bindings cannot be fetched — yet the `pjrt`-gated runtime code must not
+//! rot unchecked (CI runs `cargo check --features pjrt` against this
+//! stub).  Every type and signature the workspace uses is present with the
+//! real crate's shape; every operation that would need an actual PJRT
+//! runtime returns [`Error::Unavailable`] instead of executing.  To run
+//! real artifacts, point the `xla` path dependency in `rust/Cargo.toml` at
+//! the actual bindings — no source change needed.
+//!
+//! Fidelity notes: the client/executable/buffer types are `!Send` (they
+//! hold an `Rc` marker), matching the single-threaded discipline of the
+//! real wrapper types — `PjrtBackend`'s scoped `unsafe impl Send` is
+//! exercised against the same constraint it documents.
+
+use std::fmt;
+use std::marker::PhantomData;
+use std::rc::Rc;
+
+/// Error surface of the stub: everything that would touch a real PJRT
+/// runtime reports itself unavailable.
+#[derive(Debug)]
+pub enum Error {
+    Unavailable(&'static str),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Unavailable(op) => {
+                write!(f, "xla stub: '{op}' needs the real xla crate (see rust/README.md)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Marker for `!Send`/`!Sync` (the real wrappers hold `Rc`s and raw
+/// runtime pointers).
+type NotThreadSafe = PhantomData<Rc<()>>;
+
+/// Element types a [`Literal`] can carry (subset the workspace uses).
+pub trait NativeType: Copy + Default {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+/// Host-side tensor value.  The stub stores nothing: it only needs to
+/// type-check flows; any read reports unavailability.
+#[derive(Default)]
+pub struct Literal(());
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(_v: &[T]) -> Literal {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal(()))
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::Unavailable("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::Unavailable("Literal::to_tuple"))
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::Unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation ready to compile.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Device-side result buffer.
+pub struct PjRtBuffer {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// The PJRT client (per-process device handle).
+pub struct PjRtClient {
+    _marker: NotThreadSafe,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailability_not_panics() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[2, 1]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        let msg = format!("{}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("real xla crate"), "{msg}");
+    }
+}
