@@ -1,13 +1,16 @@
 //! Bounded admission queue — the backpressure boundary of the service.
-//! `push` fails fast when the queue is full (callers surface HTTP-429-style
-//! rejection); `requeue` re-inserts work the scheduler could not place (KV
-//! exhaustion) at the front so it retains its position.
+//! `push` fails fast with a typed [`RejectReason`] when the queue is full
+//! (callers surface HTTP-429-style rejection with a `retry_after_ms` hint);
+//! `Batch`-priority work is shed earlier, at the configured shed depth, so
+//! background traffic never crowds out interactive requests.  `requeue`
+//! re-inserts work the scheduler could not place (KV exhaustion) at the
+//! front so it retains its position.
 
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::{mpsc, Condvar, Mutex};
 
-use super::request::{PrefillRequest, ResponseEvent};
+use super::request::{PrefillRequest, Priority, RejectReason, ResponseEvent};
 
 /// A queued request plus its reply channel (a stream: token frames during
 /// decode, then exactly one final response).
@@ -17,33 +20,62 @@ pub struct WorkItem {
     pub reply: mpsc::Sender<ResponseEvent>,
 }
 
-/// Push rejection carrying the item back to the caller.
+/// Push rejection carrying the item back to the caller, the typed reason,
+/// and a backoff hint scaled to the current queue depth.
 #[derive(Debug)]
-pub struct QueueFull(pub WorkItem);
+pub struct Rejected {
+    pub item: WorkItem,
+    pub reason: RejectReason,
+    pub retry_after_ms: u64,
+}
 
-impl fmt::Display for QueueFull {
+impl fmt::Display for Rejected {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str("admission queue full")
+        match self.reason {
+            RejectReason::Shed => f.write_str("request shed (batch priority under load)"),
+            _ => f.write_str("admission queue full"),
+        }
     }
 }
 
-impl std::error::Error for QueueFull {}
+impl std::error::Error for Rejected {}
 
 pub struct AdmissionQueue {
     inner: Mutex<VecDeque<WorkItem>>,
     cap: usize,
+    /// Queue depth at which `Batch`-priority pushes are shed (`<= cap`).
+    batch_cap: usize,
     cv: Condvar,
 }
 
 impl AdmissionQueue {
-    pub fn new(cap: usize) -> AdmissionQueue {
-        AdmissionQueue { inner: Mutex::new(VecDeque::new()), cap, cv: Condvar::new() }
+    pub fn new(cap: usize, batch_cap: usize) -> AdmissionQueue {
+        AdmissionQueue {
+            inner: Mutex::new(VecDeque::new()),
+            cap,
+            batch_cap: batch_cap.min(cap),
+            cv: Condvar::new(),
+        }
     }
 
-    pub fn push(&self, item: WorkItem) -> Result<(), QueueFull> {
+    /// Backoff hint: deeper queue, longer suggested wait (floor 5 ms).
+    fn retry_hint(depth: usize) -> u64 {
+        (depth as u64 / 4).max(5)
+    }
+
+    pub fn push(&self, item: WorkItem) -> Result<(), Rejected> {
         let mut q = self.inner.lock().unwrap();
-        if q.len() >= self.cap {
-            return Err(QueueFull(item));
+        let reason = if q.len() >= self.cap {
+            Some(RejectReason::QueueFull)
+        } else if item.req.priority == Priority::Batch && q.len() >= self.batch_cap {
+            Some(RejectReason::Shed)
+        } else {
+            None
+        };
+        if let Some(reason) = reason {
+            let retry_after_ms = Self::retry_hint(q.len());
+            drop(q);
+            return Err(Rejected { item, reason, retry_after_ms });
         }
         q.push_back(item);
         self.cv.notify_one();
@@ -87,18 +119,41 @@ mod tests {
         WorkItem { req: PrefillRequest::synthetic(id, 64, 0, AttentionMode::Dense), reply: tx }
     }
 
+    fn batch_item(id: u64) -> WorkItem {
+        let mut it = item(id);
+        it.req.priority = Priority::Batch;
+        it
+    }
+
     #[test]
     fn capacity_enforced() {
-        let q = AdmissionQueue::new(2);
+        let q = AdmissionQueue::new(2, 2);
         assert!(q.push(item(1)).is_ok());
         assert!(q.push(item(2)).is_ok());
-        assert!(q.push(item(3)).is_err());
+        let err = q.push(item(3)).unwrap_err();
+        assert_eq!(err.reason, RejectReason::QueueFull);
+        assert!(err.retry_after_ms >= 5, "backoff hint has a floor");
+        assert_eq!(err.item.req.id, 3, "rejected item is handed back");
         assert_eq!(q.len(), 2);
     }
 
     #[test]
+    fn batch_priority_is_shed_before_the_queue_fills() {
+        let q = AdmissionQueue::new(4, 2);
+        assert!(q.push(batch_item(1)).is_ok());
+        assert!(q.push(batch_item(2)).is_ok());
+        // At the shed depth: batch is refused with the typed shed reason...
+        let err = q.push(batch_item(3)).unwrap_err();
+        assert_eq!(err.reason, RejectReason::Shed);
+        // ...while interactive traffic still gets the remaining headroom.
+        assert!(q.push(item(4)).is_ok());
+        assert!(q.push(item(5)).is_ok());
+        assert_eq!(q.push(item(6)).unwrap_err().reason, RejectReason::QueueFull);
+    }
+
+    #[test]
     fn requeue_goes_to_front() {
-        let q = AdmissionQueue::new(4);
+        let q = AdmissionQueue::new(4, 4);
         q.push(item(1)).unwrap();
         q.push(item(2)).unwrap();
         q.requeue(item(99));
@@ -109,7 +164,7 @@ mod tests {
 
     #[test]
     fn pop_waits_then_times_out() {
-        let q = AdmissionQueue::new(4);
+        let q = AdmissionQueue::new(4, 4);
         let t0 = std::time::Instant::now();
         let items = q.pop_up_to(4, std::time::Duration::from_millis(20));
         assert!(items.is_empty());
@@ -118,7 +173,7 @@ mod tests {
 
     #[test]
     fn zero_wait_pop_never_blocks() {
-        let q = AdmissionQueue::new(4);
+        let q = AdmissionQueue::new(4, 4);
         let t0 = std::time::Instant::now();
         assert!(q.pop_up_to(4, std::time::Duration::ZERO).is_empty());
         assert!(t0.elapsed() < std::time::Duration::from_millis(10));

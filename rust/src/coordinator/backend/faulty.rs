@@ -1,0 +1,210 @@
+//! Fault-injection wrapper backend: wraps any inner [`ExecBackend`] and
+//! fails `prefill_chunk` / `decode_step` calls on a *seeded deterministic
+//! schedule* — the error source of the overload/robustness stress suite.
+//!
+//! Whether a given call fails is a pure function of `(seed, request id,
+//! progress counter)`, never of wall clock or dispatch order, so a stress
+//! run is reproducible even when the scheduler fans chunks across worker
+//! threads: the same request fails at the same chunk/token no matter which
+//! worker executes it or in which order the batch drains.
+//!
+//! The wrapper is transparent everywhere else — capabilities, buckets,
+//! prefix chains, `begin` and `process` delegate verbatim — so the
+//! scheduler drives it exactly like the inner backend.  In particular the
+//! inner backend's parallel-dispatch promise is passed through: the only
+//! state this wrapper adds is atomic fault counters, which are safe to
+//! share across the scheduler's worker threads.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::tensor::paged::{hash_words, PrefixChain};
+use crate::util::rng::Rng;
+
+use super::{
+    Capabilities, ChunkStep, DecodeStep, ExecBackend, PagedKvStore, PrefillRequest,
+    PrefillResponse, PrefixHit, RunState,
+};
+
+/// Salts separating the chunk and decode fault streams: the same request
+/// should be able to fail at chunk 2 without also failing at token 2.
+const CHUNK_SALT: u64 = 0xC4_00_5E;
+const DECODE_SALT: u64 = 0xDE_C0_DE;
+
+/// Deterministic fault schedule: fail when the keyed hash of the call's
+/// identity lands in the `1/period` window.  `period == 0` disables the
+/// stream.
+fn fires(seed: u64, salt: u64, id: u64, n: u64, period: u64) -> bool {
+    period != 0 && hash_words(seed ^ salt, &[id, n]) % period == 0
+}
+
+pub struct FaultyBackend {
+    inner: Box<dyn ExecBackend>,
+    seed: u64,
+    /// Roughly one in `chunk_period` prefill chunks fails (0 = never).
+    chunk_period: u64,
+    /// Roughly one in `decode_period` decode steps fails (0 = never).
+    decode_period: u64,
+    injected_chunk_faults: AtomicU64,
+    injected_decode_faults: AtomicU64,
+}
+
+impl FaultyBackend {
+    pub fn new(
+        inner: Box<dyn ExecBackend>,
+        seed: u64,
+        chunk_period: u64,
+        decode_period: u64,
+    ) -> FaultyBackend {
+        FaultyBackend {
+            inner,
+            seed,
+            chunk_period,
+            decode_period,
+            injected_chunk_faults: AtomicU64::new(0),
+            injected_decode_faults: AtomicU64::new(0),
+        }
+    }
+
+    /// `(prefill chunk faults, decode step faults)` injected so far.
+    pub fn injected_faults(&self) -> (u64, u64) {
+        (
+            self.injected_chunk_faults.load(Ordering::Relaxed),
+            self.injected_decode_faults.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Whether the schedule will fail request `id`'s chunk number `chunk`
+    /// (exposed so tests can predict the exact fault set).
+    pub fn chunk_fault_scheduled(&self, id: u64, chunk: u64) -> bool {
+        fires(self.seed, CHUNK_SALT, id, chunk, self.chunk_period)
+    }
+}
+
+impl ExecBackend for FaultyBackend {
+    fn name(&self) -> &'static str {
+        "faulty"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        // Passes the inner backend's parallel-dispatch promise through
+        // unchanged: the wrapper's own state is two atomic counters, so
+        // sharing `&self` across worker threads stays sound whenever it is
+        // sound for the inner backend.
+        self.inner.capabilities()
+    }
+
+    fn buckets(&self) -> &[usize] {
+        self.inner.buckets()
+    }
+
+    fn prefix_chain(
+        &self,
+        req: &PrefillRequest,
+        bucket: usize,
+        block_size: usize,
+    ) -> Option<PrefixChain> {
+        self.inner.prefix_chain(req, bucket, block_size)
+    }
+
+    fn begin(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        prefix: Option<PrefixHit>,
+        rng: &mut Rng,
+    ) -> RunState {
+        self.inner.begin(req, bucket, default_chunk, prefix, rng)
+    }
+
+    fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
+        let (id, chunk) = (run.id(), run.resp.chunks);
+        if fires(self.seed, CHUNK_SALT, id, chunk, self.chunk_period) {
+            self.injected_chunk_faults.fetch_add(1, Ordering::Relaxed);
+            return run.fail_now(format!("injected fault: prefill_chunk {chunk} of request {id}"));
+        }
+        self.inner.prefill_chunk(run, store)
+    }
+
+    fn decode_step(&self, runs: &mut [RunState], store: &PagedKvStore) -> Vec<DecodeStep> {
+        // Key each run's fault decision on the token index it is ABOUT to
+        // generate (before the inner call advances it).
+        let keys: Vec<(u64, u64)> = runs.iter().map(|r| (r.id(), r.generated() as u64)).collect();
+        let mut steps = self.inner.decode_step(runs, store);
+        for (i, step) in steps.iter_mut().enumerate() {
+            let (id, tok) = keys[i];
+            // Only downgrade `Token` steps: a `Done`/`Failed` run has
+            // already taken its terminal response, and rewriting it would
+            // double-finish the lifecycle.
+            if matches!(step, DecodeStep::Token(_))
+                && fires(self.seed, DECODE_SALT, id, tok, self.decode_period)
+            {
+                self.injected_decode_faults.fetch_add(1, Ordering::Relaxed);
+                runs[i].resp.error = Some(format!("injected fault: decode token {tok} of request {id}"));
+                *step = DecodeStep::Failed(runs[i].fail_decode());
+            }
+        }
+        steps
+    }
+
+    /// Monolithic execution is not fault-injected: the stress suite targets
+    /// the chunked/decode lifecycle, and `process` is the conformance
+    /// oracle the suite compares clean runs against.
+    fn process(&self, req: &PrefillRequest) -> PrefillResponse {
+        self.inner.process(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::native::NativeBackend;
+    use super::super::EngineConfig;
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let mk = |seed| {
+            FaultyBackend::new(
+                Box::new(NativeBackend::quick(EngineConfig::default())),
+                seed,
+                3,
+                0,
+            )
+        };
+        let (a, b, c) = (mk(7), mk(7), mk(8));
+        let pat = |f: &FaultyBackend| -> Vec<bool> {
+            (0..64).map(|i| f.chunk_fault_scheduled(i / 8, i % 8)).collect()
+        };
+        assert_eq!(pat(&a), pat(&b), "same seed, same schedule");
+        assert_ne!(pat(&a), pat(&c), "different seed, different schedule");
+        assert!(pat(&a).iter().any(|&x| x), "a 1-in-3 schedule fires somewhere in 64 calls");
+        assert!(!pat(&a).iter().all(|&x| x), "...but not everywhere");
+    }
+
+    #[test]
+    fn wrapper_is_transparent_about_inner_shape() {
+        let inner = NativeBackend::quick(EngineConfig::default());
+        let inner_caps = inner.capabilities();
+        let inner_buckets = inner.buckets().to_vec();
+        let f = FaultyBackend::new(Box::new(inner), 1, 4, 4);
+        assert_eq!(f.name(), "faulty");
+        let caps = f.capabilities();
+        assert_eq!(
+            (caps.chunked, caps.decode, caps.max_bucket, caps.parallel()),
+            (inner_caps.chunked, inner_caps.decode, inner_caps.max_bucket, inner_caps.parallel())
+        );
+        assert_eq!(f.buckets(), &inner_buckets[..]);
+        assert_eq!(f.injected_faults(), (0, 0));
+    }
+
+    #[test]
+    fn zero_periods_never_fire() {
+        let f = FaultyBackend::new(
+            Box::new(NativeBackend::quick(EngineConfig::default())),
+            42,
+            0,
+            0,
+        );
+        assert!((0..1000).all(|i| !f.chunk_fault_scheduled(i, i)));
+    }
+}

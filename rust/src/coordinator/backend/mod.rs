@@ -33,6 +33,9 @@
 //!     scheduling, exact per-row softmax).
 //!   * `pjrt`        — whole-bucket AOT graphs through the PJRT runtime
 //!     (`pjrt` cargo feature); schedules as single-chunk monolithic runs.
+//!   * [`faulty`]    — a fault-injection wrapper around any inner backend:
+//!     fails `prefill_chunk`/`decode_step` on a seeded deterministic
+//!     schedule (the overload/robustness stress suite's error source).
 
 use std::any::Any;
 use std::sync::{Arc, OnceLock};
@@ -51,8 +54,9 @@ use crate::util::rng::Rng;
 
 use super::engine::{AttentionMode, EngineConfig};
 use super::kv_cache::PagedKvStore;
-use super::request::{Payload, PrefillRequest, PrefillResponse, TokenFrame};
+use super::request::{Outcome, Payload, PrefillRequest, PrefillResponse, TokenFrame};
 
+pub mod faulty;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
@@ -403,8 +407,28 @@ impl RunState {
         if self.resp.error.is_none() {
             self.resp.error = Some(msg);
         }
+        self.resp.outcome = Outcome::Failed;
         self.phase = Phase::Finished;
         ChunkStep::Done(std::mem::take(&mut self.resp))
+    }
+
+    /// Terminal transition for scheduler-initiated reaping — deadline
+    /// expiry or client cancellation in any phase.  The caller frees the
+    /// KV reservation; the response carries the typed outcome.
+    pub(in crate::coordinator) fn finish_overload(
+        &mut self,
+        outcome: Outcome,
+        msg: String,
+    ) -> PrefillResponse {
+        debug_assert!(matches!(outcome, Outcome::Expired | Outcome::Cancelled));
+        self.phase = Phase::Finished;
+        let mut resp = std::mem::take(&mut self.resp);
+        resp.ok = false;
+        resp.outcome = outcome;
+        if resp.error.is_none() {
+            resp.error = Some(msg);
+        }
+        resp
     }
 
     /// Terminal transition with an externally-built response (non-chunked
@@ -467,6 +491,9 @@ impl RunState {
         self.phase = Phase::Finished;
         let mut resp = std::mem::take(&mut self.resp);
         resp.ok = resp.error.is_none();
+        if !resp.ok {
+            resp.outcome = Outcome::Failed;
+        }
         resp
     }
 
@@ -475,6 +502,7 @@ impl RunState {
         if self.resp.error.is_none() {
             self.resp.error = Some("decode step failed".to_string());
         }
+        self.resp.outcome = Outcome::Failed;
         self.phase = Phase::Finished;
         let mut resp = std::mem::take(&mut self.resp);
         resp.ok = false;
@@ -778,13 +806,15 @@ fn synth_prefill_chunk(
                         if lo == 0 {
                             acc.resp.output_digest = digest(&out);
                         }
-                        let done = hi >= acc.bucket;
-                        if done {
-                            // The prompt is fully appended and scored: make
-                            // its groups hittable for the next request.
-                            synth_publish(store, id, acc.chain, &sp.inc, &acc.resp.output_digest);
-                        }
-                        Outcome::Ran { hi, done }
+                        // Publish after EVERY chunk, not only the last: the
+                        // store only indexes fully-appended groups, so this
+                        // incrementally exposes the prompt's leading groups
+                        // while later chunks are still computing — concurrent
+                        // identical prompts (deferred behind this leader in
+                        // the in-flight registry) admit against the growing
+                        // resident run instead of running cold.
+                        synth_publish(store, id, acc.chain, &sp.inc, &acc.resp.output_digest);
+                        Outcome::Ran { hi, done: hi >= acc.bucket }
                     }
                 },
             }
@@ -888,6 +918,7 @@ fn finish_decode_round(
                     // the pool before the final free (which may lag while
                     // the response is still streaming).
                     store.shrink_to(run.id(), run.bucket() + run.generated());
+                    run.resp.outcome = Outcome::Stopped;
                 }
                 DecodeStep::Done(frame, run.finish_decode())
             } else {
@@ -909,6 +940,7 @@ fn run_monolithic(
     let mut resp = PrefillResponse { id: req.id, queue_us, ..Default::default() };
     let Some(bucket) = bucket else {
         resp.error = Some(format!("seq_len {} exceeds largest bucket", req.seq_len()));
+        resp.outcome = Outcome::Failed;
         return resp;
     };
     resp.bucket = bucket;
@@ -921,7 +953,10 @@ fn run_monolithic(
     resp.ttft_us = resp.queue_us + resp.prefill_us;
     match result {
         Ok(()) => resp.ok = true,
-        Err(e) => resp.error = Some(format!("{e:#}")),
+        Err(e) => {
+            resp.error = Some(format!("{e:#}"));
+            resp.outcome = Outcome::Failed;
+        }
     }
     resp
 }

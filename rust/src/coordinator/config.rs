@@ -12,7 +12,7 @@
 //! ```json
 //! {
 //!   "max_queue": 256, "chunk_tokens": 256, "max_inflight": 8,
-//!   "max_wait_ms": 5, "max_new_cap": 256,
+//!   "max_wait_ms": 5, "max_new_cap": 256, "shed_queue_depth": 0,
 //!   "kv_blocks": 1024, "kv_block_size": 64,
 //!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
 //!               "threads": 0, "budget_tau": 0.9,
@@ -89,6 +89,12 @@ pub const KEYS: &[ConfigKey] = &[
         "max-new-cap",
         "server-side cap on per-request max_new_tokens",
         max_new_cap
+    ),
+    usize_key!(
+        "shed_queue_depth",
+        "shed-queue-depth",
+        "queue depth beyond which batch-priority requests are shed (0 = half of max_queue)",
+        shed_queue_depth
     ),
     usize_key!("kv_blocks", "kv-blocks", "paged KV pool: number of blocks", kv_blocks),
     usize_key!("kv_block_size", "kv-block-size", "paged KV pool: rows per block", kv_block_size),
@@ -308,6 +314,7 @@ mod tests {
             ("engine.decode_top_k", _) => KeyValue::Usize(23),
             ("engine.decode_window", _) => KeyValue::Usize(11),
             ("max_queue", _) => KeyValue::Usize(41),
+            ("shed_queue_depth", _) => KeyValue::Usize(13),
             ("chunk_tokens", _) => KeyValue::Usize(33),
             ("max_inflight", _) => KeyValue::Usize(5),
             ("max_new_cap", _) => KeyValue::Usize(77),

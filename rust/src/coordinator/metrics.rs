@@ -13,7 +13,7 @@ use std::sync::Mutex;
 use crate::util::json::Json;
 use crate::util::stats::{mean, percentile_sorted, Reservoir};
 
-use super::request::PrefillResponse;
+use super::request::{Outcome, PrefillResponse};
 
 /// Samples kept per latency stream — bounded memory for unbounded uptime.
 const RESERVOIR_CAP: usize = 4096;
@@ -37,6 +37,16 @@ pub struct Metrics {
     pub prefix_blocks_shared: AtomicU64,
     /// Idle cached blocks evicted (LRU) to make room for reservations.
     pub prefix_evictions: AtomicU64,
+    /// `Batch`-priority requests refused at admission to protect
+    /// interactive traffic (reject reason `shed`).
+    pub shed_requests: AtomicU64,
+    /// Admitted requests reaped because their deadline passed.
+    pub deadline_expired: AtomicU64,
+    /// Requests cancelled by the client (explicitly or by disconnect).
+    pub cancelled: AtomicU64,
+    /// Scheduler rounds that failed to place any queued work (KV pool
+    /// full) and backed off before retrying.
+    pub requeue_rounds: AtomicU64,
     prefill_us: Mutex<Reservoir>,
     queue_us: Mutex<Reservoir>,
     index_us: Mutex<Reservoir>,
@@ -57,6 +67,10 @@ pub struct Snapshot {
     pub prefix_hits: u64,
     pub prefix_blocks_shared: u64,
     pub prefix_evictions: u64,
+    pub shed_requests: u64,
+    pub deadline_expired: u64,
+    pub cancelled: u64,
+    pub requeue_rounds: u64,
     pub p50_prefill_us: f64,
     pub p95_prefill_us: f64,
     pub p50_ttft_us: f64,
@@ -84,6 +98,10 @@ impl Metrics {
             prefix_hits: AtomicU64::new(0),
             prefix_blocks_shared: AtomicU64::new(0),
             prefix_evictions: AtomicU64::new(0),
+            shed_requests: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
+            cancelled: AtomicU64::new(0),
+            requeue_rounds: AtomicU64::new(0),
             prefill_us: res(),
             queue_us: res(),
             index_us: res(),
@@ -110,6 +128,12 @@ impl Metrics {
         } else {
             self.failed.fetch_add(1, Ordering::Relaxed);
         }
+        match resp.outcome {
+            Outcome::Stopped => self.early_stopped.fetch_add(1, Ordering::Relaxed),
+            Outcome::Expired => self.deadline_expired.fetch_add(1, Ordering::Relaxed),
+            Outcome::Cancelled => self.cancelled.fetch_add(1, Ordering::Relaxed),
+            _ => 0,
+        };
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -134,6 +158,10 @@ impl Metrics {
             prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
             prefix_blocks_shared: self.prefix_blocks_shared.load(Ordering::Relaxed),
             prefix_evictions: self.prefix_evictions.load(Ordering::Relaxed),
+            shed_requests: self.shed_requests.load(Ordering::Relaxed),
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
+            cancelled: self.cancelled.load(Ordering::Relaxed),
+            requeue_rounds: self.requeue_rounds.load(Ordering::Relaxed),
             p50_prefill_us: percentile_sorted(&prefill, 0.5),
             p95_prefill_us: percentile_sorted(&prefill, 0.95),
             p50_ttft_us: percentile_sorted(&ttft, 0.5),
@@ -171,6 +199,10 @@ impl Snapshot {
             ("prefix_hits", Json::Num(self.prefix_hits as f64)),
             ("prefix_blocks_shared", Json::Num(self.prefix_blocks_shared as f64)),
             ("prefix_evictions", Json::Num(self.prefix_evictions as f64)),
+            ("shed_requests", Json::Num(self.shed_requests as f64)),
+            ("deadline_expired", Json::Num(self.deadline_expired as f64)),
+            ("cancelled", Json::Num(self.cancelled as f64)),
+            ("requeue_rounds", Json::Num(self.requeue_rounds as f64)),
             ("p50_prefill_us", Json::Num(self.p50_prefill_us)),
             ("p95_prefill_us", Json::Num(self.p95_prefill_us)),
             ("p50_ttft_us", Json::Num(self.p50_ttft_us)),
@@ -262,6 +294,33 @@ mod tests {
         assert_eq!(back.get("prefix_hits").and_then(|x| x.as_f64()), Some(3.0));
         assert_eq!(back.get("prefix_blocks_shared").and_then(|x| x.as_f64()), Some(12.0));
         assert_eq!(back.get("prefix_evictions").and_then(|x| x.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn typed_outcomes_feed_the_overload_counters() {
+        let m = Metrics::new();
+        let mut r = resp(false, 0, 0.0);
+        r.outcome = Outcome::Expired;
+        m.record(&r);
+        r.outcome = Outcome::Cancelled;
+        m.record(&r);
+        m.record(&r);
+        let mut stopped = resp(true, 100, 0.2);
+        stopped.outcome = Outcome::Stopped;
+        m.record(&stopped);
+        m.shed_requests.fetch_add(4, Ordering::Relaxed);
+        m.requeue_rounds.fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_expired, 1);
+        assert_eq!(s.cancelled, 2);
+        assert_eq!(s.early_stopped, 1);
+        assert_eq!(s.failed, 3, "expired/cancelled also count as not-ok");
+        assert_eq!(s.completed, 1, "stopped is a success door");
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("shed_requests").and_then(|x| x.as_f64()), Some(4.0));
+        assert_eq!(back.get("deadline_expired").and_then(|x| x.as_f64()), Some(1.0));
+        assert_eq!(back.get("cancelled").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(back.get("requeue_rounds").and_then(|x| x.as_f64()), Some(5.0));
     }
 
     #[test]

@@ -21,19 +21,27 @@
 //!
 //! Module map:
 //!   request    — request/response/stream types: per-chunk timing + TTFT,
-//!                `max_new_tokens` / `stop_token`, TokenFrame /
-//!                ResponseEvent / ResponseHandle (frames then final
-//!                response)
-//!   admission  — bounded admission queue (backpressure) + WorkItem
-//!   scheduler  — continuous-batching scheduler (admission -> bucket +
-//!                token-budget KV reservation -> per-round chunk dispatch +
-//!                batched decode step), driven entirely through
-//!                `dyn ExecBackend` + `Capabilities`
+//!                `max_new_tokens` / `stop_token` / `deadline_ms` /
+//!                `priority` / cancellation, TokenFrame / ResponseEvent /
+//!                ResponseHandle (frames then final response), typed
+//!                terminal `Outcome` + `RejectReason` on the wire
+//!   admission  — bounded admission queue (backpressure) + WorkItem;
+//!                typed load shedding: `Batch`-priority work is shed at a
+//!                configurable depth before the queue fills, rejections
+//!                carry a `RejectReason` and a `retry_after_ms` hint
+//!   scheduler  — continuous-batching scheduler (overload reaping ->
+//!                admission -> bucket + token-budget KV reservation ->
+//!                per-round chunk dispatch + batched decode step), driven
+//!                entirely through `dyn ExecBackend` + `Capabilities`;
+//!                deadlines and cancellation cut runs short between
+//!                backend calls, concurrent identical prompts coalesce
+//!                onto one in-flight leader prefill
 //!   backend    — the execution backends behind one object-safe trait and
 //!                a typed `RunState` lifecycle: `backend::native` (fused
 //!                tiled kernels), `backend::reference` (seed row-serial
 //!                conformance oracle), `backend::pjrt` (AOT graphs, `pjrt`
-//!                feature)
+//!                feature), `backend::faulty` (seeded deterministic fault
+//!                injection for the robustness stress suite)
 //!   engine     — shared backend configuration (`EngineConfig`,
 //!                `AttentionMode`) — the thin facade left of the old
 //!                `PrefillEngine`
@@ -66,7 +74,10 @@ pub mod server;
 pub use backend::{Capabilities, ChunkStep, DecodeStep, ExecBackend, PrefixHit, RunState};
 pub use engine::{AttentionMode, EngineConfig};
 pub use kv_cache::{PagedKv, PagedKvStore};
-pub use request::{PrefillRequest, PrefillResponse, ResponseEvent, ResponseHandle, TokenFrame};
+pub use request::{
+    CancelFlag, Outcome, PrefillRequest, PrefillResponse, Priority, RejectReason, ResponseEvent,
+    ResponseHandle, TokenFrame,
+};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
@@ -98,6 +109,11 @@ pub struct CoordinatorConfig {
     /// a new request whose prompt content matches pins those blocks
     /// instead of recomputing attention and indexer scores over them.
     pub kv_prefix_cache: bool,
+    /// Admission-queue depth at which `Batch`-priority submissions are
+    /// shed (typed [`RejectReason::Shed`] with a `retry_after_ms` hint),
+    /// keeping the remaining headroom for interactive traffic.
+    /// `0` = auto: half of `max_queue`, at least 1.
+    pub shed_queue_depth: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -112,6 +128,7 @@ impl Default for CoordinatorConfig {
             kv_blocks: 1024,
             kv_block_size: 64,
             kv_prefix_cache: true,
+            shed_queue_depth: 0,
         }
     }
 }
@@ -137,7 +154,12 @@ impl Coordinator {
     /// [`Capabilities::with_parallel_dispatch`]).  Prefer
     /// [`crate::serve::EngineBuilder`] over calling this directly.
     pub fn start(cfg: CoordinatorConfig, backend: Box<dyn ExecBackend>) -> Coordinator {
-        let admission = Arc::new(admission::AdmissionQueue::new(cfg.max_queue));
+        let batch_cap = if cfg.shed_queue_depth == 0 {
+            (cfg.max_queue / 2).max(1)
+        } else {
+            cfg.shed_queue_depth.min(cfg.max_queue)
+        };
+        let admission = Arc::new(admission::AdmissionQueue::new(cfg.max_queue, batch_cap));
         let metrics = Arc::new(metrics::Metrics::new());
         let stop = Arc::new(AtomicBool::new(false));
         let kv = Arc::new(kv_cache::PagedKvStore::new(
@@ -177,21 +199,33 @@ impl Coordinator {
     }
 
     /// Submit a request; returns a handle on the response stream (token
-    /// frames during decode, then the final response), or an error when the
-    /// admission queue is full (backpressure).
+    /// frames during decode, then the final response).  The handle carries
+    /// the request's cancel flag: [`ResponseHandle::cancel`] cuts the run
+    /// short at the scheduler's next round.  Rejections are typed
+    /// ([`admission::Rejected`]): queue-full backpressure, or `Batch`-
+    /// priority shedding at the configured depth — both hand the request
+    /// back with a `retry_after_ms` hint.
     pub fn submit(
         &self,
         req: PrefillRequest,
-    ) -> Result<request::ResponseHandle, admission::QueueFull> {
+    ) -> Result<request::ResponseHandle, admission::Rejected> {
+        let cancel = req.cancel.clone();
         let (tx, rx) = mpsc::channel();
-        self.admission.push(admission::WorkItem { req, reply: tx })?;
-        Ok(request::ResponseHandle::new(rx))
+        match self.admission.push(admission::WorkItem { req, reply: tx }) {
+            Ok(()) => Ok(request::ResponseHandle::new(rx, cancel)),
+            Err(rej) => {
+                if rej.reason == request::RejectReason::Shed {
+                    self.metrics.shed_requests.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(rej)
+            }
+        }
     }
 
     /// Convenience: submit and block for the final response (any token
     /// frames are folded into its `tokens`/`decode_us`).
     pub fn prefill(&self, req: PrefillRequest) -> anyhow::Result<PrefillResponse> {
-        let rx = self.submit(req).map_err(|_| anyhow::anyhow!("admission queue full"))?;
+        let rx = self.submit(req).map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(rx.wait()?)
     }
 
@@ -287,6 +321,41 @@ mod tests {
             results.push(c.submit(req).is_ok());
         }
         assert!(results.iter().any(|x| !x), "expected at least one rejection");
+        drop(c);
+    }
+
+    #[test]
+    fn batch_priority_shedding_is_typed_and_counted() {
+        let cfg = CoordinatorConfig {
+            max_queue: 2,
+            shed_queue_depth: 1,
+            max_wait_ms: 1,
+            ..Default::default()
+        };
+        let c = EngineBuilder::new().config(cfg).build().unwrap();
+        let mut shed = 0u64;
+        let mut queue_full = 0u64;
+        for i in 0..50 {
+            let mut req = PrefillRequest::synthetic(i, 256, i, AttentionMode::Sparse);
+            req.priority = request::Priority::Batch;
+            match c.submit(req) {
+                Ok(_) => {}
+                Err(rej) => {
+                    assert!(rej.retry_after_ms >= 5, "rejection carries a backoff hint");
+                    match rej.reason {
+                        request::RejectReason::Shed => shed += 1,
+                        request::RejectReason::QueueFull => queue_full += 1,
+                        other => panic!("unexpected reject reason {other:?}"),
+                    }
+                }
+            }
+        }
+        assert!(shed > 0, "a 50-request batch burst into a depth-1 shed queue must shed");
+        assert_eq!(
+            c.metrics.shed_requests.load(Ordering::Relaxed),
+            shed,
+            "every shed submission is counted (queue-full ones are not: {queue_full})"
+        );
         drop(c);
     }
 

@@ -1,7 +1,9 @@
 //! Request/response/stream types for the serving lifecycle
-//! (prefill -> decode -> complete).
+//! (prefill -> decode -> complete), including the overload-control
+//! vocabulary: priorities, deadlines, cancellation and typed outcomes.
 
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
 
 use crate::coordinator::engine::AttentionMode;
 use crate::util::json::Json;
@@ -14,6 +16,142 @@ pub enum Payload {
     /// Synthetic-head request: the engine generates (Q, K, V) from the
     /// Appendix-A.1 model with this seed (native + kernel-level PJRT paths).
     Synthetic { seq_len: usize, seed: u64 },
+}
+
+/// Admission priority class.  `Interactive` requests are only rejected when
+/// the queue is completely full; `Batch` requests are shed earlier (at the
+/// configured shed depth) so background work never starves latency-sensitive
+/// traffic.  Within the queue, interactive requests are placed first when
+/// the KV pool is tight.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    #[default]
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
+
+/// Why a request was refused admission.  Carried on the wire (as
+/// `reject_reason`) so clients can implement policy per cause instead of
+/// string-matching error text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The admission queue is at capacity.
+    QueueFull,
+    /// The request's deadline already passed (or cannot be met) before any
+    /// work was reserved for it.
+    DeadlineInfeasible,
+    /// The request can never fit: sequence exceeds the largest bucket, or
+    /// prompt + decode footprint exceeds the whole KV pool.
+    OverCapacity,
+    /// Load shedding: a `Batch`-priority request was dropped to protect
+    /// interactive traffic.
+    Shed,
+}
+
+impl RejectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "queue_full",
+            RejectReason::DeadlineInfeasible => "deadline_infeasible",
+            RejectReason::OverCapacity => "over_capacity",
+            RejectReason::Shed => "shed",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RejectReason> {
+        match s {
+            "queue_full" => Some(RejectReason::QueueFull),
+            "deadline_infeasible" => Some(RejectReason::DeadlineInfeasible),
+            "over_capacity" => Some(RejectReason::OverCapacity),
+            "shed" => Some(RejectReason::Shed),
+            _ => None,
+        }
+    }
+}
+
+/// How a request's lifecycle ended.  Every response carries exactly one of
+/// these; `Done` and `Stopped` are the success doors, the rest are typed
+/// failure/degradation doors (all of which free the KV reservation).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Outcome {
+    /// Ran to completion (full prefill, and full decode if requested).
+    #[default]
+    Done,
+    /// Completed successfully but generation ended early at the stop token.
+    Stopped,
+    /// Deadline passed after admission; the request was reaped mid-flight.
+    Expired,
+    /// The client cancelled (explicitly or by disconnecting mid-stream).
+    Cancelled,
+    /// Refused at admission; the reason says why.
+    Rejected(RejectReason),
+    /// A backend execution error (chunk or decode step failed).
+    Failed,
+}
+
+impl Outcome {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Outcome::Done => "done",
+            Outcome::Stopped => "stopped",
+            Outcome::Expired => "expired",
+            Outcome::Cancelled => "cancelled",
+            Outcome::Rejected(_) => "rejected",
+            Outcome::Failed => "failed",
+        }
+    }
+
+    pub fn parse(s: &str, reason: Option<RejectReason>) -> Option<Outcome> {
+        match s {
+            "done" => Some(Outcome::Done),
+            "stopped" => Some(Outcome::Stopped),
+            "expired" => Some(Outcome::Expired),
+            "cancelled" => Some(Outcome::Cancelled),
+            "rejected" => Some(Outcome::Rejected(reason.unwrap_or(RejectReason::QueueFull))),
+            "failed" => Some(Outcome::Failed),
+            _ => None,
+        }
+    }
+
+    /// The success doors: the response's `ok` flag mirrors this.
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Outcome::Done | Outcome::Stopped)
+    }
+}
+
+/// Shared cancellation flag between a [`ResponseHandle`] and the scheduler.
+/// Cloning shares the flag; once raised it stays raised.  The scheduler
+/// polls it between chunk rounds and decode steps, so cancellation takes
+/// effect at the next scheduling boundary (never mid-kernel).
+#[derive(Clone, Debug, Default)]
+pub struct CancelFlag(Arc<AtomicBool>);
+
+impl CancelFlag {
+    /// Raise the flag.  Idempotent.
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -36,6 +174,16 @@ pub struct PrefillRequest {
     /// reservation are reclaimed immediately on early stop, so long-running
     /// servers don't strand capacity on short generations.
     pub stop_token: Option<u32>,
+    /// Soft deadline in milliseconds from submission.  A request whose
+    /// deadline passes before admission is rejected
+    /// (`deadline_infeasible`); one that expires after admission is reaped
+    /// at the next scheduler round with outcome `expired`, freeing its KV
+    /// reservation.  `None` = no deadline.
+    pub deadline_ms: Option<u64>,
+    /// Admission priority class (see [`Priority`]).
+    pub priority: Priority,
+    /// Cooperative cancellation flag, shared with the [`ResponseHandle`].
+    pub cancel: CancelFlag,
     pub submitted_at: std::time::Instant,
 }
 
@@ -49,6 +197,9 @@ impl PrefillRequest {
             chunk: None,
             max_new_tokens: 0,
             stop_token: None,
+            deadline_ms: None,
+            priority: Priority::Interactive,
+            cancel: CancelFlag::default(),
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -62,6 +213,9 @@ impl PrefillRequest {
             chunk: None,
             max_new_tokens: 0,
             stop_token: None,
+            deadline_ms: None,
+            priority: Priority::Interactive,
+            cancel: CancelFlag::default(),
             submitted_at: std::time::Instant::now(),
         }
     }
@@ -70,6 +224,14 @@ impl PrefillRequest {
         match &self.payload {
             Payload::Tokens(t) => t.len(),
             Payload::Synthetic { seq_len, .. } => *seq_len,
+        }
+    }
+
+    /// Whether the request's deadline has passed as of `now`.
+    pub fn expired(&self, now: std::time::Instant) -> bool {
+        match self.deadline_ms {
+            Some(ms) => now.saturating_duration_since(self.submitted_at).as_millis() as u64 >= ms,
+            None => false,
         }
     }
 }
@@ -132,14 +294,24 @@ pub enum ResponseEvent {
 /// The submitter's end of a request's event stream.  `wait` is the
 /// request-level blocking call (drains frames, returns the final
 /// response, which carries the full token list anyway); `next_event`
-/// exposes the stream for consumers that render tokens as they arrive.
+/// exposes the stream for consumers that render tokens as they arrive;
+/// `cancel` asks the scheduler to stop the request at the next round.
 pub struct ResponseHandle {
     rx: mpsc::Receiver<ResponseEvent>,
+    cancel: CancelFlag,
 }
 
 impl ResponseHandle {
-    pub fn new(rx: mpsc::Receiver<ResponseEvent>) -> ResponseHandle {
-        ResponseHandle { rx }
+    pub fn new(rx: mpsc::Receiver<ResponseEvent>, cancel: CancelFlag) -> ResponseHandle {
+        ResponseHandle { rx, cancel }
+    }
+
+    /// Request cancellation.  The scheduler notices at its next round, frees
+    /// the KV reservation, and delivers a final response with outcome
+    /// `cancelled` — so `wait()` after `cancel()` still returns exactly one
+    /// terminal response.
+    pub fn cancel(&self) {
+        self.cancel.cancel();
     }
 
     /// Next event (blocking): token frames in generation order, then Done.
@@ -177,7 +349,11 @@ impl ResponseHandle {
 pub struct PrefillResponse {
     pub id: u64,
     pub ok: bool,
+    /// Typed terminal state; `ok` mirrors `outcome.is_ok()`.
+    pub outcome: Outcome,
     pub error: Option<String>,
+    /// For rejected requests: suggested client backoff before retrying.
+    pub retry_after_ms: Option<u64>,
     /// Bucket the request was padded to.
     pub bucket: usize,
     /// Microseconds spent waiting in queue.
@@ -212,9 +388,10 @@ pub struct PrefillResponse {
 
 impl PrefillResponse {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("id", Json::Num(self.id as f64)),
             ("ok", Json::Bool(self.ok)),
+            ("outcome", Json::s(self.outcome.as_str())),
             (
                 "error",
                 match &self.error {
@@ -243,7 +420,14 @@ impl PrefillResponse {
             ),
             ("density", Json::Num(self.density)),
             ("output_digest", Json::arr_f32(&self.output_digest)),
-        ])
+        ];
+        if let Outcome::Rejected(reason) = self.outcome {
+            pairs.push(("reject_reason", Json::s(reason.as_str())));
+        }
+        if let Some(ms) = self.retry_after_ms {
+            pairs.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<PrefillResponse> {
@@ -253,10 +437,24 @@ impl PrefillResponse {
                 .map(|a| a.iter().map(|u| u.as_f64().unwrap_or(0.0) as u64).collect())
                 .unwrap_or_default()
         };
+        let ok = matches!(j.req("ok")?, Json::Bool(true));
+        // Peers that predate typed outcomes send only `ok`; infer the
+        // closest outcome so old wire lines stay parseable.
+        let reason = j
+            .get("reject_reason")
+            .and_then(|x| x.as_str())
+            .and_then(RejectReason::parse);
+        let outcome = j
+            .get("outcome")
+            .and_then(|x| x.as_str())
+            .and_then(|s| Outcome::parse(s, reason))
+            .unwrap_or(if ok { Outcome::Done } else { Outcome::Failed });
         Ok(PrefillResponse {
             id: j.req("id")?.as_f64().unwrap_or(0.0) as u64,
-            ok: matches!(j.req("ok")?, Json::Bool(true)),
+            ok,
+            outcome,
             error: j.get("error").and_then(|e| e.as_str()).map(|s| s.to_string()),
+            retry_after_ms: j.get("retry_after_ms").and_then(|x| x.as_f64()).map(|x| x as u64),
             bucket: j.req("bucket")?.as_usize().unwrap_or(0),
             queue_us: j.req("queue_us")?.as_f64().unwrap_or(0.0) as u64,
             prefill_us: j.req("prefill_us")?.as_f64().unwrap_or(0.0) as u64,
@@ -288,7 +486,9 @@ mod tests {
         let r = PrefillResponse {
             id: 42,
             ok: true,
+            outcome: Outcome::Done,
             error: None,
+            retry_after_ms: None,
             bucket: 256,
             queue_us: 10,
             prefill_us: 1000,
@@ -306,6 +506,8 @@ mod tests {
         let back = PrefillResponse::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.id, 42);
         assert!(back.ok);
+        assert_eq!(back.outcome, Outcome::Done);
+        assert_eq!(back.retry_after_ms, None);
         assert_eq!(back.bucket, 256);
         assert_eq!(back.output_digest, r.output_digest);
         assert!((back.density - 0.18).abs() < 1e-12);
@@ -315,6 +517,53 @@ mod tests {
         assert_eq!(back.chunk_us, vec![120, 130, 140]);
         assert_eq!(back.tokens, vec![17, 29_999, 4]);
         assert_eq!(back.decode_us, vec![90, 80, 85]);
+    }
+
+    #[test]
+    fn typed_outcomes_roundtrip_on_the_wire() {
+        for (outcome, ok) in [
+            (Outcome::Done, true),
+            (Outcome::Stopped, true),
+            (Outcome::Expired, false),
+            (Outcome::Cancelled, false),
+            (Outcome::Rejected(RejectReason::QueueFull), false),
+            (Outcome::Rejected(RejectReason::DeadlineInfeasible), false),
+            (Outcome::Rejected(RejectReason::OverCapacity), false),
+            (Outcome::Rejected(RejectReason::Shed), false),
+            (Outcome::Failed, false),
+        ] {
+            assert_eq!(outcome.is_ok(), ok, "{outcome:?}");
+            let r = PrefillResponse {
+                id: 1,
+                ok,
+                outcome,
+                retry_after_ms: if ok { None } else { Some(25) },
+                ..Default::default()
+            };
+            let back = PrefillResponse::from_json(&Json::parse(&r.to_json().to_string()).unwrap())
+                .unwrap();
+            assert_eq!(back.outcome, outcome, "{outcome:?}");
+            assert_eq!(back.retry_after_ms, r.retry_after_ms);
+        }
+    }
+
+    #[test]
+    fn outcome_inferred_from_ok_for_legacy_peers() {
+        // A wire line without "outcome" (pre-typed-outcome peer) maps ok ->
+        // Done, !ok -> Failed.
+        let mut legacy_ok = PrefillResponse { id: 3, ok: true, ..Default::default() }.to_json();
+        if let Json::Obj(m) = &mut legacy_ok {
+            m.remove("outcome");
+        }
+        let back = PrefillResponse::from_json(&legacy_ok).unwrap();
+        assert_eq!(back.outcome, Outcome::Done);
+
+        let mut legacy_err = PrefillResponse { id: 4, ok: false, ..Default::default() }.to_json();
+        if let Json::Obj(m) = &mut legacy_err {
+            m.remove("outcome");
+        }
+        let back = PrefillResponse::from_json(&legacy_err).unwrap();
+        assert_eq!(back.outcome, Outcome::Failed);
     }
 
     #[test]
@@ -332,7 +581,7 @@ mod tests {
     #[test]
     fn handle_streams_frames_then_done() {
         let (tx, rx) = mpsc::channel();
-        let handle = ResponseHandle::new(rx);
+        let handle = ResponseHandle::new(rx, CancelFlag::default());
         let frame = TokenFrame { id: 1, index: 0, pos: 128, token: 9, itl_us: 10 };
         tx.send(ResponseEvent::Token(frame.clone())).unwrap();
         assert!(handle.try_done().is_none(), "frame alone is not completion");
@@ -350,10 +599,34 @@ mod tests {
     }
 
     #[test]
+    fn handle_cancel_raises_the_shared_flag() {
+        let (_tx, rx) = mpsc::channel();
+        let flag = CancelFlag::default();
+        let handle = ResponseHandle::new(rx, flag.clone());
+        assert!(!flag.is_cancelled());
+        handle.cancel();
+        assert!(flag.is_cancelled(), "handle and request share one flag");
+    }
+
+    #[test]
+    fn deadline_expiry_is_relative_to_submission() {
+        let mut r = PrefillRequest::synthetic(1, 64, 0, AttentionMode::Sparse);
+        let now = r.submitted_at;
+        assert!(!r.expired(now), "no deadline, never expires");
+        r.deadline_ms = Some(10);
+        assert!(!r.expired(now + std::time::Duration::from_millis(9)));
+        assert!(r.expired(now + std::time::Duration::from_millis(10)));
+        r.deadline_ms = Some(0);
+        assert!(r.expired(now), "zero deadline is already infeasible");
+    }
+
+    #[test]
     fn seq_len_from_payload() {
         let r = PrefillRequest::tokens(1, vec![1, 2, 3], AttentionMode::Dense);
         assert_eq!(r.seq_len(), 3);
         assert_eq!(r.max_new_tokens, 0);
+        assert_eq!(r.priority, Priority::Interactive);
+        assert_eq!(r.deadline_ms, None);
         let s = PrefillRequest::synthetic(2, 128, 0, AttentionMode::Sparse);
         assert_eq!(s.seq_len(), 128);
     }

@@ -5,20 +5,31 @@
 //! Requests move through the typed [`RunState`] lifecycle: *prefilling*
 //! (chunk-granular), *decoding* (one token per round, new K/V appended to
 //! the same paged reservation), and *finished* (KV freed, final response
-//! sent).  Every scheduling round (1) admits new work — resolving the
-//! request's bucket, clamping `max_new_tokens` to the coordinator cap (and
-//! to zero for backends without the decode capability), rejecting
-//! never-fit requests at admission, and — for backends with the `chunked`
-//! capability, the only ones that touch the paged store — reserving
-//! `bucket + max_new` rows in the paged KV store all-or-nothing so an
-//! admitted request can always prefill *and* decode to completion.
+//! sent).  Every scheduling round (0) **reaps** overloaded work — requests
+//! whose client cancelled ([`PrefillRequest::cancel`]) or whose deadline
+//! ([`PrefillRequest::deadline_ms`]) passed are cut short *between* backend
+//! calls, in either lifecycle phase, their paged reservation freed
+//! immediately and a typed terminal response ([`Outcome::Cancelled`] /
+//! [`Outcome::Expired`]) sent; (1) admits new work — screening out
+//! already-cancelled and already-expired requests, resolving the request's
+//! bucket, clamping `max_new_tokens` to the coordinator cap (and to zero
+//! for backends without the decode capability), rejecting never-fit
+//! requests at admission with [`Outcome::Rejected`], and — for backends
+//! with the `chunked` capability, the only ones that touch the paged store
+//! — reserving `bucket + max_new` rows in the paged KV store
+//! all-or-nothing so an admitted request can always prefill *and* decode
+//! to completion.
 //! With the prefix cache on, the reservation first probes the store's
 //! shared-prefix index with the backend's content chain
 //! ([`ExecBackend::prefix_chain`]): already-resident leading prompt
 //! blocks are pinned (shared) instead of re-reserved, the hit rides into
 //! [`ExecBackend::begin`] so the backend resumes past the cached rows,
 //! and `prefix_hits` / `prefix_blocks_shared` / `prefix_evictions` land
-//! in the metrics;
+//! in the metrics.  A request whose prompt is *currently being prefilled*
+//! by another in-flight request (the store's in-flight registry says so)
+//! is deferred instead of admitted cold: the leader publishes its groups
+//! chunk by chunk, and the follower admits warm once the full prompt is
+//! resident — concurrent identical prompts cost one prefill, not N;
 //! (2) dispatches the next chunk of
 //! every prefilling request — across the worker pool when the backend's
 //! [`Capabilities`] allow sharing, serially otherwise; and (3) runs one
@@ -26,6 +37,13 @@
 //! therefore keep producing tokens while a 128k prefill is mid-sequence —
 //! neither direction can starve the other, because both get exactly one
 //! round of service per loop iteration.
+//!
+//! KV backpressure (a reservation that cannot be placed *right now*)
+//! requeues the work and backs admission off exponentially (1 ms doubling
+//! to a 16 ms cap, counted in `requeue_rounds`) instead of hot-spinning
+//! the pop/requeue cycle; the backoff only ever sleeps when there is no
+//! active run to make progress on, and resets the moment a reservation
+//! lands.
 //!
 //! The scheduler never inspects which backend it is running: everything it
 //! needs to know (chunked? parallel? decode? largest bucket?) comes from
@@ -36,6 +54,7 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::util::rng::Rng;
 
@@ -43,7 +62,9 @@ use super::admission::{AdmissionQueue, WorkItem};
 use super::backend::{Capabilities, ChunkStep, DecodeStep, ExecBackend, RunState};
 use super::kv_cache::PagedKvStore;
 use super::metrics::Metrics;
-use super::request::{PrefillResponse, ResponseEvent};
+use super::request::{
+    Outcome, PrefillRequest, PrefillResponse, Priority, RejectReason, ResponseEvent,
+};
 
 /// Scheduler knobs (from `CoordinatorConfig`).
 #[derive(Clone, Debug)]
@@ -91,6 +112,22 @@ impl DecodeLane {
         self.runs.push(run);
         self.replies.push(reply);
     }
+
+    /// Remove the run at `i` together with its reply channel (the two vecs
+    /// stay index-aligned by construction).
+    fn remove(&mut self, i: usize) -> (RunState, mpsc::Sender<ResponseEvent>) {
+        (self.runs.remove(i), self.replies.remove(i))
+    }
+}
+
+/// Admission backpressure state: how hard the last KV-exhaustion round hit
+/// and when admission may try again.
+#[derive(Default)]
+struct AdmitState {
+    /// Current exponential-backoff step (0 = no backoff pending).
+    backoff_ms: u64,
+    /// Admission pauses until this instant (KV-exhaustion backoff).
+    next_at: Option<Instant>,
 }
 
 /// The scheduler loop: runs on the coordinator's executor thread until
@@ -117,12 +154,16 @@ pub(crate) fn run_loop(
     );
     let mut ready: VecDeque<Inflight> = VecDeque::new();
     let mut decoding = DecodeLane::default();
+    let mut st = AdmitState::default();
     loop {
         if stop.load(Ordering::Relaxed) && adm.is_empty() && ready.is_empty() && decoding.is_empty()
         {
             break;
         }
-        admit(cfg, backend, &caps, adm, store, met, &mut ready, decoding.len(), rng);
+        // Reap cancelled/expired work FIRST: their reservations return to
+        // the pool before this round's admission tries to place new work.
+        reap(store, met, &mut ready, &mut decoding);
+        admit(cfg, backend, &caps, adm, store, met, &mut ready, decoding.len(), &mut st, rng);
         if ready.is_empty() && decoding.is_empty() {
             if stop.load(Ordering::Relaxed) && adm.is_empty() {
                 break;
@@ -141,10 +182,72 @@ pub(crate) fn run_loop(
     }
 }
 
+/// Whether `req` should be cut short right now, and how to label it.
+fn overload_of(req: &PrefillRequest, now: Instant) -> Option<(Outcome, String)> {
+    if req.cancel.is_cancelled() {
+        return Some((Outcome::Cancelled, format!("request {} cancelled by client", req.id)));
+    }
+    if req.expired(now) {
+        return Some((
+            Outcome::Expired,
+            format!(
+                "request {} exceeded its {} ms deadline",
+                req.id,
+                req.deadline_ms.unwrap_or(0)
+            ),
+        ));
+    }
+    None
+}
+
+/// Cut cancelled/expired runs short between backend calls — in *either*
+/// lifecycle phase — freeing their paged reservation immediately and
+/// sending the typed terminal response.  This is the only place admitted
+/// work exits the lifecycle other than the backend's own terminal steps,
+/// so every admitted request leaves through exactly one of four doors:
+/// done, stopped, expired, cancelled.
+fn reap(
+    store: &PagedKvStore,
+    met: &Metrics,
+    ready: &mut VecDeque<Inflight>,
+    decoding: &mut DecodeLane,
+) {
+    let now = Instant::now();
+    let mut i = 0;
+    while i < ready.len() {
+        match overload_of(ready[i].run.request(), now) {
+            Some((outcome, msg)) => {
+                let mut job = ready.remove(i).expect("index in bounds");
+                store.free(job.run.id());
+                let resp = job.run.finish_overload(outcome, msg);
+                met.record(&resp);
+                let _ = job.reply.send(ResponseEvent::Done(resp));
+            }
+            None => i += 1,
+        }
+    }
+    let mut i = 0;
+    while i < decoding.runs.len() {
+        match overload_of(decoding.runs[i].request(), now) {
+            Some((outcome, msg)) => {
+                let (mut run, reply) = decoding.remove(i);
+                store.free(run.id());
+                let resp = run.finish_overload(outcome, msg);
+                met.record(&resp);
+                let _ = reply.send(ResponseEvent::Done(resp));
+            }
+            None => i += 1,
+        }
+    }
+}
+
 /// Pull new requests out of admission into the ready ring.  Over-cap
-/// requests are rejected here — at admission, with a clear error — instead
-/// of failing deep in the backend; requests the KV pool cannot hold yet are
-/// requeued (backpressure) and admission pauses until blocks free up.
+/// requests are rejected here — at admission, with a typed outcome and a
+/// clear error — instead of failing deep in the backend; requests the KV
+/// pool cannot hold yet are requeued (backpressure) and admission backs
+/// off exponentially until blocks free up; requests whose exact prompt is
+/// mid-prefill on another in-flight request are deferred so they admit
+/// warm from the leader's published blocks instead of running cold.
 #[allow(clippy::too_many_arguments)]
 fn admit(
     cfg: &SchedulerConfig,
@@ -155,8 +258,24 @@ fn admit(
     met: &Metrics,
     ready: &mut VecDeque<Inflight>,
     decoding: usize,
+    st: &mut AdmitState,
     rng: &mut Rng,
 ) {
+    // KV-exhaustion backoff: when the last round could not place a
+    // reservation, pause admission instead of hot-spinning pop/requeue.
+    // Only sleep when there is no admitted work to make progress on —
+    // otherwise skip this round and let dispatch/decode free blocks.
+    if let Some(t) = st.next_at {
+        let now = Instant::now();
+        if now < t {
+            if ready.is_empty() && decoding == 0 {
+                std::thread::sleep(t.saturating_duration_since(now));
+            } else {
+                return;
+            }
+        }
+        st.next_at = None;
+    }
     // `max_inflight` bounds admitted requests across both lifecycle phases
     // (each holds a full `bucket + max_new` KV reservation): a full system
     // admits nothing until something completes.
@@ -167,13 +286,67 @@ fn admit(
     // Only block waiting for work when there is nothing at all to schedule.
     let wait =
         if ready.is_empty() && decoding == 0 { cfg.max_wait } else { std::time::Duration::ZERO };
-    let mut pending: VecDeque<WorkItem> = adm.pop_up_to(want, wait).into();
+    let mut popped = adm.pop_up_to(want, wait);
+    // Admission order: interactive ahead of batch, always; when the pool is
+    // tight, requests with more resident prefix rows first (they pin shared
+    // blocks instead of consuming fresh ones, so they are the cheapest way
+    // to drain the queue).  The sort is stable: arrival order breaks ties.
+    if popped.len() > 1 {
+        let tight = store.used() * 2 >= store.total_blocks;
+        popped.sort_by_key(|it| {
+            let class = match it.req.priority {
+                Priority::Interactive => 0u8,
+                Priority::Batch => 1,
+            };
+            let resident = if tight && cfg.prefix_cache && caps.chunked {
+                backend
+                    .bucket_for(it.req.seq_len())
+                    .and_then(|b| backend.prefix_chain(&it.req, b, store.block_size))
+                    .map(|c| store.probe_prefix(&c).resident_rows)
+                    .unwrap_or(0)
+            } else {
+                0
+            };
+            (class, std::cmp::Reverse(resident))
+        });
+    }
+    let mut pending: VecDeque<WorkItem> = popped.into();
+    let mut deferred: Vec<WorkItem> = Vec::new();
+    let now = Instant::now();
     while let Some(mut item) = pending.pop_front() {
+        // Overload screening before any placement work: a request that was
+        // cancelled or whose deadline passed while queued never reserves.
+        if item.req.cancel.is_cancelled() {
+            reject(
+                met,
+                &item,
+                Outcome::Cancelled,
+                None,
+                format!("request {} cancelled before admission", item.req.id),
+            );
+            continue;
+        }
+        if item.req.expired(now) {
+            reject(
+                met,
+                &item,
+                Outcome::Rejected(RejectReason::DeadlineInfeasible),
+                None,
+                format!(
+                    "rejected at admission: request {} deadline ({} ms) already expired",
+                    item.req.id,
+                    item.req.deadline_ms.unwrap_or(0)
+                ),
+            );
+            continue;
+        }
         let n = item.req.seq_len();
         let Some(bucket) = backend.bucket_for(n) else {
             reject(
                 met,
                 &item,
+                Outcome::Rejected(RejectReason::OverCapacity),
+                None,
                 format!(
                     "rejected at admission: seq_len {n} exceeds largest bucket {}",
                     caps.max_bucket
@@ -202,6 +375,8 @@ fn admit(
                 reject(
                     met,
                     &item,
+                    Outcome::Rejected(RejectReason::OverCapacity),
+                    None,
                     format!(
                         "rejected at admission: bucket {bucket} + {} new tokens exceeds kv pool capacity ({} blocks x {} rows)",
                         item.req.max_new_tokens, store.total_blocks, store.block_size
@@ -217,20 +392,41 @@ fn admit(
             } else {
                 None
             };
+            if let Some(c) = &chain {
+                // In-flight coalescing: if another request is prefilling
+                // this exact prompt right now, defer instead of starting a
+                // duplicate cold prefill.  The leader publishes its groups
+                // after every chunk, so the probe's resident count grows
+                // each round and the follower admits with a full hit once
+                // the leader's prompt is resident (or cold if the leader
+                // died — `free` clears its claim).  No backoff: the leader
+                // itself makes progress every scheduler round.
+                let probe = store.probe_prefix(c);
+                let full: usize = c.groups.iter().map(|g| g.rows).sum();
+                if probe.inflight && probe.resident_rows < full {
+                    deferred.push(item);
+                    continue;
+                }
+            }
             let outcome = store.reserve_with_prefix(item.req.id, rows, chain.as_ref());
             met.prefix_evictions.fetch_add(outcome.evicted as u64, Ordering::Relaxed);
             if !outcome.reserved {
                 met.kv_rejections.fetch_add(1, Ordering::Relaxed);
+                met.requeue_rounds.fetch_add(1, Ordering::Relaxed);
                 // Pool is full right now: put this item and everything
                 // popped behind it back at the FRONT of admission in
-                // arrival order, and retry after in-flight work frees
-                // blocks.
+                // arrival order, back off, and retry after in-flight work
+                // frees blocks.
+                st.backoff_ms = if st.backoff_ms == 0 { 1 } else { (st.backoff_ms * 2).min(16) };
+                st.next_at = Some(Instant::now() + Duration::from_millis(st.backoff_ms));
                 pending.push_front(item);
                 while let Some(it) = pending.pop_back() {
                     adm.requeue(it);
                 }
                 break;
             }
+            st.backoff_ms = 0;
+            st.next_at = None;
             if outcome.hit_rows > 0 {
                 met.prefix_hits.fetch_add(1, Ordering::Relaxed);
                 met.prefix_blocks_shared.fetch_add(outcome.hit_blocks as u64, Ordering::Relaxed);
@@ -244,11 +440,28 @@ fn admit(
         let run = backend.begin(item.req, bucket, cfg.chunk_tokens, prefix, rng);
         ready.push_back(Inflight { run, reply: item.reply });
     }
+    // Deferred followers go back to the front (they were popped first) and
+    // are re-probed next round against the leader's grown resident run.
+    for it in deferred.into_iter().rev() {
+        adm.requeue(it);
+    }
 }
 
-/// Fail a request at admission with a clear error.
-fn reject(met: &Metrics, item: &WorkItem, msg: String) {
-    let resp = PrefillResponse { id: item.req.id, error: Some(msg), ..Default::default() };
+/// Fail a request at admission with a typed outcome and a clear error.
+fn reject(
+    met: &Metrics,
+    item: &WorkItem,
+    outcome: Outcome,
+    retry_after_ms: Option<u64>,
+    msg: String,
+) {
+    let resp = PrefillResponse {
+        id: item.req.id,
+        error: Some(msg),
+        outcome,
+        retry_after_ms,
+        ..Default::default()
+    };
     met.record(&resp);
     let _ = item.reply.send(ResponseEvent::Done(resp));
 }
@@ -325,9 +538,9 @@ fn dispatch_round(
 /// One batched decode step: every decoding request generates its next token
 /// (the backend may fan the batch across the worker pool), frames stream
 /// out as soon as they exist, and finished requests free their KV and
-/// reply.  Early-stopped generations (stop token before `max_new_tokens`)
-/// are counted separately; their unused KV tail was already reclaimed by
-/// the backend.
+/// reply.  A client that stopped reading its stream (the frame send fails)
+/// raises the request's own cancel flag, so the next reap round cuts the
+/// generation short instead of decoding into a void.
 fn decode_round(
     backend: &dyn ExecBackend,
     store: &PagedKvStore,
@@ -346,14 +559,15 @@ fn decode_round(
     for ((run, reply), step) in runs.into_iter().zip(replies).zip(steps) {
         match step {
             DecodeStep::Token(frame) => {
-                let _ = reply.send(ResponseEvent::Token(frame));
+                if reply.send(ResponseEvent::Token(frame)).is_err() {
+                    // Receiver gone mid-stream: treat it as a client
+                    // cancellation — the reap pass frees the reservation.
+                    run.request().cancel.cancel();
+                }
                 decoding.push(run, reply);
             }
             DecodeStep::Done(frame, resp) => {
                 let _ = reply.send(ResponseEvent::Token(frame));
-                if resp.tokens.len() < run.request().max_new_tokens {
-                    met.early_stopped.fetch_add(1, Ordering::Relaxed);
-                }
                 store.free(run.id());
                 met.record(&resp);
                 let _ = reply.send(ResponseEvent::Done(resp));
@@ -388,7 +602,7 @@ mod tests {
                 prefix_cache: true,
             },
             backend,
-            AdmissionQueue::new(64),
+            AdmissionQueue::new(64, 64),
             store,
             Metrics::new(),
         )
@@ -463,6 +677,7 @@ mod tests {
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (_, resp) = final_of(&rx);
         assert!(!resp.ok);
+        assert_eq!(resp.outcome, Outcome::Rejected(RejectReason::OverCapacity));
         let err = resp.error.unwrap();
         assert!(err.contains("rejected at admission"), "{err}");
         assert!(err.contains("exceeds largest bucket"), "{err}");
@@ -484,6 +699,7 @@ mod tests {
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (_, bad) = final_of(&bad_rx);
         assert!(!bad.ok);
+        assert_eq!(bad.outcome, Outcome::Rejected(RejectReason::OverCapacity));
         assert!(bad.error.unwrap().contains("exceeds kv pool capacity"));
         assert!(final_of(&ok_rx).1.ok);
         assert_eq!(met.snapshot().completed, 1);
@@ -523,6 +739,7 @@ mod tests {
         let snap = met.snapshot();
         assert_eq!(snap.completed, 3);
         assert!(snap.kv_rejections > 0, "backpressure must have engaged");
+        assert!(snap.requeue_rounds > 0, "requeues are counted");
     }
 
     #[test]
@@ -534,6 +751,7 @@ mod tests {
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (frames, resp) = final_of(&rx);
         assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.outcome, Outcome::Done);
         assert_eq!(frames, 5, "one streamed frame per generated token");
         assert_eq!(resp.tokens.len(), 5);
         assert_eq!(resp.decode_us.len(), 5);
@@ -647,10 +865,200 @@ mod tests {
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (frames, resp) = final_of(&rx);
         assert!(resp.ok, "{:?}", resp.error);
+        assert_eq!(resp.outcome, Outcome::Stopped);
         assert_eq!(resp.tokens.len(), 2, "generation stops at the stop token");
         assert_eq!(resp.tokens, probe.tokens[..2], "stop token itself is emitted");
         assert_eq!(frames, 2);
         assert_eq!(store.used(), 0, "early-stopped reservation fully reclaimed");
         assert_eq!(met.snapshot().early_stopped, 1);
+    }
+
+    #[test]
+    fn cancel_mid_prefill_frees_the_reservation_for_new_work() {
+        let (mut cfg, backend, adm, big_store, met) = setup();
+        // Prefix cache OFF so the cancelled run leaves nothing resident:
+        // the follow-up admission must succeed purely because the
+        // reservation was freed, not because blocks went idle-cached.
+        cfg.prefix_cache = false;
+        // Pool of exactly 1024 rows: one 1024-bucket request fills it.
+        let store = PagedKvStore::new(16, 64, big_store.head_dim);
+        let caps = backend.capabilities();
+        let (tx, rx) = mpsc::channel();
+        let req = PrefillRequest::synthetic(1, 1024, 5, AttentionMode::Sparse);
+        let flag = req.cancel.clone();
+        adm.push(WorkItem { req, reply: tx }).unwrap();
+        let mut ready = VecDeque::new();
+        let mut decoding = DecodeLane::default();
+        let mut st = AdmitState::default();
+        let mut rng = Rng::new(11);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(ready.len(), 1);
+        assert!(store.used() > 0, "reservation holds the whole pool");
+        dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        assert_eq!(ready.len(), 1, "1024 rows at chunk 128: still prefilling");
+        flag.cancel();
+        reap(&store, &met, &mut ready, &mut decoding);
+        assert!(ready.is_empty());
+        assert_eq!(store.used(), 0, "freed at reap, before the next admission round");
+        let (_, resp) = final_of(&rx);
+        assert!(!resp.ok);
+        assert_eq!(resp.outcome, Outcome::Cancelled);
+        // The freed pool admits the next full-size request with no eviction.
+        let rx2 = submit(&adm, 2, 1024);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(ready.len(), 1, "freed blocks place the new reservation immediately");
+        while !ready.is_empty() {
+            dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        }
+        let (_, r2) = final_of(&rx2);
+        assert!(r2.ok, "{:?}", r2.error);
+        assert_eq!(store.used(), 0);
+        store.assert_consistent();
+        let snap = met.snapshot();
+        assert_eq!(snap.cancelled, 1);
+        assert_eq!(snap.prefix_evictions, 0, "no eviction was needed");
+    }
+
+    #[test]
+    fn cancelled_in_decode_is_reaped_with_tokens_so_far() {
+        let (cfg, backend, adm, store, met) = setup();
+        let caps = backend.capabilities();
+        let rx = submit_gen(&adm, 1, 128, 50);
+        let mut ready = VecDeque::new();
+        let mut decoding = DecodeLane::default();
+        let mut st = AdmitState::default();
+        let mut rng = Rng::new(15);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        while !ready.is_empty() {
+            dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        }
+        assert_eq!(decoding.len(), 1, "prefill done, decode phase entered");
+        decode_round(&backend, &store, &met, &mut decoding);
+        assert_eq!(decoding.len(), 1, "50-token budget: still decoding after one step");
+        decoding.runs[0].request().cancel.cancel();
+        reap(&store, &met, &mut ready, &mut decoding);
+        assert!(decoding.is_empty());
+        let (frames, resp) = final_of(&rx);
+        assert_eq!(frames, 1, "the token generated before cancellation was streamed");
+        assert!(!resp.ok);
+        assert_eq!(resp.outcome, Outcome::Cancelled);
+        assert_eq!(resp.tokens.len(), 1, "partial generation rides in the terminal response");
+        assert_eq!(store.used(), 0);
+        store.assert_consistent();
+        assert_eq!(met.snapshot().cancelled, 1);
+    }
+
+    #[test]
+    fn deadline_expiry_reaps_a_running_request() {
+        let (mut cfg, backend, adm, big_store, met) = setup();
+        cfg.prefix_cache = false;
+        let store = PagedKvStore::new(16, 64, big_store.head_dim);
+        let caps = backend.capabilities();
+        let (tx, rx) = mpsc::channel();
+        let mut req = PrefillRequest::synthetic(1, 1024, 3, AttentionMode::Sparse);
+        req.deadline_ms = Some(200);
+        adm.push(WorkItem { req, reply: tx }).unwrap();
+        let mut ready = VecDeque::new();
+        let mut decoding = DecodeLane::default();
+        let mut st = AdmitState::default();
+        let mut rng = Rng::new(16);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(ready.len(), 1, "the deadline has not passed at admission");
+        dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        assert_eq!(ready.len(), 1, "still prefilling");
+        // Sleeping past the deadline guarantees expiry (no upper-bound race:
+        // the request only needs the deadline to HAVE passed).
+        std::thread::sleep(Duration::from_millis(250));
+        reap(&store, &met, &mut ready, &mut decoding);
+        assert!(ready.is_empty());
+        assert_eq!(store.used(), 0, "expired reservation freed at reap");
+        let (_, resp) = final_of(&rx);
+        assert!(!resp.ok);
+        assert_eq!(resp.outcome, Outcome::Expired);
+        assert!(resp.error.unwrap().contains("deadline"));
+        assert_eq!(met.snapshot().deadline_expired, 1);
+        store.assert_consistent();
+    }
+
+    #[test]
+    fn expired_in_queue_is_rejected_as_deadline_infeasible() {
+        let (cfg, backend, adm, store, met) = setup();
+        let (tx, rx) = mpsc::channel();
+        let mut req = PrefillRequest::synthetic(1, 128, 1, AttentionMode::Sparse);
+        req.deadline_ms = Some(0); // expired the instant it was submitted
+        adm.push(WorkItem { req, reply: tx }).unwrap();
+        let stop = AtomicBool::new(true);
+        let mut rng = Rng::new(17);
+        run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
+        let (_, resp) = final_of(&rx);
+        assert!(!resp.ok);
+        assert_eq!(resp.outcome, Outcome::Rejected(RejectReason::DeadlineInfeasible));
+        assert!(resp.error.unwrap().contains("deadline"));
+        assert_eq!(store.used(), 0, "nothing was ever reserved");
+        assert_eq!(met.snapshot().failed, 1);
+    }
+
+    #[test]
+    fn interactive_requests_admit_ahead_of_batch() {
+        let (cfg, backend, adm, store, met) = setup();
+        let caps = backend.capabilities();
+        let (tx1, _rx1) = mpsc::channel();
+        let mut batch = PrefillRequest::synthetic(1, 128, 1, AttentionMode::Sparse);
+        batch.priority = Priority::Batch;
+        adm.push(WorkItem { req: batch, reply: tx1 }).unwrap();
+        let (tx2, _rx2) = mpsc::channel();
+        let inter = PrefillRequest::synthetic(2, 128, 2, AttentionMode::Sparse);
+        adm.push(WorkItem { req: inter, reply: tx2 }).unwrap();
+        let mut ready = VecDeque::new();
+        let mut st = AdmitState::default();
+        let mut rng = Rng::new(14);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(ready.len(), 2);
+        assert_eq!(ready[0].run.id(), 2, "interactive admitted ahead of batch");
+        assert_eq!(ready[1].run.id(), 1);
+    }
+
+    #[test]
+    fn concurrent_identical_prompts_defer_behind_the_leader() {
+        let (cfg, backend, adm, store, met) = setup();
+        let caps = backend.capabilities();
+        let mk = |id: u64| {
+            let (tx, rx) = mpsc::channel();
+            let req = PrefillRequest::synthetic(id, 256, 55, AttentionMode::Sparse);
+            adm.push(WorkItem { req, reply: tx }).unwrap();
+            rx
+        };
+        let leader_rx = mk(1);
+        let follower_rx = mk(2);
+        let mut ready = VecDeque::new();
+        let mut decoding = DecodeLane::default();
+        let mut st = AdmitState::default();
+        let mut rng = Rng::new(13);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(ready.len(), 1, "only the leader admits cold");
+        assert_eq!(adm.len(), 1, "the identical follower waits for the leader's blocks");
+        // Leader runs chunk 1 of 2 (publishing its first groups); the
+        // follower stays deferred because the prompt is only half resident.
+        dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(ready.len(), 1, "half-resident prompt: follower still deferred");
+        assert_eq!(adm.len(), 1);
+        // Chunk 2 completes the leader (freed, fully published).
+        dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        assert!(ready.is_empty());
+        assert!(final_of(&leader_rx).1.ok);
+        // Now the follower admits with a FULL prefix hit — one cold prefill
+        // total across both identical prompts.
+        admit(&cfg, &backend, &caps, &adm, &store, &met, &mut ready, 0, &mut st, &mut rng);
+        assert_eq!(adm.len(), 0);
+        while !ready.is_empty() {
+            dispatch_round(&cfg, &backend, &caps, &store, &met, &mut ready, &mut decoding);
+        }
+        let (_, follower) = final_of(&follower_rx);
+        assert!(follower.ok, "{:?}", follower.error);
+        assert_eq!(follower.cached_rows, 256, "entire prompt served from the leader's blocks");
+        assert_eq!(follower.chunks, 1, "one bookkeeping round, zero compute chunks");
+        assert_eq!(met.snapshot().prefix_hits, 1);
+        store.assert_consistent();
     }
 }

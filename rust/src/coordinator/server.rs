@@ -2,19 +2,30 @@
 //!
 //! Wire protocol (one JSON object per line):
 //!   request:  {"id": 1, "n": 256, "seed": 7, "mode": "sparse", "budget": 0.5,
-//!              "chunk": 256, "max_new_tokens": 16, "stop_token": 1234}
+//!              "chunk": 256, "max_new_tokens": 16, "stop_token": 1234,
+//!              "deadline_ms": 500, "priority": "batch"}
 //!             or {"id": 1, "tokens": [..], "mode": "dense"}
+//!             or {"op": "stats"} for a live service-health snapshot
 //!   ("chunk" optionally overrides the coordinator's prefill chunk size;
 //!    "max_new_tokens" requests token generation after prefill;
-//!    "stop_token" ends generation early when that token is produced)
+//!    "stop_token" ends generation early when that token is produced;
+//!    "deadline_ms" expires the request that many ms after submission;
+//!    "priority" is "interactive" (default) or "batch" — batch is shed
+//!    first under load)
 //!   stream:   zero or more {"frame": "token", "id": .., "index": ..,
 //!             "pos": .., "token": .., "itl_us": ..} lines, written as each
 //!             decode step completes (TokenFrame::to_json)
 //!   response: PrefillResponse::to_json (always the final line; carries the
-//!             full token list + per-token ITL)
+//!             full token list + per-token ITL, plus the typed "outcome" —
+//!             shed/rejected submissions answer with outcome "rejected",
+//!             a "reject_reason" and a "retry_after_ms" backoff hint)
 //! The connection handler blocks per request (one request's stream at a
 //! time per connection); multiple connections are served concurrently, all
-//! funneling into the coordinator's admission queue.
+//! funneling into the coordinator's admission queue.  A client that stops
+//! reading mid-stream (broken pipe on a frame write) is treated as having
+//! cancelled: the handler raises the request's cancel flag so the
+//! scheduler reaps the run and frees its KV reservation instead of
+//! decoding into a closed socket.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -24,7 +35,9 @@ use std::sync::Arc;
 use crate::util::json::Json;
 
 use super::engine::AttentionMode;
-use super::request::{PrefillRequest, PrefillResponse, ResponseEvent, TokenFrame};
+use super::request::{
+    Outcome, PrefillRequest, PrefillResponse, Priority, ResponseEvent, TokenFrame,
+};
 use super::Coordinator;
 
 pub struct Server {
@@ -65,6 +78,13 @@ pub fn parse_request(line: &str) -> anyhow::Result<PrefillRequest> {
     }
     if let Some(t) = j.get("stop_token").and_then(|t| t.as_f64()) {
         req.stop_token = Some(t as u32);
+    }
+    if let Some(d) = j.get("deadline_ms").and_then(|d| d.as_f64()) {
+        req.deadline_ms = Some(d as u64);
+    }
+    if let Some(p) = j.get("priority").and_then(|p| p.as_str()) {
+        req.priority = Priority::parse(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown priority {p:?} (interactive|batch)"))?;
     }
     Ok(req)
 }
@@ -149,6 +169,14 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
             continue;
         }
         let line = current;
+        if let Ok(j) = Json::parse(&line) {
+            if j.get("op").and_then(|o| o.as_str()) == Some("stats") {
+                if writeln!(writer, "{}", stats_json(&coordinator).to_string()).is_err() {
+                    break;
+                }
+                continue;
+            }
+        }
         let resp_json = match parse_request(&line) {
             Ok(req) => match coordinator.submit(req) {
                 // Stream the request's events: token frames as they land,
@@ -157,6 +185,18 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
                     match handle.next_event() {
                         Ok(ResponseEvent::Token(frame)) => {
                             if writeln!(writer, "{}", frame.to_json().to_string()).is_err() {
+                                // The client stopped reading mid-stream.
+                                // Treat the broken pipe as a cancellation:
+                                // raise the flag so the scheduler reaps the
+                                // run and frees its KV reservation, and
+                                // drain the channel to the terminal event
+                                // so the reply sender is never wedged.
+                                handle.cancel();
+                                while let Ok(ev) = handle.next_event() {
+                                    if matches!(ev, ResponseEvent::Done(_)) {
+                                        break;
+                                    }
+                                }
                                 return;
                             }
                         }
@@ -164,7 +204,18 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
                         Err(_) => break error_json(0, "coordinator stopped mid-request"),
                     }
                 },
-                Err(_) => error_json(0, "admission queue full"),
+                // Typed load shedding on the wire: the rejection carries the
+                // reason and a retry hint, so clients can back off instead
+                // of hammering a saturated queue.
+                Err(rej) => PrefillResponse {
+                    id: rej.item.req.id,
+                    ok: false,
+                    outcome: Outcome::Rejected(rej.reason),
+                    retry_after_ms: Some(rej.retry_after_ms),
+                    error: Some(rej.to_string()),
+                    ..Default::default()
+                }
+                .to_json(),
             },
             Err(e) => error_json(0, &format!("bad request from {peer:?}: {e:#}")),
         };
@@ -172,6 +223,28 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
             break;
         }
     }
+}
+
+/// Live service health: the metrics snapshot plus the paged-pool and
+/// prefix-cache gauges only the KV store can report.  Served for
+/// `{"op": "stats"}` and by `vsprefill info --port`.
+pub fn stats_json(coordinator: &Coordinator) -> Json {
+    let snap = coordinator.metrics.snapshot();
+    let hit_ratio = if snap.completed == 0 {
+        0.0
+    } else {
+        snap.prefix_hits as f64 / snap.completed as f64
+    };
+    let mut j = snap.to_json();
+    if let Json::Obj(m) = &mut j {
+        let kv = &coordinator.kv;
+        m.insert("kv_used_blocks".to_string(), Json::Num(kv.used() as f64));
+        m.insert("kv_peak_used_blocks".to_string(), Json::Num(kv.peak_used() as f64));
+        m.insert("kv_cached_idle_blocks".to_string(), Json::Num(kv.cached_idle() as f64));
+        m.insert("kv_prefix_entries".to_string(), Json::Num(kv.prefix_entries() as f64));
+        m.insert("prefix_hit_ratio".to_string(), Json::Num(hit_ratio));
+    }
+    j
 }
 
 fn error_json(id: u64, msg: &str) -> Json {
@@ -243,6 +316,15 @@ impl Client {
             }
         }
     }
+
+    /// Fetch the live service-health snapshot (`{"op": "stats"}`).
+    pub fn stats(&mut self) -> anyhow::Result<Json> {
+        writeln!(self.writer, "{}", Json::obj(vec![("op", Json::s("stats"))]).to_string())?;
+        let mut line = String::new();
+        let read = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(read > 0, "connection closed before stats reply");
+        Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+    }
 }
 
 #[cfg(test)]
@@ -272,6 +354,15 @@ mod tests {
         assert_eq!(r4.stop_token, Some(99));
         assert_eq!(r3.max_new_tokens, 0, "absent field defaults to prefill-only");
         assert_eq!(r3.stop_token, None);
+        assert_eq!(r4.deadline_ms, None, "absent deadline means none");
+        assert_eq!(r4.priority, Priority::Interactive, "default priority");
+
+        let r5 =
+            parse_request(r#"{"id": 8, "n": 128, "deadline_ms": 500, "priority": "batch"}"#)
+                .unwrap();
+        assert_eq!(r5.deadline_ms, Some(500));
+        assert_eq!(r5.priority, Priority::Batch);
+        assert!(parse_request(r#"{"id": 9, "n": 128, "priority": "bogus"}"#).is_err());
 
         assert!(parse_request("{}").is_err());
         assert!(parse_request("not json").is_err());
@@ -319,6 +410,82 @@ mod tests {
             resp.decode_us,
             "per-token ITL matches between stream and final response"
         );
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_op_reports_service_health_over_the_wire() {
+        use crate::coordinator::CoordinatorConfig;
+        use crate::serve::EngineBuilder;
+        let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+        let coordinator = Arc::new(EngineBuilder::new().config(cfg).build().unwrap());
+        let server = Server::start(coordinator.clone(), 0).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        // Two identical prompts: the second is a warm prefix-cache hit.
+        assert!(client.prefill_synthetic(1, 256, 42, "sparse", 0.5).unwrap().ok);
+        assert!(client.prefill_synthetic(2, 256, 42, "sparse", 0.5).unwrap().ok);
+        let s = client.stats().unwrap();
+        let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        assert_eq!(num("completed"), 2.0);
+        assert_eq!(num("prefix_hits"), 1.0);
+        assert!((num("prefix_hit_ratio") - 0.5).abs() < 1e-9);
+        assert_eq!(num("kv_used_blocks"), 0.0, "both requests drained");
+        assert!(num("kv_cached_idle_blocks") > 0.0, "warm blocks linger idle");
+        assert!(num("kv_prefix_entries") > 0.0);
+        // Overload counters ride along in the same snapshot.
+        assert_eq!(num("shed_requests"), 0.0);
+        assert_eq!(num("deadline_expired"), 0.0);
+        assert_eq!(num("cancelled"), 0.0);
+        // A normal request still works on the same connection afterwards.
+        assert!(client.prefill_synthetic(3, 128, 7, "sparse", 0.5).unwrap().ok);
+        server.shutdown();
+    }
+
+    #[test]
+    fn wire_rejection_is_typed_with_a_retry_hint() {
+        use crate::coordinator::request::RejectReason;
+        use crate::coordinator::CoordinatorConfig;
+        use crate::serve::EngineBuilder;
+        // A full-sized pool but a tiny queue with batch shedding at depth 1:
+        // batch requests racing in over many connections get typed shed
+        // responses once the queue backs up.
+        let cfg = CoordinatorConfig {
+            max_wait_ms: 1,
+            max_queue: 2,
+            shed_queue_depth: 1,
+            ..Default::default()
+        };
+        let coordinator = Arc::new(EngineBuilder::new().config(cfg).build().unwrap());
+        let server = Server::start(coordinator.clone(), 0).unwrap();
+        let addr = server.addr;
+        let workers: Vec<_> = (0..8)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let req = Json::obj(vec![
+                        ("id", Json::Num(100.0 + i as f64)),
+                        ("n", Json::Num(1024.0)),
+                        ("seed", Json::Num(i as f64)),
+                        ("priority", Json::s("batch")),
+                    ]);
+                    writeln!(client.writer, "{}", req.to_string()).unwrap();
+                    let mut line = String::new();
+                    client.reader.read_line(&mut line).unwrap();
+                    PrefillResponse::from_json(&Json::parse(&line).unwrap()).unwrap()
+                })
+            })
+            .collect();
+        let resps: Vec<PrefillResponse> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+        let shed: Vec<_> = resps
+            .iter()
+            .filter(|r| r.outcome == Outcome::Rejected(RejectReason::Shed))
+            .collect();
+        assert!(resps.iter().any(|r| r.ok), "some requests still complete");
+        if let Some(r) = shed.first() {
+            assert!(!r.ok);
+            assert!(r.retry_after_ms.is_some(), "shed responses carry a backoff hint");
+            assert!(r.error.as_deref().unwrap_or("").contains("shed"));
+        }
         server.shutdown();
     }
 }

@@ -6,7 +6,9 @@
 //!   bench    — closed-loop load test against an in-process coordinator
 //!   exp      — regenerate a paper table/figure (table1..5, fig2..8, ttft, all)
 //!   runtime  — smoke-check the PJRT artifact bundle
-//!   info     — print build/config information
+//!   info     — print build/config information; with --port N, query a
+//!              running server's stats endpoint and print service health
+//!              (prefix-cache hit ratio, overload counters, pool gauges)
 
 use vsprefill::coordinator::{server::Server, AttentionMode, Coordinator, PrefillRequest};
 use vsprefill::experiments as exp;
@@ -32,13 +34,51 @@ fn main() -> anyhow::Result<()> {
         "exp" => experiment(&args),
         "runtime" => runtime_smoke(&args),
         "info" => {
+            if let Some(p) = args.str_opt("port") {
+                return info_stats(p.parse()?);
+            }
             println!("vsprefill {} — VSPrefill reproduction (rust+jax+pallas)", env!("CARGO_PKG_VERSION"));
-            println!("subcommands: serve | bench | exp <name> | runtime | info");
+            println!("subcommands: serve | bench | exp <name> | runtime | info [--port N]");
             println!("exp names: table1 table2 table3 table4 table5 fig2 fig3 fig4 fig5 fig6 fig7 fig8 ttft all");
             Ok(())
         }
         other => anyhow::bail!("unknown subcommand '{other}' (try: info)"),
     }
+}
+
+/// `info --port N`: fetch `{"op": "stats"}` from a running server and
+/// print service health — throughput and overload counters, prefix-cache
+/// effectiveness, and live paged-pool occupancy.
+fn info_stats(port: u16) -> anyhow::Result<()> {
+    use vsprefill::coordinator::server::Client;
+    let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse()?;
+    let mut client = Client::connect(addr)?;
+    let s = client.stats()?;
+    let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    println!("live stats from {addr}:");
+    println!(
+        "  requests: {} completed  {} failed  {} shed  {} expired  {} cancelled",
+        num("completed"),
+        num("failed"),
+        num("shed_requests"),
+        num("deadline_expired"),
+        num("cancelled")
+    );
+    println!(
+        "  prefix cache: hit ratio {:.2}  hits {}  entries {}  idle blocks {}",
+        num("prefix_hit_ratio"),
+        num("prefix_hits"),
+        num("kv_prefix_entries"),
+        num("kv_cached_idle_blocks")
+    );
+    println!(
+        "  kv pool: {} blocks in use ({} peak)  kv rejections {}  requeue rounds {}",
+        num("kv_used_blocks"),
+        num("kv_peak_used_blocks"),
+        num("kv_rejections"),
+        num("requeue_rounds")
+    );
+    Ok(())
 }
 
 fn build_coordinator(args: &Args) -> anyhow::Result<Coordinator> {
@@ -78,7 +118,7 @@ fn bench(args: &Args) -> anyhow::Result<()> {
         req.budget = args.f64_or("budget", 0.5) as f32;
         req.max_new_tokens = max_new;
         req.stop_token = stop_token;
-        rxs.push(coordinator.submit(req).map_err(|_| anyhow::anyhow!("queue full"))?);
+        rxs.push(coordinator.submit(req).map_err(|e| anyhow::anyhow!("{e}"))?);
     }
     let mut ok = 0;
     for rx in rxs {

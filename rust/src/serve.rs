@@ -25,6 +25,7 @@
 //! `backend_name("native" | "reference" | "pjrt" | "auto")` — everything
 //! downstream of the builder talks `dyn ExecBackend`.
 
+use crate::coordinator::backend::faulty::FaultyBackend;
 use crate::coordinator::backend::native::NativeBackend;
 use crate::coordinator::backend::reference::ReferenceBackend;
 use crate::coordinator::{config, Coordinator, CoordinatorConfig, EngineConfig, ExecBackend};
@@ -71,6 +72,9 @@ pub struct EngineBuilder {
     /// Artifact-bundle directory; only read by the PJRT arm.
     #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
     artifacts: String,
+    /// `(seed, chunk_period, decode_period)` — when set, the built backend
+    /// is wrapped in a [`FaultyBackend`] with this schedule.
+    faults: Option<(u64, u64, u64)>,
 }
 
 impl Default for EngineBuilder {
@@ -86,6 +90,7 @@ impl EngineBuilder {
             kind: BackendKind::Native,
             indexer: None,
             artifacts: "artifacts".to_string(),
+            faults: None,
         }
     }
 
@@ -149,9 +154,27 @@ impl EngineBuilder {
         self
     }
 
+    /// Wrap the built backend in a fault-injecting shim: roughly one in
+    /// `chunk_period` prefill chunks and one in `decode_period` decode
+    /// steps fails (0 disables a stream), on a schedule that is a pure
+    /// function of `seed` and each call's identity — the error source of
+    /// the robustness stress suite.
+    pub fn faults(mut self, seed: u64, chunk_period: u64, decode_period: u64) -> EngineBuilder {
+        self.faults = Some((seed, chunk_period, decode_period));
+        self
+    }
+
     /// Build just the backend (engine-level tests, conformance suites).
     /// Validates the configuration first, exactly like [`build`](Self::build).
     pub fn build_backend(&self) -> anyhow::Result<Box<dyn ExecBackend>> {
+        let inner = self.build_inner_backend()?;
+        Ok(match self.faults {
+            Some((seed, chunk, decode)) => Box::new(FaultyBackend::new(inner, seed, chunk, decode)),
+            None => inner,
+        })
+    }
+
+    fn build_inner_backend(&self) -> anyhow::Result<Box<dyn ExecBackend>> {
         config::validate(&self.cfg)?;
         let ecfg = self.cfg.engine.clone();
         Ok(match self.kind {
@@ -214,6 +237,14 @@ mod tests {
         assert_eq!(b.name(), "reference");
         let b = EngineBuilder::new().backend_name("native").unwrap().build_backend().unwrap();
         assert_eq!(b.name(), "native");
+    }
+
+    #[test]
+    fn fault_hook_wraps_the_built_backend() {
+        let b = EngineBuilder::new().faults(7, 3, 0).build_backend().unwrap();
+        assert_eq!(b.name(), "faulty");
+        let b = EngineBuilder::new().build_backend().unwrap();
+        assert_eq!(b.name(), "native", "no faults requested, no wrapper");
     }
 
     #[test]

@@ -190,6 +190,18 @@ pub struct ReserveOutcome {
     pub aux: Vec<PrefixAux>,
 }
 
+/// What [`PagedKvStore::probe_prefix`] saw: how many leading prompt rows
+/// are resident right now, and whether the first *non*-resident group is
+/// being computed by an in-flight leader (in which case a scheduler can
+/// defer the request briefly and admit it warm instead of running it cold).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixProbe {
+    /// Leading prompt rows a reservation made now would hit.
+    pub resident_rows: usize,
+    /// The first non-resident group is registered to an in-flight leader.
+    pub inflight: bool,
+}
+
 /// Per-physical-block state: how many sequences' tables hold it, and
 /// whether the prefix index references it (resident while idle).
 #[derive(Clone, Copy, Default)]
@@ -225,6 +237,9 @@ struct Seq {
     views: usize,
     /// `free` was called; blocks return to the pool when `views` hits 0.
     dying: bool,
+    /// Chain-group hashes this sequence registered as the in-flight leader
+    /// for at reservation time (see `Meta::inflight`); cleared at `free`.
+    registered: Vec<u64>,
 }
 
 struct Meta {
@@ -233,6 +248,13 @@ struct Meta {
     blocks: Vec<BlockState>,
     /// Prefix index: rolling group hash -> resident cached block.
     prefix: HashMap<u64, CacheEntry>,
+    /// In-flight prefix registry: chain-group hash -> the request currently
+    /// computing that group (the *leader*).  Registered at reservation for
+    /// the non-resident groups of a chain, removed at `free`.  Lets the
+    /// scheduler defer identical concurrent prompts (followers) until the
+    /// leader publishes, instead of running them cold — the
+    /// thundering-herd guard.
+    inflight: HashMap<u64, u64>,
     /// Blocks with `refs == 0` kept resident because the index references
     /// them — reclaimable capacity, excluded from `used()`.
     idle_cached: usize,
@@ -317,6 +339,7 @@ impl PagedKvStore {
                 seqs: BTreeMap::new(),
                 blocks: vec![BlockState::default(); total_blocks],
                 prefix: HashMap::new(),
+                inflight: HashMap::new(),
                 idle_cached: 0,
                 serial: 0,
                 peak_used: 0,
@@ -468,9 +491,30 @@ impl PagedKvStore {
             m.blocks[b].refs = 1;
             table.push(b);
         }
+        // Register this sequence as the in-flight leader for every
+        // non-resident chain group it will compute (first leader wins):
+        // concurrent identical prompts probe the registry and wait for the
+        // leader's publishes instead of reserving cold.
+        let mut registered = Vec::new();
+        if let Some(chain) = chain {
+            let mut row0 = 0usize;
+            for g in &chain.groups {
+                if row0 + g.rows > seq_len {
+                    break;
+                }
+                if row0 >= hit_rows {
+                    if let std::collections::hash_map::Entry::Vacant(v) = m.inflight.entry(g.hash)
+                    {
+                        v.insert(req_id);
+                        registered.push(g.hash);
+                    }
+                }
+                row0 += g.rows;
+            }
+        }
         m.seqs.insert(
             req_id,
-            Seq { table, len: hit_rows, capacity: seq_len, views: 0, dying: false },
+            Seq { table, len: hit_rows, capacity: seq_len, views: 0, dying: false, registered },
         );
         out.reserved = true;
         out.hit_rows = hit_rows;
@@ -521,6 +565,27 @@ impl PagedKvStore {
             row0 += g.rows;
         }
         published
+    }
+
+    /// Read-only admission probe: how far `chain` would hit the cache right
+    /// now, and whether the first miss is a group an in-flight leader is
+    /// already computing.  Cheap (one hash lookup per leading group); takes
+    /// no pins and changes nothing, so the answer is advisory — the
+    /// authoritative match happens inside
+    /// [`reserve_with_prefix`](Self::reserve_with_prefix).
+    pub fn probe_prefix(&self, chain: &PrefixChain) -> PrefixProbe {
+        let m = self.meta.lock().unwrap();
+        let mut out = PrefixProbe::default();
+        for g in &chain.groups {
+            match m.prefix.get(&g.hash) {
+                Some(e) if e.rows == g.rows => out.resident_rows += g.rows,
+                _ => {
+                    out.inflight = m.inflight.contains_key(&g.hash);
+                    break;
+                }
+            }
+        }
+        out
     }
 
     /// Drop up to `max_blocks` idle cached blocks (LRU order) back into the
@@ -588,6 +653,25 @@ impl PagedKvStore {
             self.total_blocks,
             "every block must be exactly one of free / live / idle-cached"
         );
+        // In-flight registry <-> sequence registration is a bijection:
+        // leadership never outlives its sequence (freed leaders must not
+        // leave followers waiting on a hash nobody is computing).
+        for (h, id) in &m.inflight {
+            let seq = m.seqs.get(id);
+            assert!(
+                seq.is_some_and(|s| s.registered.contains(h)),
+                "inflight hash {h:#x} points at request {id} which no longer registers it"
+            );
+        }
+        for (id, seq) in &m.seqs {
+            for h in &seq.registered {
+                assert_eq!(
+                    m.inflight.get(h),
+                    Some(id),
+                    "request {id} registers hash {h:#x} the inflight registry disagrees on"
+                );
+            }
+        }
     }
 
     /// Append `k_rows`/`v_rows` (same shape, `head_dim` columns) to the
@@ -746,14 +830,21 @@ impl PagedKvStore {
     /// appends and new views immediately).
     pub fn free(&self, req_id: u64) {
         let mut m = self.meta.lock().unwrap();
-        let defer = match m.seqs.get_mut(&req_id) {
+        // Drop in-flight prefix leadership immediately — even when block
+        // release defers under live views — so a reaped leader never makes
+        // followers wait on groups nobody is computing any more.
+        let (defer, registered) = match m.seqs.get_mut(&req_id) {
             Some(seq) if seq.views > 0 => {
                 seq.dying = true;
-                true
+                (true, std::mem::take(&mut seq.registered))
             }
-            Some(_) => false,
+            Some(seq) => (false, std::mem::take(&mut seq.registered)),
             None => return,
         };
+        for h in registered {
+            debug_assert_eq!(m.inflight.get(&h), Some(&req_id));
+            m.inflight.remove(&h);
+        }
         if !defer {
             let seq = m.seqs.remove(&req_id).unwrap();
             for b in seq.table {
@@ -1207,6 +1298,62 @@ mod tests {
         assert_eq!((kv.cached_idle(), kv.prefix_entries()), (0, 0));
         assert!(kv.reserve(2, 6 * 8), "whole pool free again");
         kv.free(2);
+        kv.assert_consistent();
+    }
+
+    #[test]
+    fn inflight_registry_tracks_leaders_until_free() {
+        let mut rng = Rng::new(25);
+        let kv = PagedKvStore::new(8, 16, 8);
+        let ch = chain(13, 48, 16); // 3 groups
+        assert_eq!(kv.probe_prefix(&ch).resident_rows, 0);
+        assert!(!kv.probe_prefix(&ch).inflight, "empty store: nobody computing");
+
+        // Cold leader registers every non-resident group.
+        assert!(kv.reserve_with_prefix(1, 48, Some(&ch)).reserved);
+        let p = kv.probe_prefix(&ch);
+        assert_eq!(p.resident_rows, 0, "nothing published yet");
+        assert!(p.inflight, "first miss is being computed by the leader");
+        kv.assert_consistent();
+
+        // Incremental publish: the resident run grows while the remainder
+        // stays attributed to the leader.
+        let (k, v) = (randm(&mut rng, 32, 8), randm(&mut rng, 32, 8));
+        kv.append(1, &k, &v).unwrap();
+        kv.publish_prefix(1, &ch, aux_all(&ch)); // publishes the 2 full groups
+        let p = kv.probe_prefix(&ch);
+        assert_eq!(p.resident_rows, 32);
+        assert!(p.inflight, "last group still being computed");
+
+        // A second chain's leader only registers groups nobody claimed.
+        let other = chain(14, 32, 16);
+        assert!(kv.reserve_with_prefix(2, 32, Some(&other)).reserved);
+        assert!(kv.probe_prefix(&other).inflight);
+        kv.assert_consistent();
+
+        // Freeing the leader (even mid-computation) releases its claims.
+        kv.free(1);
+        let p = kv.probe_prefix(&ch);
+        assert_eq!(p.resident_rows, 32, "published groups stay resident");
+        assert!(!p.inflight, "reaped leader leaves no dangling claim");
+        kv.free(2);
+        assert!(!kv.probe_prefix(&other).inflight);
+        kv.assert_consistent();
+    }
+
+    #[test]
+    fn inflight_claims_survive_deferred_free() {
+        // `free` under a live view defers block release but must drop the
+        // in-flight claim immediately.
+        let kv = PagedKvStore::new(4, 16, 8);
+        let ch = chain(15, 32, 16);
+        assert!(kv.reserve_with_prefix(1, 32, Some(&ch)).reserved);
+        let view = kv.view(1).unwrap();
+        kv.free(1);
+        assert!(!kv.probe_prefix(&ch).inflight, "claim dropped despite deferred release");
+        kv.assert_consistent();
+        drop(view);
+        assert_eq!(kv.used(), 0);
         kv.assert_consistent();
     }
 

@@ -1,0 +1,274 @@
+//! Overload-control and graceful-degradation integration suite: the
+//! fault-injection stress drain, deadline/cancellation lifecycles against a
+//! live coordinator, and the thundering-herd conformance test for in-flight
+//! prefix coalescing (native and reference backends).
+//!
+//! Tests whose names carry `stress` also run in the release-mode CI job
+//! with debug assertions forced on (`.github/workflows/ci.yml`).
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use vsprefill::coordinator::{
+    AttentionMode, CoordinatorConfig, EngineConfig, Outcome, PrefillRequest, PrefillResponse,
+    Priority, RejectReason,
+};
+use vsprefill::serve::EngineBuilder;
+
+/// Poll until `cond` holds or the timeout lapses; returns whether it held.
+fn eventually(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    cond()
+}
+
+/// Every request submitted against a fault-injecting backend terminates
+/// with a typed outcome, the paged pool drains to zero with a consistent
+/// block map, and admission keeps accepting work afterwards — the
+/// acceptance drain of the robustness tentpole.
+#[test]
+fn stress_fault_injection_every_request_terminates_with_a_typed_outcome() {
+    let cfg = CoordinatorConfig {
+        max_wait_ms: 1,
+        chunk_tokens: 64,
+        // A pool tight enough that the mix contends for blocks and the
+        // requeue/backoff path runs, but large enough to always make
+        // progress (4096 rows vs a 1024-row max bucket).
+        kv_blocks: 64,
+        kv_block_size: 64,
+        ..Default::default()
+    };
+    let c = Arc::new(
+        EngineBuilder::new()
+            .config(cfg)
+            // Roughly 1 in 5 prefill chunks and 1 in 7 decode steps fail,
+            // on a schedule that is a pure function of (seed, id, call).
+            .faults(11, 5, 7)
+            .build()
+            .unwrap(),
+    );
+    let kv = c.kv.clone();
+    let per_thread = 8u64;
+    let workers: Vec<_> = (0..6u64)
+        .map(|t| {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                let mut resps: Vec<PrefillResponse> = Vec::new();
+                let mut rejected = 0usize;
+                for i in 0..per_thread {
+                    let id = t * 100 + i;
+                    let n = [128usize, 256, 512, 1024][(i % 4) as usize];
+                    let mut req = PrefillRequest::synthetic(id, n, id, AttentionMode::Sparse);
+                    if i % 2 == 0 {
+                        req.max_new_tokens = 8;
+                    }
+                    if i % 3 == 0 {
+                        req.priority = Priority::Batch;
+                    }
+                    if i % 5 == 0 {
+                        req.deadline_ms = Some(2_000);
+                    }
+                    match c.submit(req) {
+                        Ok(handle) => {
+                            if i % 7 == 3 {
+                                handle.cancel();
+                            }
+                            resps.push(handle.wait().unwrap());
+                        }
+                        Err(rej) => {
+                            // Synchronous typed shedding is a legal
+                            // terminal answer under overload.
+                            assert!(rej.retry_after_ms > 0);
+                            rejected += 1;
+                        }
+                    }
+                }
+                (resps, rejected)
+            })
+        })
+        .collect();
+    let mut total = 0usize;
+    let mut all: Vec<PrefillResponse> = Vec::new();
+    for w in workers {
+        let (resps, rejected) = w.join().unwrap();
+        total += resps.len() + rejected;
+        all.extend(resps);
+    }
+    assert_eq!(total, 48, "every submission was answered exactly once");
+    for resp in &all {
+        // Exactly one terminal, typed answer per accepted request: a clean
+        // run reports Done/Stopped, everything else names its failure mode
+        // and carries an error message.
+        if resp.ok {
+            assert!(
+                matches!(resp.outcome, Outcome::Done | Outcome::Stopped),
+                "ok response with outcome {:?}",
+                resp.outcome
+            );
+        } else {
+            assert_ne!(resp.outcome, Outcome::Done, "failures must be typed");
+            assert!(resp.error.is_some(), "failures must carry an error");
+        }
+    }
+    assert!(
+        all.iter().any(|r| r.outcome == Outcome::Failed),
+        "the 1-in-5 fault schedule must have fired"
+    );
+    // The pool drains completely: no leaked reservation from any exit door.
+    assert!(
+        eventually(Duration::from_secs(5), || kv.used() == 0),
+        "paged pool still holds {} blocks after the drain",
+        kv.used()
+    );
+    kv.assert_consistent();
+    // Admission is not wedged: a fresh request still gets a terminal answer.
+    let probe = c
+        .submit(PrefillRequest::synthetic(9_999, 128, 1, AttentionMode::Sparse))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(probe.ok || probe.outcome != Outcome::Done);
+    let c = Arc::try_unwrap(c).ok().expect("all worker clones joined");
+    let snap = c.shutdown();
+    assert!(snap.completed > 0, "the mix must not collapse entirely");
+    kv.assert_consistent();
+    assert_eq!(kv.used(), 0);
+}
+
+/// Cancelling a request whose prefill holds the whole pool frees the
+/// reservation for new work — no eviction, no leak, typed outcome.
+#[test]
+fn cancel_mid_prefill_frees_the_pool_for_new_work() {
+    let cfg = CoordinatorConfig {
+        max_wait_ms: 1,
+        chunk_tokens: 8, // 1024 rows => 128 chunk rounds: plenty to cancel into
+        // Room for exactly one max-bucket request, so the second request
+        // can only admit once the first's reservation is gone.
+        kv_blocks: 16,
+        kv_block_size: 64,
+        kv_prefix_cache: false,
+        ..Default::default()
+    };
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
+    let kv = c.kv.clone();
+    let first = c.submit(PrefillRequest::synthetic(1, 1024, 3, AttentionMode::Sparse)).unwrap();
+    // Wait until the run actually holds its reservation, so the cancel
+    // lands mid-prefill rather than in the queue.
+    assert!(eventually(Duration::from_secs(5), || kv.used() > 0));
+    first.cancel();
+    let second = c.submit(PrefillRequest::synthetic(2, 1024, 4, AttentionMode::Sparse)).unwrap();
+    let r2 = second.wait().unwrap();
+    assert!(r2.ok, "{:?}", r2.error);
+    let r1 = first.wait().unwrap();
+    assert!(!r1.ok);
+    assert_eq!(r1.outcome, Outcome::Cancelled);
+    let snap = c.shutdown();
+    assert_eq!(snap.cancelled, 1);
+    assert_eq!(snap.prefix_evictions, 0, "the freed reservation needed no eviction");
+    kv.assert_consistent();
+    assert_eq!(kv.used(), 0, "no leaked blocks from the cancelled run");
+}
+
+/// Deadlines are enforced at both ends of the lifecycle: an
+/// already-expired request is shed at admission as `deadline_infeasible`,
+/// and a deadline that lapses mid-flight expires the run, returning the
+/// tokens produced so far under a typed `expired` outcome.
+#[test]
+fn deadlines_expire_in_queue_and_in_flight() {
+    let cfg = CoordinatorConfig { max_wait_ms: 1, chunk_tokens: 64, ..Default::default() };
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
+    let kv = c.kv.clone();
+
+    let mut hopeless = PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse);
+    hopeless.deadline_ms = Some(0);
+    let r = c.submit(hopeless).unwrap().wait().unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.outcome, Outcome::Rejected(RejectReason::DeadlineInfeasible));
+
+    // 512 decode steps over a 1024-row context cannot finish in 30 ms; the
+    // deadline check between decode steps expires the run.
+    let mut slow = PrefillRequest::synthetic(2, 1024, 7, AttentionMode::Sparse);
+    slow.max_new_tokens = 512;
+    slow.deadline_ms = Some(30);
+    let r = c.submit(slow).unwrap().wait().unwrap();
+    assert!(!r.ok);
+    assert_eq!(r.outcome, Outcome::Expired);
+    assert!(r.tokens.len() < 512, "expiry must interrupt generation");
+    let snap = c.shutdown();
+    assert_eq!(snap.deadline_expired, 1);
+    kv.assert_consistent();
+    assert_eq!(kv.used(), 0);
+}
+
+/// The thundering-herd conformance drill (in-flight prefix coalescing):
+/// many concurrent identical prompts cost exactly one cold prefill; every
+/// follower is served entirely from the leader's blocks and produces a
+/// bit-identical digest.
+fn herd(backend: &str) {
+    let cfg = CoordinatorConfig {
+        max_wait_ms: 1,
+        chunk_tokens: 64, // 4 chunk rounds: the herd arrives mid-prefill
+        kv_prefix_cache: true,
+        engine: EngineConfig { buckets: vec![256, 1024], ..Default::default() },
+        ..Default::default()
+    };
+    let c = Arc::new(
+        EngineBuilder::new().config(cfg).backend_name(backend).unwrap().build().unwrap(),
+    );
+    let kv = c.kv.clone();
+    let gate = Arc::new(Barrier::new(8));
+    let workers: Vec<_> = (0..8u64)
+        .map(|i| {
+            let c = c.clone();
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                gate.wait();
+                // Identical content (same length and seed): one shared
+                // prefix chain, eight requests.
+                c.submit(PrefillRequest::synthetic(i, 256, 55, AttentionMode::Sparse))
+                    .unwrap()
+                    .wait()
+                    .unwrap()
+            })
+        })
+        .collect();
+    let resps: Vec<PrefillResponse> = workers.into_iter().map(|w| w.join().unwrap()).collect();
+    for r in &resps {
+        assert!(r.ok, "{:?}", r.error);
+        assert_eq!(r.outcome, Outcome::Done);
+    }
+    let cold: Vec<_> = resps.iter().filter(|r| r.cached_rows == 0).collect();
+    assert_eq!(cold.len(), 1, "exactly one cold prefill for the whole herd");
+    for r in resps.iter().filter(|r| r.cached_rows != 0) {
+        assert_eq!(r.cached_rows, 256, "followers are served entirely from cache");
+        assert_eq!(r.chunks, 1, "a full hit needs a single selection-only round");
+    }
+    let leader = &cold[0];
+    for r in &resps {
+        assert_eq!(
+            r.output_digest, leader.output_digest,
+            "coalesced and cold paths must agree bit-for-bit"
+        );
+    }
+    let c = Arc::try_unwrap(c).ok().expect("all herd clones joined");
+    let snap = c.shutdown();
+    assert_eq!(snap.completed, 8);
+    assert!(snap.prefix_hits >= 7, "prefix_hits = {}", snap.prefix_hits);
+    kv.assert_consistent();
+    assert_eq!(kv.used(), 0);
+}
+
+#[test]
+fn stress_thundering_herd_coalesces_on_the_native_backend() {
+    herd("native");
+}
+
+#[test]
+fn thundering_herd_coalesces_on_the_reference_backend() {
+    herd("reference");
+}

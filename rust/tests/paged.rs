@@ -170,7 +170,7 @@ fn single_chunk_paged_equals_contiguous_bit_for_bit() {
 ///    free / live / idle-cached — interleaved with the races and again
 ///    after the drain.
 #[test]
-fn concurrent_prefix_sharing_cow_and_reclaim_stay_consistent() {
+fn stress_concurrent_prefix_sharing_cow_and_reclaim_stay_consistent() {
     const THREADS: u64 = 8;
     const ITERS: u64 = 30;
     const BS: usize = 8;
