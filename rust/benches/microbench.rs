@@ -11,15 +11,25 @@
 //! speedups against the single-thread tiled run and against the seed's
 //! row-serial scalar executor.  Results go to stdout and, machine-readable,
 //! to BENCH_microbench.json (cwd) so later PRs can track the trajectory.
+//!
+//! The SIMD kernel-core sweep (`kernels_sweep`) times each hot kernel with
+//! the dispatched primitives forced to the scalar path vs the default
+//! (portable/wide) path, writes BENCH_kernels.json, and gates the result
+//! against a committed baseline: the dispatched path may not be more than
+//! 15% slower than scalar, and each row's speedup may not fall below 85%
+//! of the baseline's.  `VSPREFILL_BENCH_SMOKE=1` runs only this sweep at
+//! tiny sizes (the CI `bench-smoke` job).
 
 use std::time::Instant;
 
 use vsprefill::attention::flash::flash_attention;
 use vsprefill::indexer::train::{distill, TrainConfig};
 use vsprefill::sparse::merge::block_columns;
+use vsprefill::sparse::VsIndices;
 use vsprefill::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_rowserial};
 use vsprefill::sparse_attn::VsPrefill;
 use vsprefill::synth::{gen_head, SynthConfig};
+use vsprefill::tensor::simd;
 use vsprefill::util::parallel::{configured_threads, with_threads};
 use vsprefill::util::rng::Rng;
 
@@ -54,6 +64,10 @@ struct SweepRow {
 }
 
 fn main() {
+    if std::env::var("VSPREFILL_BENCH_SMOKE").is_ok_and(|v| v == "1") {
+        kernels_sweep(true);
+        return;
+    }
     let n = 1024;
     let mut rng = Rng::new(0);
     let head = gen_head(&mut rng, n, &SynthConfig::default(), 0);
@@ -165,6 +179,8 @@ fn main() {
     }
     write_json(&rows);
 
+    kernels_sweep(false);
+
     chunked_sweep();
 
     decode_sweep();
@@ -186,6 +202,241 @@ fn main() {
 
 fn hw_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+struct KernelRow {
+    kernel: &'static str,
+    n: usize,
+    threads: usize,
+    scalar_ms: f64,
+    simd_ms: f64,
+    speedup_vs_scalar: f64,
+}
+
+/// Time `f` twice: once with the dispatched primitives forced to the
+/// scalar path, once on the default (portable/wide) path.
+fn timed_pair<F: FnMut()>(reps: usize, f: &mut F) -> (f64, f64) {
+    simd::set_forced_path(Some(simd::Path::Scalar));
+    let scalar = time_ms(reps, f);
+    simd::set_forced_path(None);
+    let dispatched = time_ms(reps, f);
+    (scalar, dispatched)
+}
+
+/// SIMD kernel-core sweep (the §Perf gate for the vectorized primitive
+/// layer): scalar-forced vs dispatched timings for the primitives and the
+/// tiled kernels, written to BENCH_kernels.json and compared against a
+/// committed baseline (see `kernels_regression_check`).  `smoke` shrinks
+/// the sizes so the CI job finishes in seconds.
+fn kernels_sweep(smoke: bool) {
+    let mode = if smoke { "smoke" } else { "full" };
+    println!("\nSIMD kernel core: scalar vs dispatched path ({mode} sizes)");
+    println!(
+        "kernel                        n  threads  scalar_ms    simd_ms  speedup  (path: {:?})",
+        simd::active_path()
+    );
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let push = |rows: &mut Vec<KernelRow>, kernel, n, threads, s: f64, v: f64| {
+        println!("{kernel:<26} {n:>6} {threads:>8} {s:>10.3} {v:>10.3} {:>8.2}", s / v);
+        rows.push(KernelRow {
+            kernel,
+            n,
+            threads,
+            scalar_ms: s,
+            simd_ms: v,
+            speedup_vs_scalar: s / v,
+        });
+    };
+
+    // Primitive micro rows (single thread, many short calls batched so each
+    // measurement sits far above timer resolution).
+    let plen = if smoke { 1024 } else { 4096 };
+    let batch = if smoke { 1000 } else { 2000 };
+    let preps = if smoke { 20 } else { 10 };
+    let mut rng = Rng::new(11);
+    let xs: Vec<f32> = (0..plen).map(|_| rng.normal_f32()).collect();
+    let mut ys: Vec<f32> = (0..plen).map(|_| rng.normal_f32()).collect();
+    let (s, v) = timed_pair(preps, &mut || {
+        let mut acc = 0.0f32;
+        for _ in 0..batch {
+            acc += simd::dot(std::hint::black_box(&xs), &ys);
+        }
+        std::hint::black_box(acc);
+    });
+    push(&mut rows, "dot", plen, 1, s, v);
+    let (s, v) = timed_pair(preps, &mut || {
+        for _ in 0..batch {
+            simd::axpy(1e-4, std::hint::black_box(&xs), &mut ys);
+        }
+        std::hint::black_box(&ys);
+    });
+    push(&mut rows, "axpy", plen, 1, s, v);
+    let d = 128usize;
+    let tile = 64usize;
+    let scores: Vec<f32> = (0..tile).map(|i| -0.5 + i as f32 * 1e-2).collect();
+    let vt: Vec<f32> = (0..tile * d).map(|_| rng.normal_f32()).collect();
+    let (mut m, mut sacc) = (0.0f32, 1.0f32);
+    let mut acc = vec![0.0f32; d];
+    let (s, v) = timed_pair(preps, &mut || {
+        for _ in 0..batch / 4 {
+            simd::softmax_accum_tile(
+                std::hint::black_box(&scores),
+                0.14,
+                &vt,
+                d,
+                d,
+                &mut m,
+                &mut sacc,
+                &mut acc,
+            );
+        }
+        std::hint::black_box(&acc);
+    });
+    push(&mut rows, "softmax_accum_tile", tile * d, 1, s, v);
+
+    // Kernel rows: the tiled executors over a hand-built stepped VS index
+    // (static structure; this times the executor, not index selection).
+    let lens: &[usize] = if smoke { &[256, 1024] } else { &[1024, 4096, 16384] };
+    let threads_sweep: &[usize] = if smoke { &[1, 2] } else { &[1, 4, 8] };
+    for &n in lens {
+        let mut r = Rng::new(13);
+        let h = gen_head(&mut r, n, &SynthConfig::default(), 0);
+        let idx = VsIndices::new(
+            (0..n).step_by((n / 128).max(1)).collect(),
+            (0..64.min(n)).collect(),
+        );
+        let reps = if smoke {
+            if n >= 1024 {
+                8
+            } else {
+                20
+            }
+        } else if n >= 16384 {
+            1
+        } else if n >= 4096 {
+            2
+        } else {
+            4
+        };
+        for &t in threads_sweep {
+            let (s, v) = with_threads(t, || {
+                timed_pair(reps, &mut || {
+                    std::hint::black_box(sparse_attention_vs(&h.q, &h.k, &h.v, &idx, 64));
+                })
+            });
+            push(&mut rows, "sparse_attention_vs", n, t, s, v);
+            let (s, v) = with_threads(t, || {
+                timed_pair(reps, &mut || {
+                    std::hint::black_box(flash_attention(&h.q, &h.k, &h.v, 64, 64));
+                })
+            });
+            push(&mut rows, "flash_attention", n, t, s, v);
+        }
+    }
+    simd::set_forced_path(None);
+
+    // Read the committed baseline BEFORE the fresh write lands on the same
+    // default path, then gate and persist.
+    let baseline = read_kernels_baseline();
+    write_kernels_json(&rows, smoke);
+    kernels_regression_check(&rows, baseline.as_ref());
+}
+
+fn baseline_path() -> String {
+    std::env::var("VSPREFILL_BENCH_BASELINE").unwrap_or_else(|_| "BENCH_kernels.json".to_string())
+}
+
+fn read_kernels_baseline() -> Option<vsprefill::util::json::Json> {
+    let path = baseline_path();
+    let text = std::fs::read_to_string(&path).ok()?;
+    match vsprefill::util::json::Json::parse(&text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("(bench baseline {path} unparseable: {e})");
+            None
+        }
+    }
+}
+
+fn write_kernels_json(rows: &[KernelRow], smoke: bool) {
+    let mut s = String::from("{\n  \"bench\": \"kernels\",\n");
+    s.push_str(&format!(
+        "  \"smoke\": {smoke},\n  \"path\": \"{:?}\",\n  \"rows\": [\n",
+        simd::active_path()
+    ));
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"n\": {}, \"threads\": {}, \"scalar_ms\": {:.4}, \
+             \"simd_ms\": {:.4}, \"speedup_vs_scalar\": {:.3}}}{}\n",
+            r.kernel,
+            r.n,
+            r.threads,
+            r.scalar_ms,
+            r.simd_ms,
+            r.speedup_vs_scalar,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_kernels.json", &s) {
+        Ok(()) => println!("\nwrote BENCH_kernels.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_kernels.json: {e}"),
+    }
+}
+
+/// The CI speed floor.  Two gates per row:
+///   1. absolute: the dispatched path may not be >15% slower than scalar
+///      (skipped for rows too fast to time reliably);
+///   2. relative: `speedup_vs_scalar` may not fall below 85% of the
+///      committed baseline's matching (kernel, n, threads) row.
+/// A missing baseline skips gate 2 with a clean message — the first full
+/// run writes the file that later runs are held to.
+fn kernels_regression_check(fresh: &[KernelRow], baseline: Option<&vsprefill::util::json::Json>) {
+    let mut failures: Vec<String> = Vec::new();
+    for f in fresh {
+        if f.scalar_ms >= 0.02 && f.simd_ms > f.scalar_ms * 1.15 {
+            failures.push(format!(
+                "{} n={} t={}: dispatched path {:.3} ms is >15% slower than scalar {:.3} ms",
+                f.kernel, f.n, f.threads, f.simd_ms, f.scalar_ms
+            ));
+        }
+    }
+    match baseline {
+        None => println!("(no bench baseline at {}: ratio check skipped)", baseline_path()),
+        Some(base) => {
+            let rows = base.get("rows").and_then(|r| r.as_arr()).unwrap_or(&[]);
+            let mut compared = 0usize;
+            for f in fresh {
+                for b in rows {
+                    let same = b.get("kernel").and_then(|x| x.as_str()) == Some(f.kernel)
+                        && b.get("n").and_then(|x| x.as_usize()) == Some(f.n)
+                        && b.get("threads").and_then(|x| x.as_usize()) == Some(f.threads);
+                    if !same {
+                        continue;
+                    }
+                    compared += 1;
+                    if let Some(bs) = b.get("speedup_vs_scalar").and_then(|x| x.as_f64()) {
+                        if f.speedup_vs_scalar < 0.85 * bs {
+                            failures.push(format!(
+                                "{} n={} t={}: speedup {:.2} fell below 85% of baseline {:.2}",
+                                f.kernel, f.n, f.threads, f.speedup_vs_scalar, bs
+                            ));
+                        }
+                    }
+                }
+            }
+            println!("bench baseline ratio check: {compared} rows compared vs {}", baseline_path());
+        }
+    }
+    if failures.is_empty() {
+        println!("bench regression check: ok ({} rows)", fresh.len());
+    } else {
+        eprintln!("\nbench regression check FAILED:");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
 }
 
 /// Chunked-vs-monolithic prefill sweep through the serving stack: chunk

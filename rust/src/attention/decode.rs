@@ -12,6 +12,7 @@
 
 use crate::tensor::ops::dot;
 use crate::tensor::paged::PagedKv;
+use crate::tensor::simd::{self, uninit_prefix, with_scratch};
 use crate::tensor::Mat;
 use crate::util::parallel::par_chunks_mut;
 
@@ -34,35 +35,47 @@ pub fn flash_decode_into(q: &[f32], kv: &PagedKv<'_>, block_k: usize, out: &mut 
     }
     let block_k = block_k.max(1);
     let scale = 1.0 / (d as f32).sqrt();
-    let mut scores = vec![0.0f32; block_k];
-    let mut m = NEG_INF;
-    let mut s = 0.0f32;
-    for k0 in (0..n).step_by(block_k) {
-        let bk = block_k.min(n - k0);
-        let mut tile_max = NEG_INF;
-        for (j, sc) in scores[..bk].iter_mut().enumerate() {
-            let x = dot(q, kv.k_row(k0 + j)) * scale;
-            *sc = x;
-            tile_max = tile_max.max(x);
-        }
-        let m_new = m.max(tile_max);
-        let alpha = (m - m_new).exp();
-        if alpha != 1.0 {
-            s *= alpha;
-            out.iter_mut().for_each(|x| *x *= alpha);
-        }
-        for (j, &x) in scores[..bk].iter().enumerate() {
-            let e = (x - m_new).exp();
-            s += e;
-            let vrow = kv.v_row(k0 + j);
-            for c in 0..d {
-                out[c] += e * vrow[c];
+    with_scratch(|sc| {
+        let scores = uninit_prefix(&mut sc.scores, block_k);
+        let mut m = NEG_INF;
+        let mut s = 0.0f32;
+        for k0 in (0..n).step_by(block_k) {
+            let bk = block_k.min(n - k0);
+            let mut tile_max = NEG_INF;
+            for (j, sc) in scores[..bk].iter_mut().enumerate() {
+                let x = dot(q, kv.k_row(k0 + j)) * scale;
+                *sc = x;
+                tile_max = tile_max.max(x);
             }
+            // Fused rescale + accumulate.  V rows are block-table-indirected
+            // and read once each for a single query, so they feed the
+            // primitives row-by-row (no gather pays off here); the running
+            // rescale folds into the first accumulate exactly as in
+            // `simd::softmax_accum_tile`.
+            let m_new = if m >= tile_max { m } else { tile_max };
+            let alpha = (m - m_new).exp();
+            let mut pending = alpha != 1.0;
+            if pending {
+                s *= alpha;
+            }
+            for (j, &x) in scores[..bk].iter().enumerate() {
+                let e = (x - m_new).exp();
+                s += e;
+                let vrow = kv.v_row(k0 + j);
+                if pending {
+                    simd::scale_add(out, alpha, vrow, e);
+                    pending = false;
+                } else {
+                    simd::axpy(e, vrow, out);
+                }
+            }
+            if pending {
+                simd::scale(out, alpha);
+            }
+            m = m_new;
         }
-        m = m_new;
-    }
-    let inv = 1.0 / s;
-    out.iter_mut().for_each(|x| *x *= inv);
+        simd::scale(out, 1.0 / s);
+    });
 }
 
 /// Batched single-query decode over block tables: row `i` of `qs` is the

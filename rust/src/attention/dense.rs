@@ -4,7 +4,10 @@
 use crate::tensor::ops::{matmul, matmul_bt, softmax_inplace};
 use crate::tensor::Mat;
 
-pub const NEG_INF: f32 = -1e30;
+/// Masked-score sentinel; the canonical constant lives in the SIMD layer
+/// ([`crate::tensor::simd::MASKED`]) so masked kernels and the fused
+/// accumulate agree on one value.
+pub const NEG_INF: f32 = crate::tensor::simd::MASKED;
 
 /// Scaled causal scores P/sqrt(d) with -inf above the diagonal.
 pub fn scaled_causal_scores(q: &Mat, k: &Mat) -> Mat {

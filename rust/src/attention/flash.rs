@@ -7,6 +7,7 @@
 
 use crate::tensor::ops::dot;
 use crate::tensor::paged::PagedKv;
+use crate::tensor::simd::{self, lane_stride, softmax_accum_tile, uninit_prefix, with_scratch};
 use crate::tensor::Mat;
 use crate::util::parallel::par_chunks_mut;
 
@@ -28,58 +29,58 @@ pub fn flash_attention(q: &Mat, k: &Mat, v: &Mat, block_q: usize, block_k: usize
     par_chunks_mut(&mut out.data, block_q * d, |blk, out_chunk| {
         let q0 = blk * block_q;
         let bq = out_chunk.len() / d;
-        let mut tile = vec![0.0f32; bq * block_k];
-        let mut m = vec![NEG_INF; bq];
-        let mut s = vec![0.0f32; bq];
-        // out_chunk doubles as the rescaled accumulator until the final
-        // normalization.  Only key blocks at or below the diagonal
-        // contribute: the last admissible column is q0 + bq - 1.
-        for k0 in (0..q0 + bq).step_by(block_k) {
-            let bk = block_k.min(n - k0);
-            // score tile
-            for i in 0..bq {
-                let qrow = q.row(q0 + i);
-                let trow = &mut tile[i * block_k..i * block_k + bk];
-                for j in 0..bk {
-                    trow[j] = if k0 + j <= q0 + i {
-                        dot(qrow, k.row(k0 + j)) * scale
-                    } else {
-                        NEG_INF
-                    };
+        with_scratch(|sc| {
+            // Per-worker scratch: the score tile and per-row streaming state
+            // are reused across all blocks a worker processes.
+            let tile = uninit_prefix(&mut sc.scores, bq * block_k);
+            sc.m.clear();
+            sc.m.resize(bq, NEG_INF);
+            sc.s.clear();
+            sc.s.resize(bq, 0.0);
+            // out_chunk doubles as the rescaled accumulator until the final
+            // normalization.  Only key blocks at or below the diagonal
+            // contribute: the last admissible column is q0 + bq - 1.
+            for k0 in (0..q0 + bq).step_by(block_k) {
+                let bk = block_k.min(n - k0);
+                // score tile
+                for i in 0..bq {
+                    let qrow = q.row(q0 + i);
+                    let trow = &mut tile[i * block_k..i * block_k + bk];
+                    for (j, t) in trow.iter_mut().enumerate() {
+                        *t = if k0 + j <= q0 + i {
+                            dot(qrow, k.row(k0 + j)) * scale
+                        } else {
+                            NEG_INF
+                        };
+                    }
                 }
-            }
-            // online rescale + accumulate
-            for i in 0..bq {
-                let trow = &tile[i * block_k..i * block_k + bk];
-                let tile_max = trow.iter().cloned().fold(NEG_INF, f32::max);
-                if tile_max == NEG_INF {
-                    continue;
-                }
-                let m_new = m[i].max(tile_max);
-                let alpha = (m[i] - m_new).exp();
-                s[i] *= alpha;
-                let arow = &mut out_chunk[i * d..(i + 1) * d];
-                if alpha != 1.0 {
-                    arow.iter_mut().for_each(|x| *x *= alpha);
-                }
-                for j in 0..bk {
-                    if trow[j] == NEG_INF {
+                // fused online rescale + accumulate; V rows are contiguous
+                // here, so the key block's value slab feeds the fused step
+                // directly at stride d (no gather).
+                let vtile = &v.data[k0 * d..(k0 + bk) * d];
+                for i in 0..bq {
+                    let trow = &tile[i * block_k..i * block_k + bk];
+                    let tile_max = trow.iter().cloned().fold(NEG_INF, f32::max);
+                    if tile_max == NEG_INF {
                         continue;
                     }
-                    let e = (trow[j] - m_new).exp();
-                    s[i] += e;
-                    let vrow = v.row(k0 + j);
-                    for t in 0..d {
-                        arow[t] += e * vrow[t];
-                    }
+                    let arow = &mut out_chunk[i * d..(i + 1) * d];
+                    softmax_accum_tile(
+                        trow,
+                        tile_max,
+                        vtile,
+                        d,
+                        d,
+                        &mut sc.m[i],
+                        &mut sc.s[i],
+                        arow,
+                    );
                 }
-                m[i] = m_new;
             }
-        }
-        for i in 0..bq {
-            let inv = 1.0 / s[i];
-            out_chunk[i * d..(i + 1) * d].iter_mut().for_each(|x| *x *= inv);
-        }
+            for i in 0..bq {
+                simd::scale(&mut out_chunk[i * d..(i + 1) * d], 1.0 / sc.s[i]);
+            }
+        });
     });
     out
 }
@@ -110,59 +111,64 @@ pub fn flash_attention_paged(
     let block_k = block_k.max(1);
     let scale = 1.0 / (d as f32).sqrt();
 
+    let dp = lane_stride(d);
     par_chunks_mut(&mut out.data, block_q * d, |blk, out_chunk| {
         let r0 = blk * block_q; // chunk-relative first row
         let bq = out_chunk.len() / d;
         let a0 = q_start + r0; // absolute first row
-        let mut tile = vec![0.0f32; bq * block_k];
-        let mut mrow = vec![NEG_INF; bq];
-        let mut s = vec![0.0f32; bq];
-        // Same key-tile walk as the contiguous executor: the last admissible
-        // column of the block is a0 + bq - 1 (< kv.len by the entry assert).
-        for k0 in (0..a0 + bq).step_by(block_k) {
-            let bk = block_k.min(kv.len - k0);
-            for i in 0..bq {
-                let qrow = q.row(r0 + i);
-                let trow = &mut tile[i * block_k..i * block_k + bk];
-                for (j, t) in trow.iter_mut().enumerate() {
-                    *t = if k0 + j <= a0 + i {
-                        dot(qrow, kv.k_row(k0 + j)) * scale
-                    } else {
-                        NEG_INF
-                    };
+        with_scratch(|sc| {
+            let tile = uninit_prefix(&mut sc.scores, bq * block_k);
+            sc.m.clear();
+            sc.m.resize(bq, NEG_INF);
+            sc.s.clear();
+            sc.s.resize(bq, 0.0);
+            let kt = uninit_prefix(&mut sc.kt, block_k * dp);
+            let vt = uninit_prefix(&mut sc.vt, block_k * dp);
+            // Same key-tile walk as the contiguous executor: the last
+            // admissible column of the block is a0 + bq - 1 (< kv.len by the
+            // entry assert).
+            for k0 in (0..a0 + bq).step_by(block_k) {
+                let bk = block_k.min(kv.len - k0);
+                // One block-table-indirected gather per key block into the
+                // aligned arena; the bq rows below then read contiguously.
+                for j in 0..bk {
+                    kt[j * dp..j * dp + d].copy_from_slice(kv.k_row(k0 + j));
+                    vt[j * dp..j * dp + d].copy_from_slice(kv.v_row(k0 + j));
                 }
-            }
-            for i in 0..bq {
-                let trow = &tile[i * block_k..i * block_k + bk];
-                let tile_max = trow.iter().cloned().fold(NEG_INF, f32::max);
-                if tile_max == NEG_INF {
-                    continue;
+                for i in 0..bq {
+                    let qrow = q.row(r0 + i);
+                    let trow = &mut tile[i * block_k..i * block_k + bk];
+                    for (j, t) in trow.iter_mut().enumerate() {
+                        *t = if k0 + j <= a0 + i {
+                            dot(qrow, &kt[j * dp..j * dp + d]) * scale
+                        } else {
+                            NEG_INF
+                        };
+                    }
                 }
-                let m_new = mrow[i].max(tile_max);
-                let alpha = (mrow[i] - m_new).exp();
-                s[i] *= alpha;
-                let arow = &mut out_chunk[i * d..(i + 1) * d];
-                if alpha != 1.0 {
-                    arow.iter_mut().for_each(|x| *x *= alpha);
-                }
-                for (j, &t) in trow.iter().enumerate() {
-                    if t == NEG_INF {
+                for i in 0..bq {
+                    let trow = &tile[i * block_k..i * block_k + bk];
+                    let tile_max = trow.iter().cloned().fold(NEG_INF, f32::max);
+                    if tile_max == NEG_INF {
                         continue;
                     }
-                    let e = (t - m_new).exp();
-                    s[i] += e;
-                    let vrow = kv.v_row(k0 + j);
-                    for c in 0..d {
-                        arow[c] += e * vrow[c];
-                    }
+                    let arow = &mut out_chunk[i * d..(i + 1) * d];
+                    softmax_accum_tile(
+                        trow,
+                        tile_max,
+                        vt,
+                        dp,
+                        d,
+                        &mut sc.m[i],
+                        &mut sc.s[i],
+                        arow,
+                    );
                 }
-                mrow[i] = m_new;
             }
-        }
-        for i in 0..bq {
-            let inv = 1.0 / s[i];
-            out_chunk[i * d..(i + 1) * d].iter_mut().for_each(|x| *x *= inv);
-        }
+            for i in 0..bq {
+                simd::scale(&mut out_chunk[i * d..(i + 1) * d], 1.0 / sc.s[i]);
+            }
+        });
     });
     out
 }

@@ -45,7 +45,7 @@ use crate::attention::decode::flash_decode_into;
 use crate::indexer::train::{distill, TrainConfig};
 use crate::indexer::{IncrementalScores, Indexer};
 use crate::sparse::VsIndices;
-use crate::sparse_attn::exec::{decode_columns, sparse_decode_vs_into};
+use crate::sparse_attn::exec::{decode_columns_into, sparse_decode_vs_into};
 use crate::sparse_attn::VsPrefill;
 use crate::synth::{gen_head, SynthConfig, SynthHead, SynthStream};
 use crate::tensor::paged::{hash_words, PagedKv, PrefixAux, PrefixChain};
@@ -522,15 +522,24 @@ struct SynthPrefill {
 }
 
 /// Decode-phase scratch (the head is dropped at the transition; the stream
-/// and incremental scores carry over).
+/// and incremental scores carry over).  `a_v` / `cols` are per-run reusable
+/// buffers for the sparse decode path's per-token column selection — one
+/// allocation per run, not per token.
 struct SynthDecode {
     stream: SynthStream,
     inc: IncrementalScores,
+    a_v: Vec<f32>,
+    cols: Vec<usize>,
 }
 
 fn synth_into_decode(scratch: Scratch) -> Scratch {
     let sp = scratch.downcast::<SynthPrefill>().expect("synth prefill scratch");
-    Box::new(SynthDecode { stream: sp.stream, inc: sp.inc })
+    Box::new(SynthDecode {
+        stream: sp.stream,
+        inc: sp.inc,
+        a_v: Vec::new(),
+        cols: Vec::new(),
+    })
 }
 
 /// A quickly-distilled indexer, cached per process (distillation dominates
@@ -834,23 +843,12 @@ fn synth_prefill_chunk(
     }
 }
 
-/// Per-run output slot of one decode step.
-struct DecodeSlot {
-    out: Vec<f32>,
-    ok: bool,
-}
-
-impl DecodeSlot {
-    fn new(d: usize) -> DecodeSlot {
-        DecodeSlot { out: vec![0.0; d], ok: true }
-    }
-}
-
 /// The per-run half of a decode step: synthesize the next (q, k, v) row,
 /// append K/V to the run's paged reservation and — for sparse requests —
 /// refresh the incremental index scores and select this step's columns
 /// (top-k verticals + local window), then run single-query attention into
-/// `slot.out`.  Runs are independent, so callers may fan this across the
+/// `out` (the run's row of the batch output matrix).  Returns false on
+/// failure.  Runs are independent, so callers may fan this across the
 /// worker pool (the native backend does; the reference backend stays
 /// serial).
 fn decode_one(
@@ -858,57 +856,63 @@ fn decode_one(
     cfg: &EngineConfig,
     store: &PagedKvStore,
     run: &mut RunState,
-    slot: &mut DecodeSlot,
-) {
+    out: &mut [f32],
+) -> bool {
     let id = run.id();
     let block_k = cfg.block_q.max(1);
     let Some(acc) = run.decode_mut() else {
-        slot.ok = false;
-        return;
+        return false;
     };
     let sc = acc.scratch.downcast_mut::<SynthDecode>().expect("synth decode scratch");
     let (q, k, v) = sc.stream.next_row();
     if let Err(e) = store.append(id, &k, &v) {
         acc.resp.error = Some(format!("{e:#}"));
-        slot.ok = false;
-        return;
+        return false;
     }
     let Some(view) = store.view(id) else {
         acc.resp.error = Some(format!("request {id} lost its kv reservation mid-decode"));
-        slot.ok = false;
-        return;
+        return false;
     };
     match acc.req.mode {
-        AttentionMode::Dense => flash_decode_into(q.row(0), &view, block_k, &mut slot.out),
+        AttentionMode::Dense => flash_decode_into(q.row(0), &view, block_k, out),
         AttentionMode::Sparse => {
             let ti = Instant::now();
             vsp.indexer.score_chunk(&mut sc.inc, &k, &v);
-            let a_v = sc.inc.finalize_vertical();
-            let cols = decode_columns(&a_v, view.len, cfg.decode_top_k, cfg.decode_window);
+            sc.inc.finalize_vertical_into(&mut sc.a_v);
+            decode_columns_into(
+                &sc.a_v,
+                view.len,
+                cfg.decode_top_k,
+                cfg.decode_window,
+                &mut sc.cols,
+            );
             acc.resp.index_us += ti.elapsed().as_micros() as u64;
-            sparse_decode_vs_into(q.row(0), &view, &cols, &mut slot.out);
+            sparse_decode_vs_into(q.row(0), &view, &sc.cols, out);
         }
     }
+    true
 }
 
-/// The serial tail of a decode step: turn the attended outputs into token
-/// frames and lifecycle transitions, one `DecodeStep` per run.  Requests
-/// whose token matches their `stop_token` finish early; the unused tail
-/// blocks of their KV reservation are reclaimed immediately (the rest is
-/// freed by the scheduler on `Done`).
+/// The serial tail of a decode step: turn the attended outputs (row `i` of
+/// `outs` belongs to run `i`; `oks[i]` is that run's `decode_one` result)
+/// into token frames and lifecycle transitions, one `DecodeStep` per run.
+/// Requests whose token matches their `stop_token` finish early; the
+/// unused tail blocks of their KV reservation are reclaimed immediately
+/// (the rest is freed by the scheduler on `Done`).
 fn finish_decode_round(
     runs: &mut [RunState],
-    slots: Vec<DecodeSlot>,
+    outs: &Mat,
+    oks: &[bool],
     store: &PagedKvStore,
 ) -> Vec<DecodeStep> {
     let now = Instant::now();
     runs.iter_mut()
-        .zip(slots)
-        .map(|(run, slot)| {
-            if !slot.ok {
+        .enumerate()
+        .map(|(i, run)| {
+            if !oks[i] {
                 return DecodeStep::Failed(run.fail_decode());
             }
-            let token = token_from(&slot.out);
+            let token = token_from(outs.row(i));
             let frame = run.emit_token(token, now);
             let stopped = run.request().stop_token == Some(token);
             if stopped || run.generated() >= run.request().max_new_tokens {

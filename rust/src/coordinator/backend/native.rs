@@ -13,13 +13,14 @@ use crate::attention::flash::{flash_attention, flash_attention_paged};
 use crate::indexer::Indexer;
 use crate::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_paged};
 use crate::sparse_attn::VsPrefill;
+use crate::tensor::Mat;
 use crate::util::parallel::par_drain;
 use crate::util::rng::Rng;
 
 use super::{
     decode_one, digest, finish_decode_round, quick_indexer, run_monolithic, selection_pipeline,
     synth_begin, synth_parts, synth_prefill_chunk, synth_prefix_chain, AttentionMode,
-    Capabilities, ChunkStep, DecodeSlot, DecodeStep, EngineConfig, ExecBackend, PagedKvStore,
+    Capabilities, ChunkStep, DecodeStep, EngineConfig, ExecBackend, PagedKvStore,
     PrefillRequest, PrefillResponse, PrefixChain, PrefixHit, RunState,
 };
 
@@ -97,11 +98,18 @@ impl ExecBackend for NativeBackend {
     /// stays serial.
     fn decode_step(&self, runs: &mut [RunState], store: &PagedKvStore) -> Vec<DecodeStep> {
         let d = self.cfg.synth.head_dim.max(1);
-        let mut slots: Vec<DecodeSlot> = runs.iter().map(|_| DecodeSlot::new(d)).collect();
-        let work: Vec<(&mut RunState, &mut DecodeSlot)> =
-            runs.iter_mut().zip(slots.iter_mut()).collect();
-        par_drain(work, |(run, slot)| decode_one(&self.vsp, &self.cfg, store, run, slot));
-        finish_decode_round(runs, slots, store)
+        // One batch output matrix (run i owns row i) instead of a Vec per
+        // run; ok flags ride alongside.
+        let mut outs = Mat::zeros(runs.len(), d);
+        let mut oks = vec![false; runs.len()];
+        let work: Vec<(&mut RunState, (&mut [f32], &mut bool))> = runs
+            .iter_mut()
+            .zip(outs.data.chunks_mut(d).zip(oks.iter_mut()))
+            .collect();
+        par_drain(work, |(run, (out, ok))| {
+            *ok = decode_one(&self.vsp, &self.cfg, store, run, out)
+        });
+        finish_decode_round(runs, &outs, &oks, store)
     }
 
     fn process(&self, req: &PrefillRequest) -> PrefillResponse {

@@ -21,7 +21,7 @@ use crate::util::rng::Rng;
 use super::{
     decode_one, digest, finish_decode_round, quick_indexer, run_monolithic, selection_pipeline,
     synth_begin, synth_parts, synth_prefill_chunk, synth_prefix_chain, AttentionMode,
-    Capabilities, ChunkStep, DecodeSlot, DecodeStep, EngineConfig, ExecBackend, PagedKvStore,
+    Capabilities, ChunkStep, DecodeStep, EngineConfig, ExecBackend, PagedKvStore,
     PrefillRequest, PrefillResponse, PrefixChain, PrefixHit, RunState,
 };
 
@@ -98,11 +98,12 @@ impl ExecBackend for ReferenceBackend {
     /// streams match bit-for-bit), driven one run at a time.
     fn decode_step(&self, runs: &mut [RunState], store: &PagedKvStore) -> Vec<DecodeStep> {
         let d = self.cfg.synth.head_dim.max(1);
-        let mut slots: Vec<DecodeSlot> = runs.iter().map(|_| DecodeSlot::new(d)).collect();
-        for (run, slot) in runs.iter_mut().zip(slots.iter_mut()) {
-            decode_one(&self.vsp, &self.cfg, store, run, slot);
+        let mut outs = Mat::zeros(runs.len(), d);
+        let mut oks = vec![false; runs.len()];
+        for ((run, out), ok) in runs.iter_mut().zip(outs.data.chunks_mut(d)).zip(oks.iter_mut()) {
+            *ok = decode_one(&self.vsp, &self.cfg, store, run, out);
         }
-        finish_decode_round(runs, slots, store)
+        finish_decode_round(runs, &outs, &oks, store)
     }
 
     fn process(&self, req: &PrefillRequest) -> PrefillResponse {
@@ -152,11 +153,7 @@ fn rowserial_dense_rows(q_chunk: &Mat, lo: usize, k: &Mat, v: &Mat) -> Mat {
         let inv = 1.0 / denom;
         let orow = out.row_mut(r);
         for (j, &w) in scores.iter().enumerate() {
-            let vrow = v.row(j);
-            let w = w * inv;
-            for c in 0..d {
-                orow[c] += w * vrow[c];
-            }
+            crate::tensor::simd::axpy(w * inv, v.row(j), orow);
         }
     }
     out

@@ -15,6 +15,7 @@ pub mod loss;
 pub mod train;
 
 use crate::tensor::ops::{dot, silu, softmax_inplace};
+use crate::tensor::simd;
 use crate::tensor::Mat;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -79,14 +80,9 @@ impl Indexer {
                     if xv == 0.0 {
                         continue;
                     }
-                    let wrow = self.wu.row(kk);
-                    for t in 0..h {
-                        prow[t] += xv * wrow[t];
-                    }
+                    simd::axpy(xv, self.wu.row(kk), prow);
                 }
-                for t in 0..h {
-                    prow[t] += self.bu[t];
-                }
+                simd::axpy(1.0, &self.bu, prow);
             }
         });
         let z = Mat::from_fn(pre.rows, h, |i, t| silu(pre.at(i, t)));
@@ -198,9 +194,18 @@ impl IncrementalScores {
     /// local window at decode), so skip the slash clone + softmax.
     /// Identical to `finalize().0`.
     pub fn finalize_vertical(&self) -> Vec<f32> {
-        let mut av = self.logit_v.clone();
-        softmax_inplace(&mut av);
+        let mut av = Vec::new();
+        self.finalize_vertical_into(&mut av);
         av
+    }
+
+    /// [`finalize_vertical`](Self::finalize_vertical) into a caller-owned
+    /// buffer — the continuous-batching decode loop calls this once per
+    /// token per run and reuses one buffer instead of allocating.
+    pub fn finalize_vertical_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(&self.logit_v);
+        softmax_inplace(out);
     }
 
     /// The raw per-position (vertical, slash) logits accumulated so far —

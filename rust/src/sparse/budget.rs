@@ -47,10 +47,33 @@ pub fn cumulative_threshold_k(scores: &[f32], tau: f32, min_k: usize, cap: usize
 
 /// Top-k indices of a score vector (Eq. 19), ascending order.
 pub fn topk_indices(scores: &[f32], k: usize) -> Vec<usize> {
-    let mut idx = argsort_desc(scores);
-    idx.truncate(k);
-    idx.sort_unstable();
+    let mut idx = Vec::new();
+    topk_indices_into(scores, k, &mut idx);
     idx
+}
+
+/// [`topk_indices`] into a caller-owned buffer, using an O(n) partial
+/// selection (`select_nth_unstable_by`) instead of a full sort.  Ties break
+/// by ascending index — exactly the selection a stable
+/// [`argsort_desc`]-then-truncate makes, so the chosen index *set* is
+/// identical to the historical full-sort implementation.
+pub fn topk_indices_into(scores: &[f32], k: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let k = k.min(scores.len());
+    if k == 0 {
+        return;
+    }
+    out.extend(0..scores.len());
+    if k < scores.len() {
+        out.select_nth_unstable_by(k - 1, |&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        out.truncate(k);
+    }
+    out.sort_unstable();
 }
 
 /// Full Eq. 18-19 selection.  `caps` bound the budgets (the AOT artifacts
@@ -119,6 +142,20 @@ mod tests {
         let s = [0.2f32; 10];
         assert_eq!(cumulative_threshold_k(&s, 1.0, 1, 4), 4);
         assert_eq!(cumulative_threshold_k(&s, 0.0, 3, 10), 3);
+    }
+
+    #[test]
+    fn topk_matches_full_sort_selection() {
+        // Tie-heavy input: the partial selection must pick the same index
+        // set the stable full sort + truncate picked (lowest indices win
+        // among equal scores).
+        let s = [0.5f32, 0.9, 0.5, 0.1, 0.9, 0.5];
+        for k in 0..=s.len() + 1 {
+            let mut want = argsort_desc(&s);
+            want.truncate(k);
+            want.sort_unstable();
+            assert_eq!(topk_indices(&s, k), want, "k={k}");
+        }
     }
 
     #[test]

@@ -57,12 +57,22 @@ fn diagonal_split(a: &[usize], b: &[usize], diag: usize) -> (usize, usize) {
 /// segments via diagonal search, merges each independently (parallelizable),
 /// then concatenates with boundary dedup.  Equivalent to `merge_union`.
 pub fn merge_path_union(a: &[usize], b: &[usize], parts: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    merge_path_union_into(a, b, parts, &mut out);
+    out
+}
+
+/// [`merge_path_union`] into a caller-owned buffer (cleared first) — the
+/// per-block column unions in the hot executors reuse one buffer per
+/// worker instead of allocating per block.
+pub fn merge_path_union_into(a: &[usize], b: &[usize], parts: usize, out: &mut Vec<usize>) {
+    out.clear();
     let total = a.len() + b.len();
     if total == 0 {
-        return Vec::new();
+        return;
     }
     let parts = parts.clamp(1, total);
-    let mut out = Vec::with_capacity(total);
+    out.reserve(total);
     let mut scratch = Vec::new();
     let mut prev = (0usize, 0usize);
     for p in 1..=parts {
@@ -76,7 +86,6 @@ pub fn merge_path_union(a: &[usize], b: &[usize], parts: usize) -> Vec<usize> {
         }
         prev = cur;
     }
-    out
 }
 
 /// Columns admissible for the query block [row0, row0+bq) given vertical
@@ -90,6 +99,20 @@ pub fn block_columns(
     bq: usize,
     n: usize,
 ) -> Vec<usize> {
+    let mut out = Vec::new();
+    block_columns_into(vertical, slash, row0, bq, n, &mut out);
+    out
+}
+
+/// [`block_columns`] into a caller-owned buffer (cleared first).
+pub fn block_columns_into(
+    vertical: &[usize],
+    slash: &[usize],
+    row0: usize,
+    bq: usize,
+    n: usize,
+    out: &mut Vec<usize>,
+) {
     let row_hi = (row0 + bq - 1).min(n - 1);
     let mut vcols: Vec<usize> = vertical.iter().cloned().filter(|&j| j <= row_hi).collect();
     vcols.sort_unstable();
@@ -115,7 +138,7 @@ pub fn block_columns(
     for (lo, hi) in merged {
         scols.extend(lo..=hi);
     }
-    merge_path_union(&vcols, &scols, 4)
+    merge_path_union_into(&vcols, &scols, 4, out);
 }
 
 #[cfg(test)]

@@ -6,11 +6,18 @@
 //! streaming softmax over column sub-tiles with per-row causal + membership
 //! masking.  Query blocks fan out across the worker pool
 //! (`util::parallel`), each worker owning an exclusive tile of the output.
+//!
+//! Inner loops run on the SIMD primitive layer (`tensor::simd`): scores via
+//! `dot`, the streaming rescale+accumulate via `softmax_accum_tile`, and
+//! the K/V gathers land in per-worker lane-aligned arenas
+//! (`tensor::simd::Scratch`, row stride `lane_stride(d)`) reused across
+//! blocks instead of reallocated per block.
 
-use crate::sparse::merge::block_columns;
+use crate::sparse::merge::block_columns_into;
 use crate::sparse::VsIndices;
 use crate::tensor::ops::dot;
 use crate::tensor::paged::PagedKv;
+use crate::tensor::simd::{self, lane_stride, softmax_accum_tile, uninit_prefix, with_scratch};
 use crate::tensor::Mat;
 use crate::util::parallel::par_chunks_mut;
 
@@ -50,78 +57,77 @@ pub fn sparse_attention_vs(q: &Mat, k: &Mat, v: &Mat, idx: &VsIndices, bq: usize
         }
     }
 
+    let dp = lane_stride(d); // lane-aligned arena row stride
     par_chunks_mut(&mut out.data, bq * d, |blk, out_chunk| {
         let q0 = blk * bq;
         let rows = out_chunk.len() / d;
-        let cols = block_columns(&idx.vertical, &idx.slash, q0, rows, n);
-        // Streaming state: running max and sum-exp per row; out_chunk itself
-        // is the (rescaled) accumulator.
-        let mut m = vec![NEG_INF; rows];
-        let mut s = vec![0.0f32; rows];
-        let mut kt = vec![0.0f32; COL_TILE * d];
-        let mut vt = vec![0.0f32; COL_TILE * d];
-        let mut scores = vec![0.0f32; COL_TILE];
-        for c0 in (0..cols.len()).step_by(COL_TILE) {
-            let tile = &cols[c0..(c0 + COL_TILE).min(cols.len())];
-            // Contiguous gather of the sub-tile's K/V rows.
-            for (t, &j) in tile.iter().enumerate() {
-                kt[t * d..(t + 1) * d].copy_from_slice(k.row(j));
-                vt[t * d..(t + 1) * d].copy_from_slice(v.row(j));
-            }
-            for r in 0..rows {
-                let i = q0 + r;
-                if tile[0] > i {
-                    continue; // the whole sub-tile is above row i's frontier
+        // Per-worker scratch: one allocation set per worker thread, reused
+        // across every block the worker processes.
+        with_scratch(|sc| {
+            block_columns_into(&idx.vertical, &idx.slash, q0, rows, n, &mut sc.cols);
+            let cols = &sc.cols;
+            // Streaming state: running max and sum-exp per row; out_chunk
+            // itself is the (rescaled) accumulator.
+            sc.m.clear();
+            sc.m.resize(rows, NEG_INF);
+            sc.s.clear();
+            sc.s.resize(rows, 0.0);
+            let kt = uninit_prefix(&mut sc.kt, COL_TILE * dp);
+            let vt = uninit_prefix(&mut sc.vt, COL_TILE * dp);
+            let scores = uninit_prefix(&mut sc.scores, COL_TILE);
+            for c0 in (0..cols.len()).step_by(COL_TILE) {
+                let tile = &cols[c0..(c0 + COL_TILE).min(cols.len())];
+                // Gather the sub-tile's K/V rows into the aligned arena.
+                for (t, &j) in tile.iter().enumerate() {
+                    kt[t * dp..t * dp + d].copy_from_slice(k.row(j));
+                    vt[t * dp..t * dp + d].copy_from_slice(v.row(j));
                 }
-                let lim = tile.partition_point(|&j| j <= i);
-                let qrow = q.row(i);
-                // Pass 1: score the row's admissible cells of this sub-tile.
-                let mut tile_max = NEG_INF;
-                for (t, &j) in tile[..lim].iter().enumerate() {
-                    if vbit[j] || sbit[i - j] {
-                        let x = dot(qrow, &kt[t * d..(t + 1) * d]) * scale;
-                        scores[t] = x;
-                        tile_max = tile_max.max(x);
-                    } else {
-                        scores[t] = NEG_INF;
+                for r in 0..rows {
+                    let i = q0 + r;
+                    if tile[0] > i {
+                        continue; // the whole sub-tile is above row i's frontier
                     }
-                }
-                if tile_max == NEG_INF {
-                    continue;
-                }
-                // Pass 2: online rescale + accumulate into the output tile.
-                let m_new = m[r].max(tile_max);
-                let alpha = (m[r] - m_new).exp();
-                let arow = &mut out_chunk[r * d..(r + 1) * d];
-                if alpha != 1.0 {
-                    s[r] *= alpha;
-                    arow.iter_mut().for_each(|x| *x *= alpha);
-                }
-                for (t, &x) in scores[..lim].iter().enumerate() {
-                    if x == NEG_INF {
+                    let lim = tile.partition_point(|&j| j <= i);
+                    let qrow = q.row(i);
+                    // Pass 1: score the row's admissible cells of this sub-tile.
+                    let mut tile_max = NEG_INF;
+                    for (t, &j) in tile[..lim].iter().enumerate() {
+                        if vbit[j] || sbit[i - j] {
+                            let x = dot(qrow, &kt[t * dp..t * dp + d]) * scale;
+                            scores[t] = x;
+                            tile_max = tile_max.max(x);
+                        } else {
+                            scores[t] = NEG_INF;
+                        }
+                    }
+                    if tile_max == NEG_INF {
                         continue;
                     }
-                    let e = (x - m_new).exp();
-                    s[r] += e;
-                    let vrow = &vt[t * d..(t + 1) * d];
-                    for c in 0..d {
-                        arow[c] += e * vrow[c];
-                    }
+                    // Pass 2: fused online rescale + accumulate.
+                    let arow = &mut out_chunk[r * d..(r + 1) * d];
+                    softmax_accum_tile(
+                        &scores[..lim],
+                        tile_max,
+                        vt,
+                        dp,
+                        d,
+                        &mut sc.m[r],
+                        &mut sc.s[r],
+                        arow,
+                    );
                 }
-                m[r] = m_new;
             }
-        }
-        // Finalize: normalize, or fall back to the diagonal cell for rows
-        // with no admissible column (possible only when offset 0 missing).
-        for r in 0..rows {
-            let arow = &mut out_chunk[r * d..(r + 1) * d];
-            if m[r] == NEG_INF {
-                arow.copy_from_slice(v.row(q0 + r));
-            } else {
-                let inv = 1.0 / s[r];
-                arow.iter_mut().for_each(|x| *x *= inv);
+            // Finalize: normalize, or fall back to the diagonal cell for rows
+            // with no admissible column (possible only when offset 0 missing).
+            for r in 0..rows {
+                let arow = &mut out_chunk[r * d..(r + 1) * d];
+                if sc.m[r] == NEG_INF {
+                    arow.copy_from_slice(v.row(q0 + r));
+                } else {
+                    simd::scale(arow, 1.0 / sc.s[r]);
+                }
             }
-        }
+        });
     });
     out
 }
@@ -160,73 +166,70 @@ pub fn sparse_attention_vs_paged(
         }
     }
 
+    let dp = lane_stride(d);
     par_chunks_mut(&mut out.data, bq * d, |blk, out_chunk| {
         let r0 = blk * bq; // chunk-relative
         let rows = out_chunk.len() / d;
         let a0 = q_start + r0; // absolute
-        let cols = block_columns(&idx.vertical, &idx.slash, a0, rows, n);
-        let mut mrow = vec![NEG_INF; rows];
-        let mut s = vec![0.0f32; rows];
-        let mut kt = vec![0.0f32; COL_TILE * d];
-        let mut vt = vec![0.0f32; COL_TILE * d];
-        let mut scores = vec![0.0f32; COL_TILE];
-        for c0 in (0..cols.len()).step_by(COL_TILE) {
-            let tile = &cols[c0..(c0 + COL_TILE).min(cols.len())];
-            // Gather through the block table instead of contiguous rows.
-            for (t, &j) in tile.iter().enumerate() {
-                kt[t * d..(t + 1) * d].copy_from_slice(kv.k_row(j));
-                vt[t * d..(t + 1) * d].copy_from_slice(kv.v_row(j));
-            }
-            for r in 0..rows {
-                let i = a0 + r;
-                if tile[0] > i {
-                    continue;
+        with_scratch(|sc| {
+            block_columns_into(&idx.vertical, &idx.slash, a0, rows, n, &mut sc.cols);
+            let cols = &sc.cols;
+            sc.m.clear();
+            sc.m.resize(rows, NEG_INF);
+            sc.s.clear();
+            sc.s.resize(rows, 0.0);
+            let kt = uninit_prefix(&mut sc.kt, COL_TILE * dp);
+            let vt = uninit_prefix(&mut sc.vt, COL_TILE * dp);
+            let scores = uninit_prefix(&mut sc.scores, COL_TILE);
+            for c0 in (0..cols.len()).step_by(COL_TILE) {
+                let tile = &cols[c0..(c0 + COL_TILE).min(cols.len())];
+                // Gather through the block table instead of contiguous rows.
+                for (t, &j) in tile.iter().enumerate() {
+                    kt[t * dp..t * dp + d].copy_from_slice(kv.k_row(j));
+                    vt[t * dp..t * dp + d].copy_from_slice(kv.v_row(j));
                 }
-                let lim = tile.partition_point(|&j| j <= i);
-                let qrow = q.row(r0 + r);
-                let mut tile_max = NEG_INF;
-                for (t, &j) in tile[..lim].iter().enumerate() {
-                    if vbit[j] || sbit[i - j] {
-                        let x = dot(qrow, &kt[t * d..(t + 1) * d]) * scale;
-                        scores[t] = x;
-                        tile_max = tile_max.max(x);
-                    } else {
-                        scores[t] = NEG_INF;
-                    }
-                }
-                if tile_max == NEG_INF {
-                    continue;
-                }
-                let m_new = mrow[r].max(tile_max);
-                let alpha = (mrow[r] - m_new).exp();
-                let arow = &mut out_chunk[r * d..(r + 1) * d];
-                if alpha != 1.0 {
-                    s[r] *= alpha;
-                    arow.iter_mut().for_each(|x| *x *= alpha);
-                }
-                for (t, &x) in scores[..lim].iter().enumerate() {
-                    if x == NEG_INF {
+                for r in 0..rows {
+                    let i = a0 + r;
+                    if tile[0] > i {
                         continue;
                     }
-                    let e = (x - m_new).exp();
-                    s[r] += e;
-                    let vrow = &vt[t * d..(t + 1) * d];
-                    for c in 0..d {
-                        arow[c] += e * vrow[c];
+                    let lim = tile.partition_point(|&j| j <= i);
+                    let qrow = q.row(r0 + r);
+                    let mut tile_max = NEG_INF;
+                    for (t, &j) in tile[..lim].iter().enumerate() {
+                        if vbit[j] || sbit[i - j] {
+                            let x = dot(qrow, &kt[t * dp..t * dp + d]) * scale;
+                            scores[t] = x;
+                            tile_max = tile_max.max(x);
+                        } else {
+                            scores[t] = NEG_INF;
+                        }
                     }
+                    if tile_max == NEG_INF {
+                        continue;
+                    }
+                    let arow = &mut out_chunk[r * d..(r + 1) * d];
+                    softmax_accum_tile(
+                        &scores[..lim],
+                        tile_max,
+                        vt,
+                        dp,
+                        d,
+                        &mut sc.m[r],
+                        &mut sc.s[r],
+                        arow,
+                    );
                 }
-                mrow[r] = m_new;
             }
-        }
-        for r in 0..rows {
-            let arow = &mut out_chunk[r * d..(r + 1) * d];
-            if mrow[r] == NEG_INF {
-                arow.copy_from_slice(kv.v_row(a0 + r));
-            } else {
-                let inv = 1.0 / s[r];
-                arow.iter_mut().for_each(|x| *x *= inv);
+            for r in 0..rows {
+                let arow = &mut out_chunk[r * d..(r + 1) * d];
+                if sc.m[r] == NEG_INF {
+                    arow.copy_from_slice(kv.v_row(a0 + r));
+                } else {
+                    simd::scale(arow, 1.0 / sc.s[r]);
+                }
             }
-        }
+        });
     });
     out
 }
@@ -251,16 +254,32 @@ pub fn sparse_attention_vs_paged(
 /// reinterpreted, so a deployment asking for an unsupported budget finds
 /// out at load time, not from quietly different attention.
 pub fn decode_columns(a_v: &[f32], n: usize, top_k: usize, window: usize) -> Vec<usize> {
+    let mut cols = Vec::new();
+    decode_columns_into(a_v, n, top_k, window, &mut cols);
+    cols
+}
+
+/// [`decode_columns`] into a caller-owned buffer (the continuous-batching
+/// decode loop reuses one per run).  Top-k selection is a partial
+/// `select_nth_unstable` pass ([`crate::sparse::budget::topk_indices_into`])
+/// — no full sort of the score vector per token.
+pub fn decode_columns_into(
+    a_v: &[f32],
+    n: usize,
+    top_k: usize,
+    window: usize,
+    cols: &mut Vec<usize>,
+) {
+    cols.clear();
     let n = n.min(a_v.len());
     if n == 0 {
-        return Vec::new();
+        return;
     }
-    let mut cols = crate::sparse::budget::topk_indices(&a_v[..n], top_k.min(n));
+    crate::sparse::budget::topk_indices_into(&a_v[..n], top_k.min(n), cols);
     let w0 = n.saturating_sub(window.max(1));
     cols.extend(w0..n);
     cols.sort_unstable();
     cols.dedup();
-    cols
 }
 
 /// Single-query sparse decode through the paged store: the newest query
@@ -282,26 +301,24 @@ pub fn sparse_decode_vs_into(q: &[f32], kv: &PagedKv<'_>, cols: &[usize], out: &
         return;
     }
     let scale = 1.0 / (d as f32).sqrt();
-    let mut scores = Vec::with_capacity(cols.len());
-    let mut m = NEG_INF;
-    for &j in cols {
-        let x = dot(q, kv.k_row(j)) * scale;
-        scores.push(x);
-        m = m.max(x);
-    }
-    let mut s = 0.0f32;
-    for x in scores.iter_mut() {
-        *x = (*x - m).exp();
-        s += *x;
-    }
-    let inv = 1.0 / s;
-    for (t, &j) in cols.iter().enumerate() {
-        let w = scores[t] * inv;
-        let vrow = kv.v_row(j);
-        for c in 0..d {
-            out[c] += w * vrow[c];
+    with_scratch(|sc| {
+        sc.scores.clear();
+        let mut m = NEG_INF;
+        for &j in cols {
+            let x = dot(q, kv.k_row(j)) * scale;
+            sc.scores.push(x);
+            m = m.max(x);
         }
-    }
+        let mut s = 0.0f32;
+        for x in sc.scores.iter_mut() {
+            *x = (*x - m).exp();
+            s += *x;
+        }
+        let inv = 1.0 / s;
+        for (t, &j) in cols.iter().enumerate() {
+            simd::axpy(sc.scores[t] * inv, kv.v_row(j), out);
+        }
+    });
 }
 
 /// Owned-result wrapper over [`sparse_decode_vs_into`] (tests, benches).
@@ -380,11 +397,7 @@ pub fn sparse_attention_vs_rowserial_rows(
         let inv = 1.0 / denom;
         let orow = out.row_mut(r);
         for (t, &j) in cand.iter().enumerate() {
-            let w = scores[t] * inv;
-            let vrow = v.row(j);
-            for c in 0..d {
-                orow[c] += w * vrow[c];
-            }
+            simd::axpy(scores[t] * inv, v.row(j), orow);
         }
     }
     out
@@ -423,53 +436,55 @@ pub fn sparse_attention_blocks(
         kbs.dedup();
     }
 
+    let dp = lane_stride(d);
     par_chunks_mut(&mut out.data, block * d, |qb, out_chunk| {
         let q0 = qb * block;
         let rows = out_chunk.len() / d;
-        // Expand kept key blocks into the block's sorted column list and
-        // gather contiguous K/V tiles.
-        let cols: Vec<usize> = kept_blocks[qb]
-            .iter()
-            .flat_map(|&kb| kb * block..((kb + 1) * block).min(n))
-            .take_while(|&j| j <= q0 + rows - 1)
-            .collect();
-        let u = cols.len();
-        let mut kt = vec![0.0f32; u * d];
-        let mut vt = vec![0.0f32; u * d];
-        for (t, &j) in cols.iter().enumerate() {
-            kt[t * d..(t + 1) * d].copy_from_slice(k.row(j));
-            vt[t * d..(t + 1) * d].copy_from_slice(v.row(j));
-        }
-        let mut scores = vec![0.0f32; u];
-        for r in 0..rows {
-            let i = q0 + r;
-            let lim = cols.partition_point(|&j| j <= i);
-            let orow = &mut out_chunk[r * d..(r + 1) * d];
-            if lim == 0 {
-                orow.copy_from_slice(v.row(i));
-                continue;
+        with_scratch(|sc| {
+            // Expand kept key blocks into the block's sorted column list and
+            // gather K/V tiles into the aligned per-worker arena.
+            sc.cols.clear();
+            sc.cols.extend(
+                kept_blocks[qb]
+                    .iter()
+                    .flat_map(|&kb| kb * block..((kb + 1) * block).min(n))
+                    .take_while(|&j| j <= q0 + rows - 1),
+            );
+            let cols = &sc.cols;
+            let u = cols.len();
+            let kt = uninit_prefix(&mut sc.kt, u * dp);
+            let vt = uninit_prefix(&mut sc.vt, u * dp);
+            for (t, &j) in cols.iter().enumerate() {
+                kt[t * dp..t * dp + d].copy_from_slice(k.row(j));
+                vt[t * dp..t * dp + d].copy_from_slice(v.row(j));
             }
-            let qrow = q.row(i);
-            let mut m = NEG_INF;
-            for t in 0..lim {
-                let x = dot(qrow, &kt[t * d..(t + 1) * d]) * scale;
-                scores[t] = x;
-                m = m.max(x);
-            }
-            let mut denom = 0.0f32;
-            for x in scores[..lim].iter_mut() {
-                *x = (*x - m).exp();
-                denom += *x;
-            }
-            let inv = 1.0 / denom;
-            for t in 0..lim {
-                let w = scores[t] * inv;
-                let vrow = &vt[t * d..(t + 1) * d];
-                for c in 0..d {
-                    orow[c] += w * vrow[c];
+            let scores = uninit_prefix(&mut sc.scores, u);
+            for r in 0..rows {
+                let i = q0 + r;
+                let lim = cols.partition_point(|&j| j <= i);
+                let orow = &mut out_chunk[r * d..(r + 1) * d];
+                if lim == 0 {
+                    orow.copy_from_slice(v.row(i));
+                    continue;
+                }
+                let qrow = q.row(i);
+                let mut m = NEG_INF;
+                for t in 0..lim {
+                    let x = dot(qrow, &kt[t * dp..t * dp + d]) * scale;
+                    scores[t] = x;
+                    m = m.max(x);
+                }
+                let mut denom = 0.0f32;
+                for x in scores[..lim].iter_mut() {
+                    *x = (*x - m).exp();
+                    denom += *x;
+                }
+                let inv = 1.0 / denom;
+                for t in 0..lim {
+                    simd::axpy(scores[t] * inv, &vt[t * dp..t * dp + d], orow);
                 }
             }
-        }
+        });
     });
     out
 }
@@ -518,6 +533,7 @@ pub fn masked_attention_ref(q: &Mat, k: &Mat, v: &Mat, keep: impl Fn(usize, usiz
 mod tests {
     use super::*;
     use crate::attention::dense::dense_attention;
+    use crate::sparse::merge::block_columns;
     use crate::util::parallel::with_threads;
     use crate::util::rng::Rng;
 

@@ -12,7 +12,8 @@ pub mod vsprefill;
 
 pub use cost::{CostModel, MethodCost};
 pub use exec::{
-    decode_columns, sparse_attention_blocks, sparse_attention_vs, sparse_attention_vs_paged,
-    sparse_attention_vs_rowserial, sparse_decode_vs_into, sparse_decode_vs_paged,
+    decode_columns, decode_columns_into, sparse_attention_blocks, sparse_attention_vs,
+    sparse_attention_vs_paged, sparse_attention_vs_rowserial, sparse_decode_vs_into,
+    sparse_decode_vs_paged,
 };
 pub use vsprefill::VsPrefill;

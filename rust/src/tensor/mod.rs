@@ -8,6 +8,7 @@
 pub mod ops;
 pub mod paged;
 pub mod rope;
+pub mod simd;
 
 /// Dense row-major matrix of f32.
 #[derive(Clone, Debug, PartialEq)]

@@ -6,7 +6,12 @@
 
 use super::Mat;
 
+use crate::tensor::simd;
 use crate::util::parallel::par_chunks_mut;
+
+/// Inner product, routed through the SIMD primitive layer
+/// ([`crate::tensor::simd::dot`]).
+pub use crate::tensor::simd::dot;
 
 /// Below this many multiply-adds the scoped fan-out costs more than it
 /// saves; run serial.
@@ -43,9 +48,7 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
                     continue;
                 }
                 let brow = &b.data[kk * n..(kk + 1) * n];
-                for j in 0..n {
-                    crow[j] += aik * brow[j];
-                }
+                simd::axpy(aik, brow, crow);
             }
         }
     };
@@ -80,28 +83,6 @@ pub fn matmul_bt(a: &Mat, b: &Mat) -> Mat {
         par_chunks_mut(&mut c.data, band * n, |ci, chunk| fill_rows(ci * band, chunk));
     }
     c
-}
-
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    // 4-way unrolled accumulation; autovectorizes well.
-    let chunks = a.len() / 4 * 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0, 0.0, 0.0);
-    let mut i = 0;
-    while i < chunks {
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-        i += 4;
-    }
-    acc += s0 + s1 + s2 + s3;
-    for k in chunks..a.len() {
-        acc += a[k] * b[k];
-    }
-    acc
 }
 
 /// In-place numerically-stable softmax over a slice.

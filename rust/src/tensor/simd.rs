@@ -1,0 +1,630 @@
+//! SIMD-width vector primitives — the single inner-loop layer every hot
+//! kernel routes through.
+//!
+//! Three implementations of each primitive sit behind one runtime-selected
+//! dispatch:
+//!
+//!   * `scalar`   — plain one-element loops.  The parity baseline the
+//!     property tests and the `kernels` microbench compare against; also
+//!     what `VSPREFILL_SIMD=scalar` forces at runtime.
+//!   * portable   — lane-chunked stable Rust: `chunks_exact(LANES)` over
+//!     `&[f32; LANES]` array views with per-lane accumulators and explicit
+//!     remainder tails.  The fixed-width array shape is what LLVM's
+//!     autovectorizer reliably turns into vector code on any target, which
+//!     matters for reductions (`dot`): a plain `acc += a*b` loop cannot be
+//!     vectorized without reassociating floating-point adds, but eight
+//!     independent lane accumulators can.
+//!   * wide       — `x86_64` AVX2 + FMA intrinsics, selected only after
+//!     `is_x86_feature_detected!` confirms support.  Uses fused
+//!     multiply-add, so results can differ from the portable path in the
+//!     last bits — every caller-visible contract is tolerance-based
+//!     (parity within 1e-5), and within one process the selected path is
+//!     fixed, so bit-exactness *across executors in the same process*
+//!     (chunked vs monolithic digests, fragmented vs clean block tables)
+//!     is preserved: both sides run the same primitives on the same path.
+//!
+//! Path selection: `VSPREFILL_SIMD` (`scalar` | `portable` | `wide`)
+//! overrides detection; benches force paths with [`set_forced_path`].
+//!
+//! The module also owns the per-worker tile [`Scratch`] (the `kt`/`vt`
+//! gather arenas, score tiles, and per-row streaming-softmax state) so hot
+//! loops allocate once per worker thread instead of once per block, and the
+//! fused [`softmax_accum_tile`] — the flash-style running (max, sumexp,
+//! acc) rescale and the weighted-V accumulation in one pass over a gathered
+//! tile.
+//!
+//! Alignment contract: tile arenas are laid out at a row stride of
+//! [`lane_stride`]`(d)` (head dim rounded up to the next lane multiple) so
+//! every gathered row starts on a lane boundary and the trailing pad is
+//! never read — primitives always operate on the exact `d`-prefix of a row,
+//! which keeps their summation shape (and so their results) independent of
+//! the padding.
+//!
+//! Adding a primitive: write the `scalar` version first (it is the spec),
+//! add a portable lane-chunked twin and, if profitable, a `wide` twin, then
+//! dispatch on [`active_path`] and extend the parity tests in
+//! `tests/simd_kernels.rs`.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Masked-score sentinel shared by every masked kernel (re-exported as
+/// `attention::dense::NEG_INF`).  A large-but-finite value rather than
+/// `f32::NEG_INFINITY` so `exp(x - m)` underflows to exactly 0.0 instead of
+/// producing NaN when an all-masked row subtracts it from itself.
+pub const MASKED: f32 = -1e30;
+
+/// Fixed lane width of the portable path and the arena layout, matching one
+/// 256-bit vector of f32.
+pub const LANES: usize = 8;
+
+/// `d` rounded up to the next lane multiple — the row stride of the aligned
+/// tile arenas.
+#[inline]
+pub fn lane_stride(d: usize) -> usize {
+    d.div_ceil(LANES) * LANES
+}
+
+/// Which implementation the dispatched primitives run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Path {
+    /// Plain one-element loops (the parity baseline).
+    Scalar,
+    /// Lane-chunked stable Rust (autovectorization-guaranteed shape).
+    Portable,
+    /// Runtime-detected AVX2 + FMA intrinsics (`x86_64` only; falls back to
+    /// `Portable` elsewhere or when the CPU lacks the features).
+    Wide,
+}
+
+/// Cached path: 0 = unresolved, else `encode(path)`.
+static PATH: AtomicU8 = AtomicU8::new(0);
+
+fn encode(p: Path) -> u8 {
+    match p {
+        Path::Scalar => 1,
+        Path::Portable => 2,
+        Path::Wide => 3,
+    }
+}
+
+/// The implementation the dispatched primitives currently run.  Resolved
+/// once per process (honoring `VSPREFILL_SIMD`) and cached.
+#[inline]
+pub fn active_path() -> Path {
+    match PATH.load(Ordering::Relaxed) {
+        1 => Path::Scalar,
+        2 => Path::Portable,
+        3 => Path::Wide,
+        _ => resolve(),
+    }
+}
+
+#[cold]
+fn resolve() -> Path {
+    let p = match std::env::var("VSPREFILL_SIMD").ok().as_deref() {
+        Some("scalar") => Path::Scalar,
+        Some("portable") => Path::Portable,
+        _ => {
+            // default and explicit "wide": widest supported
+            if wide_supported() {
+                Path::Wide
+            } else {
+                Path::Portable
+            }
+        }
+    };
+    PATH.store(encode(p), Ordering::Relaxed);
+    p
+}
+
+/// Force a specific path (benches sweep scalar vs SIMD with this); `None`
+/// re-resolves from the environment/detection on the next call.  Forcing
+/// `Wide` on a machine without the features degrades to `Portable` — the
+/// unsafe intrinsics are never reachable undetected.
+pub fn set_forced_path(p: Option<Path>) {
+    let p = match p {
+        Some(Path::Wide) if !wide_supported() => Some(Path::Portable),
+        other => other,
+    };
+    PATH.store(p.map(encode).unwrap_or(0), Ordering::Relaxed);
+}
+
+#[cfg(target_arch = "x86_64")]
+fn wide_supported() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn wide_supported() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched primitives.
+// ---------------------------------------------------------------------------
+
+/// Inner product of `a` and `b`.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot length mismatch");
+    match active_path() {
+        Path::Scalar => scalar::dot(a, b),
+        Path::Portable => portable::dot(a, b),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `Wide` is only ever stored after `wide_supported()`
+        // confirmed avx2+fma (see `resolve` / `set_forced_path`).
+        Path::Wide => unsafe { wide::dot(a, b) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Path::Wide => portable::dot(a, b),
+    }
+}
+
+/// `y += a * x` elementwise.
+#[inline]
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len(), "axpy length mismatch");
+    match active_path() {
+        Path::Scalar => scalar::axpy(a, x, y),
+        Path::Portable => portable::axpy(a, x, y),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot`.
+        Path::Wide => unsafe { wide::axpy(a, x, y) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Path::Wide => portable::axpy(a, x, y),
+    }
+}
+
+/// `y *= a` elementwise.
+#[inline]
+pub fn scale(y: &mut [f32], a: f32) {
+    match active_path() {
+        Path::Scalar => scalar::scale(y, a),
+        Path::Portable => portable::scale(y, a),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot`.
+        Path::Wide => unsafe { wide::scale(y, a) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Path::Wide => portable::scale(y, a),
+    }
+}
+
+/// `y = beta * y + a * x` elementwise — the fused form of the streaming
+/// softmax's rescale-then-accumulate step.
+#[inline]
+pub fn scale_add(y: &mut [f32], beta: f32, x: &[f32], a: f32) {
+    debug_assert_eq!(x.len(), y.len(), "scale_add length mismatch");
+    match active_path() {
+        Path::Scalar => scalar::scale_add(y, beta, x, a),
+        Path::Portable => portable::scale_add(y, beta, x, a),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as in `dot`.
+        Path::Wide => unsafe { wide::scale_add(y, beta, x, a) },
+        #[cfg(not(target_arch = "x86_64"))]
+        Path::Wide => portable::scale_add(y, beta, x, a),
+    }
+}
+
+/// One fused streaming-softmax step over a scored tile: fold `scores` (with
+/// [`MASKED`] holes) and the matching value rows into the running
+/// `(m, s, acc)` recurrence in a single pass.
+///
+/// `vt` holds one value row per score at row stride `stride >= d` (the
+/// lane-aligned arena layout; only the `d`-prefix of each row is read), so
+/// callers pass either a gathered arena at [`lane_stride`]`(d)` or a
+/// contiguous `Mat` slab at `stride == d` directly.  `tile_max` is the max
+/// of the unmasked scores; the caller must skip tiles with no unmasked cell
+/// (`tile_max == MASKED`) — that guard stays outside because it doubles as
+/// the caller's diagonal-fallback signal.
+///
+/// The running-max rescale `acc *= alpha` is fused into the first unmasked
+/// accumulate as `acc = alpha * acc + e * v` ([`scale_add`]), which is
+/// arithmetically identical to the two-pass form on every path (each f32
+/// operation rounds the same intermediates in the same order).
+#[allow(clippy::too_many_arguments)]
+pub fn softmax_accum_tile(
+    scores: &[f32],
+    tile_max: f32,
+    vt: &[f32],
+    stride: usize,
+    d: usize,
+    m: &mut f32,
+    s: &mut f32,
+    acc: &mut [f32],
+) {
+    debug_assert!(tile_max > MASKED, "caller must skip all-masked tiles");
+    debug_assert!(stride >= d && acc.len() >= d);
+    debug_assert!(scores.is_empty() || vt.len() >= (scores.len() - 1) * stride + d);
+    let m_new = if *m >= tile_max { *m } else { tile_max };
+    let alpha = (*m - m_new).exp();
+    let mut pending_rescale = alpha != 1.0;
+    if pending_rescale {
+        *s *= alpha;
+    }
+    for (t, &x) in scores.iter().enumerate() {
+        if x == MASKED {
+            continue;
+        }
+        let e = (x - m_new).exp();
+        *s += e;
+        let vrow = &vt[t * stride..t * stride + d];
+        if pending_rescale {
+            scale_add(&mut acc[..d], alpha, vrow, e);
+            pending_rescale = false;
+        } else {
+            axpy(e, vrow, &mut acc[..d]);
+        }
+    }
+    if pending_rescale {
+        // Defensive: reachable only if a caller passed a stale tile_max for
+        // an all-masked tile; keep the recurrence consistent anyway.
+        scale(&mut acc[..d], alpha);
+    }
+    *m = m_new;
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker kernel scratch.
+// ---------------------------------------------------------------------------
+
+/// Reusable per-worker tile buffers: gather arenas, score tiles, and
+/// per-row streaming state.  Kernels size the prefix they need with
+/// [`uninit_prefix`] (buffers they fully overwrite) and re-initialize
+/// state buffers explicitly — capacity is kept across blocks, so a warm
+/// worker never reallocates.
+#[derive(Default)]
+pub struct Scratch {
+    /// Gathered key tile (`tiles x lane_stride(d)`).
+    pub kt: Vec<f32>,
+    /// Gathered value tile (same layout as `kt`).
+    pub vt: Vec<f32>,
+    /// Per-column masked logits of the current tile.
+    pub scores: Vec<f32>,
+    /// Per-row running max of the streaming softmax.
+    pub m: Vec<f32>,
+    /// Per-row running sum-exp.
+    pub s: Vec<f32>,
+    /// Merged column union of the current block.
+    pub cols: Vec<usize>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = RefCell::new(Scratch::default());
+}
+
+/// Run `f` with the calling thread's kernel scratch.  Workers are
+/// per-`par_chunks_mut`-call threads, so the scratch is reused across every
+/// block a worker processes within one kernel call.  Panics if re-entered:
+/// kernels must not nest scratch sections (none do — the scratch-using
+/// kernels never call each other).
+pub fn with_scratch<R>(f: impl FnOnce(&mut Scratch) -> R) -> R {
+    SCRATCH.with(|c| f(&mut c.borrow_mut()))
+}
+
+/// Size `buf` to at least `len` and return the prefix slice.  Contents
+/// beyond what the caller overwrites are stale — use only for buffers whose
+/// read range is always written first (gather arenas, score tiles), and
+/// `fill` state buffers explicitly.
+pub fn uninit_prefix(buf: &mut Vec<f32>, len: usize) -> &mut [f32] {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+    &mut buf[..len]
+}
+
+// ---------------------------------------------------------------------------
+// Scalar baseline (public: benches and parity tests call it directly).
+// ---------------------------------------------------------------------------
+
+/// Plain one-element-at-a-time implementations — the behavioral spec of the
+/// dispatched primitives and the baseline the `kernels` microbench sweeps
+/// against.
+pub mod scalar {
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut acc = 0.0f32;
+        for (x, y) in a.iter().zip(b) {
+            acc += x * y;
+        }
+        acc
+    }
+
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv += a * xv;
+        }
+    }
+
+    pub fn scale(y: &mut [f32], a: f32) {
+        for yv in y.iter_mut() {
+            *yv *= a;
+        }
+    }
+
+    pub fn scale_add(y: &mut [f32], beta: f32, x: &[f32], a: f32) {
+        for (yv, xv) in y.iter_mut().zip(x) {
+            *yv = *yv * beta + a * xv;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Portable lane-chunked path.
+// ---------------------------------------------------------------------------
+
+mod portable {
+    use super::LANES;
+
+    /// Pairwise reduction of the lane accumulators, matching the wide
+    /// path's horizontal-sum tree (low half + high half first).
+    #[inline]
+    fn hsum(l: &[f32; LANES]) -> f32 {
+        ((l[0] + l[4]) + (l[1] + l[5])) + ((l[2] + l[6]) + (l[3] + l[7]))
+    }
+
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let mut lanes = [0.0f32; LANES];
+        let mut ca = a.chunks_exact(LANES);
+        let mut cb = b.chunks_exact(LANES);
+        for (xa, xb) in ca.by_ref().zip(cb.by_ref()) {
+            let xa: &[f32; LANES] = xa.try_into().unwrap();
+            let xb: &[f32; LANES] = xb.try_into().unwrap();
+            for l in 0..LANES {
+                lanes[l] += xa[l] * xb[l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for (xa, xb) in ca.remainder().iter().zip(cb.remainder()) {
+            tail += xa * xb;
+        }
+        hsum(&lanes) + tail
+    }
+
+    #[inline]
+    pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let mut cy = y.chunks_exact_mut(LANES);
+        let mut cx = x.chunks_exact(LANES);
+        for (vy, vx) in cy.by_ref().zip(cx.by_ref()) {
+            let vy: &mut [f32; LANES] = vy.try_into().unwrap();
+            let vx: &[f32; LANES] = vx.try_into().unwrap();
+            for l in 0..LANES {
+                vy[l] += a * vx[l];
+            }
+        }
+        for (py, px) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+            *py += a * px;
+        }
+    }
+
+    #[inline]
+    pub fn scale(y: &mut [f32], a: f32) {
+        let mut cy = y.chunks_exact_mut(LANES);
+        for vy in cy.by_ref() {
+            let vy: &mut [f32; LANES] = vy.try_into().unwrap();
+            for l in 0..LANES {
+                vy[l] *= a;
+            }
+        }
+        for py in cy.into_remainder() {
+            *py *= a;
+        }
+    }
+
+    #[inline]
+    pub fn scale_add(y: &mut [f32], beta: f32, x: &[f32], a: f32) {
+        let mut cy = y.chunks_exact_mut(LANES);
+        let mut cx = x.chunks_exact(LANES);
+        for (vy, vx) in cy.by_ref().zip(cx.by_ref()) {
+            let vy: &mut [f32; LANES] = vy.try_into().unwrap();
+            let vx: &[f32; LANES] = vx.try_into().unwrap();
+            for l in 0..LANES {
+                vy[l] = vy[l] * beta + a * vx[l];
+            }
+        }
+        for (py, px) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+            *py = *py * beta + a * px;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Wide path: AVX2 + FMA intrinsics (x86_64, runtime-detected).
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod wide {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of a 256-bit register: low half + high half, then the
+    /// standard movehdup/movehl 128-bit reduction.
+    ///
+    /// # Safety
+    /// Requires avx2 at runtime (callers are gated on detection).
+    #[target_feature(enable = "avx2", enable = "fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let q = _mm_add_ps(lo, hi);
+        let h = _mm_movehdup_ps(q);
+        let p = _mm_add_ps(q, h);
+        let h2 = _mm_movehl_ps(h, p);
+        _mm_cvtss_f32(_mm_add_ss(p, h2))
+    }
+
+    /// # Safety
+    /// Requires avx2+fma at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len().min(b.len());
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for i in 0..chunks {
+            let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
+            acc = _mm256_fmadd_ps(va, vb, acc);
+        }
+        let mut sum = hsum(acc);
+        for i in chunks * 8..n {
+            sum += a[i] * b[i];
+        }
+        sum
+    }
+
+    /// # Safety
+    /// Requires avx2+fma at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+        let n = x.len().min(y.len());
+        let chunks = n / 8;
+        let va = _mm256_set1_ps(a);
+        for i in 0..chunks {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_fmadd_ps(va, vx, vy));
+        }
+        for i in chunks * 8..n {
+            y[i] += a * x[i];
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2+fma at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale(y: &mut [f32], a: f32) {
+        let n = y.len();
+        let chunks = n / 8;
+        let va = _mm256_set1_ps(a);
+        for i in 0..chunks {
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_mul_ps(vy, va));
+        }
+        for v in &mut y[chunks * 8..] {
+            *v *= a;
+        }
+    }
+
+    /// # Safety
+    /// Requires avx2+fma at runtime.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    pub unsafe fn scale_add(y: &mut [f32], beta: f32, x: &[f32], a: f32) {
+        let n = x.len().min(y.len());
+        let chunks = n / 8;
+        let vb = _mm256_set1_ps(beta);
+        let va = _mm256_set1_ps(a);
+        for i in 0..chunks {
+            let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
+            let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+            _mm256_storeu_ps(
+                y.as_mut_ptr().add(i * 8),
+                _mm256_fmadd_ps(va, vx, _mm256_mul_ps(vy, vb)),
+            );
+        }
+        for i in chunks * 8..n {
+            y[i] = y[i] * beta + a * x[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vecs(len: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let a: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..len).map(|_| rng.normal_f32()).collect();
+        (a, b)
+    }
+
+    #[test]
+    fn dispatched_primitives_match_scalar_across_lengths() {
+        for len in [0usize, 1, 3, 7, 8, 9, 13, 16, 31, 32, 33, 100, 255, 256] {
+            let (a, b) = vecs(len, len as u64);
+            let tol = 1e-5 * (1.0 + len as f32 * 0.1);
+            let want = scalar::dot(&a, &b);
+            assert!((dot(&a, &b) - want).abs() <= tol, "dot len={len}");
+
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            scalar::axpy(0.7, &a, &mut y1);
+            axpy(0.7, &a, &mut y2);
+            for (p, q) in y1.iter().zip(&y2) {
+                assert!((p - q).abs() <= tol, "axpy len={len}");
+            }
+
+            let mut y1 = b.clone();
+            let mut y2 = b.clone();
+            scalar::scale_add(&mut y1, 0.3, &a, 1.9);
+            scale_add(&mut y2, 0.3, &a, 1.9);
+            for (p, q) in y1.iter().zip(&y2) {
+                assert!((p - q).abs() <= tol, "scale_add len={len}");
+            }
+
+            let mut y1 = b.clone();
+            let mut y2 = b;
+            scalar::scale(&mut y1, -1.3);
+            scale(&mut y2, -1.3);
+            assert_eq!(y1, y2, "scale is a per-element product on every path");
+        }
+    }
+
+    #[test]
+    fn softmax_accum_matches_two_pass_reference() {
+        // One tile with masked holes folded into a running state must equal
+        // the explicit rescale-then-accumulate form.
+        let d = 13; // odd on purpose
+        let stride = lane_stride(d);
+        let (scores_raw, _) = vecs(6, 3);
+        let mut scores = scores_raw.clone();
+        scores[2] = MASKED;
+        scores[5] = MASKED;
+        let (vt, _) = vecs(6 * stride, 4);
+        let tile_max =
+            scores.iter().cloned().filter(|&x| x != MASKED).fold(MASKED, f32::max);
+
+        let mut m = 0.4f32; // pretend an earlier tile set the state
+        let mut s = 2.0f32;
+        let mut acc: Vec<f32> = (0..d).map(|i| i as f32 * 0.1).collect();
+        softmax_accum_tile(&scores, tile_max, &vt, stride, d, &mut m, &mut s, &mut acc);
+
+        let m0 = 0.4f32;
+        let m_want = m0.max(tile_max);
+        let alpha = (m0 - m_want).exp();
+        let mut s_want = 2.0f32 * alpha;
+        let mut acc_want: Vec<f32> = (0..d).map(|i| i as f32 * 0.1 * alpha).collect();
+        for (t, &x) in scores.iter().enumerate() {
+            if x == MASKED {
+                continue;
+            }
+            let e = (x - m_want).exp();
+            s_want += e;
+            for c in 0..d {
+                acc_want[c] += e * vt[t * stride + c];
+            }
+        }
+        assert_eq!(m, m_want);
+        assert!((s - s_want).abs() < 1e-6);
+        for c in 0..d {
+            assert!((acc[c] - acc_want[c]).abs() < 1e-5, "col {c}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuses_capacity() {
+        with_scratch(|sc| {
+            uninit_prefix(&mut sc.kt, 128).fill(1.0);
+            let cap = sc.kt.capacity();
+            uninit_prefix(&mut sc.kt, 64);
+            assert_eq!(sc.kt.capacity(), cap, "shrinking never reallocates");
+            assert!(sc.kt[..64].iter().all(|&x| x == 1.0), "prefix kept");
+        });
+    }
+
+    #[test]
+    fn lane_stride_rounds_up() {
+        assert_eq!(lane_stride(0), 0);
+        assert_eq!(lane_stride(1), LANES);
+        assert_eq!(lane_stride(LANES), LANES);
+        assert_eq!(lane_stride(LANES + 1), 2 * LANES);
+    }
+}
