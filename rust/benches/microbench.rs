@@ -66,6 +66,7 @@ struct SweepRow {
 fn main() {
     if std::env::var("VSPREFILL_BENCH_SMOKE").is_ok_and(|v| v == "1") {
         kernels_sweep(true);
+        fleet_sweep(true);
         return;
     }
     let n = 1024;
@@ -186,6 +187,8 @@ fn main() {
     decode_sweep();
 
     prefix_sweep();
+
+    fleet_sweep(false);
 
     #[cfg(feature = "pjrt")]
     pjrt_rows();
@@ -694,6 +697,139 @@ fn prefix_sweep() {
     match std::fs::write("BENCH_prefix.json", &json) {
         Ok(()) => println!("\nwrote BENCH_prefix.json"),
         Err(e) => eprintln!("\nfailed to write BENCH_prefix.json: {e}"),
+    }
+}
+
+/// Fleet-topology sweep: shard counts x replica counts x sequence length
+/// through the full serving stack (coordinator(s), paged pools, and — for
+/// replicas > 1 — the prefix-affinity router).  `engine.threads` is pinned
+/// to the shard count, modeling fixed per-device capacity: the sharded
+/// speedup then measures the fan-out's parallel efficiency, not a bigger
+/// thread pool.  `max_inflight` is 1 so batch-level chunk dispatch cannot
+/// absorb the pool and mask the shard fan-out.  Writes BENCH_fleet.json;
+/// in full mode the sweep gates a speed floor: sharded(2) throughput must
+/// be at least 1.3x sharded(1) at every full sequence length (smoke sizes
+/// are too small to time honestly, so the gate is skipped with a message).
+fn fleet_sweep(smoke: bool) {
+    use vsprefill::coordinator::{AttentionMode, CoordinatorConfig, EngineConfig, PrefillRequest};
+    use vsprefill::serve::EngineBuilder;
+
+    struct FleetRow {
+        shards: usize,
+        replicas: usize,
+        n: usize,
+        wall_ms: f64,
+        rows_per_s: f64,
+    }
+
+    let shard_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let replica_counts: &[usize] = if smoke { &[1] } else { &[1, 2] };
+    let lens: &[usize] = if smoke { &[256] } else { &[1024, 4096] };
+    let requests = if smoke { 2usize } else { 8 };
+    let mode = if smoke { "smoke" } else { "full" };
+
+    println!(
+        "\nfleet sweep: shards x replicas x n, {requests} sparse prefills each ({mode} sizes)"
+    );
+    println!("shards  replicas      n    wall_ms    rows/s");
+    let mut rows: Vec<FleetRow> = Vec::new();
+    for &n in lens {
+        for &m in replica_counts {
+            for &s in shard_counts {
+                let cfg = CoordinatorConfig {
+                    engine: EngineConfig {
+                        buckets: vec![256, 1024, 4096],
+                        threads: s,
+                        ..EngineConfig::default()
+                    },
+                    chunk_tokens: 256,
+                    max_inflight: 1,
+                    max_wait_ms: 1,
+                    kv_blocks: 256, // 16k rows of paged K/V per replica
+                    shards: s,
+                    replicas: m,
+                    ..Default::default()
+                };
+                let fleet = EngineBuilder::new().config(cfg).build_fleet().unwrap();
+                // Warm once (indexer cache, pools, executor threads) so the
+                // timed window measures steady-state serving.
+                let warm = fleet
+                    .prefill(PrefillRequest::synthetic(9000, n, 1, AttentionMode::Sparse))
+                    .unwrap();
+                assert!(warm.ok, "{:?}", warm.error);
+                let t0 = Instant::now();
+                let rxs: Vec<_> = (0..requests)
+                    .map(|i| {
+                        // Distinct seeds: no prefix-cache hits, so the sweep
+                        // times the kernels, not block reuse.
+                        let seed = 100 + (n + i) as u64;
+                        let id = i as u64;
+                        let req = PrefillRequest::synthetic(id, n, seed, AttentionMode::Sparse);
+                        fleet.submit(req).unwrap()
+                    })
+                    .collect();
+                for rx in rxs {
+                    let r = rx.wait().unwrap();
+                    assert!(r.ok, "{:?}", r.error);
+                }
+                let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+                let rows_per_s = (requests * n) as f64 / (wall_ms * 1e-3);
+                println!("{s:<7} {m:<9} {n:>6} {wall_ms:>10.2} {rows_per_s:>9.0}");
+                rows.push(FleetRow { shards: s, replicas: m, n, wall_ms, rows_per_s });
+                drop(fleet);
+            }
+        }
+    }
+
+    let mut json = String::from("{\n  \"bench\": \"fleet\",\n");
+    json.push_str(&format!("  \"smoke\": {smoke},\n  \"requests\": {requests},\n  \"sweep\": [\n"));
+    for (i, r) in rows.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"shards\": {}, \"replicas\": {}, \"n\": {}, \"wall_ms\": {:.3}, \
+             \"rows_per_s\": {:.1}}}{}\n",
+            r.shards,
+            r.replicas,
+            r.n,
+            r.wall_ms,
+            r.rows_per_s,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_fleet.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_fleet.json"),
+        Err(e) => eprintln!("\nfailed to write BENCH_fleet.json: {e}"),
+    }
+
+    if smoke {
+        println!("(fleet speed floor skipped at smoke sizes)");
+        return;
+    }
+    // The scale-out speed floor: the 2-shard fan-out must buy real
+    // throughput over a single instance with the same per-device capacity.
+    let rate = |s: usize, n: usize| {
+        rows.iter()
+            .find(|r| r.shards == s && r.replicas == 1 && r.n == n)
+            .map(|r| r.rows_per_s)
+            .unwrap_or(0.0)
+    };
+    let mut failures: Vec<String> = Vec::new();
+    for &n in lens {
+        let (r1, r2) = (rate(1, n), rate(2, n));
+        if r2 < 1.3 * r1 {
+            failures.push(format!(
+                "n={n}: sharded(2) {r2:.0} rows/s is below 1.3x sharded(1) {r1:.0} rows/s"
+            ));
+        }
+    }
+    if failures.is_empty() {
+        println!("fleet speed floor: ok (sharded(2) >= 1.3x sharded(1) at all full sizes)");
+    } else {
+        eprintln!("\nfleet speed floor FAILED:");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
     }
 }
 

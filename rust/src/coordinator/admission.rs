@@ -6,18 +6,77 @@
 //! re-inserts work the scheduler could not place (KV exhaustion) at the
 //! front so it retains its position.
 
+use std::cell::{Cell, OnceCell};
 use std::collections::VecDeque;
 use std::fmt;
 use std::sync::{mpsc, Condvar, Mutex};
 
+use crate::tensor::paged::{PrefixChain, PrefixProbe};
+
+use super::backend::ExecBackend;
+use super::kv_cache::PagedKvStore;
 use super::request::{PrefillRequest, Priority, RejectReason, ResponseEvent};
 
 /// A queued request plus its reply channel (a stream: token frames during
-/// decode, then exactly one final response).
+/// decode, then exactly one final response), carrying a per-item
+/// prefix-cache scratchpad: the request's content chain is computed at most
+/// once over the item's queued lifetime, and the store probe result is
+/// cached against the store's prefix *generation* — under pool pressure the
+/// admission sort used to re-hash and re-probe every queued request every
+/// round, an O(queue) rescan per round that this cache collapses to O(new
+/// work + actual store changes).
 #[derive(Debug)]
 pub struct WorkItem {
     pub req: PrefillRequest,
     pub reply: mpsc::Sender<ResponseEvent>,
+    /// The request's prefix chain, lazily computed once (it is a pure
+    /// function of request content + bucket + block size, all fixed for the
+    /// item's lifetime).  `Some(None)` = the backend opted out.
+    chain: OnceCell<Option<PrefixChain>>,
+    /// Last probe answer, keyed by [`PagedKvStore::prefix_generation`]:
+    /// `(generation, resident_rows, inflight)`.  Invalid the moment the
+    /// store's generation moves (publish / eviction / in-flight change).
+    probe: Cell<Option<(u64, usize, bool)>>,
+}
+
+impl WorkItem {
+    pub fn new(req: PrefillRequest, reply: mpsc::Sender<ResponseEvent>) -> WorkItem {
+        WorkItem { req, reply, chain: OnceCell::new(), probe: Cell::new(None) }
+    }
+
+    /// The request's content chain, computed on first use and cached for
+    /// the item's queued lifetime (requeues and deferrals keep it).
+    pub fn chain(&self, backend: &dyn ExecBackend, block_size: usize) -> Option<&PrefixChain> {
+        self.chain
+            .get_or_init(|| {
+                backend
+                    .bucket_for(self.req.seq_len())
+                    .and_then(|b| backend.prefix_chain(&self.req, b, block_size))
+            })
+            .as_ref()
+    }
+
+    /// Probe the store's prefix index for this item, through the
+    /// generation-keyed cache: the store is only asked again when its
+    /// prefix state actually changed since the last answer.  Items without
+    /// a chain report the default (cold) probe.
+    pub fn probe(&self, backend: &dyn ExecBackend, store: &PagedKvStore) -> PrefixProbe {
+        let Some(chain) = self.chain(backend, store.block_size) else {
+            return PrefixProbe::default();
+        };
+        // Generation is read BEFORE the probe: a concurrent publish between
+        // the two at worst stamps a fresher answer with an older generation,
+        // which only causes one extra re-probe — never a stale cache hit.
+        let gen = store.prefix_generation();
+        if let Some((g, rows, inflight)) = self.probe.get() {
+            if g == gen {
+                return PrefixProbe { resident_rows: rows, inflight };
+            }
+        }
+        let probe = store.probe_prefix(chain);
+        self.probe.set(Some((gen, probe.resident_rows, probe.inflight)));
+        probe
+    }
 }
 
 /// Push rejection carrying the item back to the caller, the typed reason,
@@ -116,13 +175,34 @@ mod tests {
     fn item(id: u64) -> WorkItem {
         let (tx, _rx) = mpsc::channel::<ResponseEvent>();
         std::mem::forget(_rx);
-        WorkItem { req: PrefillRequest::synthetic(id, 64, 0, AttentionMode::Dense), reply: tx }
+        WorkItem::new(PrefillRequest::synthetic(id, 64, 0, AttentionMode::Dense), tx)
     }
 
     fn batch_item(id: u64) -> WorkItem {
         let mut it = item(id);
         it.req.priority = Priority::Batch;
         it
+    }
+
+    #[test]
+    fn probe_cache_refreshes_on_prefix_generation_change() {
+        use crate::coordinator::backend::native::NativeBackend;
+        use crate::coordinator::engine::EngineConfig;
+        let ecfg = EngineConfig::default();
+        let backend = NativeBackend::quick(ecfg.clone());
+        let store = PagedKvStore::new(64, 64, ecfg.synth.head_dim);
+        let it = item(1);
+        // The chain is computed once and kept for the item's lifetime.
+        let chain = it.chain(&backend, store.block_size).expect("synthetic prompts chain").clone();
+        let cold = it.probe(&backend, &store);
+        assert_eq!((cold.resident_rows, cold.inflight), (0, false));
+        // Another request starts prefilling the same prompt: its in-flight
+        // claim bumps the store's prefix generation, so the item's next
+        // probe must NOT be served from the stale cached answer.
+        assert!(store.reserve_with_prefix(9, chain.rows(), Some(&chain)).reserved);
+        assert!(it.probe(&backend, &store).inflight, "cache refreshed after generation bump");
+        store.free(9);
+        assert!(!it.probe(&backend, &store).inflight, "claim release refreshes the cache again");
     }
 
     #[test]

@@ -117,6 +117,19 @@ impl ExecBackend for FaultyBackend {
         self.inner.begin(req, bucket, default_chunk, prefix, rng)
     }
 
+    /// Slice execution passes through untouched: faults are injected at the
+    /// chunk granularity (where the lifecycle has a typed failure door),
+    /// not per shard slice.
+    fn prefill_slice(
+        &self,
+        q_slice: &crate::tensor::Mat,
+        lo: usize,
+        view: &crate::tensor::paged::PagedKv<'_>,
+        idx: Option<&crate::sparse::VsIndices>,
+    ) -> Option<crate::tensor::Mat> {
+        self.inner.prefill_slice(q_slice, lo, view, idx)
+    }
+
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
         let (id, chunk) = (run.id(), run.resp.chunks);
         if fires(self.seed, CHUNK_SALT, id, chunk, self.chunk_period) {

@@ -61,6 +61,7 @@ pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 pub mod reference;
+pub mod sharded;
 
 /// What a backend can do — replaces the old `supports_chunked` /
 /// `supports_parallel` probes and the implicit "PJRT cannot decode" rule.
@@ -82,15 +83,23 @@ pub struct Capabilities {
     /// Largest admissible bucket (requests padding beyond it are rejected
     /// at admission).
     pub max_bucket: usize,
+    /// Sequence-parallel shards one `prefill_chunk` fans across (1 = a
+    /// plain single-instance backend; N for [`sharded::ShardedBackend`]).
+    pub shards: usize,
+    /// Replicated engine stacks behind this backend's coordinator (1
+    /// everywhere except the fleet capabilities reported by
+    /// [`crate::coordinator::router::ReplicaRouter`]).
+    pub replicas: usize,
     /// Set only through [`Capabilities::with_parallel_dispatch`].
     parallel: bool,
 }
 
 impl Capabilities {
     /// Serial capabilities: the scheduler drives the backend one call at a
-    /// time on its executor thread (always sound).
+    /// time on its executor thread (always sound).  Topology dimensions
+    /// default to a single instance (`shards == replicas == 1`).
     pub fn new(chunked: bool, decode: bool, max_bucket: usize) -> Capabilities {
-        Capabilities { chunked, decode, max_bucket, parallel: false }
+        Capabilities { chunked, decode, max_bucket, shards: 1, replicas: 1, parallel: false }
     }
 
     /// Opt in to parallel chunk dispatch: the scheduler will share `&self`
@@ -210,6 +219,30 @@ pub trait ExecBackend: Send {
 
     /// Execute the next prefill chunk of `run` against the paged store.
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep;
+
+    /// Execute the backend's fused attention kernel over one contiguous
+    /// slice of a prefill chunk's query rows — the shard fan-out primitive
+    /// [`sharded::ShardedBackend`] drives.  `q_slice` holds the slice's
+    /// query rows, `lo` is the absolute position of its first row (causal
+    /// masking and query-block numbering key off it), `view` is the run's
+    /// paged K/V snapshot, and `idx` the chunk's selected indices (`None`
+    /// for dense execution).  The contract that makes sharding bit-exact:
+    /// for any block-aligned partition of a chunk, concatenating the
+    /// slices' outputs must equal the full-chunk kernel output
+    /// bit-for-bit (each query block's streaming softmax is independent,
+    /// so a slice whose start is a multiple of the kernel's query-block
+    /// size computes exactly the blocks it covers).  Returns `None` when
+    /// the backend cannot serve slice execution (the default — e.g. the
+    /// whole-bucket AOT PJRT backend).
+    fn prefill_slice(
+        &self,
+        _q_slice: &Mat,
+        _lo: usize,
+        _view: &PagedKv<'_>,
+        _idx: Option<&VsIndices>,
+    ) -> Option<Mat> {
+        None
+    }
 
     /// One batched decode step: every run in `runs` generates its next
     /// token.  Returns one `DecodeStep` per run, index-aligned.  Only

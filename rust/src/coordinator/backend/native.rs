@@ -11,8 +11,10 @@
 
 use crate::attention::flash::{flash_attention, flash_attention_paged};
 use crate::indexer::Indexer;
+use crate::sparse::VsIndices;
 use crate::sparse_attn::exec::{sparse_attention_vs, sparse_attention_vs_paged};
 use crate::sparse_attn::VsPrefill;
+use crate::tensor::paged::PagedKv;
 use crate::tensor::Mat;
 use crate::util::parallel::par_drain;
 use crate::util::rng::Rng;
@@ -83,10 +85,26 @@ impl ExecBackend for NativeBackend {
     }
 
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
+        synth_prefill_chunk(&self.vsp, true, run, store, &|qc, lo, view, idx| {
+            self.prefill_slice(qc, lo, view, idx).expect("native always executes slices")
+        })
+    }
+
+    /// Slice execution for the shard fan-out: the paged kernels already
+    /// take the slice's absolute start row, and each `block_q` query block
+    /// runs an independent streaming softmax, so a block-aligned slice's
+    /// output is bit-identical to the same rows of a full-chunk call.
+    fn prefill_slice(
+        &self,
+        q_slice: &Mat,
+        lo: usize,
+        view: &PagedKv<'_>,
+        idx: Option<&VsIndices>,
+    ) -> Option<Mat> {
         let bq = self.cfg.block_q;
-        synth_prefill_chunk(&self.vsp, true, run, store, &|qc, lo, view, idx| match idx {
-            None => flash_attention_paged(qc, lo, view, bq, bq),
-            Some(idx) => sparse_attention_vs_paged(qc, lo, view, idx, bq),
+        Some(match idx {
+            None => flash_attention_paged(q_slice, lo, view, bq, bq),
+            Some(idx) => sparse_attention_vs_paged(q_slice, lo, view, idx, bq),
         })
     }
 

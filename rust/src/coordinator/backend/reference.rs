@@ -12,9 +12,11 @@
 //! harness.  See `tests/backend_conformance.rs`.
 
 use crate::indexer::Indexer;
+use crate::sparse::VsIndices;
 use crate::sparse_attn::exec::{sparse_attention_vs_rowserial, sparse_attention_vs_rowserial_rows};
 use crate::sparse_attn::VsPrefill;
 use crate::tensor::ops::dot;
+use crate::tensor::paged::PagedKv;
 use crate::tensor::Mat;
 use crate::util::rng::Rng;
 
@@ -81,15 +83,28 @@ impl ExecBackend for ReferenceBackend {
 
     fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
         synth_prefill_chunk(&self.vsp, true, run, store, &|qc, lo, view, idx| {
-            // Copy the resident prefix back out of the paged store and run
-            // the exact row-serial executor over this chunk's rows — the
-            // paged read path is part of what the oracle covers.
-            let hi = lo + qc.rows;
-            let (k, v) = view.gather_rows(0, hi);
-            match idx {
-                None => rowserial_dense_rows(qc, lo, &k, &v),
-                Some(idx) => sparse_attention_vs_rowserial_rows(qc, lo, &k, &v, idx),
-            }
+            self.prefill_slice(qc, lo, view, idx).expect("reference always executes slices")
+        })
+    }
+
+    /// Slice execution for the shard fan-out: copy the resident prefix back
+    /// out of the paged store and run the exact row-serial executor over the
+    /// slice's rows — the paged read path is part of what the oracle
+    /// covers.  Row-serial execution is per-row exact, so *any* row
+    /// partition (not just block-aligned ones) is bit-identical to the
+    /// full-chunk call.
+    fn prefill_slice(
+        &self,
+        q_slice: &Mat,
+        lo: usize,
+        view: &PagedKv<'_>,
+        idx: Option<&VsIndices>,
+    ) -> Option<Mat> {
+        let hi = lo + q_slice.rows;
+        let (k, v) = view.gather_rows(0, hi);
+        Some(match idx {
+            None => rowserial_dense_rows(q_slice, lo, &k, &v),
+            Some(idx) => sparse_attention_vs_rowserial_rows(q_slice, lo, &k, &v, idx),
         })
     }
 

@@ -1,0 +1,313 @@
+//! The sharded backend: one request fanned sequence-parallel across N
+//! inner [`ExecBackend`] instances.
+//!
+//! Vertical-slash prefill parallelizes cleanly over query blocks: each
+//! `block_q`-row query block runs an independent streaming softmax against
+//! its own column set, so a prefill chunk can be split into contiguous
+//! block-aligned slices and executed on different backend instances with
+//! the partial outputs stitched back together **bit-identically** to a
+//! single-instance run.  That is the whole merge rule — because slice
+//! boundaries are multiples of the kernel's query-block size, every shard
+//! computes exactly the query blocks it covers, with the same tile
+//! iteration order and the same rounding as the unsharded kernel; there is
+//! nothing to renormalize on the way back.  (Splitting *inside* a query
+//! block would change the streaming-softmax accumulation order and break
+//! bit-identity; [`slice_bounds`] therefore never does.)
+//!
+//! Division of labor:
+//!   * index selection, the paged K/V appends, and decode run once, here —
+//!     they are cheap, inherently sequential over the prompt, and keeping
+//!     them single-instance keeps digests and token streams bit-identical
+//!     to the native backend by construction;
+//!   * the fused attention kernel — the dominant cost — fans across the
+//!     shards through [`ExecBackend::prefill_slice`].
+//!
+//! The fan-out reuses the scoped worker pool (`util/parallel.rs`).  Nested
+//! use is safe by design: when the scheduler already fans `prefill_chunk`
+//! across runs, each worker's pool view degrades to serial, so a shard
+//! slice never oversubscribes the machine.
+
+use crate::indexer::Indexer;
+use crate::sparse::VsIndices;
+use crate::sparse_attn::VsPrefill;
+use crate::tensor::paged::PagedKv;
+use crate::tensor::Mat;
+use crate::util::parallel::par_drain;
+use crate::util::rng::Rng;
+
+use super::native::NativeBackend;
+use super::{
+    decode_one, finish_decode_round, quick_indexer, selection_pipeline, synth_begin,
+    synth_prefill_chunk, synth_prefix_chain, Capabilities, ChunkStep, DecodeStep, EngineConfig,
+    ExecBackend, PagedKvStore, PrefillRequest, PrefillResponse, PrefixChain, PrefixHit, RunState,
+};
+
+/// A shard reference the slice fan-out may move to a scoped worker thread.
+///
+/// SAFETY: constructed only when every shard's `Capabilities::parallel()`
+/// promise (an `unsafe` opt-in the shard itself made) says sharing `&self`
+/// across threads is sound, and the scoped fan-out joins before the borrow
+/// ends.
+struct ShardRef<'a>(&'a dyn ExecBackend);
+unsafe impl Send for ShardRef<'_> {}
+
+/// Split `rows` query rows into at most `shards` contiguous slices whose
+/// boundaries are multiples of `block_q` — the alignment that makes shard
+/// outputs bit-identical to the unsharded kernel (see the module doc).
+/// Blocks are balanced: the first `nblocks % shards` slices carry one
+/// extra block.  Fewer blocks than shards yields fewer slices (never an
+/// empty one).
+fn slice_bounds(rows: usize, block_q: usize, shards: usize) -> Vec<(usize, usize)> {
+    let bq = block_q.max(1);
+    let nblocks = rows.div_ceil(bq).max(1);
+    let s = shards.min(nblocks).max(1);
+    let (base, extra) = (nblocks / s, nblocks % s);
+    let mut out = Vec::with_capacity(s);
+    let mut b0 = 0usize;
+    for i in 0..s {
+        let nb = base + usize::from(i < extra);
+        out.push(((b0 * bq).min(rows), ((b0 + nb) * bq).min(rows)));
+        b0 += nb;
+    }
+    out
+}
+
+pub struct ShardedBackend {
+    pub cfg: EngineConfig,
+    vsp: VsPrefill,
+    shards: Vec<Box<dyn ExecBackend>>,
+    /// Every shard opted into parallel dispatch, so the slice fan-out may
+    /// cross worker threads (and the composite may re-make the promise).
+    fan_out: bool,
+}
+
+impl ShardedBackend {
+    /// Compose `shards` into one backend.  Every shard must serve the same
+    /// buckets as `cfg` (the composite admits against one bucket table).
+    pub fn new(cfg: EngineConfig, shards: Vec<Box<dyn ExecBackend>>) -> ShardedBackend {
+        assert!(!shards.is_empty(), "a sharded backend needs at least one shard");
+        for s in &shards {
+            assert_eq!(s.buckets(), &cfg.buckets[..], "every shard must serve the same buckets");
+        }
+        let fan_out = shards.iter().all(|s| s.capabilities().parallel());
+        let vsp = selection_pipeline(quick_indexer(), &cfg);
+        ShardedBackend { cfg, vsp, shards, fan_out }
+    }
+
+    /// `n` native shards with the shared quickly-distilled indexer.
+    pub fn native(cfg: EngineConfig, n: usize) -> ShardedBackend {
+        ShardedBackend::native_with_indexer(cfg, quick_indexer(), n)
+    }
+
+    /// `n` native shards with a caller-provided indexer; the composite's
+    /// own selection pipeline uses the same indexer, so selected indices —
+    /// and therefore digests — match a single `NativeBackend::with_indexer`
+    /// instance bit-for-bit.
+    pub fn native_with_indexer(cfg: EngineConfig, indexer: Indexer, n: usize) -> ShardedBackend {
+        let shards: Vec<Box<dyn ExecBackend>> = (0..n.max(1))
+            .map(|_| {
+                Box::new(NativeBackend::with_indexer(cfg.clone(), indexer.clone()))
+                    as Box<dyn ExecBackend>
+            })
+            .collect();
+        let mut b = ShardedBackend::new(cfg, shards);
+        b.vsp = selection_pipeline(indexer, &b.cfg);
+        b
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Fan one chunk's query rows across the shards and stitch the slice
+    /// outputs back into chunk-row order.
+    fn exec_sharded(
+        &self,
+        qc: &Mat,
+        lo: usize,
+        view: &PagedKv<'_>,
+        idx: Option<&VsIndices>,
+    ) -> Mat {
+        let bounds = slice_bounds(qc.rows, self.cfg.block_q, self.shards.len());
+        let run_slice = |shard: &dyn ExecBackend, slo: usize, shi: usize, dst: &mut [f32]| {
+            let qs = qc.sub_rows(slo, shi);
+            let o = shard
+                .prefill_slice(&qs, lo + slo, view, idx)
+                .expect("shard backend must support slice execution");
+            dst.copy_from_slice(&o.data);
+        };
+        let d = qc.cols;
+        let mut out = Mat::zeros(qc.rows, d);
+        if bounds.len() <= 1 {
+            let rows = out.rows;
+            run_slice(&*self.shards[0], 0, rows, &mut out.data);
+            return out;
+        }
+        // Carve the output into per-slice row ranges so every shard owns an
+        // exclusive destination.
+        let mut jobs: Vec<(ShardRef<'_>, usize, usize, &mut [f32])> =
+            Vec::with_capacity(bounds.len());
+        let mut rest = out.data.as_mut_slice();
+        for (si, &(slo, shi)) in bounds.iter().enumerate() {
+            let (dst, tail) = rest.split_at_mut((shi - slo) * d);
+            rest = tail;
+            jobs.push((ShardRef(&*self.shards[si]), slo, shi, dst));
+        }
+        if self.fan_out {
+            par_drain(jobs, |(shard, slo, shi, dst)| run_slice(shard.0, slo, shi, dst));
+        } else {
+            for (shard, slo, shi, dst) in jobs {
+                run_slice(shard.0, slo, shi, dst);
+            }
+        }
+        out
+    }
+}
+
+impl ExecBackend for ShardedBackend {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn capabilities(&self) -> Capabilities {
+        let mut caps =
+            Capabilities::new(true, true, self.cfg.buckets.iter().copied().max().unwrap_or(0));
+        caps.shards = self.shards.len();
+        if self.fan_out {
+            // SAFETY: the composite's own state is plain owned data
+            // (config + selection pipeline), and every shard made the
+            // parallel-dispatch promise itself — sharing `&self` across
+            // the scheduler's workers is sound.  The nested slice fan-out
+            // degrades to serial inside a worker (the pool pins nested
+            // parallelism to 1), so it never recurses across threads.
+            caps = unsafe { caps.with_parallel_dispatch() };
+        }
+        caps
+    }
+
+    fn buckets(&self) -> &[usize] {
+        &self.cfg.buckets
+    }
+
+    fn prefix_chain(
+        &self,
+        req: &PrefillRequest,
+        bucket: usize,
+        block_size: usize,
+    ) -> Option<PrefixChain> {
+        synth_prefix_chain(&self.cfg.synth, req, bucket, block_size)
+    }
+
+    fn begin(
+        &self,
+        req: PrefillRequest,
+        bucket: usize,
+        default_chunk: usize,
+        prefix: Option<PrefixHit>,
+        _rng: &mut Rng,
+    ) -> RunState {
+        synth_begin(&self.cfg.synth, req, bucket, default_chunk, prefix)
+    }
+
+    fn prefill_chunk(&self, run: &mut RunState, store: &PagedKvStore) -> ChunkStep {
+        synth_prefill_chunk(&self.vsp, true, run, store, &|qc, lo, view, idx| {
+            self.exec_sharded(qc, lo, view, idx)
+        })
+    }
+
+    /// A slice of a slice is still a slice: delegate to shard 0, so a
+    /// sharded backend can itself be composed (and the conformance suite
+    /// can compare through one code path).
+    fn prefill_slice(
+        &self,
+        q_slice: &Mat,
+        lo: usize,
+        view: &PagedKv<'_>,
+        idx: Option<&VsIndices>,
+    ) -> Option<Mat> {
+        self.shards[0].prefill_slice(q_slice, lo, view, idx)
+    }
+
+    /// Decode runs single-instance (the batched single-query kernels are
+    /// bandwidth-bound and per-run independent; column-sharding a decode
+    /// row would change the accumulation order and break token-stream
+    /// bit-identity), fanned per run across the worker pool exactly like
+    /// the native backend.
+    fn decode_step(&self, runs: &mut [RunState], store: &PagedKvStore) -> Vec<DecodeStep> {
+        let d = self.cfg.synth.head_dim.max(1);
+        let mut outs = Mat::zeros(runs.len(), d);
+        let mut oks = vec![false; runs.len()];
+        if self.fan_out {
+            let work: Vec<(&mut RunState, (&mut [f32], &mut bool))> = runs
+                .iter_mut()
+                .zip(outs.data.chunks_mut(d).zip(oks.iter_mut()))
+                .collect();
+            par_drain(work, |(run, (out, ok))| {
+                *ok = decode_one(&self.vsp, &self.cfg, store, run, out)
+            });
+        } else {
+            for ((run, out), ok) in
+                runs.iter_mut().zip(outs.data.chunks_mut(d)).zip(oks.iter_mut())
+            {
+                *ok = decode_one(&self.vsp, &self.cfg, store, run, out);
+            }
+        }
+        finish_decode_round(runs, &outs, &oks, store)
+    }
+
+    /// Monolithic execution doesn't touch the paged store, so there is no
+    /// slice contract to exploit; delegate to shard 0 (bit-identical to a
+    /// single instance by construction).
+    fn process(&self, req: &PrefillRequest) -> PrefillResponse {
+        self.shards[0].process(req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_bounds_are_block_aligned_and_cover_everything() {
+        for (rows, bq, shards) in
+            [(256, 64, 4), (256, 64, 3), (100, 64, 2), (64, 64, 4), (1, 64, 3), (640, 64, 5)]
+        {
+            let b = slice_bounds(rows, bq, shards);
+            assert!(!b.is_empty() && b.len() <= shards, "rows={rows} bq={bq} s={shards}");
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b.last().unwrap().1, rows);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous cover");
+            }
+            for &(lo, hi) in &b {
+                assert!(lo < hi, "no empty slice in {b:?}");
+                assert_eq!(lo % bq, 0, "slice start {lo} must be block-aligned");
+            }
+        }
+    }
+
+    #[test]
+    fn capabilities_report_shard_dimension_and_parallel_promise() {
+        let e = ShardedBackend::native(EngineConfig::default(), 3);
+        let caps = e.capabilities();
+        assert!(caps.chunked && caps.decode && caps.parallel());
+        assert_eq!(caps.shards, 3);
+        assert_eq!(caps.replicas, 1);
+        assert_eq!(caps.max_bucket, 1024);
+        assert_eq!(e.shard_count(), 3);
+        assert_eq!(e.name(), "sharded");
+    }
+
+    #[test]
+    fn serial_shards_disable_the_fan_out_promise() {
+        use super::super::reference::ReferenceBackend;
+        let cfg = EngineConfig::default();
+        let shards: Vec<Box<dyn ExecBackend>> = (0..2)
+            .map(|_| Box::new(ReferenceBackend::quick(cfg.clone())) as Box<dyn ExecBackend>)
+            .collect();
+        let e = ShardedBackend::new(cfg, shards);
+        let caps = e.capabilities();
+        assert!(!caps.parallel(), "serial shards: no cross-thread promise");
+        assert_eq!(caps.shards, 2);
+    }
+}

@@ -14,6 +14,7 @@
 //!   "max_queue": 256, "chunk_tokens": 256, "max_inflight": 8,
 //!   "max_wait_ms": 5, "max_new_cap": 256, "shed_queue_depth": 0,
 //!   "kv_blocks": 1024, "kv_block_size": 64,
+//!   "shards": 2, "replicas": 2,
 //!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
 //!               "threads": 0, "budget_tau": 0.9,
 //!               "decode_top_k": 64, "decode_window": 64 }
@@ -98,6 +99,18 @@ pub const KEYS: &[ConfigKey] = &[
     ),
     usize_key!("kv_blocks", "kv-blocks", "paged KV pool: number of blocks", kv_blocks),
     usize_key!("kv_block_size", "kv-block-size", "paged KV pool: rows per block", kv_block_size),
+    usize_key!(
+        "shards",
+        "shards",
+        "sequence-parallel backend shards per replica (1 = unsharded)",
+        shards
+    ),
+    usize_key!(
+        "replicas",
+        "replicas",
+        "engine replicas behind the prefix-affinity router (1 = no router)",
+        replicas
+    ),
     ConfigKey {
         json: "kv_prefix_cache",
         cli: "kv-prefix-cache",
@@ -267,6 +280,8 @@ pub fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
         "buckets must be strictly increasing"
     );
     anyhow::ensure!(cfg.kv_block_size > 0, "kv_block_size must be positive");
+    anyhow::ensure!(cfg.shards >= 1, "shards must be at least 1");
+    anyhow::ensure!(cfg.replicas >= 1, "replicas must be at least 1");
     anyhow::ensure!(
         cfg.engine.budget_tau > 0.0 && cfg.engine.budget_tau <= 1.0,
         "budget_tau must be in (0, 1]"
@@ -314,6 +329,8 @@ mod tests {
             ("engine.decode_top_k", _) => KeyValue::Usize(23),
             ("engine.decode_window", _) => KeyValue::Usize(11),
             ("max_queue", _) => KeyValue::Usize(41),
+            ("shards", _) => KeyValue::Usize(2),
+            ("replicas", _) => KeyValue::Usize(3),
             ("shed_queue_depth", _) => KeyValue::Usize(13),
             ("chunk_tokens", _) => KeyValue::Usize(33),
             ("max_inflight", _) => KeyValue::Usize(5),
@@ -416,6 +433,9 @@ mod tests {
         let p2 = dir.join("bad2.json");
         std::fs::write(&p2, r#"{"chunk_tokens": 0}"#).unwrap();
         assert!(load(Some(p2.to_str().unwrap()), &args(&[])).is_err());
+        // Fleet dimensions of zero are meaningless.
+        assert!(load(None, &args(&["--shards", "0"])).is_err());
+        assert!(load(None, &args(&["--replicas", "0"])).is_err());
         let p3 = dir.join("bad3.json");
         // Pool smaller than the largest default bucket (1024 rows).
         std::fs::write(&p3, r#"{"kv_blocks": 4, "kv_block_size": 16}"#).unwrap();

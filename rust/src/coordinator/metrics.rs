@@ -47,6 +47,12 @@ pub struct Metrics {
     /// Scheduler rounds that failed to place any queued work (KV pool
     /// full) and backed off before retrying.
     pub requeue_rounds: AtomicU64,
+    /// Requests the replica router placed on this coordinator because its
+    /// paged pool already held (or was prefilling) the request's prefix.
+    pub routed_affinity: AtomicU64,
+    /// Requests the replica router placed here by least-loaded fallback
+    /// (no replica held the prefix).
+    pub routed_load: AtomicU64,
     prefill_us: Mutex<Reservoir>,
     queue_us: Mutex<Reservoir>,
     index_us: Mutex<Reservoir>,
@@ -71,6 +77,8 @@ pub struct Snapshot {
     pub deadline_expired: u64,
     pub cancelled: u64,
     pub requeue_rounds: u64,
+    pub routed_affinity: u64,
+    pub routed_load: u64,
     pub p50_prefill_us: f64,
     pub p95_prefill_us: f64,
     pub p50_ttft_us: f64,
@@ -102,6 +110,8 @@ impl Metrics {
             deadline_expired: AtomicU64::new(0),
             cancelled: AtomicU64::new(0),
             requeue_rounds: AtomicU64::new(0),
+            routed_affinity: AtomicU64::new(0),
+            routed_load: AtomicU64::new(0),
             prefill_us: res(),
             queue_us: res(),
             index_us: res(),
@@ -162,6 +172,8 @@ impl Metrics {
             deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
             cancelled: self.cancelled.load(Ordering::Relaxed),
             requeue_rounds: self.requeue_rounds.load(Ordering::Relaxed),
+            routed_affinity: self.routed_affinity.load(Ordering::Relaxed),
+            routed_load: self.routed_load.load(Ordering::Relaxed),
             p50_prefill_us: percentile_sorted(&prefill, 0.5),
             p95_prefill_us: percentile_sorted(&prefill, 0.95),
             p50_ttft_us: percentile_sorted(&ttft, 0.5),
@@ -203,6 +215,8 @@ impl Snapshot {
             ("deadline_expired", Json::Num(self.deadline_expired as f64)),
             ("cancelled", Json::Num(self.cancelled as f64)),
             ("requeue_rounds", Json::Num(self.requeue_rounds as f64)),
+            ("routed_affinity", Json::Num(self.routed_affinity as f64)),
+            ("routed_load", Json::Num(self.routed_load as f64)),
             ("p50_prefill_us", Json::Num(self.p50_prefill_us)),
             ("p95_prefill_us", Json::Num(self.p95_prefill_us)),
             ("p50_ttft_us", Json::Num(self.p50_ttft_us)),
@@ -321,6 +335,18 @@ mod tests {
         assert_eq!(back.get("deadline_expired").and_then(|x| x.as_f64()), Some(1.0));
         assert_eq!(back.get("cancelled").and_then(|x| x.as_f64()), Some(2.0));
         assert_eq!(back.get("requeue_rounds").and_then(|x| x.as_f64()), Some(5.0));
+    }
+
+    #[test]
+    fn router_counters_reach_snapshot_and_wire() {
+        let m = Metrics::new();
+        m.routed_affinity.fetch_add(7, Ordering::Relaxed);
+        m.routed_load.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!((s.routed_affinity, s.routed_load), (7, 2));
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("routed_affinity").and_then(|x| x.as_f64()), Some(7.0));
+        assert_eq!(back.get("routed_load").and_then(|x| x.as_f64()), Some(2.0));
     }
 
     #[test]

@@ -59,6 +59,10 @@
 //!                declarative key table drives both the JSON file format
 //!                and the `--key value` CLI overrides
 //!   metrics    — counters + reservoir-sampled latency/TTFT/ITL summaries
+//!   router     — prefix-affinity replica router: spreads independent
+//!                requests across M coordinator replicas, preferring the
+//!                replica whose paged pool already holds the request's
+//!                prefix chain, falling back to least-loaded
 //!   server     — TCP JSON-lines front end + client (streams token frames)
 
 pub mod admission;
@@ -68,6 +72,7 @@ pub mod engine;
 pub mod kv_cache;
 pub mod metrics;
 pub mod request;
+pub mod router;
 pub mod scheduler;
 pub mod server;
 
@@ -114,6 +119,15 @@ pub struct CoordinatorConfig {
     /// keeping the remaining headroom for interactive traffic.
     /// `0` = auto: half of `max_queue`, at least 1.
     pub shed_queue_depth: usize,
+    /// Sequence-parallel shard count of the execution backend: each prefill
+    /// chunk's query blocks are split across this many backend instances
+    /// ([`backend::sharded::ShardedBackend`]), merged bit-identically to a
+    /// single instance.  `1` = no sharding.
+    pub shards: usize,
+    /// Replica count of the engine fleet: independent requests are spread
+    /// across this many full coordinator stacks by the prefix-affinity
+    /// [`router::ReplicaRouter`].  `1` = a single coordinator, no router.
+    pub replicas: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -129,6 +143,8 @@ impl Default for CoordinatorConfig {
             kv_block_size: 64,
             kv_prefix_cache: true,
             shed_queue_depth: 0,
+            shards: 1,
+            replicas: 1,
         }
     }
 }
@@ -211,7 +227,7 @@ impl Coordinator {
     ) -> Result<request::ResponseHandle, admission::Rejected> {
         let cancel = req.cancel.clone();
         let (tx, rx) = mpsc::channel();
-        match self.admission.push(admission::WorkItem { req, reply: tx }) {
+        match self.admission.push(admission::WorkItem::new(req, tx)) {
             Ok(()) => Ok(request::ResponseHandle::new(rx, cancel)),
             Err(rej) => {
                 if rej.reason == request::RejectReason::Shed {
@@ -227,6 +243,12 @@ impl Coordinator {
     pub fn prefill(&self, req: PrefillRequest) -> anyhow::Result<PrefillResponse> {
         let rx = self.submit(req).map_err(|e| anyhow::anyhow!("{e}"))?;
         Ok(rx.wait()?)
+    }
+
+    /// Current admission-queue depth (the [`router::ReplicaRouter`]'s
+    /// least-loaded signal).
+    pub fn queue_len(&self) -> usize {
+        self.admission.len()
     }
 
     pub fn shutdown(mut self) -> metrics::Snapshot {

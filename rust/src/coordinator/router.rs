@@ -1,0 +1,244 @@
+//! Prefix-affinity replica router — level 2 of the scale-out topology.
+//!
+//! Level 1 ([`super::backend::sharded::ShardedBackend`]) splits one prefill
+//! chunk across N backend shards; this level spreads *independent requests*
+//! across M full engine stacks (coordinator + executor + paged KV pool).
+//! Placement is **affinity-then-load**:
+//!
+//! 1. Compute the request's [`PrefixChain`] once on the router's probe
+//!    backend and ask every replica's paged pool how much of it is already
+//!    resident ([`PagedKvStore::probe_prefix`] — a hash-index lookup, no
+//!    lock on the executor).  The replica with the most resident rows wins;
+//!    a chain currently being prefilled by an in-flight leader counts as
+//!    fully resident, so followers herd onto the leader's replica and
+//!    coalesce there instead of recomputing the prefix cold elsewhere.
+//! 2. If no replica holds any of the prefix (or the backend opts out of
+//!    chains), fall back to the replica with the shortest admission queue
+//!    (lowest index on ties).
+//!
+//! Each placement increments the chosen replica's `routed_affinity` or
+//! `routed_load` counter, so `{"op": "stats"}` and `vsprefill info` can
+//! show whether the fleet is actually getting warm-prefix locality or just
+//! load-balancing.  Rejections stay typed: a routed submission that hits a
+//! full queue hands back the usual [`admission::Rejected`] with its retry
+//! hint — the router does not silently retry elsewhere, because the chosen
+//! replica was already the best (warmest or least-loaded) home for it.
+
+use std::sync::atomic::Ordering;
+use std::sync::Mutex;
+
+use crate::tensor::paged::PrefixChain;
+use crate::util::json::Json;
+
+use super::admission::Rejected;
+use super::backend::{Capabilities, ExecBackend};
+use super::metrics::Snapshot;
+use super::request::{PrefillRequest, PrefillResponse, ResponseHandle};
+use super::{server, Coordinator};
+
+/// A fleet of coordinator replicas behind one prefix-affinity placement
+/// policy.  Build through [`crate::serve::EngineBuilder::build_fleet`].
+pub struct ReplicaRouter {
+    replicas: Vec<Coordinator>,
+    /// The router's own backend instance, used only for request -> chain
+    /// mapping (never for execution).  `ExecBackend` is `Send` but not
+    /// `Sync`, so the router serializes its probe calls behind a mutex;
+    /// chain hashing is cheap relative to any prefill.
+    probe: Mutex<Box<dyn ExecBackend>>,
+}
+
+impl ReplicaRouter {
+    pub fn new(
+        replicas: Vec<Coordinator>,
+        probe: Box<dyn ExecBackend>,
+    ) -> anyhow::Result<ReplicaRouter> {
+        anyhow::ensure!(!replicas.is_empty(), "a replica fleet needs at least one coordinator");
+        Ok(ReplicaRouter { replicas, probe: Mutex::new(probe) })
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn replicas(&self) -> &[Coordinator] {
+        &self.replicas
+    }
+
+    /// The fleet's capability surface: the probe backend's, with the
+    /// replica dimension set to the fleet width.
+    pub fn capabilities(&self) -> Capabilities {
+        let mut caps = self.probe.lock().unwrap().capabilities();
+        caps.replicas = self.replicas.len();
+        caps
+    }
+
+    /// The request's prefix chain as the probe backend sees it (all
+    /// replicas share one configuration, so one chain fits every pool).
+    fn chain_for(&self, req: &PrefillRequest) -> Option<PrefixChain> {
+        let probe = self.probe.lock().unwrap();
+        let block_size = self.replicas[0].kv.block_size;
+        probe.bucket_for(req.seq_len()).and_then(|b| probe.prefix_chain(req, b, block_size))
+    }
+
+    /// Choose a replica for `req` and count the placement on it:
+    /// warmest-prefix first, least-loaded fallback.
+    pub fn route(&self, req: &PrefillRequest) -> usize {
+        if let Some(chain) = self.chain_for(req) {
+            let mut best: Option<(usize, usize)> = None; // (score, replica)
+            for (i, r) in self.replicas.iter().enumerate() {
+                let p = r.kv.probe_prefix(&chain);
+                // An in-flight leader scores as a full chain: followers are
+                // herded to the leader's replica, where the scheduler's
+                // coalescing turns them into a shared-prefix hit.
+                let score = p.resident_rows + if p.inflight { chain.rows() } else { 0 };
+                if score > 0 && best.is_none_or(|(s, _)| score > s) {
+                    best = Some((score, i));
+                }
+            }
+            if let Some((_, i)) = best {
+                self.replicas[i].metrics.routed_affinity.fetch_add(1, Ordering::Relaxed);
+                return i;
+            }
+        }
+        let i = (0..self.replicas.len())
+            .min_by_key(|&i| self.replicas[i].queue_len())
+            .unwrap_or(0);
+        self.replicas[i].metrics.routed_load.fetch_add(1, Ordering::Relaxed);
+        i
+    }
+
+    /// Route and submit; the handle streams from the chosen replica.
+    pub fn submit(&self, req: PrefillRequest) -> Result<ResponseHandle, Rejected> {
+        let i = self.route(&req);
+        self.replicas[i].submit(req)
+    }
+
+    /// Route, submit, and block for the final response.
+    pub fn prefill(&self, req: PrefillRequest) -> anyhow::Result<PrefillResponse> {
+        let i = self.route(&req);
+        self.replicas[i].prefill(req)
+    }
+
+    /// Fleet health for the wire and `vsprefill info`: totals of the
+    /// routing counters plus every replica's full stats object (each with
+    /// its own pool gauges), in replica order.
+    pub fn stats_json(&self) -> Json {
+        let mut affinity = 0u64;
+        let mut load = 0u64;
+        let mut fleet = Vec::new();
+        for r in &self.replicas {
+            affinity += r.metrics.routed_affinity.load(Ordering::Relaxed);
+            load += r.metrics.routed_load.load(Ordering::Relaxed);
+            fleet.push(server::stats_json(r));
+        }
+        Json::obj(vec![
+            ("replicas", Json::Num(self.replicas.len() as f64)),
+            ("routed_affinity", Json::Num(affinity as f64)),
+            ("routed_load", Json::Num(load as f64)),
+            ("fleet", Json::Arr(fleet)),
+        ])
+    }
+
+    /// Stop every replica and return their final snapshots, replica order.
+    pub fn shutdown(self) -> Vec<Snapshot> {
+        self.replicas.into_iter().map(|r| r.shutdown()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::native::NativeBackend;
+    use crate::coordinator::{AttentionMode, CoordinatorConfig};
+
+    fn fleet(m: usize) -> ReplicaRouter {
+        let cfg = CoordinatorConfig { max_wait_ms: 1, ..Default::default() };
+        let replicas = (0..m)
+            .map(|_| {
+                let backend = Box::new(NativeBackend::quick(cfg.engine.clone()));
+                Coordinator::start(cfg.clone(), backend)
+            })
+            .collect();
+        ReplicaRouter::new(replicas, Box::new(NativeBackend::quick(cfg.engine.clone()))).unwrap()
+    }
+
+    #[test]
+    fn cold_requests_take_the_least_loaded_door() {
+        let router = fleet(2);
+        // Distinct prompts: nothing is warm anywhere, every placement is a
+        // load-balance decision.
+        for i in 0..4 {
+            let r = router
+                .prefill(PrefillRequest::synthetic(i, 128, 100 + i, AttentionMode::Sparse))
+                .unwrap();
+            assert!(r.ok, "{:?}", r.error);
+        }
+        let (mut affinity, mut load) = (0, 0);
+        for r in router.replicas() {
+            affinity += r.metrics.routed_affinity.load(Ordering::Relaxed);
+            load += r.metrics.routed_load.load(Ordering::Relaxed);
+        }
+        assert_eq!(affinity, 0, "distinct prompts never score affinity");
+        assert_eq!(load, 4, "every placement is counted exactly once");
+    }
+
+    #[test]
+    fn warm_prefix_wins_over_load_balance() {
+        let router = fleet(2);
+        // Cold run of one prompt lands somewhere and leaves its prefix
+        // resident there.
+        let cold =
+            router.prefill(PrefillRequest::synthetic(1, 256, 42, AttentionMode::Sparse)).unwrap();
+        assert!(cold.ok);
+        let home = router
+            .replicas()
+            .iter()
+            .position(|r| r.metrics.completed.load(Ordering::Relaxed) == 1)
+            .expect("the cold run completed on some replica");
+        // The repeat must follow the warm prefix home, not round-robin away.
+        let warm =
+            router.prefill(PrefillRequest::synthetic(2, 256, 42, AttentionMode::Sparse)).unwrap();
+        assert!(warm.ok);
+        let r = &router.replicas()[home];
+        assert_eq!(r.metrics.completed.load(Ordering::Relaxed), 2, "repeat landed on home");
+        assert_eq!(r.metrics.routed_affinity.load(Ordering::Relaxed), 1);
+        assert_eq!(r.metrics.prefix_hits.load(Ordering::Relaxed), 1, "and hit the warm blocks");
+    }
+
+    #[test]
+    fn fleet_stats_report_per_replica_health() {
+        let router = fleet(2);
+        assert!(router
+            .prefill(PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse))
+            .unwrap()
+            .ok);
+        let caps = router.capabilities();
+        assert_eq!(caps.replicas, 2);
+        let j = Json::parse(&router.stats_json().to_string()).unwrap();
+        assert_eq!(j.get("replicas").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(
+            j.get("routed_affinity").and_then(|x| x.as_f64()).unwrap()
+                + j.get("routed_load").and_then(|x| x.as_f64()).unwrap(),
+            1.0,
+            "one placement, counted once, visible in the fleet totals"
+        );
+        let fleet = j.get("fleet").and_then(|f| f.as_arr()).unwrap();
+        assert_eq!(fleet.len(), 2);
+        for replica in fleet {
+            assert!(replica.get("kv_used_blocks").is_some(), "pool gauges per replica");
+            assert!(replica.get("completed").is_some());
+        }
+        let done: f64 = fleet
+            .iter()
+            .map(|r| r.get("completed").and_then(|x| x.as_f64()).unwrap())
+            .sum();
+        assert_eq!(done, 1.0);
+    }
+
+    #[test]
+    fn empty_fleet_is_rejected() {
+        let cfg = CoordinatorConfig::default();
+        let probe = Box::new(NativeBackend::quick(cfg.engine.clone()));
+        assert!(ReplicaRouter::new(Vec::new(), probe).is_err());
+    }
+}

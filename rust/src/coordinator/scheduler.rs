@@ -299,11 +299,11 @@ fn admit(
                 Priority::Batch => 1,
             };
             let resident = if tight && cfg.prefix_cache && caps.chunked {
-                backend
-                    .bucket_for(it.req.seq_len())
-                    .and_then(|b| backend.prefix_chain(&it.req, b, store.block_size))
-                    .map(|c| store.probe_prefix(&c).resident_rows)
-                    .unwrap_or(0)
+                // Served from the item's generation-keyed cache (see
+                // [`WorkItem::probe`]): the store is only re-probed for
+                // items whose last answer predates a prefix-state change —
+                // not for every queued item on every pressure round.
+                it.probe(backend, store).resident_rows
             } else {
                 0
             };
@@ -385,10 +385,12 @@ fn admit(
                 continue;
             }
             // Prefix-cache admission: probe the store's index with the
-            // request's content chain; matching leading blocks are pinned
-            // (shared) into the reservation and only the tail is fresh.
+            // request's content chain (hashed once per queued item, cloned
+            // out of the item's cache here); matching leading blocks are
+            // pinned (shared) into the reservation and only the tail is
+            // fresh.
             let chain = if cfg.prefix_cache {
-                backend.prefix_chain(&item.req, bucket, store.block_size)
+                item.chain(backend, store.block_size).cloned()
             } else {
                 None
             };
@@ -396,14 +398,15 @@ fn admit(
                 // In-flight coalescing: if another request is prefilling
                 // this exact prompt right now, defer instead of starting a
                 // duplicate cold prefill.  The leader publishes its groups
-                // after every chunk, so the probe's resident count grows
-                // each round and the follower admits with a full hit once
-                // the leader's prompt is resident (or cold if the leader
-                // died — `free` clears its claim).  No backoff: the leader
-                // itself makes progress every scheduler round.
-                let probe = store.probe_prefix(c);
-                let full: usize = c.groups.iter().map(|g| g.rows).sum();
-                if probe.inflight && probe.resident_rows < full {
+                // after every chunk — each publish bumps the store's prefix
+                // generation, so the deferred follower's cached probe
+                // refreshes and its resident count grows each round until
+                // it admits with a full hit once the leader's prompt is
+                // resident (or cold if the leader died — `free` clears its
+                // claim).  No backoff: the leader itself makes progress
+                // every scheduler round.
+                let probe = item.probe(backend, store);
+                if probe.inflight && probe.resident_rows < c.rows() {
                     deferred.push(item);
                     continue;
                 }
@@ -621,7 +624,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let mut req = PrefillRequest::synthetic(id, n, id, AttentionMode::Sparse);
         req.max_new_tokens = max_new;
-        adm.push(WorkItem { req, reply: tx }).unwrap();
+        adm.push(WorkItem::new(req, tx)).unwrap();
         rx
     }
 
@@ -783,7 +786,7 @@ mod tests {
         let cold_rx = {
             let (tx, rx) = mpsc::channel();
             let req = PrefillRequest::synthetic(1, 256, 77, AttentionMode::Sparse);
-            adm.push(WorkItem { req, reply: tx }).unwrap();
+            adm.push(WorkItem::new(req, tx)).unwrap();
             rx
         };
         let stop = AtomicBool::new(true);
@@ -799,7 +802,7 @@ mod tests {
         let warm_rx = {
             let (tx, rx) = mpsc::channel();
             let req = PrefillRequest::synthetic(2, 256, 77, AttentionMode::Sparse);
-            adm.push(WorkItem { req, reply: tx }).unwrap();
+            adm.push(WorkItem::new(req, tx)).unwrap();
             rx
         };
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
@@ -832,7 +835,7 @@ mod tests {
         for id in [1u64, 2] {
             let (tx, rx) = mpsc::channel();
             let req = PrefillRequest::synthetic(id, 256, 99, AttentionMode::Sparse);
-            adm.push(WorkItem { req, reply: tx }).unwrap();
+            adm.push(WorkItem::new(req, tx)).unwrap();
             run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
             let (_, resp) = final_of(&rx);
             assert!(resp.ok);
@@ -861,7 +864,7 @@ mod tests {
         let mut req = PrefillRequest::synthetic(2, 128, 1, AttentionMode::Sparse);
         req.max_new_tokens = 6;
         req.stop_token = Some(probe.tokens[1]);
-        adm.push(WorkItem { req, reply: tx }).unwrap();
+        adm.push(WorkItem::new(req, tx)).unwrap();
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
         let (frames, resp) = final_of(&rx);
         assert!(resp.ok, "{:?}", resp.error);
@@ -886,7 +889,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let req = PrefillRequest::synthetic(1, 1024, 5, AttentionMode::Sparse);
         let flag = req.cancel.clone();
-        adm.push(WorkItem { req, reply: tx }).unwrap();
+        adm.push(WorkItem::new(req, tx)).unwrap();
         let mut ready = VecDeque::new();
         let mut decoding = DecodeLane::default();
         let mut st = AdmitState::default();
@@ -957,7 +960,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let mut req = PrefillRequest::synthetic(1, 1024, 3, AttentionMode::Sparse);
         req.deadline_ms = Some(200);
-        adm.push(WorkItem { req, reply: tx }).unwrap();
+        adm.push(WorkItem::new(req, tx)).unwrap();
         let mut ready = VecDeque::new();
         let mut decoding = DecodeLane::default();
         let mut st = AdmitState::default();
@@ -986,7 +989,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let mut req = PrefillRequest::synthetic(1, 128, 1, AttentionMode::Sparse);
         req.deadline_ms = Some(0); // expired the instant it was submitted
-        adm.push(WorkItem { req, reply: tx }).unwrap();
+        adm.push(WorkItem::new(req, tx)).unwrap();
         let stop = AtomicBool::new(true);
         let mut rng = Rng::new(17);
         run_loop(&cfg, &backend, &adm, &store, &met, &stop, &mut rng);
@@ -1005,10 +1008,10 @@ mod tests {
         let (tx1, _rx1) = mpsc::channel();
         let mut batch = PrefillRequest::synthetic(1, 128, 1, AttentionMode::Sparse);
         batch.priority = Priority::Batch;
-        adm.push(WorkItem { req: batch, reply: tx1 }).unwrap();
+        adm.push(WorkItem::new(batch, tx1)).unwrap();
         let (tx2, _rx2) = mpsc::channel();
         let inter = PrefillRequest::synthetic(2, 128, 2, AttentionMode::Sparse);
-        adm.push(WorkItem { req: inter, reply: tx2 }).unwrap();
+        adm.push(WorkItem::new(inter, tx2)).unwrap();
         let mut ready = VecDeque::new();
         let mut st = AdmitState::default();
         let mut rng = Rng::new(14);
@@ -1025,7 +1028,7 @@ mod tests {
         let mk = |id: u64| {
             let (tx, rx) = mpsc::channel();
             let req = PrefillRequest::synthetic(id, 256, 55, AttentionMode::Sparse);
-            adm.push(WorkItem { req, reply: tx }).unwrap();
+            adm.push(WorkItem::new(req, tx)).unwrap();
             rx
         };
         let leader_rx = mk(1);

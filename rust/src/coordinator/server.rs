@@ -34,11 +34,38 @@ use std::sync::Arc;
 
 use crate::util::json::Json;
 
+use super::admission::Rejected;
 use super::engine::AttentionMode;
 use super::request::{
-    Outcome, PrefillRequest, PrefillResponse, Priority, ResponseEvent, TokenFrame,
+    Outcome, PrefillRequest, PrefillResponse, Priority, ResponseEvent, ResponseHandle, TokenFrame,
 };
+use super::router::ReplicaRouter;
 use super::Coordinator;
+
+/// What a [`Server`] serves: one coordinator, or a replica fleet behind
+/// the prefix-affinity router.  The wire protocol is identical either way;
+/// only the `{"op": "stats"}` answer differs (a fleet reports per-replica
+/// health).
+pub enum Engine {
+    Single(Arc<Coordinator>),
+    Fleet(Arc<ReplicaRouter>),
+}
+
+impl Engine {
+    fn submit(&self, req: PrefillRequest) -> Result<ResponseHandle, Rejected> {
+        match self {
+            Engine::Single(c) => c.submit(req),
+            Engine::Fleet(f) => f.submit(req),
+        }
+    }
+
+    fn stats(&self) -> Json {
+        match self {
+            Engine::Single(c) => stats_json(c),
+            Engine::Fleet(f) => f.stats_json(),
+        }
+    }
+}
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -90,8 +117,18 @@ pub fn parse_request(line: &str) -> anyhow::Result<PrefillRequest> {
 }
 
 impl Server {
-    /// Bind and serve on 127.0.0.1:`port` (0 = ephemeral).
+    /// Bind and serve one coordinator on 127.0.0.1:`port` (0 = ephemeral).
     pub fn start(coordinator: Arc<Coordinator>, port: u16) -> anyhow::Result<Server> {
+        Server::start_engine(Engine::Single(coordinator), port)
+    }
+
+    /// Bind and serve a replica fleet on 127.0.0.1:`port` (0 = ephemeral).
+    pub fn start_fleet(router: Arc<ReplicaRouter>, port: u16) -> anyhow::Result<Server> {
+        Server::start_engine(Engine::Fleet(router), port)
+    }
+
+    fn start_engine(engine: Engine, port: u16) -> anyhow::Result<Server> {
+        let engine = Arc::new(engine);
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
@@ -102,7 +139,7 @@ impl Server {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let c = coordinator.clone();
+                        let c = engine.clone();
                         let s = stop2.clone();
                         conns.push(std::thread::spawn(move || handle_conn(stream, c, s)));
                     }
@@ -136,7 +173,7 @@ impl Drop for Server {
     }
 }
 
-fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<AtomicBool>) {
+fn handle_conn(stream: TcpStream, engine: Arc<Engine>, stop: Arc<AtomicBool>) {
     let peer = stream.peer_addr().ok();
     // Read timeout so the handler can observe shutdown instead of blocking
     // forever on an idle client.
@@ -171,14 +208,14 @@ fn handle_conn(stream: TcpStream, coordinator: Arc<Coordinator>, stop: Arc<Atomi
         let line = current;
         if let Ok(j) = Json::parse(&line) {
             if j.get("op").and_then(|o| o.as_str()) == Some("stats") {
-                if writeln!(writer, "{}", stats_json(&coordinator).to_string()).is_err() {
+                if writeln!(writer, "{}", engine.stats().to_string()).is_err() {
                     break;
                 }
                 continue;
             }
         }
         let resp_json = match parse_request(&line) {
-            Ok(req) => match coordinator.submit(req) {
+            Ok(req) => match engine.submit(req) {
                 // Stream the request's events: token frames as they land,
                 // then the final response line.
                 Ok(handle) => loop {
@@ -438,6 +475,34 @@ mod tests {
         assert_eq!(num("cancelled"), 0.0);
         // A normal request still works on the same connection afterwards.
         assert!(client.prefill_synthetic(3, 128, 7, "sparse", 0.5).unwrap().ok);
+        server.shutdown();
+    }
+
+    #[test]
+    fn fleet_stats_flow_over_the_wire() {
+        use crate::coordinator::CoordinatorConfig;
+        use crate::serve::EngineBuilder;
+        let cfg = CoordinatorConfig { max_wait_ms: 1, replicas: 2, ..Default::default() };
+        let fleet = Arc::new(EngineBuilder::new().config(cfg).build_fleet().unwrap());
+        let server = Server::start_fleet(fleet, 0).unwrap();
+        let mut client = Client::connect(server.addr).unwrap();
+        // The same prompt twice: the router must send the repeat to the
+        // warm replica, where it scores a prefix hit.
+        assert!(client.prefill_synthetic(1, 256, 42, "sparse", 0.5).unwrap().ok);
+        assert!(client.prefill_synthetic(2, 256, 42, "sparse", 0.5).unwrap().ok);
+        let s = client.stats().unwrap();
+        let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(-1.0);
+        assert_eq!(num("replicas"), 2.0);
+        assert_eq!(num("routed_affinity") + num("routed_load"), 2.0);
+        assert!(num("routed_affinity") >= 1.0, "the repeat followed its warm prefix");
+        let fleet_arr = s.get("fleet").and_then(|f| f.as_arr()).unwrap();
+        assert_eq!(fleet_arr.len(), 2);
+        let per = |k: &str| -> Vec<f64> {
+            fleet_arr.iter().map(|r| r.get(k).and_then(|x| x.as_f64()).unwrap()).collect()
+        };
+        assert_eq!(per("completed").iter().sum::<f64>(), 2.0);
+        assert_eq!(per("prefix_hits").iter().sum::<f64>(), 1.0);
+        assert!(per("kv_cached_idle_blocks").iter().sum::<f64>() > 0.0, "warm pool visible");
         server.shutdown();
     }
 

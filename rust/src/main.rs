@@ -2,7 +2,9 @@
 //!
 //! Subcommands:
 //!   serve    — start the TCP prefill service (--backend
-//!              native|reference|pjrt|auto)
+//!              native|reference|pjrt|auto; --shards N fans each prefill
+//!              chunk across N backend instances, --replicas M serves a
+//!              prefix-affinity routed fleet of M engine stacks)
 //!   bench    — closed-loop load test against an in-process coordinator
 //!   exp      — regenerate a paper table/figure (table1..5, fig2..8, ttft, all)
 //!   runtime  — smoke-check the PJRT artifact bundle
@@ -40,6 +42,14 @@ fn main() -> anyhow::Result<()> {
             println!("vsprefill {} — VSPrefill reproduction (rust+jax+pallas)", env!("CARGO_PKG_VERSION"));
             println!("subcommands: serve | bench | exp <name> | runtime | info [--port N]");
             println!("exp names: table1 table2 table3 table4 table5 fig2 fig3 fig4 fig5 fig6 fig7 fig8 ttft all");
+            // Satellite of backend selection: report how `--backend auto`
+            // would resolve right now, and why, so a missing/broken
+            // artifact bundle is diagnosable without starting a server.
+            let probe = EngineBuilder::new().artifacts(&args.str_or("artifacts", "artifacts"));
+            match probe.auto_fallback_reason() {
+                None => println!("auto backend: pjrt (artifact bundle loads)"),
+                Some(reason) => println!("auto backend: native — {reason}"),
+            }
             Ok(())
         }
         other => anyhow::bail!("unknown subcommand '{other}' (try: info)"),
@@ -54,6 +64,32 @@ fn info_stats(port: u16) -> anyhow::Result<()> {
     let addr: std::net::SocketAddr = format!("127.0.0.1:{port}").parse()?;
     let mut client = Client::connect(addr)?;
     let s = client.stats()?;
+    // A fleet server answers with per-replica stats; print fleet health
+    // (placement counters + per-replica occupancy) instead of the
+    // single-stack summary.
+    if let Some(fleet) = s.get("fleet").and_then(|f| f.as_arr()) {
+        let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        println!("live fleet stats from {addr}:");
+        println!(
+            "  replicas: {}  routed by affinity {}  by load {}",
+            num("replicas"),
+            num("routed_affinity"),
+            num("routed_load")
+        );
+        for (i, r) in fleet.iter().enumerate() {
+            let rn = |k: &str| r.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+            println!(
+                "  replica {i}: {} completed  {} failed  prefix hit ratio {:.2}  kv blocks {} used ({} peak, {} idle)",
+                rn("completed"),
+                rn("failed"),
+                rn("prefix_hit_ratio"),
+                rn("kv_used_blocks"),
+                rn("kv_peak_used_blocks"),
+                rn("kv_cached_idle_blocks")
+            );
+        }
+        return Ok(());
+    }
     let num = |k: &str| s.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
     println!("live stats from {addr}:");
     println!(
@@ -91,10 +127,25 @@ fn build_coordinator(args: &Args) -> anyhow::Result<Coordinator> {
 }
 
 fn serve(args: &Args) -> anyhow::Result<()> {
-    let coordinator = std::sync::Arc::new(build_coordinator(args)?);
+    let cfg = vsprefill::coordinator::config::load(args.str_opt("config"), args)?;
+    let replicas = cfg.replicas;
+    let builder = EngineBuilder::new()
+        .config(cfg)
+        .backend_name(&args.str_or("backend", "native"))?
+        .artifacts(&args.str_or("artifacts", "artifacts"));
     let port = args.usize_or("port", 7791) as u16;
-    let server = Server::start(coordinator.clone(), port)?;
-    println!("vsprefill serving on {}", server.addr);
+    // Bound so the listener outlives the serve loop below.
+    let _server = if replicas > 1 {
+        let fleet = std::sync::Arc::new(builder.build_fleet()?);
+        let server = Server::start_fleet(fleet, port)?;
+        println!("vsprefill serving a {replicas}-replica fleet on {}", server.addr);
+        server
+    } else {
+        let coordinator = std::sync::Arc::new(builder.build()?);
+        let server = Server::start(coordinator.clone(), port)?;
+        println!("vsprefill serving on {}", server.addr);
+        server
+    };
     println!("protocol: one JSON per line, e.g. {{\"id\":1,\"n\":256,\"seed\":7,\"mode\":\"sparse\"}}");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));

@@ -24,10 +24,20 @@
 //! Backend selection is data, not code: `backend(BackendKind::..)` or
 //! `backend_name("native" | "reference" | "pjrt" | "auto")` — everything
 //! downstream of the builder talks `dyn ExecBackend`.
+//!
+//! Scale-out is two orthogonal knobs on the same builder:
+//! [`shards`](EngineBuilder::shards) fans each prefill chunk across N
+//! backend instances inside one coordinator (bit-identical to one
+//! instance), and [`replicas`](EngineBuilder::replicas) +
+//! [`build_fleet`](EngineBuilder::build_fleet) spread independent requests
+//! across M whole stacks behind the prefix-affinity
+//! [`ReplicaRouter`](crate::coordinator::router::ReplicaRouter).
 
 use crate::coordinator::backend::faulty::FaultyBackend;
 use crate::coordinator::backend::native::NativeBackend;
 use crate::coordinator::backend::reference::ReferenceBackend;
+use crate::coordinator::backend::sharded::ShardedBackend;
+use crate::coordinator::router::ReplicaRouter;
 use crate::coordinator::{config, Coordinator, CoordinatorConfig, EngineConfig, ExecBackend};
 use crate::indexer::Indexer;
 
@@ -126,6 +136,23 @@ impl EngineBuilder {
         self
     }
 
+    /// Sequence-parallel shard count: `n > 1` fans each prefill chunk's
+    /// query blocks across `n` backend instances
+    /// ([`ShardedBackend`]), merged bit-identically to a single instance.
+    /// Native-only (the fused tiled kernel is what shards); `Auto` with
+    /// shards resolves to sharded native.
+    pub fn shards(mut self, n: usize) -> EngineBuilder {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// Replica count of the engine fleet; `m > 1` requires
+    /// [`build_fleet`](Self::build_fleet).
+    pub fn replicas(mut self, m: usize) -> EngineBuilder {
+        self.cfg.replicas = m;
+        self
+    }
+
     /// Default rows per prefill chunk.
     pub fn chunk_tokens(mut self, chunk: usize) -> EngineBuilder {
         self.cfg.chunk_tokens = chunk;
@@ -177,6 +204,22 @@ impl EngineBuilder {
     fn build_inner_backend(&self) -> anyhow::Result<Box<dyn ExecBackend>> {
         config::validate(&self.cfg)?;
         let ecfg = self.cfg.engine.clone();
+        if self.cfg.shards > 1 {
+            return Ok(match self.kind {
+                // Sharding is a property of the fused tiled kernel; `Auto`
+                // with shards therefore resolves straight to sharded native
+                // (PJRT multi-device is a separate roadmap item).
+                BackendKind::Native | BackendKind::Auto => self.sharded_native(ecfg),
+                BackendKind::Reference => anyhow::bail!(
+                    "sharded execution requires the native backend \
+                     (the reference oracle stays single-instance)"
+                ),
+                BackendKind::Pjrt => anyhow::bail!(
+                    "sharded execution is not supported on the pjrt backend \
+                     (PJRT multi-device is tracked in ROADMAP.md)"
+                ),
+            });
+        }
         Ok(match self.kind {
             BackendKind::Native => self.native(ecfg),
             BackendKind::Reference => match &self.indexer {
@@ -188,7 +231,8 @@ impl EngineBuilder {
             // artifacts directory (not just a default-path probe), so an
             // `.artifacts(..)` override is honored; any load failure —
             // feature off, bundle missing or malformed — falls back to
-            // native.
+            // native.  [`auto_fallback_reason`](Self::auto_fallback_reason)
+            // runs the same resolution and reports the typed why.
             BackendKind::Auto => match self.build_pjrt(ecfg.clone()) {
                 Ok(b) => b,
                 Err(_) => self.native(ecfg),
@@ -196,11 +240,46 @@ impl EngineBuilder {
         })
     }
 
+    /// Why an `Auto` backend selection would fall back to native right
+    /// now, or `None` if the PJRT path loads.  Runs exactly the resolution
+    /// the `Auto` arm of [`build_backend`](Self::build_backend) runs, so
+    /// the report and the behavior cannot drift; the message distinguishes
+    /// a binary built without the `pjrt` feature, a missing artifact
+    /// bundle directory, and a bundle that failed to load.  Surfaced by
+    /// `vsprefill info`.
+    pub fn auto_fallback_reason(&self) -> Option<String> {
+        match self.build_pjrt(self.cfg.engine.clone()) {
+            Ok(_) => None,
+            Err(e) => Some(format!("{e:#}")),
+        }
+    }
+
     /// Build the full serving stack: construct the backend (validating the
-    /// configuration on the way) and start the coordinator.
+    /// configuration on the way) and start the coordinator.  A replica
+    /// count above 1 is a fleet — use [`build_fleet`](Self::build_fleet).
     pub fn build(self) -> anyhow::Result<Coordinator> {
+        anyhow::ensure!(
+            self.cfg.replicas <= 1,
+            "replicas = {} builds a fleet: use EngineBuilder::build_fleet",
+            self.cfg.replicas
+        );
         let backend = self.build_backend()?;
         Ok(Coordinator::start(self.cfg, backend))
+    }
+
+    /// Build the replica fleet: `replicas` full coordinator stacks (each
+    /// with its own backend, executor thread and paged KV pool) behind the
+    /// prefix-affinity [`ReplicaRouter`], plus one probe backend the
+    /// router uses for request-to-chain mapping.  A 1-replica fleet is
+    /// just a routed single stack.
+    pub fn build_fleet(self) -> anyhow::Result<ReplicaRouter> {
+        let m = self.cfg.replicas.max(1);
+        let mut replicas = Vec::with_capacity(m);
+        for _ in 0..m {
+            let backend = self.build_backend()?;
+            replicas.push(Coordinator::start(self.cfg.clone(), backend));
+        }
+        ReplicaRouter::new(replicas, self.build_backend()?)
     }
 
     fn native(&self, ecfg: EngineConfig) -> Box<dyn ExecBackend> {
@@ -210,10 +289,26 @@ impl EngineBuilder {
         }
     }
 
+    fn sharded_native(&self, ecfg: EngineConfig) -> Box<dyn ExecBackend> {
+        let n = self.cfg.shards;
+        match &self.indexer {
+            Some(ix) => Box::new(ShardedBackend::native_with_indexer(ecfg, ix.clone(), n)),
+            None => Box::new(ShardedBackend::native(ecfg, n)),
+        }
+    }
+
     #[cfg(feature = "pjrt")]
     fn build_pjrt(&self, ecfg: EngineConfig) -> anyhow::Result<Box<dyn ExecBackend>> {
         use crate::coordinator::backend::pjrt::PjrtBackend;
-        let rt = crate::runtime::Engine::load(std::path::Path::new(&self.artifacts))?;
+        let dir = std::path::Path::new(&self.artifacts);
+        anyhow::ensure!(
+            dir.is_dir(),
+            "no artifact bundle directory at '{}' (build one first; see rust/README.md)",
+            self.artifacts
+        );
+        let rt = crate::runtime::Engine::load(dir).map_err(|e| {
+            anyhow::anyhow!("artifact bundle at '{}' failed to load: {e:#}", self.artifacts)
+        })?;
         Ok(Box::new(PjrtBackend::load(ecfg, rt)?))
     }
 
@@ -268,5 +363,37 @@ mod tests {
         // Auto falls back to native instead of erroring.
         let b = EngineBuilder::new().backend(BackendKind::Auto).build_backend().unwrap();
         assert_eq!(b.name(), "native");
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn auto_fallback_reason_names_the_missing_feature() {
+        let reason = EngineBuilder::new().auto_fallback_reason().expect("no pjrt here");
+        assert!(reason.contains("pjrt"), "{reason}");
+    }
+
+    #[test]
+    fn shards_knob_builds_the_sharded_composite() {
+        let b = EngineBuilder::new().shards(3).build_backend().unwrap();
+        assert_eq!(b.name(), "sharded");
+        assert_eq!(b.capabilities().shards, 3);
+        // shards = 1 stays a plain native instance — no composite overhead.
+        let b1 = EngineBuilder::new().shards(1).build_backend().unwrap();
+        assert_eq!(b1.name(), "native");
+        // The reference oracle is single-instance by design.
+        let err =
+            EngineBuilder::new().backend(BackendKind::Reference).shards(2).build_backend();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn replica_fleet_requires_the_fleet_door() {
+        assert!(EngineBuilder::new().replicas(2).build().is_err(), "build() is single-stack");
+        let fleet = EngineBuilder::new().replicas(2).build_fleet().unwrap();
+        assert_eq!(fleet.replica_count(), 2);
+        assert_eq!(fleet.capabilities().replicas, 2);
+        use crate::coordinator::{AttentionMode, PrefillRequest};
+        let r = fleet.prefill(PrefillRequest::synthetic(1, 128, 7, AttentionMode::Sparse)).unwrap();
+        assert!(r.ok, "{:?}", r.error);
     }
 }

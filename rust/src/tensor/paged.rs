@@ -260,6 +260,12 @@ struct Meta {
     idle_cached: usize,
     /// Monotonic serial for LRU stamps.
     serial: u64,
+    /// Bumped whenever a [`PagedKvStore::probe_prefix`] answer could
+    /// change: prefix publish, eviction, and in-flight leader
+    /// registration/release.  Schedulers cache probe results per queued
+    /// request keyed on this generation instead of re-hashing every chain
+    /// against the index on every admission round.
+    prefix_gen: u64,
     peak_used: usize,
 }
 
@@ -306,6 +312,9 @@ fn evict_entries(m: &mut Meta, victims: &[(u64, u64)]) -> usize {
         m.idle_cached -= 1;
         m.free.push(e.block);
     }
+    if !victims.is_empty() {
+        m.prefix_gen += 1;
+    }
     victims.len()
 }
 
@@ -342,6 +351,7 @@ impl PagedKvStore {
                 inflight: HashMap::new(),
                 idle_cached: 0,
                 serial: 0,
+                prefix_gen: 0,
                 peak_used: 0,
             }),
             k_data: Arena::new(floats),
@@ -512,6 +522,9 @@ impl PagedKvStore {
                 row0 += g.rows;
             }
         }
+        if !registered.is_empty() {
+            m.prefix_gen += 1;
+        }
         m.seqs.insert(
             req_id,
             Seq { table, len: hit_rows, capacity: seq_len, views: 0, dying: false, registered },
@@ -564,7 +577,18 @@ impl PagedKvStore {
             }
             row0 += g.rows;
         }
+        if published > 0 {
+            m.prefix_gen += 1;
+        }
         published
+    }
+
+    /// Generation counter of the prefix index: bumped whenever a
+    /// [`probe_prefix`](Self::probe_prefix) answer could change (publish,
+    /// eviction, in-flight leadership changes).  A cached probe result is
+    /// valid exactly while this value is unchanged.
+    pub fn prefix_generation(&self) -> u64 {
+        self.meta.lock().unwrap().prefix_gen
     }
 
     /// Read-only admission probe: how far `chain` would hit the cache right
@@ -841,6 +865,9 @@ impl PagedKvStore {
             Some(seq) => (false, std::mem::take(&mut seq.registered)),
             None => return,
         };
+        if !registered.is_empty() {
+            m.prefix_gen += 1;
+        }
         for h in registered {
             debug_assert_eq!(m.inflight.get(&h), Some(&req_id));
             m.inflight.remove(&h);
@@ -1354,6 +1381,41 @@ mod tests {
         kv.assert_consistent();
         drop(view);
         assert_eq!(kv.used(), 0);
+        kv.assert_consistent();
+    }
+
+    #[test]
+    fn prefix_generation_tracks_probe_visible_changes() {
+        let mut rng = Rng::new(26);
+        let kv = PagedKvStore::new(6, 16, 8);
+        let ch = chain(17, 32, 16);
+        let g0 = kv.prefix_generation();
+        // Probes and plain (chainless) reservations change nothing.
+        kv.probe_prefix(&ch);
+        assert!(kv.reserve(9, 16));
+        assert_eq!(kv.prefix_generation(), g0);
+        // In-flight leadership registration is probe-visible (followers see
+        // `inflight` flip), so it bumps.
+        assert!(kv.reserve_with_prefix(1, 32, Some(&ch)).reserved);
+        let g1 = kv.prefix_generation();
+        assert!(g1 > g0, "leader registration bumps the generation");
+        // Publishing bumps again.
+        let (k, v) = (randm(&mut rng, 32, 8), randm(&mut rng, 32, 8));
+        kv.append(1, &k, &v).unwrap();
+        kv.publish_prefix(1, &ch, aux_all(&ch));
+        let g2 = kv.prefix_generation();
+        assert!(g2 > g1, "publish bumps the generation");
+        // Re-publishing the same groups adds nothing and bumps nothing.
+        kv.publish_prefix(1, &ch, aux_all(&ch));
+        assert_eq!(kv.prefix_generation(), g2);
+        // Freeing the leader releases its claims: bump.
+        kv.free(1);
+        let g3 = kv.prefix_generation();
+        assert!(g3 > g2, "claim release bumps the generation");
+        // Eviction bumps.
+        assert_eq!(kv.evict_idle(usize::MAX), 2);
+        assert!(kv.prefix_generation() > g3, "eviction bumps the generation");
+        kv.free(9);
         kv.assert_consistent();
     }
 

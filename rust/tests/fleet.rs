@@ -1,0 +1,258 @@
+//! Fleet topology suite: sharded fused-kernel execution (level 1) and the
+//! prefix-affinity replica router (level 2).
+//!
+//! The sharded backend's contract is *bit-identity*: splitting a prefill
+//! chunk's query blocks across N backend instances and stitching the slice
+//! outputs must reproduce a single native instance exactly — same digests,
+//! same densities, same token streams — across shard counts, chunk sizes
+//! and fragmented block tables.  The router's contract is *placement*: a
+//! repeated prefix lands on the replica that already holds it warm (and
+//! the warm run's digest equals that replica's cold run), everything else
+//! spreads by load, and every placement is counted exactly once.
+
+use std::sync::atomic::Ordering;
+
+use vsprefill::coordinator::backend::{ChunkStep, DecodeStep, ExecBackend};
+use vsprefill::coordinator::{
+    AttentionMode, CoordinatorConfig, PagedKvStore, PrefillRequest, PrefillResponse,
+};
+use vsprefill::serve::EngineBuilder;
+use vsprefill::synth::SynthConfig;
+use vsprefill::util::rng::Rng;
+
+fn head_dim() -> usize {
+    SynthConfig::default().head_dim
+}
+
+fn clean_store() -> PagedKvStore {
+    PagedKvStore::new(64, 32, head_dim())
+}
+
+/// A store whose free list is scrambled so the next reservation gets a
+/// fragmented, out-of-order block table.
+fn fragmented_store() -> PagedKvStore {
+    let store = PagedKvStore::new(64, 32, head_dim());
+    assert!(store.reserve(901, 64));
+    assert!(store.reserve(902, 64));
+    assert!(store.reserve(903, 64));
+    store.free(902);
+    store.free(901);
+    store.free(903);
+    store
+}
+
+fn sharded(n: usize) -> Box<dyn ExecBackend> {
+    EngineBuilder::new().shards(n).build_backend().unwrap()
+}
+
+fn single_native() -> Box<dyn ExecBackend> {
+    EngineBuilder::new().build_backend().unwrap()
+}
+
+/// Drive one request through the full typed lifecycle, scheduler-style.
+fn drive(
+    backend: &dyn ExecBackend,
+    store: &PagedKvStore,
+    req: PrefillRequest,
+    chunk: usize,
+) -> PrefillResponse {
+    let mut rng = Rng::new(0);
+    let id = req.id;
+    let bucket = backend.bucket_for(req.seq_len()).expect("request fits a bucket");
+    assert!(store.reserve(id, bucket + req.max_new_tokens), "store sized for the test");
+    let mut run = backend.begin(req, bucket, chunk, None, &mut rng);
+    loop {
+        match backend.prefill_chunk(&mut run, store) {
+            ChunkStep::Progress => {}
+            ChunkStep::Done(resp) => {
+                store.free(id);
+                return resp;
+            }
+            ChunkStep::EnterDecode => {
+                let mut runs = vec![run];
+                loop {
+                    let steps = backend.decode_step(&mut runs, store);
+                    assert_eq!(steps.len(), 1);
+                    match steps.into_iter().next().unwrap() {
+                        DecodeStep::Token(_) => {}
+                        DecodeStep::Done(_, resp) | DecodeStep::Failed(resp) => {
+                            store.free(id);
+                            return resp;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_is_bit_identical_to_single_native() {
+    // The headline contract, swept across shard counts, chunk sizes and
+    // both attention modes: digests, densities and token streams from the
+    // sharded composite equal a single native instance bit-for-bit.
+    let baseline_backend = single_native();
+    for mode in [AttentionMode::Dense, AttentionMode::Sparse] {
+        for chunk in [64usize, 100, 256] {
+            let mut req = PrefillRequest::synthetic(1, 250, 9, mode);
+            req.max_new_tokens = 4;
+            let baseline = drive(baseline_backend.as_ref(), &clean_store(), req.clone(), chunk);
+            assert!(baseline.ok, "{:?}", baseline.error);
+            for shards in [2usize, 3, 4] {
+                let b = sharded(shards);
+                let resp = drive(b.as_ref(), &clean_store(), req.clone(), chunk);
+                assert!(resp.ok, "shards={shards}: {:?}", resp.error);
+                let tag = format!("mode {mode:?} chunk {chunk} shards {shards}");
+                assert_eq!(resp.output_digest, baseline.output_digest, "digest: {tag}");
+                assert_eq!(resp.density, baseline.density, "density: {tag}");
+                assert_eq!(resp.tokens, baseline.tokens, "token stream: {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_is_table_agnostic_like_every_backend() {
+    // A scrambled free list gives the run an out-of-order block table; the
+    // shard fan-out reads K/V through the same paged views, so results
+    // cannot depend on table layout.
+    for shards in [2usize, 3] {
+        let b = sharded(shards);
+        let mut req = PrefillRequest::synthetic(21, 180, 3, AttentionMode::Sparse);
+        req.max_new_tokens = 4;
+        let clean = drive(b.as_ref(), &clean_store(), req.clone(), 48);
+        let store = fragmented_store();
+        let frag = drive(b.as_ref(), &store, req, 48);
+        assert!(clean.ok && frag.ok, "{:?} {:?}", clean.error, frag.error);
+        assert_eq!(frag.output_digest, clean.output_digest, "shards={shards}");
+        assert_eq!(frag.tokens, clean.tokens, "shards={shards}");
+        assert_eq!(store.used(), 0, "reservation reclaimed");
+    }
+}
+
+#[test]
+fn sharded_serves_through_the_coordinator() {
+    // End-to-end through the scheduler: a sharded stack serves the same
+    // responses as an unsharded one, including under the parallel
+    // chunk-dispatch fan-out (the nested slice fan-out degrades to serial
+    // inside a worker, never changing results).
+    let run = |shards: usize| -> Vec<PrefillResponse> {
+        let cfg = CoordinatorConfig { max_wait_ms: 1, max_inflight: 4, ..Default::default() };
+        let c = EngineBuilder::new().config(cfg).shards(shards).build().unwrap();
+        let rxs: Vec<_> = (0..6)
+            .map(|i| {
+                let mode = if i % 2 == 0 { AttentionMode::Sparse } else { AttentionMode::Dense };
+                let mut req = PrefillRequest::synthetic(i, 200 + 10 * i as usize, i, mode);
+                req.max_new_tokens = 3;
+                c.submit(req).unwrap()
+            })
+            .collect();
+        let resps: Vec<PrefillResponse> = rxs.into_iter().map(|rx| rx.wait().unwrap()).collect();
+        drop(c);
+        resps
+    };
+    let unsharded = run(1);
+    let two_shards = run(2);
+    for (a, b) in unsharded.iter().zip(&two_shards) {
+        assert!(a.ok && b.ok, "{:?} {:?}", a.error, b.error);
+        assert_eq!(b.output_digest, a.output_digest, "request {}", a.id);
+        assert_eq!(b.tokens, a.tokens, "request {}", a.id);
+        assert_eq!(b.density, a.density, "request {}", a.id);
+    }
+}
+
+#[test]
+fn router_sends_repeated_prefixes_home_warm() {
+    let cfg = CoordinatorConfig { max_wait_ms: 1, replicas: 2, ..Default::default() };
+    let fleet = EngineBuilder::new().config(cfg).build_fleet().unwrap();
+
+    // Cold run: no replica holds the prefix, so placement is by load.
+    let cold =
+        fleet.prefill(PrefillRequest::synthetic(1, 256, 42, AttentionMode::Sparse)).unwrap();
+    assert!(cold.ok, "{:?}", cold.error);
+    let home = fleet
+        .replicas()
+        .iter()
+        .position(|r| r.metrics.completed.load(Ordering::Relaxed) == 1)
+        .expect("cold run completed somewhere");
+    assert_eq!(
+        fleet.replicas()[home].metrics.routed_load.load(Ordering::Relaxed),
+        1,
+        "cold placement is a load decision"
+    );
+
+    // Warm run: the same prompt must follow its resident prefix home and
+    // reproduce the cold digest from the shared blocks (warm == cold).
+    let warm =
+        fleet.prefill(PrefillRequest::synthetic(2, 256, 42, AttentionMode::Sparse)).unwrap();
+    assert!(warm.ok, "{:?}", warm.error);
+    let r = &fleet.replicas()[home];
+    assert_eq!(r.metrics.completed.load(Ordering::Relaxed), 2, "warm run landed on home");
+    assert_eq!(r.metrics.routed_affinity.load(Ordering::Relaxed), 1);
+    assert_eq!(r.metrics.prefix_hits.load(Ordering::Relaxed), 1, "served from warm blocks");
+    assert_eq!(warm.output_digest, cold.output_digest, "full-hit digest equals the cold run");
+    assert_eq!(warm.density, cold.density);
+
+    // And a third pass keeps herding to the same replica.
+    let again =
+        fleet.prefill(PrefillRequest::synthetic(3, 256, 42, AttentionMode::Sparse)).unwrap();
+    assert!(again.ok);
+    assert_eq!(r.metrics.completed.load(Ordering::Relaxed), 3);
+    assert_eq!(r.metrics.routed_affinity.load(Ordering::Relaxed), 2);
+}
+
+#[test]
+fn stress_fleet_mixed_workload_drains_across_replicas() {
+    // Release-mode stress: a mixed open-loop burst (sizes, modes, decode
+    // budgets, repeated prefixes) across a 2-replica fleet must fully
+    // drain — every handle resolves, every placement is counted once, and
+    // both pools return to zero blocks in use.
+    let cfg = CoordinatorConfig {
+        max_wait_ms: 1,
+        max_inflight: 4,
+        replicas: 2,
+        ..Default::default()
+    };
+    let fleet = EngineBuilder::new().config(cfg).build_fleet().unwrap();
+    // Warm two hot prompts to completion first so their prefixes are
+    // resident somewhere before the burst repeats them.
+    for seed in [7u64, 8] {
+        let warm = PrefillRequest::synthetic(900 + seed, 256, seed, AttentionMode::Sparse);
+        assert!(fleet.prefill(warm).unwrap().ok);
+    }
+    let total = 40u64;
+    let mut rxs = Vec::new();
+    for i in 0..total {
+        let mode = if i % 3 == 0 { AttentionMode::Dense } else { AttentionMode::Sparse };
+        let n = if i % 4 == 0 { 256 } else { [128usize, 200, 500][(i % 3) as usize] };
+        // Every fourth request repeats one of the hot prompts, giving the
+        // router real affinity traffic amid the load-balanced rest.
+        let seed = if i % 4 == 0 { 7 + (i % 8) / 4 } else { 1000 + i };
+        let mut req = PrefillRequest::synthetic(i, n, seed, mode);
+        if i % 5 == 0 {
+            req.max_new_tokens = 3;
+        }
+        rxs.push(fleet.submit(req).unwrap());
+    }
+    let mut ok = 0u64;
+    for rx in rxs {
+        let resp = rx.wait().unwrap();
+        assert!(resp.ok, "{:?}", resp.error);
+        ok += 1;
+    }
+    assert_eq!(ok, total);
+
+    let placed = total + 2; // the burst plus the two warm-up prompts
+    let (mut affinity, mut load, mut completed) = (0u64, 0u64, 0u64);
+    for r in fleet.replicas() {
+        affinity += r.metrics.routed_affinity.load(Ordering::Relaxed);
+        load += r.metrics.routed_load.load(Ordering::Relaxed);
+        completed += r.metrics.completed.load(Ordering::Relaxed);
+        assert_eq!(r.kv.used(), 0, "pool fully drained");
+    }
+    assert_eq!(completed, placed);
+    assert_eq!(affinity + load, placed, "every placement counted exactly once");
+    assert!(affinity >= 10, "every hot-prompt repeat followed its warm prefix");
+    let snaps = fleet.shutdown();
+    assert_eq!(snaps.iter().map(|s| s.completed).sum::<u64>(), placed);
+}
