@@ -17,8 +17,15 @@
 //! (portable/wide) path, writes BENCH_kernels.json, and gates the result
 //! against a committed baseline: the dispatched path may not be more than
 //! 15% slower than scalar, and each row's speedup may not fall below 85%
-//! of the baseline's.  `VSPREFILL_BENCH_SMOKE=1` runs only this sweep at
-//! tiny sizes (the CI `bench-smoke` job).
+//! of the baseline's.  `VSPREFILL_BENCH_SMOKE=1` runs only this sweep,
+//! the adaptive quality sweep, and the fleet sweep at tiny sizes (the CI
+//! `bench-smoke` job).
+//!
+//! The adaptive quality sweep (`quality_sweep_bench`) runs the
+//! needle-retrieval harness comparing the adaptive selector against the
+//! global-knob baseline, writes BENCH_quality.json, and gates the critical
+//! recall at the default operating point against a committed floor
+//! (mirroring the kernels gate: a missing baseline skips cleanly).
 
 use std::time::Instant;
 
@@ -66,6 +73,7 @@ struct SweepRow {
 fn main() {
     if std::env::var("VSPREFILL_BENCH_SMOKE").is_ok_and(|v| v == "1") {
         kernels_sweep(true);
+        quality_sweep_bench(true);
         fleet_sweep(true);
         return;
     }
@@ -181,6 +189,8 @@ fn main() {
     write_json(&rows);
 
     kernels_sweep(false);
+
+    quality_sweep_bench(false);
 
     chunked_sweep();
 
@@ -435,6 +445,150 @@ fn kernels_regression_check(fresh: &[KernelRow], baseline: Option<&vsprefill::ut
         println!("bench regression check: ok ({} rows)", fresh.len());
     } else {
         eprintln!("\nbench regression check FAILED:");
+        for f in &failures {
+            eprintln!("  {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+/// Adaptive-sparsity quality sweep (the CI quality gate): needle-retrieval
+/// critical recall and mask density for the adaptive selector (per-head
+/// allocator + pattern vocabulary) vs the legacy global-knob baseline,
+/// across budgets and both synthetic head kinds.  Writes BENCH_quality.json
+/// and gates the default operating point's recall against a committed
+/// floor (see `quality_regression_check`).
+fn quality_sweep_bench(smoke: bool) {
+    use vsprefill::sparse_attn::adaptive::{quality_sweep, QualityOptions};
+    let mode = if smoke { "smoke" } else { "full" };
+    let opts = if smoke { QualityOptions::smoke() } else { QualityOptions::full() };
+    println!("\nadaptive quality sweep: adaptive vs global-knob baseline ({mode} sizes)");
+    let tc = if smoke {
+        TrainConfig { steps: 150, batch: 3, seq_len: 128, hidden_base: 32, ..Default::default() }
+    } else {
+        TrainConfig { steps: 150, ..Default::default() }
+    };
+    let (ix, _) = distill(&tc);
+    let report = quality_sweep(&ix, &opts);
+    println!(
+        "kind      budget  base_recall  base_density  adpt_recall  adpt_density  vs/ashape/block"
+    );
+    for p in &report.points {
+        println!(
+            "{:<9} {:>6.2} {:>12.3} {:>13.3} {:>12.3} {:>13.3}  {}/{}/{}",
+            p.kind,
+            p.budget,
+            p.baseline_recall,
+            p.baseline_density,
+            p.adaptive_recall,
+            p.adaptive_density,
+            p.patterns[0],
+            p.patterns[1],
+            p.patterns[2]
+        );
+    }
+    for l in &report.layers {
+        println!(
+            "layer[{}]: uniform {} grants -> adaptive {} (ceiling {})",
+            l.kind, l.uniform_total, l.adaptive_total, l.ceiling
+        );
+    }
+    // Read the committed floor BEFORE the fresh write lands on the same
+    // default path, then gate and persist.
+    let baseline = read_quality_baseline();
+    write_quality_json(&report, smoke);
+    quality_regression_check(&report, baseline.as_ref(), smoke);
+}
+
+fn quality_baseline_path() -> String {
+    std::env::var("VSPREFILL_QUALITY_BASELINE")
+        .unwrap_or_else(|_| "BENCH_quality.json".to_string())
+}
+
+fn read_quality_baseline() -> Option<vsprefill::util::json::Json> {
+    let path = quality_baseline_path();
+    let text = std::fs::read_to_string(&path).ok()?;
+    match vsprefill::util::json::Json::parse(&text) {
+        Ok(j) => Some(j),
+        Err(e) => {
+            eprintln!("(quality baseline {path} unparseable: {e})");
+            None
+        }
+    }
+}
+
+fn write_quality_json(report: &vsprefill::sparse_attn::adaptive::QualityReport, smoke: bool) {
+    let s = format!(
+        "{{\n  \"bench\": \"quality\",\n  \"smoke\": {smoke},\n  \"report\": {}\n}}\n",
+        report.to_json_string()
+    );
+    match std::fs::write("BENCH_quality.json", &s) {
+        Ok(()) => println!("wrote BENCH_quality.json"),
+        Err(e) => eprintln!("failed to write BENCH_quality.json: {e}"),
+    }
+}
+
+/// The CI quality floor: at the default operating point (budget 0.5), the
+/// adaptive selector's critical recall may not fall more than 0.03 below
+/// the committed baseline's, per head kind.  A missing baseline — or one
+/// recorded at the other sweep size — skips with a clean message; the
+/// first committed run writes the file later runs are held to.
+fn quality_regression_check(
+    report: &vsprefill::sparse_attn::adaptive::QualityReport,
+    baseline: Option<&vsprefill::util::json::Json>,
+    smoke: bool,
+) {
+    let base = match baseline {
+        None => {
+            println!("(no quality baseline at {}: recall floor skipped)", quality_baseline_path());
+            return;
+        }
+        Some(b) => b,
+    };
+    if base.get("smoke").and_then(|x| x.as_bool()) != Some(smoke) {
+        // A baseline from the other sweep size measured different
+        // n/instances and is not comparable.
+        println!(
+            "(quality baseline at {} is from the other sweep size: skipped)",
+            quality_baseline_path()
+        );
+        return;
+    }
+    let rows = base
+        .get("report")
+        .and_then(|r| r.get("points"))
+        .and_then(|p| p.as_arr())
+        .unwrap_or(&[]);
+    let mut failures: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    for p in report.points.iter().filter(|p| (p.budget - 0.5).abs() < 1e-6) {
+        for b in rows {
+            let same = b.get("kind").and_then(|x| x.as_str()) == Some(p.kind)
+                && b.get("budget")
+                    .and_then(|x| x.as_f64())
+                    .is_some_and(|x| (x - 0.5).abs() < 1e-6);
+            if !same {
+                continue;
+            }
+            compared += 1;
+            if let Some(floor) = b.get("adaptive_recall").and_then(|x| x.as_f64()) {
+                if (p.adaptive_recall as f64) < floor - 0.03 {
+                    failures.push(format!(
+                        "{} @0.5: adaptive recall {:.3} fell below committed floor {:.3} - 0.03",
+                        p.kind, p.adaptive_recall, floor
+                    ));
+                }
+            }
+        }
+    }
+    println!(
+        "quality recall floor: {compared} default-point cells compared vs {}",
+        quality_baseline_path()
+    );
+    if failures.is_empty() {
+        println!("quality gate: ok ({} cells)", report.points.len());
+    } else {
+        eprintln!("\nquality gate FAILED:");
         for f in &failures {
             eprintln!("  {f}");
         }

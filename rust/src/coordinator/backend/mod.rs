@@ -44,9 +44,9 @@ use std::time::Instant;
 use crate::attention::decode::flash_decode_into;
 use crate::indexer::train::{distill, TrainConfig};
 use crate::indexer::{IncrementalScores, Indexer};
-use crate::sparse::VsIndices;
+use crate::sparse::{BudgetPolicyKind, VsIndices};
 use crate::sparse_attn::exec::{decode_columns_into, sparse_decode_vs_into};
-use crate::sparse_attn::VsPrefill;
+use crate::sparse_attn::{AdaptiveSelect, VsPrefill};
 use crate::synth::{gen_head, SynthConfig, SynthHead, SynthStream};
 use crate::tensor::paged::{hash_words, PagedKv, PrefixAux, PrefixChain};
 use crate::tensor::Mat;
@@ -595,10 +595,23 @@ fn quick_indexer() -> Indexer {
         .clone()
 }
 
-/// The VSPrefill selection pipeline with the engine's tau applied.
+/// The VSPrefill selection pipeline with the engine's tau applied, plus the
+/// adaptive subsystem when either of its knobs is on (with both off the
+/// legacy path runs and selection is bit-identical to the historical
+/// pipeline).
 fn selection_pipeline(indexer: Indexer, cfg: &EngineConfig) -> VsPrefill {
     let mut vsp = VsPrefill::new(indexer);
     vsp.tau = cfg.budget_tau;
+    if cfg.adaptive_alloc || cfg.pattern_select {
+        vsp.adaptive = Some(AdaptiveSelect::new(
+            cfg.adaptive_alloc,
+            cfg.pattern_select,
+            BudgetPolicyKind::parse(&cfg.budget_policy).unwrap_or_default(),
+            cfg.tau_v,
+            cfg.tau_s,
+            cfg.budget_tau,
+        ));
+    }
     vsp
 }
 
@@ -628,7 +641,7 @@ fn synth_parts(
     synth: &SynthConfig,
     req: &PrefillRequest,
     bucket: usize,
-) -> (SynthHead, SynthStream) {
+) -> (SynthHead, SynthStream, usize) {
     let (seed, head_seed) = match &req.payload {
         Payload::Synthetic { seed, .. } => (*seed, *seed % 8),
         Payload::Tokens(toks) => {
@@ -640,7 +653,7 @@ fn synth_parts(
     let mut r = Rng::new(seed);
     let head = gen_head(&mut r, bucket, synth, head_seed);
     let stream = SynthStream::continue_head(synth, Rng::new(seed), head_seed, bucket);
-    (head, stream)
+    (head, stream, head_seed as usize)
 }
 
 /// What the synthetic backends persist per cached block group: the group's
@@ -709,7 +722,7 @@ fn synth_begin(
     default_chunk: usize,
     prefix: Option<PrefixHit>,
 ) -> RunState {
-    let (head, stream) = synth_parts(synth, &req, bucket);
+    let (head, stream, head_bin) = synth_parts(synth, &req, bucket);
     let mut inc = IncrementalScores::new();
     let mut digest_seed: Vec<f32> = Vec::new();
     let mut rows = 0usize;
@@ -739,6 +752,7 @@ fn synth_begin(
     );
     run.set_prefix(rows, chain);
     run.resp.output_digest = digest_seed;
+    run.resp.head = head_bin;
     run
 }
 
@@ -813,9 +827,11 @@ fn synth_prefill_chunk(
                 AttentionMode::Sparse => {
                     let ti = Instant::now();
                     let (a_v, a_s) = sp.inc.finalize();
-                    let idx = vsp.select_from_scores(&a_v, &a_s, acc.bucket, acc.req.budget);
+                    let (idx, pat) =
+                        vsp.select_with_meta(&a_v, &a_s, acc.bucket, acc.req.budget);
                     acc.resp.index_us += ti.elapsed().as_micros() as u64;
                     acc.resp.density = idx.density(acc.bucket);
+                    acc.resp.pattern = Some(pat.name().to_string());
                 }
             }
             synth_publish(store, id, acc.chain, &sp.inc, &acc.resp.output_digest);
@@ -839,9 +855,11 @@ fn synth_prefill_chunk(
                                 let ti = Instant::now();
                                 vsp.indexer.score_chunk(&mut sp.inc, &kc, &vc);
                                 let (a_v, a_s) = sp.inc.finalize();
-                                let idx = vsp.select_from_scores(&a_v, &a_s, hi, acc.req.budget);
+                                let (idx, pat) =
+                                    vsp.select_with_meta(&a_v, &a_s, hi, acc.req.budget);
                                 acc.resp.index_us += ti.elapsed().as_micros() as u64;
                                 acc.resp.density = idx.density(hi);
+                                acc.resp.pattern = Some(pat.name().to_string());
                                 exec(&qc, lo, &view, Some(&idx))
                             }
                         };

@@ -132,7 +132,8 @@ impl ExecBackend for NativeBackend {
 
     fn process(&self, req: &PrefillRequest) -> PrefillResponse {
         run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
-            let head = synth_parts(&self.cfg.synth, req, bucket).0;
+            let (head, _, head_bin) = synth_parts(&self.cfg.synth, req, bucket);
+            resp.head = head_bin;
             let out = match req.mode {
                 AttentionMode::Dense => {
                     resp.density = 1.0;
@@ -140,9 +141,10 @@ impl ExecBackend for NativeBackend {
                 }
                 AttentionMode::Sparse => {
                     let ti = std::time::Instant::now();
-                    let idx = self.vsp.predict_kv(&head.k, &head.v, req.budget);
+                    let (idx, pat) = self.vsp.predict_kv_with_meta(&head.k, &head.v, req.budget);
                     resp.index_us = ti.elapsed().as_micros() as u64;
                     resp.density = idx.density(bucket);
+                    resp.pattern = Some(pat.name().to_string());
                     sparse_attention_vs(&head.q, &head.k, &head.v, &idx, self.cfg.block_q)
                 }
             };

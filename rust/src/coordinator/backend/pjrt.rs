@@ -104,7 +104,8 @@ impl ExecBackend for PjrtBackend {
 
     fn process(&self, req: &PrefillRequest) -> PrefillResponse {
         run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
-            let head = synth_parts(&self.cfg.synth, req, bucket).0;
+            let (head, _, head_bin) = synth_parts(&self.cfg.synth, req, bucket);
+            resp.head = head_bin;
             let out: Mat = match req.mode {
                 AttentionMode::Dense => {
                     resp.density = 1.0;
@@ -125,9 +126,10 @@ impl ExecBackend for PjrtBackend {
                         cap_s: Some(caps.1),
                         ..selection_pipeline(self.vsp.indexer.clone(), &self.cfg)
                     };
-                    let idx = capped.select_from_scores(&a_v, &a_s, bucket, req.budget);
+                    let (idx, pat) = capped.select_with_meta(&a_v, &a_s, bucket, req.budget);
                     resp.index_us = ti.elapsed().as_micros() as u64;
                     resp.density = idx.density(bucket);
+                    resp.pattern = Some(pat.name().to_string());
                     self.rt.sparse_attention(bucket, &head.q, &head.k, &head.v, &idx)?
                 }
             };

@@ -123,7 +123,8 @@ impl ExecBackend for ReferenceBackend {
 
     fn process(&self, req: &PrefillRequest) -> PrefillResponse {
         run_monolithic(req, self.bucket_for(req.seq_len()), |bucket, resp| {
-            let head = synth_parts(&self.cfg.synth, req, bucket).0;
+            let (head, _, head_bin) = synth_parts(&self.cfg.synth, req, bucket);
+            resp.head = head_bin;
             let out = match req.mode {
                 AttentionMode::Dense => {
                     resp.density = 1.0;
@@ -131,9 +132,10 @@ impl ExecBackend for ReferenceBackend {
                 }
                 AttentionMode::Sparse => {
                     let ti = std::time::Instant::now();
-                    let idx = self.vsp.predict_kv(&head.k, &head.v, req.budget);
+                    let (idx, pat) = self.vsp.predict_kv_with_meta(&head.k, &head.v, req.budget);
                     resp.index_us = ti.elapsed().as_micros() as u64;
                     resp.density = idx.density(bucket);
+                    resp.pattern = Some(pat.name().to_string());
                     sparse_attention_vs_rowserial(&head.q, &head.k, &head.v, &idx)
                 }
             };

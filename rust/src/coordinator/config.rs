@@ -17,10 +17,13 @@
 //!   "shards": 2, "replicas": 2,
 //!   "engine": { "buckets": [256, 512, 1024], "block_q": 64,
 //!               "threads": 0, "budget_tau": 0.9,
-//!               "decode_top_k": 64, "decode_window": 64 }
+//!               "decode_top_k": 64, "decode_window": 64,
+//!               "adaptive_alloc": false, "pattern_select": false,
+//!               "budget_policy": "cumulative", "tau_v": 0.0, "tau_s": 0.0 }
 //! }
 //! ```
 
+use crate::sparse::BudgetPolicyKind;
 use crate::util::args::Args;
 use crate::util::json::Json;
 
@@ -35,6 +38,8 @@ pub enum KeyKind {
     Bool,
     /// Comma-separated on the CLI (`--buckets 256,1024`), array in JSON.
     UsizeList,
+    /// Free-form token (validated per key by [`validate`]), string in JSON.
+    Str,
 }
 
 /// A typed configuration value in transit between the surfaces and the
@@ -45,6 +50,7 @@ pub enum KeyValue {
     F32(f32),
     Bool(bool),
     UsizeList(Vec<usize>),
+    Str(String),
 }
 
 /// One row of the declarative key table.
@@ -166,6 +172,66 @@ pub const KEYS: &[ConfigKey] = &[
         "sparse decode budget: local window of recent positions",
         engine.decode_window
     ),
+    ConfigKey {
+        json: "engine.adaptive_alloc",
+        cli: "adaptive-alloc",
+        kind: KeyKind::Bool,
+        help: "per-head budget allocator with layer redistribution (off = global knob)",
+        get: |c| KeyValue::Bool(c.engine.adaptive_alloc),
+        set: |c, v| {
+            if let KeyValue::Bool(x) = v {
+                c.engine.adaptive_alloc = x;
+            }
+        },
+    },
+    ConfigKey {
+        json: "engine.pattern_select",
+        cli: "pattern-select",
+        kind: KeyKind::Bool,
+        help: "per-head pattern vocabulary (vertical-slash / a-shape / block-sparse)",
+        get: |c| KeyValue::Bool(c.engine.pattern_select),
+        set: |c, v| {
+            if let KeyValue::Bool(x) = v {
+                c.engine.pattern_select = x;
+            }
+        },
+    },
+    ConfigKey {
+        json: "engine.budget_policy",
+        cli: "budget-policy",
+        kind: KeyKind::Str,
+        help: "adaptive budget policy: cumulative | fixed | proportional",
+        get: |c| KeyValue::Str(c.engine.budget_policy.clone()),
+        set: |c, v| {
+            if let KeyValue::Str(x) = v {
+                c.engine.budget_policy = x;
+            }
+        },
+    },
+    ConfigKey {
+        json: "engine.tau_v",
+        cli: "tau-v",
+        kind: KeyKind::F32,
+        help: "adaptive vertical threshold (0 = follow budget_tau)",
+        get: |c| KeyValue::F32(c.engine.tau_v),
+        set: |c, v| {
+            if let KeyValue::F32(x) = v {
+                c.engine.tau_v = x;
+            }
+        },
+    },
+    ConfigKey {
+        json: "engine.tau_s",
+        cli: "tau-s",
+        kind: KeyKind::F32,
+        help: "adaptive slash threshold (0 = follow budget_tau)",
+        get: |c| KeyValue::F32(c.engine.tau_s),
+        set: |c, v| {
+            if let KeyValue::F32(x) = v {
+                c.engine.tau_s = x;
+            }
+        },
+    },
 ];
 
 /// CLI flag names of every key in the table — splice into the binary's
@@ -190,6 +256,7 @@ impl KeyKind {
                     .map(|p| p.trim().parse::<usize>().map_err(anyhow::Error::from))
                     .collect::<anyhow::Result<Vec<usize>>>()?,
             ),
+            KeyKind::Str => KeyValue::Str(s.to_string()),
         })
     }
 
@@ -206,6 +273,11 @@ impl KeyKind {
                 j.as_bool().ok_or_else(|| anyhow::anyhow!("expected a boolean"))?,
             ),
             KeyKind::UsizeList => KeyValue::UsizeList(j.as_usize_vec()?),
+            KeyKind::Str => KeyValue::Str(
+                j.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("expected a string"))?
+                    .to_string(),
+            ),
         })
     }
 }
@@ -225,6 +297,7 @@ impl ConfigKey {
             KeyValue::UsizeList(xs) => {
                 xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(",")
             }
+            KeyValue::Str(x) => x.clone(),
         }
     }
 
@@ -290,6 +363,20 @@ pub fn validate(cfg: &CoordinatorConfig) -> anyhow::Result<()> {
         cfg.engine.decode_window >= 1,
         "decode_window must be at least 1 (the newest position is always attended)"
     );
+    anyhow::ensure!(
+        BudgetPolicyKind::parse(&cfg.engine.budget_policy).is_some(),
+        "budget_policy must be one of cumulative | fixed | proportional, got '{}'",
+        cfg.engine.budget_policy
+    );
+    // 0 means "follow budget_tau"; anything else must be a usable threshold.
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.engine.tau_v),
+        "tau_v must be in [0, 1] (0 = follow budget_tau)"
+    );
+    anyhow::ensure!(
+        (0.0..=1.0).contains(&cfg.engine.tau_s),
+        "tau_s must be in [0, 1] (0 = follow budget_tau)"
+    );
     // The paged store must be able to hold at least one max-bucket request,
     // or nothing that pads to the largest bucket could ever be admitted.
     // (Per-request decode budgets are checked at admission, where the
@@ -321,6 +408,10 @@ mod tests {
             (_, KeyKind::F32) => KeyValue::F32(0.55),
             // Defaults to true, so the observable distinct value is false.
             ("kv_prefix_cache", _) => KeyValue::Bool(false),
+            // These default to false, so the observable distinct value is true.
+            ("engine.adaptive_alloc", _) => KeyValue::Bool(true),
+            ("engine.pattern_select", _) => KeyValue::Bool(true),
+            ("engine.budget_policy", _) => KeyValue::Str("proportional".to_string()),
             ("max_wait_ms", _) => KeyValue::Usize(7),
             ("kv_blocks", _) => KeyValue::Usize(31),
             ("kv_block_size", _) => KeyValue::Usize(48),
@@ -353,6 +444,7 @@ mod tests {
                     "[{}]",
                     xs.iter().map(|x| x.to_string()).collect::<Vec<_>>().join(", ")
                 ),
+                KeyValue::Str(x) => format!("\"{x}\""),
             };
             match key.json.strip_prefix("engine.") {
                 Some(name) => engine.push(format!("\"{name}\": {rendered}")),
@@ -448,6 +540,13 @@ mod tests {
         // budget_tau outside (0, 1].
         assert!(load(None, &args(&["--budget-tau", "1.5"])).is_err());
         assert!(load(None, &args(&["--budget-tau", "0"])).is_err());
+        // Unknown budget-policy token and out-of-range per-direction taus.
+        let err = load(None, &args(&["--budget-policy", "bogus"])).unwrap_err();
+        assert!(format!("{err}").contains("cumulative"), "{err}");
+        assert!(load(None, &args(&["--tau-v", "1.5"])).is_err());
+        assert!(load(None, &args(&["--tau-s", "-0.1"])).is_err());
+        // 0 is valid for the per-direction taus (follow budget_tau).
+        assert!(load(None, &args(&["--tau-v", "0"])).is_ok());
         // Malformed CLI values fail loudly, naming the flag.
         let err = load(None, &args(&["--buckets", "64,abc"])).unwrap_err();
         assert!(format!("{err}").contains("--buckets"), "{err}");

@@ -40,6 +40,24 @@ pub struct EngineConfig {
     /// by a sparse decode step (the slash structure collapsed onto the
     /// single decode row).
     pub decode_window: usize,
+    /// Run the adaptive per-head budget allocator (cumulative-threshold
+    /// budgets per head with layer-level redistribution) instead of the
+    /// uniform global-knob threshold.  Off by default; at the default taus
+    /// the allocator reproduces the legacy selection exactly.
+    pub adaptive_alloc: bool,
+    /// Classify each head into a pattern family (vertical-slash / A-shape /
+    /// block-sparse) at index time and lower the specialised families to
+    /// narrower masks.  Off by default.
+    pub pattern_select: bool,
+    /// Budget policy family of the adaptive allocator:
+    /// `cumulative` | `fixed` | `proportional` (validated at config load).
+    pub budget_policy: String,
+    /// Per-direction vertical threshold for the adaptive allocator.
+    /// `0.0` (the default) means "follow `budget_tau`".
+    pub tau_v: f32,
+    /// Per-direction slash threshold for the adaptive allocator.
+    /// `0.0` (the default) means "follow `budget_tau`".
+    pub tau_s: f32,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +70,11 @@ impl Default for EngineConfig {
             budget_tau: 0.9,
             decode_top_k: 64,
             decode_window: 64,
+            adaptive_alloc: false,
+            pattern_select: false,
+            budget_policy: "cumulative".to_string(),
+            tau_v: 0.0,
+            tau_s: 0.0,
         }
     }
 }

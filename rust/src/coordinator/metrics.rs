@@ -53,6 +53,15 @@ pub struct Metrics {
     /// Requests the replica router placed here by least-loaded fallback
     /// (no replica held the prefix).
     pub routed_load: AtomicU64,
+    /// Pattern-choice histogram of the adaptive classifier: completed
+    /// sparse requests whose head lowered as vertical-slash / A-shape /
+    /// block-sparse.
+    pub pattern_vs: AtomicU64,
+    pub pattern_ashape: AtomicU64,
+    pub pattern_block: AtomicU64,
+    /// Per-head density accumulators, binned by the response's head bin
+    /// (0..8): (density sum, count) per bin.
+    head_density: Mutex<[(f64, u64); 8]>,
     prefill_us: Mutex<Reservoir>,
     queue_us: Mutex<Reservoir>,
     index_us: Mutex<Reservoir>,
@@ -91,6 +100,12 @@ pub struct Snapshot {
     pub mean_queue_us: f64,
     pub mean_index_us: f64,
     pub mean_density: f64,
+    /// Adaptive pattern-choice histogram across completed sparse requests.
+    pub pattern_vs: u64,
+    pub pattern_ashape: u64,
+    pub pattern_block: u64,
+    /// Mean mask density per head bin (0..8); 0.0 for bins with no traffic.
+    pub density_by_head: Vec<f64>,
 }
 
 impl Metrics {
@@ -112,6 +127,10 @@ impl Metrics {
             requeue_rounds: AtomicU64::new(0),
             routed_affinity: AtomicU64::new(0),
             routed_load: AtomicU64::new(0),
+            pattern_vs: AtomicU64::new(0),
+            pattern_ashape: AtomicU64::new(0),
+            pattern_block: AtomicU64::new(0),
+            head_density: Mutex::new([(0.0, 0); 8]),
             prefill_us: res(),
             queue_us: res(),
             index_us: res(),
@@ -131,6 +150,17 @@ impl Metrics {
             self.index_us.lock().unwrap().push(resp.index_us as f64);
             self.ttft_us.lock().unwrap().push(resp.ttft_us as f64);
             self.densities.lock().unwrap().push(resp.density);
+            match resp.pattern.as_deref() {
+                Some("vs") => self.pattern_vs.fetch_add(1, Ordering::Relaxed),
+                Some("ashape") => self.pattern_ashape.fetch_add(1, Ordering::Relaxed),
+                Some("block") => self.pattern_block.fetch_add(1, Ordering::Relaxed),
+                _ => 0,
+            };
+            let mut hd = self.head_density.lock().unwrap();
+            let bin = &mut hd[resp.head.min(7)];
+            bin.0 += resp.density;
+            bin.1 += 1;
+            drop(hd);
             let mut itl = self.itl_us.lock().unwrap();
             for &us in &resp.decode_us {
                 itl.push(us as f64);
@@ -158,6 +188,13 @@ impl Metrics {
         let queue = self.queue_us.lock().unwrap().values().to_vec();
         let index = self.index_us.lock().unwrap().values().to_vec();
         let dens = self.densities.lock().unwrap().values().to_vec();
+        let density_by_head = self
+            .head_density
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|&(sum, count)| if count > 0 { sum / count as f64 } else { 0.0 })
+            .collect();
         Snapshot {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
@@ -184,6 +221,10 @@ impl Metrics {
             mean_queue_us: mean(&queue),
             mean_index_us: mean(&index),
             mean_density: mean(&dens),
+            pattern_vs: self.pattern_vs.load(Ordering::Relaxed),
+            pattern_ashape: self.pattern_ashape.load(Ordering::Relaxed),
+            pattern_block: self.pattern_block.load(Ordering::Relaxed),
+            density_by_head,
         }
     }
 }
@@ -227,6 +268,10 @@ impl Snapshot {
             ("mean_queue_us", Json::Num(self.mean_queue_us)),
             ("mean_index_us", Json::Num(self.mean_index_us)),
             ("mean_density", Json::Num(self.mean_density)),
+            ("pattern_vs", Json::Num(self.pattern_vs as f64)),
+            ("pattern_ashape", Json::Num(self.pattern_ashape as f64)),
+            ("pattern_block", Json::Num(self.pattern_block as f64)),
+            ("density_by_head", Json::arr_f64(&self.density_by_head)),
         ])
     }
 }
@@ -308,6 +353,42 @@ mod tests {
         assert_eq!(back.get("prefix_hits").and_then(|x| x.as_f64()), Some(3.0));
         assert_eq!(back.get("prefix_blocks_shared").and_then(|x| x.as_f64()), Some(12.0));
         assert_eq!(back.get("prefix_evictions").and_then(|x| x.as_f64()), Some(2.0));
+    }
+
+    #[test]
+    fn pattern_and_head_density_reach_snapshot_and_wire() {
+        let m = Metrics::new();
+        let mut r = resp(true, 100, 0.4);
+        r.head = 2;
+        r.pattern = Some("vs".to_string());
+        m.record(&r);
+        m.record(&r);
+        r.density = 0.2;
+        r.head = 5;
+        r.pattern = Some("ashape".to_string());
+        m.record(&r);
+        r.head = 5;
+        r.pattern = Some("block".to_string());
+        m.record(&r);
+        // Failed responses and dense ones (no pattern) leave the histogram
+        // and the head bins alone.
+        let mut bad = resp(false, 0, 0.0);
+        bad.pattern = Some("vs".to_string());
+        m.record(&bad);
+        m.record(&resp(true, 100, 1.0));
+        let s = m.snapshot();
+        assert_eq!((s.pattern_vs, s.pattern_ashape, s.pattern_block), (2, 1, 1));
+        assert_eq!(s.density_by_head.len(), 8);
+        assert!((s.density_by_head[2] - 0.4).abs() < 1e-9);
+        assert!((s.density_by_head[5] - 0.2).abs() < 1e-9);
+        assert_eq!(s.density_by_head[7], 0.0, "untouched bin stays zero");
+        let back = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(back.get("pattern_vs").and_then(|x| x.as_f64()), Some(2.0));
+        assert_eq!(back.get("pattern_ashape").and_then(|x| x.as_f64()), Some(1.0));
+        assert_eq!(back.get("pattern_block").and_then(|x| x.as_f64()), Some(1.0));
+        let heads = back.get("density_by_head").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(heads.len(), 8);
+        assert!((heads[2].as_f64().unwrap() - 0.4).abs() < 1e-9);
     }
 
     #[test]

@@ -382,6 +382,13 @@ pub struct PrefillResponse {
     pub decode_us: Vec<u64>,
     /// Density of the selected mask (1.0 for dense).
     pub density: f64,
+    /// Head bin (0..8) of the request's synthesized attention head — the
+    /// attribution key of per-head density/pattern metrics.
+    pub head: usize,
+    /// Pattern family the adaptive classifier chose for the head
+    /// (`"vs"` / `"ashape"` / `"block"`); `None` for dense execution and
+    /// for peers that predate pattern selection.
+    pub pattern: Option<String>,
     /// Output checksum (first 4 output values) for cross-backend parity.
     pub output_digest: Vec<f32>,
 }
@@ -419,6 +426,7 @@ impl PrefillResponse {
                 Json::Arr(self.decode_us.iter().map(|&u| Json::Num(u as f64)).collect()),
             ),
             ("density", Json::Num(self.density)),
+            ("head", Json::Num(self.head as f64)),
             ("output_digest", Json::arr_f32(&self.output_digest)),
         ];
         if let Outcome::Rejected(reason) = self.outcome {
@@ -426,6 +434,9 @@ impl PrefillResponse {
         }
         if let Some(ms) = self.retry_after_ms {
             pairs.push(("retry_after_ms", Json::Num(ms as f64)));
+        }
+        if let Some(p) = &self.pattern {
+            pairs.push(("pattern", Json::s(p.clone())));
         }
         Json::obj(pairs)
     }
@@ -472,6 +483,9 @@ impl PrefillResponse {
                 .unwrap_or_default(),
             decode_us: u64_arr("decode_us"),
             density: j.req("density")?.as_f64().unwrap_or(0.0),
+            // Absent on wire lines from peers that predate per-head metrics.
+            head: j.get("head").and_then(|x| x.as_usize()).unwrap_or(0),
+            pattern: j.get("pattern").and_then(|x| x.as_str()).map(|s| s.to_string()),
             output_digest: j.req("output_digest")?.as_f32_vec()?,
         })
     }
@@ -500,6 +514,8 @@ mod tests {
             tokens: vec![17, 29_999, 4],
             decode_us: vec![90, 80, 85],
             density: 0.18,
+            head: 5,
+            pattern: Some("ashape".to_string()),
             output_digest: vec![1.0, -2.5, 0.0, 3.25],
         };
         let j = r.to_json();
@@ -517,6 +533,15 @@ mod tests {
         assert_eq!(back.chunk_us, vec![120, 130, 140]);
         assert_eq!(back.tokens, vec![17, 29_999, 4]);
         assert_eq!(back.decode_us, vec![90, 80, 85]);
+        assert_eq!(back.head, 5);
+        assert_eq!(back.pattern.as_deref(), Some("ashape"));
+        // A pattern-less response omits the key entirely (legacy-compatible).
+        let bare = PrefillResponse::default().to_json();
+        assert!(bare.get("pattern").is_none());
+        assert_eq!(
+            PrefillResponse::from_json(&bare).unwrap().pattern,
+            None
+        );
     }
 
     #[test]

@@ -473,6 +473,16 @@ mod tests {
         assert_eq!(num("shed_requests"), 0.0);
         assert_eq!(num("deadline_expired"), 0.0);
         assert_eq!(num("cancelled"), 0.0);
+        // Adaptive-pattern telemetry rides along too: with the adaptive
+        // knobs off, every sparse request lowers as vertical-slash, and
+        // the per-head density bins record the two completions.
+        assert_eq!(num("pattern_vs"), 2.0);
+        assert_eq!(num("pattern_ashape"), 0.0);
+        assert_eq!(num("pattern_block"), 0.0);
+        let heads = s.get("density_by_head").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(heads.len(), 8);
+        let touched: f64 = heads.iter().filter_map(|h| h.as_f64()).sum();
+        assert!(touched > 0.0, "sparse completions land in a head bin");
         // A normal request still works on the same connection afterwards.
         assert!(client.prefill_synthetic(3, 128, 7, "sparse", 0.5).unwrap().ok);
         server.shutdown();

@@ -114,6 +114,17 @@ fn info_stats(port: u16) -> anyhow::Result<()> {
         num("kv_rejections"),
         num("requeue_rounds")
     );
+    println!(
+        "  patterns: vs {}  ashape {}  block {}",
+        num("pattern_vs"),
+        num("pattern_ashape"),
+        num("pattern_block")
+    );
+    if let Some(heads) = s.get("density_by_head").and_then(|v| v.as_arr()) {
+        let cells: Vec<String> =
+            heads.iter().map(|h| format!("{:.3}", h.as_f64().unwrap_or(0.0))).collect();
+        println!("  density by head bin: [{}]", cells.join(", "));
+    }
     Ok(())
 }
 

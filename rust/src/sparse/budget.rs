@@ -27,6 +27,40 @@ impl BudgetPolicy {
     }
 }
 
+/// The config-facing *family* of a [`BudgetPolicy`] — what the
+/// `budget_policy` key selects.  The concrete parameters (taus, counts,
+/// fractions) come from the engine knobs at selection time, so the wire
+/// value stays a single token.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BudgetPolicyKind {
+    /// Eq. 18 cumulative-threshold budgets (the paper's mechanism).
+    #[default]
+    Cumulative,
+    /// Flat per-head counts (the static-budget ablation baseline).
+    Fixed,
+    /// Length-proportional per-head counts.
+    Proportional,
+}
+
+impl BudgetPolicyKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BudgetPolicyKind::Cumulative => "cumulative",
+            BudgetPolicyKind::Fixed => "fixed",
+            BudgetPolicyKind::Proportional => "proportional",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<BudgetPolicyKind> {
+        match s {
+            "cumulative" => Some(BudgetPolicyKind::Cumulative),
+            "fixed" => Some(BudgetPolicyKind::Fixed),
+            "proportional" => Some(BudgetPolicyKind::Proportional),
+            _ => None,
+        }
+    }
+}
+
 /// Eq. 18 for one direction: minimal k with sum of top-k >= tau.  Always
 /// returns at least `min_k` (and at most `cap`).
 pub fn cumulative_threshold_k(scores: &[f32], tau: f32, min_k: usize, cap: usize) -> usize {
@@ -76,6 +110,25 @@ pub fn topk_indices_into(scores: &[f32], k: usize, out: &mut Vec<usize>) {
     out.sort_unstable();
 }
 
+/// Force slash offset 0 into a selected offset set (every row must keep
+/// finite softmax mass on itself).  At capacity the weakest selected offset
+/// is evicted to make room.  Shared by every selection path (uniform
+/// [`select_indices`], the legacy global-knob path and the adaptive per-head
+/// path in `sparse_attn`), so the forced-inclusion semantics cannot drift.
+pub fn force_offset_zero(slash: &mut Vec<usize>, a_s: &[f32], cap_s: usize) {
+    if !slash.contains(&0) {
+        if slash.len() >= cap_s && !slash.is_empty() {
+            // evict the weakest selected offset to make room for offset 0
+            let weakest = *slash
+                .iter()
+                .min_by(|&&a, &&b| a_s[a].partial_cmp(&a_s[b]).unwrap())
+                .unwrap();
+            slash.retain(|&o| o != weakest);
+        }
+        slash.push(0);
+    }
+}
+
 /// Full Eq. 18-19 selection.  `caps` bound the budgets (the AOT artifacts
 /// have static index capacities); slash offset 0 is always included so every
 /// row keeps finite softmax mass.
@@ -99,17 +152,7 @@ pub fn select_indices(
     };
     let vertical = topk_indices(a_v, k_v);
     let mut slash = topk_indices(a_s, k_s);
-    if !slash.contains(&0) {
-        if slash.len() >= cap_s && !slash.is_empty() {
-            // evict the weakest selected offset to make room for offset 0
-            let weakest = *slash
-                .iter()
-                .min_by(|&&a, &&b| a_s[a].partial_cmp(&a_s[b]).unwrap())
-                .unwrap();
-            slash.retain(|&o| o != weakest);
-        }
-        slash.push(0);
-    }
+    force_offset_zero(&mut slash, a_s, cap_s);
     VsIndices::new(vertical, slash)
 }
 
@@ -156,6 +199,19 @@ mod tests {
             want.sort_unstable();
             assert_eq!(topk_indices(&s, k), want, "k={k}");
         }
+    }
+
+    #[test]
+    fn policy_kind_parses_and_round_trips() {
+        for kind in [
+            BudgetPolicyKind::Cumulative,
+            BudgetPolicyKind::Fixed,
+            BudgetPolicyKind::Proportional,
+        ] {
+            assert_eq!(BudgetPolicyKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(BudgetPolicyKind::parse("bogus"), None);
+        assert_eq!(BudgetPolicyKind::default(), BudgetPolicyKind::Cumulative);
     }
 
     #[test]

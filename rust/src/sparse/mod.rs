@@ -8,6 +8,6 @@ pub mod kv_compress;
 pub mod mask;
 pub mod merge;
 
-pub use budget::{select_indices, BudgetPolicy};
+pub use budget::{force_offset_zero, select_indices, BudgetPolicy, BudgetPolicyKind};
 pub use index_set::VsIndices;
 pub use merge::{merge_path_union, merge_union};

@@ -1,0 +1,277 @@
+//! Per-layer / per-head budget allocation (the paper's "adaptive
+//! cumulative-threshold strategy allocates sparsity budgets per layer",
+//! FlexPrefill's per-head refinement).
+//!
+//! Each head first receives the budget its own predicted distribution asks
+//! for under the configured [`BudgetPolicyKind`] — for the cumulative policy
+//! that is Eq. 18: the smallest top-ranked prefix whose mass clears tau.
+//! A layer-level redistribution pass then moves *unused* budget from peaky
+//! heads (which cleared tau far below their ceiling) to flat heads (which
+//! the ceiling truncated before they reached tau), under a hard layer
+//! total-density ceiling of `heads * cap` — the aggregate the uniform
+//! global-knob path would spend if every head ran at its ceiling.
+//!
+//! For a single-head layer the redistribution pass is a no-op and the
+//! cumulative policy reproduces the legacy global-knob budget *exactly*
+//! (same threshold function, same floors, same ceilings), which is what
+//! keeps adaptive-at-defaults bit-identical to the historical selection.
+
+use crate::sparse::budget::{cumulative_threshold_k, BudgetPolicyKind};
+
+/// One head's allocated budgets: vertical columns and slash offsets.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HeadBudget {
+    pub k_v: usize,
+    pub k_s: usize,
+}
+
+/// Floors and ceilings every head's budgets must respect — derived from the
+/// `VsPrefill` knobs at the request's operating point (budget-knob scale
+/// already applied).
+#[derive(Clone, Copy, Debug)]
+pub struct HeadLimits {
+    pub min_v: usize,
+    pub min_s: usize,
+    pub cap_v: usize,
+    pub cap_s: usize,
+}
+
+/// Per-head needs for one direction under a policy.  `Fixed` and
+/// `Proportional` are the static-budget ablation baselines; their base
+/// count / fraction mirror the legacy ceilings' shape (`frac` of n, or a
+/// flat `fixed_base`-scaled count), modulated by tau so the budget knob
+/// still sweeps them.
+fn direction_need(
+    scores: &[f32],
+    policy: BudgetPolicyKind,
+    tau: f32,
+    min_k: usize,
+    frac: f32,
+    fixed_base: usize,
+) -> usize {
+    let n = scores.len();
+    match policy {
+        BudgetPolicyKind::Cumulative => cumulative_threshold_k(scores, tau, min_k, n),
+        BudgetPolicyKind::Fixed => ((tau * fixed_base as f32) as usize).max(min_k).min(n),
+        BudgetPolicyKind::Proportional => {
+            ((tau * frac * n as f32) as usize).max(min_k).min(n)
+        }
+    }
+}
+
+/// Allocate one direction across a layer's heads: clamp each head's need to
+/// the per-head ceiling, then redistribute the peaky heads' slack to the
+/// truncated ones.  The invariants (checked by the unit tests):
+///
+/// * every grant stays in `[min_k, min(cap, n)]` except that `min_k` may
+///   exceed the ceiling, in which case the floor wins (legacy semantics);
+/// * no head ever receives more than it needs;
+/// * the layer total never exceeds `sum(min(cap.max(min_k), n))` — the
+///   total-density ceiling.
+fn allocate_direction(
+    heads: &[&[f32]],
+    policy: BudgetPolicyKind,
+    tau: f32,
+    min_k: usize,
+    cap: usize,
+    frac: f32,
+    fixed_base: usize,
+) -> Vec<usize> {
+    let cap_eff = cap.max(min_k);
+    let needs: Vec<usize> = heads
+        .iter()
+        .map(|s| direction_need(s, policy, tau, min_k, frac, fixed_base))
+        .collect();
+    let mut grants: Vec<usize> = needs
+        .iter()
+        .zip(heads)
+        .map(|(&need, s)| need.min(cap_eff).min(s.len()))
+        .collect();
+    // Slack of heads that cleared their need below the ceiling (truncated
+    // heads contribute zero), and the truncated heads' outstanding deficit.
+    let pool: usize = grants
+        .iter()
+        .zip(heads)
+        .map(|(&g, s)| cap_eff.min(s.len()).saturating_sub(g))
+        .sum();
+    let deficits: Vec<usize> = needs
+        .iter()
+        .zip(&grants)
+        .zip(heads)
+        .map(|((&need, &g), s)| need.min(s.len()).saturating_sub(g))
+        .collect();
+    let total_deficit: usize = deficits.iter().sum();
+    let give = pool.min(total_deficit);
+    if give > 0 {
+        // Proportional shares first (integer floor), then hand the rounding
+        // remainder out in index order — fully deterministic.
+        let mut handed = 0usize;
+        for (g, &d) in grants.iter_mut().zip(&deficits) {
+            let share = give * d / total_deficit;
+            *g += share;
+            handed += share;
+        }
+        let mut rem = give - handed;
+        let mut i = 0;
+        while rem > 0 && i < grants.len() {
+            let room = needs[i].min(heads[i].len()).saturating_sub(grants[i]);
+            let take = room.min(rem);
+            grants[i] += take;
+            rem -= take;
+            i += 1;
+        }
+    }
+    grants
+}
+
+/// Allocate budgets for one layer: `heads` holds each head's *calibrated*
+/// predicted distributions `(A_v, A_s)` (the same sharpened distributions
+/// the legacy threshold consumes).  Returns one [`HeadBudget`] per head, in
+/// order.
+pub fn allocate_layer(
+    heads: &[(&[f32], &[f32])],
+    policy: BudgetPolicyKind,
+    tau_v: f32,
+    tau_s: f32,
+    limits: HeadLimits,
+) -> Vec<HeadBudget> {
+    let v: Vec<&[f32]> = heads.iter().map(|h| h.0).collect();
+    let s: Vec<&[f32]> = heads.iter().map(|h| h.1).collect();
+    // The fraction / flat-count bases mirror the legacy fractional ceilings
+    // (0.25 n vertical, 0.125 n slash) and the decode-style flat budgets.
+    let kv = allocate_direction(&v, policy, tau_v, limits.min_v, limits.cap_v, 0.25, 128);
+    let ks = allocate_direction(&s, policy, tau_s, limits.min_s, limits.cap_s, 0.125, 16);
+    kv.into_iter().zip(ks).map(|(k_v, k_s)| HeadBudget { k_v, k_s }).collect()
+}
+
+/// Single-head convenience: the layer allocator degenerates to the plain
+/// per-head budget (redistribution has no peers to trade with).
+pub fn head_budget(
+    a_v: &[f32],
+    a_s: &[f32],
+    policy: BudgetPolicyKind,
+    tau_v: f32,
+    tau_s: f32,
+    limits: HeadLimits,
+) -> HeadBudget {
+    allocate_layer(&[(a_v, a_s)], policy, tau_v, tau_s, limits)[0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn limits(cap_v: usize, cap_s: usize) -> HeadLimits {
+        HeadLimits { min_v: 1, min_s: 1, cap_v, cap_s }
+    }
+
+    /// A distribution with `peak` dominant entries out of `n`.
+    fn peaked(n: usize, peak: usize) -> Vec<f32> {
+        (0..n).map(|i| if i < peak { 1.0 } else { 0.001 }).collect()
+    }
+
+    #[test]
+    fn single_head_matches_plain_cumulative_threshold() {
+        let a_v = peaked(64, 3);
+        let a_s = peaked(64, 2);
+        let lim = limits(16, 8);
+        let b = head_budget(&a_v, &a_s, BudgetPolicyKind::Cumulative, 0.9, 0.9, lim);
+        assert_eq!(b.k_v, cumulative_threshold_k(&a_v, 0.9, 1, 16));
+        assert_eq!(b.k_s, cumulative_threshold_k(&a_s, 0.9, 1, 8));
+    }
+
+    #[test]
+    fn peaky_heads_get_less_than_flat_heads() {
+        let peaky = peaked(128, 2);
+        let flat = vec![1.0f32; 128];
+        let slash = peaked(128, 2);
+        let out = allocate_layer(
+            &[(&peaky, &slash), (&flat, &slash)],
+            BudgetPolicyKind::Cumulative,
+            0.9,
+            0.9,
+            limits(32, 8),
+        );
+        assert!(out[0].k_v < out[1].k_v, "{out:?}");
+    }
+
+    #[test]
+    fn redistribution_moves_slack_to_truncated_heads_under_the_ceiling() {
+        // Head 0 clears tau at ~2 columns (donates ~30 of its 32 ceiling);
+        // head 1 is flat and wants all 128 (truncated at 32 without a
+        // donor).  With redistribution it receives the donated slack, and
+        // the layer total never exceeds 2 * 32.
+        let peaky = peaked(128, 2);
+        let flat = vec![1.0f32; 128];
+        let slash = peaked(128, 2);
+        let lim = limits(32, 8);
+        let out = allocate_layer(
+            &[(&peaky, &slash), (&flat, &slash)],
+            BudgetPolicyKind::Cumulative,
+            0.9,
+            0.9,
+            lim,
+        );
+        let solo_flat = head_budget(&flat, &slash, BudgetPolicyKind::Cumulative, 0.9, 0.9, lim);
+        assert!(out[1].k_v > solo_flat.k_v, "flat head should receive slack: {out:?}");
+        let total: usize = out.iter().map(|b| b.k_v).sum();
+        assert!(total <= 2 * 32, "layer ceiling violated: {total}");
+        // The peaky head keeps exactly its own need.
+        assert_eq!(out[0].k_v, cumulative_threshold_k(&peaky, 0.9, 1, 128));
+    }
+
+    #[test]
+    fn no_head_receives_more_than_its_need() {
+        let peaky = peaked(128, 2);
+        let mid = peaked(128, 40);
+        let slash = peaked(128, 2);
+        let out = allocate_layer(
+            &[(&peaky, &slash), (&mid, &slash)],
+            BudgetPolicyKind::Cumulative,
+            0.9,
+            0.9,
+            limits(32, 8),
+        );
+        // mid's uncapped need:
+        let need = cumulative_threshold_k(&mid, 0.9, 1, 128);
+        assert!(out[1].k_v <= need, "{} > need {need}", out[1].k_v);
+    }
+
+    #[test]
+    fn fixed_and_proportional_policies_ignore_peakiness() {
+        let peaky = peaked(128, 2);
+        let flat = vec![1.0f32; 128];
+        let slash = peaked(128, 2);
+        for policy in [BudgetPolicyKind::Fixed, BudgetPolicyKind::Proportional] {
+            let out = allocate_layer(
+                &[(&peaky, &slash), (&flat, &slash)],
+                policy,
+                0.9,
+                0.9,
+                limits(64, 8),
+            );
+            assert_eq!(out[0].k_v, out[1].k_v, "{policy:?}: {out:?}");
+        }
+    }
+
+    #[test]
+    fn grants_respect_floors_and_sequence_length() {
+        let tiny = peaked(4, 1);
+        let lim = HeadLimits { min_v: 3, min_s: 2, cap_v: 64, cap_s: 64 };
+        let b = head_budget(&tiny, &tiny, BudgetPolicyKind::Cumulative, 0.5, 0.5, lim);
+        assert!(b.k_v >= 3 && b.k_v <= 4, "{b:?}");
+        assert!(b.k_s >= 2 && b.k_s <= 4, "{b:?}");
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let a = peaked(96, 5);
+        let b = vec![0.5f32; 96];
+        let s = peaked(96, 3);
+        let lim = limits(24, 8);
+        let heads: [(&[f32], &[f32]); 2] = [(&a, &s), (&b, &s)];
+        let one = allocate_layer(&heads, BudgetPolicyKind::Cumulative, 0.9, 0.9, lim);
+        let two = allocate_layer(&heads, BudgetPolicyKind::Cumulative, 0.9, 0.9, lim);
+        assert_eq!(one, two);
+    }
+}

@@ -1,0 +1,308 @@
+//! The adaptive-sparsity quality harness: evalsuite-driven needle-retrieval
+//! sweeps comparing the adaptive subsystem (per-head allocator + pattern
+//! vocabulary) against the legacy global-knob baseline, across budgets and
+//! both synthetic head kinds.
+//!
+//! The bench runner serialises the resulting [`QualityReport`] to
+//! `BENCH_quality.json` and gates CI on the critical recall at the default
+//! operating point (mirroring the `BENCH_kernels.json` speed floor), so
+//! density wins can never silently buy an accuracy loss.
+
+use crate::evalsuite::{task_head, ProbeCache, TaskInstance};
+use crate::indexer::Indexer;
+use crate::synth::SynthConfig;
+use crate::util::json::Json;
+
+use super::allocator::{allocate_layer, head_budget};
+use super::AdaptiveSelect;
+use crate::baselines::MaskSpec;
+use crate::sparse::budget::BudgetPolicyKind;
+use crate::sparse_attn::VsPrefill;
+
+/// Sweep dimensions.  `smoke()` is sized for the CI bench-smoke job;
+/// `full()` for local runs.
+#[derive(Clone, Debug)]
+pub struct QualityOptions {
+    /// Context length of every instance.
+    pub n: usize,
+    /// Heads in the layer-redistribution record.
+    pub heads: usize,
+    /// Budget-knob operating points swept.
+    pub budgets: Vec<f32>,
+    /// Needle instances per (kind, budget) cell.
+    pub instances: usize,
+}
+
+impl QualityOptions {
+    pub fn smoke() -> QualityOptions {
+        QualityOptions { n: 256, heads: 4, budgets: vec![0.3, 0.5, 0.8], instances: 2 }
+    }
+
+    pub fn full() -> QualityOptions {
+        QualityOptions { n: 512, heads: 8, budgets: vec![0.2, 0.3, 0.5, 0.8, 1.0], instances: 4 }
+    }
+}
+
+/// One (head kind, budget) cell of the sweep: mean critical recall and mean
+/// density for the baseline and the adaptive selector, plus the adaptive
+/// pattern-choice histogram.
+#[derive(Clone, Debug)]
+pub struct QualityPoint {
+    pub kind: &'static str,
+    pub budget: f32,
+    pub baseline_recall: f32,
+    pub baseline_density: f64,
+    pub adaptive_recall: f32,
+    pub adaptive_density: f64,
+    /// `[vs, ashape, block]` counts across the cell's instances.
+    pub patterns: [u64; 3],
+}
+
+/// One layer-redistribution record: total grants across the layer's heads
+/// without redistribution (each head alone) vs with it, against the layer
+/// total-density ceiling.
+#[derive(Clone, Debug)]
+pub struct LayerRecord {
+    pub kind: &'static str,
+    pub uniform_total: usize,
+    pub adaptive_total: usize,
+    pub ceiling: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct QualityReport {
+    pub points: Vec<QualityPoint>,
+    pub layers: Vec<LayerRecord>,
+}
+
+impl QualityReport {
+    /// The sweep cell at (kind, budget), if present.
+    pub fn point(&self, kind: &str, budget: f32) -> Option<&QualityPoint> {
+        self.points
+            .iter()
+            .find(|p| p.kind == kind && (p.budget - budget).abs() < 1e-6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let points = self
+            .points
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("kind", Json::s(p.kind)),
+                    ("budget", Json::Num(p.budget as f64)),
+                    ("baseline_recall", Json::Num(p.baseline_recall as f64)),
+                    ("baseline_density", Json::Num(p.baseline_density)),
+                    ("adaptive_recall", Json::Num(p.adaptive_recall as f64)),
+                    ("adaptive_density", Json::Num(p.adaptive_density)),
+                    ("pattern_vs", Json::Num(p.patterns[0] as f64)),
+                    ("pattern_ashape", Json::Num(p.patterns[1] as f64)),
+                    ("pattern_block", Json::Num(p.patterns[2] as f64)),
+                ])
+            })
+            .collect();
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("kind", Json::s(l.kind)),
+                    ("uniform_total", Json::Num(l.uniform_total as f64)),
+                    ("adaptive_total", Json::Num(l.adaptive_total as f64)),
+                    ("ceiling", Json::Num(l.ceiling as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![("points", Json::Arr(points)), ("layers", Json::Arr(layers))])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+}
+
+/// The two synthetic head kinds the acceptance criteria name: the default
+/// vertical-dominant generator (random heavy hitters + sinks) and the
+/// slash/sink-dominant generator (`tied_means`, no heavy hitters).
+pub fn head_kinds() -> [(&'static str, SynthConfig); 2] {
+    [
+        ("vertical", SynthConfig::default()),
+        ("slash", SynthConfig { tied_means: true, n_heavy: 0, ..SynthConfig::default() }),
+    ]
+}
+
+fn needle_instance(n: usize, seed: u64) -> TaskInstance {
+    // Deterministic needle placement away from the sinks and the probe tail.
+    let span = n.saturating_sub(24).max(1);
+    let c1 = (16 + (37 + 53 * seed as usize) % span).min(n.saturating_sub(1));
+    let c2 = (16 + (91 + 71 * seed as usize) % span).min(n.saturating_sub(1));
+    TaskInstance {
+        task: "needle",
+        n,
+        critical: vec![c1, c2],
+        probe_rows: 8,
+        base_score: 80.0,
+        difficulty: 1.0,
+        seed,
+    }
+}
+
+/// Run the sweep: for each (head kind, budget) cell, compare the legacy
+/// global-knob selector against the adaptive selector (allocator + pattern
+/// vocabulary, default taus) on the same indexer scores, and record one
+/// layer-redistribution summary per head kind.
+pub fn quality_sweep(indexer: &Indexer, opts: &QualityOptions) -> QualityReport {
+    let baseline = VsPrefill::new(indexer.clone());
+    let adaptive = {
+        let mut v = VsPrefill::new(indexer.clone());
+        v.adaptive = Some(AdaptiveSelect::new(
+            true,
+            true,
+            BudgetPolicyKind::Cumulative,
+            0.0,
+            0.0,
+            v.tau,
+        ));
+        v
+    };
+    let mut report = QualityReport::default();
+    for (ki, (kind, cfg)) in head_kinds().into_iter().enumerate() {
+        for &budget in &opts.budgets {
+            let mut cell = QualityPoint {
+                kind,
+                budget,
+                baseline_recall: 0.0,
+                baseline_density: 0.0,
+                adaptive_recall: 0.0,
+                adaptive_density: 0.0,
+                patterns: [0; 3],
+            };
+            for i in 0..opts.instances {
+                let inst = needle_instance(opts.n, (ki as u64) * 1000 + i as u64 + 11);
+                let head = task_head(&inst, &cfg);
+                let probe = ProbeCache::new(&head, &inst);
+                // Score once with the shared indexer; select per method.
+                let (a_v, a_s) = indexer.predict_kv(&head.k, &head.v);
+                let (b_idx, _) = baseline.select_with_meta(&a_v, &a_s, inst.n, budget);
+                let (a_idx, pat) = adaptive.select_with_meta(&a_v, &a_s, inst.n, budget);
+                cell.baseline_density += b_idx.density(inst.n);
+                cell.adaptive_density += a_idx.density(inst.n);
+                cell.baseline_recall += probe.recall(&MaskSpec::Vs(b_idx));
+                cell.adaptive_recall += probe.recall(&MaskSpec::Vs(a_idx));
+                let pi = match pat.name() {
+                    "ashape" => 1,
+                    "block" => 2,
+                    _ => 0,
+                };
+                cell.patterns[pi] += 1;
+            }
+            let inv = 1.0 / opts.instances as f64;
+            cell.baseline_recall *= inv as f32;
+            cell.adaptive_recall *= inv as f32;
+            cell.baseline_density *= inv;
+            cell.adaptive_density *= inv;
+            report.points.push(cell);
+        }
+        report.layers.push(layer_record(kind, &cfg, indexer, &adaptive, opts));
+    }
+    report
+}
+
+/// Build one layer of `opts.heads` heads (distinct head seeds, so distinct
+/// peakiness) and compare total grants with and without the redistribution
+/// pass, at the default operating point.
+fn layer_record(
+    kind: &'static str,
+    cfg: &SynthConfig,
+    indexer: &Indexer,
+    vsp: &VsPrefill,
+    opts: &QualityOptions,
+) -> LayerRecord {
+    let n = opts.n;
+    let limits = vsp.limits_for(n, 0.5);
+    let tau = (vsp.tau * VsPrefill::knob_scale(0.5)).min(0.995);
+    let mut cal: Vec<(Vec<f32>, Vec<f32>)> = Vec::new();
+    for h in 0..opts.heads {
+        let mut rng = crate::util::rng::Rng::new(900 + h as u64);
+        let head = crate::synth::gen_head(&mut rng, n, cfg, h as u64 % 8);
+        let (a_v, a_s) = indexer.predict_kv(&head.k, &head.v);
+        cal.push(vsp.calibrate(&a_v, &a_s));
+    }
+    let refs: Vec<(&[f32], &[f32])> =
+        cal.iter().map(|(v, s)| (v.as_slice(), s.as_slice())).collect();
+    let layer = allocate_layer(&refs, BudgetPolicyKind::Cumulative, tau, tau, limits);
+    let uniform_total: usize = refs
+        .iter()
+        .map(|&(v, s)| {
+            let b = head_budget(v, s, BudgetPolicyKind::Cumulative, tau, tau, limits);
+            b.k_v + b.k_s
+        })
+        .sum();
+    let adaptive_total: usize = layer.iter().map(|b| b.k_v + b.k_s).sum();
+    let per_head_ceiling =
+        limits.cap_v.max(limits.min_v).min(n) + limits.cap_s.max(limits.min_s).min(n);
+    LayerRecord { kind, uniform_total, adaptive_total, ceiling: opts.heads * per_head_ceiling }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::indexer::train::{distill, TrainConfig};
+
+    fn quick() -> Indexer {
+        let tc = TrainConfig {
+            steps: 150,
+            batch: 3,
+            seq_len: 128,
+            hidden_base: 32,
+            ..Default::default()
+        };
+        distill(&tc).0
+    }
+
+    #[test]
+    fn smoke_sweep_meets_acceptance_at_default_point() {
+        let ix = quick();
+        let report = quality_sweep(&ix, &QualityOptions::smoke());
+        for (kind, _) in head_kinds() {
+            let p = report.point(kind, 0.5).expect("default point present");
+            // Acceptance: density no worse than the global-knob baseline at
+            // equal-or-better critical recall (small float tolerances).
+            assert!(
+                p.adaptive_density <= p.baseline_density + 0.02,
+                "{kind}: adaptive {} vs baseline {}",
+                p.adaptive_density,
+                p.baseline_density
+            );
+            assert!(
+                p.adaptive_recall >= p.baseline_recall - 0.02,
+                "{kind}: adaptive {} vs baseline {}",
+                p.adaptive_recall,
+                p.baseline_recall
+            );
+        }
+    }
+
+    #[test]
+    fn layer_records_respect_the_ceiling() {
+        let ix = quick();
+        let report = quality_sweep(&ix, &QualityOptions::smoke());
+        assert_eq!(report.layers.len(), 2);
+        for l in &report.layers {
+            assert!(l.adaptive_total <= l.ceiling, "{l:?}");
+            assert!(l.adaptive_total >= l.uniform_total, "{l:?}");
+        }
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let ix = quick();
+        let report = quality_sweep(&ix, &QualityOptions::smoke());
+        let parsed = Json::parse(&report.to_json_string()).expect("valid json");
+        let points = parsed.get("points").and_then(|p| p.as_arr()).expect("points");
+        assert_eq!(points.len(), report.points.len());
+        let first = &points[0];
+        assert!(first.get("adaptive_recall").and_then(|x| x.as_f64()).is_some());
+        assert!(first.get("pattern_vs").and_then(|x| x.as_f64()).is_some());
+    }
+}

@@ -1,0 +1,70 @@
+//! Adaptive sparsity subsystem: per-layer/per-head budget allocation, a
+//! per-head pattern vocabulary, and the CI-gated quality harness.
+//!
+//! The legacy `VsPrefill::select` path applies one global operating point
+//! (the `budget_tau` knob) to every head.  This subsystem makes selection
+//! adaptive in the paper's sense: the [`allocator`] turns each head's
+//! predicted score mass into its *own* cumulative-threshold budget (with a
+//! layer-level redistribution pass under a total-density ceiling), the
+//! [`pattern`] vocabulary picks a per-head pattern family (vertical-slash /
+//! A-shape / block-sparse) from cheap shape statistics, and the [`harness`]
+//! proves on evalsuite needle tasks that the density wins are not accuracy
+//! losses.  Everything lowers to the existing `VsIndices` masks, so the
+//! executors run unmodified.
+//!
+//! All of it is opt-in: with `adaptive_alloc` and `pattern_select` both off
+//! (the defaults) the engine reproduces the legacy selection bit-for-bit.
+
+pub mod allocator;
+pub mod harness;
+pub mod pattern;
+
+pub use allocator::{allocate_layer, head_budget, HeadBudget, HeadLimits};
+pub use harness::{quality_sweep, QualityOptions, QualityReport};
+pub use pattern::{classify, lower, HeadPattern};
+
+use crate::sparse::budget::BudgetPolicyKind;
+
+/// Resolved adaptive-selection settings carried by `VsPrefill`.  `None` on
+/// the `VsPrefill` means pure legacy selection; `Some` with both flags off
+/// is equivalent (and produces identical indices — see the conformance
+/// tests).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveSelect {
+    /// Run the per-head allocator (instead of the uniform threshold).
+    pub alloc: bool,
+    /// Run the per-head pattern classifier (instead of always VS).
+    pub pattern: bool,
+    pub policy: BudgetPolicyKind,
+    /// Per-direction thresholds, already resolved (never 0).
+    pub tau_v: f32,
+    pub tau_s: f32,
+}
+
+impl AdaptiveSelect {
+    /// Build settings from config knobs: `tau_v`/`tau_s` of `0.0` mean
+    /// "follow the global tau" (`fallback_tau`).
+    pub fn new(
+        alloc: bool,
+        pattern: bool,
+        policy: BudgetPolicyKind,
+        tau_v: f32,
+        tau_s: f32,
+        fallback_tau: f32,
+    ) -> AdaptiveSelect {
+        let resolve = |t: f32| if t > 0.0 { t } else { fallback_tau };
+        AdaptiveSelect { alloc, pattern, policy, tau_v: resolve(tau_v), tau_s: resolve(tau_s) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_taus_follow_the_fallback() {
+        let a = AdaptiveSelect::new(true, false, BudgetPolicyKind::Cumulative, 0.0, 0.8, 0.9);
+        assert_eq!(a.tau_v, 0.9);
+        assert_eq!(a.tau_s, 0.8);
+    }
+}

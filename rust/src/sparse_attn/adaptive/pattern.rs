@@ -1,0 +1,312 @@
+//! Per-head pattern vocabulary (MInference's observation: heads want
+//! *different pattern families*, not just different budgets).
+//!
+//! The classifier reads cheap O(n) shape statistics off the indexer's
+//! predicted (A_v, A_s) distributions at index time and picks a
+//! [`HeadPattern`].  Every pattern *lowers* to the existing [`VsIndices`]
+//! representation, so the fused tiled kernel, the paged executors and
+//! `IncrementalScores` run completely unmodified masks — the vocabulary is
+//! a selection-time concept only.
+//!
+//! The classifier is deliberately conservative: unless a head's mass is
+//! overwhelmingly concentrated in the A-shape region (leading sink columns
+//! + local diagonal window) or in a couple of column blocks, it falls back
+//! to [`HeadPattern::VerticalSlash`] — the general family — so retrieval
+//! heads whose indexer mass is spread over content columns are never
+//! narrowed.
+
+use crate::sparse::budget::{force_offset_zero, topk_indices};
+use crate::sparse::VsIndices;
+
+use super::allocator::HeadBudget;
+
+/// Leading-column region inspected for sink mass.
+const SINK_COLS: usize = 8;
+/// Leading-offset region inspected for local-window mass.
+const LOCAL_WINDOW: usize = 32;
+/// Column-block granularity of the block-sparse pattern.
+pub const BLOCK: usize = 64;
+/// Mass share a region must hold before a specialised pattern fires.
+const CONCENTRATION: f32 = 0.90;
+
+/// The per-head pattern family, chosen at index time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HeadPattern {
+    /// General vertical columns + slash diagonals (the paper's family).
+    VerticalSlash,
+    /// Attention-sink head: `sink` leading columns + a `window`-deep local
+    /// diagonal band.
+    AShape { sink: usize, window: usize },
+    /// Mass concentrated in a few contiguous column blocks of width `block`.
+    BlockSparse { block: usize },
+}
+
+impl HeadPattern {
+    /// Stable wire/metrics name of the family.
+    pub fn name(&self) -> &'static str {
+        match self {
+            HeadPattern::VerticalSlash => "vs",
+            HeadPattern::AShape { .. } => "ashape",
+            HeadPattern::BlockSparse { .. } => "block",
+        }
+    }
+}
+
+/// Shape statistics of one head's predicted distributions — everything the
+/// classifier looks at, computable in one O(n) pass plus one top-k.
+#[derive(Clone, Debug)]
+pub struct PatternStats {
+    /// Share of vertical mass in the first [`SINK_COLS`] columns.
+    pub sink_share: f32,
+    /// Share of slash mass in the first [`LOCAL_WINDOW`] offsets.
+    pub local_share: f32,
+    /// Minimal sink depth holding [`CONCENTRATION`] of the front-region mass.
+    pub sink: usize,
+    /// Minimal window depth holding [`CONCENTRATION`] of the local mass.
+    pub window: usize,
+    /// Share of vertical mass held by the top-32 columns.
+    pub top_mass_share: f32,
+    /// Number of distinct width-[`BLOCK`] blocks those top columns fall in.
+    pub top_blocks: usize,
+}
+
+impl PatternStats {
+    /// Measure the statistics off raw (unsharpened) predicted distributions.
+    pub fn measure(a_v: &[f32], a_s: &[f32]) -> PatternStats {
+        let tot_v: f32 = a_v.iter().map(|x| x.max(0.0)).sum();
+        let tot_s: f32 = a_s.iter().map(|x| x.max(0.0)).sum();
+        let front_v: Vec<f32> =
+            a_v.iter().take(SINK_COLS).map(|x| x.max(0.0)).collect();
+        let front_s: Vec<f32> =
+            a_s.iter().take(LOCAL_WINDOW).map(|x| x.max(0.0)).collect();
+        let front_v_tot: f32 = front_v.iter().sum();
+        let front_s_tot: f32 = front_s.iter().sum();
+        let sink_share = if tot_v > 0.0 { front_v_tot / tot_v } else { 0.0 };
+        let local_share = if tot_s > 0.0 { front_s_tot / tot_s } else { 0.0 };
+        let top = topk_indices(a_v, 32.min(a_v.len()));
+        let top_mass: f32 = top.iter().map(|&j| a_v[j].max(0.0)).sum();
+        let mut blocks: Vec<usize> = top.iter().map(|&j| j / BLOCK).collect();
+        blocks.sort_unstable();
+        blocks.dedup();
+        PatternStats {
+            sink_share,
+            local_share,
+            sink: prefix_depth(&front_v, front_v_tot),
+            window: prefix_depth(&front_s, front_s_tot),
+            top_mass_share: if tot_v > 0.0 { top_mass / tot_v } else { 0.0 },
+            top_blocks: blocks.len(),
+        }
+    }
+}
+
+/// Minimal prefix length of `xs` holding [`CONCENTRATION`] of `total`
+/// (at least 1 when the region is non-empty).
+fn prefix_depth(xs: &[f32], total: f32) -> usize {
+    if xs.is_empty() || total <= 0.0 {
+        return 1;
+    }
+    let target = CONCENTRATION * total;
+    let mut acc = 0.0f32;
+    for (i, &x) in xs.iter().enumerate() {
+        acc += x;
+        if acc >= target {
+            return i + 1;
+        }
+    }
+    xs.len()
+}
+
+/// Classify one head from its raw predicted distributions.  Conservative:
+/// the specialised families only fire when the concentration evidence is
+/// overwhelming; everything else stays [`HeadPattern::VerticalSlash`].
+pub fn classify(a_v: &[f32], a_s: &[f32], n: usize) -> HeadPattern {
+    let tot_v: f32 = a_v.iter().map(|x| x.max(0.0)).sum();
+    let tot_s: f32 = a_s.iter().map(|x| x.max(0.0)).sum();
+    if tot_v <= 0.0 || tot_s <= 0.0 {
+        return HeadPattern::VerticalSlash;
+    }
+    let st = PatternStats::measure(a_v, a_s);
+    if st.sink_share >= CONCENTRATION && st.local_share >= CONCENTRATION {
+        return HeadPattern::AShape { sink: st.sink, window: st.window };
+    }
+    if n > BLOCK && st.top_mass_share >= 0.7 && st.top_blocks <= 2 {
+        return HeadPattern::BlockSparse { block: BLOCK };
+    }
+    HeadPattern::VerticalSlash
+}
+
+/// Lower a pattern to the [`VsIndices`] the executors consume, spending at
+/// most the allocated [`HeadBudget`].  The specialised lowerings never spend
+/// *more* vertical columns or slash offsets than the vertical-slash lowering
+/// would — that is what keeps per-head density monotonically ≤ the baseline.
+pub fn lower(
+    pattern: HeadPattern,
+    a_v: &[f32],
+    a_s: &[f32],
+    b: HeadBudget,
+    cap_s: usize,
+) -> VsIndices {
+    let n = a_v.len();
+    match pattern {
+        HeadPattern::VerticalSlash => {
+            let vertical = topk_indices(a_v, b.k_v);
+            let mut slash = topk_indices(a_s, b.k_s);
+            force_offset_zero(&mut slash, a_s, cap_s);
+            VsIndices::new(vertical, slash)
+        }
+        HeadPattern::AShape { sink, window } => {
+            // Leading sink columns + leading local offsets, clamped to the
+            // allocated budget (never wider than the VS lowering).  Offset 0
+            // is the first local offset, so forced inclusion is implicit.
+            let nv = sink.min(b.k_v).max(1).min(n);
+            let ns = window.min(b.k_s.max(1)).max(1).min(n);
+            VsIndices::new((0..nv).collect(), (0..ns).collect())
+        }
+        HeadPattern::BlockSparse { block } => {
+            // Spend whole top-mass blocks while they fit in k_v, then the
+            // strongest remainder columns from the next-best block.
+            let block = block.max(1);
+            let n_blocks = n.div_ceil(block);
+            let mut mass = vec![0.0f32; n_blocks];
+            for (j, &x) in a_v.iter().enumerate() {
+                mass[j / block] += x.max(0.0);
+            }
+            let mut ranked: Vec<usize> = (0..n_blocks).collect();
+            ranked.sort_unstable_by(|&a, &bb| {
+                mass[bb]
+                    .partial_cmp(&mass[a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(&bb))
+            });
+            let mut vertical: Vec<usize> = Vec::new();
+            let budget = b.k_v.min(n);
+            for &bi in &ranked {
+                let lo = bi * block;
+                let hi = (lo + block).min(n);
+                if vertical.len() + (hi - lo) <= budget {
+                    vertical.extend(lo..hi);
+                } else {
+                    // Partial block: take its strongest remaining columns.
+                    let room = budget - vertical.len();
+                    if room > 0 {
+                        let local = topk_indices(&a_v[lo..hi], room);
+                        vertical.extend(local.into_iter().map(|j| lo + j));
+                    }
+                    break;
+                }
+            }
+            if vertical.is_empty() {
+                vertical = topk_indices(a_v, budget.max(1));
+            }
+            let mut slash = topk_indices(a_s, b.k_s);
+            force_offset_zero(&mut slash, a_s, cap_s);
+            VsIndices::new(vertical, slash)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sinky(n: usize) -> (Vec<f32>, Vec<f32>) {
+        // Mass overwhelmingly on the first columns / first offsets.
+        let a_v: Vec<f32> =
+            (0..n).map(|j| if j < 3 { 10.0 } else { 0.0005 }).collect();
+        let a_s: Vec<f32> =
+            (0..n).map(|o| if o < 6 { 8.0 } else { 0.0005 }).collect();
+        (a_v, a_s)
+    }
+
+    fn spread(n: usize) -> (Vec<f32>, Vec<f32>) {
+        let a_v: Vec<f32> = (0..n).map(|j| 1.0 + (j % 7) as f32 * 0.1).collect();
+        let a_s: Vec<f32> = (0..n).map(|o| 1.0 + (o % 5) as f32 * 0.1).collect();
+        (a_v, a_s)
+    }
+
+    #[test]
+    fn sink_dominant_head_classifies_ashape() {
+        let (a_v, a_s) = sinky(256);
+        let p = classify(&a_v, &a_s, 256);
+        match p {
+            HeadPattern::AShape { sink, window } => {
+                assert!(sink >= 1 && sink <= SINK_COLS);
+                assert!(window >= 1 && window <= LOCAL_WINDOW);
+            }
+            other => panic!("expected AShape, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn spread_mass_stays_vertical_slash() {
+        let (a_v, a_s) = spread(256);
+        assert_eq!(classify(&a_v, &a_s, 256), HeadPattern::VerticalSlash);
+    }
+
+    #[test]
+    fn blocky_mass_classifies_block_sparse() {
+        let n = 256;
+        let mut a_v = vec![0.001f32; n];
+        for j in 128..160 {
+            a_v[j] = 5.0; // one hot 64-block (block index 2)
+        }
+        let a_s: Vec<f32> = (0..n).map(|o| 1.0 + (o % 5) as f32 * 0.1).collect();
+        assert_eq!(classify(&a_v, &a_s, n), HeadPattern::BlockSparse { block: BLOCK });
+    }
+
+    #[test]
+    fn degenerate_mass_falls_back_to_vertical_slash() {
+        let z = vec![0.0f32; 64];
+        assert_eq!(classify(&z, &z, 64), HeadPattern::VerticalSlash);
+    }
+
+    #[test]
+    fn ashape_lowering_is_never_denser_than_vs() {
+        let n = 256;
+        let (a_v, a_s) = sinky(n);
+        let b = HeadBudget { k_v: 32, k_s: 8 };
+        let vs = lower(HeadPattern::VerticalSlash, &a_v, &a_s, b, 8);
+        let p = classify(&a_v, &a_s, n);
+        let ash = lower(p, &a_v, &a_s, b, 8);
+        assert!(ash.vertical.len() <= vs.vertical.len());
+        assert!(ash.slash.len() <= vs.slash.len());
+        assert!(ash.density(n) <= vs.density(n) + 1e-12);
+        // Offset 0 always present (every row keeps self mass).
+        assert!(ash.slash.contains(&0));
+    }
+
+    #[test]
+    fn block_lowering_respects_budget_and_includes_offset_zero() {
+        let n = 256;
+        let mut a_v = vec![0.001f32; n];
+        for j in 128..160 {
+            a_v[j] = 5.0;
+        }
+        let mut a_s = vec![0.001f32; n];
+        a_s[9] = 4.0; // offset 0 weak: forced inclusion must still fire
+        let b = HeadBudget { k_v: 80, k_s: 1 };
+        let idx = lower(HeadPattern::BlockSparse { block: BLOCK }, &a_v, &a_s, b, 1);
+        assert!(idx.vertical.len() <= 80, "{}", idx.vertical.len());
+        // The hot block's columns are all in.
+        assert!((128..160).all(|j| idx.vertical.contains(&j)));
+        assert!(idx.slash.contains(&0));
+    }
+
+    #[test]
+    fn vs_lowering_matches_direct_topk() {
+        let n = 128;
+        let (a_v, a_s) = spread(n);
+        let b = HeadBudget { k_v: 12, k_s: 4 };
+        let idx = lower(HeadPattern::VerticalSlash, &a_v, &a_s, b, 16);
+        let mut want_s = topk_indices(&a_s, 4);
+        force_offset_zero(&mut want_s, &a_s, 16);
+        assert_eq!(idx, VsIndices::new(topk_indices(&a_v, 12), want_s));
+    }
+
+    #[test]
+    fn pattern_names_are_stable() {
+        assert_eq!(HeadPattern::VerticalSlash.name(), "vs");
+        assert_eq!(HeadPattern::AShape { sink: 2, window: 4 }.name(), "ashape");
+        assert_eq!(HeadPattern::BlockSparse { block: 64 }.name(), "block");
+    }
+}

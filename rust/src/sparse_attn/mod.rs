@@ -6,10 +6,12 @@
 //! calibrated against measured executor timings; `vsprefill` wires
 //! Indexer -> budget -> merge -> exec into the `SparsePredictor` interface.
 
+pub mod adaptive;
 pub mod cost;
 pub mod exec;
 pub mod vsprefill;
 
+pub use adaptive::{AdaptiveSelect, HeadPattern};
 pub use cost::{CostModel, MethodCost};
 pub use exec::{
     decode_columns, decode_columns_into, sparse_attention_blocks, sparse_attention_vs,

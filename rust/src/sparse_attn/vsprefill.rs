@@ -4,9 +4,13 @@
 
 use crate::baselines::{MaskSpec, SparsePredictor};
 use crate::indexer::Indexer;
-use crate::sparse::budget::{cumulative_threshold_k, topk_indices};
+use crate::sparse::budget::{cumulative_threshold_k, force_offset_zero, topk_indices};
 use crate::sparse::VsIndices;
 use crate::synth::SynthHead;
+
+use super::adaptive::allocator::{head_budget, HeadBudget, HeadLimits};
+use super::adaptive::pattern::{classify, lower};
+use super::adaptive::{AdaptiveSelect, HeadPattern};
 
 pub struct VsPrefill {
     pub indexer: Indexer,
@@ -39,6 +43,11 @@ pub struct VsPrefill {
     /// for the native executor which has no static-shape constraint.
     pub cap_v: Option<usize>,
     pub cap_s: Option<usize>,
+    /// Adaptive per-head selection (allocator + pattern vocabulary).  `None`
+    /// (the default) is the legacy global-knob path; `Some` with both flags
+    /// off produces identical indices — the adaptive path is strictly
+    /// opt-in.
+    pub adaptive: Option<AdaptiveSelect>,
 }
 
 impl VsPrefill {
@@ -54,6 +63,7 @@ impl VsPrefill {
             max_k_s: 2048,
             cap_v: None,
             cap_s: None,
+            adaptive: None,
         }
     }
 
@@ -64,60 +74,120 @@ impl VsPrefill {
     /// Predict indices from raw (K_rope, V) — the serving entry point (the
     /// trait method below adapts it to the SynthHead-based harness).
     pub fn predict_kv(&self, k: &crate::tensor::Mat, v: &crate::tensor::Mat, budget: f32) -> VsIndices {
+        self.predict_kv_with_meta(k, v, budget).0
+    }
+
+    /// [`Self::predict_kv`] plus the pattern the head was classified as
+    /// (always [`HeadPattern::VerticalSlash`] on the legacy path).
+    pub fn predict_kv_with_meta(
+        &self,
+        k: &crate::tensor::Mat,
+        v: &crate::tensor::Mat,
+        budget: f32,
+    ) -> (VsIndices, HeadPattern) {
         let n = k.rows;
         let (a_v, a_s) = self.indexer.predict_kv(k, v);
-        self.select(&a_v, &a_s, n, budget)
+        self.select_with_meta(&a_v, &a_s, n, budget)
     }
 
     /// Eq. 18-19 selection from externally-computed scores (e.g. the AOT
     /// indexer graph's outputs).
     pub fn select_from_scores(&self, a_v: &[f32], a_s: &[f32], n: usize, budget: f32) -> VsIndices {
-        self.select(a_v, a_s, n, budget)
+        self.select_with_meta(a_v, a_s, n, budget).0
     }
 
-    fn select(&self, a_v: &[f32], a_s: &[f32], n: usize, budget: f32) -> VsIndices {
-        // The budget knob rescales tau: knob 0.5 -> tau; 1.0 -> ~0.995.
-        let tau = (self.tau * (budget / 0.5).clamp(0.2, 1.2)).min(0.995);
-        // The budget knob also scales the ceilings so Fig. 5's sweep reaches
-        // both aggressive and permissive operating points.  The effective
-        // ceiling is min(absolute buffer capacity, fraction of n): the
-        // former models the kernel's constant index buffer (dominant at long
-        // context — what makes speedup grow with n), the latter keeps short
-        // contexts meaningfully sparse (the AOT artifacts cap at n/8, n/16).
-        let scale = (budget / 0.5).clamp(0.1, 2.0);
+    /// Selection entry point: routes to the legacy global-knob selection or
+    /// the adaptive subsystem, returning the chosen per-head pattern
+    /// alongside the indices.
+    pub fn select_with_meta(
+        &self,
+        a_v: &[f32],
+        a_s: &[f32],
+        n: usize,
+        budget: f32,
+    ) -> (VsIndices, HeadPattern) {
+        let Some(ad) = self.adaptive else {
+            return (self.select_legacy(a_v, a_s, n, budget), HeadPattern::VerticalSlash);
+        };
+        let scale = Self::knob_scale(budget);
+        let limits = self.limits_for(n, budget);
+        let (av_cal, as_cal) = self.calibrate(a_v, a_s);
+        let b = if ad.alloc {
+            head_budget(
+                &av_cal,
+                &as_cal,
+                ad.policy,
+                (ad.tau_v * scale).min(0.995),
+                (ad.tau_s * scale).min(0.995),
+                limits,
+            )
+        } else {
+            let tau = (self.tau * scale).min(0.995);
+            HeadBudget {
+                k_v: cumulative_threshold_k(&av_cal, tau, limits.min_v, limits.cap_v),
+                k_s: cumulative_threshold_k(&as_cal, tau, limits.min_s, limits.cap_s),
+            }
+        };
+        let pat = if ad.pattern { classify(a_v, a_s, n) } else { HeadPattern::VerticalSlash };
+        (lower(pat, a_v, a_s, b, limits.cap_s), pat)
+    }
+
+    /// The budget knob's scale factor (knob 0.5 is the paper's operating
+    /// point).  One clamp for tau *and* the ceilings: the historical split
+    /// (tau clamped to 0.2..1.2, ceilings to 0.1..2.0) made density
+    /// non-monotone in the knob at the extremes.
+    pub fn knob_scale(budget: f32) -> f32 {
+        (budget / 0.5).clamp(0.1, 2.0)
+    }
+
+    /// Per-head floors and ceilings at an operating point.  The effective
+    /// ceiling is min(absolute buffer capacity, fraction of n): the former
+    /// models the kernel's constant index buffer (dominant at long context —
+    /// what makes speedup grow with n), the latter keeps short contexts
+    /// meaningfully sparse (the AOT artifacts cap at n/8, n/16).
+    pub fn limits_for(&self, n: usize, budget: f32) -> HeadLimits {
+        let scale = Self::knob_scale(budget);
         let abs_cap_v = ((self.max_k_v as f32 * scale) as usize).max(1);
         let abs_cap_s = ((self.max_k_s as f32 * scale) as usize).max(1);
         let frac_cap_v = ((0.25 * scale * n as f32) as usize).max(1);
         let frac_cap_s = ((0.125 * scale * n as f32) as usize).max(1);
-        let cap_v = self.cap_v.unwrap_or(n).min(abs_cap_v).min(frac_cap_v).min(n);
-        let cap_s = self.cap_s.unwrap_or(n).min(abs_cap_s).min(frac_cap_s).min(n);
-        let sharp = |xs: &[f32], gamma: f32| -> Vec<f32> {
-            let mut v: Vec<f32> = xs.iter().map(|x| x.max(0.0).powf(gamma)).collect();
-            let s: f32 = v.iter().sum();
-            if s > 0.0 {
-                v.iter_mut().for_each(|x| *x /= s);
-            }
-            v
-        };
-        let av_s = sharp(a_v, self.sharpen_v);
-        let as_s = sharp(a_s, self.sharpen_s);
-        let min_k_v = ((self.min_frac_v * n as f32) as usize).max(1);
-        let k_v = cumulative_threshold_k(&av_s, tau, min_k_v, cap_v);
-        let k_s = cumulative_threshold_k(&as_s, tau, self.min_k_s, cap_s);
+        HeadLimits {
+            min_v: ((self.min_frac_v * n as f32) as usize).max(1),
+            min_s: self.min_k_s,
+            cap_v: self.cap_v.unwrap_or(n).min(abs_cap_v).min(frac_cap_v).min(n),
+            cap_s: self.cap_s.unwrap_or(n).min(abs_cap_s).min(frac_cap_s).min(n),
+        }
+    }
+
+    /// Calibrated (rank-preserving) distributions the cumulative threshold
+    /// consumes: p^gamma / sum p^gamma per direction.
+    pub fn calibrate(&self, a_v: &[f32], a_s: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        (sharpen(a_v, self.sharpen_v), sharpen(a_s, self.sharpen_s))
+    }
+
+    fn select_legacy(&self, a_v: &[f32], a_s: &[f32], n: usize, budget: f32) -> VsIndices {
+        // The budget knob rescales tau: knob 0.5 -> tau; 1.0 -> ~0.995.
+        let scale = Self::knob_scale(budget);
+        let tau = (self.tau * scale).min(0.995);
+        let limits = self.limits_for(n, budget);
+        let (av_s, as_s) = self.calibrate(a_v, a_s);
+        let k_v = cumulative_threshold_k(&av_s, tau, limits.min_v, limits.cap_v);
+        let k_s = cumulative_threshold_k(&as_s, tau, limits.min_s, limits.cap_s);
         let vertical = topk_indices(a_v, k_v);
         let mut slash = topk_indices(a_s, k_s);
-        if !slash.contains(&0) {
-            if slash.len() >= cap_s && !slash.is_empty() {
-                let weakest = *slash
-                    .iter()
-                    .min_by(|&&a, &&b| a_s[a].partial_cmp(&a_s[b]).unwrap())
-                    .unwrap();
-                slash.retain(|&o| o != weakest);
-            }
-            slash.push(0);
-        }
+        force_offset_zero(&mut slash, a_s, limits.cap_s);
         VsIndices::new(vertical, slash)
     }
+}
+
+/// Rank-preserving exponent calibration: p^gamma / sum p^gamma.
+fn sharpen(xs: &[f32], gamma: f32) -> Vec<f32> {
+    let mut v: Vec<f32> = xs.iter().map(|x| x.max(0.0).powf(gamma)).collect();
+    let s: f32 = v.iter().sum();
+    if s > 0.0 {
+        v.iter_mut().for_each(|x| *x /= s);
+    }
+    v
 }
 
 impl SparsePredictor for VsPrefill {
@@ -175,6 +245,67 @@ mod tests {
         let d2 = vsp.predict(&h, 0.6).density(128);
         let d3 = vsp.predict(&h, 1.0).density(128);
         assert!(d1 <= d2 + 1e-9 && d2 <= d3 + 1e-9, "{d1} {d2} {d3}");
+    }
+
+    #[test]
+    fn budget_knob_is_monotone_on_both_head_kinds_including_extremes() {
+        // Regression for the historical clamp asymmetry: tau scaled with
+        // clamp(0.2, 1.2) while the ceilings scaled with clamp(0.1, 2.0),
+        // so at extreme knob values tau saturated while the ceilings kept
+        // moving and density could dip as the knob rose.  One shared scale
+        // keeps density non-decreasing over the whole knob range, on both
+        // synthetic head kinds.
+        let vsp = trained();
+        for (seed, cfg) in [
+            (81u64, SynthConfig::default()),
+            (82u64, SynthConfig { tied_means: true, n_heavy: 0, ..SynthConfig::default() }),
+        ] {
+            let mut rng = Rng::new(seed);
+            let h = gen_head(&mut rng, 192, &cfg, seed % 8);
+            let knobs = [0.02f32, 0.05, 0.1, 0.2, 0.35, 0.5, 0.65, 0.8, 1.0, 1.3];
+            let mut prev = 0.0f64;
+            for &b in &knobs {
+                let d = vsp.predict(&h, b).density(192);
+                assert!(d + 1e-7 >= prev, "density dipped at knob {b}: {d} < {prev}");
+                prev = d;
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_at_defaults_is_bit_identical_to_legacy() {
+        // With the allocator on (cumulative policy, taus following the
+        // global tau) and pattern selection off, per-head budgets and the
+        // selected index sets must match the legacy path exactly — this is
+        // what makes the engine knobs safe to flip head-by-head.
+        use crate::sparse_attn::adaptive::AdaptiveSelect;
+        use crate::sparse::budget::BudgetPolicyKind;
+        let legacy = trained();
+        let adaptive = {
+            let mut v = VsPrefill::new(legacy.indexer.clone());
+            v.adaptive = Some(AdaptiveSelect::new(
+                true,
+                false,
+                BudgetPolicyKind::Cumulative,
+                0.0,
+                0.0,
+                v.tau,
+            ));
+            v
+        };
+        for (seed, cfg) in [
+            (91u64, SynthConfig::default()),
+            (92u64, SynthConfig { tied_means: true, n_heavy: 0, ..SynthConfig::default() }),
+        ] {
+            let mut rng = Rng::new(seed);
+            let h = gen_head(&mut rng, 160, &cfg, seed % 8);
+            for budget in [0.2f32, 0.5, 0.8, 1.0] {
+                let a = legacy.predict_kv(&h.k, &h.v, budget);
+                let (b, pat) = adaptive.predict_kv_with_meta(&h.k, &h.v, budget);
+                assert_eq!(a, b, "seed {seed} budget {budget}");
+                assert_eq!(pat.name(), "vs");
+            }
+        }
     }
 
     #[test]

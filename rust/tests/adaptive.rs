@@ -1,0 +1,172 @@
+//! Adaptive-sparsity conformance suite.
+//!
+//! The adaptive subsystem (per-head budget allocator + pattern vocabulary)
+//! replaces only index *selection*; scoring and execution are untouched.
+//! So the contract is tight on both sides:
+//!   - with the knobs ON, the chunked lifecycle (incremental scores) must
+//!     reproduce the monolithic `process` baseline (batch `predict_kv`)
+//!     bit-for-bit — same density, digest and reported pattern — across
+//!     chunk sizes and across the native and reference backends;
+//!   - with the knobs OFF (and with the allocator at default taus), the
+//!     responses must be bit-identical to today's legacy selector.
+
+use vsprefill::coordinator::backend::{ChunkStep, ExecBackend};
+use vsprefill::coordinator::{
+    AttentionMode, CoordinatorConfig, EngineConfig, PagedKvStore, PrefillRequest, PrefillResponse,
+};
+use vsprefill::serve::EngineBuilder;
+use vsprefill::synth::SynthConfig;
+use vsprefill::util::rng::Rng;
+
+/// Both chunk-capable backends with the given engine knobs.
+fn backends(engine: EngineConfig) -> Vec<Box<dyn ExecBackend>> {
+    let cfg = CoordinatorConfig { engine, ..Default::default() };
+    ["native", "reference"]
+        .iter()
+        .map(|name| {
+            EngineBuilder::new()
+                .config(cfg.clone())
+                .backend_name(name)
+                .unwrap()
+                .build_backend()
+                .unwrap()
+        })
+        .collect()
+}
+
+fn adaptive_engine() -> EngineConfig {
+    EngineConfig { adaptive_alloc: true, pattern_select: true, ..EngineConfig::default() }
+}
+
+fn store() -> PagedKvStore {
+    PagedKvStore::new(64, 32, SynthConfig::default().head_dim)
+}
+
+/// Drive one prefill-only request through the chunked lifecycle.
+fn drive(
+    backend: &dyn ExecBackend,
+    store: &PagedKvStore,
+    req: PrefillRequest,
+    chunk: usize,
+) -> PrefillResponse {
+    let mut rng = Rng::new(0);
+    let id = req.id;
+    let bucket = backend.bucket_for(req.seq_len()).expect("request fits a bucket");
+    assert!(store.reserve(id, bucket), "store sized for the test");
+    let mut run = backend.begin(req, bucket, chunk, None, &mut rng);
+    loop {
+        match backend.prefill_chunk(&mut run, store) {
+            ChunkStep::Progress => {}
+            ChunkStep::Done(resp) => {
+                store.free(id);
+                return resp;
+            }
+            ChunkStep::EnterDecode => panic!("prefill-only request entered decode"),
+        }
+    }
+}
+
+#[test]
+fn adaptive_chunked_matches_monolithic_across_backends_and_chunk_sizes() {
+    // Knobs ON: incremental scores on the final chunk equal batch
+    // `predict_kv`, so the adaptive allocator must grant identical budgets
+    // and the classifier must pick the same pattern — digest, density and
+    // pattern all match the monolithic baseline at every chunking.
+    for b in backends(adaptive_engine()) {
+        let mono = b.process(&PrefillRequest::synthetic(1, 250, 9, AttentionMode::Sparse));
+        assert!(mono.ok, "{}: {:?}", b.name(), mono.error);
+        assert!(mono.pattern.is_some(), "{}: sparse responses carry a pattern", b.name());
+        for chunk in [64usize, 100, 256] {
+            let st = store();
+            let req = PrefillRequest::synthetic(2, 250, 9, AttentionMode::Sparse);
+            let resp = drive(b.as_ref(), &st, req, chunk);
+            assert!(resp.ok, "{}: {:?}", b.name(), resp.error);
+            assert_eq!(
+                resp.output_digest,
+                mono.output_digest,
+                "{} chunk {chunk}: chunked digest != monolithic",
+                b.name()
+            );
+            assert_eq!(resp.density, mono.density, "{} chunk {chunk}", b.name());
+            assert_eq!(resp.pattern, mono.pattern, "{} chunk {chunk}", b.name());
+            assert_eq!(resp.head, mono.head, "{} chunk {chunk}", b.name());
+        }
+    }
+}
+
+#[test]
+fn adaptive_backends_agree_with_each_other() {
+    // Same request, knobs ON, different backends: allocation is pure
+    // arithmetic over shared scores, so densities and digests agree.
+    let all = backends(adaptive_engine());
+    let results: Vec<PrefillResponse> = all
+        .iter()
+        .map(|b| {
+            let req = PrefillRequest::synthetic(7, 200, 4, AttentionMode::Sparse);
+            drive(b.as_ref(), &store(), req, 64)
+        })
+        .collect();
+    for (b, r) in all.iter().zip(&results) {
+        assert!(r.ok, "{}: {:?}", b.name(), r.error);
+    }
+    for (b, r) in all.iter().zip(&results).skip(1) {
+        assert_eq!(r.density, results[0].density, "{}", b.name());
+        assert_eq!(r.output_digest, results[0].output_digest, "{}", b.name());
+        assert_eq!(r.pattern, results[0].pattern, "{}", b.name());
+    }
+}
+
+#[test]
+fn knobs_off_and_default_tau_allocator_reproduce_legacy_digests() {
+    // The acceptance bit-identity claims, through the full serving
+    // backends: knobs OFF is the legacy selector verbatim, and the
+    // allocator at default taus (tau_v = tau_s = 0 -> follow budget_tau)
+    // with the pattern vocabulary off grants the exact same budgets.
+    let legacy = backends(EngineConfig::default());
+    let off_is_default =
+        EngineConfig { adaptive_alloc: false, pattern_select: false, ..EngineConfig::default() };
+    let alloc_only = EngineConfig { adaptive_alloc: true, ..EngineConfig::default() };
+    for (li, variant) in [off_is_default, alloc_only].into_iter().enumerate() {
+        for (lb, vb) in legacy.iter().zip(backends(variant)) {
+            for seed in [3u64, 9, 14] {
+                let req = PrefillRequest::synthetic(40 + seed, 200, seed, AttentionMode::Sparse);
+                let want = drive(lb.as_ref(), &store(), req.clone(), 64);
+                let got = drive(vb.as_ref(), &store(), req, 64);
+                assert!(want.ok && got.ok, "{}: {:?} {:?}", lb.name(), want.error, got.error);
+                assert_eq!(
+                    got.output_digest,
+                    want.output_digest,
+                    "{} variant {li} seed {seed}: digest diverged from legacy",
+                    lb.name()
+                );
+                assert_eq!(got.density, want.density, "{} variant {li} seed {seed}", lb.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_counts_patterns_and_head_bins() {
+    // Through the full coordinator with the classifier on: every completed
+    // sparse request lands in exactly one pattern-counter bucket and one
+    // head-density bin.
+    let cfg = CoordinatorConfig {
+        engine: adaptive_engine(),
+        max_wait_ms: 1,
+        ..Default::default()
+    };
+    let c = EngineBuilder::new().config(cfg).build().unwrap();
+    for seed in 0..6u64 {
+        let r = c
+            .prefill(PrefillRequest::synthetic(seed, 192, seed, AttentionMode::Sparse))
+            .unwrap();
+        assert!(r.ok, "{:?}", r.error);
+        assert!(r.pattern.is_some());
+        assert_eq!(r.head, (seed % 8) as usize, "head bin rides the response");
+    }
+    let snap = c.shutdown();
+    assert_eq!(snap.pattern_vs + snap.pattern_ashape + snap.pattern_block, 6);
+    assert_eq!(snap.density_by_head.len(), 8);
+    let touched = snap.density_by_head.iter().filter(|&&d| d > 0.0).count();
+    assert!(touched >= 5, "six distinct seeds hit six bins: {:?}", snap.density_by_head);
+}
