@@ -51,7 +51,8 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let mut total_cols = 0usize;
     for q0 in (0..n).step_by(64) {
-        total_cols += vsprefill::sparse::merge::block_columns(&idx.vertical, &idx.slash, q0, 64, n).len();
+        let cols = vsprefill::sparse::merge::block_columns(&idx.vertical, &idx.slash, q0, 64, n);
+        total_cols += cols.len();
     }
     let merge_t = t0.elapsed();
     let t1 = std::time::Instant::now();

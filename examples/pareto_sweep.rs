@@ -37,7 +37,9 @@ fn main() -> anyhow::Result<()> {
     // Pareto front: no other point with both higher score and speedup.
     let is_pareto = |i: usize| -> bool {
         !points.iter().enumerate().any(|(j, p)| {
-            j != i && p.1 >= points[i].1 && p.2 >= points[i].2 && (p.1 > points[i].1 || p.2 > points[i].2)
+            let dominates = p.1 >= points[i].1 && p.2 >= points[i].2;
+            let strictly = p.1 > points[i].1 || p.2 > points[i].2;
+            j != i && dominates && strictly
         })
     };
     println!("{:<20} {:>8} {:>9}  pareto", "config", "score", "speedup");

@@ -27,6 +27,10 @@
 //! recall at the default operating point against a committed floor
 //! (mirroring the kernels gate: a missing baseline skips cleanly).
 
+// A bench owns its process: exiting non-zero on a gate failure is the
+// whole point (the crate-wide clippy::exit warn targets library code).
+#![allow(clippy::exit)]
+
 use std::time::Instant;
 
 use vsprefill::attention::flash::flash_attention;
@@ -229,9 +233,10 @@ struct KernelRow {
 /// Time `f` twice: once with the dispatched primitives forced to the
 /// scalar path, once on the default (portable/wide) path.
 fn timed_pair<F: FnMut()>(reps: usize, f: &mut F) -> (f64, f64) {
-    simd::set_forced_path(Some(simd::Path::Scalar));
-    let scalar = time_ms(reps, f);
-    simd::set_forced_path(None);
+    let scalar = {
+        let _force = simd::ForcedPathGuard::force(simd::Path::Scalar);
+        time_ms(reps, f)
+    };
     let dispatched = time_ms(reps, f);
     (scalar, dispatched)
 }
@@ -346,7 +351,6 @@ fn kernels_sweep(smoke: bool) {
             push(&mut rows, "flash_attention", n, t, s, v);
         }
     }
-    simd::set_forced_path(None);
 
     // Read the committed baseline BEFORE the fresh write lands on the same
     // default path, then gate and persist.

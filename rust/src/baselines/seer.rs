@@ -121,7 +121,9 @@ fn block_mass(a: &Mat, block: usize, qb: usize, kb: usize) -> f32 {
 fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
     // Gaussian elimination with partial pivoting on a 3x3 system.
     for col in 0..3 {
-        let piv = (col..3).max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap()).unwrap();
+        let piv = (col..3)
+            .max_by(|&r1, &r2| a[r1][col].abs().partial_cmp(&a[r2][col].abs()).unwrap())
+            .unwrap();
         a.swap(col, piv);
         b.swap(col, piv);
         let p = a[col][col];

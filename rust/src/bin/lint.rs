@@ -1,0 +1,107 @@
+//! `vsprefill-lint` — run the in-tree invariant passes over the crate.
+//!
+//! ```text
+//! cargo run --release --bin vsprefill-lint                     # lint only
+//! cargo run --release --bin vsprefill-lint -- --check-inventory
+//! cargo run --release --bin vsprefill-lint -- --write-inventory
+//! cargo run --release --bin vsprefill-lint -- --root path/to/rust
+//! ```
+//!
+//! Exit status is non-zero on any finding, and — with
+//! `--check-inventory` — when `UNSAFE_INVENTORY.json` no longer matches
+//! the tree (run `--write-inventory` and commit the diff).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use vsprefill::lint;
+
+const INVENTORY: &str = "UNSAFE_INVENTORY.json";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut write_inventory = false;
+    let mut check_inventory = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("vsprefill-lint: --root needs a path");
+                    return ExitCode::from(2);
+                }
+            },
+            "--write-inventory" => write_inventory = true,
+            "--check-inventory" => check_inventory = true,
+            other => {
+                eprintln!("vsprefill-lint: unknown flag `{other}`");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let cfg = match lint::locks::LockConfig::load(&root.join("lint/lock_order.toml")) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            eprintln!("vsprefill-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    let files = match lint::load_tree(&root) {
+        Ok(files) => files,
+        Err(e) => {
+            eprintln!("vsprefill-lint: {e}");
+            return ExitCode::from(2);
+        }
+    };
+
+    let findings = lint::run_all(&files, &cfg);
+    for f in &findings {
+        println!("{f}");
+    }
+
+    let mut failed = !findings.is_empty();
+    let json = lint::unsafe_audit::inventory_json(&files);
+    let inv_path = root.join(INVENTORY);
+    if write_inventory {
+        if let Err(e) = std::fs::write(&inv_path, &json) {
+            eprintln!("vsprefill-lint: cannot write {}: {e}", inv_path.display());
+            return ExitCode::from(2);
+        }
+        println!("vsprefill-lint: wrote {}", inv_path.display());
+    } else if check_inventory {
+        match std::fs::read_to_string(&inv_path) {
+            Ok(committed) if committed == json => {}
+            Ok(_) => {
+                eprintln!(
+                    "vsprefill-lint: {INVENTORY} is stale — the unsafe surface changed; \
+                     run `cargo run --release --bin vsprefill-lint -- --write-inventory` \
+                     and commit the diff"
+                );
+                failed = true;
+            }
+            Err(e) => {
+                eprintln!("vsprefill-lint: cannot read {}: {e}", inv_path.display());
+                failed = true;
+            }
+        }
+    }
+
+    let sites: usize = files
+        .iter()
+        .filter(|f| f.is_src())
+        .map(|f| lint::unsafe_audit::sites(f).len())
+        .sum();
+    println!(
+        "vsprefill-lint: {} file(s), {} unsafe site(s), {} finding(s)",
+        files.len(),
+        sites,
+        findings.len()
+    );
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

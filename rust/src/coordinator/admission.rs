@@ -123,7 +123,7 @@ impl AdmissionQueue {
     }
 
     pub fn push(&self, item: WorkItem) -> Result<(), Rejected> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.inner.lock().expect("admission queue poisoned");
         let reason = if q.len() >= self.cap {
             Some(RejectReason::QueueFull)
         } else if item.req.priority == Priority::Batch && q.len() >= self.batch_cap {
@@ -143,12 +143,12 @@ impl AdmissionQueue {
 
     /// Re-insert at the front (used for KV-cache backpressure).
     pub fn requeue(&self, item: WorkItem) {
-        self.inner.lock().unwrap().push_front(item);
+        self.inner.lock().expect("admission queue poisoned").push_front(item);
         self.cv.notify_one();
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.inner.lock().expect("admission queue poisoned").len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -157,9 +157,9 @@ impl AdmissionQueue {
 
     /// Pop up to `max` items, waiting up to `wait` for the first one.
     pub fn pop_up_to(&self, max: usize, wait: std::time::Duration) -> Vec<WorkItem> {
-        let mut q = self.inner.lock().unwrap();
+        let mut q = self.inner.lock().expect("admission queue poisoned");
         if q.is_empty() && !wait.is_zero() {
-            let (guard, _) = self.cv.wait_timeout(q, wait).unwrap();
+            let (guard, _) = self.cv.wait_timeout(q, wait).expect("admission queue poisoned");
             q = guard;
         }
         let take = q.len().min(max);

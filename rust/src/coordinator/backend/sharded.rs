@@ -49,6 +49,9 @@ use super::{
 /// across threads is sound, and the scoped fan-out joins before the borrow
 /// ends.
 struct ShardRef<'a>(&'a dyn ExecBackend);
+// SAFETY: see the struct doc — every shard made the `unsafe`
+// `with_parallel_dispatch` promise that `&self` may cross threads, and the
+// scoped fan-out joins before the borrow ends.
 unsafe impl Send for ShardRef<'_> {}
 
 /// Split `rows` query rows into at most `shards` contiguous slices whose

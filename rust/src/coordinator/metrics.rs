@@ -145,23 +145,23 @@ impl Metrics {
             self.completed.fetch_add(1, Ordering::Relaxed);
             self.chunks_executed.fetch_add(resp.chunks, Ordering::Relaxed);
             self.tokens_generated.fetch_add(resp.tokens.len() as u64, Ordering::Relaxed);
-            self.prefill_us.lock().unwrap().push(resp.prefill_us as f64);
-            self.queue_us.lock().unwrap().push(resp.queue_us as f64);
-            self.index_us.lock().unwrap().push(resp.index_us as f64);
-            self.ttft_us.lock().unwrap().push(resp.ttft_us as f64);
-            self.densities.lock().unwrap().push(resp.density);
+            self.prefill_us.lock().expect("reservoir poisoned").push(resp.prefill_us as f64);
+            self.queue_us.lock().expect("reservoir poisoned").push(resp.queue_us as f64);
+            self.index_us.lock().expect("reservoir poisoned").push(resp.index_us as f64);
+            self.ttft_us.lock().expect("reservoir poisoned").push(resp.ttft_us as f64);
+            self.densities.lock().expect("reservoir poisoned").push(resp.density);
             match resp.pattern.as_deref() {
                 Some("vs") => self.pattern_vs.fetch_add(1, Ordering::Relaxed),
                 Some("ashape") => self.pattern_ashape.fetch_add(1, Ordering::Relaxed),
                 Some("block") => self.pattern_block.fetch_add(1, Ordering::Relaxed),
                 _ => 0,
             };
-            let mut hd = self.head_density.lock().unwrap();
+            let mut hd = self.head_density.lock().expect("head-density poisoned");
             let bin = &mut hd[resp.head.min(7)];
             bin.0 += resp.density;
             bin.1 += 1;
             drop(hd);
-            let mut itl = self.itl_us.lock().unwrap();
+            let mut itl = self.itl_us.lock().expect("reservoir poisoned");
             for &us in &resp.decode_us {
                 itl.push(us as f64);
             }
@@ -178,20 +178,20 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let sorted = |r: &Mutex<Reservoir>| {
-            let mut v = r.lock().unwrap().values().to_vec();
+            let mut v = r.lock().expect("reservoir poisoned").values().to_vec();
             v.sort_by(|a, b| a.partial_cmp(b).unwrap());
             v
         };
         let prefill = sorted(&self.prefill_us);
         let ttft = sorted(&self.ttft_us);
         let itl = sorted(&self.itl_us);
-        let queue = self.queue_us.lock().unwrap().values().to_vec();
-        let index = self.index_us.lock().unwrap().values().to_vec();
-        let dens = self.densities.lock().unwrap().values().to_vec();
+        let queue = self.queue_us.lock().expect("reservoir poisoned").values().to_vec();
+        let index = self.index_us.lock().expect("reservoir poisoned").values().to_vec();
+        let dens = self.densities.lock().expect("reservoir poisoned").values().to_vec();
         let density_by_head = self
             .head_density
             .lock()
-            .unwrap()
+            .expect("head-density poisoned")
             .iter()
             .map(|&(sum, count)| if count > 0 { sum / count as f64 } else { 0.0 })
             .collect();

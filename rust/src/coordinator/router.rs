@@ -67,7 +67,7 @@ impl ReplicaRouter {
     /// The fleet's capability surface: the probe backend's, with the
     /// replica dimension set to the fleet width.
     pub fn capabilities(&self) -> Capabilities {
-        let mut caps = self.probe.lock().unwrap().capabilities();
+        let mut caps = self.probe.lock().expect("probe backend poisoned").capabilities();
         caps.replicas = self.replicas.len();
         caps
     }
@@ -75,7 +75,7 @@ impl ReplicaRouter {
     /// The request's prefix chain as the probe backend sees it (all
     /// replicas share one configuration, so one chain fits every pool).
     fn chain_for(&self, req: &PrefillRequest) -> Option<PrefixChain> {
-        let probe = self.probe.lock().unwrap();
+        let probe = self.probe.lock().expect("probe backend poisoned");
         let block_size = self.replicas[0].kv.block_size;
         probe.bucket_for(req.seq_len()).and_then(|b| probe.prefix_chain(req, b, block_size))
     }

@@ -492,8 +492,8 @@ fn dispatch_round(
     let entering_decode: Mutex<Vec<Inflight>> = Mutex::new(Vec::new());
     let step = |mut job: Inflight, b: &dyn ExecBackend| match b.prefill_chunk(&mut job.run, store)
     {
-        ChunkStep::Progress => survivors.lock().unwrap().push(job),
-        ChunkStep::EnterDecode => entering_decode.lock().unwrap().push(job),
+        ChunkStep::Progress => survivors.lock().expect("round sink poisoned").push(job),
+        ChunkStep::EnterDecode => entering_decode.lock().expect("round sink poisoned").push(job),
         ChunkStep::Done(resp) => {
             store.free(job.run.id());
             met.record(&resp);
@@ -501,12 +501,12 @@ fn dispatch_round(
         }
     };
     if caps.parallel() && round.len() > 1 {
-        // SAFETY of the Sync wrapper: taken only when the backend opted
-        // into parallel dispatch through the *unsafe*
+        struct ShareBackend<'a>(&'a dyn ExecBackend);
+        // SAFETY: constructed only when the backend opted into parallel
+        // dispatch through the *unsafe*
         // `Capabilities::with_parallel_dispatch`, whose contract is exactly
         // this — `&self` is soundly shareable across threads (plain owned
         // data, no interior mutability); `prefill_chunk` takes `&self`.
-        struct ShareBackend<'a>(&'a dyn ExecBackend);
         unsafe impl Sync for ShareBackend<'_> {}
         impl<'a> ShareBackend<'a> {
             // Method (not field access) so the closure captures the whole
@@ -525,12 +525,12 @@ fn dispatch_round(
     }
     // Survivors and decode entrants rejoin in request-id order for
     // determinism (par_drain completes in arbitrary order).
-    let mut back = survivors.into_inner().unwrap();
+    let mut back = survivors.into_inner().expect("round sink poisoned");
     back.sort_by_key(|j| j.run.id());
     for job in back {
         ready.push_back(job);
     }
-    let mut entrants = entering_decode.into_inner().unwrap();
+    let mut entrants = entering_decode.into_inner().expect("round sink poisoned");
     entrants.sort_by_key(|j| j.run.id());
     for Inflight { run, reply } in entrants {
         debug_assert!(run.is_decoding(), "EnterDecode must leave the run in the decode phase");

@@ -20,21 +20,34 @@ pub struct LongBenchFamily {
     pub difficulty: f32,
 }
 
+/// One-line table row: (name, needles, probe_rows, base_qwen, base_llama,
+/// difficulty).
+const fn fam(
+    name: &'static str,
+    needles: usize,
+    probe_rows: usize,
+    base_qwen: f32,
+    base_llama: f32,
+    difficulty: f32,
+) -> LongBenchFamily {
+    LongBenchFamily { name, needles, probe_rows, base_qwen, base_llama, difficulty }
+}
+
 /// The paper's 13 LongBench columns with their FlashAttn anchors.
 pub const FAMILIES: [LongBenchFamily; 13] = [
-    LongBenchFamily { name: "Qasper", needles: 3, probe_rows: 24, base_qwen: 40.66, base_llama: 42.98, difficulty: 1.0 },
-    LongBenchFamily { name: "MFQA-en", needles: 4, probe_rows: 24, base_qwen: 22.12, base_llama: 26.18, difficulty: 0.9 },
-    LongBenchFamily { name: "TREC", needles: 16, probe_rows: 32, base_qwen: 72.67, base_llama: 8.00, difficulty: 0.5 },
-    LongBenchFamily { name: "2WikiMQA", needles: 5, probe_rows: 24, base_qwen: 40.28, base_llama: 43.46, difficulty: 1.3 },
-    LongBenchFamily { name: "TOC", needles: 8, probe_rows: 24, base_qwen: 6.41, base_llama: 26.28, difficulty: 0.7 },
-    LongBenchFamily { name: "MultiNews", needles: 20, probe_rows: 32, base_qwen: 50.53, base_llama: 55.25, difficulty: 0.5 },
-    LongBenchFamily { name: "GovReport", needles: 24, probe_rows: 32, base_qwen: 30.75, base_llama: 34.93, difficulty: 0.4 },
-    LongBenchFamily { name: "PassageRet", needles: 1, probe_rows: 16, base_qwen: 100.0, base_llama: 99.67, difficulty: 1.1 },
-    LongBenchFamily { name: "PsgCount", needles: 10, probe_rows: 16, base_qwen: 1.45, base_llama: 11.72, difficulty: 1.4 },
-    LongBenchFamily { name: "SamSum", needles: 12, probe_rows: 24, base_qwen: 35.98, base_llama: 8.13, difficulty: 0.6 },
-    LongBenchFamily { name: "LSHT", needles: 8, probe_rows: 24, base_qwen: 8.25, base_llama: 22.81, difficulty: 0.8 },
-    LongBenchFamily { name: "HotpotQA", needles: 4, probe_rows: 24, base_qwen: 57.61, base_llama: 60.94, difficulty: 1.4 },
-    LongBenchFamily { name: "TriviaQA", needles: 2, probe_rows: 16, base_qwen: 85.49, base_llama: 88.76, difficulty: 0.7 },
+    fam("Qasper", 3, 24, 40.66, 42.98, 1.0),
+    fam("MFQA-en", 4, 24, 22.12, 26.18, 0.9),
+    fam("TREC", 16, 32, 72.67, 8.00, 0.5),
+    fam("2WikiMQA", 5, 24, 40.28, 43.46, 1.3),
+    fam("TOC", 8, 24, 6.41, 26.28, 0.7),
+    fam("MultiNews", 20, 32, 50.53, 55.25, 0.5),
+    fam("GovReport", 24, 32, 30.75, 34.93, 0.4),
+    fam("PassageRet", 1, 16, 100.0, 99.67, 1.1),
+    fam("PsgCount", 10, 16, 1.45, 11.72, 1.4),
+    fam("SamSum", 12, 24, 35.98, 8.13, 0.6),
+    fam("LSHT", 8, 24, 8.25, 22.81, 0.8),
+    fam("HotpotQA", 4, 24, 57.61, 60.94, 1.4),
+    fam("TriviaQA", 2, 16, 85.49, 88.76, 0.7),
 ];
 
 /// Instances for one family at a mix of lengths (LongBench inputs are

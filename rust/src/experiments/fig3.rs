@@ -148,7 +148,8 @@ pub fn run_fig8(n: usize, seed: u64) -> Vec<Fig8Row> {
             // empirical vs Gaussian CDF at the quartiles
             let mut sorted = col.clone();
             sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            let phi = |x: f64| 0.5 * (1.0 + erf((x - mean) / (std * std::f64::consts::SQRT_2 + 1e-12)));
+            let sqrt2 = std::f64::consts::SQRT_2;
+            let phi = |x: f64| 0.5 * (1.0 + erf((x - mean) / (std * sqrt2 + 1e-12)));
             let mut fit_err = 0.0f64;
             for q in [0.25, 0.5, 0.75] {
                 let idx = ((n as f64) * q) as usize;
@@ -276,7 +277,10 @@ mod tests {
             write!(
                 f,
                 "intra {} inter {} prompt {} model {}",
-                self.intra_group_corr, self.inter_group_corr, self.cross_prompt_corr, self.cross_model_corr
+                self.intra_group_corr,
+                self.inter_group_corr,
+                self.cross_prompt_corr,
+                self.cross_model_corr,
             )
         }
     }

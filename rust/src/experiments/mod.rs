@@ -73,7 +73,10 @@ impl MethodSet {
     pub fn for_family(synth: &SynthConfig, n: usize) -> MethodSet {
         MethodSet {
             full: FullAttention,
-            streaming: StreamingLlm { sinks: 128.min(n / 8).max(2), window: 2048.min(n / 2).max(8) },
+            streaming: StreamingLlm {
+                sinks: 128.min(n / 8).max(2),
+                window: 2048.min(n / 2).max(8),
+            },
             flex: FlexPrefill::paper_config(n),
             seer: SeerAttention::distilled(64.min(n / 4).max(8), synth, 11, 3),
             vsp: VsPrefill::new(experiment_indexer(synth)),

@@ -16,7 +16,12 @@ pub struct Row {
     pub recall_pct: f64,
 }
 
-fn recall_at_sparsity(ix: &crate::indexer::Indexer, sparsity: f64, trials: usize, seed: u64) -> f64 {
+fn recall_at_sparsity(
+    ix: &crate::indexer::Indexer,
+    sparsity: f64,
+    trials: usize,
+    seed: u64,
+) -> f64 {
     let synth = SynthConfig::default();
     let n = 512;
     let mut sum = 0.0;

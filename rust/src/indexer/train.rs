@@ -72,7 +72,14 @@ impl Grads {
 }
 
 /// One sample's loss + gradient accumulation.  Returns the loss value.
-fn backward_sample(ix: &Indexer, x: &Mat, t_v: &[f32], t_s: &[f32], loss: Loss, g: &mut Grads) -> f32 {
+fn backward_sample(
+    ix: &Indexer,
+    x: &Mat,
+    t_v: &[f32],
+    t_s: &[f32],
+    loss: Loss,
+    g: &mut Grads,
+) -> f32 {
     let n = x.rows;
     let h = ix.hidden();
     let (z, pre) = ix.hidden_fwd(x);
@@ -242,7 +249,15 @@ mod tests {
     #[test]
     fn all_losses_trainable() {
         for loss in Loss::all() {
-            let (_, hist) = distill(&TrainConfig { steps: 100, batch: 3, seq_len: 96, loss, hidden_base: 32, ..Default::default() });
+            let tc = TrainConfig {
+                steps: 100,
+                batch: 3,
+                seq_len: 96,
+                loss,
+                hidden_base: 32,
+                ..Default::default()
+            };
+            let (_, hist) = distill(&tc);
             assert!(hist.iter().all(|x| x.is_finite()), "{loss:?}");
             let early: f32 = hist[..5].iter().sum::<f32>() / 5.0;
             let late: f32 = hist[hist.len() - 5..].iter().sum::<f32>() / 5.0;

@@ -15,12 +15,21 @@
 //!
 //! See DESIGN.md for the full inventory and EXPERIMENTS.md for results.
 
+// Every unsafe operation inside an `unsafe fn` must sit in an explicit
+// inner `unsafe {}` block carrying its own `// SAFETY:` comment — the
+// in-tree linter (`vsprefill-lint`, `src/lint/`) audits the comments and
+// CI runs it as a blocking job.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod attention;
 pub mod baselines;
 pub mod coordinator;
 pub mod evalsuite;
 pub mod experiments;
 pub mod indexer;
+/// In-tree static analysis: the invariant passes behind `vsprefill-lint`
+/// (`src/bin/lint.rs`) and the blocking CI `lint` job.
+pub mod lint;
 /// PJRT execution of the AOT artifacts.  Compiled only with the `pjrt`
 /// feature: it needs the `xla` crate, which the offline tier-1 build does
 /// not have (see Cargo.toml).

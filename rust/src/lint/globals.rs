@@ -1,0 +1,107 @@
+//! Pass 3 — process-global confinement.
+//!
+//! The SIMD dispatch path is the crate's one process-global knob
+//! (`tensor::simd`'s `PATH` atomic, surfaced as `VSPREFILL_SIMD` and the
+//! [`ForcedPathGuard`](crate::tensor::simd::ForcedPathGuard)).  Mutating
+//! it from library code would leak one caller's override into every other
+//! thread's kernels, so:
+//!
+//! * **PG01** — the legacy raw setter name (`set_forced_path`) must not
+//!   reappear anywhere outside `src/tensor/simd.rs`.
+//! * **PG02** — `env::set_var` / `env::remove_var` are forbidden
+//!   everywhere: mutating the environment is unsound in the presence of
+//!   threads and un-scopeable.
+//! * **PG03** — `ForcedPathGuard::force` / `::auto` may only be
+//!   constructed in `src/tensor/simd.rs`, `tests/`, or `benches/`, and by
+//!   at most one function per file: path forcing stays centralized where
+//!   its restore-on-drop scope is auditable.
+
+use super::scan::{enclosing_fns, has_token, SourceFile};
+use super::Finding;
+
+const SIMD_MOD: &str = "src/tensor/simd.rs";
+
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        for (l, code) in f.code.iter().enumerate() {
+            if f.rel != SIMD_MOD && has_token(code, "set_forced_path") {
+                out.push(Finding {
+                    file: f.rel.clone(),
+                    line: l + 1,
+                    code: "PG01",
+                    msg: "process-global SIMD override mutated outside its owning \
+                          module — use a scoped `ForcedPathGuard`"
+                        .to_string(),
+                });
+            }
+            if has_token(code, "set_var") || has_token(code, "remove_var") {
+                out.push(Finding {
+                    file: f.rel.clone(),
+                    line: l + 1,
+                    code: "PG02",
+                    msg: "environment mutation — `VSPREFILL_SIMD` and friends are \
+                          read-only after startup; pass configuration explicitly"
+                        .to_string(),
+                });
+            }
+        }
+        guard_confinement(f, &mut out);
+    }
+    out
+}
+
+fn guard_constructions(f: &SourceFile) -> Vec<usize> {
+    f.code
+        .iter()
+        .enumerate()
+        .filter(|(_, code)| {
+            code.contains("ForcedPathGuard::force") || code.contains("ForcedPathGuard::auto")
+        })
+        .map(|(l, _)| l)
+        .collect()
+}
+
+fn guard_confinement(f: &SourceFile, out: &mut Vec<Finding>) {
+    let sites = guard_constructions(f);
+    if sites.is_empty() {
+        return;
+    }
+    let allowed =
+        f.rel == SIMD_MOD || f.rel.starts_with("tests/") || f.rel.starts_with("benches/");
+    if !allowed {
+        for &l in &sites {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: l + 1,
+                code: "PG03",
+                msg: "ForcedPathGuard constructed outside simd.rs/tests/benches — \
+                      library code must not force the dispatch path"
+                    .to_string(),
+            });
+        }
+        return;
+    }
+    // Even where forcing is allowed, it stays centralized: at most one
+    // function per file constructs guards.
+    let fns = enclosing_fns(&f.code);
+    let mut owners: Vec<String> = Vec::new();
+    for &l in &sites {
+        let owner = fns[l].clone().unwrap_or_default();
+        if !owners.contains(&owner) {
+            owners.push(owner);
+        }
+        if owners.len() > 1 {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: l + 1,
+                code: "PG03",
+                msg: format!(
+                    "ForcedPathGuard constructed in more than one function of this \
+                     file ({}) — centralize path forcing in one place",
+                    owners.join(", ")
+                ),
+            });
+        }
+    }
+}

@@ -1,0 +1,322 @@
+//! Pass 2 — lock discipline.
+//!
+//! The crate's lock hierarchy is *declared* in `rust/lint/lock_order.toml`
+//! (one `[[lock]]` entry per mutex, ranked outermost → innermost) and this
+//! pass enforces it textually:
+//!
+//! * **LK01** — a declared lock acquired while a lock of equal or higher
+//!   rank is held in the same function (guard liveness tracked through
+//!   `let` bindings, `drop(guard)`, and scope exit).
+//! * **LK02** — lock results unwrapped (`.lock().unwrap()`,
+//!   `.into_inner().unwrap()`, `wait_timeout(..).unwrap()`) outside test
+//!   code: poisoning must be attributable via `.expect("<which> poisoned")`.
+//! * **LK03** — `debug_assert!` whose arguments acquire a lock: the whole
+//!   acquisition vanishes in release builds, so the assert both lies and
+//!   perturbs timing in exactly the profile where races reproduce.
+//! * **LK04** — a `.lock(` in a hierarchy-covered file (or any `src/`
+//!   file) that matches no declared acquire pattern: new mutexes must be
+//!   ranked before they land.
+//!
+//! This is a *textual* analysis: it sees intra-file, intra-function
+//! acquisition order only.  That is exactly the level the codebase
+//! commits to — guards are short-lived and never cross call boundaries —
+//! and the point of the pass is to keep it that way.
+
+use std::path::Path;
+
+use super::scan::{brace_delta, enclosing_fns, in_spans, test_spans, SourceFile};
+use super::Finding;
+
+/// One declared lock.
+pub struct LockDecl {
+    pub name: String,
+    /// Outermost = lowest.  Acquisitions must strictly increase.
+    pub rank: u64,
+    /// Crate-relative file the mutex lives in.
+    pub file: String,
+    /// Textual acquire patterns, e.g. `self.meta.lock()`.
+    pub acquire: Vec<String>,
+}
+
+pub struct LockConfig {
+    pub locks: Vec<LockDecl>,
+}
+
+impl LockConfig {
+    pub fn load(path: &Path) -> anyhow::Result<LockConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        LockConfig::parse(&text)
+    }
+
+    /// Minimal TOML-subset parser: `[[lock]]` tables with string, integer
+    /// and single-line string-array values.  No external crates.
+    pub fn parse(text: &str) -> anyhow::Result<LockConfig> {
+        let mut locks: Vec<LockDecl> = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            if t == "[[lock]]" {
+                locks.push(LockDecl {
+                    name: String::new(),
+                    rank: 0,
+                    file: String::new(),
+                    acquire: Vec::new(),
+                });
+                continue;
+            }
+            let Some((key, val)) = t.split_once('=') else {
+                anyhow::bail!("lock_order.toml:{}: expected `key = value`", i + 1);
+            };
+            let Some(cur) = locks.last_mut() else {
+                anyhow::bail!("lock_order.toml:{}: key before any [[lock]]", i + 1);
+            };
+            let (key, val) = (key.trim(), val.trim());
+            match key {
+                "name" => cur.name = unquote(val, i)?,
+                "file" => cur.file = unquote(val, i)?,
+                "rank" => {
+                    cur.rank = val
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("lock_order.toml:{}: bad rank", i + 1))?
+                }
+                "acquire" => {
+                    if !val.starts_with('[') || !val.ends_with(']') {
+                        anyhow::bail!("lock_order.toml:{}: acquire must be an array", i + 1);
+                    }
+                    // Every odd chunk of a split-on-quotes is a string.
+                    cur.acquire = val
+                        .split('"')
+                        .enumerate()
+                        .filter(|(k, _)| k % 2 == 1)
+                        .map(|(_, s)| s.to_string())
+                        .collect();
+                }
+                _ => anyhow::bail!("lock_order.toml:{}: unknown key `{key}`", i + 1),
+            }
+        }
+        for l in &locks {
+            if l.name.is_empty() || l.file.is_empty() || l.rank == 0 || l.acquire.is_empty() {
+                anyhow::bail!("lock_order.toml: lock `{}` is missing fields", l.name);
+            }
+        }
+        Ok(LockConfig { locks })
+    }
+
+    fn patterns_for(&self, rel: &str) -> Vec<(&LockDecl, &str)> {
+        let mut out = Vec::new();
+        for l in self.locks.iter().filter(|l| l.file == rel) {
+            for p in &l.acquire {
+                out.push((l, p.as_str()));
+            }
+        }
+        out
+    }
+
+    fn covers(&self, rel: &str) -> bool {
+        self.locks.iter().any(|l| l.file == rel)
+    }
+}
+
+fn unquote(v: &str, line: usize) -> anyhow::Result<String> {
+    let v = v.trim();
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        Ok(v[1..v.len() - 1].to_string())
+    } else {
+        anyhow::bail!("lock_order.toml:{}: expected a quoted string", line + 1)
+    }
+}
+
+struct Guard {
+    var: String,
+    rank: u64,
+    name: String,
+    depth: i64,
+}
+
+pub fn run(files: &[SourceFile], cfg: &LockConfig) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        let tests = test_spans(&f.code);
+        order_pass(f, cfg, &mut out);
+        unwrap_pass(f, &tests, &mut out);
+        debug_assert_pass(f, &mut out);
+        declared_pass(f, cfg, &tests, &mut out);
+    }
+    out
+}
+
+/// LK01: rank-ordered acquisition, with guard liveness.
+fn order_pass(f: &SourceFile, cfg: &LockConfig, out: &mut Vec<Finding>) {
+    let pats = cfg.patterns_for(&f.rel);
+    if pats.is_empty() {
+        return;
+    }
+    let fns = enclosing_fns(&f.code);
+    let mut held: Vec<Guard> = Vec::new();
+    let mut prev_fn: Option<String> = None;
+    let mut depth = 0i64;
+    for (l, code) in f.code.iter().enumerate() {
+        if fns[l] != prev_fn {
+            held.clear();
+            prev_fn.clone_from(&fns[l]);
+        }
+        held.retain(|g| !code.contains(&format!("drop({})", g.var)));
+        for &(decl, pat) in &pats {
+            let Some(pos) = code.find(pat) else {
+                continue;
+            };
+            for g in &held {
+                if g.rank >= decl.rank {
+                    out.push(Finding {
+                        file: f.rel.clone(),
+                        line: l + 1,
+                        code: "LK01",
+                        msg: format!(
+                            "acquires `{}` (rank {}) while holding `{}` (rank {}) — \
+                             violates the declared lock order",
+                            decl.name, decl.rank, g.name, g.rank
+                        ),
+                    });
+                }
+            }
+            if let Some(var) = persisting_guard(code, pos + pat.len()) {
+                held.push(Guard { var, rank: decl.rank, name: decl.name.clone(), depth });
+            }
+        }
+        depth += brace_delta(code);
+        held.retain(|g| depth >= g.depth);
+    }
+}
+
+/// If the statement is `let [mut] <ident> = <...pattern>.expect(…)/.unwrap();`
+/// — i.e. the guard outlives the line — return the bound name.  A chain
+/// that continues past the adapter (`.push(x)` etc.) is a temporary,
+/// released at the end of the statement.
+fn persisting_guard(code: &str, after: usize) -> Option<String> {
+    let head = code.trim_start();
+    let head = head.strip_prefix("let ")?;
+    let head = head.strip_prefix("mut ").unwrap_or(head);
+    let var: String = head.chars().take_while(|c| c.is_ascii_alphanumeric() || *c == '_').collect();
+    if var.is_empty() {
+        return None;
+    }
+    let rest = code[after..].trim();
+    for adapter in ["expect(", "unwrap("] {
+        if let Some(args) = rest.strip_prefix('.').and_then(|r| r.strip_prefix(adapter)) {
+            if let Some(close) = args.find(')') {
+                let tail = args[close + 1..].trim();
+                if tail.is_empty() || tail == ";" {
+                    return Some(var);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// LK02: unwrapped lock results outside test code.
+fn unwrap_pass(f: &SourceFile, tests: &[(usize, usize)], out: &mut Vec<Finding>) {
+    if !f.is_src() {
+        return;
+    }
+    for (l, code) in f.code.iter().enumerate() {
+        if in_spans(tests, l) {
+            continue;
+        }
+        let two_line = code.trim() == ".unwrap()"
+            && l > 0
+            && f.code[l - 1].trim_end().ends_with(".lock()");
+        let hit = code.contains(".lock().unwrap()")
+            || code.contains(".into_inner().unwrap()")
+            || (code.contains("wait_timeout") && code.contains(".unwrap()"))
+            || two_line;
+        if hit {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: l + 1,
+                code: "LK02",
+                msg: "lock result unwrapped — use `.expect(\"<which lock> poisoned\")` \
+                      so poisoning is attributable"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// LK03: lock acquisition inside `debug_assert!` arguments.
+fn debug_assert_pass(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (l, code) in f.code.iter().enumerate() {
+        let Some(pos) = code.find("debug_assert") else {
+            continue;
+        };
+        // Accumulate the macro's argument span: from the opening paren
+        // until the balance returns to zero (bounded lookahead).
+        let mut span = String::new();
+        let mut bal = 0i64;
+        let mut opened = false;
+        'scan: for m in l..f.code.len().min(l + 20) {
+            let text = if m == l { &code[pos..] } else { f.code[m].as_str() };
+            for c in text.chars() {
+                if c == '(' {
+                    bal += 1;
+                    opened = true;
+                } else if c == ')' {
+                    bal -= 1;
+                }
+                span.push(c);
+                if opened && bal == 0 {
+                    break 'scan;
+                }
+            }
+        }
+        if span.contains(".lock(") {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: l + 1,
+                code: "LK03",
+                msg: "debug_assert! acquires a lock — the acquisition (and its \
+                      synchronization) vanishes in release builds"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// LK04: every `.lock(` in src must match a declared acquire pattern.
+fn declared_pass(
+    f: &SourceFile,
+    cfg: &LockConfig,
+    tests: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    if !f.is_src() {
+        return;
+    }
+    let pats = cfg.patterns_for(&f.rel);
+    let covered = cfg.covers(&f.rel);
+    for (l, code) in f.code.iter().enumerate() {
+        if in_spans(tests, l) || !code.contains(".lock(") {
+            continue;
+        }
+        // Join the two preceding lines so multi-line builder chains
+        // (`self` / `.head_density` / `.lock()`) still match a pattern.
+        let mut joined = String::new();
+        for m in l.saturating_sub(2)..=l {
+            joined.push_str(f.code[m].trim());
+        }
+        if pats.iter().any(|(_, p)| joined.contains(p)) {
+            continue;
+        }
+        let msg = if covered {
+            "undeclared lock acquisition — add an acquire pattern for it to \
+             rust/lint/lock_order.toml"
+        } else {
+            "lock acquisition in a file with no lock_order.toml entry — declare \
+             the mutex and its rank before using it"
+        };
+        out.push(Finding { file: f.rel.clone(), line: l + 1, code: "LK04", msg: msg.to_string() });
+    }
+}

@@ -1,0 +1,122 @@
+//! `vsprefill-lint`: the crate's in-tree invariant linter.
+//!
+//! Four dependency-free source-level passes over `src/`, `tests/`,
+//! `benches/` and `examples/`, run blocking in CI (`cargo run --release
+//! --bin vsprefill-lint`) and self-tested against seeded fixtures in
+//! `tests/lint_tool.rs`:
+//!
+//! 1. [`unsafe_audit`] — every `unsafe` site carries a structured
+//!    `// SAFETY:` comment, and the full `src/` unsafe surface is
+//!    committed as `UNSAFE_INVENTORY.json`.
+//! 2. [`locks`] — the declared lock hierarchy
+//!    (`rust/lint/lock_order.toml`) is respected; no unwrapped lock
+//!    results; no lock acquisition inside `debug_assert!`.
+//! 3. [`globals`] — the process-global SIMD override is only touched
+//!    through scoped guards, in designated places.
+//! 4. [`style`] — forbidden APIs (`process::exit` in library code,
+//!    panicking indexing in the raw-pointer region) and the mechanical
+//!    style floor (delimiter balance, 100-column code width).
+//!
+//! The passes work on *sanitized* source (comments and string contents
+//! blanked — see [`scan`]) so prose can never trip a rule, and they are
+//! deliberately textual: no syn, no rustc internals, nothing that can
+//! drift out of sync with the pinned toolchain.  What the tool loses in
+//! depth it gains in being cheap enough to run on every push and simple
+//! enough that a violation message points at the exact line to fix.
+
+pub mod globals;
+pub mod locks;
+pub mod scan;
+pub mod style;
+pub mod unsafe_audit;
+
+use std::fmt;
+use std::path::Path;
+
+use scan::SourceFile;
+
+/// One lint violation.
+pub struct Finding {
+    /// Crate-relative path.
+    pub file: String,
+    /// 1-based.
+    pub line: usize,
+    /// Stable rule code (`US01`, `LK01`…`LK04`, `PG01`…`PG03`,
+    /// `FA01`…`FA04`).
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, out: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(out, "{}:{}: [{}] {}", self.file, self.line, self.code, self.msg)
+    }
+}
+
+/// Load every lintable file under the crate root: `src/**`, `tests/**`
+/// (minus the seeded-violation fixtures), `benches/**`, and the repo's
+/// `examples/` next to the crate.  `vendor/` is never walked.
+pub fn load_tree(root: &Path) -> anyhow::Result<Vec<SourceFile>> {
+    let mut rels: Vec<String> = Vec::new();
+    for top in ["src", "tests", "benches"] {
+        collect(root, Path::new(top), &mut rels)?;
+    }
+    // The examples live beside the crate (../examples); present them
+    // under a crate-relative alias.
+    let examples = root.join("../examples");
+    if examples.is_dir() {
+        for entry in std::fs::read_dir(&examples)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                let name = path.file_name().expect("file has a name").to_string_lossy();
+                rels.push(format!("examples/{name}"));
+            }
+        }
+    }
+    rels.sort();
+    let mut files = Vec::with_capacity(rels.len());
+    for rel in rels {
+        let path = if let Some(name) = rel.strip_prefix("examples/") {
+            root.join("../examples").join(name)
+        } else {
+            root.join(&rel)
+        };
+        let content = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", path.display()))?;
+        files.push(SourceFile::parse(&rel, &content));
+    }
+    Ok(files)
+}
+
+fn collect(root: &Path, dir: &Path, out: &mut Vec<String>) -> anyhow::Result<()> {
+    let abs = root.join(dir);
+    if !abs.is_dir() {
+        return Ok(());
+    }
+    for entry in std::fs::read_dir(&abs)? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let sub = dir.join(&name);
+        let rel = sub.to_string_lossy().replace('\\', "/");
+        if entry.file_type()?.is_dir() {
+            // The fixtures are *supposed* to fail the lint.
+            if rel != "tests/lint_fixtures" {
+                collect(root, &sub, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// Run all four passes; findings sorted by (file, line, code).
+pub fn run_all(files: &[SourceFile], cfg: &locks::LockConfig) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(unsafe_audit::run(files));
+    out.extend(locks::run(files, cfg));
+    out.extend(globals::run(files));
+    out.extend(style::run(files));
+    out.sort_by(|a, b| (&a.file, a.line, a.code).cmp(&(&b.file, b.line, b.code)));
+    out
+}

@@ -1,0 +1,396 @@
+//! Lexical scanning shared by every lint pass.
+//!
+//! The passes never see raw source: they work on *sanitized* lines, where
+//! comment text and string/char contents have been blanked to spaces
+//! (column-preserving) so that a `.lock()` inside a doc comment or a
+//! `"unsafe"` inside a log message can never trip a rule.  The sanitizer
+//! is a small hand-rolled state machine — no syn, no regex crate — that
+//! understands line comments, nested block comments, ordinary and raw
+//! strings (with any number of `#`s), byte strings, char literals, and
+//! the char-literal-vs-lifetime ambiguity.
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Path relative to the crate root, with `/` separators
+    /// (e.g. `src/tensor/paged.rs`, `examples/quickstart.rs`).
+    pub rel: String,
+    /// Raw lines, exactly as read.
+    pub raw: Vec<String>,
+    /// Sanitized lines: comments and string/char contents blanked to
+    /// spaces, columns preserved.  Delimiters (quotes, hashes of raw
+    /// strings) are kept so token structure survives.
+    pub code: Vec<String>,
+    /// Per-line *effective width*: the line's length after dropping
+    /// comment text entirely and collapsing string contents to nothing
+    /// (delimiters kept), with trailing whitespace stripped.  This is the
+    /// width rustfmt could actually act on — it cannot split a string
+    /// literal or wrap a comment.
+    pub eff: Vec<usize>,
+}
+
+impl SourceFile {
+    /// Scan a file from an in-memory string (used by the fixture tests).
+    pub fn parse(rel: &str, content: &str) -> SourceFile {
+        let raw: Vec<String> = content.lines().map(str::to_string).collect();
+        let (code, eff) = sanitize(content);
+        SourceFile { rel: rel.to_string(), raw, code, eff }
+    }
+
+    /// True for files that compile into the library or its binaries.
+    pub fn is_src(&self) -> bool {
+        self.rel.starts_with("src/")
+    }
+
+    /// True for files that only ever run under `cargo test`/`bench` —
+    /// integration tests, benches, examples.
+    pub fn is_test_context(&self) -> bool {
+        self.rel.starts_with("tests/")
+            || self.rel.starts_with("benches/")
+            || self.rel.starts_with("examples/")
+    }
+}
+
+enum St {
+    Code,
+    /// Inside `/* */`, with nesting depth.
+    Block(usize),
+    /// Inside a string literal; `raw_hashes` is `Some(n)` for `r#..#"`.
+    Str { raw_hashes: Option<usize> },
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank comments and string/char contents.  Returns (sanitized lines,
+/// per-line effective widths) — see [`SourceFile::code`] / [`SourceFile::eff`].
+pub fn sanitize(content: &str) -> (Vec<String>, Vec<usize>) {
+    let mut out = Vec::new();
+    let mut effs = Vec::new();
+    let mut st = St::Code;
+    for line in content.lines() {
+        let ch: Vec<char> = line.chars().collect();
+        let n = ch.len();
+        let mut code = String::with_capacity(n);
+        let mut eff = String::with_capacity(n);
+        let mut i = 0;
+        while i < n {
+            match st {
+                St::Block(d) => {
+                    if ch[i] == '/' && ch.get(i + 1) == Some(&'*') {
+                        st = St::Block(d + 1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if ch[i] == '*' && ch.get(i + 1) == Some(&'/') {
+                        st = if d == 1 { St::Code } else { St::Block(d - 1) };
+                        code.push_str("  ");
+                        i += 2;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Str { raw_hashes: Some(h) } => {
+                    if ch[i] == '"' && (1..=h).all(|k| ch.get(i + k) == Some(&'#')) {
+                        st = St::Code;
+                        code.push('"');
+                        eff.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                            eff.push('#');
+                        }
+                        i += 1 + h;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Str { raw_hashes: None } => {
+                    if ch[i] == '\\' {
+                        code.push(' ');
+                        if i + 1 < n {
+                            code.push(' ');
+                        }
+                        i += 2;
+                    } else if ch[i] == '"' {
+                        st = St::Code;
+                        code.push('"');
+                        eff.push('"');
+                        i += 1;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                St::Code => {
+                    let c = ch[i];
+                    let prev_ident = i > 0 && is_ident(ch[i - 1]);
+                    if c == '/' && ch.get(i + 1) == Some(&'/') {
+                        for _ in i..n {
+                            code.push(' ');
+                        }
+                        i = n;
+                    } else if c == '/' && ch.get(i + 1) == Some(&'*') {
+                        st = St::Block(1);
+                        code.push_str("  ");
+                        i += 2;
+                    } else if c == '"' {
+                        st = St::Str { raw_hashes: None };
+                        code.push('"');
+                        eff.push('"');
+                        i += 1;
+                    } else if c == 'b' && !prev_ident && ch.get(i + 1) == Some(&'"') {
+                        st = St::Str { raw_hashes: None };
+                        code.push_str("b\"");
+                        eff.push_str("b\"");
+                        i += 2;
+                    } else if (c == 'r' || (c == 'b' && ch.get(i + 1) == Some(&'r')))
+                        && !prev_ident
+                        && raw_str_hashes(&ch, i).is_some()
+                    {
+                        let (delim_len, h) = raw_str_hashes(&ch, i).expect("checked above");
+                        st = St::Str { raw_hashes: Some(h) };
+                        for k in 0..delim_len {
+                            code.push(ch[i + k]);
+                            eff.push(ch[i + k]);
+                        }
+                        i += delim_len;
+                    } else if c == '\'' && char_literal_end(&ch, i).is_some() {
+                        let end = char_literal_end(&ch, i).expect("checked above");
+                        code.push('\'');
+                        eff.push('\'');
+                        for _ in (i + 1)..end {
+                            code.push(' ');
+                        }
+                        code.push('\'');
+                        eff.push('\'');
+                        i = end + 1;
+                    } else {
+                        code.push(c);
+                        eff.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(code);
+        effs.push(eff.trim_end().chars().count());
+    }
+    (out, effs)
+}
+
+/// If `ch[i..]` starts a raw (byte) string (`r"`, `r##"`, `br#"` …),
+/// return (delimiter length, number of hashes).
+fn raw_str_hashes(ch: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if ch.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if ch.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut h = 0;
+    while ch.get(j) == Some(&'#') {
+        h += 1;
+        j += 1;
+    }
+    if ch.get(j) == Some(&'"') {
+        Some((j + 1 - i, h))
+    } else {
+        None
+    }
+}
+
+/// If `ch[i] == '\''` opens a char literal (rather than a lifetime or a
+/// loop label), return the index of the closing quote.  Heuristic: it is
+/// a char literal iff the next char is a backslash, or the
+/// char-after-next is the closing quote (`'x'`).
+fn char_literal_end(ch: &[char], i: usize) -> Option<usize> {
+    let escaped = ch.get(i + 1) == Some(&'\\');
+    let simple = ch.get(i + 2) == Some(&'\'');
+    if !escaped && !simple {
+        return None;
+    }
+    let mut j = i + 1;
+    while j < ch.len() {
+        if ch[j] == '\\' {
+            j += 2;
+        } else if ch[j] == '\'' {
+            return Some(j);
+        } else {
+            j += 1;
+        }
+    }
+    None
+}
+
+/// Word-boundary search for an identifier-like token in a sanitized line.
+pub fn find_token(code: &str, tok: &str) -> Option<usize> {
+    for (pos, _) in code.match_indices(tok) {
+        let before_ok = !code[..pos].chars().next_back().is_some_and(is_ident);
+        let after_ok = !code[pos + tok.len()..].chars().next().is_some_and(is_ident);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+    }
+    None
+}
+
+pub fn has_token(code: &str, tok: &str) -> bool {
+    find_token(code, tok).is_some()
+}
+
+/// For each line, the name of the innermost enclosing `fn`, if any.
+/// Closures and plain blocks inherit the surrounding function's name.
+pub fn enclosing_fns(code: &[String]) -> Vec<Option<String>> {
+    let mut out = Vec::with_capacity(code.len());
+    // Each `{` pushes a frame carrying the pending fn name (if the brace
+    // opens a function body); each `}` pops.  The innermost Some is the
+    // enclosing fn.
+    let mut stack: Vec<Option<String>> = Vec::new();
+    let mut pending: Option<String> = None;
+    for line in code {
+        out.push(stack.iter().rev().flatten().next().cloned());
+        let ch: Vec<char> = line.chars().collect();
+        let mut i = 0;
+        while i < ch.len() {
+            if ch[i] == '{' {
+                stack.push(pending.take());
+                i += 1;
+            } else if ch[i] == '}' {
+                stack.pop();
+                i += 1;
+            } else if is_ident(ch[i]) {
+                let start = i;
+                while i < ch.len() && is_ident(ch[i]) {
+                    i += 1;
+                }
+                let word: String = ch[start..i].iter().collect();
+                if word == "fn" {
+                    // `fn` then whitespace then the name.
+                    let mut j = i;
+                    while j < ch.len() && ch[j].is_whitespace() {
+                        j += 1;
+                    }
+                    let ns = j;
+                    while j < ch.len() && is_ident(ch[j]) {
+                        j += 1;
+                    }
+                    if j > ns {
+                        pending = Some(ch[ns..j].iter().collect());
+                    }
+                }
+            } else {
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Net `{`/`}` delta of a sanitized line.
+pub fn brace_delta(code: &str) -> i64 {
+    let mut d = 0;
+    for c in code.chars() {
+        if c == '{' {
+            d += 1;
+        } else if c == '}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// Line index of the `}` matching the `{` at (line, col), if any.
+pub fn match_braces(code: &[String], line: usize, col: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (l, text) in code.iter().enumerate().skip(line) {
+        let skip = if l == line { col } else { 0 };
+        for c in text.chars().skip(skip) {
+            if c == '{' {
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(l);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Line spans (0-based, inclusive) of items annotated `#[cfg(test)]` —
+/// test modules and test-only items inside `src/` files.
+pub fn test_spans(code: &[String]) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for (l, text) in code.iter().enumerate() {
+        if !text.contains("#[cfg(test)]") {
+            continue;
+        }
+        if spans.iter().any(|&(a, b)| l >= a && l <= b) {
+            continue;
+        }
+        // Find the first `{` at or after the attribute: the item body.
+        let mut open = None;
+        'find: for (m, t) in code.iter().enumerate().skip(l) {
+            if let Some(cpos) = t.find('{') {
+                open = Some((m, cpos));
+                break 'find;
+            }
+        }
+        if let Some((ol, oc)) = open {
+            if let Some(end) = match_braces(code, ol, oc) {
+                spans.push((l, end));
+            }
+        }
+    }
+    spans
+}
+
+pub fn in_spans(spans: &[(usize, usize)], line: usize) -> bool {
+    spans.iter().any(|&(a, b)| line >= a && line <= b)
+}
+
+/// Spans of `unsafe { … }` *blocks* (not `unsafe fn` bodies): the
+/// `unsafe` keyword whose next token is `{`.  Returns
+/// (open line, open col, close line) triples, 0-based.
+pub fn unsafe_block_spans(code: &[String]) -> Vec<(usize, usize, usize)> {
+    let mut spans = Vec::new();
+    for (l, text) in code.iter().enumerate() {
+        let mut search_from = 0;
+        while let Some(rel_pos) = find_token(&text[search_from..], "unsafe") {
+            let pos = search_from + rel_pos;
+            search_from = pos + "unsafe".len();
+            // Skip whitespace after the keyword, across lines, to see
+            // whether the next token is `{`.
+            let mut ll = l;
+            let mut cc = search_from;
+            let open = loop {
+                let line_text = &code[ll];
+                match line_text[cc.min(line_text.len())..].chars().find(|c| !c.is_whitespace()) {
+                    Some(c) => {
+                        let off = line_text[cc.min(line_text.len())..]
+                            .find(c)
+                            .expect("char found above");
+                        break Some((ll, cc + off, c));
+                    }
+                    None => {
+                        ll += 1;
+                        cc = 0;
+                        if ll >= code.len() {
+                            break None;
+                        }
+                    }
+                }
+            };
+            if let Some((ol, oc, '{')) = open {
+                if let Some(end) = match_braces(code, ol, oc) {
+                    spans.push((ol, oc, end));
+                }
+            }
+        }
+    }
+    spans
+}

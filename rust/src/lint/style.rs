@@ -1,0 +1,128 @@
+//! Pass 4 — forbidden APIs and the mechanical style floor.
+//!
+//! * **FA01** — `process::exit` in library code (anywhere under `src/`
+//!   except `src/main.rs` / `src/bin/`): the coordinator embeds in other
+//!   processes; killing the process from a library path skips every Drop
+//!   (paged-store reclaim, metrics flush).  Benches and examples own
+//!   their process and are exempt.
+//! * **FA02** — panicking indexing (`[`) inside an `unsafe { … }` block
+//!   in `src/tensor/paged.rs`: a panic between a raw-pointer write and
+//!   its length publication can unwind across a half-initialized region.
+//!   Bounds checks belong *before* the block (see `Arena::read`).
+//! * **FA03** — per-file delimiter balance on sanitized code: `()`,
+//!   `[]`, `{}` must never go negative and must end at zero.  Catches
+//!   the merge-artifact class of corruption that rustfmt reports as an
+//!   unrelated parse error three screens away.
+//! * **FA04** — lines over 100 columns whose *code portion* (comments
+//!   removed, string contents collapsed) is itself over 100: exactly the
+//!   lines `cargo fmt` is able to object to.
+
+use super::scan::{unsafe_block_spans, SourceFile};
+use super::Finding;
+
+pub const MAX_WIDTH: usize = 100;
+
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        forbidden_exit(f, &mut out);
+        unsafe_indexing(f, &mut out);
+        balance(f, &mut out);
+        width(f, &mut out);
+    }
+    out
+}
+
+fn forbidden_exit(f: &SourceFile, out: &mut Vec<Finding>) {
+    if !f.is_src() || f.rel == "src/main.rs" || f.rel.starts_with("src/bin/") {
+        return;
+    }
+    for (l, code) in f.code.iter().enumerate() {
+        if code.contains("process::exit") {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: l + 1,
+                code: "FA01",
+                msg: "process::exit in library code — return an error and let the \
+                      binary decide; exiting skips every Drop"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn unsafe_indexing(f: &SourceFile, out: &mut Vec<Finding>) {
+    if f.rel != "src/tensor/paged.rs" {
+        return;
+    }
+    for (ol, oc, end) in unsafe_block_spans(&f.code) {
+        for l in ol..=end {
+            let code = &f.code[l];
+            let from = if l == ol { oc } else { 0 };
+            let hit = code
+                .char_indices()
+                .any(|(i, c)| c == '[' && i > from && !code.trim_start().starts_with("#["));
+            if hit {
+                out.push(Finding {
+                    file: f.rel.clone(),
+                    line: l + 1,
+                    code: "FA02",
+                    msg: "panicking indexing inside an unsafe block in the raw-pointer \
+                          region — bounds-check before entering the block"
+                        .to_string(),
+                });
+            }
+        }
+    }
+}
+
+fn balance(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (open, close) in [('(', ')'), ('[', ']'), ('{', '}')] {
+        let mut depth = 0i64;
+        let mut broken = false;
+        for (l, code) in f.code.iter().enumerate() {
+            for c in code.chars() {
+                if c == open {
+                    depth += 1;
+                } else if c == close {
+                    depth -= 1;
+                }
+            }
+            if depth < 0 && !broken {
+                broken = true;
+                out.push(Finding {
+                    file: f.rel.clone(),
+                    line: l + 1,
+                    code: "FA03",
+                    msg: format!("`{close}` closes a `{open}` that was never opened"),
+                });
+            }
+        }
+        if depth != 0 && !broken {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: f.code.len().max(1),
+                code: "FA03",
+                msg: format!("unbalanced `{open}{close}` at end of file (depth {depth})"),
+            });
+        }
+    }
+}
+
+fn width(f: &SourceFile, out: &mut Vec<Finding>) {
+    for (l, raw) in f.raw.iter().enumerate() {
+        if raw.chars().count() > MAX_WIDTH && f.eff[l] > MAX_WIDTH {
+            out.push(Finding {
+                file: f.rel.clone(),
+                line: l + 1,
+                code: "FA04",
+                msg: format!(
+                    "line is {} columns with {} columns of code — rustfmt cannot \
+                     split this; break the expression",
+                    raw.chars().count(),
+                    f.eff[l]
+                ),
+            });
+        }
+    }
+}

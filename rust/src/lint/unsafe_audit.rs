@@ -1,0 +1,157 @@
+//! Pass 1 — unsafe audit (US01) and the machine-readable inventory.
+//!
+//! Every `unsafe` keyword — block, fn, impl, or trait — must be
+//! immediately preceded by a structured safety comment: a contiguous
+//! `//` / `///` / `//!` block (attribute lines like `#[cfg(...)]` may
+//! sit in between) containing `SAFETY:` or a `# Safety` doc heading.
+//! A blank line breaks the association: the comment must be *about this
+//! site*, not stale prose further up.
+//!
+//! The same scan feeds `UNSAFE_INVENTORY.json`: a sorted, committed list
+//! of every unsafe site under `src/`, so a diff review sees the unsafe
+//! surface change explicitly.
+
+use super::scan::{find_token, SourceFile};
+use super::Finding;
+
+/// One `unsafe` occurrence.
+pub struct Site {
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// `fn`, `impl`, `trait`, or `block`.
+    pub kind: &'static str,
+    /// The raw source line, trimmed.
+    pub context: String,
+    pub annotated: bool,
+}
+
+/// Scan one file for `unsafe` sites and whether each carries a safety
+/// comment.
+pub fn sites(file: &SourceFile) -> Vec<Site> {
+    let mut out = Vec::new();
+    for (l, code) in file.code.iter().enumerate() {
+        let Some(pos) = find_token(code, "unsafe") else {
+            continue;
+        };
+        out.push(Site {
+            file: file.rel.clone(),
+            line: l + 1,
+            kind: site_kind(file, l, pos),
+            context: file.raw[l].trim().to_string(),
+            annotated: annotated(file, l),
+        });
+    }
+    out
+}
+
+/// US01 findings for every unannotated site in the tree.
+pub fn run(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        for s in sites(f) {
+            if !s.annotated {
+                out.push(Finding {
+                    file: s.file,
+                    line: s.line,
+                    code: "US01",
+                    msg: format!(
+                        "unsafe {} without an immediately-preceding `// SAFETY:` comment",
+                        s.kind
+                    ),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn site_kind(file: &SourceFile, line: usize, pos: usize) -> &'static str {
+    // The token after `unsafe`, looking across lines if needed.
+    let mut l = line;
+    let mut c = pos + "unsafe".len();
+    while l < file.code.len() {
+        let rest: String = file.code[l].chars().skip(c).collect();
+        let rest = rest.trim_start();
+        if !rest.is_empty() {
+            if rest.starts_with('{') {
+                return "block";
+            }
+            let word: String = rest.chars().take_while(|ch| ch.is_ascii_alphabetic()).collect();
+            return match word.as_str() {
+                "fn" | "extern" => "fn",
+                "impl" => "impl",
+                "trait" => "trait",
+                _ => "block",
+            };
+        }
+        l += 1;
+        c = 0;
+    }
+    "block"
+}
+
+fn annotated(file: &SourceFile, line: usize) -> bool {
+    // Trailing comment on the same line counts.
+    if file.raw[line].contains("SAFETY:") {
+        return true;
+    }
+    // Walk upward: skip attribute lines, collect the contiguous comment
+    // block; stop at the first blank or ordinary-code line.
+    let mut l = line;
+    while l > 0 {
+        l -= 1;
+        let t = file.raw[l].trim();
+        if t.starts_with("#[") || t.starts_with("#![") {
+            continue;
+        }
+        if t.starts_with("//") {
+            if t.contains("SAFETY:") || t.contains("# Safety") {
+                return true;
+            }
+            continue;
+        }
+        break;
+    }
+    false
+}
+
+/// Render the committed inventory: every unsafe site under `src/`,
+/// sorted by (file, line).  Stable formatting — 2-space indent, trailing
+/// newline — so `--check-inventory` can compare bytes.
+pub fn inventory_json(files: &[SourceFile]) -> String {
+    let mut all: Vec<Site> = Vec::new();
+    for f in files.iter().filter(|f| f.is_src()) {
+        all.extend(sites(f));
+    }
+    all.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": 1,\n");
+    out.push_str(&format!("  \"total\": {},\n", all.len()));
+    out.push_str("  \"sites\": [\n");
+    for (i, s) in all.iter().enumerate() {
+        out.push_str("    {\n");
+        out.push_str(&format!("      \"file\": \"{}\",\n", esc(&s.file)));
+        out.push_str(&format!("      \"line\": {},\n", s.line));
+        out.push_str(&format!("      \"kind\": \"{}\",\n", s.kind));
+        out.push_str(&format!("      \"context\": \"{}\"\n", esc(&s.context)));
+        out.push_str(if i + 1 == all.len() { "    }\n" } else { "    },\n" });
+    }
+    out.push_str("  ]\n");
+    out.push_str("}\n");
+    out
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}

@@ -126,7 +126,10 @@ impl ArtifactBundle {
     }
 
     /// Parse a weights JSON export ({name: {shape, data}}) into a map.
-    pub fn load_weights(&self, file: &str) -> anyhow::Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>> {
+    pub fn load_weights(
+        &self,
+        file: &str,
+    ) -> anyhow::Result<BTreeMap<String, (Vec<usize>, Vec<f32>)>> {
         let text = std::fs::read_to_string(self.dir.join(file))?;
         Self::parse_weights(&text)
     }

@@ -80,7 +80,8 @@ impl Engine {
             let proto = xla::HloModuleProto::from_text_file(spec.file.to_str().unwrap())?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = client.compile(&comp)?;
-            compiled.insert(name.clone(), CompiledGraph { name: name.clone(), exe, caps: spec.caps });
+            let graph = CompiledGraph { name: name.clone(), exe, caps: spec.caps };
+            compiled.insert(name.clone(), graph);
         }
         Ok(Engine { client, bundle, compiled })
     }
@@ -190,8 +191,10 @@ impl Engine {
         let mut vs = Vec::new();
         for l in 0..m.n_layers {
             // stacked as (layers, kv_heads, n, d); flatten kv heads into rows
-            ks.push(Mat::from_vec(m.n_kv_heads * n, m.head_dim, ks_flat[l * per..(l + 1) * per].to_vec()));
-            vs.push(Mat::from_vec(m.n_kv_heads * n, m.head_dim, vs_flat[l * per..(l + 1) * per].to_vec()));
+            let krows = ks_flat[l * per..(l + 1) * per].to_vec();
+            let vrows = vs_flat[l * per..(l + 1) * per].to_vec();
+            ks.push(Mat::from_vec(m.n_kv_heads * n, m.head_dim, krows));
+            vs.push(Mat::from_vec(m.n_kv_heads * n, m.head_dim, vrows));
         }
         Ok((logits, ks, vs))
     }

@@ -31,7 +31,9 @@ impl VsIndices {
 
     /// Does the Eq. 9 mask keep causal cell (i, j)?
     pub fn keeps(&self, i: usize, j: usize) -> bool {
-        j <= i && (self.vertical.binary_search(&j).is_ok() || self.slash.binary_search(&(i - j)).is_ok())
+        j <= i
+            && (self.vertical.binary_search(&j).is_ok()
+                || self.slash.binary_search(&(i - j)).is_ok())
     }
 
     /// Exact number of causal cells covered by the mask (inclusion-exclusion

@@ -22,7 +22,12 @@ pub fn dense_mask(idx: &VsIndices, n: usize) -> Vec<Vec<bool>> {
 /// Returns (v_idx, s_idx, lens) ready for the PJRT executor.  Overlong
 /// lists are truncated to the strongest prefix (they are sorted by index,
 /// so the caller should budget within caps — the coordinator enforces it).
-pub fn to_padded(idx: &VsIndices, n: usize, cap_v: usize, cap_s: usize) -> (Vec<i32>, Vec<i32>, [i32; 2]) {
+pub fn to_padded(
+    idx: &VsIndices,
+    n: usize,
+    cap_v: usize,
+    cap_s: usize,
+) -> (Vec<i32>, Vec<i32>, [i32; 2]) {
     let vlen = idx.vertical.len().min(cap_v);
     let slen = idx.slash.len().min(cap_s);
     let mut v = vec![n as i32; cap_v];

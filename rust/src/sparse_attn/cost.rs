@@ -65,7 +65,8 @@ impl CostModel {
         let t0 = Instant::now();
         let reps = 3;
         for _ in 0..reps {
-            std::hint::black_box(crate::attention::flash::flash_attention(&h.q, &h.k, &h.v, 64, 64));
+            let out = crate::attention::flash::flash_attention(&h.q, &h.k, &h.v, 64, 64);
+            std::hint::black_box(out);
         }
         let dense_s = t0.elapsed().as_secs_f64() / reps as f64;
         let dense_flops = attention_flops(n * (n + 1) / 2, h.q.cols);
@@ -89,10 +90,11 @@ impl CostModel {
         }
         let sparse_s = t2.elapsed().as_secs_f64() / reps as f64;
         let sparse_flops = attention_flops(idx_vs.covered_cells(n), h.q.cols);
-        let sparse_eff =
-            ((sparse_flops / sparse_s.max(1e-9)) / (dense_flops / dense_s.max(1e-9))).clamp(0.05, 1.0);
+        let sparse_rate = sparse_flops / sparse_s.max(1e-9);
+        let dense_rate = dense_flops / dense_s.max(1e-9);
+        let sparse_eff = (sparse_rate / dense_rate).clamp(0.05, 1.0);
         CostModel {
-            attn_flops_per_sec: dense_flops / dense_s.max(1e-9),
+            attn_flops_per_sec: dense_rate,
             index_flops_per_sec: idx_flops / idx_s.max(1e-9),
             fixed_overhead_s: 5.0e-5,
             sparse_eff,
@@ -102,7 +104,13 @@ impl CostModel {
 
     /// Prefill-attention cost of a mask at length n, head dim d, plus the
     /// method's index overhead.
-    pub fn cost_of(&self, spec: &MaskSpec, method: &dyn SparsePredictor, n: usize, d: usize) -> MethodCost {
+    pub fn cost_of(
+        &self,
+        spec: &MaskSpec,
+        method: &dyn SparsePredictor,
+        n: usize,
+        d: usize,
+    ) -> MethodCost {
         let cells = spec.covered_cells(n);
         let attn = attention_flops(cells, d);
         let index = method.index_flops(n, d);

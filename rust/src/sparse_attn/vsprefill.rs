@@ -73,7 +73,12 @@ impl VsPrefill {
 
     /// Predict indices from raw (K_rope, V) — the serving entry point (the
     /// trait method below adapts it to the SynthHead-based harness).
-    pub fn predict_kv(&self, k: &crate::tensor::Mat, v: &crate::tensor::Mat, budget: f32) -> VsIndices {
+    pub fn predict_kv(
+        &self,
+        k: &crate::tensor::Mat,
+        v: &crate::tensor::Mat,
+        budget: f32,
+    ) -> VsIndices {
         self.predict_kv_with_meta(k, v, budget).0
     }
 
@@ -216,7 +221,13 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn trained() -> VsPrefill {
-        let tc = TrainConfig { steps: 250, batch: 3, seq_len: 128, hidden_base: 32, ..Default::default() };
+        let tc = TrainConfig {
+            steps: 250,
+            batch: 3,
+            seq_len: 128,
+            hidden_base: 32,
+            ..Default::default()
+        };
         let (ix, _) = distill(&tc);
         VsPrefill::new(ix)
     }

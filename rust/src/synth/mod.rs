@@ -50,11 +50,23 @@ impl Default for SynthConfig {
 
 /// Simulated model families (DESIGN.md substitution #1).
 pub fn qwen_sim() -> SynthConfig {
-    SynthConfig { mean_scale: 1.2, n_heavy: 4, heavy_strength: 16.0, rope_base: 10000.0, ..Default::default() }
+    SynthConfig {
+        mean_scale: 1.2,
+        n_heavy: 4,
+        heavy_strength: 16.0,
+        rope_base: 10000.0,
+        ..Default::default()
+    }
 }
 
 pub fn llama_sim() -> SynthConfig {
-    SynthConfig { mean_scale: 1.0, n_heavy: 6, heavy_strength: 18.0, rope_base: 500000.0, ..Default::default() }
+    SynthConfig {
+        mean_scale: 1.0,
+        n_heavy: 6,
+        heavy_strength: 18.0,
+        rope_base: 500000.0,
+        ..Default::default()
+    }
 }
 
 /// One generated attention head: RoPE'd Q/K, values, and the injected

@@ -74,6 +74,8 @@ struct Arena {
 // different threads never overlap, and the metadata mutex orders same-region
 // writes before reads.
 unsafe impl Sync for Arena {}
+// SAFETY: the arena owns its boxed cells outright; moving it to another
+// thread moves plain f32 storage (no thread-affine state).
 unsafe impl Send for Arena {}
 
 impl Arena {
@@ -85,15 +87,32 @@ impl Arena {
     /// SAFETY: caller guarantees no concurrent write overlaps [off, off+len).
     #[inline]
     unsafe fn read(&self, off: usize, len: usize) -> &[f32] {
-        debug_assert!(off + len <= self.data.len());
-        std::slice::from_raw_parts(self.data[off].get(), len)
+        // Unconditional (not debug_assert): this is the last line of
+        // defense before the raw slice, and it must not vanish in release
+        // builds — one compare per row read is noise next to the copy.
+        assert!(off + len <= self.data.len(), "arena read out of range");
+        if len == 0 {
+            return &[];
+        }
+        let base = self.data[off].get();
+        // SAFETY: the range was bounds-checked above, every cell is
+        // initialized f32 storage, and the caller upholds the
+        // no-overlapping-writer contract.
+        unsafe { std::slice::from_raw_parts(base, len) }
     }
 
     /// SAFETY: caller guarantees exclusive access to [off, off+src.len()).
     #[inline]
     unsafe fn write(&self, off: usize, src: &[f32]) {
-        debug_assert!(off + src.len() <= self.data.len());
-        let dst = std::slice::from_raw_parts_mut(self.data[off].get(), src.len());
+        // Unconditional for the same reason as `read`.
+        assert!(off + src.len() <= self.data.len(), "arena write out of range");
+        if src.is_empty() {
+            return;
+        }
+        let base = self.data[off].get();
+        // SAFETY: bounds-checked above, and the caller guarantees
+        // exclusive access to the destination range.
+        let dst = unsafe { std::slice::from_raw_parts_mut(base, src.len()) };
         dst.copy_from_slice(src);
     }
 }
@@ -367,26 +386,26 @@ impl PagedKvStore {
     /// prefix hits but owned by no sequence) are reclaimable capacity and
     /// are *not* counted — see [`cached_idle`](Self::cached_idle).
     pub fn used(&self) -> usize {
-        let m = self.meta.lock().unwrap();
+        let m = self.meta.lock().expect("paged meta poisoned");
         self.total_blocks - m.free.len() - m.idle_cached
     }
 
     /// Blocks resident at refcount zero purely as prefix-cache capacity.
     pub fn cached_idle(&self) -> usize {
-        self.meta.lock().unwrap().idle_cached
+        self.meta.lock().expect("paged meta poisoned").idle_cached
     }
 
     /// Groups currently published in the prefix index.
     pub fn prefix_entries(&self) -> usize {
-        self.meta.lock().unwrap().prefix.len()
+        self.meta.lock().expect("paged meta poisoned").prefix.len()
     }
 
     pub fn peak_used(&self) -> usize {
-        self.meta.lock().unwrap().peak_used
+        self.meta.lock().expect("paged meta poisoned").peak_used
     }
 
     pub fn holds(&self, req_id: u64) -> bool {
-        self.meta.lock().unwrap().seqs.contains_key(&req_id)
+        self.meta.lock().expect("paged meta poisoned").seqs.contains_key(&req_id)
     }
 
     /// Reserve blocks for a sequence of (final) length `seq_len` rows;
@@ -422,7 +441,7 @@ impl PagedKvStore {
         chain: Option<&PrefixChain>,
     ) -> ReserveOutcome {
         let need_total = self.blocks_for(seq_len);
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let mut out = ReserveOutcome::default();
         if m.seqs.contains_key(&req_id) {
             return out;
@@ -545,7 +564,7 @@ impl PagedKvStore {
     /// Returns the number of newly published groups.
     pub fn publish_prefix(&self, req_id: u64, chain: &PrefixChain, aux: Vec<PrefixAux>) -> usize {
         debug_assert_eq!(chain.groups.len(), aux.len(), "one aux per chain group");
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let Some(seq) = m.seqs.get(&req_id) else {
             return 0;
         };
@@ -588,7 +607,7 @@ impl PagedKvStore {
     /// eviction, in-flight leadership changes).  A cached probe result is
     /// valid exactly while this value is unchanged.
     pub fn prefix_generation(&self) -> u64 {
-        self.meta.lock().unwrap().prefix_gen
+        self.meta.lock().expect("paged meta poisoned").prefix_gen
     }
 
     /// Read-only admission probe: how far `chain` would hit the cache right
@@ -598,7 +617,7 @@ impl PagedKvStore {
     /// authoritative match happens inside
     /// [`reserve_with_prefix`](Self::reserve_with_prefix).
     pub fn probe_prefix(&self, chain: &PrefixChain) -> PrefixProbe {
-        let m = self.meta.lock().unwrap();
+        let m = self.meta.lock().expect("paged meta poisoned");
         let mut out = PrefixProbe::default();
         for g in &chain.groups {
             match m.prefix.get(&g.hash) {
@@ -615,7 +634,7 @@ impl PagedKvStore {
     /// Drop up to `max_blocks` idle cached blocks (LRU order) back into the
     /// free pool — the operational "shrink the prefix cache" control.
     pub fn evict_idle(&self, max_blocks: usize) -> usize {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let candidates = idle_candidates(&m, &[]);
         let take = candidates.len().min(max_blocks);
         evict_entries(&mut m, &candidates[..take])
@@ -627,21 +646,27 @@ impl PagedKvStore {
     /// SAFETY: caller holds the meta lock, `dst` is unreferenced, and the
     /// copied `src` rows are below a published length (immutable).
     unsafe fn copy_block_rows(&self, src: usize, dst: usize, rows: usize) {
-        debug_assert!(rows <= self.block_size);
+        assert!(rows <= self.block_size, "copy_block_rows row count exceeds a block");
         let n = rows * self.head_dim;
         let so = src * self.block_size * self.head_dim;
         let doff = dst * self.block_size * self.head_dim;
-        let k: Vec<f32> = self.k_data.read(so, n).to_vec();
-        self.k_data.write(doff, &k);
-        let v: Vec<f32> = self.v_data.read(so, n).to_vec();
-        self.v_data.write(doff, &v);
+        // SAFETY: forwards this fn's own contract — `dst` is unreferenced
+        // (no concurrent reader or writer), and the `src` rows sit below a
+        // published length (immutable), so the reads and writes touch
+        // frozen or exclusively-owned regions.
+        unsafe {
+            let k: Vec<f32> = self.k_data.read(so, n).to_vec();
+            self.k_data.write(doff, &k);
+            let v: Vec<f32> = self.v_data.read(so, n).to_vec();
+            self.v_data.write(doff, &v);
+        }
     }
 
     /// Exhaustively check the store's block-accounting invariants (tests
     /// and the concurrency stress suite; O(blocks + sequences)).
     #[doc(hidden)]
     pub fn assert_consistent(&self) {
-        let m = self.meta.lock().unwrap();
+        let m = self.meta.lock().expect("paged meta poisoned");
         let mut refs = vec![0u32; self.total_blocks];
         for seq in m.seqs.values() {
             for &b in &seq.table {
@@ -703,7 +728,9 @@ impl PagedKvStore {
     /// shape mismatches, and appends beyond the reservation.
     pub fn append(&self, req_id: u64, k_rows: &Mat, v_rows: &Mat) -> anyhow::Result<()> {
         anyhow::ensure!(
-            k_rows.rows == v_rows.rows && k_rows.cols == self.head_dim && v_rows.cols == self.head_dim,
+            k_rows.rows == v_rows.rows
+                && k_rows.cols == self.head_dim
+                && v_rows.cols == self.head_dim,
             "kv append shape mismatch: k {}x{}, v {}x{}, head_dim {}",
             k_rows.rows,
             k_rows.cols,
@@ -711,7 +738,7 @@ impl PagedKvStore {
             v_rows.cols,
             self.head_dim
         );
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let seq = m
             .seqs
             .get_mut(&req_id)
@@ -755,7 +782,7 @@ impl PagedKvStore {
     /// refcount on the sequence: its blocks cannot return to the pool (and
     /// so cannot be recycled under the reader) until the view drops.
     pub fn view(&self, req_id: u64) -> Option<PagedKv<'_>> {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let seq = m.seqs.get_mut(&req_id)?;
         if seq.dying {
             return None;
@@ -778,7 +805,7 @@ impl PagedKvStore {
     /// call, debug builds assert.  The assert fires *after* the mutex guard
     /// is dropped so a caught panic cannot poison the store.
     fn release_view(&self, req_id: u64) {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let unbalanced;
         let release = match m.seqs.get_mut(&req_id) {
             Some(seq) if seq.views > 0 => {
@@ -824,7 +851,7 @@ impl PagedKvStore {
     /// gives `max_new - g` rows' worth of whole blocks back without waiting
     /// for its final `free`.  Returns the number of blocks reclaimed.
     pub fn shrink_to(&self, req_id: u64, rows: usize) -> usize {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         let Some(seq) = m.seqs.get_mut(&req_id) else {
             return 0;
         };
@@ -853,7 +880,7 @@ impl PagedKvStore {
     /// deferred until the last one drops (the sequence stops accepting
     /// appends and new views immediately).
     pub fn free(&self, req_id: u64) {
-        let mut m = self.meta.lock().unwrap();
+        let mut m = self.meta.lock().expect("paged meta poisoned");
         // Drop in-flight prefix leadership immediately — even when block
         // release defers under live views — so a reaped leader never makes
         // followers wait on groups nobody is computing any more.
@@ -911,7 +938,11 @@ impl PagedKv<'_> {
 
     #[inline]
     fn offset(&self, i: usize) -> usize {
-        debug_assert!(i < self.len, "paged row {i} out of bounds ({} rows)", self.len);
+        // Unconditional (not debug_assert): `k_row`/`v_row` are safe fns,
+        // and an out-of-range row in a release build would read rows the
+        // appender may be writing concurrently — a data race reachable
+        // through a safe API (PR 10 unsafe audit finding).
+        assert!(i < self.len, "paged row {i} out of bounds ({} rows)", self.len);
         let bs = self.store.block_size;
         (self.table[i / bs] * bs + i % bs) * self.store.head_dim
     }

@@ -24,7 +24,8 @@
 //!     is preserved: both sides run the same primitives on the same path.
 //!
 //! Path selection: `VSPREFILL_SIMD` (`scalar` | `portable` | `wide`)
-//! overrides detection; benches force paths with [`set_forced_path`].
+//! overrides detection; tests and benches pin paths with the scoped
+//! [`ForcedPathGuard`] (restore-on-drop — the flag is process-global).
 //!
 //! The module also owns the per-worker tile [`Scratch`] (the `kt`/`vt`
 //! gather arenas, score tiles, and per-row streaming-softmax state) so hot
@@ -118,16 +119,41 @@ fn resolve() -> Path {
     p
 }
 
-/// Force a specific path (benches sweep scalar vs SIMD with this); `None`
-/// re-resolves from the environment/detection on the next call.  Forcing
-/// `Wide` on a machine without the features degrades to `Portable` — the
-/// unsafe intrinsics are never reachable undetected.
-pub fn set_forced_path(p: Option<Path>) {
-    let p = match p {
-        Some(Path::Wide) if !wide_supported() => Some(Path::Portable),
-        other => other,
-    };
-    PATH.store(p.map(encode).unwrap_or(0), Ordering::Relaxed);
+/// Scoped override of the dispatch path (RAII, restore-on-drop).
+///
+/// The forced path is process-global state: two guard-free writers racing
+/// from different tests would leak an override into unrelated code, so the
+/// raw `PATH` store is confined to this type and `vsprefill-lint` pass 3
+/// flags any construction site outside the one designated forcing fn per
+/// test/bench binary.  Dropping the guard restores whatever state (forced
+/// or auto-resolved) was active when it was created — even on panic, so an
+/// assertion failure inside a forced battery cannot poison later tests.
+#[must_use = "the override is reverted as soon as the guard is dropped"]
+pub struct ForcedPathGuard {
+    prev: u8,
+}
+
+impl ForcedPathGuard {
+    /// Force every dispatch onto `p` until the guard drops (benches sweep
+    /// scalar vs SIMD with this).  Forcing `Wide` on a machine without the
+    /// features degrades to `Portable` — the unsafe intrinsics are never
+    /// reachable undetected.
+    pub fn force(p: Path) -> ForcedPathGuard {
+        let p = if p == Path::Wide && !wide_supported() { Path::Portable } else { p };
+        ForcedPathGuard { prev: PATH.swap(encode(p), Ordering::Relaxed) }
+    }
+
+    /// Drop any inherited override: auto-resolve from the environment and
+    /// CPU detection until the guard drops.
+    pub fn auto() -> ForcedPathGuard {
+        ForcedPathGuard { prev: PATH.swap(0, Ordering::Relaxed) }
+    }
+}
+
+impl Drop for ForcedPathGuard {
+    fn drop(&mut self) {
+        PATH.store(self.prev, Ordering::Relaxed);
+    }
 }
 
 #[cfg(target_arch = "x86_64")]
@@ -153,7 +179,7 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
         Path::Portable => portable::dot(a, b),
         #[cfg(target_arch = "x86_64")]
         // SAFETY: `Wide` is only ever stored after `wide_supported()`
-        // confirmed avx2+fma (see `resolve` / `set_forced_path`).
+        // confirmed avx2+fma (see `resolve` / `ForcedPathGuard::force`).
         Path::Wide => unsafe { wide::dot(a, b) },
         #[cfg(not(target_arch = "x86_64"))]
         Path::Wide => portable::dot(a, b),
@@ -457,13 +483,18 @@ mod wide {
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
         let n = a.len().min(b.len());
         let chunks = n / 8;
-        let mut acc = _mm256_setzero_ps();
-        for i in 0..chunks {
-            let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
-            let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
-            acc = _mm256_fmadd_ps(va, vb, acc);
-        }
-        let mut sum = hsum(acc);
+        // SAFETY: every load covers lanes `i * 8 .. i * 8 + 8` with
+        // `i < chunks`, so the last lane read is `chunks * 8 <= n`, within
+        // both slices; avx2+fma hold per this fn's caller contract.
+        let mut sum = unsafe {
+            let mut acc = _mm256_setzero_ps();
+            for i in 0..chunks {
+                let va = _mm256_loadu_ps(a.as_ptr().add(i * 8));
+                let vb = _mm256_loadu_ps(b.as_ptr().add(i * 8));
+                acc = _mm256_fmadd_ps(va, vb, acc);
+            }
+            hsum(acc)
+        };
         for i in chunks * 8..n {
             sum += a[i] * b[i];
         }
@@ -476,11 +507,16 @@ mod wide {
     pub unsafe fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
         let n = x.len().min(y.len());
         let chunks = n / 8;
-        let va = _mm256_set1_ps(a);
-        for i in 0..chunks {
-            let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
-            let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
-            _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_fmadd_ps(va, vx, vy));
+        // SAFETY: lanes `i * 8 .. i * 8 + 8` with `i < chunks` stay within
+        // both slices (`chunks * 8 <= n`), and `y` is borrowed mutably so
+        // no other alias observes the stores; avx2+fma per the contract.
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            for i in 0..chunks {
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_fmadd_ps(va, vx, vy));
+            }
         }
         for i in chunks * 8..n {
             y[i] += a * x[i];
@@ -493,10 +529,15 @@ mod wide {
     pub unsafe fn scale(y: &mut [f32], a: f32) {
         let n = y.len();
         let chunks = n / 8;
-        let va = _mm256_set1_ps(a);
-        for i in 0..chunks {
-            let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
-            _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_mul_ps(vy, va));
+        // SAFETY: lanes `i * 8 .. i * 8 + 8` with `i < chunks` stay within
+        // `y` (`chunks * 8 <= n`), exclusively borrowed; avx2+fma per the
+        // contract.
+        unsafe {
+            let va = _mm256_set1_ps(a);
+            for i in 0..chunks {
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                _mm256_storeu_ps(y.as_mut_ptr().add(i * 8), _mm256_mul_ps(vy, va));
+            }
         }
         for v in &mut y[chunks * 8..] {
             *v *= a;
@@ -509,15 +550,20 @@ mod wide {
     pub unsafe fn scale_add(y: &mut [f32], beta: f32, x: &[f32], a: f32) {
         let n = x.len().min(y.len());
         let chunks = n / 8;
-        let vb = _mm256_set1_ps(beta);
-        let va = _mm256_set1_ps(a);
-        for i in 0..chunks {
-            let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
-            let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
-            _mm256_storeu_ps(
-                y.as_mut_ptr().add(i * 8),
-                _mm256_fmadd_ps(va, vx, _mm256_mul_ps(vy, vb)),
-            );
+        // SAFETY: lanes `i * 8 .. i * 8 + 8` with `i < chunks` stay within
+        // both slices (`chunks * 8 <= n`), `y` is exclusively borrowed;
+        // avx2+fma per the contract.
+        unsafe {
+            let vb = _mm256_set1_ps(beta);
+            let va = _mm256_set1_ps(a);
+            for i in 0..chunks {
+                let vx = _mm256_loadu_ps(x.as_ptr().add(i * 8));
+                let vy = _mm256_loadu_ps(y.as_ptr().add(i * 8));
+                _mm256_storeu_ps(
+                    y.as_mut_ptr().add(i * 8),
+                    _mm256_fmadd_ps(va, vx, _mm256_mul_ps(vy, vb)),
+                );
+            }
         }
         for i in chunks * 8..n {
             y[i] = y[i] * beta + a * x[i];

@@ -95,7 +95,7 @@ pub fn par_drain<T: Send>(items: Vec<T>, f: impl Fn(T) + Sync) {
             s.spawn(|| {
                 LOCAL_OVERRIDE.with(|c| c.set(Some(1)));
                 loop {
-                    let next = queue.lock().unwrap().recv();
+                    let next = queue.lock().expect("pool queue poisoned").recv();
                     match next {
                         Ok(item) => f(item),
                         Err(_) => break,

@@ -1,0 +1,18 @@
+// Lint fixture — a well-formed file: the passes must report ZERO
+// findings here (guards against false positives).
+
+pub struct Cell(*mut f32);
+
+// SAFETY: the cell is only written before it is shared.
+unsafe impl Sync for Cell {}
+
+impl Cell {
+    /// Reads the cell.
+    ///
+    /// # Safety
+    /// `self.0` must be valid for reads.
+    pub unsafe fn get(&self) -> f32 {
+        // SAFETY: caller contract (see `# Safety` above).
+        unsafe { *self.0 }
+    }
+}

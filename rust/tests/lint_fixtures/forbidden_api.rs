@@ -1,0 +1,18 @@
+// Lint fixture — pass 4 (forbidden APIs + style floor).  NOT compiled;
+// exercised by tests/lint_tool.rs under the rel path
+// "src/tensor/paged.rs" so the raw-pointer-region rules arm.
+
+pub fn die() {
+    std::process::exit(2); // line 6: FA01
+}
+
+/// # Safety
+/// Fixture: `i` is not checked — the indexing below is the violation.
+pub unsafe fn peek(data: &[f32], i: usize) -> f32 {
+    // SAFETY: fixture.
+    unsafe { data[i] } // line 13: FA02
+}
+
+pub fn wide(a0: usize, a1: usize, a2: usize, a3: usize, a4: usize, a5: usize, a6: usize, a7: usize) -> usize { a0 + a7 }
+
+} // line 18: FA03 — stray closing brace

@@ -1,0 +1,51 @@
+// Lint fixture — pass 2 (lock discipline).  NOT compiled; exercised by
+// tests/lint_tool.rs under a synthetic two-lock hierarchy:
+//   fx.outer rank 1  <  fx.inner rank 2      (file: src/fx.rs)
+// with acquire patterns "self.outer.lock()" / "self.inner.lock()".
+
+impl Fx {
+    fn good(&self) {
+        let a = self.outer.lock().expect("outer poisoned");
+        let b = self.inner.lock().expect("inner poisoned");
+        drop(b);
+        drop(a);
+    }
+
+    fn scoped(&self) {
+        {
+            let b = self.inner.lock().expect("inner poisoned");
+            let _n = b.len();
+        }
+        // `b` died at the brace: acquiring rank 1 here is legal.
+        let a = self.outer.lock().expect("outer poisoned");
+        drop(a);
+    }
+
+    fn bad_order(&self) {
+        let b = self.inner.lock().expect("inner poisoned");
+        let a = self.outer.lock().expect("outer poisoned"); // line 26: LK01
+        drop(a);
+        drop(b);
+    }
+
+    fn bad_reentrant(&self) {
+        let a = self.outer.lock().expect("outer poisoned");
+        let a2 = self.outer.lock().expect("outer poisoned"); // line 33: LK01 (self-deadlock)
+        drop(a2);
+        drop(a);
+    }
+
+    fn bad_unwrap(&self) {
+        let a = self.outer.lock().unwrap(); // line 39: LK02
+        drop(a);
+    }
+
+    fn bad_assert(&self) {
+        debug_assert!(self.inner.lock().expect("inner poisoned").is_empty()); // line 44: LK03
+    }
+
+    fn bad_undeclared(&self) {
+        let c = self.stray.lock().expect("stray poisoned"); // line 48: LK04
+        drop(c);
+    }
+}

@@ -1,0 +1,34 @@
+// Lint fixture — pass 1 (unsafe audit).  NOT compiled: this directory is
+// excluded from cargo's test targets and from the linter's tree walk;
+// `tests/lint_tool.rs` feeds it through the passes and asserts the exact
+// findings below.
+
+pub struct P(*mut f32);
+
+unsafe impl Send for P {} // line 8: US01 — no safety comment at all
+
+// SAFETY: fixture — documented, must NOT be flagged.
+unsafe impl Sync for P {}
+
+pub unsafe fn touch(p: *mut f32) { // line 13: US01 — undocumented unsafe fn
+    // SAFETY: in-bounds by this fn's (undocumented) contract.
+    unsafe { *p = 1.0 }
+}
+
+/// Writes through the pointer.
+///
+/// # Safety
+/// `p` must be valid for writes — the doc heading form is accepted.
+pub unsafe fn touch_documented(p: *mut f32) {
+    // Stale prose far above must not count: the blank line below breaks
+    // the comment association.
+
+    unsafe { *p = 2.0 } // line 26: US01 — blank line broke the association
+}
+
+#[inline]
+// SAFETY: attributes between the comment and the site are fine.
+pub unsafe fn attributed(p: *mut f32) -> f32 {
+    // SAFETY: caller contract.
+    unsafe { *p }
+}

@@ -1,0 +1,17 @@
+// Lint fixture — pass 3 (process-global confinement).  NOT compiled;
+// exercised by tests/lint_tool.rs under the rel path "src/sneaky.rs"
+// (library code, where none of this is allowed).
+
+use crate::tensor::simd::{self, ForcedPathGuard, Path};
+
+pub fn sneaky() {
+    let _g = ForcedPathGuard::force(Path::Scalar); // line 8: PG03
+}
+
+pub fn sneakier() {
+    std::env::set_var("VSPREFILL_SIMD", "scalar"); // line 12: PG02
+}
+
+pub fn legacy() {
+    simd::set_forced_path(None); // line 16: PG01
+}

@@ -1,0 +1,128 @@
+//! Self-tests for `vsprefill-lint` (`src/lint/`).
+//!
+//! Two directions, both required:
+//!
+//! * **Seeded fixtures** (`tests/lint_fixtures/*.rs`, excluded from the
+//!   linter's tree walk and from cargo's targets): every pass must flag
+//!   each planted violation at its exact line — and nothing else, so the
+//!   fixtures also pin the false-positive boundary (`clean.rs`).
+//! * **Clean-tree self-run**: the real tree, under the real
+//!   `lint/lock_order.toml`, must produce zero findings, and the
+//!   committed `UNSAFE_INVENTORY.json` must match the tree byte-for-byte.
+
+use std::path::Path;
+
+use vsprefill::lint::{self, locks::LockConfig, scan::SourceFile, unsafe_audit};
+
+fn root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture(name: &str, rel: &str) -> SourceFile {
+    let path = root().join("tests/lint_fixtures").join(name);
+    let content = std::fs::read_to_string(&path).expect("fixture readable");
+    SourceFile::parse(rel, &content)
+}
+
+/// (code, line) pairs, in the linter's sorted order.
+fn codes(findings: &[lint::Finding]) -> Vec<(&'static str, usize)> {
+    findings.iter().map(|f| (f.code, f.line)).collect()
+}
+
+/// Synthetic two-lock hierarchy for the lock-order fixture.
+fn fixture_cfg() -> LockConfig {
+    let toml = r#"
+[[lock]]
+name = "fx.outer"
+rank = 1
+file = "src/fx.rs"
+acquire = ["self.outer.lock()"]
+
+[[lock]]
+name = "fx.inner"
+rank = 2
+file = "src/fx.rs"
+acquire = ["self.inner.lock()"]
+"#;
+    LockConfig::parse(toml).expect("fixture lock config parses")
+}
+
+#[test]
+fn unsafe_audit_flags_each_seeded_site_and_only_those() {
+    let f = fixture("missing_safety.rs", "src/fixture.rs");
+    let findings = lint::run_all(&[f], &fixture_cfg());
+    assert_eq!(codes(&findings), vec![("US01", 8), ("US01", 13), ("US01", 26)]);
+
+    let f = fixture("missing_safety.rs", "src/fixture.rs");
+    let sites = unsafe_audit::sites(&f);
+    assert_eq!(sites.len(), 8, "every unsafe site is inventoried, annotated or not");
+    assert_eq!(sites.iter().filter(|s| s.annotated).count(), 5);
+}
+
+#[test]
+fn lock_pass_flags_order_unwrap_assert_and_undeclared() {
+    let f = fixture("lock_order.rs", "src/fx.rs");
+    let findings = lint::run_all(&[f], &fixture_cfg());
+    assert_eq!(
+        codes(&findings),
+        vec![("LK01", 26), ("LK01", 33), ("LK02", 39), ("LK03", 44), ("LK04", 48)]
+    );
+}
+
+#[test]
+fn globals_pass_flags_stray_forcing_env_mutation_and_legacy_setter() {
+    let f = fixture("stray_forced_path.rs", "src/sneaky.rs");
+    let findings = lint::run_all(&[f], &fixture_cfg());
+    assert_eq!(codes(&findings), vec![("PG03", 8), ("PG02", 12), ("PG01", 16)]);
+}
+
+#[test]
+fn style_pass_flags_exit_unsafe_indexing_imbalance_and_width() {
+    let f = fixture("forbidden_api.rs", "src/tensor/paged.rs");
+    let findings = lint::run_all(&[f], &fixture_cfg());
+    assert_eq!(
+        codes(&findings),
+        vec![("FA01", 6), ("FA02", 13), ("FA04", 16), ("FA03", 18)]
+    );
+}
+
+#[test]
+fn forcing_must_stay_centralized_even_in_tests() {
+    // Allowed context (tests/), but two separate functions construct
+    // guards: the second one is flagged.
+    let src = "fn a() {\n    let _g = simd::ForcedPathGuard::force(simd::Path::Scalar);\n}\n\
+               fn b() {\n    let _g = simd::ForcedPathGuard::auto();\n}\n";
+    let f = SourceFile::parse("tests/fake.rs", src);
+    let findings = lint::run_all(&[f], &fixture_cfg());
+    assert_eq!(codes(&findings), vec![("PG03", 5)]);
+}
+
+#[test]
+fn clean_fixture_produces_zero_findings() {
+    let f = fixture("clean.rs", "src/clean.rs");
+    let findings = lint::run_all(&[f], &fixture_cfg());
+    assert!(findings.is_empty(), "false positives on clean.rs: {:?}", codes(&findings));
+}
+
+#[test]
+fn the_tree_is_lint_clean() {
+    let cfg = LockConfig::load(&root().join("lint/lock_order.toml")).expect("config loads");
+    let files = lint::load_tree(root()).expect("tree loads");
+    assert!(files.len() > 50, "tree walk looks truncated: {} files", files.len());
+    let findings = lint::run_all(&files, &cfg);
+    let rendered: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "lint findings on the tree:\n{}", rendered.join("\n"));
+}
+
+#[test]
+fn committed_inventory_matches_the_tree() {
+    let files = lint::load_tree(root()).expect("tree loads");
+    let fresh = unsafe_audit::inventory_json(&files);
+    let committed = std::fs::read_to_string(root().join("UNSAFE_INVENTORY.json"))
+        .expect("UNSAFE_INVENTORY.json is committed");
+    assert_eq!(
+        fresh, committed,
+        "unsafe surface changed — run `cargo run --release --bin vsprefill-lint -- \
+         --write-inventory` and commit the diff"
+    );
+}

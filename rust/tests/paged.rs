@@ -33,7 +33,14 @@ fn random_schedule(rng: &mut Rng, n: usize) -> Vec<usize> {
 /// Build a store whose free list is scrambled (so block tables are
 /// fragmented and out of order), reserve `n` rows for request `id`, and
 /// return the store.
-fn fragmented_store(rng: &mut Rng, blocks: usize, block_size: usize, d: usize, id: u64, n: usize) -> PagedKvStore {
+fn fragmented_store(
+    rng: &mut Rng,
+    blocks: usize,
+    block_size: usize,
+    d: usize,
+    id: u64,
+    n: usize,
+) -> PagedKvStore {
     let store = PagedKvStore::new(blocks, block_size, d);
     // Scramble: reserve a few dummy sequences, then free them in random
     // order so the free list interleaves.
@@ -311,9 +318,8 @@ fn store_roundtrips_under_churn() {
                 let n = k.rows;
                 if *done < n {
                     let chunk = (1 + rng.below(16)).min(n - *done);
-                    store
-                        .append(*id, &k.sub_rows(*done, *done + chunk), &v.sub_rows(*done, *done + chunk))
-                        .unwrap();
+                    let (lo, hi) = (*done, *done + chunk);
+                    store.append(*id, &k.sub_rows(lo, hi), &v.sub_rows(lo, hi)).unwrap();
                     *done += chunk;
                 }
             }
@@ -336,4 +342,21 @@ fn store_roundtrips_under_churn() {
         store.free(id);
     }
     assert_eq!(store.used(), 0);
+}
+
+/// Regression test for the PR 10 unsafe-audit finding: `PagedKv::offset`
+/// used to bounds-check with `debug_assert!` only, so a release build
+/// would hand a safe caller a row the appender may still be writing.  The
+/// check is now an unconditional `assert!` — out-of-range row access must
+/// panic in every profile.
+#[test]
+#[should_panic(expected = "out of bounds")]
+fn out_of_range_row_read_panics_in_every_profile() {
+    let mut rng = Rng::new(0x9a6ed);
+    let store = PagedKvStore::new(8, 4, 8);
+    assert!(store.reserve(7, 6));
+    let (k, v) = (randn(&mut rng, 6, 8), randn(&mut rng, 6, 8));
+    store.append(7, &k, &v).unwrap();
+    let view = store.view(7).unwrap();
+    let _ = view.k_row(6); // one past the end — must panic, even in release
 }

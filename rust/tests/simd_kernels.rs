@@ -4,8 +4,9 @@
 //! non-lane-multiple tile edges, fragmented paged block tables, decode
 //! columns, and rows with no admissible column.
 //!
-//! All `set_forced_path` calls live in ONE test function
-//! (`forced_paths_full_battery`): the forced path is process-global, so
+//! All path forcing lives in ONE test function
+//! (`forced_paths_full_battery`), as a scoped `ForcedPathGuard`: the
+//! forced path is process-global, so
 //! bit-exactness assertions (paged == contiguous, repeat-run determinism,
 //! cross-backend digests) must run while the path is pinned.  The other
 //! tests in this file use only >= 1e-5 tolerances, which hold regardless of
@@ -64,27 +65,20 @@ fn decode_ref(q: &[f32], k: &Mat, v: &Mat, cols: &[usize]) -> Vec<f32> {
     out
 }
 
-/// Restores path auto-detection even if an assertion in the battery fails.
-struct RestorePath;
-impl Drop for RestorePath {
-    fn drop(&mut self) {
-        simd::set_forced_path(None);
-    }
-}
-
 /// The one path-forcing test: pins each dispatch path in turn and runs the
 /// whole battery under it, then cross-checks the paths against each other.
 /// On machines without AVX2+FMA the `Wide` round silently re-runs the
-/// portable path (`set_forced_path` downgrades it), which keeps the test
-/// meaningful everywhere without any feature gating here.
+/// portable path (`ForcedPathGuard::force` downgrades it), which keeps the
+/// test meaningful everywhere without any feature gating here.  The guard
+/// restores auto-detection when each round ends — even if an assertion in
+/// the battery fails.
 #[test]
 fn forced_paths_full_battery() {
-    let _restore = RestorePath;
     let paths = [Path::Scalar, Path::Portable, Path::Wide];
     // tiled sparse outputs per (path, head-dim) for the cross-path check
     let mut per_path: Vec<Vec<Mat>> = Vec::new();
     for &p in &paths {
-        simd::set_forced_path(Some(p));
+        let _force = simd::ForcedPathGuard::force(p);
         let mut outs = Vec::new();
         // Odd head dims (7, 13) and one above a lane multiple (33); n = 100
         // is not a multiple of the 32-row query block, so the last block is
